@@ -1,0 +1,82 @@
+//! End-to-end driver (DESIGN.md §End-to-end validation): **optimal
+//! bandwidth selection for KDE by least-squares cross-validation** — the
+//! paper's motivating workload — on the astronomy-like dataset.
+//!
+//! The full pipeline composes every layer: synthetic data generation →
+//! Silverman pilot → LSCV sweep over a 10⁻³…10³ log grid where each
+//! score is two guaranteed Gaussian summations by DITO (L3 trees +
+//! expansions + token error control) → verification of the chosen-h
+//! density against the exhaustive PJRT artifact path (L1 Pallas kernel
+//! via the L2 AOT graph) when artifacts are present — and reports the
+//! paper's headline metric: guaranteed-ε speedup of the whole
+//! cross-validation sweep over exhaustive summation.
+//!
+//! Run: `cargo run --release --example bandwidth_selection [n]`
+//! (default n = 5000; the result is recorded in EXPERIMENTS.md)
+
+use fastgauss::algo::{dito::Dito, naive::Naive, GaussSum, GaussSumProblem};
+use fastgauss::data;
+use fastgauss::kde::bandwidth::{log_grid, silverman};
+use fastgauss::kde::lscv::{lscv_score, select_bandwidth};
+use fastgauss::util::timer::time_it;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(5000);
+    let eps = 0.01;
+    let ds = data::by_name("astro2d", n, 42).unwrap();
+    let pilot = silverman(&ds.points);
+    let grid = log_grid(pilot, 1e-3, 1e3, 13);
+    println!(
+        "== bandwidth selection: {} n={} D={} ε={eps} ==\npilot h = {pilot:.6}, grid = 13 log-spaced in [1e-3, 1e3]·pilot",
+        ds.name,
+        ds.len(),
+        ds.dim(),
+    );
+
+    // ---- the fast path: LSCV sweep with DITO ----
+    let engine = Dito::default();
+    let ((h_star, scores), fast_secs) =
+        time_it(|| select_bandwidth(&ds.points, &grid, eps, &engine).unwrap());
+    println!("\n  h                LSCV score");
+    for (h, s) in grid.iter().zip(&scores) {
+        let mark = if *h == h_star { "  <-- h*" } else { "" };
+        println!("  {h:<16.8} {s:>14.6e}{mark}");
+    }
+    println!("\nDITO sweep time: {fast_secs:.2}s  →  h* = {h_star:.6}");
+
+    // ---- the baseline: the same sweep exhaustively ----
+    let (_, slow_secs) = time_it(|| {
+        let mut best = (grid[0], f64::INFINITY);
+        for &h in &grid {
+            let s = lscv_score(&ds.points, h, eps, &Naive::new()).unwrap();
+            if s < best.1 {
+                best = (h, s);
+            }
+        }
+        best
+    });
+    println!("Naive sweep time: {slow_secs:.2}s");
+    println!("headline: {:.1}× speedup at guaranteed ε = {eps}", slow_secs / fast_secs);
+
+    // ---- verify the chosen-h density, vs rust naive AND the PJRT path ----
+    let problem = GaussSumProblem::kde(&ds.points, h_star, eps);
+    let fast = engine.run(&problem)?;
+    let exact = Naive::new().run(&problem)?;
+    let rel = fastgauss::algo::max_relative_error(&fast.sums, &exact.sums);
+    println!("verified max relative error at h*: {rel:.2e} (≤ {eps})");
+    assert!(rel <= eps * (1.0 + 1e-9));
+
+    if fastgauss::runtime::artifacts_dir().join("manifest.json").exists() {
+        let tiled = fastgauss::runtime::TiledNaive::load(ds.dim())?;
+        let (pjrt, pjrt_secs) = time_it(|| tiled.run(&problem).unwrap());
+        let rel_pjrt = fastgauss::algo::max_relative_error(&pjrt.sums, &exact.sums);
+        println!(
+            "PJRT artifact cross-check (L1 pallas kernel): rel {rel_pjrt:.1e} in {pjrt_secs:.2}s"
+        );
+        assert!(rel_pjrt < 1e-9);
+    } else {
+        println!("(artifacts not built; skipping PJRT cross-check — run `make artifacts`)");
+    }
+    println!("bandwidth_selection OK");
+    Ok(())
+}

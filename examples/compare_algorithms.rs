@@ -1,0 +1,32 @@
+//! Regenerate one of the paper's tables from the public API: all seven
+//! algorithms across the 10⁻³…10³ bandwidth sweep, with verified error
+//! and the X/∞ conventions.
+//!
+//! Run: `cargo run --release --example compare_algorithms [dataset] [n]`
+//! Datasets: astro2d galaxy3d bio5 pall7 covtype10 texture16
+
+use fastgauss::coordinator::{report, run_sweep, AlgoSpec, SweepConfig};
+use fastgauss::data;
+use fastgauss::kde::bandwidth::silverman;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let dataset = args.next().unwrap_or_else(|| "astro2d".to_string());
+    let n: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let ds = data::by_name(&dataset, n, 42)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+    let h_star = silverman(&ds.points);
+    let cfg = SweepConfig {
+        dataset: ds,
+        epsilon: 0.01,
+        h_star,
+        multipliers: vec![1e-3, 1e-2, 1e-1, 1.0, 1e1, 1e2, 1e3],
+        algorithms: AlgoSpec::paper_order(),
+        workers: 1,
+        leaf_size: 32,
+    };
+    let res = run_sweep(&cfg);
+    print!("{}", report::render_table(&res));
+    eprintln!("(times in seconds; X = memory exhausted, inf = tolerance unreachable)");
+    Ok(())
+}

@@ -1,0 +1,103 @@
+"""L1: the Pallas Gaussian-summation tile kernel.
+
+This is the dense compute hot-spot every algorithm in the stack bottoms
+out in: given a tile of queries Q (TQ × D), a chunk of references
+R (NR × D) with weights w, and the kernel scale −1/(2h²), produce the
+partial sums  G[i] = Σ_j w[j]·exp(−‖Q_i − R_j‖²/(2h²)).
+
+TPU-shaped formulation (DESIGN.md §Hardware-Adaptation):
+
+* the squared distance matrix is computed as
+  ‖q‖² + ‖r‖² − 2·q·rᵀ — the cross term is a (TQ,D)×(D,TR) matmul that
+  feeds the MXU; norms are cheap VPU reductions;
+* the reference axis is blocked via the pallas grid: each grid step
+  stages one (TR, D) reference block plus the (TQ, D) query tile in
+  VMEM and accumulates into the (TQ,) output block, which pallas keeps
+  resident across grid steps (sequential-grid revisiting);
+* block sizes are chosen in `vmem_budget_blocks` so
+  TQ·D + TR·D + TQ·TR + TQ doubles fit comfortably in a 16 MiB VMEM.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is exactly what
+the AOT bridge needs (see /opt/xla-example/README.md).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes (f64): TQ·TR = 256·512 = 128k doubles = 1 MiB for
+# the distance tile; query/ref strips are ≤ 512·16 doubles. Total VMEM
+# footprint ≈ 1.2 MiB ≪ 16 MiB, leaving room for double-buffering the
+# reference stream.
+DEFAULT_TQ = 256
+DEFAULT_TR = 512
+
+
+def vmem_budget_blocks(dim: int, dtype_bytes: int = 8, budget_bytes: int = 16 * 2**20):
+    """Pick (TQ, TR) so the working set fits in a VMEM budget with 4×
+    headroom for double-buffering and compiler temporaries."""
+    tq, tr = DEFAULT_TQ, DEFAULT_TR
+    while True:
+        working = dtype_bytes * (tq * dim + tr * dim + tq * tr + tq)
+        if working * 4 <= budget_bytes or (tq <= 32 and tr <= 64):
+            return tq, tr
+        if tr >= tq:
+            tr //= 2
+        else:
+            tq //= 2
+
+
+def _tile_kernel(q_ref, r_ref, w_ref, s_ref, o_ref):
+    """One grid step: accumulate this reference block's partial sums."""
+    i = pl.program_id(0)
+    q = q_ref[...]
+    r = r_ref[...]
+    w = w_ref[...]
+    # ‖q−r‖² = ‖q‖² + ‖r‖² − 2 q·rᵀ  (cross term → MXU matmul)
+    qn = jnp.sum(q * q, axis=1, keepdims=True)
+    rn = jnp.sum(r * r, axis=1)[None, :]
+    d2 = qn + rn - 2.0 * (q @ r.T)
+    # clamp tiny negatives from cancellation before exp
+    d2 = jnp.maximum(d2, 0.0)
+    part = jnp.exp(d2 * s_ref[0]) @ w
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += part
+
+
+@partial(jax.jit, static_argnames=("tr",))
+def gauss_tile(q, r, w, neg_inv_2h2, *, tr: int = DEFAULT_TR):
+    """Pallas-blocked Gaussian tile summation.
+
+    Args:
+      q: (TQ, D) queries.
+      r: (NR, D) references; NR must be a multiple of ``tr``.
+      w: (NR,) weights (zero-padded rows contribute nothing).
+      neg_inv_2h2: (1,) array holding −1/(2h²).
+      tr: reference block size.
+
+    Returns:
+      (TQ,) partial sums over this reference chunk.
+    """
+    tq, d = q.shape
+    nr = r.shape[0]
+    assert nr % tr == 0, f"NR={nr} not a multiple of TR={tr}"
+    return pl.pallas_call(
+        _tile_kernel,
+        grid=(nr // tr,),
+        in_specs=[
+            pl.BlockSpec((tq, d), lambda i: (0, 0)),
+            pl.BlockSpec((tr, d), lambda i: (i, 0)),
+            pl.BlockSpec((tr,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tq,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((tq,), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q, r, w, neg_inv_2h2)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the Pallas tile kernel — the build-time
+correctness signal. Deliberately written in the most obvious O(TQ·NR·D)
+broadcast form, with none of the kernel's blocking or algebraic
+rearrangement, so the two implementations share no structure."""
+
+import jax.numpy as jnp
+
+
+def gauss_tile_ref(q, r, w, neg_inv_2h2):
+    """Reference Gaussian tile summation.
+
+    G[i] = Σ_j w[j] · exp(neg_inv_2h2 · ‖q_i − r_j‖²)
+    """
+    diff = q[:, None, :] - r[None, :, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    return jnp.exp(d2 * neg_inv_2h2[0]) @ w
+
+
+def gauss_sum_ref(q, r, w, h):
+    """Bandwidth-form convenience wrapper."""
+    s = jnp.asarray([-0.5 / (h * h)], dtype=q.dtype)
+    return gauss_tile_ref(q, r, w, s)

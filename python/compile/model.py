@@ -1,0 +1,50 @@
+"""L2: the JAX compute graph the rust runtime executes.
+
+The "model" for a Gaussian-summation system is the chunked exhaustive
+summation graph: one artifact evaluates a fixed-shape query tile against
+a fixed-shape reference chunk by calling the L1 Pallas kernel, and the
+rust coordinator streams tiles/chunks through it (padding with
+zero-weight rows). Keeping the artifact shape fixed is what lets the HLO
+be compiled once per dimension and reused for every dataset size.
+
+Build-time only: this module is lowered by ``aot.py`` and never imported
+at runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels.gauss_tile import gauss_tile, vmem_budget_blocks  # noqa: E402
+
+
+def gauss_chunk(q, r, w, neg_inv_2h2, *, tr):
+    """One (query tile × reference chunk) partial summation.
+
+    Returned as a 1-tuple — the AOT bridge lowers with return_tuple=True
+    and the rust side unwraps with ``to_tuple1`` (see aot.py).
+    """
+    return (gauss_tile(q, r, w, neg_inv_2h2, tr=tr),)
+
+
+def artifact_spec(dim: int, dtype=jnp.float64):
+    """Shapes for the per-dimension artifact: (TQ, TR, NR).
+
+    NR (the reference chunk staged per execution) is 8 blocks of TR so
+    each rust call amortizes dispatch overhead over a decent chunk.
+    """
+    tq, tr = vmem_budget_blocks(dim, dtype_bytes=dtype(0).dtype.itemsize)
+    nr = 8 * tr
+    return tq, tr, nr
+
+
+def lower_gauss_chunk(dim: int, dtype=jnp.float64):
+    """jax.jit(...).lower(...) for the D-dimensional artifact."""
+    tq, tr, nr = artifact_spec(dim, dtype)
+    q = jax.ShapeDtypeStruct((tq, dim), dtype)
+    r = jax.ShapeDtypeStruct((nr, dim), dtype)
+    w = jax.ShapeDtypeStruct((nr,), dtype)
+    s = jax.ShapeDtypeStruct((1,), dtype)
+    fn = lambda q, r, w, s: gauss_chunk(q, r, w, s, tr=tr)  # noqa: E731
+    return jax.jit(fn).lower(q, r, w, s), (tq, tr, nr)

@@ -1,0 +1,114 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!   §tokens  — token error control on/off (DFD vs DFDO), isolating the
+//!              paper's Section-5 contribution;
+//!   §layout  — O(Dᵖ) vs O(pᴰ) expansion at fixed control (DITO vs DFTO);
+//!   §leaf    — tree leaf size;
+//!   §plimit  — truncation-order cap;
+//!   §tile    — PJRT-artifact base kernel vs pure-rust base case on the
+//!              exhaustive path (when does offload pay?).
+//!
+//! Run: `cargo bench --bench ablations` (knobs: FASTGAUSS_N)
+
+use fastgauss::algo::dualtree::{run_dualtree, DualTreeConfig, SeriesKind};
+use fastgauss::algo::{naive::Naive, GaussSum, GaussSumProblem};
+use fastgauss::data;
+use fastgauss::kde::bandwidth::silverman;
+use fastgauss::util::timer::time_it;
+
+fn median_secs<F: FnMut() -> ()>(mut f: F, reps: usize) -> f64 {
+    let mut times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let ((), s) = time_it(&mut f);
+            s
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+fn main() {
+    let n: usize =
+        std::env::var("FASTGAUSS_N").ok().and_then(|v| v.parse().ok()).unwrap_or(4000);
+    let eps = 0.01;
+    println!("== ablations, N = {n}, eps = {eps} ==\n");
+
+    // ---- §tokens: DFD vs DFDO across dims and bandwidth multipliers ----
+    println!("§tokens — FD-only engine, token ledger off/on (secs, median of 3)");
+    println!("{:<10} {:>6} {:>10} {:>10} {:>8}", "dataset", "h/h*", "DFD", "DFDO", "ratio");
+    for name in ["astro2d", "pall7", "covtype10"] {
+        let ds = data::by_name(name, n, 42).unwrap();
+        let hstar = silverman(&ds.points);
+        for mult in [1.0, 100.0] {
+            let problem = GaussSumProblem::kde(&ds.points, hstar * mult, eps);
+            let off = DualTreeConfig { use_tokens: false, series: None, ..Default::default() };
+            let on = DualTreeConfig { use_tokens: true, series: None, ..Default::default() };
+            let t_off = median_secs(|| drop(run_dualtree(&problem, &off).unwrap()), 3);
+            let t_on = median_secs(|| drop(run_dualtree(&problem, &on).unwrap()), 3);
+            println!(
+                "{name:<10} {mult:>6} {t_off:>10.4} {t_on:>10.4} {:>8.3}",
+                t_on / t_off
+            );
+        }
+    }
+
+    // ---- §layout: graded O(D^p) vs grid O(p^D) series ----
+    println!("\n§layout — expansion family at fixed token control");
+    println!("{:<10} {:>6} {:>10} {:>10}", "dataset", "h/h*", "OpdGrid", "OdpGraded");
+    for name in ["astro2d", "galaxy3d", "bio5"] {
+        let ds = data::by_name(name, n, 42).unwrap();
+        let hstar = silverman(&ds.points);
+        for mult in [1.0, 100.0] {
+            let problem = GaussSumProblem::kde(&ds.points, hstar * mult, eps);
+            let grid =
+                DualTreeConfig { series: Some(SeriesKind::OpdGrid), ..Default::default() };
+            let graded =
+                DualTreeConfig { series: Some(SeriesKind::OdpGraded), ..Default::default() };
+            let t_grid = median_secs(|| drop(run_dualtree(&problem, &grid).unwrap()), 3);
+            let t_graded = median_secs(|| drop(run_dualtree(&problem, &graded).unwrap()), 3);
+            println!("{name:<10} {mult:>6} {t_grid:>10.4} {t_graded:>10.4}");
+        }
+    }
+
+    // ---- §leaf: base-case granularity ----
+    println!("\n§leaf — leaf size (astro2d, h = h*)");
+    let ds = data::by_name("astro2d", n, 42).unwrap();
+    let hstar = silverman(&ds.points);
+    let problem = GaussSumProblem::kde(&ds.points, hstar, eps);
+    print!("leaf:");
+    for leaf in [8, 16, 32, 64, 128] {
+        let cfg = DualTreeConfig { leaf_size: leaf, ..Default::default() };
+        let t = median_secs(|| drop(run_dualtree(&problem, &cfg).unwrap()), 3);
+        print!("  {leaf}={t:.4}s");
+    }
+    println!();
+
+    // ---- §plimit: truncation-order cap (2-D, large h where series rule) ----
+    println!("\n§plimit — order cap (astro2d, h = 100·h*)");
+    let problem_big = GaussSumProblem::kde(&ds.points, hstar * 100.0, eps);
+    print!("plimit:");
+    for p in [1, 2, 4, 6, 8] {
+        let cfg = DualTreeConfig { plimit: Some(p), ..Default::default() };
+        let t = median_secs(|| drop(run_dualtree(&problem_big, &cfg).unwrap()), 3);
+        print!("  {p}={t:.4}s");
+    }
+    println!();
+
+    // ---- §tile: PJRT artifact vs pure-rust exhaustive path ----
+    println!("\n§tile — exhaustive path: rust loops vs PJRT artifact (one run)");
+    if fastgauss::runtime::artifacts_dir().join("manifest.json").exists() {
+        for name in ["astro2d", "texture16"] {
+            let ds = data::by_name(name, n, 42).unwrap();
+            let h = silverman(&ds.points);
+            let problem = GaussSumProblem::kde(&ds.points, h, eps);
+            let (_, t_rust) = time_it(|| Naive::new().run(&problem).unwrap());
+            let tiled = fastgauss::runtime::TiledNaive::load(ds.dim()).unwrap();
+            let (_, t_warm) = time_it(|| tiled.run(&problem).unwrap()); // compile+exec
+            let (_, t_pjrt) = time_it(|| tiled.run(&problem).unwrap());
+            println!(
+                "{name:<10} rust={t_rust:.3}s  pjrt(first)={t_warm:.3}s  pjrt(warm)={t_pjrt:.3}s"
+            );
+        }
+    } else {
+        println!("(artifacts not built — run `make artifacts`)");
+    }
+}

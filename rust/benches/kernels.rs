@@ -1,0 +1,138 @@
+//! Micro-benchmarks of the computational primitives the profiles point
+//! at: Hermite recurrences, monomial evaluation, the three translation
+//! operators, moment accumulation, the exhaustive base-case loop, and
+//! one PJRT chunk execution. These are the EXPERIMENTS.md §Perf
+//! instruments.
+//!
+//! Run: `cargo bench --bench kernels`
+
+use fastgauss::geometry::Matrix;
+use fastgauss::hermite::{
+    accumulate_farfield, eval_farfield, h2h, h2l, l2l, HermiteTable, PairTable,
+};
+use fastgauss::kernel::GaussianKernel;
+use fastgauss::multiindex::{Layout, MultiIndexSet};
+use fastgauss::util::timer::time_it;
+use fastgauss::util::Pcg32;
+
+/// Time `iters` runs of `f`, report ns/op.
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // warmup
+    for _ in 0..iters.min(10) {
+        f();
+    }
+    let ((), secs) = time_it(|| {
+        for _ in 0..iters {
+            f();
+        }
+    });
+    println!("{name:<44} {:>12.1} ns/op   ({iters} iters)", secs * 1e9 / iters as f64);
+}
+
+fn main() {
+    println!("== primitive micro-benchmarks ==");
+    let mut rng = Pcg32::new(7);
+
+    // Hermite recurrence
+    let mut out16 = vec![0.0; 17];
+    bench("hermite_values_into(order 16)", 1_000_000, || {
+        fastgauss::hermite::univariate::hermite_values_into(0.73, &mut out16);
+        std::hint::black_box(&out16);
+    });
+
+    for (label, layout, d, p) in [
+        ("graded D=2 p=8 (36 idx)", Layout::Graded, 2usize, 8usize),
+        ("graded D=5 p=4 (70 idx)", Layout::Graded, 5, 4),
+        ("grid   D=2 p=8 (64 idx)", Layout::Grid, 2, 8),
+        ("grid   D=5 p=4 (1024 idx)", Layout::Grid, 5, 4),
+    ] {
+        let set = MultiIndexSet::new(layout, d, p);
+        let pairs = PairTable::new(&set);
+        let x: Vec<f64> = (0..d).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let mut mono = vec![0.0; set.len()];
+        bench(&format!("monomials {label}"), 200_000, || {
+            set.eval_monomials(&x, &mut mono);
+            std::hint::black_box(&mono);
+        });
+
+        let coeffs: Vec<f64> = (0..set.len()).map(|_| rng.uniform()).collect();
+        let mut dst = vec![0.0; set.len()];
+        let c0 = vec![0.2; d];
+        let c1 = vec![0.0; d];
+        let mut off = vec![0.0; d];
+        let mut table = HermiteTable::new(d, 2 * p);
+        bench(&format!("h2h       {label}"), 2_000, || {
+            h2h(&set, &pairs, &coeffs, &c0, &c1, 1.0, &mut dst, &mut mono, &mut off);
+            std::hint::black_box(&dst);
+        });
+        bench(&format!("l2l       {label}"), 2_000, || {
+            l2l(&set, &pairs, &coeffs, &c0, &c1, 1.0, &mut dst, &mut mono, &mut off);
+            std::hint::black_box(&dst);
+        });
+        bench(&format!("h2l       {label}"), 2_000, || {
+            h2l(&set, &coeffs, &c0, &c1, 1.0, &mut dst, &mut table, &mut off);
+            std::hint::black_box(&dst);
+        });
+
+        // moment accumulation + far-field evaluation over 32 points
+        let pts = Matrix::from_rows(
+            &(0..32)
+                .map(|_| (0..d).map(|_| rng.uniform()).collect::<Vec<f64>>())
+                .collect::<Vec<_>>(),
+        );
+        let w = vec![1.0; 32];
+        let all: Vec<usize> = (0..32).collect();
+        bench(&format!("accum_ff/32pt {label}"), 5_000, || {
+            dst.iter_mut().for_each(|v| *v = 0.0);
+            accumulate_farfield(&set, &pts, &all, &w, &c0, 1.0, &mut dst, &mut mono, &mut off);
+            std::hint::black_box(&dst);
+        });
+        let xq: Vec<f64> = (0..d).map(|_| rng.uniform()).collect();
+        bench(&format!("eval_ff       {label}"), 50_000, || {
+            let v = eval_farfield(&set, &coeffs, &c0, 1.0, &xq, &mut table, &mut off);
+            std::hint::black_box(v);
+        });
+    }
+
+    // base-case kernel loop: 32×32 points, D=5
+    let d = 5;
+    let kernel = GaussianKernel::new(0.3);
+    let q = Matrix::from_rows(
+        &(0..32).map(|_| (0..d).map(|_| rng.uniform()).collect::<Vec<f64>>()).collect::<Vec<_>>(),
+    );
+    let r = q.clone();
+    bench("base case 32x32 D=5", 20_000, || {
+        let mut acc = 0.0;
+        for i in 0..32 {
+            let qi = q.row(i);
+            for j in 0..32 {
+                acc += kernel.eval_sq(fastgauss::geometry::sqdist(qi, r.row(j)));
+            }
+        }
+        std::hint::black_box(acc);
+    });
+
+    // one PJRT chunk (256 queries × 4096 refs)
+    if fastgauss::runtime::artifacts_dir().join("manifest.json").exists() {
+        let exec =
+            fastgauss::runtime::TileExecutor::load(&fastgauss::runtime::artifacts_dir(), 5)
+                .unwrap();
+        let qm = Matrix::from_rows(
+            &(0..256)
+                .map(|_| (0..d).map(|_| rng.uniform()).collect::<Vec<f64>>())
+                .collect::<Vec<_>>(),
+        );
+        let rm = Matrix::from_rows(
+            &(0..4096)
+                .map(|_| (0..d).map(|_| rng.uniform()).collect::<Vec<f64>>())
+                .collect::<Vec<_>>(),
+        );
+        let w = vec![1.0; 4096];
+        bench("pjrt chunk 256x4096 D=5", 20, || {
+            let v = exec.gauss_sum(&qm, &rm, &w, 0.3).unwrap();
+            std::hint::black_box(v);
+        });
+    } else {
+        println!("(artifacts not built — skipping PJRT micro-bench)");
+    }
+}

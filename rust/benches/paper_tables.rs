@@ -1,0 +1,72 @@
+//! Regenerates ALL SIX of the paper's evaluation tables (the paper's
+//! entire results section): six datasets × seven algorithms × seven
+//! bandwidths, times in seconds with verified ε = 0.01 and the X/∞
+//! conventions.
+//!
+//! Scale knobs (1-vCPU default keeps the full run in minutes):
+//!   FASTGAUSS_N=5000        points per dataset (paper: 50000)
+//!   FASTGAUSS_FULL=1        shorthand for N = 50000
+//!   FASTGAUSS_DATASETS=a,b  subset of datasets
+//!   FASTGAUSS_OUT=dir       also write per-table CSVs
+//!
+//! Run: `cargo bench --bench paper_tables`
+
+use fastgauss::coordinator::{report, run_sweep, AlgoSpec, SweepConfig};
+use fastgauss::data;
+use fastgauss::kde::bandwidth::silverman;
+
+fn main() {
+    let n: usize = if std::env::var("FASTGAUSS_FULL").is_ok_and(|v| v == "1") {
+        50_000
+    } else {
+        std::env::var("FASTGAUSS_N").ok().and_then(|v| v.parse().ok()).unwrap_or(5_000)
+    };
+    let subset: Option<Vec<String>> = std::env::var("FASTGAUSS_DATASETS")
+        .ok()
+        .map(|v| v.split(',').map(|s| s.trim().to_string()).collect());
+    let outdir = std::env::var("FASTGAUSS_OUT").ok();
+
+    println!("== paper tables: N = {n}, eps = 0.01, 10^-3..10^3 × h* ==");
+    println!("(paper testbed: dual Xeon 3 GHz / 2 GB; this run: {} — compare *shapes*, not seconds)\n",
+             std::env::var("HOSTNAME").unwrap_or_else(|_| "this machine".into()));
+
+    for (name, paper_name, d) in data::PAPER_SUITE {
+        if let Some(only) = &subset {
+            if !only.iter().any(|s| s == name) {
+                continue;
+            }
+        }
+        let ds = data::by_name(name, n, 42).unwrap();
+        let h_star = silverman(&ds.points);
+        let cfg = SweepConfig {
+            dataset: ds,
+            epsilon: 0.01,
+            h_star,
+            multipliers: vec![1e-3, 1e-2, 1e-1, 1.0, 1e1, 1e2, 1e3],
+            algorithms: AlgoSpec::paper_order(),
+            workers: 1,
+            leaf_size: 32,
+        };
+        let res = run_sweep(&cfg);
+        println!("--- {name} (paper: {paper_name}, D = {d}) ---");
+        print!("{}", report::render_table(&res));
+        // headline shape checks, printed so regressions are visible
+        let totals = res.totals();
+        let idx = |s: AlgoSpec| res.algorithms.iter().position(|a| *a == s).unwrap();
+        if let (Some(dfd), Some(dito)) = (totals[idx(AlgoSpec::Dfd)], totals[idx(AlgoSpec::Dito)])
+        {
+            println!("shape: DITO/DFD total = {:.2}  (paper at D≤3: ≪ 1)", dito / dfd);
+        }
+        if let (Some(dfd), Some(dfdo)) = (totals[idx(AlgoSpec::Dfd)], totals[idx(AlgoSpec::Dfdo)])
+        {
+            println!("shape: DFDO/DFD total = {:.2}  (paper: ~0.85-0.95)", dfdo / dfd);
+        }
+        println!();
+        if let Some(dir) = &outdir {
+            std::fs::create_dir_all(dir).unwrap();
+            let path = format!("{dir}/table_{name}.csv");
+            std::fs::write(&path, report::render_csv(&res)).unwrap();
+            eprintln!("wrote {path}");
+        }
+    }
+}

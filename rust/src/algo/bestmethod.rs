@@ -1,0 +1,167 @@
+//! `bestMethod` (paper Fig. 6): given a (Q, R) pair and a maximum
+//! admissible absolute error, find — for each FMM-type approximation —
+//! the smallest truncation order that meets the error, cost the four
+//! contenders, and return the cheapest.
+//!
+//! Costs follow the paper's model with the expansion size made explicit
+//! (so one cost model serves both layouts):
+//!   c_DH     = N_Q · |set(p_DH)| · D      (EVALM at every query point)
+//!   c_DL     = N_R · |set(p_DL)| · D      (DIRECTL from every reference)
+//!   c_H2L    = |set(p_H2L)|² · D          (one translation)
+//!   c_DIRECT = D · N_Q · N_R              (exhaustive / keep recursing)
+
+use crate::bounds::{NodeGeometry, SeriesMethod, TruncationBounds};
+use crate::multiindex::MultiIndexSet;
+
+/// The choice returned by [`best_method`].
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub enum Choice {
+    /// Evaluate the reference node's Hermite expansion at each query
+    /// point, at the given order, with the given error bound.
+    DH { p: usize, err: f64 },
+    /// Accumulate a local Taylor expansion directly from each reference
+    /// point.
+    DL { p: usize, err: f64 },
+    /// Translate the reference Hermite expansion into the query node's
+    /// local expansion.
+    H2L { p: usize, err: f64 },
+    /// No series method is cheapest (or none feasible): compute exactly
+    /// or keep recursing.
+    Direct,
+}
+
+/// Inputs that don't change per pair evaluation.
+pub struct CostModel<'a> {
+    /// The PLIMIT-order index set (sub-orders read off via `in_order`).
+    pub set: &'a MultiIndexSet,
+    /// Maximum truncation order to consider (PLIMIT).
+    pub p_limit: usize,
+}
+
+impl<'a> CostModel<'a> {
+    /// Size of the sub-order-p expansion.
+    fn len_at(&self, p: usize) -> f64 {
+        self.set.len_at_order(p) as f64
+    }
+
+    /// Pick the cheapest feasible method for a pair.
+    ///
+    /// * `bounds`: the bound family (O(Dᵖ) for DITO, O(pᴰ) for DFTO).
+    /// * `geo`: pair geometry; `weight`: W_R; `max_err`: admissible E_A.
+    /// * `nq`, `nr`: point counts of the two nodes.
+    pub fn best_method(
+        &self,
+        bounds: &dyn TruncationBounds,
+        geo: &NodeGeometry,
+        weight: f64,
+        max_err: f64,
+        nq: usize,
+        nr: usize,
+    ) -> Choice {
+        let d = geo.dim as f64;
+        let c_direct = d * nq as f64 * nr as f64;
+
+        let dh = bounds.smallest_order(SeriesMethod::DH, geo, weight, max_err, self.p_limit);
+        let dl = bounds.smallest_order(SeriesMethod::DL, geo, weight, max_err, self.p_limit);
+        let h2l = bounds.smallest_order(SeriesMethod::H2L, geo, weight, max_err, self.p_limit);
+
+        let c_dh = dh.map_or(f64::INFINITY, |(p, _)| nq as f64 * self.len_at(p) * d);
+        let c_dl = dl.map_or(f64::INFINITY, |(p, _)| nr as f64 * self.len_at(p) * d);
+        let c_h2l = h2l.map_or(f64::INFINITY, |(p, _)| {
+            let l = self.len_at(p);
+            l * l * d
+        });
+
+        let c = c_dh.min(c_dl).min(c_h2l).min(c_direct);
+        if c == c_direct {
+            Choice::Direct
+        } else if c == c_dh {
+            let (p, err) = dh.unwrap();
+            Choice::DH { p, err }
+        } else if c == c_dl {
+            let (p, err) = dl.unwrap();
+            Choice::DL { p, err }
+        } else {
+            let (p, err) = h2l.unwrap();
+            Choice::H2L { p, err }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bounds::odp::OdpBounds;
+    use crate::multiindex::Layout;
+
+    fn geo(dim: usize, min_sqdist: f64, r_ref: f64, r_query: f64, h: f64) -> NodeGeometry {
+        NodeGeometry { dim, min_sqdist, r_ref, r_query, h }
+    }
+
+    fn model(set: &MultiIndexSet) -> CostModel<'_> {
+        CostModel { set, p_limit: set.order() }
+    }
+
+    #[test]
+    fn far_pair_prefers_h2l_when_both_nodes_big() {
+        // far apart, lots of points on both sides, budget loose enough
+        // for the (large-constant) H2L bound → translation wins on cost
+        let set = MultiIndexSet::new(Layout::Graded, 2, 8);
+        let cm = model(&set);
+        let g = geo(2, 25.0, 0.3, 0.3, 1.0);
+        let c = cm.best_method(&OdpBounds, &g, 1000.0, 0.1, 5000, 5000);
+        assert!(matches!(c, Choice::H2L { .. }), "{c:?}");
+    }
+
+    #[test]
+    fn many_refs_few_queries_prefers_dh() {
+        let set = MultiIndexSet::new(Layout::Graded, 2, 8);
+        let cm = model(&set);
+        let g = geo(2, 25.0, 0.3, 0.3, 1.0);
+        let c = cm.best_method(&OdpBounds, &g, 1000.0, 1e-3, 3, 100000);
+        // DH cost = 3·len·2, far below H2L's len²·2 for feasible p
+        assert!(matches!(c, Choice::DH { .. }), "{c:?}");
+    }
+
+    #[test]
+    fn many_queries_few_refs_prefers_dl() {
+        let set = MultiIndexSet::new(Layout::Graded, 2, 8);
+        let cm = model(&set);
+        let g = geo(2, 25.0, 0.3, 0.3, 1.0);
+        let c = cm.best_method(&OdpBounds, &g, 5.0, 1e-3, 100000, 3);
+        assert!(matches!(c, Choice::DL { .. }), "{c:?}");
+    }
+
+    #[test]
+    fn tiny_nodes_prefer_direct() {
+        let set = MultiIndexSet::new(Layout::Graded, 2, 8);
+        let cm = model(&set);
+        let g = geo(2, 0.01, 0.5, 0.5, 1.0);
+        let c = cm.best_method(&OdpBounds, &g, 2.0, 1e-6, 2, 2);
+        assert_eq!(c, Choice::Direct);
+    }
+
+    #[test]
+    fn infeasible_bounds_fall_back_to_direct() {
+        let set = MultiIndexSet::new(Layout::Graded, 2, 2);
+        let cm = model(&set);
+        // adjacent large nodes, impossible tolerance
+        let g = geo(2, 0.0, 5.0, 5.0, 0.01);
+        let c = cm.best_method(&OdpBounds, &g, 1000.0, 1e-12, 10000, 10000);
+        assert_eq!(c, Choice::Direct);
+    }
+
+    #[test]
+    fn chosen_order_meets_error() {
+        let set = MultiIndexSet::new(Layout::Graded, 3, 6);
+        let cm = model(&set);
+        let g = geo(3, 9.0, 0.4, 0.4, 1.0);
+        let max_err = 0.05;
+        match cm.best_method(&OdpBounds, &g, 10.0, max_err, 1000, 1000) {
+            Choice::DH { err, .. } | Choice::DL { err, .. } | Choice::H2L { err, .. } => {
+                assert!(err <= max_err);
+            }
+            Choice::Direct => panic!("expected a series method"),
+        }
+    }
+}

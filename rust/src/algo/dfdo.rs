@@ -1,0 +1,90 @@
+//! **DFDO** — DFD with the paper's improved error control: identical
+//! finite-difference approximation, but slack error budget is banked in
+//! the per-node W_T token ledger and spent on later prunes. The paper
+//! reports a consistent 10–15 % improvement over DFD in higher
+//! dimensions from this change alone.
+
+use super::dualtree::{run_dualtree, DualTreeConfig};
+use super::{AlgoError, GaussSum, GaussSumProblem, GaussSumResult};
+
+#[derive(Copy, Clone, Debug)]
+pub struct Dfdo {
+    pub leaf_size: usize,
+}
+
+impl Default for Dfdo {
+    fn default() -> Self {
+        Dfdo { leaf_size: 32 }
+    }
+}
+
+impl Dfdo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn config(&self) -> DualTreeConfig {
+        DualTreeConfig {
+            leaf_size: self.leaf_size,
+            use_tokens: true,
+            series: None,
+            plimit: None,
+        }
+    }
+}
+
+impl GaussSum for Dfdo {
+    fn name(&self) -> &'static str {
+        "DFDO"
+    }
+
+    fn run(&self, problem: &GaussSumProblem<'_>) -> Result<GaussSumResult, AlgoError> {
+        run_dualtree(problem, &self.config())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::dfd::Dfd;
+    use crate::algo::naive::Naive;
+    use crate::algo::max_relative_error;
+    use crate::geometry::Matrix;
+    use crate::util::Pcg32;
+
+    fn blobs(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg32::new(seed);
+        let centers: Vec<Vec<f64>> =
+            (0..5).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect();
+        Matrix::from_rows(
+            &(0..n)
+                .map(|i| {
+                    (0..d).map(|j| centers[i % 5][j] + 0.04 * rng.normal()).collect()
+                })
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    #[test]
+    fn guarantee_holds_and_banks_tokens() {
+        let data = blobs(400, 3, 92);
+        let p = GaussSumProblem::kde(&data, 0.2, 0.01);
+        let exact = Naive::new().run(&p).unwrap().sums;
+        let out = Dfdo::new().run(&p).unwrap();
+        assert!(max_relative_error(&out.sums, &exact) <= 0.01 * (1.0 + 1e-9));
+        assert!(out.stats.tokens_banked > 0.0);
+    }
+
+    #[test]
+    fn never_worse_pruning_than_dfd() {
+        // token control only *adds* prune opportunities: base-case work
+        // must be ≤ DFD's on identical input
+        for h in [0.05, 0.2, 1.0] {
+            let data = blobs(500, 2, 93);
+            let p = GaussSumProblem::kde(&data, h, 0.01);
+            let a = Dfdo::new().run(&p).unwrap().stats.base_point_pairs;
+            let b = Dfd::new().run(&p).unwrap().stats.base_point_pairs;
+            assert!(a <= b, "h={h}: DFDO={a} DFD={b}");
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! **DFTO** — dual-tree fast Gauss transform with the classical O(pᴰ)
+//! grid expansion (Lee et al. 2006) and the improved (token) error
+//! control. Its geometric-series error bounds require scaled node radii
+//! < 1, so series pruning only activates once nodes are small relative
+//! to the bandwidth — the node-size restriction the O(Dᵖ) bounds remove.
+
+use super::dualtree::{run_dualtree, DualTreeConfig, SeriesKind};
+use super::{AlgoError, GaussSum, GaussSumProblem, GaussSumResult};
+
+#[derive(Copy, Clone, Debug)]
+pub struct Dfto {
+    pub leaf_size: usize,
+    /// Override the PLIMIT schedule.
+    pub plimit: Option<usize>,
+}
+
+impl Default for Dfto {
+    fn default() -> Self {
+        Dfto { leaf_size: 32, plimit: None }
+    }
+}
+
+impl Dfto {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn config(&self) -> DualTreeConfig {
+        DualTreeConfig {
+            leaf_size: self.leaf_size,
+            use_tokens: true,
+            series: Some(SeriesKind::OpdGrid),
+            plimit: self.plimit,
+        }
+    }
+}
+
+impl GaussSum for Dfto {
+    fn name(&self) -> &'static str {
+        "DFTO"
+    }
+
+    fn run(&self, problem: &GaussSumProblem<'_>) -> Result<GaussSumResult, AlgoError> {
+        run_dualtree(problem, &self.config())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::naive::Naive;
+    use crate::algo::max_relative_error;
+    use crate::geometry::Matrix;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn guarantee_across_bandwidths_2d() {
+        let mut rng = Pcg32::new(94);
+        let data = Matrix::from_rows(
+            &(0..400).map(|_| vec![rng.uniform(), rng.uniform()]).collect::<Vec<_>>(),
+        );
+        for h in [0.05, 0.3, 1.0, 10.0] {
+            let p = GaussSumProblem::kde(&data, h, 0.01);
+            let exact = Naive::new().run(&p).unwrap().sums;
+            let out = Dfto::new().run(&p).unwrap();
+            assert!(
+                max_relative_error(&out.sums, &exact) <= 0.01 * (1.0 + 1e-9),
+                "h={h}"
+            );
+        }
+    }
+
+    #[test]
+    fn large_bandwidth_triggers_series_prunes() {
+        let mut rng = Pcg32::new(95);
+        let data = Matrix::from_rows(
+            &(0..600).map(|_| vec![rng.uniform(), rng.uniform()]).collect::<Vec<_>>(),
+        );
+        // node radii / h < 1 for large h → grid series usable
+        let p = GaussSumProblem::kde(&data, 2.0, 0.01);
+        let out = Dfto::new().run(&p).unwrap();
+        assert!(
+            out.stats.dh_prunes + out.stats.dl_prunes + out.stats.h2l_prunes > 0,
+            "{:?}",
+            out.stats
+        );
+    }
+}

@@ -1,0 +1,133 @@
+//! **DITO** — the paper's headline algorithm: dual-tree recursion with
+//! the O(Dᵖ) graded expansion, the Lemma 4–6 error bounds (no node-size
+//! restriction), per-pair cheapest-method selection (Fig. 6), and the
+//! token-based error control (Section 5), with H2H moment precomputation
+//! (Fig. 5) and L2L post-processing (Fig. 8).
+
+use super::dualtree::{run_dualtree, DualTreeConfig, SeriesKind};
+use super::{AlgoError, GaussSum, GaussSumProblem, GaussSumResult};
+
+/// Configuration for [`Dito`].
+#[derive(Copy, Clone, Debug)]
+pub struct DitoConfig {
+    pub leaf_size: usize,
+    /// Override the paper's PLIMIT-per-dimension schedule.
+    pub plimit: Option<usize>,
+    /// Disable the token ledger (for ablation only; the paper's DITO
+    /// always uses it).
+    pub use_tokens: bool,
+}
+
+impl Default for DitoConfig {
+    fn default() -> Self {
+        DitoConfig { leaf_size: 32, plimit: None, use_tokens: true }
+    }
+}
+
+#[derive(Copy, Clone, Debug, Default)]
+pub struct Dito {
+    pub config: DitoConfig,
+}
+
+impl Dito {
+    pub fn new(config: DitoConfig) -> Self {
+        Dito { config }
+    }
+
+    fn engine_config(&self) -> DualTreeConfig {
+        DualTreeConfig {
+            leaf_size: self.config.leaf_size,
+            use_tokens: self.config.use_tokens,
+            series: Some(SeriesKind::OdpGraded),
+            plimit: self.config.plimit,
+        }
+    }
+}
+
+impl GaussSum for Dito {
+    fn name(&self) -> &'static str {
+        "DITO"
+    }
+
+    fn run(&self, problem: &GaussSumProblem<'_>) -> Result<GaussSumResult, AlgoError> {
+        run_dualtree(problem, &self.engine_config())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::naive::Naive;
+    use crate::algo::max_relative_error;
+    use crate::geometry::Matrix;
+    use crate::util::Pcg32;
+
+    fn blobs(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg32::new(seed);
+        let centers: Vec<Vec<f64>> =
+            (0..4).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect();
+        Matrix::from_rows(
+            &(0..n)
+                .map(|i| (0..d).map(|j| centers[i % 4][j] + 0.05 * rng.normal()).collect())
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    #[test]
+    fn guarantee_across_bandwidth_sweep_2d() {
+        let data = blobs(500, 2, 96);
+        // the paper's 10^-3 h* … 10^3 h* style sweep
+        for h in [1e-3, 1e-2, 0.1, 0.3, 1.0, 10.0, 100.0] {
+            let p = GaussSumProblem::kde(&data, h, 0.01);
+            let exact = Naive::new().run(&p).unwrap().sums;
+            let out = Dito::default().run(&p).unwrap();
+            assert!(
+                max_relative_error(&out.sums, &exact) <= 0.01 * (1.0 + 1e-9),
+                "h={h}"
+            );
+        }
+    }
+
+    #[test]
+    fn guarantee_in_higher_dims() {
+        for d in [5, 7, 10] {
+            let data = blobs(200, d, 97);
+            let p = GaussSumProblem::kde(&data, 0.5, 0.01);
+            let exact = Naive::new().run(&p).unwrap().sums;
+            let out = Dito::default().run(&p).unwrap();
+            assert!(
+                max_relative_error(&out.sums, &exact) <= 0.01 * (1.0 + 1e-9),
+                "d={d}"
+            );
+        }
+    }
+
+    #[test]
+    fn large_bandwidth_prefers_series_over_base_cases() {
+        let data = blobs(800, 2, 98);
+        let p = GaussSumProblem::kde(&data, 5.0, 0.01);
+        let out = Dito::default().run(&p).unwrap();
+        // at huge h everything is far-field: almost no exhaustive work
+        assert!(
+            out.stats.base_point_pairs < 800 * 800 / 10,
+            "base pairs {}",
+            out.stats.base_point_pairs
+        );
+        assert!(out.stats.total_prunes() > 0);
+    }
+
+    #[test]
+    fn plimit_override_respected() {
+        let data = blobs(300, 2, 99);
+        let p = GaussSumProblem::kde(&data, 0.5, 0.01);
+        let exact = Naive::new().run(&p).unwrap().sums;
+        for plimit in [1, 2, 4] {
+            let dito = Dito::new(DitoConfig { plimit: Some(plimit), ..Default::default() });
+            let out = dito.run(&p).unwrap();
+            assert!(
+                max_relative_error(&out.sums, &exact) <= 0.01 * (1.0 + 1e-9),
+                "plimit={plimit}"
+            );
+        }
+    }
+}

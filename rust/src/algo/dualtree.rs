@@ -1,0 +1,611 @@
+//! The shared dual-tree engine behind DFD, DFDO, DFTO and DITO.
+//!
+//! One recursion (paper Fig. 7), parameterized by:
+//! * `use_tokens` — plain Theorem-2 rule (DFD) vs the W_T token ledger
+//!   (DFDO/DFTO/DITO);
+//! * `series` — `None` (finite difference only) or an expansion family:
+//!   O(Dᵖ) graded + Lemma 4–6 bounds (DITO) or O(pᴰ) grid + geometric
+//!   bounds (DFTO).
+//!
+//! Correctness architecture: per-query-node state lives in a
+//! [`QueryLedger`]; bounds are hierarchical (summed along the root→leaf
+//! path) with the ancestor part carried down the recursion as
+//! `inherited_min` and the subtree part cached in `below_min` — see
+//! `errorcontrol` for the soundness argument. Approximation results are
+//! either per-point (base cases, EVALM) or node-level (FD estimates in
+//! `node_est`, local Taylor coefficients in `lcoeffs`), and the
+//! post-processing pass (paper Fig. 8) pushes node-level state down with
+//! the **L2L** operator and evaluates local expansions at the leaves.
+
+use crate::bounds::{odp::OdpBounds, opd::OpdBounds, NodeGeometry, TruncationBounds};
+use crate::errorcontrol::{token_rule, PruneDecision, QueryLedger};
+use crate::hermite::{
+    accumulate_local_truncated, eval_farfield_truncated, eval_local, h2l_truncated, l2l,
+    HermiteTable,
+};
+use crate::kernel::GaussianKernel;
+use crate::multiindex::Layout;
+use crate::tree::{plimit_for_dim, BuildParams, KdTree, RefMoments};
+use crate::util::timer::time_it;
+
+use super::bestmethod::{Choice, CostModel};
+use super::{AlgoError, GaussSumProblem, GaussSumResult, RunStats};
+
+/// Expansion family for FMM-type pruning.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum SeriesKind {
+    /// O(Dᵖ) graded expansion with the paper's Lemma 4–6 bounds (DITO).
+    OdpGraded,
+    /// O(pᴰ) grid expansion with geometric-series bounds (DFTO).
+    OpdGrid,
+}
+
+impl SeriesKind {
+    fn layout(self) -> Layout {
+        match self {
+            SeriesKind::OdpGraded => Layout::Graded,
+            SeriesKind::OpdGrid => Layout::Grid,
+        }
+    }
+}
+
+/// Engine configuration; the four public algorithms are fixed settings
+/// of this struct.
+#[derive(Copy, Clone, Debug)]
+pub struct DualTreeConfig {
+    /// Tree leaf size.
+    pub leaf_size: usize,
+    /// Enable the W_T token ledger (the paper's improved error control).
+    pub use_tokens: bool,
+    /// FMM-type pruning family, or `None` for finite-difference only.
+    pub series: Option<SeriesKind>,
+    /// Override the PLIMIT schedule (`None` = paper's per-D schedule).
+    pub plimit: Option<usize>,
+}
+
+impl Default for DualTreeConfig {
+    fn default() -> Self {
+        DualTreeConfig {
+            leaf_size: 32,
+            use_tokens: true,
+            series: Some(SeriesKind::OdpGraded),
+            plimit: None,
+        }
+    }
+}
+
+/// Immutable per-run context.
+struct Ctx<'a> {
+    qt: &'a KdTree,
+    rt: &'a KdTree,
+    kernel: GaussianKernel,
+    eps: f64,
+    total_w: f64,
+    use_tokens: bool,
+    series: Option<SeriesPack<'a>>,
+}
+
+struct SeriesPack<'a> {
+    moments: &'a RefMoments,
+    bounds: &'a dyn TruncationBounds,
+    p_limit: usize,
+}
+
+/// Mutable per-run state.
+struct State {
+    ledger: QueryLedger,
+    /// Local Taylor coefficients per query node (node-major), when a
+    /// series family is active.
+    lcoeffs: Vec<f64>,
+    set_len: usize,
+    table: HermiteTable,
+    mono: Vec<f64>,
+    off: Vec<f64>,
+    stats: RunStats,
+}
+
+/// Run the dual-tree algorithm defined by `cfg` on `problem`.
+pub fn run_dualtree(
+    problem: &GaussSumProblem<'_>,
+    cfg: &DualTreeConfig,
+) -> Result<GaussSumResult, AlgoError> {
+    let weights = problem.weight_vec();
+    let params = BuildParams { leaf_size: cfg.leaf_size };
+    let kernel = GaussianKernel::new(problem.h);
+    let dim = problem.dim();
+    let plimit = cfg.plimit.unwrap_or_else(|| plimit_for_dim(dim));
+
+    // ---- preprocessing (timed, included in totals as in the paper) ----
+    let ((rtree, qtree_opt, moments), build_secs) = time_it(|| {
+        let rtree = KdTree::build(problem.references, &weights, params);
+        let qtree_opt = if problem.monochromatic {
+            None
+        } else {
+            // query tree weights are irrelevant; use ones
+            let qw = vec![1.0; problem.queries.rows()];
+            Some(KdTree::build(problem.queries, &qw, params))
+        };
+        let moments = cfg
+            .series
+            .map(|s| RefMoments::compute(&rtree, &kernel, s.layout(), plimit));
+        (rtree, qtree_opt, moments)
+    });
+
+    let qt: &KdTree = qtree_opt.as_ref().unwrap_or(&rtree);
+    let rt: &KdTree = &rtree;
+
+    let series = match (&moments, cfg.series) {
+        (Some(m), Some(kind)) => Some(SeriesPack {
+            moments: m,
+            bounds: match kind {
+                SeriesKind::OdpGraded => &OdpBounds as &dyn TruncationBounds,
+                SeriesKind::OpdGrid => &OpdBounds as &dyn TruncationBounds,
+            },
+            p_limit: plimit,
+        }),
+        _ => None,
+    };
+
+    let set_len = series.as_ref().map_or(0, |s| s.moments.set().len());
+    let table_order = if set_len > 0 { 2 * plimit.max(1) } else { 1 };
+
+    let ctx = Ctx {
+        qt,
+        rt,
+        kernel,
+        eps: problem.epsilon,
+        total_w: problem.total_weight(),
+        use_tokens: cfg.use_tokens,
+        series,
+    };
+    let mut st = State {
+        ledger: QueryLedger::new(qt.num_nodes(), qt.num_points()),
+        lcoeffs: vec![0.0; qt.num_nodes() * set_len],
+        set_len,
+        table: HermiteTable::new(dim, table_order),
+        mono: vec![0.0; set_len.max(1)],
+        off: vec![0.0; dim],
+        stats: RunStats { build_secs, ..Default::default() },
+    };
+
+    recurse(&ctx, &mut st, qt.root(), rt.root(), 0.0);
+    let tree_order_sums = postprocess(&ctx, &mut st);
+    let sums = qt.unpermute(&tree_order_sums);
+
+    Ok(GaussSumResult { sums, stats: st.stats })
+}
+
+/// The main recursion (paper Fig. 7).
+fn recurse(ctx: &Ctx<'_>, st: &mut State, q: usize, r: usize, inherited_min: f64) {
+    st.stats.node_pairs += 1;
+    let qn = ctx.qt.node(q);
+    let rn = ctx.rt.node(r);
+    let dmin = qn.min_dist(rn);
+    let dmax = qn.max_dist(rn);
+    let ku = ctx.kernel.eval(dmin); // largest possible kernel value
+    let kl = ctx.kernel.eval(dmax); // smallest possible kernel value
+    let wr = rn.weight;
+    let dl = wr * kl;
+    let du = wr * (ku - 1.0);
+    let gq_min = st.ledger.gq_min(q, inherited_min);
+
+    // ---- finite-difference prune (optimized rule first, Fig. 7) ----
+    let e_fd = 0.5 * wr * (ku - kl);
+    match token_rule(e_fd, wr, st.ledger.tokens[q], gq_min, ctx.eps, ctx.total_w, ctx.use_tokens)
+    {
+        PruneDecision::Accept { token_delta } => {
+            apply_tokens(st, q, token_delta);
+            st.ledger.node_min[q] += dl;
+            st.ledger.node_max[q] += du;
+            st.ledger.node_est[q] += 0.5 * wr * (ku + kl);
+            st.stats.fd_prunes += 1;
+            return;
+        }
+        PruneDecision::Reject => {}
+    }
+
+    // ---- FMM-type prune (series families only) ----
+    if let Some(series) = &ctx.series {
+        if gq_min > 0.0 {
+            let budget_w = wr + if ctx.use_tokens { st.ledger.tokens[q] } else { 0.0 };
+            let max_err = ctx.eps * budget_w * gq_min / ctx.total_w;
+            let geo = NodeGeometry {
+                dim: ctx.qt.dim(),
+                min_sqdist: dmin * dmin,
+                r_ref: rn.linf_radius / ctx.kernel.bandwidth(),
+                r_query: qn.linf_radius / ctx.kernel.bandwidth(),
+                h: ctx.kernel.bandwidth(),
+            };
+            let cm = CostModel { set: series.moments.set(), p_limit: series.p_limit };
+            let choice =
+                cm.best_method(series.bounds, &geo, wr, max_err, qn.count(), rn.count());
+            if choice != Choice::Direct {
+                let err = match choice {
+                    Choice::DH { p, err } => {
+                        let set = series.moments.set();
+                        let coeffs = series.moments.node_coeffs(r);
+                        for qi in qn.begin..qn.end {
+                            st.ledger.point_est[qi] += eval_farfield_truncated(
+                                set,
+                                p,
+                                coeffs,
+                                &rn.centroid,
+                                series.moments.scale(),
+                                ctx.qt.points().row(qi),
+                                &mut st.table,
+                                &mut st.off,
+                            );
+                        }
+                        st.stats.dh_prunes += 1;
+                        err
+                    }
+                    Choice::DL { p, err } => {
+                        let set = series.moments.set();
+                        let lc = &mut st.lcoeffs[q * st.set_len..(q + 1) * st.set_len];
+                        accumulate_local_truncated(
+                            set,
+                            p,
+                            ctx.rt.points(),
+                            rn.begin..rn.end,
+                            ctx.rt.weights(),
+                            &qn.centroid,
+                            series.moments.scale(),
+                            lc,
+                            &mut st.table,
+                            &mut st.off,
+                        );
+                        st.stats.dl_prunes += 1;
+                        err
+                    }
+                    Choice::H2L { p, err } => {
+                        let set = series.moments.set();
+                        let lc = &mut st.lcoeffs[q * st.set_len..(q + 1) * st.set_len];
+                        h2l_truncated(
+                            set,
+                            p,
+                            series.moments.node_coeffs(r),
+                            &rn.centroid,
+                            &qn.centroid,
+                            series.moments.scale(),
+                            lc,
+                            &mut st.table,
+                            &mut st.off,
+                        );
+                        st.stats.h2l_prunes += 1;
+                        err
+                    }
+                    Choice::Direct => unreachable!(),
+                };
+                // account the accepted error against the ledger
+                match token_rule(
+                    err,
+                    wr,
+                    st.ledger.tokens[q],
+                    gq_min,
+                    ctx.eps,
+                    ctx.total_w,
+                    ctx.use_tokens,
+                ) {
+                    PruneDecision::Accept { token_delta } => apply_tokens(st, q, token_delta),
+                    // feasibility guaranteed by max_err construction
+                    PruneDecision::Reject => unreachable!("bestMethod returned infeasible"),
+                }
+                st.ledger.node_min[q] += dl;
+                st.ledger.node_max[q] += du;
+                return;
+            }
+        }
+    }
+
+    // ---- expand ----
+    match (qn.is_leaf(), rn.is_leaf()) {
+        (true, true) => base_case(ctx, st, q, r),
+        (true, false) => {
+            // split reference side, nearer child first (tightens G_Q^min
+            // before the farther child is considered)
+            let (a, b) = ctx.rt.children(r).unwrap();
+            let (near, far) = order_by_dist(ctx.qt.node(q), ctx.rt, a, b);
+            recurse(ctx, st, q, near, inherited_min);
+            recurse(ctx, st, q, far, inherited_min);
+        }
+        (false, true) => {
+            let (l, rr) = ctx.qt.children(q).unwrap();
+            let inh = inherited_min + st.ledger.node_min[q];
+            recurse(ctx, st, l, r, inh);
+            recurse(ctx, st, rr, r, inh);
+            st.ledger.refresh_below_from_children(q, l, rr);
+        }
+        (false, false) => {
+            let (ql, qr) = ctx.qt.children(q).unwrap();
+            let inh = inherited_min + st.ledger.node_min[q];
+            for qc in [ql, qr] {
+                let (a, b) = ctx.rt.children(r).unwrap();
+                let (near, far) = order_by_dist(ctx.qt.node(qc), ctx.rt, a, b);
+                recurse(ctx, st, qc, near, inh);
+                recurse(ctx, st, qc, far, inh);
+            }
+            st.ledger.refresh_below_from_children(q, ql, qr);
+        }
+    }
+}
+
+fn apply_tokens(st: &mut State, q: usize, delta: f64) {
+    if delta >= 0.0 {
+        st.stats.tokens_banked += delta;
+    } else {
+        st.stats.tokens_spent += -delta;
+    }
+    st.ledger.tokens[q] += delta;
+}
+
+fn order_by_dist(qn: &crate::tree::Node, rt: &KdTree, a: usize, b: usize) -> (usize, usize) {
+    if qn.min_dist(rt.node(a)) <= qn.min_dist(rt.node(b)) {
+        (a, b)
+    } else {
+        (b, a)
+    }
+}
+
+/// Leaf–leaf exhaustive base case (paper's DITOBase).
+fn base_case(ctx: &Ctx<'_>, st: &mut State, q: usize, r: usize) {
+    let qn = ctx.qt.node(q);
+    let rn = ctx.rt.node(r);
+    let wr_total = rn.weight;
+    let d = ctx.qt.dim();
+    for qi in qn.begin..qn.end {
+        let qrow = ctx.qt.points().row(qi);
+        let mut acc = 0.0;
+        for ri in rn.begin..rn.end {
+            let rrow = ctx.rt.points().row(ri);
+            let mut sq = 0.0;
+            for k in 0..d {
+                let dd = qrow[k] - rrow[k];
+                sq += dd * dd;
+            }
+            acc += ctx.rt.weights()[ri] * ctx.kernel.eval_sq(sq);
+        }
+        st.ledger.point_min[qi] += acc;
+        st.ledger.point_est[qi] += acc;
+        st.ledger.point_max[qi] += acc - wr_total;
+    }
+    st.stats.base_point_pairs += (qn.count() * rn.count()) as u64;
+    if ctx.use_tokens {
+        // exhaustive computation banks its full entitlement (Fig. 7)
+        st.ledger.tokens[q] += wr_total;
+        st.stats.tokens_banked += wr_total;
+    }
+    st.ledger.refresh_below_from_points(q, qn.begin, qn.end);
+}
+
+/// Post-processing (paper Fig. 8): push node-level estimates and local
+/// expansions down the query tree (L2L), then evaluate at leaf points.
+/// Returns per-point sums in tree order.
+fn postprocess(ctx: &Ctx<'_>, st: &mut State) -> Vec<f64> {
+    let qt = ctx.qt;
+    let mut out = vec![0.0; qt.num_points()];
+    // BFS order: parents processed before children.
+    let mut queue = std::collections::VecDeque::from([qt.root()]);
+    while let Some(q) = queue.pop_front() {
+        if let Some((l, r)) = qt.children(q) {
+            let est = st.ledger.node_est[q];
+            st.ledger.node_est[l] += est;
+            st.ledger.node_est[r] += est;
+            if let Some(series) = &ctx.series {
+                let set = series.moments.set();
+                let pairs = series.moments.pairs();
+                let scale = series.moments.scale();
+                let len = st.set_len;
+                for child in [l, r] {
+                    // split-borrow the node-major lcoeffs buffer
+                    let (parent_part, child_part) =
+                        split_blocks(&mut st.lcoeffs, q, child, len);
+                    l2l(
+                        set,
+                        pairs,
+                        parent_part,
+                        &qt.node(q).centroid,
+                        &qt.node(child).centroid,
+                        scale,
+                        child_part,
+                        &mut st.mono,
+                        &mut st.off,
+                    );
+                }
+            }
+            queue.push_back(l);
+            queue.push_back(r);
+        } else {
+            let node_est = st.ledger.node_est[q];
+            for qi in qt.node(q).begin..qt.node(q).end {
+                let mut v = st.ledger.point_est[qi] + node_est;
+                if let Some(series) = &ctx.series {
+                    let set = series.moments.set();
+                    let lc = &st.lcoeffs[q * st.set_len..(q + 1) * st.set_len];
+                    v += eval_local(
+                        set,
+                        lc,
+                        &qt.node(q).centroid,
+                        series.moments.scale(),
+                        qt.points().row(qi),
+                        &mut st.mono,
+                        &mut st.off,
+                    );
+                }
+                out[qi] = v;
+            }
+        }
+    }
+    out
+}
+
+/// Disjoint (&parent, &mut child) blocks of a node-major buffer.
+fn split_blocks(buf: &mut [f64], parent: usize, child: usize, len: usize) -> (&[f64], &mut [f64]) {
+    assert_ne!(parent, child);
+    if parent < child {
+        let (lo, hi) = buf.split_at_mut(child * len);
+        (&lo[parent * len..(parent + 1) * len], &mut hi[..len])
+    } else {
+        let (lo, hi) = buf.split_at_mut(parent * len);
+        (&hi[..len], &mut lo[child * len..(child + 1) * len])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::naive::Naive;
+    use crate::algo::{max_relative_error, GaussSum};
+    use crate::geometry::Matrix;
+    use crate::util::Pcg32;
+
+    fn clustered(n: usize, d: usize, seed: u64) -> Matrix {
+        // a few Gaussian blobs — the regime dual trees exploit
+        let mut rng = Pcg32::new(seed);
+        let k = 4;
+        let centers: Vec<Vec<f64>> =
+            (0..k).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect();
+        Matrix::from_rows(
+            &(0..n)
+                .map(|i| {
+                    let c = &centers[i % k];
+                    (0..d).map(|j| c[j] + 0.05 * rng.normal()).collect()
+                })
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    fn check_config(cfg: DualTreeConfig, n: usize, d: usize, h: f64, eps: f64, seed: u64) {
+        let data = clustered(n, d, seed);
+        let problem = GaussSumProblem::kde(&data, h, eps);
+        let exact = Naive::new().run(&problem).unwrap().sums;
+        let got = run_dualtree(&problem, &cfg).unwrap();
+        let rel = max_relative_error(&got.sums, &exact);
+        assert!(
+            rel <= eps * (1.0 + 1e-9),
+            "cfg={cfg:?} d={d} h={h}: rel={rel} > eps={eps}"
+        );
+    }
+
+    #[test]
+    fn dfd_style_meets_tolerance() {
+        let cfg = DualTreeConfig { use_tokens: false, series: None, ..Default::default() };
+        for h in [0.01, 0.1, 0.5, 2.0] {
+            check_config(cfg, 400, 2, h, 0.01, 71);
+        }
+    }
+
+    #[test]
+    fn tokens_only_meets_tolerance() {
+        let cfg = DualTreeConfig { use_tokens: true, series: None, ..Default::default() };
+        for h in [0.01, 0.1, 0.5, 2.0] {
+            check_config(cfg, 400, 2, h, 0.01, 72);
+        }
+    }
+
+    #[test]
+    fn odp_series_meets_tolerance_2d() {
+        let cfg = DualTreeConfig::default(); // tokens + OdpGraded
+        for h in [0.02, 0.1, 0.5, 2.0] {
+            check_config(cfg, 400, 2, h, 0.01, 73);
+        }
+    }
+
+    #[test]
+    fn opd_series_meets_tolerance_2d() {
+        let cfg =
+            DualTreeConfig { series: Some(SeriesKind::OpdGrid), ..Default::default() };
+        for h in [0.02, 0.1, 0.5, 2.0] {
+            check_config(cfg, 400, 2, h, 0.01, 74);
+        }
+    }
+
+    #[test]
+    fn higher_dims_meet_tolerance() {
+        for d in [3, 5, 7] {
+            let cfg = DualTreeConfig::default();
+            check_config(cfg, 300, d, 0.3, 0.01, 75);
+        }
+    }
+
+    #[test]
+    fn tight_epsilon_still_met() {
+        check_config(DualTreeConfig::default(), 300, 2, 0.2, 1e-4, 76);
+    }
+
+    #[test]
+    fn loose_epsilon_prunes_more() {
+        let data = clustered(500, 2, 77);
+        let loose = GaussSumProblem::kde(&data, 0.3, 0.5);
+        let tight = GaussSumProblem::kde(&data, 0.3, 1e-6);
+        let cfg = DualTreeConfig::default();
+        let a = run_dualtree(&loose, &cfg).unwrap();
+        let b = run_dualtree(&tight, &cfg).unwrap();
+        assert!(
+            a.stats.base_point_pairs < b.stats.base_point_pairs,
+            "loose={} tight={}",
+            a.stats.base_point_pairs,
+            b.stats.base_point_pairs
+        );
+    }
+
+    #[test]
+    fn bichromatic_queries_differ_from_refs() {
+        let mut rng = Pcg32::new(78);
+        let refs = clustered(300, 2, 79);
+        let queries = Matrix::from_rows(
+            &(0..50)
+                .map(|_| (0..2).map(|_| rng.uniform()).collect())
+                .collect::<Vec<_>>(),
+        );
+        let w: Vec<f64> = (0..300).map(|_| rng.uniform_in(0.5, 1.5)).collect();
+        let problem = GaussSumProblem::new(&queries, &refs, Some(&w), 0.2, 0.01);
+        let exact = Naive::new().run(&problem).unwrap().sums;
+        let got = run_dualtree(&problem, &DualTreeConfig::default()).unwrap();
+        assert!(max_relative_error(&got.sums, &exact) <= 0.01 * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn stats_account_all_prune_types_in_2d() {
+        // moderate bandwidth → FMM (series) prunes dominate
+        let data = clustered(800, 2, 80);
+        let problem = GaussSumProblem::kde(&data, 0.5, 0.01);
+        let got = run_dualtree(&problem, &DualTreeConfig::default()).unwrap();
+        assert!(
+            got.stats.dh_prunes + got.stats.dl_prunes + got.stats.h2l_prunes > 0,
+            "series prunes expected: {:?}",
+            got.stats
+        );
+        assert!(got.stats.tokens_banked > 0.0);
+        assert!(got.stats.tokens_spent > 0.0);
+        // tiny bandwidth → distant pairs have e_FD ≈ 0 → FD prunes fire
+        let problem2 = GaussSumProblem::kde(&data, 0.005, 0.01);
+        let got2 = run_dualtree(&problem2, &DualTreeConfig::default()).unwrap();
+        assert!(got2.stats.fd_prunes > 0, "{:?}", got2.stats);
+    }
+
+    #[test]
+    fn duplicate_heavy_data_is_handled() {
+        // many identical points stress zero-width nodes
+        let mut rows = vec![vec![0.25, 0.25]; 100];
+        rows.extend(vec![vec![0.75, 0.75]; 100]);
+        let data = Matrix::from_rows(&rows);
+        let problem = GaussSumProblem::kde(&data, 0.1, 0.01);
+        let exact = Naive::new().run(&problem).unwrap().sums;
+        let got = run_dualtree(&problem, &DualTreeConfig::default()).unwrap();
+        assert!(max_relative_error(&got.sums, &exact) <= 0.01 * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn extreme_bandwidths() {
+        let data = clustered(300, 3, 81);
+        for h in [1e-4, 1e3] {
+            let problem = GaussSumProblem::kde(&data, h, 0.01);
+            let exact = Naive::new().run(&problem).unwrap().sums;
+            let got = run_dualtree(&problem, &DualTreeConfig::default()).unwrap();
+            assert!(
+                max_relative_error(&got.sums, &exact) <= 0.01 * (1.0 + 1e-9),
+                "h={h}"
+            );
+        }
+    }
+}

@@ -1,0 +1,237 @@
+//! The Gaussian-summation algorithms the paper evaluates:
+//!
+//! | name | module | description |
+//! |---|---|---|
+//! | Naive | [`naive`] | exhaustive O(NM) summation |
+//! | FGT   | [`fgt`]   | flat-grid Fast Gauss Transform (Greengard & Strain 1991) |
+//! | IFGT  | [`ifgt`]  | Improved FGT: k-center clusters + O(Dᵖ) Taylor (Yang et al. 2003) |
+//! | DFD   | [`dfd`]   | dual-tree finite difference (Gray & Moore 2003b) |
+//! | DFDO  | [`dfdo`]  | DFD + the paper's token error control |
+//! | DFTO  | [`dfto`]  | dual-tree O(pᴰ) expansion + token control (Lee et al. 2006 bounds) |
+//! | DITO  | [`dito`]  | **the paper's contribution**: dual-tree O(Dᵖ) expansion + token control |
+//!
+//! All implement [`GaussSum`] over a shared [`GaussSumProblem`]. The four
+//! dual-tree variants share one engine ([`dualtree`]) parameterized by
+//! expansion layout / bound family / token usage, mirroring how the
+//! paper presents them as one algorithm with switches.
+
+pub mod bestmethod;
+pub mod dualtree;
+pub mod dfd;
+pub mod dfdo;
+pub mod dfto;
+pub mod dito;
+pub mod fgt;
+pub mod ifgt;
+pub mod naive;
+
+use crate::geometry::Matrix;
+
+/// Why an algorithm could not produce a result — mirrors the paper's
+/// table entries: `X` (RAM exhaustion) and `∞` (no parameter setting
+/// meets the tolerance).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AlgoError {
+    /// The method would exhaust memory (paper's `X`).
+    RamExhausted(String),
+    /// No parameter setting can satisfy the error tolerance (paper's `∞`).
+    ToleranceUnreachable(String),
+}
+
+impl std::fmt::Display for AlgoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AlgoError::RamExhausted(s) => write!(f, "memory exhausted (paper 'X'): {s}"),
+            AlgoError::ToleranceUnreachable(s) => {
+                write!(f, "tolerance unreachable (paper '∞'): {s}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AlgoError {}
+
+/// One Gaussian-summation instance: compute
+/// G(x_q) = Σ_r w_r·exp(−‖x_q−x_r‖²/2h²) for every query row, with the
+/// guarantee |G̃−G| ≤ ε·G for the guaranteed algorithms.
+#[derive(Clone, Debug)]
+pub struct GaussSumProblem<'a> {
+    pub queries: &'a Matrix,
+    pub references: &'a Matrix,
+    /// Per-reference weights; `None` = all ones.
+    pub weights: Option<&'a [f64]>,
+    /// Bandwidth h of the Gaussian kernel.
+    pub h: f64,
+    /// Relative error tolerance ε.
+    pub epsilon: f64,
+    /// True when queries and references are the *same* point set (the
+    /// paper's KDE setting) — lets dual-tree algorithms build one tree.
+    pub monochromatic: bool,
+}
+
+impl<'a> GaussSumProblem<'a> {
+    /// Bichromatic problem with explicit query/reference sets.
+    pub fn new(
+        queries: &'a Matrix,
+        references: &'a Matrix,
+        weights: Option<&'a [f64]>,
+        h: f64,
+        epsilon: f64,
+    ) -> Self {
+        assert_eq!(queries.cols(), references.cols(), "dimension mismatch");
+        if let Some(w) = weights {
+            assert_eq!(w.len(), references.rows());
+            assert!(w.iter().all(|&x| x > 0.0), "weights must be positive");
+        }
+        assert!(h > 0.0 && epsilon > 0.0);
+        GaussSumProblem { queries, references, weights, h, epsilon, monochromatic: false }
+    }
+
+    /// The paper's KDE setting: queries = references, unit weights.
+    pub fn kde(data: &'a Matrix, h: f64, epsilon: f64) -> Self {
+        let mut p = Self::new(data, data, None, h, epsilon);
+        p.monochromatic = true;
+        p
+    }
+
+    pub fn dim(&self) -> usize {
+        self.references.cols()
+    }
+
+    pub fn num_queries(&self) -> usize {
+        self.queries.rows()
+    }
+
+    pub fn num_references(&self) -> usize {
+        self.references.rows()
+    }
+
+    /// Materialize the weight vector (ones when unweighted).
+    pub fn weight_vec(&self) -> Vec<f64> {
+        match self.weights {
+            Some(w) => w.to_vec(),
+            None => vec![1.0; self.references.rows()],
+        }
+    }
+
+    /// W = Σ w_r.
+    pub fn total_weight(&self) -> f64 {
+        match self.weights {
+            Some(w) => w.iter().sum(),
+            None => self.references.rows() as f64,
+        }
+    }
+}
+
+/// Instrumentation counters for one run — the prune-type histogram used
+/// by EXPERIMENTS.md and the ablation benches.
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    /// Node-pair recursions visited.
+    pub node_pairs: u64,
+    /// Leaf-leaf exhaustive base cases (pairs of points computed).
+    pub base_point_pairs: u64,
+    /// Finite-difference prunes.
+    pub fd_prunes: u64,
+    /// Direct Hermite evaluation prunes (EVALM).
+    pub dh_prunes: u64,
+    /// Direct local accumulation prunes (DIRECTL).
+    pub dl_prunes: u64,
+    /// Hermite-to-local translation prunes.
+    pub h2l_prunes: u64,
+    /// Tokens banked / spent by the error-control ledger.
+    pub tokens_banked: f64,
+    pub tokens_spent: f64,
+    /// Tree construction + moment precomputation seconds.
+    pub build_secs: f64,
+    /// Total wall-clock seconds (filled by the harness/run wrapper).
+    pub total_secs: f64,
+}
+
+impl RunStats {
+    /// Total prunes of any kind.
+    pub fn total_prunes(&self) -> u64 {
+        self.fd_prunes + self.dh_prunes + self.dl_prunes + self.h2l_prunes
+    }
+}
+
+/// Result of a run: per-query sums in the original query row order.
+#[derive(Clone, Debug)]
+pub struct GaussSumResult {
+    pub sums: Vec<f64>,
+    pub stats: RunStats,
+}
+
+/// A Gaussian-summation algorithm.
+pub trait GaussSum {
+    /// Short table name ("DITO", "DFD", …).
+    fn name(&self) -> &'static str;
+
+    /// Run on a problem. `Err(AlgoError)` maps to the paper's X/∞ cells.
+    fn run(&self, problem: &GaussSumProblem<'_>) -> Result<GaussSumResult, AlgoError>;
+
+    /// Whether the algorithm guarantees the ε tolerance by construction
+    /// (the dual-tree family) or needs external verification (FGT/IFGT).
+    fn guarantees_tolerance(&self) -> bool {
+        true
+    }
+}
+
+/// Maximum relative error of `approx` vs `exact` — the paper's
+/// verification criterion max_q |G̃−G|/G.
+pub fn max_relative_error(approx: &[f64], exact: &[f64]) -> f64 {
+    assert_eq!(approx.len(), exact.len());
+    approx
+        .iter()
+        .zip(exact)
+        .map(|(a, e)| if *e > 0.0 { (a - e).abs() / e } else { (a - e).abs() })
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts() -> Matrix {
+        Matrix::from_rows(&[vec![0.0, 0.0], vec![1.0, 0.0], vec![0.0, 1.0]])
+    }
+
+    #[test]
+    fn kde_problem_is_monochromatic() {
+        let m = pts();
+        let p = GaussSumProblem::kde(&m, 0.5, 0.01);
+        assert!(p.monochromatic);
+        assert_eq!(p.total_weight(), 3.0);
+        assert_eq!(p.weight_vec(), vec![1.0; 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dimension_mismatch_rejected() {
+        let a = pts();
+        let b = Matrix::from_rows(&[vec![0.0]]);
+        GaussSumProblem::new(&a, &b, None, 0.5, 0.01);
+    }
+
+    #[test]
+    #[should_panic]
+    fn nonpositive_weights_rejected() {
+        let m = pts();
+        let w = vec![1.0, 0.0, 1.0];
+        GaussSumProblem::new(&m, &m, Some(&w), 0.5, 0.01);
+    }
+
+    #[test]
+    fn max_rel_error_basic() {
+        assert!((max_relative_error(&[1.1, 2.0], &[1.0, 2.0]) - 0.1).abs() < 1e-12);
+        assert_eq!(max_relative_error(&[0.5], &[0.0]), 0.5);
+    }
+
+    #[test]
+    fn algo_error_display() {
+        let x = AlgoError::RamExhausted("grid 10^20 boxes".into());
+        assert!(x.to_string().contains('X'));
+        let inf = AlgoError::ToleranceUnreachable("K > N".into());
+        assert!(inf.to_string().contains('∞'));
+    }
+}

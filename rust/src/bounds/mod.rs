@@ -1,0 +1,117 @@
+//! Truncation-error bounds for the expansion-based approximation
+//! methods.
+//!
+//! * [`odp`] — the paper's new O(Dᵖ) bounds (Lemmas 4–6), built on the
+//!   multidimensional Taylor theorem; **no node-size restriction**.
+//! * [`opd`] — classical O(pᴰ) geometric-series bounds in the style of
+//!   Greengard & Strain / Baxter & Roussos / Lee et al. 2006; these are
+//!   only valid when the scaled node radii are < 1 (the node-size
+//!   restriction the paper's new bounds remove).
+//!
+//! Both expose the same three quantities per (Q, R, p):
+//! `E_DH` (truncated Hermite evaluated at queries), `E_DL` (direct local
+//! accumulation), `E_H2L` (far-field converted to local), with geometry
+//! summarized by [`NodeGeometry`].
+
+pub mod odp;
+pub mod opd;
+
+/// Geometry of a (query node, reference node) pair, pre-scaled the way
+/// the bounds consume it.
+#[derive(Copy, Clone, Debug)]
+pub struct NodeGeometry {
+    /// Dimension D.
+    pub dim: usize,
+    /// min squared distance between the nodes, (δ_QR^min)².
+    pub min_sqdist: f64,
+    /// r_R = max_{x_r∈R} ‖x_r − x_R‖∞ / h.
+    pub r_ref: f64,
+    /// r_Q = max_{x_q∈Q} ‖x_q − x_Q‖∞ / h.
+    pub r_query: f64,
+    /// Bandwidth h.
+    pub h: f64,
+}
+
+impl NodeGeometry {
+    /// The decay factor e^(−δ_min²/(4h²)) common to all bounds.
+    #[inline]
+    pub fn decay(&self) -> f64 {
+        (-self.min_sqdist / (4.0 * self.h * self.h)).exp()
+    }
+}
+
+/// Which approximation the bound refers to (paper's 𝔸 set minus EX/FD,
+/// which have closed-form errors handled in `errorcontrol`).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum SeriesMethod {
+    /// Direct Hermite evaluation at each query point.
+    DH,
+    /// Direct local (Taylor) accumulation from each reference point.
+    DL,
+    /// Hermite-to-local translation.
+    H2L,
+}
+
+/// A family of truncation bounds: given pair geometry and an order p,
+/// an upper bound on the *per-unit-weight* absolute error (multiply by
+/// W_R for the paper's E_A). Returns `f64::INFINITY` when the bound is
+/// not valid for this geometry (e.g. O(pᴰ) node-size restriction).
+///
+/// Implementors provide the bound *without* the common e^(−δ²/4h²)
+/// decay factor (`unit_error_nodecay`), so the order search in
+/// `smallest_order` evaluates the exp once per pair instead of once per
+/// (method, p) — this sits on the per-node-pair hot path.
+pub trait TruncationBounds {
+    /// The bound divided by the decay factor `geo.decay()`.
+    fn unit_error_nodecay(&self, method: SeriesMethod, geo: &NodeGeometry, p: usize) -> f64;
+
+    /// The full per-unit-weight bound.
+    fn unit_error(&self, method: SeriesMethod, geo: &NodeGeometry, p: usize) -> f64 {
+        geo.decay() * self.unit_error_nodecay(method, geo, p)
+    }
+
+    /// Smallest p in 1..=p_limit with W_R·bound ≤ max_err, or None.
+    fn smallest_order(
+        &self,
+        method: SeriesMethod,
+        geo: &NodeGeometry,
+        weight: f64,
+        max_err: f64,
+        p_limit: usize,
+    ) -> Option<(usize, f64)> {
+        let wd = weight * geo.decay();
+        for p in 1..=p_limit {
+            let e = wd * self.unit_error_nodecay(method, geo, p);
+            if e <= max_err {
+                return Some((p, e));
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decay_factor() {
+        let g = NodeGeometry { dim: 2, min_sqdist: 4.0, r_ref: 0.5, r_query: 0.5, h: 1.0 };
+        assert!((g.decay() - (-1.0f64).exp()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn smallest_order_finds_first_valid() {
+        struct Fake;
+        impl TruncationBounds for Fake {
+            fn unit_error_nodecay(&self, _m: SeriesMethod, _g: &NodeGeometry, p: usize) -> f64 {
+                1.0 / (1 << p) as f64 // halves each order
+            }
+        }
+        let g = NodeGeometry { dim: 2, min_sqdist: 0.0, r_ref: 0.1, r_query: 0.1, h: 1.0 };
+        let (p, e) = Fake.smallest_order(SeriesMethod::DH, &g, 1.0, 0.13, 8).unwrap();
+        assert_eq!(p, 3);
+        assert!(e <= 0.13);
+        assert!(Fake.smallest_order(SeriesMethod::DH, &g, 1.0, 1e-9, 8).is_none());
+    }
+}

@@ -1,0 +1,341 @@
+//! The paper's O(Dᵖ) truncation bounds (Lemmas 4–6).
+//!
+//! Shared structure: with p' = p mod D, the minimum of α! over |α| = p is
+//! (⌊p/D⌋!)^(D−p')·(⌈p/D⌉!)^(p'), and the number of indices with
+//! |α| = p is C(D+p−1, D−1); combining with Cramér's inequality on the
+//! Hermite functions gives
+//!
+//!   E_DH(p)  = W_R · e^(−δ_min²/4h²) · C(D+p−1,D−1) · r_R^p / √(minfact)
+//!   E_DL(p)  =   同 with r_Q
+//!   E_H2L(p) = W_R · e^(−δ_min²/4h²) · C(D+p−1,D−1)/√(minfact)
+//!              · ( r_Q^p + (√2·r_R)^p · C(D+p−1,D) · (√2·r_Q)^I(√2·r_Q) )
+//!
+//! with I(x) = 0 for x ≤ 1 and p−1 otherwise (Lemma 6's head-monomial
+//! majorant). Crucially none of these require r < 1 — the bounds stay
+//! finite (if possibly large) for any node size, which is what lets the
+//! dual-tree algorithm attempt series pruning everywhere.
+
+use crate::multiindex::{binomial, factorial};
+
+use super::{NodeGeometry, SeriesMethod, TruncationBounds};
+
+/// Bound family from Lemmas 4–6.
+#[derive(Copy, Clone, Debug, Default)]
+pub struct OdpBounds;
+
+/// √( (⌊p/D⌋!)^(D−p') · (⌈p/D⌉!)^(p') ) — the minimum √(α!) over |α|=p
+/// used as the denominator in all three lemmas.
+fn sqrt_min_factorial(dim: usize, p: usize) -> f64 {
+    let lo = p / dim;
+    let rem = p % dim;
+    let lo_f = factorial(lo);
+    let hi_f = factorial(lo + usize::from(rem > 0));
+    (lo_f.powi((dim - rem) as i32) * hi_f.powi(rem as i32)).sqrt()
+}
+
+impl OdpBounds {
+    /// Lemma 4 without the decay factor.
+    fn e_dh_nodecay(geo: &NodeGeometry, p: usize) -> f64 {
+        let d = geo.dim;
+        binomial(d + p - 1, d - 1) * geo.r_ref.powi(p as i32) / sqrt_min_factorial(d, p)
+    }
+
+    /// Lemma 5 without the decay factor.
+    fn e_dl_nodecay(geo: &NodeGeometry, p: usize) -> f64 {
+        let d = geo.dim;
+        binomial(d + p - 1, d - 1) * geo.r_query.powi(p as i32) / sqrt_min_factorial(d, p)
+    }
+
+    /// Lemma 6 without the decay factor.
+    fn e_h2l_nodecay(geo: &NodeGeometry, p: usize) -> f64 {
+        let d = geo.dim;
+        let sqrt2 = std::f64::consts::SQRT_2;
+        let sq_rq = sqrt2 * geo.r_query;
+        // I(x): the head Σ_{|β|<p} monomial majorant exponent.
+        let head = if sq_rq <= 1.0 { 1.0 } else { sq_rq.powi(p as i32 - 1) };
+        let e2 = geo.r_query.powi(p as i32);
+        let e1 = (sqrt2 * geo.r_ref).powi(p as i32) * binomial(d + p - 1, d) * head;
+        binomial(d + p - 1, d - 1) * (e2 + e1) / sqrt_min_factorial(d, p)
+    }
+
+    /// Lemma 4: truncated Hermite (far-field) evaluation error per unit
+    /// reference weight.
+    pub fn e_dh(geo: &NodeGeometry, p: usize) -> f64 {
+        geo.decay() * Self::e_dh_nodecay(geo, p)
+    }
+
+    /// Lemma 5: direct local (Taylor) accumulation error per unit weight.
+    pub fn e_dl(geo: &NodeGeometry, p: usize) -> f64 {
+        geo.decay() * Self::e_dl_nodecay(geo, p)
+    }
+
+    /// Lemma 6: H2L-translated truncation error per unit weight.
+    pub fn e_h2l(geo: &NodeGeometry, p: usize) -> f64 {
+        geo.decay() * Self::e_h2l_nodecay(geo, p)
+    }
+}
+
+impl TruncationBounds for OdpBounds {
+    fn unit_error_nodecay(&self, method: SeriesMethod, geo: &NodeGeometry, p: usize) -> f64 {
+        match method {
+            SeriesMethod::DH => Self::e_dh_nodecay(geo, p),
+            SeriesMethod::DL => Self::e_dl_nodecay(geo, p),
+            SeriesMethod::H2L => Self::e_h2l_nodecay(geo, p),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::{linf_dist, Matrix};
+    use crate::hermite::{accumulate_farfield, accumulate_local, eval_farfield, eval_local, h2l, HermiteTable};
+    use crate::kernel::GaussianKernel;
+    use crate::multiindex::{Layout, MultiIndexSet};
+    use crate::util::Pcg32;
+
+    fn geo(dim: usize, min_sqdist: f64, r_ref: f64, r_query: f64, h: f64) -> NodeGeometry {
+        NodeGeometry { dim, min_sqdist, r_ref, r_query, h }
+    }
+
+    #[test]
+    fn sqrt_min_factorial_cases() {
+        // p=4, D=2: p'=0, (2!)^2 = 4 → √4 = 2
+        assert!((sqrt_min_factorial(2, 4) - 2.0).abs() < 1e-12);
+        // p=5, D=2: p'=1, (2!)^1·(3!)^1 = 12 → √12
+        assert!((sqrt_min_factorial(2, 5) - 12f64.sqrt()).abs() < 1e-12);
+        // p=1, D=3: p'=1, (0!)^2·(1!)^1 = 1
+        assert!((sqrt_min_factorial(3, 1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bounds_positive_and_finite_for_large_nodes() {
+        // The headline property: no node-size restriction — stay finite
+        // even for scaled radii ≫ 1.
+        let g = geo(5, 0.0, 10.0, 8.0, 0.1);
+        for p in 1..=8 {
+            for m in [SeriesMethod::DH, SeriesMethod::DL, SeriesMethod::H2L] {
+                let e = OdpBounds.unit_error(m, &g, p);
+                assert!(e.is_finite() && e > 0.0, "{m:?} p={p} e={e}");
+            }
+        }
+    }
+
+    #[test]
+    fn decays_with_distance() {
+        let near = geo(3, 0.01, 0.5, 0.5, 0.2);
+        let far = geo(3, 1.0, 0.5, 0.5, 0.2);
+        for m in [SeriesMethod::DH, SeriesMethod::DL, SeriesMethod::H2L] {
+            assert!(OdpBounds.unit_error(m, &far, 3) < OdpBounds.unit_error(m, &near, 3));
+        }
+    }
+
+    #[test]
+    fn small_radius_bounds_shrink_with_p() {
+        let g = geo(2, 0.5, 0.3, 0.3, 1.0);
+        // DH/DL are strictly monotone for r < 1.
+        for m in [SeriesMethod::DH, SeriesMethod::DL] {
+            let mut prev = f64::INFINITY;
+            for p in 1..=8 {
+                let e = OdpBounds.unit_error(m, &g, p);
+                assert!(e < prev, "{m:?} p={p}: {e} !< {prev}");
+                prev = e;
+            }
+        }
+        // H2L's C(D+p−1, D) factor can grow before the r^p term wins:
+        // require only eventual decay by a large factor.
+        let first = OdpBounds.unit_error(SeriesMethod::H2L, &g, 1);
+        let last = OdpBounds.unit_error(SeriesMethod::H2L, &g, 8);
+        assert!(last < first * 1e-2, "H2L must eventually decay: {first} → {last}");
+    }
+
+    /// The bound must actually bound: measure the true truncation error
+    /// of a far-field evaluation against Lemma 4 over random geometry.
+    #[test]
+    fn lemma4_bounds_true_farfield_error() {
+        let mut rng = Pcg32::new(41);
+        for trial in 0..20 {
+            let d = 1 + rng.below(3);
+            let h = rng.uniform_in(0.3, 1.5);
+            let k = GaussianKernel::new(h);
+            let scale = k.series_scale();
+            let spread = rng.uniform_in(0.02, 0.3);
+            let n = 10;
+            let pts = Matrix::from_rows(
+                &(0..n)
+                    .map(|_| (0..d).map(|_| spread * rng.uniform_in(-1.0, 1.0)).collect())
+                    .collect::<Vec<_>>(),
+            );
+            let w = vec![1.0; n];
+            let rows: Vec<usize> = (0..n).collect();
+            let center = pts.col_mean();
+            let r_ref = rows
+                .iter()
+                .map(|&r| linf_dist(pts.row(r), &center) / h)
+                .fold(0.0f64, f64::max);
+            // query somewhere at distance ≥ gap
+            let gap = rng.uniform_in(0.2, 1.0);
+            let mut xq = vec![0.0; d];
+            xq[0] = center[0] + spread + gap;
+            let dmin2 = {
+                // min distance from xq to the point cloud bbox
+                let lo = pts.col_min();
+                let hi = pts.col_max();
+                let mut s = 0.0;
+                for i in 0..d {
+                    let del = if xq[i] < lo[i] {
+                        lo[i] - xq[i]
+                    } else if xq[i] > hi[i] {
+                        xq[i] - hi[i]
+                    } else {
+                        0.0
+                    };
+                    s += del * del;
+                }
+                s
+            };
+            let g = geo(d, dmin2, r_ref, 0.0, h);
+
+            let exact: f64 = rows
+                .iter()
+                .map(|&r| k.eval_sq(crate::geometry::sqdist(pts.row(r), &xq)))
+                .sum();
+            for p in 1..=6 {
+                let set = MultiIndexSet::new(Layout::Graded, d, p);
+                let mut coeffs = vec![0.0; set.len()];
+                let mut mono = vec![0.0; set.len()];
+                let mut off = vec![0.0; d];
+                accumulate_farfield(&set, &pts, &rows, &w, &center, scale, &mut coeffs, &mut mono, &mut off);
+                let mut table = HermiteTable::new(d, p);
+                let est =
+                    eval_farfield(&set, &coeffs, &center, scale, &xq, &mut table, &mut off);
+                let true_err = (est - exact).abs();
+                let bound = (n as f64) * OdpBounds::e_dh(&g, p);
+                assert!(
+                    true_err <= bound * (1.0 + 1e-9) + 1e-12,
+                    "trial={trial} d={d} p={p}: err={true_err} > bound={bound}"
+                );
+            }
+        }
+    }
+
+    /// Lemma 5 bounds the true direct-local truncation error.
+    #[test]
+    fn lemma5_bounds_true_local_error() {
+        let mut rng = Pcg32::new(42);
+        for trial in 0..20 {
+            let d = 1 + rng.below(3);
+            let h = rng.uniform_in(0.4, 1.2);
+            let k = GaussianKernel::new(h);
+            let scale = k.series_scale();
+            let n = 8;
+            // references far away
+            let pts = Matrix::from_rows(
+                &(0..n)
+                    .map(|_| (0..d).map(|_| 1.5 + 0.2 * rng.uniform_in(-1.0, 1.0)).collect())
+                    .collect::<Vec<_>>(),
+            );
+            let w = vec![1.0; n];
+            let rows: Vec<usize> = (0..n).collect();
+            // queries near origin
+            let q_c = vec![0.0; d];
+            let q_spread = rng.uniform_in(0.02, 0.2);
+            let mut xq = vec![0.0; d];
+            xq[0] = q_spread; // within the query box
+            let r_query = q_spread / h;
+            let dmin2 = {
+                let lo = pts.col_min();
+                // min dist between query box [−s,s]^D and the ref cloud bbox
+                let mut s = 0.0;
+                for i in 0..d {
+                    let del = (lo[i] - q_spread).max(0.0);
+                    s += del * del;
+                }
+                s
+            };
+            let g = geo(d, dmin2, 0.0, r_query, h);
+            let exact: f64 = rows
+                .iter()
+                .map(|&r| k.eval_sq(crate::geometry::sqdist(pts.row(r), &xq)))
+                .sum();
+            for p in 1..=6 {
+                let set = MultiIndexSet::new(Layout::Graded, d, p);
+                let mut coeffs = vec![0.0; set.len()];
+                let mut table = HermiteTable::new(d, p);
+                let mut off = vec![0.0; d];
+                accumulate_local(&set, &pts, &rows, &w, &q_c, scale, &mut coeffs, &mut table, &mut off);
+                let mut mono = vec![0.0; set.len()];
+                let est = eval_local(&set, &coeffs, &q_c, scale, &xq, &mut mono, &mut off);
+                let true_err = (est - exact).abs();
+                let bound = (n as f64) * OdpBounds::e_dl(&g, p);
+                assert!(
+                    true_err <= bound * (1.0 + 1e-9) + 1e-12,
+                    "trial={trial} d={d} p={p}: err={true_err} > bound={bound}"
+                );
+            }
+        }
+    }
+
+    /// Lemma 6 bounds the combined H2L truncation error.
+    #[test]
+    fn lemma6_bounds_true_h2l_error() {
+        let mut rng = Pcg32::new(43);
+        for trial in 0..15 {
+            let d = 1 + rng.below(2);
+            let h = rng.uniform_in(0.5, 1.2);
+            let k = GaussianKernel::new(h);
+            let scale = k.series_scale();
+            let n = 8;
+            let r_spread = rng.uniform_in(0.02, 0.15);
+            let q_spread = rng.uniform_in(0.02, 0.15);
+            let pts = Matrix::from_rows(
+                &(0..n)
+                    .map(|_| {
+                        (0..d).map(|_| 2.0 + r_spread * rng.uniform_in(-1.0, 1.0)).collect()
+                    })
+                    .collect::<Vec<_>>(),
+            );
+            let w = vec![1.0; n];
+            let rows: Vec<usize> = (0..n).collect();
+            let r_c = pts.col_mean();
+            let q_c = vec![0.0; d];
+            let mut xq = vec![0.0; d];
+            xq[0] = -q_spread;
+            let r_ref = rows
+                .iter()
+                .map(|&r| linf_dist(pts.row(r), &r_c) / h)
+                .fold(0.0f64, f64::max);
+            let dmin2 = {
+                let lo = pts.col_min();
+                let mut s = 0.0;
+                for i in 0..d {
+                    let del = (lo[i] - q_spread).max(0.0);
+                    s += del * del;
+                }
+                s
+            };
+            let g = geo(d, dmin2, r_ref, q_spread / h, h);
+            let exact: f64 = rows
+                .iter()
+                .map(|&r| k.eval_sq(crate::geometry::sqdist(pts.row(r), &xq)))
+                .sum();
+            for p in 1..=6 {
+                let set = MultiIndexSet::new(Layout::Graded, d, p);
+                let mut far = vec![0.0; set.len()];
+                let mut mono = vec![0.0; set.len()];
+                let mut off = vec![0.0; d];
+                accumulate_farfield(&set, &pts, &rows, &w, &r_c, scale, &mut far, &mut mono, &mut off);
+                let mut table = HermiteTable::new(d, 2 * p);
+                let mut local = vec![0.0; set.len()];
+                h2l(&set, &far, &r_c, &q_c, scale, &mut local, &mut table, &mut off);
+                let est = eval_local(&set, &local, &q_c, scale, &xq, &mut mono, &mut off);
+                let true_err = (est - exact).abs();
+                let bound = (n as f64) * OdpBounds::e_h2l(&g, p);
+                assert!(
+                    true_err <= bound * (1.0 + 1e-9) + 1e-12,
+                    "trial={trial} d={d} p={p}: err={true_err} > bound={bound}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Classical O(pᴰ) truncation bounds (Greengard & Strain 1991, as
+//! corrected by Baxter & Roussos 2002 and extended to the dual-tree
+//! setting by Lee et al. 2006).
+//!
+//! Derivation sketch (documented because the exact constants matter for
+//! the validity tests): per dimension the expansion is a univariate
+//! Hermite series Σₙ (ρⁿ/n!)hₙ(u) with |ρ| ≤ r/√2 where r is the
+//! paper-style L∞ node radius over h. Cramér's inequality
+//! |hₙ(u)| ≤ K·2^(n/2)·√(n!)·e^(−u²/2) (K = 1.086435) gives per-term
+//! majorant K·(r)ⁿ/√(n!)·e^(−u²/2); since rⁿ/√n! shrinks by at least a
+//! factor r each step, head and tail are bounded by geometric series
+//! **provided r < 1** — the node-size restriction:
+//!
+//!   per-dim head  s = K/(1−r),
+//!   per-dim tail  t = K·rᵖ/(√(p!)(1−r)),
+//!
+//! and the D-dim product-series truncation error is
+//! (s+t)ᴰ − sᴰ = Σ_{k<D} C(D,k)·sᵏ·t^{D−k}, times the separable decay
+//! Π e^(−u_d²/2) = e^(−δ²/4h²).
+//!
+//! For H2L the double series needs the √2-inflated radii (cf. the √2
+//! factors in the paper's Lemma 6), so validity requires √2·r < 1 in
+//! both nodes.
+
+use crate::multiindex::factorial;
+
+use super::{NodeGeometry, SeriesMethod, TruncationBounds};
+
+/// Cramér's constant K ≤ π^(−1/4)·√2 ≈ 1.086435.
+pub const CRAMER_K: f64 = 1.086435;
+
+/// Bound family for the O(pᴰ) grid truncation.
+#[derive(Copy, Clone, Debug, Default)]
+pub struct OpdBounds;
+
+/// (s+t)^D − s^D with s, t per-dim head/tail majorants; INFINITY when
+/// the geometric-series condition r < 1 fails.
+fn product_series_error(r: f64, dim: usize, p: usize) -> f64 {
+    if r >= 1.0 {
+        return f64::INFINITY;
+    }
+    let s = CRAMER_K / (1.0 - r);
+    let t = CRAMER_K * r.powi(p as i32) / (factorial(p).sqrt() * (1.0 - r));
+    (s + t).powi(dim as i32) - s.powi(dim as i32)
+}
+
+impl OpdBounds {
+    /// Truncated-Hermite evaluation error per unit weight; requires
+    /// r_R < 1.
+    pub fn e_dh(geo: &NodeGeometry, p: usize) -> f64 {
+        geo.decay() * product_series_error(geo.r_ref, geo.dim, p)
+    }
+
+    /// Direct-local accumulation error per unit weight; requires r_Q < 1.
+    pub fn e_dl(geo: &NodeGeometry, p: usize) -> f64 {
+        geo.decay() * product_series_error(geo.r_query, geo.dim, p)
+    }
+
+    /// H2L error per unit weight; requires √2·r_R < 1 and √2·r_Q < 1.
+    /// Bound: truncating both the α (reference) and β (query) series of
+    /// the double expansion; per dim the double series majorant
+    /// factorizes into (s_R+t_R)(s_Q+t_Q) with √2-inflated radii, and
+    /// the D-dim truncation error is the product-minus-head difference.
+    pub fn e_h2l(geo: &NodeGeometry, p: usize) -> f64 {
+        geo.decay() * Self::e_h2l_nodecay(geo, p)
+    }
+
+    fn e_h2l_nodecay(geo: &NodeGeometry, p: usize) -> f64 {
+        let sqrt2 = std::f64::consts::SQRT_2;
+        let rr = sqrt2 * geo.r_ref;
+        let rq = sqrt2 * geo.r_query;
+        if rr >= 1.0 || rq >= 1.0 {
+            return f64::INFINITY;
+        }
+        let s_r = CRAMER_K / (1.0 - rr);
+        let t_r = CRAMER_K * rr.powi(p as i32) / (factorial(p).sqrt() * (1.0 - rr));
+        let s_q = 1.0 / (1.0 - rq);
+        let t_q = rq.powi(p as i32) / (factorial(p).sqrt() * (1.0 - rq));
+        let full = ((s_r + t_r) * (s_q + t_q)).powi(geo.dim as i32);
+        let head = (s_r * s_q).powi(geo.dim as i32);
+        full - head
+    }
+}
+
+impl TruncationBounds for OpdBounds {
+    fn unit_error_nodecay(&self, method: SeriesMethod, geo: &NodeGeometry, p: usize) -> f64 {
+        match method {
+            SeriesMethod::DH => product_series_error(geo.r_ref, geo.dim, p),
+            SeriesMethod::DL => product_series_error(geo.r_query, geo.dim, p),
+            SeriesMethod::H2L => Self::e_h2l_nodecay(geo, p),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::{linf_dist, Matrix};
+    use crate::hermite::{accumulate_farfield, eval_farfield, HermiteTable};
+    use crate::kernel::GaussianKernel;
+    use crate::multiindex::{Layout, MultiIndexSet};
+    use crate::util::Pcg32;
+
+    fn geo(dim: usize, min_sqdist: f64, r_ref: f64, r_query: f64, h: f64) -> NodeGeometry {
+        NodeGeometry { dim, min_sqdist, r_ref, r_query, h }
+    }
+
+    #[test]
+    fn node_size_restriction_yields_infinity() {
+        // THE defining weakness vs the O(Dᵖ) bounds: r ≥ 1 → no valid
+        // bound at any order.
+        let g = geo(3, 0.0, 1.2, 0.5, 1.0);
+        assert!(OpdBounds::e_dh(&g, 8).is_infinite());
+        let g2 = geo(3, 0.0, 0.5, 1.5, 1.0);
+        assert!(OpdBounds::e_dl(&g2, 8).is_infinite());
+        // H2L is stricter: √2·r ≥ 1 already kills it.
+        let g3 = geo(3, 0.0, 0.8, 0.2, 1.0);
+        assert!(OpdBounds::e_h2l(&g3, 8).is_infinite());
+        assert!(OpdBounds::e_dh(&g3, 8).is_finite());
+    }
+
+    #[test]
+    fn shrinks_with_order_when_valid() {
+        let g = geo(2, 0.1, 0.4, 0.3, 1.0);
+        for m in [SeriesMethod::DH, SeriesMethod::DL, SeriesMethod::H2L] {
+            let mut prev = f64::INFINITY;
+            for p in 1..=10 {
+                let e = OpdBounds.unit_error(m, &g, p);
+                assert!(e.is_finite());
+                assert!(e < prev, "{m:?} p={p}");
+                prev = e;
+            }
+        }
+    }
+
+    #[test]
+    fn tighter_for_smaller_nodes() {
+        let small = geo(2, 0.1, 0.1, 0.1, 1.0);
+        let big = geo(2, 0.1, 0.6, 0.6, 1.0);
+        for m in [SeriesMethod::DH, SeriesMethod::DL, SeriesMethod::H2L] {
+            assert!(OpdBounds.unit_error(m, &small, 4) < OpdBounds.unit_error(m, &big, 4));
+        }
+    }
+
+    /// Validity: the bound dominates the true truncation error of a
+    /// grid-truncated far-field evaluation (the series it was derived
+    /// for), over random small-radius geometry.
+    #[test]
+    fn bounds_true_grid_farfield_error() {
+        let mut rng = Pcg32::new(51);
+        for trial in 0..20 {
+            let d = 1 + rng.below(2);
+            let h = rng.uniform_in(0.5, 1.5);
+            let k = GaussianKernel::new(h);
+            let scale = k.series_scale();
+            // keep the node well inside the r < 1 regime
+            let spread = rng.uniform_in(0.05, 0.3) * h;
+            let n = 10;
+            let pts = Matrix::from_rows(
+                &(0..n)
+                    .map(|_| (0..d).map(|_| spread * rng.uniform_in(-1.0, 1.0)).collect())
+                    .collect::<Vec<_>>(),
+            );
+            let w = vec![1.0; n];
+            let rows: Vec<usize> = (0..n).collect();
+            let center = pts.col_mean();
+            let r_ref = rows
+                .iter()
+                .map(|&r| linf_dist(pts.row(r), &center) / h)
+                .fold(0.0f64, f64::max);
+            assert!(r_ref < 1.0);
+            let mut xq = vec![0.0; d];
+            xq[0] = center[0] + spread + rng.uniform_in(0.1, 0.8);
+            let dmin2 = {
+                let lo = pts.col_min();
+                let hi = pts.col_max();
+                let mut s = 0.0;
+                for i in 0..d {
+                    let del =
+                        if xq[i] < lo[i] { lo[i] - xq[i] } else { (xq[i] - hi[i]).max(0.0) };
+                    s += del * del;
+                }
+                s
+            };
+            let g = geo(d, dmin2, r_ref, 0.0, h);
+            let exact: f64 = rows
+                .iter()
+                .map(|&r| k.eval_sq(crate::geometry::sqdist(pts.row(r), &xq)))
+                .sum();
+            for p in 1..=6 {
+                let set = MultiIndexSet::new(Layout::Grid, d, p);
+                let mut coeffs = vec![0.0; set.len()];
+                let mut mono = vec![0.0; set.len()];
+                let mut off = vec![0.0; d];
+                accumulate_farfield(&set, &pts, &rows, &w, &center, scale, &mut coeffs, &mut mono, &mut off);
+                let mut table = HermiteTable::new(d, p);
+                let est = eval_farfield(&set, &coeffs, &center, scale, &xq, &mut table, &mut off);
+                let true_err = (est - exact).abs();
+                let bound = (n as f64) * OpdBounds::e_dh(&g, p);
+                assert!(
+                    true_err <= bound * (1.0 + 1e-9) + 1e-12,
+                    "trial={trial} d={d} p={p}: err={true_err} > bound={bound}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn odp_wins_for_large_nodes_opd_can_win_small() {
+        use crate::bounds::odp::OdpBounds;
+        // Large node: O(Dᵖ) finite, O(pᴰ) infinite.
+        let big = geo(3, 1.0, 1.5, 1.5, 0.5);
+        assert!(OdpBounds::e_dh(&big, 4).is_finite());
+        assert!(OpdBounds::e_dh(&big, 4).is_infinite());
+    }
+}

@@ -1,0 +1,228 @@
+//! Command-line interface.
+//!
+//! ```text
+//! fastgauss table    [--dataset astro2d --n 5000 ...]   paper-style table
+//! fastgauss kde      [--dataset X --h 0|H --out f.csv]  density + LSCV h*
+//! fastgauss datagen  [--dataset X --out f.csv]          write a dataset
+//! fastgauss selftest [--n 500]                          verify all engines
+//! fastgauss runtime  [--n 2000]                         PJRT artifact check
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::algo::{max_relative_error, naive::Naive, GaussSum, GaussSumProblem};
+use crate::config::RunConfig;
+use crate::coordinator::{run_sweep, AlgoSpec, SweepConfig};
+use crate::data;
+use crate::kde::bandwidth::{log_grid, silverman};
+use crate::kde::lscv::select_bandwidth;
+
+const USAGE: &str = "usage: fastgauss <table|kde|datagen|selftest|runtime> [--option value ...]
+options: --dataset NAME --n N --seed S --epsilon E --algos a,b,c
+         --workers W --leaf-size L --multipliers m1,m2 --h H --out FILE
+         --config FILE";
+
+/// Entry point used by `main.rs`. Returns the process exit code.
+pub fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let mut cfg = RunConfig::default();
+    cfg.apply_args(&args[1..])?;
+    match cmd.as_str() {
+        "table" => cmd_table(&cfg),
+        "kde" => cmd_kde(&cfg),
+        "datagen" => cmd_datagen(&cfg),
+        "selftest" => cmd_selftest(&cfg),
+        "runtime" => cmd_runtime(&cfg),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn load_dataset(cfg: &RunConfig) -> Result<data::Dataset> {
+    if cfg.dataset.ends_with(".csv") {
+        let m = data::csv::load(std::path::Path::new(&cfg.dataset))?;
+        Ok(data::Dataset::new(cfg.dataset.clone(), data::scale::to_unit_cube(&m)))
+    } else {
+        data::by_name(&cfg.dataset, cfg.n, cfg.seed)
+            .ok_or_else(|| anyhow!("unknown dataset {:?} (see `data::PAPER_SUITE`)", cfg.dataset))
+    }
+}
+
+fn pick_h_star(cfg: &RunConfig, ds: &data::Dataset) -> Result<f64> {
+    if cfg.bandwidth > 0.0 {
+        return Ok(cfg.bandwidth);
+    }
+    // LSCV around the Silverman pilot with DITO (fast, guaranteed)
+    let pilot = silverman(&ds.points);
+    let grid = log_grid(pilot, 0.1, 10.0, 9);
+    let engine = crate::algo::dito::Dito::default();
+    let (h, _) = select_bandwidth(&ds.points, &grid, cfg.epsilon, &engine)
+        .map_err(|e| anyhow!("LSCV failed: {e}"))?;
+    Ok(h)
+}
+
+fn cmd_table(cfg: &RunConfig) -> Result<()> {
+    let ds = load_dataset(cfg)?;
+    let h_star = pick_h_star(cfg, &ds)?;
+    let algorithms: Vec<AlgoSpec> = cfg
+        .algorithms
+        .iter()
+        .map(|s| AlgoSpec::parse(s).ok_or_else(|| anyhow!("unknown algorithm {s:?}")))
+        .collect::<Result<_>>()?;
+    let sweep = SweepConfig {
+        dataset: ds,
+        epsilon: cfg.epsilon,
+        h_star,
+        multipliers: cfg.multipliers.clone(),
+        algorithms,
+        workers: cfg.workers,
+        leaf_size: cfg.leaf_size,
+    };
+    let res = run_sweep(&sweep);
+    print!("{}", crate::coordinator::report::render_table(&res));
+    if let Some(out) = &cfg.out {
+        std::fs::write(out, crate::coordinator::report::render_csv(&res))?;
+        eprintln!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_kde(cfg: &RunConfig) -> Result<()> {
+    let ds = load_dataset(cfg)?;
+    let engine = crate::algo::dito::Dito::default();
+    let h = pick_h_star(cfg, &ds)?;
+    let dens = crate::kde::density_at_points(&ds.points, h, cfg.epsilon, &engine)
+        .map_err(|e| anyhow!("{e}"))?;
+    println!(
+        "dataset={} n={} D={} h={h:.6} mean_density={:.6e}",
+        ds.name,
+        ds.len(),
+        ds.dim(),
+        crate::util::stats::mean(&dens)
+    );
+    if let Some(out) = &cfg.out {
+        let mut rows = Vec::with_capacity(dens.len());
+        for (i, d) in dens.iter().enumerate() {
+            let mut row = ds.points.row(i).to_vec();
+            row.push(*d);
+            rows.push(row);
+        }
+        data::csv::save(std::path::Path::new(out), &crate::geometry::Matrix::from_rows(&rows))?;
+        eprintln!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_datagen(cfg: &RunConfig) -> Result<()> {
+    let ds = load_dataset(cfg)?;
+    let out = cfg.out.clone().unwrap_or_else(|| format!("{}.csv", ds.name));
+    data::csv::save(std::path::Path::new(&out), &ds.points)?;
+    println!("wrote {out}: {} × {}", ds.len(), ds.dim());
+    Ok(())
+}
+
+fn cmd_selftest(cfg: &RunConfig) -> Result<()> {
+    use crate::algo::{dfd::Dfd, dfdo::Dfdo, dfto::Dfto, dito::Dito};
+    let ds = load_dataset(cfg)?;
+    let pilot = silverman(&ds.points);
+    let mut ok = true;
+    for mult in [1e-2, 1.0, 1e2] {
+        let h = pilot * mult;
+        let p = GaussSumProblem::kde(&ds.points, h, cfg.epsilon);
+        let exact = Naive::new().run(&p).unwrap().sums;
+        let engines: Vec<Box<dyn GaussSum>> = vec![
+            Box::new(Dfd::new()),
+            Box::new(Dfdo::new()),
+            Box::new(Dfto::new()),
+            Box::new(Dito::default()),
+        ];
+        for e in engines {
+            let res = e.run(&p).map_err(|err| anyhow!("{}: {err}", e.name()))?;
+            let rel = max_relative_error(&res.sums, &exact);
+            let pass = rel <= cfg.epsilon * (1.0 + 1e-9);
+            ok &= pass;
+            println!(
+                "{:<6} h={h:<12.5} rel_err={rel:.2e}  {}",
+                e.name(),
+                if pass { "OK" } else { "FAIL" }
+            );
+        }
+    }
+    if !ok {
+        bail!("selftest FAILED");
+    }
+    println!("selftest OK");
+    Ok(())
+}
+
+fn cmd_runtime(cfg: &RunConfig) -> Result<()> {
+    let ds = load_dataset(cfg)?;
+    let tiled = crate::runtime::TiledNaive::load(ds.dim())?;
+    let h = silverman(&ds.points);
+    let p = GaussSumProblem::kde(&ds.points, h, cfg.epsilon);
+    let (pjrt, pjrt_secs) = crate::util::timer::time_it(|| tiled.run(&p).unwrap());
+    let (rust, rust_secs) = crate::util::timer::time_it(|| Naive::new().run(&p).unwrap());
+    let rel = max_relative_error(&pjrt.sums, &rust.sums);
+    println!(
+        "PJRT artifact D={}: rel_err vs rust naive = {rel:.2e}  (pjrt {:.3}s, rust {:.3}s)",
+        ds.dim(),
+        pjrt_secs,
+        rust_secs
+    );
+    if rel > 1e-9 {
+        bail!("runtime mismatch");
+    }
+    println!("runtime OK");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(&["bogus".to_string()]).is_err());
+    }
+
+    #[test]
+    fn no_args_prints_usage() {
+        assert!(run(&[]).is_ok());
+    }
+
+    #[test]
+    fn selftest_small() {
+        let args: Vec<String> = ["selftest", "--n", "200", "--dataset", "astro2d"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        run(&args).unwrap();
+    }
+
+    #[test]
+    fn datagen_writes_csv() {
+        let out = std::env::temp_dir().join("fg_cli_datagen.csv");
+        let args: Vec<String> = [
+            "datagen",
+            "--n",
+            "50",
+            "--dataset",
+            "bio5",
+            "--out",
+            out.to_str().unwrap(),
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        run(&args).unwrap();
+        let m = data::csv::load(&out).unwrap();
+        assert_eq!(m.rows(), 50);
+        assert_eq!(m.cols(), 5);
+    }
+}

@@ -1,0 +1,188 @@
+//! Run configuration: defaults → optional config file (`key = value`
+//! lines) → CLI `--key value` overrides, in that precedence order.
+//! (Hand-rolled because the offline vendor set has no clap/serde.)
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Everything the CLI subcommands need.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    /// Dataset name from `data::by_name` (or a CSV path for `kde`).
+    pub dataset: String,
+    /// Points to generate.
+    pub n: usize,
+    pub seed: u64,
+    pub epsilon: f64,
+    /// Algorithms for table/sweep commands.
+    pub algorithms: Vec<String>,
+    pub workers: usize,
+    pub leaf_size: usize,
+    /// Bandwidth multipliers for the table command.
+    pub multipliers: Vec<f64>,
+    /// Explicit bandwidth (`0` = auto/Silverman-LSCV).
+    pub bandwidth: f64,
+    /// Output path for commands that write files.
+    pub out: Option<String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "astro2d".into(),
+            n: 5000,
+            seed: 42,
+            epsilon: 0.01,
+            algorithms: vec![
+                "naive".into(),
+                "fgt".into(),
+                "ifgt".into(),
+                "dfd".into(),
+                "dfdo".into(),
+                "dfto".into(),
+                "dito".into(),
+            ],
+            workers: 1,
+            leaf_size: 32,
+            multipliers: vec![1e-3, 1e-2, 1e-1, 1.0, 1e1, 1e2, 1e3],
+            bandwidth: 0.0,
+            out: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply one key/value pair.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "dataset" => self.dataset = value.to_string(),
+            "n" => self.n = value.parse().context("n")?,
+            "seed" => self.seed = value.parse().context("seed")?,
+            "epsilon" | "eps" => self.epsilon = value.parse().context("epsilon")?,
+            "algorithms" | "algos" => {
+                self.algorithms = value.split(',').map(|s| s.trim().to_string()).collect()
+            }
+            "workers" => self.workers = value.parse().context("workers")?,
+            "leaf-size" | "leaf_size" => self.leaf_size = value.parse().context("leaf size")?,
+            "multipliers" => {
+                self.multipliers = value
+                    .split(',')
+                    .map(|s| s.trim().parse::<f64>().context("multiplier"))
+                    .collect::<Result<_>>()?
+            }
+            "bandwidth" | "h" => self.bandwidth = value.parse().context("bandwidth")?,
+            "out" => self.out = Some(value.to_string()),
+            other => bail!("unknown option --{other}"),
+        }
+        self.validate()
+    }
+
+    /// Load `key = value` lines (with `#` comments) from a file.
+    pub fn load_file(&mut self, path: &Path) -> Result<()> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("{}:{}: expected key = value", path.display(), lineno + 1))?;
+            self.set(k.trim(), v.trim())
+                .with_context(|| format!("{}:{}", path.display(), lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    /// Consume `--key value` pairs (after an optional `--config file`).
+    pub fn apply_args(&mut self, args: &[String]) -> Result<()> {
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            let key = arg
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --option, got {arg:?}"))?;
+            let value = args
+                .get(i + 1)
+                .ok_or_else(|| anyhow!("--{key} needs a value"))?;
+            if key == "config" {
+                self.load_file(Path::new(value))?;
+            } else {
+                self.set(key, value)?;
+            }
+            i += 2;
+        }
+        Ok(())
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.n == 0 {
+            bail!("n must be positive");
+        }
+        if !(self.epsilon > 0.0) {
+            bail!("epsilon must be positive");
+        }
+        if self.multipliers.is_empty() {
+            bail!("multipliers must be non-empty");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_protocol() {
+        let c = RunConfig::default();
+        assert_eq!(c.epsilon, 0.01);
+        assert_eq!(c.multipliers.len(), 7);
+        assert_eq!(c.algorithms.len(), 7);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = RunConfig::default();
+        let args: Vec<String> = ["--n", "100", "--epsilon", "0.05", "--algos", "dito,dfd"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.n, 100);
+        assert_eq!(c.epsilon, 0.05);
+        assert_eq!(c.algorithms, vec!["dito", "dfd"]);
+    }
+
+    #[test]
+    fn config_file_then_cli_precedence() {
+        let p = std::env::temp_dir().join("fg_cfg_test.conf");
+        std::fs::write(&p, "# comment\nn = 777\nseed = 9\n").unwrap();
+        let mut c = RunConfig::default();
+        let args: Vec<String> =
+            ["--config", p.to_str().unwrap(), "--seed", "10"].iter().map(|s| s.to_string()).collect();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.n, 777);
+        assert_eq!(c.seed, 10); // CLI wins over file
+    }
+
+    #[test]
+    fn rejects_unknown_and_invalid() {
+        let mut c = RunConfig::default();
+        assert!(c.set("bogus", "1").is_err());
+        assert!(c.set("n", "0").is_err());
+        assert!(c.set("epsilon", "-1").is_err());
+        assert!(c.set("multipliers", "").is_err());
+        let args = vec!["--n".to_string()];
+        assert!(c.apply_args(&args).is_err());
+    }
+
+    #[test]
+    fn multiplier_parsing() {
+        let mut c = RunConfig::default();
+        c.set("multipliers", "0.1, 1, 10").unwrap();
+        assert_eq!(c.multipliers, vec![0.1, 1.0, 10.0]);
+    }
+}

@@ -1,0 +1,172 @@
+//! Sweep job/result types shared by the coordinator, the CLI and the
+//! bench harness.
+
+use crate::algo::RunStats;
+use crate::data::Dataset;
+
+/// Which algorithm a sweep row runs.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum AlgoSpec {
+    Naive,
+    Fgt,
+    Ifgt,
+    Dfd,
+    Dfdo,
+    Dfto,
+    Dito,
+}
+
+impl AlgoSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoSpec::Naive => "Naive",
+            AlgoSpec::Fgt => "FGT",
+            AlgoSpec::Ifgt => "IFGT",
+            AlgoSpec::Dfd => "DFD",
+            AlgoSpec::Dfdo => "DFDO",
+            AlgoSpec::Dfto => "DFTO",
+            AlgoSpec::Dito => "DITO",
+        }
+    }
+
+    /// The paper's six-row table order.
+    pub fn paper_order() -> Vec<AlgoSpec> {
+        vec![
+            AlgoSpec::Naive,
+            AlgoSpec::Fgt,
+            AlgoSpec::Ifgt,
+            AlgoSpec::Dfd,
+            AlgoSpec::Dfdo,
+            AlgoSpec::Dfto,
+            AlgoSpec::Dito,
+        ]
+    }
+
+    pub fn parse(s: &str) -> Option<AlgoSpec> {
+        match s.to_ascii_lowercase().as_str() {
+            "naive" => Some(AlgoSpec::Naive),
+            "fgt" => Some(AlgoSpec::Fgt),
+            "ifgt" => Some(AlgoSpec::Ifgt),
+            "dfd" => Some(AlgoSpec::Dfd),
+            "dfdo" => Some(AlgoSpec::Dfdo),
+            "dfto" => Some(AlgoSpec::Dfto),
+            "dito" => Some(AlgoSpec::Dito),
+            _ => None,
+        }
+    }
+}
+
+/// Configuration for one dataset's table sweep.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub dataset: Dataset,
+    pub epsilon: f64,
+    /// The optimal bandwidth the multipliers scale.
+    pub h_star: f64,
+    /// Bandwidth multipliers (paper: 10⁻³…10³).
+    pub multipliers: Vec<f64>,
+    pub algorithms: Vec<AlgoSpec>,
+    pub workers: usize,
+    pub leaf_size: usize,
+}
+
+/// One table cell's outcome, mirroring the paper's entries.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub enum CellOutcome {
+    /// CPU seconds (verified within ε).
+    Time(f64),
+    /// The paper's `X`.
+    RamExhausted,
+    /// The paper's `∞`.
+    ToleranceUnreachable,
+}
+
+/// One (algorithm × bandwidth) result.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub algo_index: usize,
+    pub bandwidth_index: usize,
+    pub outcome: CellOutcome,
+    /// Verified max relative error (when a result was produced).
+    pub rel_err: Option<f64>,
+    pub stats: Option<RunStats>,
+}
+
+/// Full sweep output for one dataset.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub dataset: String,
+    pub dim: usize,
+    pub n: usize,
+    pub h_star: f64,
+    pub epsilon: f64,
+    pub multipliers: Vec<f64>,
+    pub algorithms: Vec<AlgoSpec>,
+    /// The Naive row (exhaustive truth timings, one per bandwidth).
+    pub naive_secs: Vec<f64>,
+    pub cells: Vec<CellResult>,
+}
+
+impl SweepResult {
+    /// Cell lookup.
+    pub fn cell(&self, algo: usize, bw: usize) -> &CellResult {
+        &self.cells[algo * self.multipliers.len() + bw]
+    }
+
+    /// Per-algorithm Σ column: total seconds, or `None` when any cell
+    /// failed (paper propagates X/∞ into Σ).
+    pub fn totals(&self) -> Vec<Option<f64>> {
+        self.algorithms
+            .iter()
+            .enumerate()
+            .map(|(a, _)| {
+                let mut sum = 0.0;
+                for b in 0..self.multipliers.len() {
+                    match self.cell(a, b).outcome {
+                        CellOutcome::Time(t) => sum += t,
+                        _ => return None,
+                    }
+                }
+                Some(sum)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_spec_parse_roundtrip() {
+        for spec in AlgoSpec::paper_order() {
+            assert_eq!(AlgoSpec::parse(spec.name()), Some(spec));
+        }
+        assert_eq!(AlgoSpec::parse("bogus"), None);
+        assert_eq!(AlgoSpec::parse("dito"), Some(AlgoSpec::Dito));
+    }
+
+    #[test]
+    fn totals_propagate_failures() {
+        let res = SweepResult {
+            dataset: "t".into(),
+            dim: 2,
+            n: 10,
+            h_star: 0.1,
+            epsilon: 0.01,
+            multipliers: vec![1.0, 10.0],
+            algorithms: vec![AlgoSpec::Dito, AlgoSpec::Fgt],
+            naive_secs: vec![1.0, 1.0],
+            cells: vec![
+                CellResult { algo_index: 0, bandwidth_index: 0, outcome: CellOutcome::Time(1.5), rel_err: Some(0.001), stats: None },
+                CellResult { algo_index: 0, bandwidth_index: 1, outcome: CellOutcome::Time(0.5), rel_err: Some(0.002), stats: None },
+                CellResult { algo_index: 1, bandwidth_index: 0, outcome: CellOutcome::RamExhausted, rel_err: None, stats: None },
+                CellResult { algo_index: 1, bandwidth_index: 1, outcome: CellOutcome::Time(0.1), rel_err: Some(0.0), stats: None },
+            ],
+        };
+        let totals = res.totals();
+        assert_eq!(totals[0], Some(2.0));
+        assert_eq!(totals[1], None);
+        assert_eq!(res.cell(1, 1).outcome, CellOutcome::Time(0.1));
+    }
+}

@@ -1,0 +1,283 @@
+//! The sweep coordinator — the L3 "leader" that reproduces the paper's
+//! experiment protocol: for one dataset, run every algorithm at every
+//! bandwidth multiplier around h*, verify each cell against exhaustive
+//! truth, and render the paper-style table.
+//!
+//! Work is scheduled as (algorithm × bandwidth) cells on a small worker
+//! pool (std threads + channels; the protocol is embarrassingly
+//! parallel across cells once the shared exact sums are cached).
+//! FGT/IFGT cells embed the paper's parameter-tuning protocols: τ is
+//! halved until FGT meets ε; IFGT doubles K until verified or hopeless.
+
+pub mod job;
+pub mod report;
+
+use std::sync::mpsc;
+
+use crate::algo::{
+    dfd::Dfd, dfdo::Dfdo, dfto::Dfto, dito::Dito, fgt::Fgt,
+    ifgt::ifgt_tuning_loop, max_relative_error, naive::Naive, AlgoError, GaussSum,
+    GaussSumProblem,
+};
+use crate::util::timer::time_it;
+
+pub use job::{AlgoSpec, CellOutcome, CellResult, SweepConfig, SweepResult};
+
+/// Run the full table protocol for one dataset.
+pub fn run_sweep(cfg: &SweepConfig) -> SweepResult {
+    let data = &cfg.dataset.points;
+    let bandwidths: Vec<f64> = cfg.multipliers.iter().map(|m| m * cfg.h_star).collect();
+
+    // ---- exhaustive truth per bandwidth (timed → the Naive row) ----
+    let mut exact: Vec<Vec<f64>> = Vec::with_capacity(bandwidths.len());
+    let mut naive_secs: Vec<f64> = Vec::with_capacity(bandwidths.len());
+    for &h in &bandwidths {
+        let p = GaussSumProblem::kde(data, h, cfg.epsilon);
+        let (res, secs) = time_it(|| Naive::new().run(&p).unwrap());
+        exact.push(res.sums);
+        naive_secs.push(secs);
+    }
+
+    // ---- schedule the (algo × h) cells on a worker pool ----
+    let jobs: Vec<(usize, usize)> = (0..cfg.algorithms.len())
+        .flat_map(|a| (0..bandwidths.len()).map(move |b| (a, b)))
+        .collect();
+    let workers = cfg.workers.max(1);
+    let (result_tx, result_rx) = mpsc::channel::<CellResult>();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let result_tx = result_tx.clone();
+            let jobs = &jobs;
+            let next = &next;
+            let exact = &exact;
+            let bandwidths = &bandwidths;
+            let naive_secs = &naive_secs;
+            scope.spawn(move || loop {
+                let k = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if k >= jobs.len() {
+                    break;
+                }
+                let (ai, bi) = jobs[k];
+                let cell = run_cell(
+                    cfg,
+                    cfg.algorithms[ai],
+                    ai,
+                    bi,
+                    bandwidths[bi],
+                    &exact[bi],
+                    naive_secs[bi],
+                );
+                let _ = result_tx.send(cell);
+            });
+        }
+        drop(result_tx);
+    });
+
+    let mut cells: Vec<CellResult> = result_rx.into_iter().collect();
+    cells.sort_by_key(|c| (c.algo_index, c.bandwidth_index));
+
+    SweepResult {
+        dataset: cfg.dataset.name.clone(),
+        dim: cfg.dataset.dim(),
+        n: cfg.dataset.len(),
+        h_star: cfg.h_star,
+        epsilon: cfg.epsilon,
+        multipliers: cfg.multipliers.clone(),
+        algorithms: cfg.algorithms.clone(),
+        naive_secs,
+        cells,
+    }
+}
+
+/// Run one (algorithm, bandwidth) cell with verification.
+#[allow(clippy::too_many_arguments)]
+fn run_cell(
+    cfg: &SweepConfig,
+    spec: AlgoSpec,
+    algo_index: usize,
+    bandwidth_index: usize,
+    h: f64,
+    exact: &[f64],
+    naive_secs: f64,
+) -> CellResult {
+    let data = &cfg.dataset.points;
+    let problem = GaussSumProblem::kde(data, h, cfg.epsilon);
+    let mut cell = CellResult {
+        algo_index,
+        bandwidth_index,
+        outcome: CellOutcome::ToleranceUnreachable,
+        rel_err: None,
+        stats: None,
+    };
+
+    let finish = |cell: &mut CellResult,
+                  res: Result<(crate::algo::GaussSumResult, f64), AlgoError>| {
+        match res {
+            Ok((r, secs)) => {
+                let rel = max_relative_error(&r.sums, exact);
+                cell.rel_err = Some(rel);
+                if rel <= cfg.epsilon * (1.0 + 1e-9) {
+                    cell.outcome = CellOutcome::Time(secs);
+                } else {
+                    cell.outcome = CellOutcome::ToleranceUnreachable;
+                }
+                cell.stats = Some(r.stats);
+            }
+            Err(AlgoError::RamExhausted(_)) => cell.outcome = CellOutcome::RamExhausted,
+            Err(AlgoError::ToleranceUnreachable(_)) => {
+                cell.outcome = CellOutcome::ToleranceUnreachable
+            }
+        }
+    };
+
+    match spec {
+        AlgoSpec::Naive => {
+            let (r, secs) = time_it(|| Naive::new().run(&problem));
+            finish(&mut cell, r.map(|r| (r, secs)));
+        }
+        AlgoSpec::Dfd => {
+            let a = Dfd { leaf_size: cfg.leaf_size };
+            let (r, secs) = time_it(|| a.run(&problem));
+            finish(&mut cell, r.map(|r| (r, secs)));
+        }
+        AlgoSpec::Dfdo => {
+            let a = Dfdo { leaf_size: cfg.leaf_size };
+            let (r, secs) = time_it(|| a.run(&problem));
+            finish(&mut cell, r.map(|r| (r, secs)));
+        }
+        AlgoSpec::Dfto => {
+            let a = Dfto { leaf_size: cfg.leaf_size, plimit: None };
+            let (r, secs) = time_it(|| a.run(&problem));
+            finish(&mut cell, r.map(|r| (r, secs)));
+        }
+        AlgoSpec::Dito => {
+            let a = Dito::new(crate::algo::dito::DitoConfig {
+                leaf_size: cfg.leaf_size,
+                ..Default::default()
+            });
+            let (r, secs) = time_it(|| a.run(&problem));
+            finish(&mut cell, r.map(|r| (r, secs)));
+        }
+        AlgoSpec::Fgt => {
+            // paper protocol: τ = ε, halve until the relative tolerance
+            // holds (verified against exact); report the successful run.
+            let mut tau = cfg.epsilon;
+            let mut attempts = 0;
+            loop {
+                attempts += 1;
+                let (r, secs) = time_it(|| Fgt::new(tau).run(&problem));
+                match r {
+                    Err(e) => {
+                        finish(&mut cell, Err(e));
+                        break;
+                    }
+                    Ok(r) => {
+                        let rel = max_relative_error(&r.sums, exact);
+                        if rel <= cfg.epsilon * (1.0 + 1e-9) {
+                            cell.rel_err = Some(rel);
+                            cell.outcome = CellOutcome::Time(secs);
+                            cell.stats = Some(r.stats);
+                            break;
+                        }
+                        if attempts >= 20 {
+                            cell.rel_err = Some(rel);
+                            cell.outcome = CellOutcome::ToleranceUnreachable;
+                            break;
+                        }
+                        tau *= 0.5;
+                    }
+                }
+            }
+        }
+        AlgoSpec::Ifgt => {
+            // tuning budget: a few multiples of the exhaustive time —
+            // past that, IFGT has lost by definition (paper's by-hand cutoff)
+            let budget = (5.0 * naive_secs).max(2.0);
+            let (r, secs) = time_it(|| ifgt_tuning_loop(&problem, exact, 8, budget));
+            match r {
+                Ok((res, _params)) => {
+                    cell.rel_err = Some(max_relative_error(&res.sums, exact));
+                    cell.outcome = CellOutcome::Time(secs);
+                    cell.stats = Some(res.stats);
+                }
+                Err(e) => finish(&mut cell, Err(e)),
+            }
+        }
+    }
+    cell
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::kde::bandwidth::silverman;
+
+    fn small_cfg() -> SweepConfig {
+        let ds = data::by_name("astro2d", 300, 11).unwrap();
+        let h = silverman(&ds.points);
+        SweepConfig {
+            dataset: ds,
+            epsilon: 0.01,
+            h_star: h,
+            multipliers: vec![0.1, 1.0, 10.0],
+            algorithms: vec![AlgoSpec::Naive, AlgoSpec::Dfd, AlgoSpec::Dito],
+            workers: 2,
+            leaf_size: 16,
+        }
+    }
+
+    #[test]
+    fn sweep_produces_all_cells_verified() {
+        let cfg = small_cfg();
+        let res = run_sweep(&cfg);
+        assert_eq!(res.cells.len(), 9);
+        for c in &res.cells {
+            match c.outcome {
+                CellOutcome::Time(t) => {
+                    assert!(t >= 0.0);
+                    assert!(c.rel_err.unwrap() <= 0.01 * (1.0 + 1e-9));
+                }
+                _ => panic!(
+                    "algo {} h-idx {} failed: {:?}",
+                    res.algorithms[c.algo_index].name(),
+                    c.bandwidth_index,
+                    c.outcome
+                ),
+            }
+        }
+        assert_eq!(res.naive_secs.len(), 3);
+    }
+
+    #[test]
+    fn cells_ordered_and_totals_compute() {
+        let cfg = small_cfg();
+        let res = run_sweep(&cfg);
+        for (i, c) in res.cells.iter().enumerate() {
+            assert_eq!(c.algo_index, i / 3);
+            assert_eq!(c.bandwidth_index, i % 3);
+        }
+        let totals = res.totals();
+        assert_eq!(totals.len(), 3);
+        assert!(totals.iter().all(|t| t.is_some()));
+    }
+
+    #[test]
+    fn fgt_cell_protocol_small_h_is_ram_bound() {
+        let ds = data::by_name("astro2d", 200, 12).unwrap();
+        let h = silverman(&ds.points);
+        let cfg = SweepConfig {
+            dataset: ds,
+            epsilon: 0.01,
+            h_star: h,
+            multipliers: vec![1e-3],
+            algorithms: vec![AlgoSpec::Fgt],
+            workers: 1,
+            leaf_size: 16,
+        };
+        let res = run_sweep(&cfg);
+        assert!(matches!(res.cells[0].outcome, CellOutcome::RamExhausted));
+    }
+}

@@ -1,0 +1,150 @@
+//! Paper-style table rendering: one row per algorithm, one column per
+//! bandwidth multiplier plus the Σ column the paper's conclusions rest
+//! on. `X` = RAM exhausted, `∞` = tolerance unreachable — exactly the
+//! paper's conventions.
+
+use crate::util::timer::fmt_secs;
+
+use super::job::{CellOutcome, SweepResult};
+
+/// Render the sweep as the paper's table.
+pub fn render_table(res: &SweepResult) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{}, D = {}, N = {}, h* = {:.6}, eps = {}\n",
+        res.dataset, res.dim, res.n, res.h_star, res.epsilon
+    ));
+    // header
+    out.push_str(&format!("{:<8}", "Alg\\h*"));
+    for m in &res.multipliers {
+        out.push_str(&format!("{:>9}", fmt_mult(*m)));
+    }
+    out.push_str(&format!("{:>10}\n", "Σ"));
+    // rows
+    let totals = res.totals();
+    for (a, spec) in res.algorithms.iter().enumerate() {
+        out.push_str(&format!("{:<8}", spec.name()));
+        for b in 0..res.multipliers.len() {
+            let cell = res.cell(a, b);
+            let txt = match cell.outcome {
+                CellOutcome::Time(t) => fmt_secs(t),
+                CellOutcome::RamExhausted => "X".to_string(),
+                CellOutcome::ToleranceUnreachable => "inf".to_string(),
+            };
+            out.push_str(&format!("{txt:>9}"));
+        }
+        let tot = match totals[a] {
+            Some(t) => fmt_secs(t),
+            None => {
+                // propagate the dominant failure type like the paper
+                let any_ram = (0..res.multipliers.len())
+                    .any(|b| res.cell(a, b).outcome == CellOutcome::RamExhausted);
+                if any_ram { "X".to_string() } else { "inf".to_string() }
+            }
+        };
+        out.push_str(&format!("{tot:>10}\n"));
+    }
+    out
+}
+
+/// Render a machine-readable CSV of the same data.
+pub fn render_csv(res: &SweepResult) -> String {
+    let mut out = String::from("dataset,dim,n,algorithm,multiplier,bandwidth,outcome,secs,rel_err\n");
+    for (a, spec) in res.algorithms.iter().enumerate() {
+        for (b, m) in res.multipliers.iter().enumerate() {
+            let cell = res.cell(a, b);
+            let (outcome, secs) = match cell.outcome {
+                CellOutcome::Time(t) => ("ok", t),
+                CellOutcome::RamExhausted => ("ram", f64::NAN),
+                CellOutcome::ToleranceUnreachable => ("tol", f64::NAN),
+            };
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{}\n",
+                res.dataset,
+                res.dim,
+                res.n,
+                spec.name(),
+                m,
+                m * res.h_star,
+                outcome,
+                secs,
+                cell.rel_err.map(|e| e.to_string()).unwrap_or_default()
+            ));
+        }
+    }
+    out
+}
+
+fn fmt_mult(m: f64) -> String {
+    let l = m.log10();
+    if (l - l.round()).abs() < 1e-9 {
+        let e = l.round() as i32;
+        match e {
+            0 => "1".to_string(),
+            _ => format!("1e{e}"),
+        }
+    } else {
+        format!("{m}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::{AlgoSpec, CellResult, SweepResult};
+
+    fn sample() -> SweepResult {
+        SweepResult {
+            dataset: "astro2d".into(),
+            dim: 2,
+            n: 100,
+            h_star: 0.0139,
+            epsilon: 0.01,
+            multipliers: vec![0.001, 1.0, 1000.0],
+            algorithms: vec![AlgoSpec::Naive, AlgoSpec::Fgt, AlgoSpec::Dito],
+            naive_secs: vec![4.0, 4.0, 4.0],
+            cells: vec![
+                CellResult { algo_index: 0, bandwidth_index: 0, outcome: CellOutcome::Time(452.0), rel_err: Some(0.0), stats: None },
+                CellResult { algo_index: 0, bandwidth_index: 1, outcome: CellOutcome::Time(452.0), rel_err: Some(0.0), stats: None },
+                CellResult { algo_index: 0, bandwidth_index: 2, outcome: CellOutcome::Time(452.0), rel_err: Some(0.0), stats: None },
+                CellResult { algo_index: 1, bandwidth_index: 0, outcome: CellOutcome::RamExhausted, rel_err: None, stats: None },
+                CellResult { algo_index: 1, bandwidth_index: 1, outcome: CellOutcome::Time(4.36), rel_err: Some(0.004), stats: None },
+                CellResult { algo_index: 1, bandwidth_index: 2, outcome: CellOutcome::Time(0.13), rel_err: Some(0.001), stats: None },
+                CellResult { algo_index: 2, bandwidth_index: 0, outcome: CellOutcome::Time(2.61), rel_err: Some(0.003), stats: None },
+                CellResult { algo_index: 2, bandwidth_index: 1, outcome: CellOutcome::Time(9.21), rel_err: Some(0.008), stats: None },
+                CellResult { algo_index: 2, bandwidth_index: 2, outcome: CellOutcome::Time(0.84), rel_err: Some(0.002), stats: None },
+            ],
+        }
+    }
+
+    #[test]
+    fn table_contains_paper_conventions() {
+        let t = render_table(&sample());
+        assert!(t.contains("astro2d, D = 2, N = 100"));
+        assert!(t.contains("1e-3"), "{t}");
+        assert!(t.contains('X'), "{t}");
+        assert!(t.contains("Naive"));
+        // FGT row total must be X (RAM failure dominates)
+        let fgt_line = t.lines().find(|l| l.starts_with("FGT")).unwrap();
+        assert!(fgt_line.trim_end().ends_with('X'), "{fgt_line}");
+        // DITO total = 2.61+9.21+0.84 = 12.66 → "12.7"
+        let dito_line = t.lines().find(|l| l.starts_with("DITO")).unwrap();
+        assert!(dito_line.contains("12.7"), "{dito_line}");
+    }
+
+    #[test]
+    fn csv_has_one_row_per_cell() {
+        let c = render_csv(&sample());
+        assert_eq!(c.lines().count(), 1 + 9);
+        assert!(c.contains("FGT,0.001"));
+        assert!(c.contains(",ram,"));
+    }
+
+    #[test]
+    fn multiplier_formatting() {
+        assert_eq!(fmt_mult(0.001), "1e-3");
+        assert_eq!(fmt_mult(1.0), "1");
+        assert_eq!(fmt_mult(1000.0), "1e3");
+        assert_eq!(fmt_mult(2.5), "2.5");
+    }
+}

@@ -1,0 +1,122 @@
+//! Headerless numeric CSV load/save, for round-tripping datasets to
+//! external tools and loading user data into the CLI.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::geometry::Matrix;
+
+/// Load a headerless numeric CSV (comma or whitespace separated).
+pub fn load(path: &Path) -> Result<Matrix> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let reader = std::io::BufReader::new(f);
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let vals: Result<Vec<f64>> = trimmed
+            .split(|c: char| c == ',' || c.is_whitespace())
+            .filter(|t| !t.is_empty())
+            .map(|t| {
+                t.parse::<f64>()
+                    .map_err(|_| anyhow!("{}:{}: bad number {t:?}", path.display(), lineno + 1))
+            })
+            .collect();
+        let vals = vals?;
+        if let Some(first) = rows.first() {
+            if vals.len() != first.len() {
+                return Err(anyhow!(
+                    "{}:{}: expected {} columns, got {}",
+                    path.display(),
+                    lineno + 1,
+                    first.len(),
+                    vals.len()
+                ));
+            }
+        }
+        rows.push(vals);
+    }
+    if rows.is_empty() {
+        return Err(anyhow!("{}: no data rows", path.display()));
+    }
+    Ok(Matrix::from_rows(&rows))
+}
+
+/// Save a matrix as comma-separated values with full f64 precision.
+pub fn save(path: &Path, m: &Matrix) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    for i in 0..m.rows() {
+        let row = m.row(i);
+        for (j, v) in row.iter().enumerate() {
+            if j > 0 {
+                write!(w, ",")?;
+            }
+            write!(w, "{v:.17}")?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = Matrix::from_rows(&[vec![1.5, -2.25], vec![0.0, 1e-17]]);
+        let p = tmp("fg_csv_rt.csv");
+        save(&p, &m).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines() {
+        let p = tmp("fg_csv_comments.csv");
+        std::fs::write(&p, "# header\n1,2\n\n3,4\n").unwrap();
+        let m = load(&p).unwrap();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn whitespace_separated_accepted() {
+        let p = tmp("fg_csv_ws.csv");
+        std::fs::write(&p, "1.0 2.0\n3.0\t4.0\n").unwrap();
+        let m = load(&p).unwrap();
+        assert_eq!(m.row(0), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn ragged_rows_rejected() {
+        let p = tmp("fg_csv_ragged.csv");
+        std::fs::write(&p, "1,2\n3\n").unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn bad_number_reported_with_line() {
+        let p = tmp("fg_csv_bad.csv");
+        std::fs::write(&p, "1,2\n3,abc\n").unwrap();
+        let err = load(&p).unwrap_err().to_string();
+        assert!(err.contains(":2:"), "{err}");
+    }
+
+    #[test]
+    fn empty_file_rejected() {
+        let p = tmp("fg_csv_empty.csv");
+        std::fs::write(&p, "# only comments\n").unwrap();
+        assert!(load(&p).is_err());
+    }
+}

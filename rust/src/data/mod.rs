@@ -1,0 +1,89 @@
+//! Datasets: the six synthetic stand-ins for the paper's evaluation
+//! data (see DESIGN.md §Substitutions), unit-cube scaling, and CSV I/O.
+
+pub mod csv;
+pub mod scale;
+pub mod synthetic;
+
+use crate::geometry::Matrix;
+
+/// A named point set, scaled to the unit hypercube as in the paper.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub points: Matrix,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, points: Matrix) -> Self {
+        Dataset { name: name.into(), points }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.points.cols()
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.rows() == 0
+    }
+}
+
+/// The paper's evaluation suite: (our name, paper dataset, D).
+pub const PAPER_SUITE: &[(&str, &str, usize)] = &[
+    ("astro2d", "sj2-50000-2", 2),
+    ("galaxy3d", "mockgalaxy-D-1M-rnd", 3),
+    ("bio5", "bio5-rnd", 5),
+    ("pall7", "pall7-rnd", 7),
+    ("covtype10", "covtype-rnd", 10),
+    ("texture16", "CoocTexture-rnd", 16),
+];
+
+/// Generate a paper-suite dataset by name (scaled to [0,1]ᴰ).
+pub fn by_name(name: &str, n: usize, seed: u64) -> Option<Dataset> {
+    let m = match name {
+        "astro2d" => synthetic::astro2d(n, seed),
+        "galaxy3d" => synthetic::galaxy3d(n, seed),
+        "bio5" => synthetic::bio5(n, seed),
+        "pall7" => synthetic::pall7(n, seed),
+        "covtype10" => synthetic::covtype10(n, seed),
+        "texture16" => synthetic::texture16(n, seed),
+        "uniform2d" => synthetic::uniform(n, 2, seed),
+        "uniform5d" => synthetic::uniform(n, 5, seed),
+        _ => return None,
+    };
+    Some(Dataset::new(name, m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_paper_suite() {
+        for (name, _paper, d) in PAPER_SUITE {
+            let ds = by_name(name, 200, 7).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(ds.dim(), *d, "{name}");
+            assert_eq!(ds.len(), 200);
+            // unit-cube scaling
+            for j in 0..ds.dim() {
+                let lo = ds.points.col_min()[j];
+                let hi = ds.points.col_max()[j];
+                assert!(lo >= -1e-12 && hi <= 1.0 + 1e-12, "{name} dim {j}: [{lo},{hi}]");
+            }
+        }
+        assert!(by_name("nonexistent", 10, 0).is_none());
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = by_name("astro2d", 100, 42).unwrap();
+        let b = by_name("astro2d", 100, 42).unwrap();
+        assert_eq!(a.points, b.points);
+        let c = by_name("astro2d", 100, 43).unwrap();
+        assert_ne!(a.points, c.points);
+    }
+}

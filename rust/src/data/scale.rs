@@ -1,0 +1,48 @@
+//! Unit-hypercube scaling — the paper scales every dataset to [0,1]ᴰ
+//! before the experiments.
+
+use crate::geometry::Matrix;
+
+/// Min–max scale each column to [0, 1]. Constant columns map to 0.5.
+pub fn to_unit_cube(m: &Matrix) -> Matrix {
+    let lo = m.col_min();
+    let hi = m.col_max();
+    let mut out = Matrix::zeros(m.rows(), m.cols());
+    for i in 0..m.rows() {
+        let r = m.row(i);
+        for j in 0..m.cols() {
+            let span = hi[j] - lo[j];
+            let v = if span > 0.0 { (r[j] - lo[j]) / span } else { 0.5 };
+            out.set(i, j, v);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_to_unit_interval() {
+        let m = Matrix::from_rows(&[vec![-5.0, 10.0], vec![5.0, 20.0], vec![0.0, 15.0]]);
+        let s = to_unit_cube(&m);
+        assert_eq!(s.row(0), &[0.0, 0.0]);
+        assert_eq!(s.row(1), &[1.0, 1.0]);
+        assert_eq!(s.row(2), &[0.5, 0.5]);
+    }
+
+    #[test]
+    fn constant_column_centered() {
+        let m = Matrix::from_rows(&[vec![3.0, 1.0], vec![3.0, 2.0]]);
+        let s = to_unit_cube(&m);
+        assert_eq!(s.get(0, 0), 0.5);
+        assert_eq!(s.get(1, 0), 0.5);
+    }
+
+    #[test]
+    fn idempotent_on_unit_data() {
+        let m = Matrix::from_rows(&[vec![0.0], vec![0.25], vec![1.0]]);
+        assert_eq!(to_unit_cube(&m), m);
+    }
+}

@@ -1,0 +1,237 @@
+//! Automatic error control (paper Section 5).
+//!
+//! Theorem 2: any approximation A of reference node R's contribution
+//! with absolute error E_A may be accepted while preserving the *global
+//! relative* tolerance ∀q |G̃(q)−G(q)| ≤ ε·G(q), provided
+//! `E_A ≤ (W_R/W)·ε·G_Q^min`.
+//!
+//! The improved scheme converts this into a **token ledger**: accounting
+//! a reference node R at query node Q "costs" effective weight
+//! W′ = W·E_A/(ε·G_Q^min); the leftover W_R − W′ (positive when the
+//! approximation was cheaper than its entitlement, e.g. W_R itself for
+//! exhaustive computation) is banked in `Q.W_T` and may be spent by
+//! later prunes at the same query node whose W′ exceeds their W_R.
+//! Soundness: along any root→leaf path every reference point's weight is
+//! accounted exactly once, and every banked token at a node came from
+//! weight accounted at that node for the same query subset, so the
+//! per-point error telescopes to ≤ ε·G_Q^min ≤ ε·G(q).
+//!
+//! [`QueryLedger`] also owns the hierarchical running bounds
+//! (G_Q^min / G_Q^max deltas, far-field estimates G_Q^est) that the
+//! dual-tree algorithms maintain per query node.
+
+/// Decision returned by the token rule for one candidate prune.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub enum PruneDecision {
+    /// Prune accepted; apply `token_delta` to the node's ledger
+    /// (positive = banked leftover, negative = spent tokens).
+    Accept { token_delta: f64 },
+    /// Not enough budget; the pair must be expanded (or approximated
+    /// more accurately).
+    Reject,
+}
+
+/// The token rule in one place, used by DFDO/DFTO/DITO (with
+/// `use_tokens = true`) and plain DFD (with `use_tokens = false`).
+///
+/// * `err`: absolute error bound E_A of the candidate approximation.
+/// * `weight`: W_R of the reference node being accounted.
+/// * `available_tokens`: current Q.W_T.
+/// * `gq_min`: current lower bound G_Q^min (≥ 0).
+/// * `eps`, `total_weight`: ε and W.
+pub fn token_rule(
+    err: f64,
+    weight: f64,
+    available_tokens: f64,
+    gq_min: f64,
+    eps: f64,
+    total_weight: f64,
+    use_tokens: bool,
+) -> PruneDecision {
+    debug_assert!(err >= 0.0 && weight > 0.0);
+    if err == 0.0 {
+        // exhaustive-quality approximation: bank the full entitlement
+        return PruneDecision::Accept { token_delta: if use_tokens { weight } else { 0.0 } };
+    }
+    if gq_min <= 0.0 {
+        return PruneDecision::Reject;
+    }
+    // effective weight consumed by this approximation
+    let w_eff = total_weight * err / (eps * gq_min);
+    if !use_tokens {
+        return if w_eff <= weight {
+            PruneDecision::Accept { token_delta: 0.0 }
+        } else {
+            PruneDecision::Reject
+        };
+    }
+    let needed = w_eff - weight; // tokens required (negative = leftover)
+    if needed <= available_tokens {
+        PruneDecision::Accept { token_delta: -needed }
+    } else {
+        PruneDecision::Reject
+    }
+}
+
+/// Per-query-node mutable state for one dual-tree run.
+///
+/// Bounds are *hierarchical*: the true running bound for a query point q
+/// is the sum of `node_min` over the root→leaf path plus `point_min[q]`
+/// (and similarly for est/max). `below_min` caches a lower bound on the
+/// contributions registered strictly below each node, refined on the way
+/// back up the recursion, so prune tests can read
+/// `inherited + node_min[Q] + below_min[Q]` in O(1).
+#[derive(Clone, Debug)]
+pub struct QueryLedger {
+    /// Contributions to the lower bound registered exactly at each node.
+    pub node_min: Vec<f64>,
+    /// Upper-bound *deficits* (du ≤ 0 deltas relative to the
+    /// W-initialized maximum).
+    pub node_max: Vec<f64>,
+    /// Far-field estimate contributions registered at each node
+    /// (finite-difference midpoints; propagated down in post-processing).
+    pub node_est: Vec<f64>,
+    /// Banked error-budget tokens Q.W_T.
+    pub tokens: Vec<f64>,
+    /// Cached min of contributions registered below each node.
+    pub below_min: Vec<f64>,
+    /// Per-point exact/base-case lower-bound accumulations.
+    pub point_min: Vec<f64>,
+    /// Per-point estimates (base cases + direct Hermite evaluations).
+    pub point_est: Vec<f64>,
+    /// Per-point upper-bound deficits.
+    pub point_max: Vec<f64>,
+}
+
+impl QueryLedger {
+    pub fn new(num_nodes: usize, num_points: usize) -> Self {
+        QueryLedger {
+            node_min: vec![0.0; num_nodes],
+            node_max: vec![0.0; num_nodes],
+            node_est: vec![0.0; num_nodes],
+            tokens: vec![0.0; num_nodes],
+            below_min: vec![0.0; num_nodes],
+            point_min: vec![0.0; num_points],
+            point_est: vec![0.0; num_points],
+            point_max: vec![0.0; num_points],
+        }
+    }
+
+    /// G_Q^min visible at node `q` given the inherited ancestor sum.
+    #[inline]
+    pub fn gq_min(&self, q: usize, inherited: f64) -> f64 {
+        inherited + self.node_min[q] + self.below_min[q]
+    }
+
+    /// Refresh `below_min[q]` from the children's ledgers.
+    #[inline]
+    pub fn refresh_below_from_children(&mut self, q: usize, left: usize, right: usize) {
+        let l = self.node_min[left] + self.below_min[left];
+        let r = self.node_min[right] + self.below_min[right];
+        self.below_min[q] = l.min(r);
+    }
+
+    /// Refresh `below_min[leaf]` from its points after a base case.
+    pub fn refresh_below_from_points(&mut self, leaf: usize, begin: usize, end: usize) {
+        let mut m = f64::INFINITY;
+        for i in begin..end {
+            m = m.min(self.point_min[i]);
+        }
+        self.below_min[leaf] = m;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_accounting_banks_full_weight() {
+        let d = token_rule(0.0, 5.0, 0.0, 0.0, 0.01, 100.0, true);
+        assert_eq!(d, PruneDecision::Accept { token_delta: 5.0 });
+        // without tokens, nothing banked but still accepted
+        let d2 = token_rule(0.0, 5.0, 0.0, 0.0, 0.01, 100.0, false);
+        assert_eq!(d2, PruneDecision::Accept { token_delta: 0.0 });
+    }
+
+    #[test]
+    fn zero_gmin_rejects_nonzero_error() {
+        assert_eq!(token_rule(0.1, 5.0, 100.0, 0.0, 0.01, 100.0, true), PruneDecision::Reject);
+    }
+
+    #[test]
+    fn classic_rule_without_tokens() {
+        // W' = W·E/(ε·Gmin) = 100·0.001/(0.01·10) = 1.0 ≤ W_R=5 → accept
+        let d = token_rule(0.001, 5.0, 0.0, 10.0, 0.01, 100.0, false);
+        assert_eq!(d, PruneDecision::Accept { token_delta: 0.0 });
+        // E larger: W' = 100·0.01/(0.1) = 10 > 5 → reject
+        let d2 = token_rule(0.01, 5.0, 0.0, 10.0, 0.01, 100.0, false);
+        assert_eq!(d2, PruneDecision::Reject);
+    }
+
+    #[test]
+    fn tokens_bank_leftover() {
+        // W' = 1.0, W_R = 5 → leftover 4 banked
+        match token_rule(0.001, 5.0, 0.0, 10.0, 0.01, 100.0, true) {
+            PruneDecision::Accept { token_delta } => assert!((token_delta - 4.0).abs() < 1e-12),
+            _ => panic!("expected accept"),
+        }
+    }
+
+    #[test]
+    fn tokens_enable_otherwise_impossible_prune() {
+        // W' = 10 > W_R = 5: needs 5 tokens.
+        let no_tokens = token_rule(0.01, 5.0, 1.0, 10.0, 0.01, 100.0, true);
+        assert_eq!(no_tokens, PruneDecision::Reject);
+        match token_rule(0.01, 5.0, 6.0, 10.0, 0.01, 100.0, true) {
+            PruneDecision::Accept { token_delta } => assert!((token_delta + 5.0).abs() < 1e-12),
+            _ => panic!("expected accept with spent tokens"),
+        }
+    }
+
+    #[test]
+    fn token_conservation_across_sequence() {
+        // Simulated sequence at one node: ledger never goes negative and
+        // net bank equals banked − spent.
+        let mut bank: f64 = 0.0;
+        let w = 100.0;
+        let eps = 0.01;
+        let gmin = 50.0;
+        let seq = [
+            (0.0, 10.0),  // exhaustive: +10
+            (0.004, 5.0), // W' = 0.8 → +4.2
+            (0.02, 2.0),  // W' = 4  → spend 2
+            (0.1, 1.0),   // W' = 20 → needs 19; have 12.2 → reject
+        ];
+        let mut accepted = 0;
+        for (e, wr) in seq {
+            match token_rule(e, wr, bank, gmin, eps, w, true) {
+                PruneDecision::Accept { token_delta } => {
+                    bank += token_delta;
+                    accepted += 1;
+                    assert!(bank >= -1e-12, "ledger went negative");
+                }
+                PruneDecision::Reject => {}
+            }
+        }
+        assert_eq!(accepted, 3);
+        assert!((bank - (10.0 + 4.2 - 2.0)).abs() < 1e-9, "bank={bank}");
+    }
+
+    #[test]
+    fn ledger_bound_bookkeeping() {
+        let mut l = QueryLedger::new(3, 4); // root 0, children 1,2; 4 pts
+        l.node_min[1] = 2.0;
+        l.node_min[2] = 3.0;
+        l.point_min = vec![1.0, 4.0, 0.5, 2.0];
+        // leaf 1 owns points 0..2, leaf 2 owns 2..4
+        l.refresh_below_from_points(1, 0, 2);
+        l.refresh_below_from_points(2, 2, 4);
+        assert_eq!(l.below_min[1], 1.0);
+        assert_eq!(l.below_min[2], 0.5);
+        l.refresh_below_from_children(0, 1, 2);
+        assert_eq!(l.below_min[0], 3.0); // min(2+1, 3+0.5)
+        assert_eq!(l.gq_min(0, 0.0), 3.0);
+        assert_eq!(l.gq_min(1, 5.0), 8.0);
+    }
+}

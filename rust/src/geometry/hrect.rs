@@ -1,0 +1,262 @@
+//! Bounding hyper-rectangles with the node–node distance bounds
+//! δ_QR^min / δ_QR^max the dual-tree pruning rules are built on.
+
+use super::Matrix;
+
+/// Axis-aligned bounding box in D dimensions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HRect {
+    lo: Vec<f64>,
+    hi: Vec<f64>,
+}
+
+impl HRect {
+    /// Construct from explicit bounds. Panics if `lo[i] > hi[i]`.
+    pub fn new(lo: Vec<f64>, hi: Vec<f64>) -> Self {
+        assert_eq!(lo.len(), hi.len());
+        for i in 0..lo.len() {
+            assert!(lo[i] <= hi[i], "inverted bounds in dim {i}");
+        }
+        HRect { lo, hi }
+    }
+
+    /// Tight bounding box of a set of rows of `m` given by `idx`.
+    pub fn from_points(m: &Matrix, idx: &[usize]) -> Self {
+        assert!(!idx.is_empty());
+        let d = m.cols();
+        let mut lo = vec![f64::INFINITY; d];
+        let mut hi = vec![f64::NEG_INFINITY; d];
+        for &i in idx {
+            let r = m.row(i);
+            for j in 0..d {
+                if r[j] < lo[j] {
+                    lo[j] = r[j];
+                }
+                if r[j] > hi[j] {
+                    hi[j] = r[j];
+                }
+            }
+        }
+        HRect { lo, hi }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.lo.len()
+    }
+
+    #[inline]
+    pub fn lo(&self) -> &[f64] {
+        &self.lo
+    }
+
+    #[inline]
+    pub fn hi(&self) -> &[f64] {
+        &self.hi
+    }
+
+    /// Box center.
+    pub fn center(&self) -> Vec<f64> {
+        (0..self.dim()).map(|i| 0.5 * (self.lo[i] + self.hi[i])).collect()
+    }
+
+    /// Side length in each dimension.
+    pub fn widths(&self) -> Vec<f64> {
+        (0..self.dim()).map(|i| self.hi[i] - self.lo[i]).collect()
+    }
+
+    /// Index of the widest dimension (split axis for kd-trees).
+    pub fn widest_dim(&self) -> usize {
+        let mut best = 0;
+        let mut bw = f64::NEG_INFINITY;
+        for i in 0..self.dim() {
+            let w = self.hi[i] - self.lo[i];
+            if w > bw {
+                bw = w;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Does the box contain point `p` (closed)?
+    pub fn contains(&self, p: &[f64]) -> bool {
+        (0..self.dim()).all(|i| self.lo[i] <= p[i] && p[i] <= self.hi[i])
+    }
+
+    /// Smallest box containing both.
+    pub fn union(&self, other: &HRect) -> HRect {
+        let d = self.dim();
+        assert_eq!(d, other.dim());
+        HRect {
+            lo: (0..d).map(|i| self.lo[i].min(other.lo[i])).collect(),
+            hi: (0..d).map(|i| self.hi[i].max(other.hi[i])).collect(),
+        }
+    }
+
+    /// Squared minimum distance from a point to the box (0 if inside).
+    pub fn min_sqdist_point(&self, p: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for i in 0..self.dim() {
+            let d = if p[i] < self.lo[i] {
+                self.lo[i] - p[i]
+            } else if p[i] > self.hi[i] {
+                p[i] - self.hi[i]
+            } else {
+                0.0
+            };
+            s += d * d;
+        }
+        s
+    }
+
+    /// Squared maximum distance from a point to the box.
+    pub fn max_sqdist_point(&self, p: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for i in 0..self.dim() {
+            let d = (p[i] - self.lo[i]).abs().max((p[i] - self.hi[i]).abs());
+            s += d * d;
+        }
+        s
+    }
+
+    /// Squared minimum distance between two boxes — the paper's
+    /// (δ_QR^min)². Zero when they overlap.
+    pub fn min_sqdist(&self, other: &HRect) -> f64 {
+        let mut s = 0.0;
+        for i in 0..self.dim() {
+            let d = if other.hi[i] < self.lo[i] {
+                self.lo[i] - other.hi[i]
+            } else if self.hi[i] < other.lo[i] {
+                other.lo[i] - self.hi[i]
+            } else {
+                0.0
+            };
+            s += d * d;
+        }
+        s
+    }
+
+    /// Squared maximum distance between two boxes — the paper's
+    /// (δ_QR^max)².
+    pub fn max_sqdist(&self, other: &HRect) -> f64 {
+        let mut s = 0.0;
+        for i in 0..self.dim() {
+            let d = (self.hi[i] - other.lo[i]).abs().max((other.hi[i] - self.lo[i]).abs());
+            s += d * d;
+        }
+        s
+    }
+
+    /// Maximum L∞ distance from `c` to any corner of the box — used for
+    /// the paper's node radius r = max ‖x − c‖∞.
+    pub fn max_linf_point(&self, c: &[f64]) -> f64 {
+        let mut m = 0.0f64;
+        for i in 0..self.dim() {
+            m = m.max((c[i] - self.lo[i]).abs().max((c[i] - self.hi[i]).abs()));
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::sqdist;
+    use crate::util::Pcg32;
+
+    fn unit2() -> HRect {
+        HRect::new(vec![0.0, 0.0], vec![1.0, 1.0])
+    }
+
+    #[test]
+    fn from_points_is_tight() {
+        let m = Matrix::from_rows(&[vec![0.0, 5.0], vec![2.0, 1.0], vec![1.0, 3.0]]);
+        let r = HRect::from_points(&m, &[0, 1, 2]);
+        assert_eq!(r.lo(), &[0.0, 1.0]);
+        assert_eq!(r.hi(), &[2.0, 5.0]);
+        assert!(r.contains(m.row(2)));
+    }
+
+    #[test]
+    fn point_distance_inside_is_zero() {
+        let r = unit2();
+        assert_eq!(r.min_sqdist_point(&[0.5, 0.5]), 0.0);
+        assert!(r.max_sqdist_point(&[0.5, 0.5]) > 0.0);
+    }
+
+    #[test]
+    fn point_distance_outside() {
+        let r = unit2();
+        assert_eq!(r.min_sqdist_point(&[2.0, 0.5]), 1.0);
+        // farthest corner from (2, 0.5) is (0,0) or (0,1): dist² = 4 + .25
+        assert_eq!(r.max_sqdist_point(&[2.0, 0.5]), 4.25);
+    }
+
+    #[test]
+    fn box_box_disjoint() {
+        let a = unit2();
+        let b = HRect::new(vec![3.0, 0.0], vec![4.0, 1.0]);
+        assert_eq!(a.min_sqdist(&b), 4.0);
+        // farthest pair: (0, 0)..(4, 1) or (0,1)..(4,0) → 16 + 1
+        assert_eq!(a.max_sqdist(&b), 17.0);
+    }
+
+    #[test]
+    fn box_box_overlap_min_zero() {
+        let a = unit2();
+        let b = HRect::new(vec![0.5, 0.5], vec![2.0, 2.0]);
+        assert_eq!(a.min_sqdist(&b), 0.0);
+        assert!(a.max_sqdist(&b) >= 0.0);
+    }
+
+    #[test]
+    fn union_contains_both() {
+        let a = unit2();
+        let b = HRect::new(vec![2.0, -1.0], vec![3.0, 0.5]);
+        let u = a.union(&b);
+        assert_eq!(u.lo(), &[0.0, -1.0]);
+        assert_eq!(u.hi(), &[3.0, 1.0]);
+    }
+
+    #[test]
+    fn widest_dim_and_center() {
+        let r = HRect::new(vec![0.0, 0.0], vec![1.0, 3.0]);
+        assert_eq!(r.widest_dim(), 1);
+        assert_eq!(r.center(), vec![0.5, 1.5]);
+        assert_eq!(r.widths(), vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn max_linf_point_corner() {
+        let r = unit2();
+        assert_eq!(r.max_linf_point(&[0.25, 0.5]), 0.75);
+    }
+
+    /// Randomized check: for all point pairs drawn from two boxes,
+    /// min_sqdist ≤ d² ≤ max_sqdist. This is the correctness contract the
+    /// pruning rules rely on.
+    #[test]
+    fn distance_bounds_bracket_all_pairs() {
+        let mut rng = Pcg32::new(11);
+        for _ in 0..50 {
+            let d = 1 + rng.below(4);
+            let mk = |rng: &mut Pcg32| {
+                let a: Vec<f64> = (0..d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+                let b: Vec<f64> = (0..d).map(|i| a[i] + rng.uniform()).collect();
+                HRect::new(a, b)
+            };
+            let q = mk(&mut rng);
+            let r = mk(&mut rng);
+            for _ in 0..20 {
+                let pq: Vec<f64> =
+                    (0..d).map(|i| rng.uniform_in(q.lo()[i], q.hi()[i])).collect();
+                let pr: Vec<f64> =
+                    (0..d).map(|i| rng.uniform_in(r.lo()[i], r.hi()[i])).collect();
+                let s = sqdist(&pq, &pr);
+                assert!(q.min_sqdist(&r) <= s + 1e-12);
+                assert!(s <= q.max_sqdist(&r) + 1e-12);
+            }
+        }
+    }
+}

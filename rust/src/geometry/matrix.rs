@@ -1,0 +1,198 @@
+//! Row-major `n × d` matrix of `f64` — the point-set container used
+//! everywhere. Rows are points; `row(i)` is a borrowed `&[f64]`.
+
+/// Dense row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    data: Vec<f64>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Matrix {
+    /// Build from a flat row-major buffer. Panics when the buffer length
+    /// is not `rows*cols`.
+    pub fn from_vec(data: Vec<f64>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        Matrix { data, rows, cols }
+    }
+
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    /// Build from a slice of rows (each of equal length).
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        assert!(!rows.is_empty(), "no rows");
+        let cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            assert_eq!(r.len(), cols, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        Matrix { data, rows: rows.len(), cols }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Flat row-major view.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Gather a subset of rows (by index) into a new matrix.
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (k, &i) in idx.iter().enumerate() {
+            out.row_mut(k).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Per-column minimum.
+    pub fn col_min(&self) -> Vec<f64> {
+        let mut m = vec![f64::INFINITY; self.cols];
+        for i in 0..self.rows {
+            let r = self.row(i);
+            for j in 0..self.cols {
+                if r[j] < m[j] {
+                    m[j] = r[j];
+                }
+            }
+        }
+        m
+    }
+
+    /// Per-column maximum.
+    pub fn col_max(&self) -> Vec<f64> {
+        let mut m = vec![f64::NEG_INFINITY; self.cols];
+        for i in 0..self.rows {
+            let r = self.row(i);
+            for j in 0..self.cols {
+                if r[j] > m[j] {
+                    m[j] = r[j];
+                }
+            }
+        }
+        m
+    }
+
+    /// Per-column mean.
+    pub fn col_mean(&self) -> Vec<f64> {
+        let mut m = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let r = self.row(i);
+            for j in 0..self.cols {
+                m[j] += r[j];
+            }
+        }
+        for v in &mut m {
+            *v /= self.rows as f64;
+        }
+        m
+    }
+
+    /// Per-column standard deviation (population).
+    pub fn col_std(&self) -> Vec<f64> {
+        let mean = self.col_mean();
+        let mut v = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let r = self.row(i);
+            for j in 0..self.cols {
+                let d = r[j] - mean[j];
+                v[j] += d * d;
+            }
+        }
+        v.iter().map(|x| (x / self.rows as f64).sqrt()).collect()
+    }
+
+    /// Iterator over rows.
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[f64]> {
+        (0..self.rows).map(move |i| self.row(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> Matrix {
+        Matrix::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 3, 2)
+    }
+
+    #[test]
+    fn shape_and_access() {
+        let m = m();
+        assert_eq!((m.rows(), m.cols()), (3, 2));
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        assert_eq!(m.get(2, 1), 6.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Matrix::from_vec(vec![1.0; 5], 2, 3);
+    }
+
+    #[test]
+    fn from_rows_roundtrip() {
+        let m2 = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        assert_eq!(m2, m());
+    }
+
+    #[test]
+    fn select_rows_gathers() {
+        let s = m().select_rows(&[2, 0]);
+        assert_eq!(s.row(0), &[5.0, 6.0]);
+        assert_eq!(s.row(1), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn column_stats() {
+        let m = m();
+        assert_eq!(m.col_min(), vec![1.0, 2.0]);
+        assert_eq!(m.col_max(), vec![5.0, 6.0]);
+        assert_eq!(m.col_mean(), vec![3.0, 4.0]);
+        let std = m.col_std();
+        assert!((std[0] - (8.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn set_and_row_mut() {
+        let mut m = m();
+        m.set(0, 0, 9.0);
+        m.row_mut(1)[1] = -1.0;
+        assert_eq!(m.get(0, 0), 9.0);
+        assert_eq!(m.get(1, 1), -1.0);
+    }
+}

@@ -1,0 +1,62 @@
+//! Geometric primitives: a row-major point matrix, bounding
+//! hyper-rectangles with node-node distance bounds, and bounding spheres
+//! (for the sphere-rectangle tree variant).
+
+pub mod matrix;
+pub mod hrect;
+pub mod sphere;
+
+pub use hrect::HRect;
+pub use matrix::Matrix;
+pub use sphere::Sphere;
+
+/// Squared Euclidean distance between two D-dim points.
+#[inline]
+pub fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// Euclidean distance.
+#[inline]
+pub fn dist(a: &[f64], b: &[f64]) -> f64 {
+    sqdist(a, b).sqrt()
+}
+
+/// L∞ (Chebyshev) distance — used by the paper's node radii
+/// r_R = max_r ‖x_r − x_R‖_∞ / h.
+#[inline]
+pub fn linf_dist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut m = 0.0f64;
+    for i in 0..a.len() {
+        m = m.max((a[i] - b[i]).abs());
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distances() {
+        let a = [0.0, 0.0];
+        let b = [3.0, 4.0];
+        assert_eq!(sqdist(&a, &b), 25.0);
+        assert_eq!(dist(&a, &b), 5.0);
+        assert_eq!(linf_dist(&a, &b), 4.0);
+    }
+
+    #[test]
+    fn zero_distance_to_self() {
+        let a = [1.5, -2.5, 3.0];
+        assert_eq!(sqdist(&a, &a), 0.0);
+        assert_eq!(linf_dist(&a, &a), 0.0);
+    }
+}

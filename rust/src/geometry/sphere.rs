@@ -1,0 +1,121 @@
+//! Bounding spheres. The paper uses sphere-rectangle (SR) trees
+//! (Katayama & Satoh 1997): each node keeps *both* a bounding rectangle
+//! and a bounding sphere, and distance bounds take the tighter of the
+//! two.
+
+use super::{dist, Matrix};
+
+/// A bounding sphere: center + radius.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sphere {
+    center: Vec<f64>,
+    radius: f64,
+}
+
+impl Sphere {
+    pub fn new(center: Vec<f64>, radius: f64) -> Self {
+        assert!(radius >= 0.0);
+        Sphere { center, radius }
+    }
+
+    /// Sphere centered at the centroid of the selected rows, with radius
+    /// the max distance to any of them (the SR-tree construction).
+    pub fn from_points(m: &Matrix, idx: &[usize]) -> Self {
+        assert!(!idx.is_empty());
+        let d = m.cols();
+        let mut c = vec![0.0; d];
+        for &i in idx {
+            let r = m.row(i);
+            for j in 0..d {
+                c[j] += r[j];
+            }
+        }
+        for v in &mut c {
+            *v /= idx.len() as f64;
+        }
+        let radius =
+            idx.iter().map(|&i| dist(&c, m.row(i))).fold(0.0f64, f64::max);
+        Sphere { center: c, radius }
+    }
+
+    #[inline]
+    pub fn center(&self) -> &[f64] {
+        &self.center
+    }
+
+    #[inline]
+    pub fn radius(&self) -> f64 {
+        self.radius
+    }
+
+    /// Lower bound on the distance between points in two spheres
+    /// (clamped at 0 when they intersect).
+    pub fn min_dist(&self, other: &Sphere) -> f64 {
+        (dist(&self.center, &other.center) - self.radius - other.radius).max(0.0)
+    }
+
+    /// Upper bound on the distance between points in two spheres.
+    pub fn max_dist(&self, other: &Sphere) -> f64 {
+        dist(&self.center, &other.center) + self.radius + other.radius
+    }
+
+    /// Does the sphere contain `p`?
+    pub fn contains(&self, p: &[f64]) -> bool {
+        dist(&self.center, p) <= self.radius + 1e-12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn from_points_contains_all() {
+        let m = Matrix::from_rows(&[vec![0.0, 0.0], vec![1.0, 0.0], vec![0.0, 1.0]]);
+        let s = Sphere::from_points(&m, &[0, 1, 2]);
+        for i in 0..3 {
+            assert!(s.contains(m.row(i)));
+        }
+    }
+
+    #[test]
+    fn disjoint_sphere_bounds() {
+        let a = Sphere::new(vec![0.0, 0.0], 1.0);
+        let b = Sphere::new(vec![5.0, 0.0], 1.0);
+        assert_eq!(a.min_dist(&b), 3.0);
+        assert_eq!(a.max_dist(&b), 7.0);
+    }
+
+    #[test]
+    fn overlapping_min_is_zero() {
+        let a = Sphere::new(vec![0.0], 1.0);
+        let b = Sphere::new(vec![1.0], 1.0);
+        assert_eq!(a.min_dist(&b), 0.0);
+    }
+
+    #[test]
+    fn bounds_bracket_random_pairs() {
+        let mut rng = Pcg32::new(13);
+        for _ in 0..30 {
+            let d = 1 + rng.below(4);
+            let pts_a: Vec<Vec<f64>> = (0..6)
+                .map(|_| (0..d).map(|_| rng.uniform_in(-1.0, 1.0)).collect())
+                .collect();
+            let pts_b: Vec<Vec<f64>> = (0..6)
+                .map(|_| (0..d).map(|_| rng.uniform_in(2.0, 4.0)).collect())
+                .collect();
+            let ma = Matrix::from_rows(&pts_a);
+            let mb = Matrix::from_rows(&pts_b);
+            let sa = Sphere::from_points(&ma, &[0, 1, 2, 3, 4, 5]);
+            let sb = Sphere::from_points(&mb, &[0, 1, 2, 3, 4, 5]);
+            for i in 0..6 {
+                for j in 0..6 {
+                    let dd = dist(ma.row(i), mb.row(j));
+                    assert!(sa.min_dist(&sb) <= dd + 1e-9);
+                    assert!(dd <= sa.max_dist(&sb) + 1e-9);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,402 @@
+//! Far-field (Hermite) and local (Taylor) expansions over a
+//! [`MultiIndexSet`]: moment accumulation (paper's DIRECTM/DIRECTL) and
+//! series evaluation (EVALM/EVALL).
+//!
+//! All functions operate on caller-provided coefficient slices so tree
+//! nodes can own plain `Vec<f64>` and algorithms can reuse scratch
+//! buffers on the hot path.
+
+use crate::geometry::Matrix;
+use crate::multiindex::MultiIndexSet;
+
+use super::univariate::hermite_values_into;
+
+/// Per-dimension table of univariate Hermite values h_n(u_d) for
+/// n = 0..=max_order — the basis for multivariate products
+/// h_α(u) = Π_d h_{α_d}(u_d).
+#[derive(Clone, Debug)]
+pub struct HermiteTable {
+    vals: Vec<f64>,
+    dim: usize,
+    stride: usize,
+}
+
+impl HermiteTable {
+    /// Allocate for `dim` dimensions up to `max_order`.
+    pub fn new(dim: usize, max_order: usize) -> Self {
+        HermiteTable { vals: vec![0.0; dim * (max_order + 1)], dim, stride: max_order + 1 }
+    }
+
+    /// Fill the table for the scaled vector `u` (length `dim`).
+    pub fn fill(&mut self, u: &[f64]) {
+        debug_assert_eq!(u.len(), self.dim);
+        for d in 0..self.dim {
+            hermite_values_into(u[d], &mut self.vals[d * self.stride..(d + 1) * self.stride]);
+        }
+    }
+
+    /// h_n(u_d).
+    #[inline]
+    pub fn get(&self, d: usize, n: u32) -> f64 {
+        self.vals[d * self.stride + n as usize]
+    }
+
+    /// Multivariate product h_α(u) for one multi-index.
+    #[inline]
+    pub fn product(&self, alpha: &[u32]) -> f64 {
+        let mut p = 1.0;
+        for (d, &n) in alpha.iter().enumerate() {
+            p *= self.get(d, n);
+        }
+        p
+    }
+
+    /// Largest order the table holds.
+    pub fn max_order(&self) -> usize {
+        self.stride - 1
+    }
+}
+
+/// Scale and shift a point: out = (x − center)/scale.
+#[inline]
+pub fn scaled_offset(x: &[f64], center: &[f64], scale: f64, out: &mut [f64]) {
+    for i in 0..x.len() {
+        out[i] = (x[i] - center[i]) / scale;
+    }
+}
+
+/// DIRECTM: accumulate far-field (Hermite) moments of the selected
+/// reference rows into `coeffs`:
+///   coeffs[i] += Σ_r w_r · (1/α_i!) · ((x_r − center)/scale)^{α_i}.
+/// `mono_buf` must have `set.len()` slots; `off_buf` `set.dim()` slots.
+pub fn accumulate_farfield(
+    set: &MultiIndexSet,
+    points: &Matrix,
+    rows: &[usize],
+    weights: &[f64],
+    center: &[f64],
+    scale: f64,
+    coeffs: &mut [f64],
+    mono_buf: &mut [f64],
+    off_buf: &mut [f64],
+) {
+    debug_assert_eq!(coeffs.len(), set.len());
+    for &r in rows {
+        scaled_offset(points.row(r), center, scale, off_buf);
+        set.eval_monomials(off_buf, mono_buf);
+        let w = weights[r];
+        for i in 0..set.len() {
+            coeffs[i] += w * set.inv_factorial(i) * mono_buf[i];
+        }
+    }
+}
+
+/// EVALM: evaluate a far-field expansion at query point `xq`:
+///   Σ_i coeffs[i] · h_{α_i}((xq − center)/scale).
+pub fn eval_farfield(
+    set: &MultiIndexSet,
+    coeffs: &[f64],
+    center: &[f64],
+    scale: f64,
+    xq: &[f64],
+    table: &mut HermiteTable,
+    off_buf: &mut [f64],
+) -> f64 {
+    debug_assert_eq!(coeffs.len(), set.len());
+    scaled_offset(xq, center, scale, off_buf);
+    table.fill(off_buf);
+    let mut sum = 0.0;
+    for (i, alpha) in set.iter() {
+        sum += coeffs[i] * table.product(alpha);
+    }
+    sum
+}
+
+/// DIRECTL: accumulate local (Taylor) coefficients about `center` from
+/// the selected reference rows:
+///   coeffs[i] += Σ_r w_r · (1/β_i!) · h_{β_i}((x_r − center)/scale).
+pub fn accumulate_local(
+    set: &MultiIndexSet,
+    points: &Matrix,
+    rows: &[usize],
+    weights: &[f64],
+    center: &[f64],
+    scale: f64,
+    coeffs: &mut [f64],
+    table: &mut HermiteTable,
+    off_buf: &mut [f64],
+) {
+    debug_assert_eq!(coeffs.len(), set.len());
+    for &r in rows {
+        scaled_offset(points.row(r), center, scale, off_buf);
+        table.fill(off_buf);
+        let w = weights[r];
+        for (i, beta) in set.iter() {
+            coeffs[i] += w * set.inv_factorial(i) * table.product(beta);
+        }
+    }
+}
+
+/// EVALM at sub-order `p ≤ set.order()`: evaluate only the coefficients
+/// inside the order-p truncation (Lemma 4 covers exactly this error).
+#[allow(clippy::too_many_arguments)]
+pub fn eval_farfield_truncated(
+    set: &MultiIndexSet,
+    p: usize,
+    coeffs: &[f64],
+    center: &[f64],
+    scale: f64,
+    xq: &[f64],
+    table: &mut HermiteTable,
+    off_buf: &mut [f64],
+) -> f64 {
+    scaled_offset(xq, center, scale, off_buf);
+    table.fill(off_buf);
+    let mut sum = 0.0;
+    match set.order_prefix(p) {
+        // graded layout: the sub-order set is a prefix — branch-free loop
+        Some(n) => {
+            for i in 0..n {
+                sum += coeffs[i] * table.product(set.index(i));
+            }
+        }
+        None => {
+            for (i, alpha) in set.iter() {
+                if set.in_order(i, p) {
+                    sum += coeffs[i] * table.product(alpha);
+                }
+            }
+        }
+    }
+    sum
+}
+
+/// DIRECTL at sub-order `p`: accumulate only order-p coefficients into a
+/// full-size (PLIMIT) coefficient array (higher entries untouched).
+#[allow(clippy::too_many_arguments)]
+pub fn accumulate_local_truncated(
+    set: &MultiIndexSet,
+    p: usize,
+    points: &Matrix,
+    rows: std::ops::Range<usize>,
+    weights: &[f64],
+    center: &[f64],
+    scale: f64,
+    coeffs: &mut [f64],
+    table: &mut HermiteTable,
+    off_buf: &mut [f64],
+) {
+    debug_assert_eq!(coeffs.len(), set.len());
+    let prefix = set.order_prefix(p);
+    for r in rows {
+        scaled_offset(points.row(r), center, scale, off_buf);
+        table.fill(off_buf);
+        let w = weights[r];
+        match prefix {
+            Some(n) => {
+                for i in 0..n {
+                    coeffs[i] += w * set.inv_factorial(i) * table.product(set.index(i));
+                }
+            }
+            None => {
+                for (i, beta) in set.iter() {
+                    if set.in_order(i, p) {
+                        coeffs[i] += w * set.inv_factorial(i) * table.product(beta);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// EVALL: evaluate a local (Taylor) expansion at `xq`:
+///   Σ_i coeffs[i] · ((xq − center)/scale)^{β_i}.
+pub fn eval_local(
+    set: &MultiIndexSet,
+    coeffs: &[f64],
+    center: &[f64],
+    scale: f64,
+    xq: &[f64],
+    mono_buf: &mut [f64],
+    off_buf: &mut [f64],
+) -> f64 {
+    debug_assert_eq!(coeffs.len(), set.len());
+    scaled_offset(xq, center, scale, off_buf);
+    set.eval_monomials(off_buf, mono_buf);
+    let mut sum = 0.0;
+    for i in 0..set.len() {
+        sum += coeffs[i] * mono_buf[i];
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::GaussianKernel;
+    use crate::multiindex::Layout;
+    use crate::util::Pcg32;
+
+    /// Exhaustive Gaussian sum for reference.
+    fn exact_sum(points: &Matrix, rows: &[usize], w: &[f64], xq: &[f64], h: f64) -> f64 {
+        let k = GaussianKernel::new(h);
+        rows.iter().map(|&r| w[r] * k.eval_sq(crate::geometry::sqdist(points.row(r), xq))).sum()
+    }
+
+    fn random_cluster(rng: &mut Pcg32, n: usize, d: usize, center: f64, spread: f64) -> Matrix {
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..d).map(|_| center + spread * rng.uniform_in(-1.0, 1.0)).collect())
+            .collect();
+        Matrix::from_rows(&rows)
+    }
+
+    /// Far-field expansion converges to the exact sum as p grows, for
+    /// both layouts.
+    #[test]
+    fn farfield_converges_to_exact() {
+        let mut rng = Pcg32::new(21);
+        for layout in [Layout::Grid, Layout::Graded] {
+            let d = 2;
+            let h = 0.5;
+            let k = GaussianKernel::new(h);
+            let pts = random_cluster(&mut rng, 20, d, 0.0, 0.1);
+            let w = vec![1.0; 20];
+            let rows: Vec<usize> = (0..20).collect();
+            let center = pts.col_mean();
+            let xq = vec![0.8, -0.3];
+            let exact = exact_sum(&pts, &rows, &w, &xq, h);
+            let mut prev_err = f64::INFINITY;
+            for p in [2usize, 4, 6, 8] {
+                let set = MultiIndexSet::new(layout, d, p);
+                let mut coeffs = vec![0.0; set.len()];
+                let mut mono = vec![0.0; set.len()];
+                let mut off = vec![0.0; d];
+                accumulate_farfield(
+                    &set, &pts, &rows, &w, &center, k.series_scale(), &mut coeffs, &mut mono,
+                    &mut off,
+                );
+                let mut table = HermiteTable::new(d, p);
+                let est = eval_farfield(&set, &coeffs, &center, k.series_scale(), &xq, &mut table, &mut off);
+                let err = (est - exact).abs();
+                assert!(err <= prev_err * 1.5 + 1e-12, "{layout:?} p={p} err={err}");
+                prev_err = err;
+            }
+            assert!(prev_err < 1e-6 * exact.abs().max(1e-30), "{layout:?} final err {prev_err}");
+        }
+    }
+
+    /// Local expansion converges to the exact sum as p grows.
+    #[test]
+    fn local_converges_to_exact() {
+        let mut rng = Pcg32::new(22);
+        for layout in [Layout::Grid, Layout::Graded] {
+            let d = 3;
+            let h = 0.6;
+            let k = GaussianKernel::new(h);
+            let pts = random_cluster(&mut rng, 15, d, 1.0, 0.3);
+            let w: Vec<f64> = (0..15).map(|_| rng.uniform_in(0.5, 1.5)).collect();
+            let rows: Vec<usize> = (0..15).collect();
+            // queries clustered near the origin; expansion center there
+            let qcenter = vec![0.0; d];
+            let xq = vec![0.05, -0.1, 0.08];
+            let exact = exact_sum(&pts, &rows, &w, &xq, h);
+            let mut last = f64::INFINITY;
+            for p in [2usize, 4, 6] {
+                let set = MultiIndexSet::new(layout, d, p);
+                let mut coeffs = vec![0.0; set.len()];
+                let mut table = HermiteTable::new(d, p.max(1));
+                let mut off = vec![0.0; d];
+                accumulate_local(
+                    &set, &pts, &rows, &w, &qcenter, k.series_scale(), &mut coeffs, &mut table,
+                    &mut off,
+                );
+                let mut mono = vec![0.0; set.len()];
+                let est = eval_local(&set, &coeffs, &qcenter, k.series_scale(), &xq, &mut mono, &mut off);
+                last = (est - exact).abs();
+            }
+            assert!(last < 1e-5 * exact.abs().max(1e-30), "{layout:?} err={last}");
+        }
+    }
+
+    /// With p high enough to be exact-ish, far-field and local agree.
+    #[test]
+    fn farfield_and_local_agree() {
+        let mut rng = Pcg32::new(23);
+        let d = 2;
+        let h = 1.0;
+        let k = GaussianKernel::new(h);
+        let pts = random_cluster(&mut rng, 10, d, 0.5, 0.2);
+        let w = vec![1.0; 10];
+        let rows: Vec<usize> = (0..10).collect();
+        let set = MultiIndexSet::new(Layout::Grid, d, 10);
+        let scale = k.series_scale();
+
+        let rcenter = pts.col_mean();
+        let mut a = vec![0.0; set.len()];
+        let mut mono = vec![0.0; set.len()];
+        let mut off = vec![0.0; d];
+        accumulate_farfield(&set, &pts, &rows, &w, &rcenter, scale, &mut a, &mut mono, &mut off);
+
+        let qcenter = vec![0.4, 0.6];
+        let mut b = vec![0.0; set.len()];
+        let mut table = HermiteTable::new(d, 10);
+        accumulate_local(&set, &pts, &rows, &w, &qcenter, scale, &mut b, &mut table, &mut off);
+
+        let xq = vec![0.45, 0.55];
+        let ff = eval_farfield(&set, &a, &rcenter, scale, &xq, &mut table, &mut off);
+        let loc = eval_local(&set, &b, &qcenter, scale, &xq, &mut mono, &mut off);
+        let exact = exact_sum(&pts, &rows, &w, &xq, h);
+        assert!((ff - exact).abs() < 1e-8, "ff={ff} exact={exact}");
+        assert!((loc - exact).abs() < 1e-8, "loc={loc} exact={exact}");
+    }
+
+    /// Weights scale the expansions linearly.
+    #[test]
+    fn linear_in_weights() {
+        let mut rng = Pcg32::new(24);
+        let d = 2;
+        let pts = random_cluster(&mut rng, 8, d, 0.0, 0.2);
+        let rows: Vec<usize> = (0..8).collect();
+        let k = GaussianKernel::new(0.7);
+        let set = MultiIndexSet::new(Layout::Graded, d, 5);
+        let center = vec![0.0; d];
+        let mut mono = vec![0.0; set.len()];
+        let mut off = vec![0.0; d];
+
+        let w1 = vec![1.0; 8];
+        let w3 = vec![3.0; 8];
+        let mut c1 = vec![0.0; set.len()];
+        let mut c3 = vec![0.0; set.len()];
+        accumulate_farfield(&set, &pts, &rows, &w1, &center, k.series_scale(), &mut c1, &mut mono, &mut off);
+        accumulate_farfield(&set, &pts, &rows, &w3, &center, k.series_scale(), &mut c3, &mut mono, &mut off);
+        for i in 0..set.len() {
+            assert!((c3[i] - 3.0 * c1[i]).abs() < 1e-12 * c1[i].abs().max(1.0));
+        }
+    }
+
+    /// Zeroth coefficient of the far field is exactly W_R (the monopole).
+    #[test]
+    fn farfield_monopole_is_total_weight() {
+        let mut rng = Pcg32::new(25);
+        let pts = random_cluster(&mut rng, 12, 3, 0.5, 0.4);
+        let rows: Vec<usize> = (0..12).collect();
+        let w: Vec<f64> = (0..12).map(|_| rng.uniform_in(0.1, 2.0)).collect();
+        let set = MultiIndexSet::new(Layout::Graded, 3, 3);
+        let mut c = vec![0.0; set.len()];
+        let mut mono = vec![0.0; set.len()];
+        let mut off = vec![0.0; 3];
+        accumulate_farfield(&set, &pts, &rows, &w, &pts.col_mean(), 1.0, &mut c, &mut mono, &mut off);
+        let total: f64 = w.iter().sum();
+        assert!((c[0] - total).abs() < 1e-12 * total);
+    }
+
+    #[test]
+    fn hermite_table_product() {
+        let mut t = HermiteTable::new(2, 3);
+        t.fill(&[0.5, -0.7]);
+        let u0 = crate::hermite::hermite_values(0.5, 3);
+        let u1 = crate::hermite::hermite_values(-0.7, 3);
+        assert!((t.product(&[2, 1]) - u0[2] * u1[1]).abs() < 1e-15);
+        assert_eq!(t.max_order(), 3);
+    }
+}

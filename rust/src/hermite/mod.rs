@@ -1,0 +1,24 @@
+//! Hermite-function series machinery: univariate Hermite functions,
+//! far-field (Hermite) and local (Taylor) expansions of the Gaussian
+//! kernel sum over either multi-index layout, and the three translation
+//! operators H2H, H2L and L2L (paper Lemmas 1–3).
+//!
+//! Conventions (matching the paper):
+//! * series scale c = √(2h²); every expansion argument is (x − center)/c;
+//! * Hermite functions hₙ(t) = e^(−t²) Hₙ(t), with the generating
+//!   identity e^(−(t−s)²) = Σₙ (sⁿ/n!) hₙ(t) the expansions rest on;
+//! * far-field about x_R:  G(x_q) = Σ_α A_α h_α((x_q−x_R)/c),
+//!   A_α = Σ_r (w_r/α!) ((x_r−x_R)/c)^α              (`accumulate_farfield`)
+//! * local about x_Q:      G(x_q) = Σ_β B_β ((x_q−x_Q)/c)^β,
+//!   B_β = Σ_r (w_r/β!) h_β((x_r−x_Q)/c)             (`accumulate_local`)
+
+pub mod univariate;
+pub mod expansion;
+pub mod translate;
+
+pub use expansion::{
+    accumulate_farfield, accumulate_local, accumulate_local_truncated, eval_farfield,
+    eval_farfield_truncated, eval_local, HermiteTable,
+};
+pub use translate::{h2h, h2l, h2l_truncated, l2l, PairTable};
+pub use univariate::hermite_values;

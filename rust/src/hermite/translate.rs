@@ -1,0 +1,487 @@
+//! Translation operators (paper Lemmas 1–3):
+//!
+//! * **H2H** — shift far-field (Hermite) moments from a child center to
+//!   its parent's center. Exact on downward-closed index sets: the new
+//!   A_γ depends only on A'_α with α ≤ γ, all of which are in the set.
+//! * **L2L** — re-center a local (Taylor) polynomial onto a child
+//!   center. Also exact: recentring a truncated polynomial over a
+//!   downward-closed set is pure binomial expansion.
+//! * **H2L** — convert a (truncated) far-field expansion into a local
+//!   expansion about a query center; inherently approximate, with the
+//!   truncation error bounded by Lemma 6 / its O(pᴰ) analogue.
+//!
+//! Every operator is driven by a [`PairTable`], which precomputes the
+//! position of α+μ for each in-set pair so the inner loops are pure
+//! array arithmetic (no hashing on the hot path).
+
+use crate::multiindex::{add, MultiIndexSet};
+
+use super::expansion::{scaled_offset, HermiteTable};
+
+/// Precomputed pairwise structure over one [`MultiIndexSet`]:
+/// `sum_pos[a*len + m]` = position of α_a + μ_m in the set, or
+/// `u32::MAX` when the sum falls outside the truncation.
+#[derive(Clone, Debug)]
+pub struct PairTable {
+    len: usize,
+    sum_pos: Vec<u32>,
+    /// binomial(α+μ, α) = (α+μ)!/(α!·μ!) for each pair (used by L2L).
+    binom: Vec<f64>,
+}
+
+const NONE: u32 = u32::MAX;
+
+impl PairTable {
+    pub fn new(set: &MultiIndexSet) -> Self {
+        let len = set.len();
+        let mut sum_pos = vec![NONE; len * len];
+        let mut binom = vec![0.0; len * len];
+        for (a, alpha) in set.iter() {
+            for (m, mu) in set.iter() {
+                let s = add(alpha, mu);
+                if let Some(p) = set.position(&s) {
+                    sum_pos[a * len + m] = p as u32;
+                    // (α+μ)!/(α!·μ!) = 1/( invfac(α+μ)⁻¹ … ) computed
+                    // from the set's inverse factorials.
+                    binom[a * len + m] =
+                        set.inv_factorial(a) * set.inv_factorial(m) / set.inv_factorial(p);
+                }
+            }
+        }
+        PairTable { len, sum_pos, binom }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Position of α_a + μ_m, if inside the set.
+    #[inline]
+    pub fn sum(&self, a: usize, m: usize) -> Option<usize> {
+        let v = self.sum_pos[a * self.len + m];
+        if v == NONE {
+            None
+        } else {
+            Some(v as usize)
+        }
+    }
+
+    #[inline]
+    fn binom(&self, a: usize, m: usize) -> f64 {
+        self.binom[a * self.len + m]
+    }
+}
+
+/// **H2H** (Lemma 2): add to `parent_coeffs` (far field about
+/// `new_center`) the translation of `child_coeffs` (far field about
+/// `old_center`):
+///   A_γ += Σ_{α≤γ} A'_α · dx^{γ−α} / (γ−α)!,  dx = (old−new)/scale.
+pub fn h2h(
+    set: &MultiIndexSet,
+    pairs: &PairTable,
+    child_coeffs: &[f64],
+    old_center: &[f64],
+    new_center: &[f64],
+    scale: f64,
+    parent_coeffs: &mut [f64],
+    mono_buf: &mut [f64],
+    off_buf: &mut [f64],
+) {
+    debug_assert_eq!(child_coeffs.len(), set.len());
+    debug_assert_eq!(parent_coeffs.len(), set.len());
+    for i in 0..off_buf.len() {
+        off_buf[i] = (old_center[i] - new_center[i]) / scale;
+    }
+    set.eval_monomials(off_buf, mono_buf);
+    // γ = α + μ: A[γ] += A'[α] · dx^μ / μ!
+    for a in 0..set.len() {
+        let ca = child_coeffs[a];
+        if ca == 0.0 {
+            continue;
+        }
+        for m in 0..set.len() {
+            if let Some(g) = pairs.sum(a, m) {
+                parent_coeffs[g] += ca * mono_buf[m] * set.inv_factorial(m);
+            }
+        }
+    }
+}
+
+/// **L2L** (Lemma 3): add to `child_coeffs` (local about `new_center`)
+/// the re-centering of `parent_coeffs` (local about `old_center`):
+///   B'_α += Σ_{β≥α} (β!/(α!(β−α)!)) · B_β · dx^{β−α},
+///   dx = (new−old)/scale.   (β = α+μ over in-set pairs.)
+pub fn l2l(
+    set: &MultiIndexSet,
+    pairs: &PairTable,
+    parent_coeffs: &[f64],
+    old_center: &[f64],
+    new_center: &[f64],
+    scale: f64,
+    child_coeffs: &mut [f64],
+    mono_buf: &mut [f64],
+    off_buf: &mut [f64],
+) {
+    debug_assert_eq!(parent_coeffs.len(), set.len());
+    debug_assert_eq!(child_coeffs.len(), set.len());
+    for i in 0..off_buf.len() {
+        off_buf[i] = (new_center[i] - old_center[i]) / scale;
+    }
+    set.eval_monomials(off_buf, mono_buf);
+    for a in 0..set.len() {
+        let mut acc = 0.0;
+        for m in 0..set.len() {
+            if let Some(b) = pairs.sum(a, m) {
+                acc += pairs.binom(a, m) * parent_coeffs[b] * mono_buf[m];
+            }
+        }
+        child_coeffs[a] += acc;
+    }
+}
+
+/// **H2L** (Lemma 1): convert far-field moments about `r_center` into
+/// local coefficients about `q_center`:
+///   B_β += (1/β!) Σ_α (−1)^{|α|} A_α h_{α+β}( (x_R − x_Q)/scale ).
+/// The Hermite table must hold orders up to 2(p−1); it is refilled here.
+pub fn h2l(
+    set: &MultiIndexSet,
+    far_coeffs: &[f64],
+    r_center: &[f64],
+    q_center: &[f64],
+    scale: f64,
+    local_coeffs: &mut [f64],
+    table: &mut HermiteTable,
+    off_buf: &mut [f64],
+) {
+    debug_assert_eq!(far_coeffs.len(), set.len());
+    debug_assert_eq!(local_coeffs.len(), set.len());
+    debug_assert!(table.max_order() >= 2 * (set.order() - 1));
+    scaled_offset(r_center, q_center, scale, off_buf);
+    table.fill(off_buf);
+    let dim = set.dim();
+    let mut sum_idx = vec![0u32; dim];
+    for (b, beta) in set.iter() {
+        let mut acc = 0.0;
+        for (a, alpha) in set.iter() {
+            let ca = far_coeffs[a];
+            if ca == 0.0 {
+                continue;
+            }
+            let mut prod = 1.0;
+            for d in 0..dim {
+                sum_idx[d] = alpha[d] + beta[d];
+                prod *= table.get(d, sum_idx[d]);
+            }
+            let sign = if set.degree(a) % 2 == 0 { 1.0 } else { -1.0 };
+            acc += sign * ca * prod;
+        }
+        local_coeffs[b] += set.inv_factorial(b) * acc;
+    }
+}
+
+/// **H2L** at sub-order `p ≤ set.order()`: convert only the order-p part
+/// of the far field into order-p local coefficients (Lemma 6 bounds the
+/// error of exactly this truncation). Coefficient arrays stay full-size.
+#[allow(clippy::too_many_arguments)]
+pub fn h2l_truncated(
+    set: &MultiIndexSet,
+    p: usize,
+    far_coeffs: &[f64],
+    r_center: &[f64],
+    q_center: &[f64],
+    scale: f64,
+    local_coeffs: &mut [f64],
+    table: &mut HermiteTable,
+    off_buf: &mut [f64],
+) {
+    debug_assert_eq!(far_coeffs.len(), set.len());
+    debug_assert_eq!(local_coeffs.len(), set.len());
+    debug_assert!(table.max_order() >= 2 * (set.order() - 1));
+    scaled_offset(r_center, q_center, scale, off_buf);
+    table.fill(off_buf);
+    let dim = set.dim();
+    // graded layout: sub-order set is an enumeration prefix → tight loops
+    let limit = set.order_prefix(p).unwrap_or(set.len());
+    for b in 0..limit {
+        if !set.in_order(b, p) {
+            continue; // only possible on the grid layout
+        }
+        let beta = set.index(b);
+        let mut acc = 0.0;
+        for a in 0..limit {
+            if !set.in_order(a, p) {
+                continue;
+            }
+            let ca = far_coeffs[a];
+            if ca == 0.0 {
+                continue;
+            }
+            let alpha = set.index(a);
+            let mut prod = 1.0;
+            for d in 0..dim {
+                prod *= table.get(d, alpha[d] + beta[d]);
+            }
+            let sign = if set.degree(a) % 2 == 0 { 1.0 } else { -1.0 };
+            acc += sign * ca * prod;
+        }
+        local_coeffs[b] += set.inv_factorial(b) * acc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::Matrix;
+    use crate::hermite::expansion::{
+        accumulate_farfield, accumulate_local, eval_local,
+    };
+    use crate::kernel::GaussianKernel;
+    use crate::multiindex::Layout;
+    use crate::util::Pcg32;
+
+    fn cluster(rng: &mut Pcg32, n: usize, d: usize, c: f64, s: f64) -> Matrix {
+        Matrix::from_rows(
+            &(0..n)
+                .map(|_| (0..d).map(|_| c + s * rng.uniform_in(-1.0, 1.0)).collect())
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    fn exact(points: &Matrix, w: &[f64], xq: &[f64], h: f64) -> f64 {
+        let k = GaussianKernel::new(h);
+        (0..points.rows())
+            .map(|r| w[r] * k.eval_sq(crate::geometry::sqdist(points.row(r), xq)))
+            .sum()
+    }
+
+    /// H2H must be EXACT: moments accumulated at a child center then
+    /// translated to the parent center equal moments accumulated
+    /// directly at the parent center.
+    #[test]
+    fn h2h_exact_on_downward_closed_sets() {
+        let mut rng = Pcg32::new(31);
+        for layout in [Layout::Grid, Layout::Graded] {
+            for (d, p) in [(1usize, 6usize), (2, 5), (3, 3)] {
+                let pts = cluster(&mut rng, 12, d, 0.3, 0.2);
+                let w: Vec<f64> = (0..12).map(|_| rng.uniform_in(0.2, 1.0)).collect();
+                let rows: Vec<usize> = (0..12).collect();
+                let set = MultiIndexSet::new(layout, d, p);
+                let pairs = PairTable::new(&set);
+                let scale = 0.9;
+                let child_c: Vec<f64> = (0..d).map(|_| rng.uniform_in(0.2, 0.4)).collect();
+                let parent_c: Vec<f64> = (0..d).map(|_| rng.uniform_in(-0.1, 0.1)).collect();
+
+                let mut mono = vec![0.0; set.len()];
+                let mut off = vec![0.0; d];
+                let mut child = vec![0.0; set.len()];
+                accumulate_farfield(&set, &pts, &rows, &w, &child_c, scale, &mut child, &mut mono, &mut off);
+
+                let mut translated = vec![0.0; set.len()];
+                h2h(&set, &pairs, &child, &child_c, &parent_c, scale, &mut translated, &mut mono, &mut off);
+
+                let mut direct = vec![0.0; set.len()];
+                accumulate_farfield(&set, &pts, &rows, &w, &parent_c, scale, &mut direct, &mut mono, &mut off);
+
+                for i in 0..set.len() {
+                    assert!(
+                        (translated[i] - direct[i]).abs() < 1e-10 * direct[i].abs().max(1.0),
+                        "{layout:?} D={d} p={p} i={i}: {} vs {}",
+                        translated[i],
+                        direct[i]
+                    );
+                }
+            }
+        }
+    }
+
+    /// L2L must exactly re-center the truncated polynomial: evaluation
+    /// before and after agrees at any point.
+    #[test]
+    fn l2l_exactly_recenters_polynomial() {
+        let mut rng = Pcg32::new(32);
+        for layout in [Layout::Grid, Layout::Graded] {
+            let d = 2;
+            let p = 5;
+            let set = MultiIndexSet::new(layout, d, p);
+            let pairs = PairTable::new(&set);
+            let scale = 1.3;
+            // arbitrary coefficients — any polynomial, not just a kernel sum
+            let coeffs: Vec<f64> = (0..set.len()).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            let old_c = vec![0.5, -0.2];
+            let new_c = vec![0.1, 0.3];
+            let mut shifted = vec![0.0; set.len()];
+            let mut mono = vec![0.0; set.len()];
+            let mut off = vec![0.0; d];
+            l2l(&set, &pairs, &coeffs, &old_c, &new_c, scale, &mut shifted, &mut mono, &mut off);
+            for _ in 0..10 {
+                let xq: Vec<f64> = (0..d).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+                let v_old = eval_local(&set, &coeffs, &old_c, scale, &xq, &mut mono, &mut off);
+                let v_new = eval_local(&set, &shifted, &new_c, scale, &xq, &mut mono, &mut off);
+                assert!(
+                    (v_old - v_new).abs() < 1e-10 * v_old.abs().max(1.0),
+                    "{layout:?}: {v_old} vs {v_new}"
+                );
+            }
+        }
+    }
+
+    /// L2L accumulates (+=): translating onto non-zero target adds.
+    #[test]
+    fn l2l_accumulates() {
+        let set = MultiIndexSet::new(Layout::Graded, 2, 3);
+        let pairs = PairTable::new(&set);
+        let coeffs = vec![1.0; set.len()];
+        let mut out1 = vec![0.0; set.len()];
+        let mut mono = vec![0.0; set.len()];
+        let mut off = vec![0.0; 2];
+        let oc = [0.0, 0.0];
+        let nc = [0.5, 0.5];
+        l2l(&set, &pairs, &coeffs, &oc, &nc, 1.0, &mut out1, &mut mono, &mut off);
+        let mut out2 = out1.clone();
+        l2l(&set, &pairs, &coeffs, &oc, &nc, 1.0, &mut out2, &mut mono, &mut off);
+        for i in 0..set.len() {
+            assert!((out2[i] - 2.0 * out1[i]).abs() < 1e-12 * out1[i].abs().max(1.0));
+        }
+    }
+
+    /// H2L of an (effectively untruncated) far field approximates the
+    /// direct local accumulation; the resulting local expansion
+    /// approximates the exact kernel sum for well-separated nodes.
+    #[test]
+    fn h2l_approximates_direct_local() {
+        let mut rng = Pcg32::new(33);
+        let d = 2;
+        let h = 1.0;
+        let k = GaussianKernel::new(h);
+        let scale = k.series_scale();
+        let p = 10;
+        // reference cluster near (1.2, 1.2), queries near origin
+        let pts = cluster(&mut rng, 15, d, 1.2, 0.1);
+        let w = vec![1.0; 15];
+        let rows: Vec<usize> = (0..15).collect();
+        let r_c = pts.col_mean();
+        let q_c = vec![0.0, 0.0];
+
+        let set = MultiIndexSet::new(Layout::Grid, d, p);
+        let mut mono = vec![0.0; set.len()];
+        let mut off = vec![0.0; d];
+        let mut far = vec![0.0; set.len()];
+        accumulate_farfield(&set, &pts, &rows, &w, &r_c, scale, &mut far, &mut mono, &mut off);
+
+        let mut table = HermiteTable::new(d, 2 * p);
+        let mut local_via_h2l = vec![0.0; set.len()];
+        h2l(&set, &far, &r_c, &q_c, scale, &mut local_via_h2l, &mut table, &mut off);
+
+        let xq = vec![0.05, -0.04];
+        let est = eval_local(&set, &local_via_h2l, &q_c, scale, &xq, &mut mono, &mut off);
+        let truth = exact(&pts, &w, &xq, h);
+        assert!(
+            (est - truth).abs() < 1e-6 * truth.max(1e-30),
+            "h2l est={est} exact={truth}"
+        );
+    }
+
+    /// The full FMM chain: accumulate far field at child, H2H to parent,
+    /// H2L to query node, L2L to query child, evaluate — approximates
+    /// the exact sum.
+    #[test]
+    fn full_translation_chain() {
+        let mut rng = Pcg32::new(34);
+        let d = 2;
+        let h = 0.8;
+        let k = GaussianKernel::new(h);
+        let scale = k.series_scale();
+        let p = 8;
+        let set = MultiIndexSet::new(Layout::Graded, d, p);
+        let pairs = PairTable::new(&set);
+
+        let pts = cluster(&mut rng, 20, d, 1.5, 0.1);
+        let w: Vec<f64> = (0..20).map(|_| rng.uniform_in(0.5, 1.0)).collect();
+        let rows: Vec<usize> = (0..20).collect();
+
+        let r_child_c = pts.col_mean();
+        let r_parent_c: Vec<f64> = r_child_c.iter().map(|v| v + 0.05).collect();
+        let q_parent_c = vec![0.0, 0.0];
+        let q_child_c = vec![0.08, -0.05];
+
+        let mut mono = vec![0.0; set.len()];
+        let mut off = vec![0.0; d];
+        let mut far_child = vec![0.0; set.len()];
+        accumulate_farfield(&set, &pts, &rows, &w, &r_child_c, scale, &mut far_child, &mut mono, &mut off);
+        let mut far_parent = vec![0.0; set.len()];
+        h2h(&set, &pairs, &far_child, &r_child_c, &r_parent_c, scale, &mut far_parent, &mut mono, &mut off);
+
+        let mut table = HermiteTable::new(d, 2 * p);
+        let mut local_parent = vec![0.0; set.len()];
+        h2l(&set, &far_parent, &r_parent_c, &q_parent_c, scale, &mut local_parent, &mut table, &mut off);
+        let mut local_child = vec![0.0; set.len()];
+        l2l(&set, &pairs, &local_parent, &q_parent_c, &q_child_c, scale, &mut local_child, &mut mono, &mut off);
+
+        let xq = vec![0.1, -0.02];
+        let est = eval_local(&set, &local_child, &q_child_c, scale, &xq, &mut mono, &mut off);
+        let truth = exact(&pts, &w, &xq, h);
+        let rel = (est - truth).abs() / truth.max(1e-300);
+        assert!(rel < 1e-4, "chain est={est} exact={truth} rel={rel}");
+    }
+
+    /// Far-field evaluated directly vs via H2L+EVALL agree for the same
+    /// truncation (consistency between EVALM and the local conversion).
+    #[test]
+    fn h2l_consistent_with_direct_local_coefficients() {
+        let mut rng = Pcg32::new(35);
+        let d = 1;
+        let h = 1.0;
+        let scale = GaussianKernel::new(h).series_scale();
+        let p = 12;
+        let set = MultiIndexSet::new(Layout::Grid, d, p);
+        let pts = cluster(&mut rng, 10, d, 2.0, 0.05);
+        let w = vec![1.0; 10];
+        let rows: Vec<usize> = (0..10).collect();
+        let r_c = pts.col_mean();
+        let q_c = vec![0.0];
+
+        let mut mono = vec![0.0; set.len()];
+        let mut off = vec![0.0; d];
+        let mut far = vec![0.0; set.len()];
+        accumulate_farfield(&set, &pts, &rows, &w, &r_c, scale, &mut far, &mut mono, &mut off);
+        let mut table = HermiteTable::new(d, 2 * p);
+        let mut via_h2l = vec![0.0; set.len()];
+        h2l(&set, &far, &r_c, &q_c, scale, &mut via_h2l, &mut table, &mut off);
+        let mut direct = vec![0.0; set.len()];
+        accumulate_local(&set, &pts, &rows, &w, &q_c, scale, &mut direct, &mut table, &mut off);
+        // low-order coefficients must agree closely (truncation affects
+        // mainly the high orders)
+        for i in 0..4 {
+            assert!(
+                (via_h2l[i] - direct[i]).abs() < 1e-6 * direct[i].abs().max(1e-12),
+                "i={i}: {} vs {}",
+                via_h2l[i],
+                direct[i]
+            );
+        }
+    }
+
+    #[test]
+    fn pair_table_sums_and_binomials() {
+        let set = MultiIndexSet::new(Layout::Graded, 2, 3);
+        let pairs = PairTable::new(&set);
+        let a = set.position(&[1, 0]).unwrap();
+        let m = set.position(&[0, 1]).unwrap();
+        let s = pairs.sum(a, m).unwrap();
+        assert_eq!(set.index(s), &[1, 1]);
+        // (1,1)!/( (1,0)!·(0,1)! ) = 1 → binom = C(α+μ, α) = 1·1? No:
+        // (α+μ)!/(α!μ!) = (1!·1!)/(1·1) = 1
+        let b = pairs.binom(a, m);
+        assert!((b - 1.0).abs() < 1e-12);
+        // out-of-set sum: (2,0)+(0,2) has degree 4 ≥ p=3
+        let a2 = set.position(&[2, 0]).unwrap();
+        let m2 = set.position(&[0, 2]).unwrap();
+        assert!(pairs.sum(a2, m2).is_none());
+    }
+}

@@ -1,0 +1,132 @@
+//! Univariate Hermite functions hₙ(t) = e^(−t²)·Hₙ(t), where Hₙ are the
+//! physicists' Hermite polynomials (Rodrigues form). Computed by the
+//! three-term recurrence
+//!     h₀(t) = e^(−t²),    h₁(t) = 2t·e^(−t²),
+//!     hₙ₊₁(t) = 2t·hₙ(t) − 2n·hₙ₋₁(t),
+//! which is numerically stable for the small orders (≤ 16) used here.
+
+/// Fill `out[n] = hₙ(t)` for n = 0..out.len().
+pub fn hermite_values_into(t: f64, out: &mut [f64]) {
+    if out.is_empty() {
+        return;
+    }
+    let e = (-t * t).exp();
+    out[0] = e;
+    if out.len() == 1 {
+        return;
+    }
+    out[1] = 2.0 * t * e;
+    for n in 1..out.len() - 1 {
+        out[n + 1] = 2.0 * t * out[n] - 2.0 * n as f64 * out[n - 1];
+    }
+}
+
+/// Allocating variant: hₙ(t) for n = 0..=max_order.
+pub fn hermite_values(t: f64, max_order: usize) -> Vec<f64> {
+    let mut out = vec![0.0; max_order + 1];
+    hermite_values_into(t, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn h_direct(n: usize, t: f64) -> f64 {
+        // Hermite polynomials by explicit small-order formulas.
+        let h = match n {
+            0 => 1.0,
+            1 => 2.0 * t,
+            2 => 4.0 * t * t - 2.0,
+            3 => 8.0 * t.powi(3) - 12.0 * t,
+            4 => 16.0 * t.powi(4) - 48.0 * t * t + 12.0,
+            5 => 32.0 * t.powi(5) - 160.0 * t.powi(3) + 120.0 * t,
+            _ => unreachable!(),
+        };
+        (-t * t).exp() * h
+    }
+
+    #[test]
+    fn matches_explicit_polynomials() {
+        for &t in &[-2.0, -0.5, 0.0, 0.3, 1.7] {
+            let vals = hermite_values(t, 5);
+            for n in 0..=5 {
+                let d = h_direct(n, t);
+                assert!(
+                    (vals[n] - d).abs() < 1e-10 * d.abs().max(1.0),
+                    "h_{n}({t}): {} vs {d}",
+                    vals[n]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parity() {
+        // hₙ(−t) = (−1)ⁿ hₙ(t)
+        let a = hermite_values(0.8, 8);
+        let b = hermite_values(-0.8, 8);
+        for n in 0..=8 {
+            let sign = if n % 2 == 0 { 1.0 } else { -1.0 };
+            assert!((a[n] - sign * b[n]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn generating_function_identity() {
+        // e^(−(t−s)²) = Σₙ (sⁿ/n!) hₙ(t) — the identity the whole
+        // expansion machinery is built on. Converges fast for |s| < 1.
+        for &(t, s) in &[(0.7, 0.3), (-1.2, 0.5), (2.0, -0.4), (0.0, 0.9)] {
+            let vals = hermite_values(t, 40);
+            let mut sum = 0.0;
+            let mut spow_over_fact = 1.0;
+            for (n, v) in vals.iter().enumerate() {
+                sum += spow_over_fact * v;
+                spow_over_fact *= s / (n + 1) as f64;
+            }
+            let exact = (-(t - s) * (t - s)).exp();
+            assert!((sum - exact).abs() < 1e-10, "t={t} s={s}: {sum} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn derivative_identity() {
+        // h′ₙ(t) = −hₙ₊₁(t) (used by the H2L derivation); check by a
+        // central finite difference.
+        let t = 0.6;
+        let eps = 1e-6;
+        let up = hermite_values(t + eps, 6);
+        let dn = hermite_values(t - eps, 6);
+        let at = hermite_values(t, 7);
+        for n in 0..=5 {
+            let fd = (up[n] - dn[n]) / (2.0 * eps);
+            assert!((fd + at[n + 1]).abs() < 1e-5, "n={n}: {fd} vs {}", -at[n + 1]);
+        }
+    }
+
+    #[test]
+    fn zero_order_only() {
+        let v = hermite_values(1.5, 0);
+        assert_eq!(v.len(), 1);
+        assert!((v[0] - (-2.25f64).exp()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn cramer_bound_holds() {
+        // |hₙ(t)| ≤ K·2^(n/2)·√(n!)·e^(−t²/2), K ≈ 1.086435 — relied on
+        // by the Lemma 4–6 error bounds.
+        let k = 1.086435;
+        for &t in &[-3.0, -1.0, 0.0, 0.5, 2.0, 4.0] {
+            let vals = hermite_values(t, 16);
+            let mut fact = 1.0f64;
+            for (n, v) in vals.iter().enumerate() {
+                if n > 0 {
+                    fact *= n as f64;
+                }
+                let bound = k * 2f64.powf(n as f64 / 2.0) * fact.sqrt()
+                    * (-t * t / 2.0).exp();
+                assert!(v.abs() <= bound * (1.0 + 1e-12), "n={n} t={t}");
+            }
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! Bandwidth utilities: the Silverman rule-of-thumb pilot, and the
+//! paper's 10⁻³h*…10³h* sweep grid.
+
+use crate::geometry::Matrix;
+use crate::util::stats;
+
+/// Silverman's rule-of-thumb bandwidth for D-dim Gaussian KDE:
+/// h = σ̄ · (4/((D+2)·n))^(1/(D+4)), with σ̄ the average per-dimension
+/// standard deviation (Silverman 1986, eq. 4.14 generalization).
+pub fn silverman(data: &Matrix) -> f64 {
+    let d = data.cols() as f64;
+    let n = data.rows() as f64;
+    let sigma = stats::mean(&data.col_std());
+    let sigma = if sigma > 0.0 { sigma } else { 1.0 };
+    sigma * (4.0 / ((d + 2.0) * n)).powf(1.0 / (d + 4.0))
+}
+
+/// The paper's per-table bandwidth multipliers 10⁻³ … 10³.
+pub const PAPER_MULTIPLIERS: [f64; 7] =
+    [1e-3, 1e-2, 1e-1, 1.0, 1e1, 1e2, 1e3];
+
+/// Log-spaced bandwidth grid of `count` points spanning
+/// [lo_mult·h_star, hi_mult·h_star].
+pub fn log_grid(h_star: f64, lo_mult: f64, hi_mult: f64, count: usize) -> Vec<f64> {
+    assert!(count >= 2 && lo_mult > 0.0 && hi_mult > lo_mult);
+    let l0 = (h_star * lo_mult).ln();
+    let l1 = (h_star * hi_mult).ln();
+    (0..count)
+        .map(|i| (l0 + (l1 - l0) * i as f64 / (count - 1) as f64).exp())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn silverman_1d_gaussian_known_value() {
+        // for σ=1, n=1000, D=1: h = (4/3000)^(1/5) ≈ 0.2661
+        let mut rng = Pcg32::new(131);
+        let data =
+            Matrix::from_rows(&(0..1000).map(|_| vec![rng.normal()]).collect::<Vec<_>>());
+        let h = silverman(&data);
+        assert!((h - 0.266).abs() < 0.03, "h={h}");
+    }
+
+    #[test]
+    fn shrinks_with_n_grows_with_spread() {
+        let mut rng = Pcg32::new(132);
+        let small =
+            Matrix::from_rows(&(0..100).map(|_| vec![rng.normal()]).collect::<Vec<_>>());
+        let big =
+            Matrix::from_rows(&(0..10000).map(|_| vec![rng.normal()]).collect::<Vec<_>>());
+        assert!(silverman(&big) < silverman(&small));
+        let wide = Matrix::from_rows(
+            &(0..100).map(|_| vec![5.0 * rng.normal()]).collect::<Vec<_>>(),
+        );
+        assert!(silverman(&wide) > silverman(&small));
+    }
+
+    #[test]
+    fn degenerate_constant_data() {
+        let data = Matrix::from_rows(&vec![vec![3.0, 3.0]; 10]);
+        let h = silverman(&data);
+        assert!(h > 0.0 && h.is_finite());
+    }
+
+    #[test]
+    fn log_grid_endpoints_and_monotone() {
+        let g = log_grid(0.5, 1e-3, 1e3, 7);
+        assert_eq!(g.len(), 7);
+        assert!((g[0] - 0.5e-3).abs() < 1e-12);
+        assert!((g[6] - 0.5e3).abs() < 1e-9);
+        for i in 1..7 {
+            assert!(g[i] > g[i - 1]);
+        }
+        // paper multipliers: factor 10 between consecutive points
+        assert!((g[1] / g[0] - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,144 @@
+//! Least-squares cross-validation (Silverman 1986) — the paper's
+//! criterion for the optimal bandwidth h*.
+//!
+//! LSCV(h) = ∫f̂² − (2/n)·Σ_i f̂₋ᵢ(x_i), minimized over h. Both terms
+//! reduce to Gaussian summations — which is exactly why the paper
+//! stresses that bandwidth selection needs fast summation *across a
+//! whole range of bandwidths*:
+//!
+//! * ∫f̂² = (2π·2h²)^(−D/2)/n² · S_{√2·h}   (Gaussian convolution identity),
+//! * Σ_i f̂₋ᵢ(x_i) = (2πh²)^(−D/2)/(n−1) · (S_h − n),
+//!
+//! with S_h = Σ_i Σ_j K_h(‖x_i−x_j‖) the self-included summation both
+//! engines already compute.
+
+use crate::algo::{AlgoError, GaussSum, GaussSumProblem};
+use crate::geometry::Matrix;
+use crate::kernel::GaussianKernel;
+
+/// The LSCV score for one bandwidth (lower is better).
+pub fn lscv_score(
+    data: &Matrix,
+    h: f64,
+    epsilon: f64,
+    engine: &dyn GaussSum,
+) -> Result<f64, AlgoError> {
+    let n = data.rows() as f64;
+    let d = data.cols();
+    // term 1: ∫ f̂² via the √2·h summation
+    let h2 = std::f64::consts::SQRT_2 * h;
+    let p2 = GaussSumProblem::kde(data, h2, epsilon);
+    let s2: f64 = engine.run(&p2)?.sums.iter().sum();
+    let term1 = GaussianKernel::new(h2).norm_const(d) * s2 / (n * n);
+    // term 2: leave-one-out mean density via the h summation
+    let p1 = GaussSumProblem::kde(data, h, epsilon);
+    let s1: f64 = engine.run(&p1)?.sums.iter().sum();
+    let term2 = 2.0 * GaussianKernel::new(h).norm_const(d) * (s1 - n) / (n * (n - 1.0));
+    Ok(term1 - term2)
+}
+
+/// Evaluate LSCV over a bandwidth grid and return (best h, all scores).
+pub fn select_bandwidth(
+    data: &Matrix,
+    grid: &[f64],
+    epsilon: f64,
+    engine: &dyn GaussSum,
+) -> Result<(f64, Vec<f64>), AlgoError> {
+    assert!(!grid.is_empty());
+    let mut scores = Vec::with_capacity(grid.len());
+    let mut best = (grid[0], f64::INFINITY);
+    for &h in grid {
+        let s = lscv_score(data, h, epsilon, engine)?;
+        if s < best.1 {
+            best = (h, s);
+        }
+        scores.push(s);
+    }
+    Ok((best.0, scores))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::naive::Naive;
+    use crate::kde::bandwidth::{log_grid, silverman};
+    use crate::util::Pcg32;
+
+    fn gaussian_1d(n: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg32::new(seed);
+        Matrix::from_rows(&(0..n).map(|_| vec![rng.normal()]).collect::<Vec<_>>())
+    }
+
+    /// LSCV must pick a bandwidth near the Silverman pilot for Gaussian
+    /// data (where the pilot is near-optimal), rejecting extremes.
+    #[test]
+    fn selects_reasonable_bandwidth_for_gaussian_data() {
+        let data = gaussian_1d(400, 141);
+        let pilot = silverman(&data);
+        let grid = log_grid(pilot, 1e-2, 1e2, 13);
+        let (h_star, scores) = select_bandwidth(&data, &grid, 1e-6, &Naive::new()).unwrap();
+        assert_eq!(scores.len(), 13);
+        assert!(
+            h_star > pilot / 10.0 && h_star < pilot * 10.0,
+            "h*={h_star} pilot={pilot}"
+        );
+        // extremes must be worse than the winner
+        let best_score = scores.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(scores[0] > best_score);
+        assert!(scores[12] > best_score);
+    }
+
+    /// The LSCV identity: our closed-form score equals the direct
+    /// definition computed by brute force.
+    #[test]
+    fn matches_bruteforce_definition() {
+        let data = gaussian_1d(60, 142);
+        let n = data.rows() as f64;
+        let h = 0.4;
+        let score = lscv_score(&data, h, 1e-9, &Naive::new()).unwrap();
+        // brute force: ∫f̂² on a fine grid, LOO term by direct loops
+        let grid_step = 0.01;
+        let mut integral = 0.0;
+        let norm = GaussianKernel::new(h).norm_const(1) / n;
+        let mut x = -8.0;
+        while x < 8.0 {
+            let mut f = 0.0;
+            for i in 0..data.rows() {
+                let dd = x - data.get(i, 0);
+                f += (-0.5 * dd * dd / (h * h)).exp();
+            }
+            integral += (f * norm) * (f * norm) * grid_step;
+            x += grid_step;
+        }
+        let mut loo = 0.0;
+        for i in 0..data.rows() {
+            let mut f = 0.0;
+            for j in 0..data.rows() {
+                if i != j {
+                    let dd = data.get(i, 0) - data.get(j, 0);
+                    f += (-0.5 * dd * dd / (h * h)).exp();
+                }
+            }
+            loo += f * GaussianKernel::new(h).norm_const(1) / (n - 1.0);
+        }
+        let brute = integral - 2.0 * loo / n;
+        assert!((score - brute).abs() < 2e-3 * brute.abs().max(1.0), "{score} vs {brute}");
+    }
+
+    /// Dual-tree engines must agree with Naive on the selected h.
+    #[test]
+    fn dito_and_naive_agree_on_selection() {
+        use crate::algo::dito::Dito;
+        let mut rng = Pcg32::new(143);
+        let data = Matrix::from_rows(
+            &(0..300)
+                .map(|_| vec![0.3 + 0.05 * rng.normal(), 0.7 + 0.08 * rng.normal()])
+                .collect::<Vec<_>>(),
+        );
+        let pilot = silverman(&data);
+        let grid = log_grid(pilot, 0.1, 10.0, 7);
+        let (h_naive, _) = select_bandwidth(&data, &grid, 1e-4, &Naive::new()).unwrap();
+        let (h_dito, _) = select_bandwidth(&data, &grid, 1e-4, &Dito::default()).unwrap();
+        assert_eq!(h_naive, h_dito);
+    }
+}

@@ -1,0 +1,115 @@
+//! The Gaussian kernel K(δ) = exp(−δ²/(2h²)) and bandwidth plumbing.
+
+/// An isotropic Gaussian kernel with bandwidth `h`.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct GaussianKernel {
+    h: f64,
+    /// Precomputed −1/(2h²).
+    neg_inv_2h2: f64,
+}
+
+impl GaussianKernel {
+    pub fn new(h: f64) -> Self {
+        assert!(h > 0.0 && h.is_finite(), "bandwidth must be positive");
+        GaussianKernel { h, neg_inv_2h2: -0.5 / (h * h) }
+    }
+
+    #[inline]
+    pub fn bandwidth(&self) -> f64 {
+        self.h
+    }
+
+    /// The series scale c = √(2h²) = √2·h; expansions use (x−c₀)/c.
+    #[inline]
+    pub fn series_scale(&self) -> f64 {
+        std::f64::consts::SQRT_2 * self.h
+    }
+
+    /// K from a squared distance — the hot-path form (avoids the sqrt).
+    #[inline]
+    pub fn eval_sq(&self, sqdist: f64) -> f64 {
+        (sqdist * self.neg_inv_2h2).exp()
+    }
+
+    /// K from a distance.
+    #[inline]
+    pub fn eval(&self, dist: f64) -> f64 {
+        self.eval_sq(dist * dist)
+    }
+
+    /// The factor e^(−δ²/(4h²)) appearing in the Lemma 4–6 bounds.
+    #[inline]
+    pub fn bound_decay_sq(&self, sqdist: f64) -> f64 {
+        (-sqdist / (4.0 * self.h * self.h)).exp()
+    }
+
+    /// Multivariate density normalization (2πh²)^(−D/2) for KDE.
+    pub fn norm_const(&self, dim: usize) -> f64 {
+        (2.0 * std::f64::consts::PI * self.h * self.h).powf(-(dim as f64) / 2.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_at_zero_distance() {
+        let k = GaussianKernel::new(0.3);
+        assert_eq!(k.eval(0.0), 1.0);
+        assert_eq!(k.eval_sq(0.0), 1.0);
+    }
+
+    #[test]
+    fn known_value() {
+        let k = GaussianKernel::new(1.0);
+        assert!((k.eval(1.0) - (-0.5f64).exp()).abs() < 1e-15);
+        assert!((k.eval_sq(4.0) - (-2.0f64).exp()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn monotone_decreasing() {
+        let k = GaussianKernel::new(0.5);
+        let mut prev = k.eval(0.0);
+        for i in 1..100 {
+            let v = k.eval(i as f64 * 0.05);
+            assert!(v < prev);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn bandwidth_scaling_identity() {
+        // K_h(δ) = K_1(δ/h)
+        let k1 = GaussianKernel::new(1.0);
+        let kh = GaussianKernel::new(2.5);
+        assert!((kh.eval(5.0) - k1.eval(2.0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn bound_decay_is_sqrt_of_kernel() {
+        // e^(−δ²/4h²) = K(δ)^(1/2)
+        let k = GaussianKernel::new(0.7);
+        let d2 = 1.3;
+        assert!((k.bound_decay_sq(d2) - k.eval_sq(d2).sqrt()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn series_scale() {
+        let k = GaussianKernel::new(3.0);
+        assert!((k.series_scale() - 3.0 * 2f64.sqrt()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn norm_const_1d_matches_formula() {
+        let k = GaussianKernel::new(2.0);
+        let expect = 1.0 / (2.0 * std::f64::consts::PI * 4.0).sqrt();
+        assert!((k.norm_const(1) - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_bandwidth_rejected() {
+        GaussianKernel::new(0.0);
+    }
+}

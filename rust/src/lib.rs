@@ -1,0 +1,48 @@
+//! # fastgauss
+//!
+//! A production-grade reproduction of *“Faster Gaussian Summation: Theory
+//! and Experiment”* (Lee & Gray): dual-tree fast Gauss transforms with
+//! O(Dᵖ) series expansions, rigorous per-operator error bounds, and the
+//! token-based automatic error-control scheme, plus all the baselines the
+//! paper compares against (naive, FGT, IFGT, DFD) and a KDE/bandwidth-
+//! selection layer on top.
+//!
+//! Layer map (see DESIGN.md):
+//! * L3 (this crate): trees, expansions, translation operators, error
+//!   control, the six algorithms, LSCV, sweep coordination, CLI.
+//! * L2/L1 (python, build-time only): a tiled exhaustive Gaussian
+//!   summation graph whose hot tile is a Pallas kernel; AOT-lowered to
+//!   HLO text in `artifacts/` and executed from [`runtime`] via PJRT.
+//!
+//! Quick start:
+//! ```no_run
+//! use fastgauss::algo::{dito::Dito, GaussSum, GaussSumProblem};
+//! let data = fastgauss::data::synthetic::astro2d(1000, 42);
+//! let h = fastgauss::kde::bandwidth::silverman(&data);
+//! let out = Dito::default().run(&GaussSumProblem::kde(&data, h, 0.01)).unwrap();
+//! println!("G(x_0) = {}", out.sums[0]);
+//! ```
+
+pub mod util;
+pub mod prop;
+pub mod geometry;
+pub mod multiindex;
+pub mod kernel;
+pub mod hermite;
+pub mod bounds;
+pub mod tree;
+pub mod errorcontrol;
+pub mod algo;
+pub mod kde;
+pub mod data;
+pub mod runtime;
+pub mod coordinator;
+pub mod cli;
+pub mod config;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::geometry::Matrix;
+    pub use crate::kernel::GaussianKernel;
+    pub use crate::tree::KdTree;
+}

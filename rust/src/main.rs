@@ -1,0 +1,11 @@
+//! `fastgauss` — leader binary: paper tables, KDE with automatic
+//! bandwidth selection, dataset generation, self-tests and the PJRT
+//! runtime check. See `fastgauss help`.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = fastgauss::cli::run(&args) {
+        eprintln!("fastgauss: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,113 @@
+//! Factorial / binomial tables in `f64`. Orders in this codebase are
+//! small (p ≤ 8 per dimension, sums α+β ≤ 2p), but bounds formulas take
+//! factorials of up to D·p, so we keep a full table to 170 (the largest
+//! n with n! finite in f64) and fall back to `ln_factorial` beyond.
+
+use std::sync::OnceLock;
+
+const TABLE_N: usize = 171;
+
+fn table() -> &'static [f64; TABLE_N] {
+    static T: OnceLock<[f64; TABLE_N]> = OnceLock::new();
+    T.get_or_init(|| {
+        let mut t = [1.0f64; TABLE_N];
+        for n in 1..TABLE_N {
+            t[n] = t[n - 1] * n as f64;
+        }
+        t
+    })
+}
+
+/// n! as f64; `inf` for n > 170.
+#[inline]
+pub fn factorial(n: usize) -> f64 {
+    if n < TABLE_N {
+        table()[n]
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// ln(n!) via Stirling's series (exact table for small n).
+pub fn ln_factorial(n: usize) -> f64 {
+    if n < TABLE_N {
+        return table()[n].ln();
+    }
+    let x = (n + 1) as f64;
+    // Stirling: lnΓ(x) ≈ (x-½)ln x − x + ½ln(2π) + 1/(12x) − 1/(360x³)
+    (x - 0.5) * x.ln() - x + 0.5 * (2.0 * std::f64::consts::PI).ln() + 1.0 / (12.0 * x)
+        - 1.0 / (360.0 * x * x * x)
+}
+
+/// Binomial coefficient C(n, k) as f64 (multiplicative form — exact for
+/// the sizes we use, graceful for huge ones).
+pub fn binomial(n: usize, k: usize) -> f64 {
+    if k > n {
+        return 0.0;
+    }
+    let k = k.min(n - k);
+    let mut acc = 1.0f64;
+    for i in 0..k {
+        acc = acc * (n - i) as f64 / (i + 1) as f64;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_factorials_exact() {
+        assert_eq!(factorial(0), 1.0);
+        assert_eq!(factorial(1), 1.0);
+        assert_eq!(factorial(5), 120.0);
+        assert_eq!(factorial(10), 3628800.0);
+    }
+
+    #[test]
+    fn overflow_is_infinite() {
+        assert!(factorial(170).is_finite());
+        assert!(factorial(171).is_infinite());
+    }
+
+    #[test]
+    fn ln_factorial_consistent_with_table() {
+        for n in [0, 1, 5, 20, 100, 170] {
+            assert!((ln_factorial(n) - factorial(n).ln()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn ln_factorial_stirling_region() {
+        // recurrence ln((n+1)!) = ln(n!) + ln(n+1) must hold across the
+        // table/Stirling boundary
+        for n in 168..400 {
+            let lhs = ln_factorial(n + 1);
+            let rhs = ln_factorial(n) + ((n + 1) as f64).ln();
+            assert!((lhs - rhs).abs() < 1e-6, "n={n}: {lhs} vs {rhs}");
+        }
+    }
+
+    #[test]
+    fn binomial_values() {
+        assert_eq!(binomial(5, 0), 1.0);
+        assert_eq!(binomial(5, 2), 10.0);
+        assert_eq!(binomial(5, 5), 1.0);
+        assert_eq!(binomial(4, 7), 0.0);
+        assert_eq!(binomial(23, 16), 245157.0);
+    }
+
+    #[test]
+    fn binomial_symmetry_and_pascal() {
+        for n in 1..20usize {
+            for k in 0..=n {
+                assert_eq!(binomial(n, k), binomial(n, n - k));
+                if k >= 1 {
+                    let pascal = binomial(n - 1, k - 1) + binomial(n - 1, k);
+                    assert!((binomial(n, k) - pascal).abs() < 1e-6);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,451 @@
+//! Multi-index algebra for truncated series expansions.
+//!
+//! The paper contrasts two truncation families for a D-dimensional
+//! series of order p:
+//!
+//! * **grid / O(pᴰ)** — all α with every component `α_d < p`
+//!   (the classical FGT truncation; exactly `pᴰ` terms);
+//! * **graded / O(Dᵖ)** — all α with *total degree* `|α| < p` in graded
+//!   lexicographic order (Yang et al. 2003; exactly `C(D+p−1, D)` terms).
+//!
+//! A [`MultiIndexSet`] enumerates one family once, precomputes parent
+//! links for incremental monomial evaluation (each index is its parent
+//! times one extra coordinate), per-index `1/α!`, degrees, and a
+//! position map used by the translation operators.
+
+pub mod factorial;
+
+use std::collections::HashMap;
+
+pub use factorial::{binomial, factorial, ln_factorial};
+
+/// Which truncation family a set enumerates.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Layout {
+    /// All α with each component < p — `pᴰ` indices (classical FGT).
+    Grid,
+    /// All α with total degree |α| < p — `C(D+p−1, D)` indices.
+    Graded,
+}
+
+/// An enumerated, preprocessed set of multi-indices.
+#[derive(Clone, Debug)]
+pub struct MultiIndexSet {
+    layout: Layout,
+    dim: usize,
+    order: usize,
+    /// The indices, in enumeration order (degree-major for `Graded`,
+    /// mixed-radix/lexicographic for `Grid`). Index 0 is always the zero
+    /// multi-index.
+    indices: Vec<Vec<u32>>,
+    /// `parent[i]`: position of α_i − e_{added_dim[i]}; `usize::MAX` for
+    /// the zero index.
+    parent: Vec<usize>,
+    added_dim: Vec<usize>,
+    /// 1/α! per index.
+    inv_factorial: Vec<f64>,
+    /// |α| per index.
+    degree: Vec<u32>,
+    /// max_d α_d per index (grid-layout truncation predicate).
+    max_component: Vec<u32>,
+    /// `len_at[p]` = number of indices inside the sub-order-p truncation,
+    /// for p = 0..=order (precomputed; `best_method` reads this per pair).
+    len_at: Vec<usize>,
+    pos: HashMap<Vec<u32>, usize>,
+}
+
+impl MultiIndexSet {
+    /// Enumerate the family. `order` = p ≥ 1. `dim` = D ≥ 1.
+    pub fn new(layout: Layout, dim: usize, order: usize) -> Self {
+        assert!(dim >= 1 && order >= 1, "dim/order must be >= 1");
+        let indices = match layout {
+            Layout::Grid => enumerate_grid(dim, order),
+            Layout::Graded => enumerate_graded(dim, order),
+        };
+        let mut pos = HashMap::with_capacity(indices.len());
+        for (i, a) in indices.iter().enumerate() {
+            pos.insert(a.clone(), i);
+        }
+        let mut parent = Vec::with_capacity(indices.len());
+        let mut added_dim = Vec::with_capacity(indices.len());
+        let mut inv_factorial = Vec::with_capacity(indices.len());
+        let mut degree = Vec::with_capacity(indices.len());
+        let mut max_component = Vec::with_capacity(indices.len());
+        for a in &indices {
+            let deg: u32 = a.iter().sum();
+            degree.push(deg);
+            max_component.push(a.iter().copied().max().unwrap_or(0));
+            let mut invf = 1.0;
+            for &ad in a {
+                invf /= factorial(ad as usize);
+            }
+            inv_factorial.push(invf);
+            if deg == 0 {
+                parent.push(usize::MAX);
+                added_dim.push(usize::MAX);
+            } else {
+                // Decrement the last nonzero coordinate; the parent is
+                // guaranteed to appear earlier in both enumerations.
+                let d = a.iter().rposition(|&v| v > 0).unwrap();
+                let mut pa = a.clone();
+                pa[d] -= 1;
+                let pi = *pos.get(&pa).expect("parent must be enumerated");
+                debug_assert!(pi < pos[a]);
+                parent.push(pi);
+                added_dim.push(d);
+            }
+        }
+        let mut set = MultiIndexSet {
+            layout,
+            dim,
+            order,
+            indices,
+            parent,
+            added_dim,
+            inv_factorial,
+            degree,
+            max_component,
+            len_at: Vec::new(),
+            pos,
+        };
+        set.len_at = (0..=order).map(|p| set.count_at_order(p)).collect();
+        set
+    }
+
+    #[inline]
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The truncation order p.
+    #[inline]
+    pub fn order(&self) -> usize {
+        self.order
+    }
+
+    /// Number of indices in the set.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    #[inline]
+    pub fn index(&self, i: usize) -> &[u32] {
+        &self.indices[i]
+    }
+
+    #[inline]
+    pub fn degree(&self, i: usize) -> u32 {
+        self.degree[i]
+    }
+
+    #[inline]
+    pub fn inv_factorial(&self, i: usize) -> f64 {
+        self.inv_factorial[i]
+    }
+
+    /// Position of a multi-index in the enumeration, if present.
+    pub fn position(&self, a: &[u32]) -> Option<usize> {
+        self.pos.get(a).copied()
+    }
+
+    /// Is index `i` inside the *sub*-truncation of order `p ≤ self.order()`?
+    /// Graded: |α| < p; Grid: max_d α_d < p. Lets one PLIMIT-sized
+    /// coefficient array serve every lower approximation order.
+    #[inline]
+    pub fn in_order(&self, i: usize, p: usize) -> bool {
+        match self.layout {
+            Layout::Graded => (self.degree[i] as usize) < p,
+            Layout::Grid => (self.max_component[i] as usize) < p,
+        }
+    }
+
+    /// Number of indices inside the sub-truncation of order `p` (O(1),
+    /// precomputed — `best_method` reads this for every node pair).
+    #[inline]
+    pub fn len_at_order(&self, p: usize) -> usize {
+        self.len_at[p.min(self.order)]
+    }
+
+    fn count_at_order(&self, p: usize) -> usize {
+        (0..self.len()).filter(|&i| self.in_order(i, p)).count()
+    }
+
+    /// For layouts where the sub-order-p subset is an enumeration
+    /// *prefix* (graded, which is degree-major), the prefix length —
+    /// lets truncated hot loops run branch-free. `None` for grid.
+    #[inline]
+    pub fn order_prefix(&self, p: usize) -> Option<usize> {
+        match self.layout {
+            Layout::Graded => Some(self.len_at_order(p)),
+            Layout::Grid => None,
+        }
+    }
+
+    /// Iterate (position, index).
+    pub fn iter(&self) -> impl Iterator<Item = (usize, &[u32])> {
+        self.indices.iter().enumerate().map(|(i, a)| (i, a.as_slice()))
+    }
+
+    /// Evaluate all monomials x^α into `out` (len = `self.len()`),
+    /// using the parent chain: x^α = x^{parent(α)} · x_{added_dim}.
+    pub fn eval_monomials(&self, x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.dim);
+        debug_assert_eq!(out.len(), self.len());
+        out[0] = 1.0;
+        for i in 1..self.len() {
+            out[i] = out[self.parent[i]] * x[self.added_dim[i]];
+        }
+    }
+
+    /// Convenience allocating variant of [`eval_monomials`].
+    pub fn monomials(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.len()];
+        self.eval_monomials(x, &mut out);
+        out
+    }
+
+    /// Expected set size without enumerating: pᴰ or C(D+p−1, D).
+    pub fn expected_len(layout: Layout, dim: usize, order: usize) -> f64 {
+        match layout {
+            Layout::Grid => (order as f64).powi(dim as i32),
+            Layout::Graded => binomial(dim + order - 1, dim),
+        }
+    }
+}
+
+/// Componentwise α ≤ β.
+#[inline]
+pub fn leq(a: &[u32], b: &[u32]) -> bool {
+    a.iter().zip(b).all(|(x, y)| x <= y)
+}
+
+/// Componentwise difference β − α (caller guarantees α ≤ β).
+#[inline]
+pub fn sub(b: &[u32], a: &[u32]) -> Vec<u32> {
+    b.iter().zip(a).map(|(x, y)| x - y).collect()
+}
+
+/// Componentwise sum α + β.
+#[inline]
+pub fn add(a: &[u32], b: &[u32]) -> Vec<u32> {
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+/// α! as f64.
+pub fn multi_factorial(a: &[u32]) -> f64 {
+    a.iter().map(|&v| factorial(v as usize)).product()
+}
+
+/// Grid (mixed-radix) enumeration: all α with α_d ∈ [0, p), dimension 0
+/// slowest — position of α is Σ α_d · p^(D−1−d).
+fn enumerate_grid(dim: usize, p: usize) -> Vec<Vec<u32>> {
+    let total = (p as u64).checked_pow(dim as u32).expect("grid too large") as usize;
+    let mut out = Vec::with_capacity(total);
+    let mut cur = vec![0u32; dim];
+    loop {
+        out.push(cur.clone());
+        // increment mixed-radix counter, last dim fastest
+        let mut d = dim;
+        loop {
+            if d == 0 {
+                return out;
+            }
+            d -= 1;
+            cur[d] += 1;
+            if (cur[d] as usize) < p {
+                break;
+            }
+            cur[d] = 0;
+        }
+    }
+}
+
+/// Graded lexicographic enumeration: degree 0, 1, …, p−1; within each
+/// degree, lexicographic (dimension 0 most significant).
+fn enumerate_graded(dim: usize, p: usize) -> Vec<Vec<u32>> {
+    let mut out = Vec::new();
+    let mut cur = vec![0u32; dim];
+    for deg in 0..p as u32 {
+        emit_degree(&mut out, &mut cur, 0, deg);
+    }
+    out
+}
+
+fn emit_degree(out: &mut Vec<Vec<u32>>, cur: &mut Vec<u32>, d: usize, remaining: u32) {
+    if d == cur.len() - 1 {
+        cur[d] = remaining;
+        out.push(cur.clone());
+        cur[d] = 0;
+        return;
+    }
+    // lexicographic: highest value in the current dimension first
+    for v in (0..=remaining).rev() {
+        cur[d] = v;
+        emit_degree(out, cur, d + 1, remaining - v);
+        cur[d] = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_count_is_p_pow_d() {
+        for (d, p) in [(1, 4), (2, 3), (3, 2), (4, 2)] {
+            let s = MultiIndexSet::new(Layout::Grid, d, p);
+            assert_eq!(s.len(), (p as usize).pow(d as u32));
+            assert_eq!(s.len() as f64, MultiIndexSet::expected_len(Layout::Grid, d, p));
+        }
+    }
+
+    #[test]
+    fn graded_count_is_binomial() {
+        for (d, p) in [(1, 5), (2, 8), (3, 6), (5, 4), (7, 2), (16, 2)] {
+            let s = MultiIndexSet::new(Layout::Graded, d, p);
+            assert_eq!(s.len() as f64, binomial(d + p - 1, d), "D={d} p={p}");
+        }
+    }
+
+    #[test]
+    fn graded_matches_paper_2d_p2_example() {
+        // Section 2's example: order p=2, D=2 → indices (0,0),(1,0),(0,1).
+        let s = MultiIndexSet::new(Layout::Graded, 2, 2);
+        let idx: Vec<&[u32]> = s.iter().map(|(_, a)| a).collect();
+        assert_eq!(idx, vec![&[0, 0][..], &[1, 0][..], &[0, 1][..]]);
+    }
+
+    #[test]
+    fn grid_matches_paper_2d_p2_example() {
+        // O(p^D) with p=2, D=2 → 4 indices incl. the mixed (1,1) term.
+        let s = MultiIndexSet::new(Layout::Grid, 2, 2);
+        let idx: Vec<&[u32]> = s.iter().map(|(_, a)| a).collect();
+        assert_eq!(idx, vec![&[0, 0][..], &[0, 1][..], &[1, 0][..], &[1, 1][..]]);
+    }
+
+    #[test]
+    fn graded_is_degree_sorted() {
+        let s = MultiIndexSet::new(Layout::Graded, 3, 5);
+        for i in 1..s.len() {
+            assert!(s.degree(i) >= s.degree(i - 1));
+        }
+    }
+
+    #[test]
+    fn zero_index_first_everywhere() {
+        for layout in [Layout::Grid, Layout::Graded] {
+            let s = MultiIndexSet::new(layout, 3, 3);
+            assert_eq!(s.index(0), &[0, 0, 0]);
+            assert_eq!(s.degree(0), 0);
+            assert_eq!(s.inv_factorial(0), 1.0);
+        }
+    }
+
+    #[test]
+    fn sets_are_downward_closed() {
+        // Translation-operator exactness relies on downward closure:
+        // α ≤ β ∧ β ∈ S ⇒ α ∈ S.
+        for layout in [Layout::Grid, Layout::Graded] {
+            let s = MultiIndexSet::new(layout, 3, 4);
+            for (_, b) in s.iter() {
+                let mut a = b.to_vec();
+                for d in 0..3 {
+                    if a[d] > 0 {
+                        a[d] -= 1;
+                        assert!(s.position(&a).is_some(), "{layout:?} {b:?} missing sub");
+                        a[d] += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn position_roundtrip() {
+        let s = MultiIndexSet::new(Layout::Graded, 4, 3);
+        for (i, a) in s.iter() {
+            assert_eq!(s.position(a), Some(i));
+        }
+        assert_eq!(s.position(&[9, 9, 9, 9]), None);
+    }
+
+    #[test]
+    fn monomials_match_direct_pow() {
+        let x = [0.5, -2.0, 3.0];
+        for layout in [Layout::Grid, Layout::Graded] {
+            let s = MultiIndexSet::new(layout, 3, 4);
+            let mono = s.monomials(&x);
+            for (i, a) in s.iter() {
+                let direct: f64 =
+                    a.iter().zip(&x).map(|(&p, &v)| v.powi(p as i32)).product();
+                assert!(
+                    (mono[i] - direct).abs() <= 1e-12 * direct.abs().max(1.0),
+                    "{layout:?} {a:?}: {} vs {direct}",
+                    mono[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn inv_factorial_correct() {
+        let s = MultiIndexSet::new(Layout::Grid, 2, 5);
+        let i = s.position(&[3, 4]).unwrap();
+        assert!((s.inv_factorial(i) - 1.0 / (6.0 * 24.0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn componentwise_ops() {
+        assert!(leq(&[1, 2], &[1, 3]));
+        assert!(!leq(&[2, 0], &[1, 3]));
+        assert_eq!(sub(&[3, 4], &[1, 2]), vec![2, 2]);
+        assert_eq!(add(&[1, 2], &[3, 0]), vec![4, 2]);
+        assert_eq!(multi_factorial(&[3, 2]), 12.0);
+    }
+
+    #[test]
+    fn in_order_truncation() {
+        let g = MultiIndexSet::new(Layout::Graded, 2, 4);
+        // graded sub-order p=2 keeps exactly degree-0 and degree-1 terms
+        assert_eq!(g.len_at_order(2), 3);
+        assert_eq!(g.len_at_order(4), g.len());
+        let gr = MultiIndexSet::new(Layout::Grid, 2, 3);
+        // grid sub-order p=2 keeps indices with both components < 2 → 4
+        assert_eq!(gr.len_at_order(2), 4);
+        assert_eq!(gr.len_at_order(3), 9);
+        let i = gr.position(&[2, 0]).unwrap();
+        assert!(!gr.in_order(i, 2));
+        assert!(gr.in_order(i, 3));
+    }
+
+    #[test]
+    fn graded_suborder_is_prefix() {
+        // degree-major enumeration ⇒ the order-p subset is a prefix
+        let s = MultiIndexSet::new(Layout::Graded, 3, 5);
+        for p in 1..=5 {
+            let n = s.len_at_order(p);
+            for i in 0..s.len() {
+                assert_eq!(s.in_order(i, p), i < n);
+            }
+        }
+    }
+
+    #[test]
+    fn large_graded_set_enumerates() {
+        // D=16, p=2 (the PLIMIT>6 presumption means p=1, but the set for
+        // p=2 should still be cheap): 17 indices.
+        let s = MultiIndexSet::new(Layout::Graded, 16, 2);
+        assert_eq!(s.len(), 17);
+    }
+}

@@ -1,0 +1,158 @@
+//! Mini property-testing framework (proptest is unavailable in the
+//! offline vendor set). Properties run against a deterministic PCG
+//! stream; failures report the failing case index and seed so any case
+//! reproduces exactly with `FASTGAUSS_PROP_SEED`/`FASTGAUSS_PROP_CASES`.
+//!
+//! ```no_run
+//! use fastgauss::prop::{forall, Gen};
+//! forall("addition commutes", 64, |g: &mut Gen| {
+//!     let (a, b) = (g.f64_in(-1e6, 1e6), g.f64_in(-1e6, 1e6));
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use crate::util::Pcg32;
+
+/// Random-input source handed to each property case.
+pub struct Gen {
+    rng: Pcg32,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Pcg32::new(seed) }
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.uniform() < 0.5
+    }
+
+    /// log-uniform positive value in [lo, hi] — bandwidths, tolerances.
+    pub fn log_uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(lo > 0.0 && hi > lo);
+        (self.rng.uniform_in(lo.ln(), hi.ln())).exp()
+    }
+
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    /// A fresh vector of values.
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// Clustered point rows (the data regime the algorithms target).
+    pub fn clustered_points(&mut self, n: usize, d: usize) -> Vec<Vec<f64>> {
+        let k = self.usize_in(2, 6);
+        let centers: Vec<Vec<f64>> =
+            (0..k).map(|_| (0..d).map(|_| self.rng.uniform()).collect()).collect();
+        (0..n)
+            .map(|i| {
+                let c = &centers[i % k];
+                (0..d).map(|j| c[j] + 0.05 * self.rng.normal()).collect()
+            })
+            .collect()
+    }
+
+    /// Expose the raw RNG for bespoke structures.
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of a property; panics with a reproducible
+/// report on the first failure. The property returns `Err(detail)` to
+/// fail. Environment overrides: `FASTGAUSS_PROP_SEED` (base seed),
+/// `FASTGAUSS_PROP_CASES` (case count multiplier ×).
+pub fn forall<F>(name: &str, cases: usize, mut property: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = std::env::var("FASTGAUSS_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xF457_6A55u64);
+    let mult: usize = std::env::var("FASTGAUSS_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+    let total = cases * mult;
+    for case in 0..total {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut gen = Gen::new(seed);
+        if let Err(detail) = property(&mut gen) {
+            panic!(
+                "property {name:?} failed at case {case}/{total} \
+                 (reproduce with FASTGAUSS_PROP_SEED={base_seed}, case seed {seed:#x}): {detail}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        forall("abs is nonneg", 100, |g| {
+            let x = g.f64_in(-10.0, 10.0);
+            if x.abs() >= 0.0 {
+                Ok(())
+            } else {
+                Err(format!("{x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always fails\" failed")]
+    fn failing_property_panics_with_report() {
+        forall("always fails", 5, |_g| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        let mut g = Gen::new(1);
+        for _ in 0..1000 {
+            let v = g.f64_in(2.0, 3.0);
+            assert!((2.0..3.0).contains(&v));
+            let u = g.usize_in(5, 7);
+            assert!((5..=7).contains(&u));
+            let l = g.log_uniform(1e-3, 1e3);
+            assert!((1e-3..=1e3).contains(&l));
+        }
+    }
+
+    #[test]
+    fn cases_are_deterministic_per_seed() {
+        let mut first = Vec::new();
+        forall("collect", 3, |g| {
+            first.push(g.f64_in(0.0, 1.0));
+            Ok(())
+        });
+        let mut second = Vec::new();
+        forall("collect", 3, |g| {
+            second.push(g.f64_in(0.0, 1.0));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn clustered_points_shape() {
+        let mut g = Gen::new(2);
+        let pts = g.clustered_points(50, 3);
+        assert_eq!(pts.len(), 50);
+        assert!(pts.iter().all(|p| p.len() == 3));
+    }
+}

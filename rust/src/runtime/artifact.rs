@@ -1,0 +1,153 @@
+//! Artifact manifest: which HLO file serves which dimension, and the
+//! fixed tile/chunk shapes the executor must pad to.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape contract of one compiled artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub file: PathBuf,
+    pub dim: usize,
+    /// Fixed query tile rows (TQ).
+    pub tile_queries: usize,
+    /// Pallas reference block rows (TR) — informational.
+    pub block_refs: usize,
+    /// Reference chunk rows per execution (NR).
+    pub chunk_refs: usize,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub dtype: String,
+    specs: BTreeMap<usize, ArtifactSpec>,
+}
+
+impl ArtifactManifest {
+    /// Load and validate a manifest from `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let dtype = json
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest missing dtype"))?
+            .to_string();
+        let arts =
+            json.get("artifacts").and_then(Json::as_obj).ok_or_else(|| anyhow!("no artifacts"))?;
+        let mut specs = BTreeMap::new();
+        for (key, v) in arts {
+            let dim: usize = key.parse().map_err(|_| anyhow!("bad dim key {key:?}"))?;
+            let field = |name: &str| -> Result<usize> {
+                v.get(name)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("artifact {key}: missing {name}"))
+            };
+            let file = dir.join(
+                v.get("file").and_then(Json::as_str).ok_or_else(|| anyhow!("missing file"))?,
+            );
+            let spec = ArtifactSpec {
+                file,
+                dim: field("dim")?,
+                tile_queries: field("tile_queries")?,
+                block_refs: field("block_refs")?,
+                chunk_refs: field("chunk_refs")?,
+            };
+            if spec.dim != dim {
+                return Err(anyhow!("artifact {key}: dim mismatch"));
+            }
+            if spec.chunk_refs == 0 || spec.chunk_refs % spec.block_refs != 0 {
+                return Err(anyhow!("artifact {key}: chunk_refs not a block multiple"));
+            }
+            specs.insert(dim, spec);
+        }
+        Ok(ArtifactManifest { dtype, specs })
+    }
+
+    /// Spec for dimension `dim`, if compiled.
+    pub fn spec(&self, dim: usize) -> Option<&ArtifactSpec> {
+        self.specs.get(&dim)
+    }
+
+    /// All compiled dimensions.
+    pub fn dims(&self) -> impl Iterator<Item = usize> + '_ {
+        self.specs.keys().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = std::env::temp_dir().join("fg_manifest_ok");
+        write_manifest(
+            &dir,
+            r#"{"dtype":"f64","artifacts":{"2":{"file":"gauss_d2.hlo.txt","dim":2,
+               "tile_queries":256,"block_refs":512,"chunk_refs":4096}}}"#,
+        );
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.dtype, "f64");
+        let s = m.spec(2).unwrap();
+        assert_eq!(s.tile_queries, 256);
+        assert_eq!(s.chunk_refs, 4096);
+        assert!(m.spec(5).is_none());
+        assert_eq!(m.dims().collect::<Vec<_>>(), vec![2]);
+    }
+
+    #[test]
+    fn rejects_dim_mismatch() {
+        let dir = std::env::temp_dir().join("fg_manifest_bad1");
+        write_manifest(
+            &dir,
+            r#"{"dtype":"f64","artifacts":{"2":{"file":"x","dim":3,
+               "tile_queries":1,"block_refs":1,"chunk_refs":1}}}"#,
+        );
+        assert!(ArtifactManifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_non_multiple_chunk() {
+        let dir = std::env::temp_dir().join("fg_manifest_bad2");
+        write_manifest(
+            &dir,
+            r#"{"dtype":"f64","artifacts":{"2":{"file":"x","dim":2,
+               "tile_queries":8,"block_refs":3,"chunk_refs":10}}}"#,
+        );
+        assert!(ArtifactManifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_contextual_error() {
+        let dir = std::env::temp_dir().join("fg_manifest_missing_xyz");
+        let _ = std::fs::remove_dir_all(&dir);
+        let err = ArtifactManifest::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // integration hook: when `make artifacts` has run, the real
+        // manifest must load and cover the paper's dimensions
+        let dir = crate::runtime::artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let m = ArtifactManifest::load(&dir).unwrap();
+            for d in [2, 3, 5, 7, 10, 16] {
+                assert!(m.spec(d).is_some(), "missing artifact for D={d}");
+            }
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts (`make artifacts`)
+//! and execute them from the rust hot path. Python never runs here —
+//! the artifacts are self-contained HLO text compiled once per process
+//! by the XLA CPU backend.
+
+pub mod artifact;
+pub mod executor;
+pub mod tiled_naive;
+
+pub use artifact::{ArtifactManifest, ArtifactSpec};
+pub use executor::TileExecutor;
+pub use tiled_naive::TiledNaive;
+
+/// Default artifacts directory, overridable with `FASTGAUSS_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("FASTGAUSS_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

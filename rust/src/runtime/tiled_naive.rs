@@ -1,0 +1,77 @@
+//! `TiledNaive`: the exhaustive baseline executed through the AOT
+//! PJRT artifacts — i.e. the L1 Pallas kernel driven from the L3 rust
+//! coordinator with python nowhere in sight. Implements [`GaussSum`] so
+//! the bench harness can swap it in for the pure-rust `Naive`.
+
+use std::sync::Mutex;
+
+use crate::algo::{AlgoError, GaussSum, GaussSumProblem, GaussSumResult, RunStats};
+
+use super::executor::TileExecutor;
+
+/// Exhaustive summation through the compiled artifact for its dimension.
+pub struct TiledNaive {
+    exec: Mutex<TileExecutor>,
+    dim: usize,
+}
+
+impl TiledNaive {
+    /// Load the artifact for `dim` from the default artifacts directory.
+    pub fn load(dim: usize) -> anyhow::Result<Self> {
+        let exec = TileExecutor::load(&super::artifacts_dir(), dim)?;
+        Ok(TiledNaive { exec: Mutex::new(exec), dim })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+impl GaussSum for TiledNaive {
+    fn name(&self) -> &'static str {
+        "Naive(PJRT)"
+    }
+
+    fn run(&self, problem: &GaussSumProblem<'_>) -> Result<GaussSumResult, AlgoError> {
+        assert_eq!(problem.dim(), self.dim, "artifact dimension mismatch");
+        let w = problem.weight_vec();
+        let sums = self
+            .exec
+            .lock()
+            .unwrap()
+            .gauss_sum(problem.queries, problem.references, &w, problem.h)
+            .map_err(|e| AlgoError::RamExhausted(format!("PJRT failure: {e}")))?;
+        let stats = RunStats {
+            base_point_pairs: (problem.num_queries() * problem.num_references()) as u64,
+            ..Default::default()
+        };
+        Ok(GaussSumResult { sums, stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::naive::Naive;
+    use crate::algo::max_relative_error;
+    use crate::geometry::Matrix;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn matches_pure_rust_naive() {
+        if !crate::runtime::artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let mut rng = Pcg32::new(31);
+        let data = Matrix::from_rows(
+            &(0..700).map(|_| vec![rng.uniform(), rng.uniform(), rng.uniform()]).collect::<Vec<_>>(),
+        );
+        let p = GaussSumProblem::kde(&data, 0.15, 0.01);
+        let tiled = TiledNaive::load(3).unwrap();
+        let a = tiled.run(&p).unwrap().sums;
+        let b = Naive::new().run(&p).unwrap().sums;
+        assert!(max_relative_error(&a, &b) < 1e-10);
+        assert_eq!(tiled.name(), "Naive(PJRT)");
+    }
+}

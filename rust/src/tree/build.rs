@@ -1,0 +1,360 @@
+//! Median-split tree construction. Points are reordered into a
+//! permutation such that every node owns a contiguous range, which keeps
+//! the base cases cache-friendly and lets moments/results be indexed by
+//! position.
+
+use crate::geometry::{linf_dist, HRect, Matrix, Sphere};
+
+use super::node::{Node, NO_CHILD};
+
+/// Tree construction parameters.
+#[derive(Copy, Clone, Debug)]
+pub struct BuildParams {
+    /// Maximum points in a leaf.
+    pub leaf_size: usize,
+}
+
+impl Default for BuildParams {
+    fn default() -> Self {
+        // Comparable to the mrkd-tree leaf sizes used in the paper's
+        // lineage of dual-tree code (tens of points).
+        BuildParams { leaf_size: 32 }
+    }
+}
+
+/// A kd-style median-split tree over a point set, with SR-tree bounding
+/// volumes and cached sufficient statistics in every node.
+#[derive(Clone, Debug)]
+pub struct KdTree {
+    nodes: Vec<Node>,
+    /// `perm[i]` = original row of the point at tree position `i`.
+    perm: Vec<usize>,
+    /// Points in tree order.
+    points: Matrix,
+    /// Weights in tree order.
+    weights: Vec<f64>,
+}
+
+impl KdTree {
+    /// Build over `points` with per-point `weights` (all > 0).
+    pub fn build(points: &Matrix, weights: &[f64], params: BuildParams) -> Self {
+        assert_eq!(points.rows(), weights.len());
+        assert!(points.rows() > 0, "empty point set");
+        assert!(params.leaf_size >= 1);
+        let n = points.rows();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut nodes = Vec::new();
+        build_rec(points, weights, &mut perm, &mut nodes, 0, n, 0, params.leaf_size);
+        // materialize reordered copies
+        let reordered = points.select_rows(&perm);
+        let rw: Vec<f64> = perm.iter().map(|&i| weights[i]).collect();
+        KdTree { nodes, perm, points: reordered, weights: rw }
+    }
+
+    /// Root node index (always 0).
+    #[inline]
+    pub fn root(&self) -> usize {
+        0
+    }
+
+    #[inline]
+    pub fn node(&self, i: usize) -> &Node {
+        &self.nodes[i]
+    }
+
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    #[inline]
+    pub fn num_points(&self) -> usize {
+        self.points.rows()
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.points.cols()
+    }
+
+    /// Points in tree order.
+    #[inline]
+    pub fn points(&self) -> &Matrix {
+        &self.points
+    }
+
+    /// Weights in tree order.
+    #[inline]
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    /// Original row of tree position `i`.
+    #[inline]
+    pub fn original_index(&self, i: usize) -> usize {
+        self.perm[i]
+    }
+
+    /// Children of node `i`, if internal.
+    pub fn children(&self, i: usize) -> Option<(usize, usize)> {
+        let n = &self.nodes[i];
+        if n.is_leaf() {
+            None
+        } else {
+            Some((n.left as usize, n.right as usize))
+        }
+    }
+
+    /// Total weight of the whole set.
+    pub fn total_weight(&self) -> f64 {
+        self.nodes[0].weight
+    }
+
+    /// Scatter per-tree-position values back to original row order.
+    pub fn unpermute(&self, tree_vals: &[f64]) -> Vec<f64> {
+        assert_eq!(tree_vals.len(), self.perm.len());
+        let mut out = vec![0.0; tree_vals.len()];
+        for (tree_pos, &orig) in self.perm.iter().enumerate() {
+            out[orig] = tree_vals[tree_pos];
+        }
+        out
+    }
+
+    /// Iterate node ids in a post-order (children before parents) —
+    /// the order the bottom-up moment pass needs.
+    pub fn postorder(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.nodes.len());
+        let mut stack = vec![(0usize, false)];
+        while let Some((i, expanded)) = stack.pop() {
+            if expanded || self.nodes[i].is_leaf() {
+                out.push(i);
+            } else {
+                stack.push((i, true));
+                stack.push((self.nodes[i].right as usize, false));
+                stack.push((self.nodes[i].left as usize, false));
+            }
+        }
+        out
+    }
+}
+
+/// Recursive construction over `perm[begin..end]`; returns node index.
+fn build_rec(
+    points: &Matrix,
+    weights: &[f64],
+    perm: &mut [usize],
+    nodes: &mut Vec<Node>,
+    begin: usize,
+    end: usize,
+    depth: u32,
+    leaf_size: usize,
+) -> u32 {
+    let slice = &perm[begin..end];
+    let bbox = HRect::from_points(points, slice);
+    // weighted centroid
+    let d = points.cols();
+    let mut centroid = vec![0.0; d];
+    let mut weight = 0.0;
+    for &i in slice.iter() {
+        let w = weights[i];
+        weight += w;
+        let r = points.row(i);
+        for j in 0..d {
+            centroid[j] += w * r[j];
+        }
+    }
+    for v in &mut centroid {
+        *v /= weight;
+    }
+    let mut linf_radius = 0.0f64;
+    let mut l2_radius = 0.0f64;
+    for &i in slice.iter() {
+        linf_radius = linf_radius.max(linf_dist(points.row(i), &centroid));
+        l2_radius = l2_radius.max(crate::geometry::dist(points.row(i), &centroid));
+    }
+    let sphere = Sphere::new(centroid.clone(), l2_radius);
+
+    let id = nodes.len() as u32;
+    nodes.push(Node {
+        begin,
+        end,
+        bbox,
+        sphere,
+        centroid,
+        weight,
+        linf_radius,
+        left: NO_CHILD,
+        right: NO_CHILD,
+        depth,
+    });
+
+    let count = end - begin;
+    if count > leaf_size {
+        let axis = nodes[id as usize].bbox.widest_dim();
+        // degenerate guard: all points identical in every dim → leaf
+        if nodes[id as usize].bbox.widths()[axis] > 0.0 {
+            let mid = begin + count / 2;
+            // median partition by nth-element selection on `axis`
+            perm[begin..end].select_nth_unstable_by(count / 2, |&a, &b| {
+                points.get(a, axis).partial_cmp(&points.get(b, axis)).unwrap()
+            });
+            let left = build_rec(points, weights, perm, nodes, begin, mid, depth + 1, leaf_size);
+            let right = build_rec(points, weights, perm, nodes, mid, end, depth + 1, leaf_size);
+            nodes[id as usize].left = left;
+            nodes[id as usize].right = right;
+        }
+    }
+    id
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn random_points(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg32::new(seed);
+        Matrix::from_rows(
+            &(0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect::<Vec<_>>(),
+        )
+    }
+
+    fn build(n: usize, d: usize, leaf: usize, seed: u64) -> (Matrix, KdTree) {
+        let pts = random_points(n, d, seed);
+        let w = vec![1.0; n];
+        let t = KdTree::build(&pts, &w, BuildParams { leaf_size: leaf });
+        (pts, t)
+    }
+
+    #[test]
+    fn root_owns_everything() {
+        let (_, t) = build(500, 3, 16, 1);
+        assert_eq!(t.node(0).begin, 0);
+        assert_eq!(t.node(0).end, 500);
+        assert_eq!(t.total_weight(), 500.0);
+    }
+
+    #[test]
+    fn children_partition_parent() {
+        let (_, t) = build(300, 2, 8, 2);
+        for i in 0..t.num_nodes() {
+            if let Some((l, r)) = t.children(i) {
+                let n = t.node(i);
+                let ln = t.node(l);
+                let rn = t.node(r);
+                assert_eq!(ln.begin, n.begin);
+                assert_eq!(ln.end, rn.begin);
+                assert_eq!(rn.end, n.end);
+                assert!((n.weight - ln.weight - rn.weight).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn leaves_respect_leaf_size() {
+        let (_, t) = build(1000, 4, 25, 3);
+        for i in 0..t.num_nodes() {
+            let n = t.node(i);
+            if n.is_leaf() {
+                assert!(n.count() <= 25 || n.bbox.widths().iter().all(|&w| w == 0.0));
+            } else {
+                assert!(n.count() > 25);
+            }
+        }
+    }
+
+    #[test]
+    fn bbox_contains_owned_points_and_centroid() {
+        let (_, t) = build(400, 3, 10, 4);
+        for i in 0..t.num_nodes() {
+            let n = t.node(i);
+            for pos in n.begin..n.end {
+                assert!(n.bbox.contains(t.points().row(pos)));
+                assert!(n.sphere.contains(t.points().row(pos)));
+            }
+            assert!(n.bbox.contains(&n.centroid));
+        }
+    }
+
+    #[test]
+    fn linf_radius_is_max_over_points() {
+        let (_, t) = build(200, 2, 12, 5);
+        for i in 0..t.num_nodes() {
+            let n = t.node(i);
+            let direct = (n.begin..n.end)
+                .map(|p| linf_dist(t.points().row(p), &n.centroid))
+                .fold(0.0f64, f64::max);
+            assert!((n.linf_radius - direct).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn perm_is_permutation_and_points_match() {
+        let (pts, t) = build(250, 3, 9, 6);
+        let mut seen = vec![false; 250];
+        for pos in 0..250 {
+            let orig = t.original_index(pos);
+            assert!(!seen[orig]);
+            seen[orig] = true;
+            assert_eq!(t.points().row(pos), pts.row(orig));
+        }
+    }
+
+    #[test]
+    fn unpermute_roundtrip() {
+        let (_, t) = build(100, 2, 7, 7);
+        // tree-order values = original index → unpermute gives identity
+        let tree_vals: Vec<f64> = (0..100).map(|p| t.original_index(p) as f64).collect();
+        let orig = t.unpermute(&tree_vals);
+        for (i, v) in orig.iter().enumerate() {
+            assert_eq!(*v, i as f64);
+        }
+    }
+
+    #[test]
+    fn postorder_children_first() {
+        let (_, t) = build(600, 3, 20, 8);
+        let order = t.postorder();
+        assert_eq!(order.len(), t.num_nodes());
+        let mut pos = vec![0usize; t.num_nodes()];
+        for (k, &i) in order.iter().enumerate() {
+            pos[i] = k;
+        }
+        for i in 0..t.num_nodes() {
+            if let Some((l, r)) = t.children(i) {
+                assert!(pos[l] < pos[i]);
+                assert!(pos[r] < pos[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_build_totals() {
+        let pts = random_points(100, 2, 9);
+        let mut rng = Pcg32::new(10);
+        let w: Vec<f64> = (0..100).map(|_| rng.uniform_in(0.5, 2.0)).collect();
+        let t = KdTree::build(&pts, &w, BuildParams::default());
+        let total: f64 = w.iter().sum();
+        assert!((t.total_weight() - total).abs() < 1e-9);
+    }
+
+    #[test]
+    fn duplicate_points_terminate() {
+        // all-identical points would recurse forever without the
+        // zero-width guard
+        let pts = Matrix::from_rows(&vec![vec![0.5, 0.5]; 100]);
+        let w = vec![1.0; 100];
+        let t = KdTree::build(&pts, &w, BuildParams { leaf_size: 4 });
+        assert_eq!(t.num_nodes(), 1);
+        assert!(t.node(0).is_leaf());
+    }
+
+    #[test]
+    fn single_point_tree() {
+        let pts = Matrix::from_rows(&[vec![1.0, 2.0, 3.0]]);
+        let t = KdTree::build(&pts, &[2.5], BuildParams::default());
+        assert_eq!(t.num_nodes(), 1);
+        assert_eq!(t.total_weight(), 2.5);
+        assert_eq!(t.node(0).linf_radius, 0.0);
+    }
+}

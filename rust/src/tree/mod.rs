@@ -1,0 +1,57 @@
+//! Space-partitioning trees with cached sufficient statistics.
+//!
+//! The paper uses "an efficient form of sphere-rectangle trees
+//! (Katayama & Satoh 1997), with … cached sufficient statistics as in
+//! mrkd-trees (Deng & Moore 1995)". We implement that as a kd-style
+//! median-split tree whose every node carries BOTH a bounding rectangle
+//! and a bounding sphere (distance bounds take the tighter of the two),
+//! plus the cached statistics the algorithms need: total weight W_R,
+//! weighted centroid x_R, and the L∞ radius used by the Lemma 4–6
+//! bounds.
+//!
+//! Far-field Hermite moments are *not* stored in the tree — they depend
+//! on the bandwidth — but are computed per run by [`moments::RefMoments`]
+//! in one bottom-up pass using the H2H operator (paper Fig. 5).
+
+pub mod build;
+pub mod moments;
+pub mod node;
+
+pub use build::{BuildParams, KdTree};
+pub use moments::RefMoments;
+pub use node::Node;
+
+/// The paper's PLIMIT schedule: maximum expansion order precomputed per
+/// dimension ("PLIMIT = 8 for D=2, 6 for D=3, 4 for D=5, 2 for D=6; we
+/// presume PLIMIT = 1 for D > 6").
+pub fn plimit_for_dim(dim: usize) -> usize {
+    match dim {
+        0 => panic!("zero-dimensional data"),
+        1 | 2 => 8,
+        3 => 6,
+        4 | 5 => 4,
+        6 => 2,
+        _ => 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plimit_schedule_matches_paper() {
+        assert_eq!(plimit_for_dim(2), 8);
+        assert_eq!(plimit_for_dim(3), 6);
+        assert_eq!(plimit_for_dim(5), 4);
+        assert_eq!(plimit_for_dim(6), 2);
+        assert_eq!(plimit_for_dim(7), 1);
+        assert_eq!(plimit_for_dim(16), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn plimit_zero_dim_panics() {
+        plimit_for_dim(0);
+    }
+}

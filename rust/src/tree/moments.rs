@@ -1,0 +1,206 @@
+//! Bottom-up precomputation of far-field Hermite moments for every node
+//! of a reference tree (paper Fig. 5): leaves accumulate their moments
+//! directly from their points; internal nodes combine children via the
+//! **H2H** translation operator. H2H is exact on downward-closed index
+//! sets, so the result equals direct accumulation at every node — we
+//! test exactly that.
+
+use crate::hermite::{accumulate_farfield, h2h, PairTable};
+use crate::kernel::GaussianKernel;
+use crate::multiindex::{Layout, MultiIndexSet};
+
+use super::KdTree;
+
+/// Per-node far-field (Hermite) moments of order PLIMIT for one tree at
+/// one bandwidth.
+#[derive(Clone, Debug)]
+pub struct RefMoments {
+    set: MultiIndexSet,
+    pairs: PairTable,
+    /// Node-major coefficient storage: `coeffs[node * set.len() ..]`.
+    coeffs: Vec<f64>,
+    scale: f64,
+}
+
+impl RefMoments {
+    /// Compute moments for every node of `tree` under `kernel`, with the
+    /// given layout and truncation order `plimit` (paper's PLIMIT).
+    pub fn compute(tree: &KdTree, kernel: &GaussianKernel, layout: Layout, plimit: usize) -> Self {
+        let set = MultiIndexSet::new(layout, tree.dim(), plimit);
+        let pairs = PairTable::new(&set);
+        let scale = kernel.series_scale();
+        let len = set.len();
+        let mut coeffs = vec![0.0; tree.num_nodes() * len];
+        let mut mono = vec![0.0; len];
+        let mut off = vec![0.0; tree.dim()];
+
+        for i in tree.postorder() {
+            let node = tree.node(i);
+            if node.is_leaf() {
+                let rows: Vec<usize> = (node.begin..node.end).collect();
+                accumulate_farfield(
+                    &set,
+                    tree.points(),
+                    &rows,
+                    tree.weights(),
+                    &node.centroid,
+                    scale,
+                    &mut coeffs[i * len..(i + 1) * len],
+                    &mut mono,
+                    &mut off,
+                );
+            } else {
+                let (l, r) = tree.children(i).unwrap();
+                for child in [l, r] {
+                    // split-borrow: child coeffs are read, parent written
+                    let (child_part, parent_part) = split_two(&mut coeffs, child, i, len);
+                    h2h(
+                        &set,
+                        &pairs,
+                        child_part,
+                        &tree.node(child).centroid,
+                        &tree.node(i).centroid,
+                        scale,
+                        parent_part,
+                        &mut mono,
+                        &mut off,
+                    );
+                }
+            }
+        }
+        RefMoments { set, pairs, coeffs, scale }
+    }
+
+    /// The multi-index set the moments are stored over.
+    #[inline]
+    pub fn set(&self) -> &MultiIndexSet {
+        &self.set
+    }
+
+    /// Pair table for translation operators over the same set.
+    #[inline]
+    pub fn pairs(&self) -> &PairTable {
+        &self.pairs
+    }
+
+    /// Series scale √(2h²) the moments were computed with.
+    #[inline]
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// Moments of node `i`.
+    #[inline]
+    pub fn node_coeffs(&self, i: usize) -> &[f64] {
+        let len = self.set.len();
+        &self.coeffs[i * len..(i + 1) * len]
+    }
+}
+
+/// Disjoint mutable slices for (child, parent) coefficient blocks.
+fn split_two(coeffs: &mut [f64], child: usize, parent: usize, len: usize) -> (&[f64], &mut [f64]) {
+    assert_ne!(child, parent);
+    if child < parent {
+        let (lo, hi) = coeffs.split_at_mut(parent * len);
+        (&lo[child * len..(child + 1) * len], &mut hi[..len])
+    } else {
+        let (lo, hi) = coeffs.split_at_mut(child * len);
+        let child_part = &hi[..len];
+        (child_part, &mut lo[parent * len..(parent + 1) * len])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::Matrix;
+    use crate::tree::BuildParams;
+    use crate::util::Pcg32;
+
+    fn random_tree(n: usize, d: usize, seed: u64, leaf: usize) -> KdTree {
+        let mut rng = Pcg32::new(seed);
+        let pts = Matrix::from_rows(
+            &(0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect::<Vec<_>>(),
+        );
+        let w: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.5, 1.5)).collect();
+        KdTree::build(&pts, &w, BuildParams { leaf_size: leaf })
+    }
+
+    /// The central invariant (Fig. 5 correctness): moments via bottom-up
+    /// H2H equal moments accumulated directly at each node's centroid.
+    #[test]
+    fn h2h_pass_equals_direct_accumulation() {
+        for layout in [Layout::Grid, Layout::Graded] {
+            let tree = random_tree(200, 2, 61, 16);
+            let kernel = GaussianKernel::new(0.2);
+            let m = RefMoments::compute(&tree, &kernel, layout, 4);
+            let set = m.set();
+            let mut mono = vec![0.0; set.len()];
+            let mut off = vec![0.0; 2];
+            for i in 0..tree.num_nodes() {
+                let node = tree.node(i);
+                let rows: Vec<usize> = (node.begin..node.end).collect();
+                let mut direct = vec![0.0; set.len()];
+                accumulate_farfield(
+                    set,
+                    tree.points(),
+                    &rows,
+                    tree.weights(),
+                    &node.centroid,
+                    m.scale(),
+                    &mut direct,
+                    &mut mono,
+                    &mut off,
+                );
+                let got = m.node_coeffs(i);
+                for j in 0..set.len() {
+                    assert!(
+                        (got[j] - direct[j]).abs() < 1e-9 * direct[j].abs().max(1.0),
+                        "{layout:?} node={i} j={j}: {} vs {}",
+                        got[j],
+                        direct[j]
+                    );
+                }
+            }
+        }
+    }
+
+    /// Monopole term of every node equals its cached weight.
+    #[test]
+    fn monopole_equals_node_weight() {
+        let tree = random_tree(150, 3, 62, 20);
+        let kernel = GaussianKernel::new(0.5);
+        let m = RefMoments::compute(&tree, &kernel, Layout::Graded, 3);
+        for i in 0..tree.num_nodes() {
+            let w = tree.node(i).weight;
+            assert!((m.node_coeffs(i)[0] - w).abs() < 1e-9 * w, "node {i}");
+        }
+    }
+
+    /// Moments scale correctly with bandwidth: recomputing at another h
+    /// changes coefficients (they are h-dependent) but keeps monopoles.
+    #[test]
+    fn bandwidth_dependence() {
+        let tree = random_tree(100, 2, 63, 16);
+        let m1 = RefMoments::compute(&tree, &GaussianKernel::new(0.1), Layout::Graded, 3);
+        let m2 = RefMoments::compute(&tree, &GaussianKernel::new(1.0), Layout::Graded, 3);
+        assert!((m1.node_coeffs(0)[0] - m2.node_coeffs(0)[0]).abs() < 1e-9);
+        // some higher-order coefficient must differ
+        let differs = (1..m1.set().len())
+            .any(|j| (m1.node_coeffs(0)[j] - m2.node_coeffs(0)[j]).abs() > 1e-12);
+        assert!(differs);
+    }
+
+    #[test]
+    fn split_two_borrows_disjoint() {
+        let mut v: Vec<f64> = (0..12).map(|x| x as f64).collect();
+        let (c, p) = split_two(&mut v, 0, 2, 4);
+        assert_eq!(c, &[0.0, 1.0, 2.0, 3.0]);
+        p[0] = 99.0;
+        assert_eq!(v[8], 99.0);
+        let (c2, p2) = split_two(&mut v, 2, 0, 4);
+        assert_eq!(c2[0], 99.0);
+        p2[0] = -1.0;
+        assert_eq!(v[0], -1.0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Tree node: a contiguous range of (reordered) points plus cached
+//! sufficient statistics and both bounding volumes.
+
+use crate::geometry::{HRect, Sphere};
+
+/// Sentinel for "no child".
+pub const NO_CHILD: u32 = u32::MAX;
+
+/// One node of a [`super::KdTree`]. Points owned by the node are the
+/// contiguous range `begin..end` of the tree's reordered point matrix.
+#[derive(Clone, Debug)]
+pub struct Node {
+    /// First owned point (inclusive), in tree order.
+    pub begin: usize,
+    /// One past the last owned point.
+    pub end: usize,
+    /// Bounding rectangle (tight).
+    pub bbox: HRect,
+    /// Bounding sphere about the centroid (tight).
+    pub sphere: Sphere,
+    /// Weighted centroid x_R of the owned points.
+    pub centroid: Vec<f64>,
+    /// Total weight W_R = Σ w_r over owned points.
+    pub weight: f64,
+    /// max_{x∈node} ‖x − centroid‖∞ (unscaled; bounds divide by h).
+    pub linf_radius: f64,
+    /// Left child index or [`NO_CHILD`].
+    pub left: u32,
+    /// Right child index or [`NO_CHILD`].
+    pub right: u32,
+    /// Depth from the root (root = 0).
+    pub depth: u32,
+}
+
+impl Node {
+    /// Number of owned points.
+    #[inline]
+    pub fn count(&self) -> usize {
+        self.end - self.begin
+    }
+
+    /// Is this a leaf?
+    #[inline]
+    pub fn is_leaf(&self) -> bool {
+        self.left == NO_CHILD
+    }
+
+    /// Lower bound on the distance between points of `self` and `other`
+    /// — the tighter of the rectangle and sphere bounds (SR-tree rule).
+    pub fn min_dist(&self, other: &Node) -> f64 {
+        let rect = self.bbox.min_sqdist(&other.bbox).sqrt();
+        let sph = self.sphere.min_dist(&other.sphere);
+        rect.max(sph)
+    }
+
+    /// Upper bound on the distance between points of the two nodes.
+    pub fn max_dist(&self, other: &Node) -> f64 {
+        let rect = self.bbox.max_sqdist(&other.bbox).sqrt();
+        let sph = self.sphere.max_dist(&other.sphere);
+        rect.min(sph)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mknode(lo: Vec<f64>, hi: Vec<f64>) -> Node {
+        let c: Vec<f64> = lo.iter().zip(&hi).map(|(a, b)| 0.5 * (a + b)).collect();
+        let r = lo
+            .iter()
+            .zip(&hi)
+            .map(|(a, b)| (b - a) * 0.5)
+            .map(|x| x * x)
+            .sum::<f64>()
+            .sqrt();
+        let linf = lo.iter().zip(&hi).map(|(a, b)| (b - a) * 0.5).fold(0.0f64, f64::max);
+        Node {
+            begin: 0,
+            end: 1,
+            bbox: HRect::new(lo, hi),
+            sphere: Sphere::new(c.clone(), r),
+            centroid: c,
+            weight: 1.0,
+            linf_radius: linf,
+            left: NO_CHILD,
+            right: NO_CHILD,
+            depth: 0,
+        }
+    }
+
+    #[test]
+    fn sr_bounds_tighter_than_either() {
+        let a = mknode(vec![0.0, 0.0], vec![1.0, 1.0]);
+        let b = mknode(vec![3.0, 0.0], vec![4.0, 1.0]);
+        let mind = a.min_dist(&b);
+        let maxd = a.max_dist(&b);
+        // rect min = 2.0; sphere min = 3 − √0.5 − √0.5 ≈ 1.586 → rect wins
+        assert!((mind - 2.0).abs() < 1e-12);
+        // rect max = √17 ≈ 4.123; sphere max = 3 + √2 ≈ 4.414 → rect wins
+        assert!((maxd - 17f64.sqrt()).abs() < 1e-12);
+        assert!(mind <= maxd);
+    }
+
+    #[test]
+    fn leaf_detection() {
+        let n = mknode(vec![0.0], vec![1.0]);
+        assert!(n.is_leaf());
+        assert_eq!(n.count(), 1);
+    }
+}

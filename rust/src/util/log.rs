@@ -1,0 +1,81 @@
+//! Minimal leveled logger. Level is read once from `FASTGAUSS_LOG`
+//! (`error|warn|info|debug|trace`, default `info`) — no global mutable
+//! state beyond a lazily initialized level.
+
+use std::sync::OnceLock;
+
+#[derive(Copy, Clone, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn parse(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" | "warning" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+}
+
+static LEVEL: OnceLock<Level> = OnceLock::new();
+
+/// The active log level.
+pub fn level() -> Level {
+    *LEVEL.get_or_init(|| {
+        std::env::var("FASTGAUSS_LOG").map(|v| Level::parse(&v)).unwrap_or(Level::Info)
+    })
+}
+
+/// True when a message at `l` should be emitted.
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Emit a log line (used via the macros below).
+pub fn emit(l: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        eprintln!("[fastgauss {:5}] {}", format!("{l:?}").to_lowercase(), args);
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Info, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Warn, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Debug, format_args!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("error"), Level::Error);
+        assert_eq!(Level::parse("WARN"), Level::Warn);
+        assert_eq!(Level::parse("bogus"), Level::Info);
+        assert_eq!(Level::parse("trace"), Level::Trace);
+    }
+
+    #[test]
+    fn ordering_gates_output() {
+        assert!(Level::Error < Level::Trace);
+        // enabled() must hold for levels at or below the active one.
+        let active = level();
+        assert!(enabled(Level::Error) || active < Level::Error);
+    }
+}

@@ -1,0 +1,12 @@
+//! Small self-contained utilities: seeded RNG, timing, statistics and
+//! leveled logging. The build is fully offline, so we carry our own RNG
+//! instead of the `rand` crate.
+
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Pcg32;
+pub use timer::Timer;

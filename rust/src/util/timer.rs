@@ -1,0 +1,110 @@
+//! Wall-clock timing helpers used by the bench harness and the
+//! coordinator's metrics. We report both per-phase and cumulative times,
+//! mirroring the paper's "times include preprocessing" convention.
+
+use std::time::{Duration, Instant};
+
+/// A simple start/stop timer accumulating total elapsed time.
+#[derive(Debug)]
+pub struct Timer {
+    started: Option<Instant>,
+    total: Duration,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Timer { started: None, total: Duration::ZERO }
+    }
+
+    /// Create a timer that is already running.
+    pub fn started() -> Self {
+        Timer { started: Some(Instant::now()), total: Duration::ZERO }
+    }
+
+    pub fn start(&mut self) {
+        assert!(self.started.is_none(), "timer already running");
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        let s = self.started.take().expect("timer not running");
+        self.total += s.elapsed();
+    }
+
+    /// Total accumulated time, including the in-flight span if running.
+    pub fn elapsed(&self) -> Duration {
+        match self.started {
+            Some(s) => self.total + s.elapsed(),
+            None => self.total,
+        }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Format seconds the way the paper's tables do: 3 significant digits,
+/// switching to fixed notation for large values.
+pub fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() {
+        return "inf".to_string();
+    }
+    if s >= 100.0 {
+        format!("{s:.0}")
+    } else if s >= 10.0 {
+        format!("{s:.1}")
+    } else if s >= 1.0 {
+        format!("{s:.2}")
+    } else {
+        format!("{s:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_across_spans() {
+        let mut t = Timer::new();
+        t.start();
+        std::thread::sleep(Duration::from_millis(5));
+        t.stop();
+        let first = t.elapsed();
+        t.start();
+        std::thread::sleep(Duration::from_millis(5));
+        t.stop();
+        assert!(t.elapsed() > first);
+        assert!(t.secs() >= 0.009);
+    }
+
+    #[test]
+    fn time_it_returns_result() {
+        let (v, s) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn fmt_matches_paper_style() {
+        assert_eq!(fmt_secs(452.0), "452");
+        assert_eq!(fmt_secs(85.6), "85.6");
+        assert_eq!(fmt_secs(8.12), "8.12");
+        assert_eq!(fmt_secs(0.82), "0.820");
+        assert_eq!(fmt_secs(f64::INFINITY), "inf");
+    }
+}

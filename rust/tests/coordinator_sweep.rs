@@ -1,0 +1,117 @@
+//! Coordinator integration: the full table protocol (all seven
+//! algorithms including the FGT τ-halving and IFGT K-doubling loops) on
+//! a small dataset, with verified cells and paper-style rendering.
+
+use fastgauss::coordinator::{report, run_sweep, AlgoSpec, CellOutcome, SweepConfig};
+use fastgauss::data;
+use fastgauss::kde::bandwidth::silverman;
+
+fn base_cfg(name: &str, n: usize, mult: Vec<f64>, algos: Vec<AlgoSpec>) -> SweepConfig {
+    let ds = data::by_name(name, n, 3).unwrap();
+    let h_star = silverman(&ds.points);
+    SweepConfig {
+        dataset: ds,
+        epsilon: 0.01,
+        h_star,
+        multipliers: mult,
+        algorithms: algos,
+        workers: 2,
+        leaf_size: 24,
+    }
+}
+
+#[test]
+fn full_seven_algorithm_protocol_2d() {
+    let cfg = base_cfg(
+        "astro2d",
+        400,
+        vec![1.0, 100.0],
+        AlgoSpec::paper_order(), // Naive, FGT, IFGT, DFD, DFDO, DFTO, DITO
+    );
+    let res = run_sweep(&cfg);
+    assert_eq!(res.cells.len(), 14);
+    // guaranteed algorithms must all succeed and verify
+    for (a, spec) in res.algorithms.iter().enumerate() {
+        for b in 0..2 {
+            let cell = res.cell(a, b);
+            match spec {
+                AlgoSpec::Naive | AlgoSpec::Dfd | AlgoSpec::Dfdo | AlgoSpec::Dfto
+                | AlgoSpec::Dito => {
+                    assert!(
+                        matches!(cell.outcome, CellOutcome::Time(_)),
+                        "{} failed: {:?}",
+                        spec.name(),
+                        cell.outcome
+                    );
+                    assert!(cell.rel_err.unwrap() <= 0.01 * (1.0 + 1e-9));
+                }
+                // FGT/IFGT may succeed or fail; outcome must be recorded
+                _ => {}
+            }
+        }
+    }
+    let table = report::render_table(&res);
+    for name in ["Naive", "FGT", "IFGT", "DFD", "DFDO", "DFTO", "DITO"] {
+        assert!(table.contains(name), "missing row {name} in\n{table}");
+    }
+}
+
+#[test]
+fn fgt_small_bandwidth_is_x_large_is_ok_2d() {
+    let cfg = base_cfg("astro2d", 300, vec![1e-3, 1e2], vec![AlgoSpec::Fgt]);
+    let res = run_sweep(&cfg);
+    assert_eq!(res.cell(0, 0).outcome, CellOutcome::RamExhausted, "tiny h must be X");
+    assert!(
+        matches!(res.cell(0, 1).outcome, CellOutcome::Time(_)),
+        "large h should succeed: {:?}",
+        res.cell(0, 1).outcome
+    );
+}
+
+#[test]
+fn fgt_is_x_everywhere_in_high_d() {
+    // paper: FGT exhausts RAM for D ≥ 5 at every bandwidth
+    let cfg = base_cfg("bio5", 200, vec![1.0], vec![AlgoSpec::Fgt]);
+    let res = run_sweep(&cfg);
+    assert_eq!(res.cell(0, 0).outcome, CellOutcome::RamExhausted);
+}
+
+#[test]
+fn ifgt_fails_at_small_bandwidth() {
+    // paper: IFGT is ∞ across almost the entire sweep
+    let cfg = base_cfg("astro2d", 300, vec![1e-3], vec![AlgoSpec::Ifgt]);
+    let res = run_sweep(&cfg);
+    assert_eq!(res.cell(0, 0).outcome, CellOutcome::ToleranceUnreachable);
+}
+
+#[test]
+fn csv_export_matches_cells() {
+    let cfg = base_cfg("galaxy3d", 200, vec![0.1, 1.0], vec![AlgoSpec::Dito, AlgoSpec::Dfd]);
+    let res = run_sweep(&cfg);
+    let csv = report::render_csv(&res);
+    assert_eq!(csv.lines().count(), 1 + 4);
+    assert!(csv.lines().skip(1).all(|l| l.starts_with("galaxy3d,3,200,")));
+}
+
+#[test]
+fn workers_do_not_change_results() {
+    let mk = |workers| {
+        let mut cfg =
+            base_cfg("astro2d", 250, vec![0.1, 1.0, 10.0], vec![AlgoSpec::Dito, AlgoSpec::Dfdo]);
+        cfg.workers = workers;
+        run_sweep(&cfg)
+    };
+    let a = mk(1);
+    let b = mk(4);
+    // outcomes (not timings) must be identical and ordered identically
+    assert_eq!(a.cells.len(), b.cells.len());
+    for (x, y) in a.cells.iter().zip(&b.cells) {
+        assert_eq!((x.algo_index, x.bandwidth_index), (y.algo_index, y.bandwidth_index));
+        assert_eq!(
+            matches!(x.outcome, CellOutcome::Time(_)),
+            matches!(y.outcome, CellOutcome::Time(_))
+        );
+        // deterministic algorithms → identical verified errors
+        assert_eq!(x.rel_err, y.rel_err);
+    }
+}

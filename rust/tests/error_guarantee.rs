@@ -1,0 +1,116 @@
+//! The paper's central correctness claim, end-to-end: every dual-tree
+//! algorithm automatically achieves the user's relative tolerance
+//! ∀q |G̃(q)−G(q)| ≤ ε·G(q), on every dataset family, across the whole
+//! bandwidth range of the cross-validation sweep.
+
+use fastgauss::algo::{
+    dfd::Dfd, dfdo::Dfdo, dfto::Dfto, dito::Dito, max_relative_error, naive::Naive, GaussSum,
+    GaussSumProblem,
+};
+use fastgauss::data;
+use fastgauss::kde::bandwidth::silverman;
+
+const N: usize = 400;
+const EPS: f64 = 0.01;
+
+fn engines() -> Vec<Box<dyn GaussSum>> {
+    vec![
+        Box::new(Dfd::new()),
+        Box::new(Dfdo::new()),
+        Box::new(Dfto::new()),
+        Box::new(Dito::default()),
+    ]
+}
+
+fn check_dataset(name: &str, multipliers: &[f64]) {
+    let ds = data::by_name(name, N, 2024).unwrap();
+    let pilot = silverman(&ds.points);
+    for &m in multipliers {
+        let h = pilot * m;
+        let problem = GaussSumProblem::kde(&ds.points, h, EPS);
+        let exact = Naive::new().run(&problem).unwrap().sums;
+        for engine in engines() {
+            let out = engine.run(&problem).unwrap();
+            let rel = max_relative_error(&out.sums, &exact);
+            assert!(
+                rel <= EPS * (1.0 + 1e-9),
+                "{name} {} h={h:.5}: rel {rel:.2e} > {EPS}",
+                engine.name()
+            );
+        }
+    }
+}
+
+// Full 10^-3..10^3 sweep on the low-D sets (fast), pruned sweep on the
+// high-D ones to keep test time sane.
+#[test]
+fn astro2d_full_sweep() {
+    check_dataset("astro2d", &[1e-3, 1e-2, 1e-1, 1.0, 1e1, 1e2, 1e3]);
+}
+
+#[test]
+fn galaxy3d_full_sweep() {
+    check_dataset("galaxy3d", &[1e-3, 1e-2, 1e-1, 1.0, 1e1, 1e2, 1e3]);
+}
+
+#[test]
+fn bio5_sweep() {
+    check_dataset("bio5", &[1e-2, 1.0, 1e2]);
+}
+
+#[test]
+fn pall7_sweep() {
+    check_dataset("pall7", &[1e-2, 1.0, 1e2]);
+}
+
+#[test]
+fn covtype10_sweep() {
+    check_dataset("covtype10", &[1e-1, 1.0, 1e1]);
+}
+
+#[test]
+fn texture16_sweep() {
+    check_dataset("texture16", &[1e-1, 1.0, 1e1]);
+}
+
+#[test]
+fn tighter_tolerances_also_hold() {
+    let ds = data::by_name("astro2d", 300, 7).unwrap();
+    let pilot = silverman(&ds.points);
+    for eps in [1e-3, 1e-5] {
+        let problem = GaussSumProblem::kde(&ds.points, pilot, eps);
+        let exact = Naive::new().run(&problem).unwrap().sums;
+        for engine in engines() {
+            let out = engine.run(&problem).unwrap();
+            let rel = max_relative_error(&out.sums, &exact);
+            assert!(rel <= eps * (1.0 + 1e-9), "{} eps={eps}: {rel:.2e}", engine.name());
+        }
+    }
+}
+
+#[test]
+fn weighted_problems_hold() {
+    let ds = data::by_name("galaxy3d", 300, 8).unwrap();
+    let mut rng = fastgauss::util::Pcg32::new(9);
+    let w: Vec<f64> = (0..300).map(|_| rng.uniform_in(0.1, 5.0)).collect();
+    let h = silverman(&ds.points);
+    let problem = GaussSumProblem::new(&ds.points, &ds.points, Some(&w), h, EPS);
+    let exact = Naive::new().run(&problem).unwrap().sums;
+    for engine in engines() {
+        let out = engine.run(&problem).unwrap();
+        let rel = max_relative_error(&out.sums, &exact);
+        assert!(rel <= EPS * (1.0 + 1e-9), "{}: {rel:.2e}", engine.name());
+    }
+}
+
+#[test]
+fn series_methods_actually_fire_where_paper_says() {
+    // D=2 large bandwidth: DITO must be pruning via expansions, not
+    // just finite differences (otherwise we've built DFD twice)
+    let ds = data::by_name("astro2d", 1000, 10).unwrap();
+    let h = silverman(&ds.points) * 100.0;
+    let problem = GaussSumProblem::kde(&ds.points, h, EPS);
+    let out = Dito::default().run(&problem).unwrap();
+    let series = out.stats.dh_prunes + out.stats.dl_prunes + out.stats.h2l_prunes;
+    assert!(series > 0, "no series prunes at large h: {:?}", out.stats);
+}

@@ -1,0 +1,290 @@
+//! Property-based invariants over randomized inputs (see `prop`):
+//! translation-operator exactness, bound validity, token-ledger
+//! soundness, tree invariants, and end-to-end error-guarantee fuzzing.
+
+use fastgauss::algo::dualtree::{run_dualtree, DualTreeConfig, SeriesKind};
+use fastgauss::algo::{max_relative_error, naive::Naive, GaussSum, GaussSumProblem};
+use fastgauss::bounds::odp::OdpBounds;
+use fastgauss::bounds::NodeGeometry;
+use fastgauss::geometry::{linf_dist, Matrix};
+use fastgauss::hermite::{
+    accumulate_farfield, eval_farfield, eval_local, h2h, l2l, HermiteTable, PairTable,
+};
+use fastgauss::kernel::GaussianKernel;
+use fastgauss::multiindex::{Layout, MultiIndexSet};
+use fastgauss::prop::{forall, Gen};
+use fastgauss::tree::{BuildParams, KdTree, RefMoments};
+
+fn random_matrix(g: &mut Gen, n: usize, d: usize) -> Matrix {
+    Matrix::from_rows(&g.clustered_points(n, d))
+}
+
+/// H2H translation is exact on downward-closed sets — for random trees,
+/// dims, layouts, orders and bandwidths.
+#[test]
+fn prop_h2h_moments_equal_direct() {
+    forall("h2h == direct moments", 20, |g| {
+        let d = g.usize_in(1, 4);
+        let layout = if g.bool() { Layout::Grid } else { Layout::Graded };
+        let p = g.usize_in(1, 4);
+        let n = g.usize_in(20, 120);
+        let pts = random_matrix(g, n, d);
+        let w = g.vec_f64(n, 0.1, 2.0);
+        let tree = KdTree::build(&pts, &w, BuildParams { leaf_size: g.usize_in(4, 24) });
+        let kernel = GaussianKernel::new(g.log_uniform(0.05, 5.0));
+        let m = RefMoments::compute(&tree, &kernel, layout, p);
+        let set = m.set();
+        let mut mono = vec![0.0; set.len()];
+        let mut off = vec![0.0; d];
+        // spot-check a few nodes including the root
+        for i in [0, tree.num_nodes() / 2, tree.num_nodes() - 1] {
+            let node = tree.node(i);
+            let rows: Vec<usize> = (node.begin..node.end).collect();
+            let mut direct = vec![0.0; set.len()];
+            accumulate_farfield(
+                set,
+                tree.points(),
+                &rows,
+                tree.weights(),
+                &node.centroid,
+                m.scale(),
+                &mut direct,
+                &mut mono,
+                &mut off,
+            );
+            for j in 0..set.len() {
+                let got = m.node_coeffs(i)[j];
+                if (got - direct[j]).abs() > 1e-8 * direct[j].abs().max(1.0) {
+                    return Err(format!("node {i} coeff {j}: {got} vs {}", direct[j]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// L2L exactly re-centers a truncated polynomial.
+#[test]
+fn prop_l2l_recenters_exactly() {
+    forall("l2l recenters", 30, |g| {
+        let d = g.usize_in(1, 3);
+        let layout = if g.bool() { Layout::Grid } else { Layout::Graded };
+        let p = g.usize_in(1, 5);
+        let set = MultiIndexSet::new(layout, d, p);
+        let pairs = PairTable::new(&set);
+        let coeffs = g.vec_f64(set.len(), -1.0, 1.0);
+        let old_c = g.vec_f64(d, -0.5, 0.5);
+        let new_c = g.vec_f64(d, -0.5, 0.5);
+        let scale = g.log_uniform(0.2, 3.0);
+        let mut shifted = vec![0.0; set.len()];
+        let mut mono = vec![0.0; set.len()];
+        let mut off = vec![0.0; d];
+        l2l(&set, &pairs, &coeffs, &old_c, &new_c, scale, &mut shifted, &mut mono, &mut off);
+        for _ in 0..5 {
+            let xq = g.vec_f64(d, -1.0, 1.0);
+            let a = eval_local(&set, &coeffs, &old_c, scale, &xq, &mut mono, &mut off);
+            let b = eval_local(&set, &shifted, &new_c, scale, &xq, &mut mono, &mut off);
+            if (a - b).abs() > 1e-8 * a.abs().max(1.0) {
+                return Err(format!("{a} vs {b} at {xq:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Lemma 4 dominates the measured far-field truncation error for any
+/// random geometry (the O(Dᵖ) bound has no node-size restriction, so we
+/// fuzz radii beyond 1 too).
+#[test]
+fn prop_lemma4_dominates_measured_error() {
+    forall("lemma4 valid", 25, |g| {
+        let d = g.usize_in(1, 3);
+        let h = g.log_uniform(0.1, 2.0);
+        let kernel = GaussianKernel::new(h);
+        let n = g.usize_in(5, 20);
+        let spread = g.log_uniform(0.01, 1.5) * h; // radii up to 1.5·h
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..d).map(|_| spread * g.f64_in(-1.0, 1.0)).collect())
+            .collect();
+        let pts = Matrix::from_rows(&rows);
+        let w = vec![1.0; n];
+        let all: Vec<usize> = (0..n).collect();
+        let center = pts.col_mean();
+        let r_ref =
+            all.iter().map(|&r| linf_dist(pts.row(r), &center) / h).fold(0.0f64, f64::max);
+        let mut xq = vec![0.0; d];
+        xq[0] = spread + g.log_uniform(0.05, 2.0);
+        // min distance from xq to the point-cloud bbox
+        let lo = pts.col_min();
+        let hi = pts.col_max();
+        let mut dmin2 = 0.0;
+        for j in 0..d {
+            let del = if xq[j] < lo[j] {
+                lo[j] - xq[j]
+            } else {
+                (xq[j] - hi[j]).max(0.0)
+            };
+            dmin2 += del * del;
+        }
+        let geo = NodeGeometry { dim: d, min_sqdist: dmin2, r_ref, r_query: 0.0, h };
+        let exact: f64 = all
+            .iter()
+            .map(|&r| kernel.eval_sq(fastgauss::geometry::sqdist(pts.row(r), &xq)))
+            .sum();
+        let p = g.usize_in(1, 6);
+        let set = MultiIndexSet::new(Layout::Graded, d, p);
+        let mut coeffs = vec![0.0; set.len()];
+        let mut mono = vec![0.0; set.len()];
+        let mut off = vec![0.0; d];
+        accumulate_farfield(
+            &set, &pts, &all, &w, &center, kernel.series_scale(), &mut coeffs, &mut mono,
+            &mut off,
+        );
+        let mut table = HermiteTable::new(d, p);
+        let est =
+            eval_farfield(&set, &coeffs, &center, kernel.series_scale(), &xq, &mut table, &mut off);
+        let err = (est - exact).abs();
+        let bound = n as f64 * OdpBounds::e_dh(&geo, p);
+        if err <= bound * (1.0 + 1e-9) + 1e-12 {
+            Ok(())
+        } else {
+            Err(format!("d={d} p={p} r={r_ref:.2}: err {err:.3e} > bound {bound:.3e}"))
+        }
+    });
+}
+
+/// End-to-end fuzz of the paper's guarantee: random data shape, dim,
+/// bandwidth, tolerance, engine configuration — error never exceeds ε.
+#[test]
+fn prop_error_guarantee_fuzz() {
+    forall("dual-tree error guarantee", 15, |g| {
+        let d = g.usize_in(1, 6);
+        let n = g.usize_in(50, 300);
+        let pts = random_matrix(g, n, d);
+        let h = g.log_uniform(1e-3, 1e2);
+        let eps = g.log_uniform(1e-4, 0.2);
+        let cfg = DualTreeConfig {
+            leaf_size: g.usize_in(4, 64),
+            use_tokens: g.bool(),
+            series: match g.usize_in(0, 2) {
+                0 => None,
+                1 => Some(SeriesKind::OdpGraded),
+                _ => Some(SeriesKind::OpdGrid),
+            },
+            plimit: if g.bool() { None } else { Some(g.usize_in(1, 6)) },
+        };
+        let problem = GaussSumProblem::kde(&pts, h, eps);
+        let exact = Naive::new().run(&problem).unwrap().sums;
+        let out = run_dualtree(&problem, &cfg).map_err(|e| e.to_string())?;
+        let rel = max_relative_error(&out.sums, &exact);
+        if rel <= eps * (1.0 + 1e-9) {
+            Ok(())
+        } else {
+            Err(format!("cfg={cfg:?} d={d} n={n} h={h:.3e} eps={eps:.3e}: rel={rel:.3e}"))
+        }
+    });
+}
+
+/// Tree structural invariants over random builds.
+#[test]
+fn prop_tree_invariants() {
+    forall("tree invariants", 25, |g| {
+        let d = g.usize_in(1, 8);
+        let n = g.usize_in(1, 400);
+        let rows: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| g.f64_in(0.0, 1.0)).collect()).collect();
+        let pts = Matrix::from_rows(&rows);
+        let w = g.vec_f64(n, 0.01, 3.0);
+        let tree = KdTree::build(&pts, &w, BuildParams { leaf_size: g.usize_in(1, 40) });
+        // weights conserve, children partition, bboxes contain
+        let total: f64 = w.iter().sum();
+        if (tree.total_weight() - total).abs() > 1e-9 * total {
+            return Err("weight not conserved".into());
+        }
+        for i in 0..tree.num_nodes() {
+            let nd = tree.node(i);
+            for pos in nd.begin..nd.end {
+                if !nd.bbox.contains(tree.points().row(pos)) {
+                    return Err(format!("node {i} bbox misses point {pos}"));
+                }
+            }
+            if let Some((l, r)) = tree.children(i) {
+                let (ln, rn) = (tree.node(l), tree.node(r));
+                if ln.begin != nd.begin || ln.end != rn.begin || rn.end != nd.end {
+                    return Err(format!("node {i} children don't partition"));
+                }
+                // sibling min/max distance bounds must bracket truth
+                for _ in 0..3 {
+                    let a = ln.begin + g.usize_in(0, ln.count() - 1);
+                    let b = rn.begin + g.usize_in(0, rn.count() - 1);
+                    let dd = fastgauss::geometry::dist(
+                        tree.points().row(a),
+                        tree.points().row(b),
+                    );
+                    if dd < ln.min_dist(rn) - 1e-9 || dd > ln.max_dist(rn) + 1e-9 {
+                        return Err(format!(
+                            "node {i}: dist {dd} outside [{}, {}]",
+                            ln.min_dist(rn),
+                            ln.max_dist(rn)
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Tokens never push the verified error past ε AND genuinely help:
+/// across random instances DFDO's base-case work ≤ DFD's.
+#[test]
+fn prop_tokens_sound_and_useful() {
+    forall("tokens sound & useful", 10, |g| {
+        let d = g.usize_in(1, 4);
+        let n = g.usize_in(100, 400);
+        let pts = random_matrix(g, n, d);
+        let h = g.log_uniform(1e-2, 10.0);
+        let problem = GaussSumProblem::kde(&pts, h, 0.01);
+        let exact = Naive::new().run(&problem).unwrap().sums;
+        let base = DualTreeConfig { use_tokens: false, series: None, ..Default::default() };
+        let tok = DualTreeConfig { use_tokens: true, series: None, ..Default::default() };
+        let a = run_dualtree(&problem, &base).map_err(|e| e.to_string())?;
+        let b = run_dualtree(&problem, &tok).map_err(|e| e.to_string())?;
+        let rel = max_relative_error(&b.sums, &exact);
+        if rel > 0.01 * (1.0 + 1e-9) {
+            return Err(format!("tokens broke guarantee: {rel:.2e}"));
+        }
+        if b.stats.base_point_pairs > a.stats.base_point_pairs {
+            return Err(format!(
+                "tokens increased work: {} > {}",
+                b.stats.base_point_pairs, a.stats.base_point_pairs
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Dataset generators: deterministic, unit-cube, right shapes.
+#[test]
+fn prop_dataset_contracts() {
+    forall("dataset contracts", 12, |g| {
+        let names = ["astro2d", "galaxy3d", "bio5", "pall7", "covtype10", "texture16"];
+        let name = names[g.usize_in(0, names.len() - 1)];
+        let n = g.usize_in(10, 500);
+        let seed = g.rng().next_u64();
+        let a = fastgauss::data::by_name(name, n, seed).unwrap();
+        let b = fastgauss::data::by_name(name, n, seed).unwrap();
+        if a.points != b.points {
+            return Err(format!("{name} not deterministic"));
+        }
+        if a.len() != n {
+            return Err(format!("{name}: wrong n"));
+        }
+        for j in 0..a.dim() {
+            if a.points.col_min()[j] < -1e-12 || a.points.col_max()[j] > 1.0 + 1e-12 {
+                return Err(format!("{name}: outside unit cube"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,81 @@
+//! AOT round-trip: for every paper dimension, the PJRT-executed artifact
+//! must agree with the pure-rust exhaustive sum to near machine
+//! precision, including the padding paths. Requires `make artifacts`;
+//! the tests skip (with a note) when artifacts are absent so `cargo
+//! test` works on a fresh checkout.
+
+use fastgauss::algo::{max_relative_error, naive::Naive, GaussSum, GaussSumProblem};
+use fastgauss::data;
+use fastgauss::kde::bandwidth::silverman;
+use fastgauss::runtime::{artifacts_dir, ArtifactManifest, TiledNaive};
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("NOTE: artifacts missing — run `make artifacts`; skipping");
+    }
+    ok
+}
+
+#[test]
+fn manifest_covers_all_paper_dims() {
+    if !have_artifacts() {
+        return;
+    }
+    let m = ArtifactManifest::load(&artifacts_dir()).unwrap();
+    for d in [2usize, 3, 5, 7, 10, 16] {
+        let spec = m.spec(d).unwrap_or_else(|| panic!("no artifact for D={d}"));
+        assert!(spec.file.exists(), "artifact file missing for D={d}");
+    }
+}
+
+#[test]
+fn every_dimension_round_trips() {
+    if !have_artifacts() {
+        return;
+    }
+    for (name, _, d) in data::PAPER_SUITE {
+        // sizes straddle the tile boundaries (TQ=256, NR=4096)
+        let n = 300;
+        let ds = data::by_name(name, n, 5).unwrap();
+        let h = silverman(&ds.points);
+        let problem = GaussSumProblem::kde(&ds.points, h, 0.01);
+        let tiled = TiledNaive::load(*d).unwrap();
+        let got = tiled.run(&problem).unwrap().sums;
+        let want = Naive::new().run(&problem).unwrap().sums;
+        let rel = max_relative_error(&got, &want);
+        assert!(rel < 1e-10, "{name} (D={d}): rel {rel:.2e}");
+    }
+}
+
+#[test]
+fn exact_tile_boundary_sizes() {
+    if !have_artifacts() {
+        return;
+    }
+    // n exactly at TQ and NR multiples — no padding anywhere
+    let ds = data::by_name("astro2d", 256, 6).unwrap();
+    let h = 0.1;
+    let problem = GaussSumProblem::kde(&ds.points, h, 0.01);
+    let tiled = TiledNaive::load(2).unwrap();
+    let got = tiled.run(&problem).unwrap().sums;
+    let want = Naive::new().run(&problem).unwrap().sums;
+    assert!(max_relative_error(&got, &want) < 1e-10);
+}
+
+#[test]
+fn bichromatic_roundtrip() {
+    if !have_artifacts() {
+        return;
+    }
+    let refs = data::by_name("galaxy3d", 900, 7).unwrap();
+    let queries = data::by_name("galaxy3d", 123, 8).unwrap();
+    let mut rng = fastgauss::util::Pcg32::new(9);
+    let w: Vec<f64> = (0..900).map(|_| rng.uniform_in(0.2, 3.0)).collect();
+    let problem =
+        GaussSumProblem::new(&queries.points, &refs.points, Some(&w), 0.07, 0.01);
+    let tiled = TiledNaive::load(3).unwrap();
+    let got = tiled.run(&problem).unwrap().sums;
+    let want = Naive::new().run(&problem).unwrap().sums;
+    assert!(max_relative_error(&got, &want) < 1e-10);
+}
