@@ -9,12 +9,12 @@ use fastgauss::coordinator::{report, run_sweep, AlgoSpec, SweepConfig};
 use fastgauss::data;
 use fastgauss::kde::bandwidth::silverman;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fastgauss::util::error::Result<()> {
     let mut args = std::env::args().skip(1);
     let dataset = args.next().unwrap_or_else(|| "astro2d".to_string());
     let n: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(2000);
     let ds = data::by_name(&dataset, n, 42)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+        .ok_or_else(|| fastgauss::anyhow!("unknown dataset {dataset}"))?;
     let h_star = silverman(&ds.points);
     let cfg = SweepConfig {
         dataset: ds,

@@ -11,7 +11,7 @@ use fastgauss::geometry::Matrix;
 use fastgauss::kde::bandwidth::silverman;
 use fastgauss::kde::density_at;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fastgauss::util::error::Result<()> {
     let mut args = std::env::args().skip(1);
     let n: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(4000);
     let g: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(64);
@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
 
     let engine = Dito::default();
     let dens = density_at(&grid, &ds.points, h, 0.01, &engine)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        .map_err(|e| fastgauss::anyhow!("{e}"))?;
 
     let out = "density_grid.csv";
     let mut csv_rows = Vec::with_capacity(g * g);

@@ -8,7 +8,7 @@ use fastgauss::data;
 use fastgauss::kde::bandwidth::silverman;
 use fastgauss::kde::density_at_points;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fastgauss::util::error::Result<()> {
     // 1. a dataset (any Matrix works; this is the 2-D astronomy-like set)
     let ds = data::by_name("astro2d", 2000, 42).unwrap();
 

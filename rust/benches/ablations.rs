@@ -5,14 +5,19 @@
 //!   §leaf    — tree leaf size;
 //!   §plimit  — truncation-order cap;
 //!   §tile    — PJRT-artifact base kernel vs pure-rust base case on the
-//!              exhaustive path (when does offload pay?).
+//!              exhaustive path (when does offload pay?);
+//!   §sweep   — the PR's amortization claim: a 13-point LSCV-style
+//!              bandwidth sweep via per-h rebuilds (sequential) vs one
+//!              prepared multi-threaded SweepEngine, verified against
+//!              Naive at every grid point.
 //!
-//! Run: `cargo bench --bench ablations` (knobs: FASTGAUSS_N)
+//! Run: `cargo bench --bench ablations`
+//! (knobs: FASTGAUSS_N, FASTGAUSS_SWEEP_N)
 
-use fastgauss::algo::dualtree::{run_dualtree, DualTreeConfig, SeriesKind};
-use fastgauss::algo::{naive::Naive, GaussSum, GaussSumProblem};
+use fastgauss::algo::dualtree::{run_dualtree, DualTreeConfig, SeriesKind, SweepEngine};
+use fastgauss::algo::{max_relative_error, naive::Naive, GaussSum, GaussSumProblem};
 use fastgauss::data;
-use fastgauss::kde::bandwidth::silverman;
+use fastgauss::kde::bandwidth::{log_grid, silverman};
 use fastgauss::util::timer::time_it;
 
 fn median_secs<F: FnMut() -> ()>(mut f: F, reps: usize) -> f64 {
@@ -93,9 +98,61 @@ fn main() {
     }
     println!();
 
+    // ---- §sweep: bandwidth-sweep amortization + threading ----
+    let n_sweep: usize = std::env::var("FASTGAUSS_SWEEP_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10_000);
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    println!(
+        "\n§sweep — 13-point bandwidth sweep, astro2d N={n_sweep} (DITO, {threads} threads)"
+    );
+    let ds_sweep = data::by_name("astro2d", n_sweep, 42).unwrap();
+    let hstar_sweep = silverman(&ds_sweep.points);
+    let grid = log_grid(hstar_sweep, 1e-2, 1e2, 13);
+    let cfg_sweep = DualTreeConfig::default();
+
+    // baseline: sequential, one tree build per grid point
+    let (rebuild_sums, t_rebuild) = time_it(|| {
+        grid.iter()
+            .map(|&h| {
+                let p = GaussSumProblem::kde(&ds_sweep.points, h, eps);
+                run_dualtree(&p, &cfg_sweep).unwrap().sums
+            })
+            .collect::<Vec<_>>()
+    });
+
+    // engine: one tree build for the whole grid, parallel across h
+    let (engine, t_prep) =
+        time_it(|| SweepEngine::for_kde(&ds_sweep.points, 32).with_threads(threads));
+    let (engine_results, t_eval) =
+        time_it(|| engine.evaluate_grid(&grid, eps, &cfg_sweep).unwrap());
+    assert_eq!(engine.tree_builds(), 1, "engine must build the tree exactly once");
+    let t_engine = t_prep + t_eval;
+
+    // verify every grid point against exhaustive truth
+    let mut worst = 0.0f64;
+    for (i, &h) in grid.iter().enumerate() {
+        let p = GaussSumProblem::kde(&ds_sweep.points, h, eps);
+        let exact = Naive::new().run(&p).unwrap().sums;
+        let rel = max_relative_error(&engine_results[i].sums, &exact);
+        assert!(
+            rel <= eps * (1.0 + 1e-9),
+            "grid point {i} (h={h:.4e}): rel {rel:.2e} > eps"
+        );
+        worst = worst.max(rel.max(max_relative_error(&rebuild_sums[i], &exact)));
+    }
+    println!(
+        "rebuild×13 = {t_rebuild:.3}s   engine(prep {t_prep:.3}s + eval {t_eval:.3}s) = \
+         {t_engine:.3}s   speedup = {:.2}x   worst rel_err = {worst:.2e} (ε = {eps})",
+        t_rebuild / t_engine
+    );
+
     // ---- §tile: PJRT artifact vs pure-rust exhaustive path ----
     println!("\n§tile — exhaustive path: rust loops vs PJRT artifact (one run)");
-    if fastgauss::runtime::artifacts_dir().join("manifest.json").exists() {
+    if cfg!(feature = "pjrt")
+        && fastgauss::runtime::artifacts_dir().join("manifest.json").exists()
+    {
         for name in ["astro2d", "texture16"] {
             let ds = data::by_name(name, n, 42).unwrap();
             let h = silverman(&ds.points);

@@ -113,7 +113,9 @@ fn main() {
     });
 
     // one PJRT chunk (256 queries × 4096 refs)
-    if fastgauss::runtime::artifacts_dir().join("manifest.json").exists() {
+    if cfg!(feature = "pjrt")
+        && fastgauss::runtime::artifacts_dir().join("manifest.json").exists()
+    {
         let exec =
             fastgauss::runtime::TileExecutor::load(&fastgauss::runtime::artifacts_dir(), 5)
                 .unwrap();

@@ -50,6 +50,10 @@ fn main() {
         let res = run_sweep(&cfg);
         println!("--- {name} (paper: {paper_name}, D = {d}) ---");
         print!("{}", report::render_table(&res));
+        println!(
+            "(dual-tree prep: {:.3}s — one tree build amortized over every dual-tree cell)",
+            res.prep_secs
+        );
         // headline shape checks, printed so regressions are visible
         let totals = res.totals();
         let idx = |s: AlgoSpec| res.algorithms.iter().position(|a| *a == s).unwrap();

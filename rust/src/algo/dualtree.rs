@@ -16,9 +16,31 @@
 //! `node_est`, local Taylor coefficients in `lcoeffs`), and the
 //! post-processing pass (paper Fig. 8) pushes node-level state down with
 //! the **L2L** operator and evaluates local expansions at the leaves.
+//!
+//! # Two-phase evaluation: [`SweepEngine`]
+//!
+//! The paper's motivating workload — LSCV bandwidth selection — runs
+//! Gaussian summations *across a whole grid of bandwidths on the same
+//! dataset*. Everything h-independent (kd-tree construction, the weight
+//! permutation, node geometry) is factored into
+//! [`SweepEngine::prepare`], done **once per dataset**; each
+//! [`SweepEngine::evaluate`] call then computes only the h-dependent
+//! state (Hermite moment tables, the [`QueryLedger`]) and runs the
+//! traversal. Per-(h, layout, plimit) moments are memoized internally,
+//! and both [`SweepEngine::evaluate`] (across independent query
+//! subtrees) and [`SweepEngine::evaluate_grid`] (across grid
+//! bandwidths) parallelize with `std::thread::scope`.
+//! [`run_dualtree`] is the one-shot wrapper: prepare + a single
+//! single-threaded evaluate, bit-identical to evaluating on a prepared
+//! engine with one thread.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 
 use crate::bounds::{odp::OdpBounds, opd::OpdBounds, NodeGeometry, TruncationBounds};
 use crate::errorcontrol::{token_rule, PruneDecision, QueryLedger};
+use crate::geometry::Matrix;
 use crate::hermite::{
     accumulate_local_truncated, eval_farfield_truncated, eval_local, h2l_truncated, l2l,
     HermiteTable,
@@ -47,13 +69,22 @@ impl SeriesKind {
             SeriesKind::OpdGrid => Layout::Grid,
         }
     }
+
+    fn bounds(self) -> &'static dyn TruncationBounds {
+        match self {
+            SeriesKind::OdpGraded => &OdpBounds,
+            SeriesKind::OpdGrid => &OpdBounds,
+        }
+    }
 }
 
 /// Engine configuration; the four public algorithms are fixed settings
 /// of this struct.
 #[derive(Copy, Clone, Debug)]
 pub struct DualTreeConfig {
-    /// Tree leaf size.
+    /// Tree leaf size. Used at preparation time ([`run_dualtree`] /
+    /// [`SweepEngine::prepare`]); ignored by [`SweepEngine::evaluate`],
+    /// whose trees are already built.
     pub leaf_size: usize,
     /// Enable the W_T token ledger (the paper's improved error control).
     pub use_tokens: bool,
@@ -104,75 +135,370 @@ struct State {
     stats: RunStats,
 }
 
-/// Run the dual-tree algorithm defined by `cfg` on `problem`.
+impl State {
+    fn new(qt: &KdTree, set_len: usize, dim: usize, table_order: usize) -> Self {
+        State {
+            ledger: QueryLedger::new(qt.num_nodes(), qt.num_points()),
+            lcoeffs: vec![0.0; qt.num_nodes() * set_len],
+            set_len,
+            table: HermiteTable::new(dim, table_order),
+            mono: vec![0.0; set_len.max(1)],
+            off: vec![0.0; dim],
+            stats: RunStats::default(),
+        }
+    }
+}
+
+/// Memoization key for per-bandwidth reference moments.
+type MomentKey = (u64, Layout, usize);
+
+/// A dataset prepared for repeated dual-tree evaluation across
+/// bandwidths and engine variants.
+///
+/// `prepare` does all h-independent work exactly once: kd-tree
+/// construction (with the point permutation and cached node geometry /
+/// sufficient statistics). `evaluate` does only h-dependent work —
+/// Hermite moments (memoized per `(h, layout, plimit)`), the
+/// [`QueryLedger`] and the traversal itself — so a full LSCV grid
+/// touches tree construction exactly once.
+///
+/// ```no_run
+/// use fastgauss::algo::dualtree::{DualTreeConfig, SweepEngine};
+/// let data = fastgauss::data::synthetic::astro2d(10_000, 42);
+/// let engine = SweepEngine::for_kde(&data, 32).with_threads(4);
+/// let cfg = DualTreeConfig::default(); // DITO
+/// let results = engine.evaluate_grid(&[0.01, 0.1, 1.0], 0.01, &cfg).unwrap();
+/// assert_eq!(engine.tree_builds(), 1); // one build, three bandwidths
+/// # let _ = results;
+/// ```
+pub struct SweepEngine {
+    rtree: KdTree,
+    /// `None` when queries == references (monochromatic / KDE).
+    qtree: Option<KdTree>,
+    dim: usize,
+    total_w: f64,
+    build_secs: f64,
+    tree_builds: u64,
+    threads: usize,
+    moment_cache: Mutex<HashMap<MomentKey, Arc<RefMoments>>>,
+}
+
+impl SweepEngine {
+    /// Build the tree(s) for `problem`'s point sets. The problem's `h`
+    /// and `epsilon` are *not* baked in — pass them to [`evaluate`].
+    ///
+    /// [`evaluate`]: SweepEngine::evaluate
+    pub fn prepare(problem: &GaussSumProblem<'_>, leaf_size: usize) -> Self {
+        let weights = problem.weight_vec();
+        let params = BuildParams { leaf_size };
+        let ((rtree, qtree), build_secs) = time_it(|| {
+            let rtree = KdTree::build(problem.references, &weights, params);
+            let qtree = if problem.monochromatic {
+                None
+            } else {
+                // query tree weights are irrelevant; use ones
+                let qw = vec![1.0; problem.queries.rows()];
+                Some(KdTree::build(problem.queries, &qw, params))
+            };
+            (rtree, qtree)
+        });
+        let tree_builds = 1 + qtree.is_some() as u64;
+        SweepEngine {
+            dim: problem.dim(),
+            total_w: problem.total_weight(),
+            rtree,
+            qtree,
+            build_secs,
+            tree_builds,
+            threads: 1,
+            moment_cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Prepare for the paper's KDE setting: queries = references =
+    /// `data`, unit weights, one tree.
+    pub fn for_kde(data: &Matrix, leaf_size: usize) -> Self {
+        // placeholder h/ε: prepare ignores them by construction
+        Self::prepare(&GaussSumProblem::kde(data, 1.0, 1.0), leaf_size)
+    }
+
+    /// Set the worker-thread count used by [`evaluate`] (across query
+    /// subtrees) and [`evaluate_grid`] (across bandwidths). One thread
+    /// (the default) reproduces the sequential traversal bit-for-bit.
+    ///
+    /// [`evaluate`]: SweepEngine::evaluate
+    /// [`evaluate_grid`]: SweepEngine::evaluate_grid
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Seconds spent building the tree(s) in `prepare`.
+    pub fn build_secs(&self) -> f64 {
+        self.build_secs
+    }
+
+    /// Number of kd-tree constructions performed (1 for KDE, 2 for
+    /// bichromatic problems) — constant over any number of evaluates.
+    pub fn tree_builds(&self) -> u64 {
+        self.tree_builds
+    }
+
+    /// Number of query points.
+    pub fn num_points(&self) -> usize {
+        self.qtree.as_ref().unwrap_or(&self.rtree).num_points()
+    }
+
+    /// Data dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Whether queries and references are the same point set.
+    pub fn is_monochromatic(&self) -> bool {
+        self.qtree.is_none()
+    }
+
+    /// Drop all memoized per-bandwidth moment tables. The cache is
+    /// unbounded by design (one entry per distinct `(h, layout,
+    /// plimit)` evaluated), which is right for grid sweeps but grows
+    /// without limit under adaptive searches that keep refining h —
+    /// call this between search phases to release the memory.
+    pub fn clear_moment_cache(&self) {
+        self.moment_cache.lock().unwrap().clear();
+    }
+
+    /// Memoized per-bandwidth reference moments.
+    fn moments_for(
+        &self,
+        kernel: &GaussianKernel,
+        kind: SeriesKind,
+        plimit: usize,
+    ) -> (Arc<RefMoments>, f64) {
+        let key = (kernel.bandwidth().to_bits(), kind.layout(), plimit);
+        if let Some(m) = self.moment_cache.lock().unwrap().get(&key) {
+            return (Arc::clone(m), 0.0);
+        }
+        // compute outside the lock: concurrent h-workers must not
+        // serialize on each other's moment passes (racing computes of
+        // the same key are identical; last insert wins)
+        let (m, secs) = time_it(|| {
+            Arc::new(RefMoments::compute(&self.rtree, kernel, kind.layout(), plimit))
+        });
+        self.moment_cache.lock().unwrap().insert(key, Arc::clone(&m));
+        (m, secs)
+    }
+
+    /// Run one bandwidth under `cfg`, using the engine's thread count
+    /// for query-subtree parallelism. The result's
+    /// `stats.build_secs` covers only the h-dependent moment pass;
+    /// the one-time tree cost is reported by [`build_secs`].
+    ///
+    /// [`build_secs`]: SweepEngine::build_secs
+    pub fn evaluate(
+        &self,
+        h: f64,
+        epsilon: f64,
+        cfg: &DualTreeConfig,
+    ) -> Result<GaussSumResult, AlgoError> {
+        self.evaluate_with_threads(h, epsilon, cfg, self.threads)
+    }
+
+    fn evaluate_with_threads(
+        &self,
+        h: f64,
+        epsilon: f64,
+        cfg: &DualTreeConfig,
+        threads: usize,
+    ) -> Result<GaussSumResult, AlgoError> {
+        assert!(h > 0.0 && h.is_finite(), "bandwidth must be positive");
+        assert!(epsilon > 0.0, "epsilon must be positive");
+        let kernel = GaussianKernel::new(h);
+        let dim = self.dim;
+        let plimit = cfg.plimit.unwrap_or_else(|| plimit_for_dim(dim));
+        let (moments, moment_secs) = match cfg.series {
+            Some(kind) => {
+                let (m, secs) = self.moments_for(&kernel, kind, plimit);
+                (Some((m, kind)), secs)
+            }
+            None => (None, 0.0),
+        };
+        let qt: &KdTree = self.qtree.as_ref().unwrap_or(&self.rtree);
+        let rt: &KdTree = &self.rtree;
+        let set_len = moments.as_ref().map_or(0, |(m, _)| m.set().len());
+        let table_order = if set_len > 0 { 2 * plimit.max(1) } else { 1 };
+        let total_w = self.total_w;
+        let use_tokens = cfg.use_tokens;
+
+        let threads = threads.max(1);
+        let mut tree_sums = vec![0.0; qt.num_points()];
+        let mut stats = RunStats::default();
+
+        if threads == 1 {
+            let ctx = Ctx {
+                qt,
+                rt,
+                kernel,
+                eps: epsilon,
+                total_w,
+                use_tokens,
+                series: series_pack(&moments, plimit),
+            };
+            let mut st = State::new(qt, set_len, dim, table_order);
+            recurse(&ctx, &mut st, qt.root(), rt.root(), 0.0);
+            postprocess_from(&ctx, &mut st, qt.root(), &mut tree_sums);
+            stats = st.stats;
+        } else {
+            // Fan out over disjoint query subtrees: every per-node /
+            // per-point ledger slot a worker touches lies inside its
+            // subtree, so workers are independent. Each starts with
+            // inherited_min = 0 (no ancestor bound), which only makes
+            // prune tests more conservative — the ε guarantee holds.
+            let roots = subtree_roots(qt, threads * 4);
+            let next = AtomicUsize::new(0);
+            let (tx, rx) = mpsc::channel::<(Vec<f64>, RunStats)>();
+            std::thread::scope(|scope| {
+                for _ in 0..threads {
+                    let tx = tx.clone();
+                    let roots = &roots;
+                    let next = &next;
+                    let moments = &moments;
+                    scope.spawn(move || {
+                        let ctx = Ctx {
+                            qt,
+                            rt,
+                            kernel,
+                            eps: epsilon,
+                            total_w,
+                            use_tokens,
+                            series: series_pack(moments, plimit),
+                        };
+                        let mut st = State::new(qt, set_len, dim, table_order);
+                        let mut out = vec![0.0; qt.num_points()];
+                        let mut my_roots: Vec<usize> = Vec::new();
+                        loop {
+                            let k = next.fetch_add(1, Ordering::Relaxed);
+                            if k >= roots.len() {
+                                break;
+                            }
+                            let q0 = roots[k];
+                            recurse(&ctx, &mut st, q0, rt.root(), 0.0);
+                            my_roots.push(q0);
+                        }
+                        for &q0 in &my_roots {
+                            postprocess_from(&ctx, &mut st, q0, &mut out);
+                        }
+                        let _ = tx.send((out, st.stats));
+                    });
+                }
+                drop(tx);
+            });
+            for (out, s) in rx.into_iter() {
+                for (i, v) in out.into_iter().enumerate() {
+                    tree_sums[i] += v;
+                }
+                stats.merge(&s);
+            }
+        }
+
+        stats.build_secs = moment_secs;
+        let sums = qt.unpermute(&tree_sums);
+        Ok(GaussSumResult { sums, stats })
+    }
+
+    /// Evaluate a whole bandwidth grid, parallelized across grid points
+    /// with the engine's thread count (each grid point runs the
+    /// single-threaded traversal, which keeps per-h results identical
+    /// to sequential evaluation). Results come back in grid order.
+    pub fn evaluate_grid(
+        &self,
+        grid: &[f64],
+        epsilon: f64,
+        cfg: &DualTreeConfig,
+    ) -> Result<Vec<GaussSumResult>, AlgoError> {
+        let workers = self.threads.min(grid.len()).max(1);
+        if workers == 1 {
+            return grid.iter().map(|&h| self.evaluate_with_threads(h, epsilon, cfg, 1)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, Result<GaussSumResult, AlgoError>)>();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let next = &next;
+                scope.spawn(move || loop {
+                    let k = next.fetch_add(1, Ordering::Relaxed);
+                    if k >= grid.len() {
+                        break;
+                    }
+                    let res = self.evaluate_with_threads(grid[k], epsilon, cfg, 1);
+                    let _ = tx.send((k, res));
+                });
+            }
+            drop(tx);
+        });
+        let mut slots: Vec<Option<GaussSumResult>> = (0..grid.len()).map(|_| None).collect();
+        for (k, res) in rx.into_iter() {
+            slots[k] = Some(res?);
+        }
+        Ok(slots.into_iter().map(|s| s.expect("grid worker lost a cell")).collect())
+    }
+}
+
+/// Borrow a [`SeriesPack`] out of the memoized moments.
+fn series_pack(
+    moments: &Option<(Arc<RefMoments>, SeriesKind)>,
+    plimit: usize,
+) -> Option<SeriesPack<'_>> {
+    moments.as_ref().map(|(m, kind)| SeriesPack {
+        moments: m.as_ref(),
+        bounds: kind.bounds(),
+        p_limit: plimit,
+    })
+}
+
+/// Pick ≥ `want` disjoint query-subtree roots that cover the whole
+/// tree, repeatedly splitting the most populous splittable root (a
+/// greedy balance heuristic). Returns fewer when the tree is shallow.
+fn subtree_roots(qt: &KdTree, want: usize) -> Vec<usize> {
+    let mut roots = vec![qt.root()];
+    while roots.len() < want {
+        let mut best: Option<(usize, usize)> = None; // (position, count)
+        for (pos, &q) in roots.iter().enumerate() {
+            if qt.children(q).is_some() {
+                let c = qt.node(q).count();
+                if best.map_or(true, |(_, bc)| c > bc) {
+                    best = Some((pos, c));
+                }
+            }
+        }
+        match best {
+            Some((pos, _)) => {
+                let (l, r) = qt.children(roots[pos]).unwrap();
+                roots[pos] = l;
+                roots.push(r);
+            }
+            None => break, // all leaves
+        }
+    }
+    roots.sort_by_key(|&q| qt.node(q).begin);
+    roots
+}
+
+/// Run the dual-tree algorithm defined by `cfg` on `problem`: a
+/// one-shot prepare + evaluate. For repeated evaluations on one dataset
+/// (bandwidth sweeps, LSCV), hold a [`SweepEngine`] instead so the tree
+/// is built once.
 pub fn run_dualtree(
     problem: &GaussSumProblem<'_>,
     cfg: &DualTreeConfig,
 ) -> Result<GaussSumResult, AlgoError> {
-    let weights = problem.weight_vec();
-    let params = BuildParams { leaf_size: cfg.leaf_size };
-    let kernel = GaussianKernel::new(problem.h);
-    let dim = problem.dim();
-    let plimit = cfg.plimit.unwrap_or_else(|| plimit_for_dim(dim));
-
-    // ---- preprocessing (timed, included in totals as in the paper) ----
-    let ((rtree, qtree_opt, moments), build_secs) = time_it(|| {
-        let rtree = KdTree::build(problem.references, &weights, params);
-        let qtree_opt = if problem.monochromatic {
-            None
-        } else {
-            // query tree weights are irrelevant; use ones
-            let qw = vec![1.0; problem.queries.rows()];
-            Some(KdTree::build(problem.queries, &qw, params))
-        };
-        let moments = cfg
-            .series
-            .map(|s| RefMoments::compute(&rtree, &kernel, s.layout(), plimit));
-        (rtree, qtree_opt, moments)
-    });
-
-    let qt: &KdTree = qtree_opt.as_ref().unwrap_or(&rtree);
-    let rt: &KdTree = &rtree;
-
-    let series = match (&moments, cfg.series) {
-        (Some(m), Some(kind)) => Some(SeriesPack {
-            moments: m,
-            bounds: match kind {
-                SeriesKind::OdpGraded => &OdpBounds as &dyn TruncationBounds,
-                SeriesKind::OpdGrid => &OpdBounds as &dyn TruncationBounds,
-            },
-            p_limit: plimit,
-        }),
-        _ => None,
-    };
-
-    let set_len = series.as_ref().map_or(0, |s| s.moments.set().len());
-    let table_order = if set_len > 0 { 2 * plimit.max(1) } else { 1 };
-
-    let ctx = Ctx {
-        qt,
-        rt,
-        kernel,
-        eps: problem.epsilon,
-        total_w: problem.total_weight(),
-        use_tokens: cfg.use_tokens,
-        series,
-    };
-    let mut st = State {
-        ledger: QueryLedger::new(qt.num_nodes(), qt.num_points()),
-        lcoeffs: vec![0.0; qt.num_nodes() * set_len],
-        set_len,
-        table: HermiteTable::new(dim, table_order),
-        mono: vec![0.0; set_len.max(1)],
-        off: vec![0.0; dim],
-        stats: RunStats { build_secs, ..Default::default() },
-    };
-
-    recurse(&ctx, &mut st, qt.root(), rt.root(), 0.0);
-    let tree_order_sums = postprocess(&ctx, &mut st);
-    let sums = qt.unpermute(&tree_order_sums);
-
-    Ok(GaussSumResult { sums, stats: st.stats })
+    let engine = SweepEngine::prepare(problem, cfg.leaf_size);
+    let mut res = engine.evaluate_with_threads(problem.h, problem.epsilon, cfg, 1)?;
+    // preserve the paper's "times include preprocessing" convention
+    res.stats.build_secs += engine.build_secs();
+    res.stats.tree_builds = engine.tree_builds();
+    Ok(res)
 }
 
 /// The main recursion (paper Fig. 7).
@@ -378,13 +704,13 @@ fn base_case(ctx: &Ctx<'_>, st: &mut State, q: usize, r: usize) {
 }
 
 /// Post-processing (paper Fig. 8): push node-level estimates and local
-/// expansions down the query tree (L2L), then evaluate at leaf points.
-/// Returns per-point sums in tree order.
-fn postprocess(ctx: &Ctx<'_>, st: &mut State) -> Vec<f64> {
+/// expansions down the query subtree rooted at `start` (L2L), then
+/// evaluate at leaf points, writing per-point sums (tree order) into
+/// `out`. Only slots owned by `start`'s subtree are written.
+fn postprocess_from(ctx: &Ctx<'_>, st: &mut State, start: usize, out: &mut [f64]) {
     let qt = ctx.qt;
-    let mut out = vec![0.0; qt.num_points()];
     // BFS order: parents processed before children.
-    let mut queue = std::collections::VecDeque::from([qt.root()]);
+    let mut queue = std::collections::VecDeque::from([start]);
     while let Some(q) = queue.pop_front() {
         if let Some((l, r)) = qt.children(q) {
             let est = st.ledger.node_est[q];
@@ -435,7 +761,6 @@ fn postprocess(ctx: &Ctx<'_>, st: &mut State) -> Vec<f64> {
             }
         }
     }
-    out
 }
 
 /// Disjoint (&parent, &mut child) blocks of a node-major buffer.
@@ -606,6 +931,109 @@ mod tests {
                 max_relative_error(&got.sums, &exact) <= 0.01 * (1.0 + 1e-9),
                 "h={h}"
             );
+        }
+    }
+
+    // ---- SweepEngine ----
+
+    #[test]
+    fn engine_single_thread_matches_run_dualtree_bitwise() {
+        let data = clustered(400, 2, 82);
+        let engine = SweepEngine::for_kde(&data, 32);
+        let cfg = DualTreeConfig::default();
+        for h in [0.01, 0.1, 1.0, 10.0] {
+            let problem = GaussSumProblem::kde(&data, h, 0.01);
+            let a = run_dualtree(&problem, &cfg).unwrap();
+            let b = engine.evaluate(h, 0.01, &cfg).unwrap();
+            assert_eq!(a.sums, b.sums, "h={h}: prepared engine diverged");
+        }
+        assert_eq!(engine.tree_builds(), 1);
+    }
+
+    #[test]
+    fn engine_parallel_meets_tolerance_all_variants() {
+        let data = clustered(600, 2, 83);
+        let engine = SweepEngine::for_kde(&data, 16).with_threads(4);
+        let variants = [
+            DualTreeConfig { use_tokens: false, series: None, ..Default::default() },
+            DualTreeConfig { use_tokens: true, series: None, ..Default::default() },
+            DualTreeConfig { series: Some(SeriesKind::OpdGrid), ..Default::default() },
+            DualTreeConfig::default(),
+        ];
+        for h in [0.02, 0.3, 3.0] {
+            let problem = GaussSumProblem::kde(&data, h, 0.01);
+            let exact = Naive::new().run(&problem).unwrap().sums;
+            for cfg in &variants {
+                let got = engine.evaluate(h, 0.01, cfg).unwrap();
+                let rel = max_relative_error(&got.sums, &exact);
+                assert!(rel <= 0.01 * (1.0 + 1e-9), "h={h} cfg={cfg:?}: rel={rel}");
+            }
+        }
+        assert_eq!(engine.tree_builds(), 1);
+    }
+
+    #[test]
+    fn engine_grid_matches_individual_evaluates() {
+        let data = clustered(300, 2, 84);
+        let engine = SweepEngine::for_kde(&data, 32).with_threads(3);
+        let cfg = DualTreeConfig::default();
+        let grid = [0.05, 0.2, 0.8, 3.2];
+        let batch = engine.evaluate_grid(&grid, 0.01, &cfg).unwrap();
+        assert_eq!(batch.len(), grid.len());
+        for (res, &h) in batch.iter().zip(&grid) {
+            let single = engine.evaluate_with_threads(h, 0.01, &cfg, 1).unwrap();
+            assert_eq!(res.sums, single.sums, "h={h}");
+        }
+    }
+
+    #[test]
+    fn engine_moment_cache_hits_on_repeat_bandwidth() {
+        let data = clustered(200, 2, 85);
+        let engine = SweepEngine::for_kde(&data, 32);
+        let cfg = DualTreeConfig::default();
+        let first = engine.evaluate(0.3, 0.01, &cfg).unwrap();
+        let second = engine.evaluate(0.3, 0.01, &cfg).unwrap();
+        assert_eq!(first.sums, second.sums);
+        // cached moments → no recompute time attributed to the second run
+        assert_eq!(second.stats.build_secs, 0.0);
+        assert!(first.stats.build_secs > 0.0);
+    }
+
+    #[test]
+    fn engine_bichromatic_parallel() {
+        let mut rng = Pcg32::new(86);
+        let refs = clustered(300, 2, 87);
+        let queries = Matrix::from_rows(
+            &(0..120).map(|_| (0..2).map(|_| rng.uniform()).collect()).collect::<Vec<_>>(),
+        );
+        let w: Vec<f64> = (0..300).map(|_| rng.uniform_in(0.5, 1.5)).collect();
+        let problem = GaussSumProblem::new(&queries, &refs, Some(&w), 0.2, 0.01);
+        let engine = SweepEngine::prepare(&problem, 16).with_threads(3);
+        assert_eq!(engine.tree_builds(), 2);
+        assert!(!engine.is_monochromatic());
+        let exact = Naive::new().run(&problem).unwrap().sums;
+        let got = engine.evaluate(0.2, 0.01, &DualTreeConfig::default()).unwrap();
+        assert!(max_relative_error(&got.sums, &exact) <= 0.01 * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn subtree_roots_partition_points() {
+        let data = clustered(500, 3, 88);
+        let engine = SweepEngine::for_kde(&data, 8);
+        let qt = &engine.rtree;
+        for want in [1, 2, 5, 16] {
+            let roots = subtree_roots(qt, want);
+            assert!(!roots.is_empty());
+            // contiguous, disjoint, covering [0, n)
+            let mut cursor = 0;
+            for &q in &roots {
+                assert_eq!(qt.node(q).begin, cursor, "gap before node {q}");
+                cursor = qt.node(q).end;
+            }
+            assert_eq!(cursor, qt.num_points());
+            if want > 1 {
+                assert!(roots.len() >= want.min(2));
+            }
         }
     }
 }

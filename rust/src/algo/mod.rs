@@ -25,6 +25,8 @@ pub mod fgt;
 pub mod ifgt;
 pub mod naive;
 
+pub use dualtree::SweepEngine;
+
 use crate::geometry::Matrix;
 
 /// Why an algorithm could not produce a result — mirrors the paper's
@@ -144,6 +146,10 @@ pub struct RunStats {
     pub tokens_spent: f64,
     /// Tree construction + moment precomputation seconds.
     pub build_secs: f64,
+    /// kd-tree constructions performed by this run: 1–2 for a one-shot
+    /// [`dualtree::run_dualtree`], 0 for an evaluate on a prepared
+    /// [`SweepEngine`] (the engine amortizes its builds over the sweep).
+    pub tree_builds: u64,
     /// Total wall-clock seconds (filled by the harness/run wrapper).
     pub total_secs: f64,
 }
@@ -152,6 +158,22 @@ impl RunStats {
     /// Total prunes of any kind.
     pub fn total_prunes(&self) -> u64 {
         self.fd_prunes + self.dh_prunes + self.dl_prunes + self.h2l_prunes
+    }
+
+    /// Accumulate another run's counters (used when merging the
+    /// per-worker stats of a parallel traversal).
+    pub fn merge(&mut self, other: &RunStats) {
+        self.node_pairs += other.node_pairs;
+        self.base_point_pairs += other.base_point_pairs;
+        self.fd_prunes += other.fd_prunes;
+        self.dh_prunes += other.dh_prunes;
+        self.dl_prunes += other.dl_prunes;
+        self.h2l_prunes += other.h2l_prunes;
+        self.tokens_banked += other.tokens_banked;
+        self.tokens_spent += other.tokens_spent;
+        self.build_secs += other.build_secs;
+        self.tree_builds += other.tree_builds;
+        self.total_secs += other.total_secs;
     }
 }
 

@@ -8,14 +8,16 @@
 //! fastgauss runtime  [--n 2000]                         PJRT artifact check
 //! ```
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{anyhow, bail};
 
-use crate::algo::{max_relative_error, naive::Naive, GaussSum, GaussSumProblem};
+use crate::algo::dualtree::DualTreeConfig;
+use crate::algo::{max_relative_error, naive::Naive, GaussSum, GaussSumProblem, SweepEngine};
 use crate::config::RunConfig;
 use crate::coordinator::{run_sweep, AlgoSpec, SweepConfig};
 use crate::data;
 use crate::kde::bandwidth::{log_grid, silverman};
-use crate::kde::lscv::select_bandwidth;
+use crate::kde::lscv::select_bandwidth_engine;
 
 const USAGE: &str = "usage: fastgauss <table|kde|datagen|selftest|runtime> [--option value ...]
 options: --dataset NAME --n N --seed S --epsilon E --algos a,b,c
@@ -58,11 +60,13 @@ fn pick_h_star(cfg: &RunConfig, ds: &data::Dataset) -> Result<f64> {
     if cfg.bandwidth > 0.0 {
         return Ok(cfg.bandwidth);
     }
-    // LSCV around the Silverman pilot with DITO (fast, guaranteed)
+    // LSCV around the Silverman pilot with the DITO variant on a
+    // prepared sweep engine: one tree build for the whole grid,
+    // parallel across grid bandwidths.
     let pilot = silverman(&ds.points);
     let grid = log_grid(pilot, 0.1, 10.0, 9);
-    let engine = crate::algo::dito::Dito::default();
-    let (h, _) = select_bandwidth(&ds.points, &grid, cfg.epsilon, &engine)
+    let engine = SweepEngine::for_kde(&ds.points, cfg.leaf_size).with_threads(cfg.workers);
+    let (h, _) = select_bandwidth_engine(&engine, &grid, cfg.epsilon, &DualTreeConfig::default())
         .map_err(|e| anyhow!("LSCV failed: {e}"))?;
     Ok(h)
 }

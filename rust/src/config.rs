@@ -4,7 +4,8 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
 
 /// Everything the CLI subcommands need.
 #[derive(Clone, Debug, PartialEq)]

@@ -104,6 +104,9 @@ pub struct SweepResult {
     pub algorithms: Vec<AlgoSpec>,
     /// The Naive row (exhaustive truth timings, one per bandwidth).
     pub naive_secs: Vec<f64>,
+    /// One-time dual-tree preparation (kd-tree build) amortized over
+    /// every dual-tree cell of the table.
+    pub prep_secs: f64,
     pub cells: Vec<CellResult>,
 }
 
@@ -157,6 +160,7 @@ mod tests {
             multipliers: vec![1.0, 10.0],
             algorithms: vec![AlgoSpec::Dito, AlgoSpec::Fgt],
             naive_secs: vec![1.0, 1.0],
+            prep_secs: 0.0,
             cells: vec![
                 CellResult { algo_index: 0, bandwidth_index: 0, outcome: CellOutcome::Time(1.5), rel_err: Some(0.001), stats: None },
                 CellResult { algo_index: 0, bandwidth_index: 1, outcome: CellOutcome::Time(0.5), rel_err: Some(0.002), stats: None },

@@ -14,14 +14,29 @@ pub mod report;
 
 use std::sync::mpsc;
 
+use crate::algo::dualtree::{DualTreeConfig, SeriesKind};
 use crate::algo::{
-    dfd::Dfd, dfdo::Dfdo, dfto::Dfto, dito::Dito, fgt::Fgt,
-    ifgt::ifgt_tuning_loop, max_relative_error, naive::Naive, AlgoError, GaussSum,
-    GaussSumProblem,
+    fgt::Fgt, ifgt::ifgt_tuning_loop, max_relative_error, naive::Naive, AlgoError, GaussSum,
+    GaussSumProblem, SweepEngine,
 };
 use crate::util::timer::time_it;
 
 pub use job::{AlgoSpec, CellOutcome, CellResult, SweepConfig, SweepResult};
+
+/// The engine variant a dual-tree table row runs, or `None` for the
+/// non-dual-tree algorithms (Naive/FGT/IFGT).
+fn dual_tree_variant(spec: AlgoSpec, leaf_size: usize) -> Option<DualTreeConfig> {
+    let base = DualTreeConfig { leaf_size, ..Default::default() };
+    match spec {
+        AlgoSpec::Dfd => Some(DualTreeConfig { use_tokens: false, series: None, ..base }),
+        AlgoSpec::Dfdo => Some(DualTreeConfig { use_tokens: true, series: None, ..base }),
+        AlgoSpec::Dfto => {
+            Some(DualTreeConfig { series: Some(SeriesKind::OpdGrid), ..base })
+        }
+        AlgoSpec::Dito => Some(base),
+        AlgoSpec::Naive | AlgoSpec::Fgt | AlgoSpec::Ifgt => None,
+    }
+}
 
 /// Run the full table protocol for one dataset.
 pub fn run_sweep(cfg: &SweepConfig) -> SweepResult {
@@ -37,6 +52,18 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepResult {
         exact.push(res.sums);
         naive_secs.push(secs);
     }
+
+    // ---- one tree build for the whole table: every dual-tree cell
+    // (all four variants × all bandwidths) shares this engine; skipped
+    // entirely when the sweep runs no dual-tree algorithm ----
+    let needs_engine =
+        cfg.algorithms.iter().any(|&a| dual_tree_variant(a, cfg.leaf_size).is_some());
+    let (engine, prep_secs) = if needs_engine {
+        let (e, secs) = time_it(|| SweepEngine::for_kde(data, cfg.leaf_size));
+        (Some(e), secs)
+    } else {
+        (None, 0.0)
+    };
 
     // ---- schedule the (algo × h) cells on a worker pool ----
     let jobs: Vec<(usize, usize)> = (0..cfg.algorithms.len())
@@ -54,6 +81,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepResult {
             let exact = &exact;
             let bandwidths = &bandwidths;
             let naive_secs = &naive_secs;
+            let engine = &engine;
             scope.spawn(move || loop {
                 let k = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 if k >= jobs.len() {
@@ -62,6 +90,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepResult {
                 let (ai, bi) = jobs[k];
                 let cell = run_cell(
                     cfg,
+                    engine.as_ref(),
                     cfg.algorithms[ai],
                     ai,
                     bi,
@@ -87,14 +116,19 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepResult {
         multipliers: cfg.multipliers.clone(),
         algorithms: cfg.algorithms.clone(),
         naive_secs,
+        prep_secs,
         cells,
     }
 }
 
-/// Run one (algorithm, bandwidth) cell with verification.
+/// Run one (algorithm, bandwidth) cell with verification. Dual-tree
+/// cells evaluate on the shared prepared `engine` (zero tree builds);
+/// their reported time is the h-dependent evaluate only, with the
+/// one-time preparation in `SweepResult::prep_secs`.
 #[allow(clippy::too_many_arguments)]
 fn run_cell(
     cfg: &SweepConfig,
+    engine: Option<&SweepEngine>,
     spec: AlgoSpec,
     algo_index: usize,
     bandwidth_index: usize,
@@ -137,27 +171,10 @@ fn run_cell(
             let (r, secs) = time_it(|| Naive::new().run(&problem));
             finish(&mut cell, r.map(|r| (r, secs)));
         }
-        AlgoSpec::Dfd => {
-            let a = Dfd { leaf_size: cfg.leaf_size };
-            let (r, secs) = time_it(|| a.run(&problem));
-            finish(&mut cell, r.map(|r| (r, secs)));
-        }
-        AlgoSpec::Dfdo => {
-            let a = Dfdo { leaf_size: cfg.leaf_size };
-            let (r, secs) = time_it(|| a.run(&problem));
-            finish(&mut cell, r.map(|r| (r, secs)));
-        }
-        AlgoSpec::Dfto => {
-            let a = Dfto { leaf_size: cfg.leaf_size, plimit: None };
-            let (r, secs) = time_it(|| a.run(&problem));
-            finish(&mut cell, r.map(|r| (r, secs)));
-        }
-        AlgoSpec::Dito => {
-            let a = Dito::new(crate::algo::dito::DitoConfig {
-                leaf_size: cfg.leaf_size,
-                ..Default::default()
-            });
-            let (r, secs) = time_it(|| a.run(&problem));
+        AlgoSpec::Dfd | AlgoSpec::Dfdo | AlgoSpec::Dfto | AlgoSpec::Dito => {
+            let variant = dual_tree_variant(spec, cfg.leaf_size).unwrap();
+            let engine = engine.expect("engine prepared whenever a dual-tree algo runs");
+            let (r, secs) = time_it(|| engine.evaluate(h, cfg.epsilon, &variant));
             finish(&mut cell, r.map(|r| (r, secs)));
         }
         AlgoSpec::Fgt => {
@@ -262,6 +279,21 @@ mod tests {
         let totals = res.totals();
         assert_eq!(totals.len(), 3);
         assert!(totals.iter().all(|t| t.is_some()));
+    }
+
+    #[test]
+    fn dual_tree_cells_share_one_prepared_engine() {
+        let cfg = small_cfg();
+        let res = run_sweep(&cfg);
+        assert!(res.prep_secs >= 0.0);
+        for c in &res.cells {
+            let spec = res.algorithms[c.algo_index];
+            if dual_tree_variant(spec, cfg.leaf_size).is_some() {
+                // evaluated on the shared engine → zero per-cell builds
+                let stats = c.stats.as_ref().expect("dual-tree cell must have stats");
+                assert_eq!(stats.tree_builds, 0, "{} rebuilt its tree", spec.name());
+            }
+        }
     }
 
     #[test]

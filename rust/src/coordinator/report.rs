@@ -103,6 +103,7 @@ mod tests {
             multipliers: vec![0.001, 1.0, 1000.0],
             algorithms: vec![AlgoSpec::Naive, AlgoSpec::Fgt, AlgoSpec::Dito],
             naive_secs: vec![4.0, 4.0, 4.0],
+            prep_secs: 0.0,
             cells: vec![
                 CellResult { algo_index: 0, bandwidth_index: 0, outcome: CellOutcome::Time(452.0), rel_err: Some(0.0), stats: None },
                 CellResult { algo_index: 0, bandwidth_index: 1, outcome: CellOutcome::Time(452.0), rel_err: Some(0.0), stats: None },

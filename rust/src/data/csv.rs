@@ -4,7 +4,8 @@
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 
 use crate::geometry::Matrix;
 

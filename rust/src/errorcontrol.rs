@@ -132,12 +132,17 @@ impl QueryLedger {
     }
 
     /// Refresh `below_min[leaf]` from its points after a base case.
+    ///
+    /// An empty range contributes no lower bound: it clamps to 0.0
+    /// rather than leaving the fold's +∞ identity in place, which would
+    /// poison `gq_min` for the subtree (an infinite lower bound lets
+    /// every later prune pass its error test).
     pub fn refresh_below_from_points(&mut self, leaf: usize, begin: usize, end: usize) {
         let mut m = f64::INFINITY;
         for i in begin..end {
             m = m.min(self.point_min[i]);
         }
-        self.below_min[leaf] = m;
+        self.below_min[leaf] = if m.is_finite() { m } else { 0.0 };
     }
 }
 
@@ -233,5 +238,21 @@ mod tests {
         assert_eq!(l.below_min[0], 3.0); // min(2+1, 3+0.5)
         assert_eq!(l.gq_min(0, 0.0), 3.0);
         assert_eq!(l.gq_min(1, 5.0), 8.0);
+    }
+
+    /// Regression: an empty point range must clamp `below_min` to 0.0.
+    /// The +∞ fold identity previously leaked through, making `gq_min`
+    /// infinite for the subtree — an unsoundly permissive error budget.
+    #[test]
+    fn empty_point_range_clamps_to_zero() {
+        let mut l = QueryLedger::new(2, 4);
+        l.point_min = vec![1.0, 2.0, 3.0, 4.0];
+        l.refresh_below_from_points(1, 2, 2); // empty range
+        assert_eq!(l.below_min[1], 0.0);
+        assert!(l.gq_min(1, 0.5).is_finite());
+        assert_eq!(l.gq_min(1, 0.5), 0.5);
+        // non-empty ranges are unaffected
+        l.refresh_below_from_points(1, 1, 3);
+        assert_eq!(l.below_min[1], 2.0);
     }
 }

@@ -11,10 +11,27 @@
 //!
 //! with S_h = Σ_i Σ_j K_h(‖x_i−x_j‖) the self-included summation both
 //! engines already compute.
+//!
+//! Two evaluation paths:
+//! * [`lscv_score`]/[`select_bandwidth`] run any [`GaussSum`] engine and
+//!   rebuild its data structures per call — fine for one-off scores;
+//! * [`lscv_score_engine`]/[`select_bandwidth_engine`] run a prepared
+//!   [`SweepEngine`], so the whole grid shares a single kd-tree build
+//!   and the sweep parallelizes across grid bandwidths.
 
-use crate::algo::{AlgoError, GaussSum, GaussSumProblem};
+use crate::algo::dualtree::DualTreeConfig;
+use crate::algo::{AlgoError, GaussSum, GaussSumProblem, SweepEngine};
 use crate::geometry::Matrix;
 use crate::kernel::GaussianKernel;
+
+/// The closed-form LSCV score from the two self-summations
+/// S_h (`s1`) and S_{√2·h} (`s2`).
+fn score_from_sums(n: f64, dim: usize, h: f64, s1: f64, s2: f64) -> f64 {
+    let h2 = std::f64::consts::SQRT_2 * h;
+    let term1 = GaussianKernel::new(h2).norm_const(dim) * s2 / (n * n);
+    let term2 = 2.0 * GaussianKernel::new(h).norm_const(dim) * (s1 - n) / (n * (n - 1.0));
+    term1 - term2
+}
 
 /// The LSCV score for one bandwidth (lower is better).
 pub fn lscv_score(
@@ -29,12 +46,66 @@ pub fn lscv_score(
     let h2 = std::f64::consts::SQRT_2 * h;
     let p2 = GaussSumProblem::kde(data, h2, epsilon);
     let s2: f64 = engine.run(&p2)?.sums.iter().sum();
-    let term1 = GaussianKernel::new(h2).norm_const(d) * s2 / (n * n);
     // term 2: leave-one-out mean density via the h summation
     let p1 = GaussSumProblem::kde(data, h, epsilon);
     let s1: f64 = engine.run(&p1)?.sums.iter().sum();
-    let term2 = 2.0 * GaussianKernel::new(h).norm_const(d) * (s1 - n) / (n * (n - 1.0));
-    Ok(term1 - term2)
+    Ok(score_from_sums(n, d, h, s1, s2))
+}
+
+/// The LSCV score for one bandwidth on a prepared [`SweepEngine`]
+/// (monochromatic engines only): two `evaluate` calls, zero tree
+/// builds.
+pub fn lscv_score_engine(
+    engine: &SweepEngine,
+    h: f64,
+    epsilon: f64,
+    variant: &DualTreeConfig,
+) -> Result<f64, AlgoError> {
+    assert!(
+        engine.is_monochromatic(),
+        "LSCV is defined on a single dataset (monochromatic engine)"
+    );
+    let n = engine.num_points() as f64;
+    let d = engine.dim();
+    let h2 = std::f64::consts::SQRT_2 * h;
+    let s2: f64 = engine.evaluate(h2, epsilon, variant)?.sums.iter().sum();
+    let s1: f64 = engine.evaluate(h, epsilon, variant)?.sums.iter().sum();
+    Ok(score_from_sums(n, d, h, s1, s2))
+}
+
+/// Pick the winning bandwidth from a scored grid.
+///
+/// Non-finite scores (NaN/±∞ — e.g. a poisoned summation) are *skipped
+/// with a warning* instead of silently losing every comparison, which
+/// previously let a NaN-poisoned grid return `grid[0]` as if it had
+/// won. Exact ties break deterministically toward the smaller h
+/// (smoother estimates are the safer default). Errors when no score is
+/// finite.
+pub fn pick_best(grid: &[f64], scores: &[f64]) -> Result<f64, AlgoError> {
+    assert_eq!(grid.len(), scores.len());
+    let mut best: Option<(f64, f64)> = None; // (h, score)
+    for (&h, &s) in grid.iter().zip(scores) {
+        if !s.is_finite() {
+            eprintln!("lscv: skipping non-finite score {s} at h={h:.6e}");
+            continue;
+        }
+        best = Some(match best {
+            None => (h, s),
+            Some((bh, bs)) => {
+                if s < bs || (s == bs && h < bh) {
+                    (h, s)
+                } else {
+                    (bh, bs)
+                }
+            }
+        });
+    }
+    best.map(|(h, _)| h).ok_or_else(|| {
+        AlgoError::ToleranceUnreachable(format!(
+            "LSCV: all {} grid scores are non-finite",
+            grid.len()
+        ))
+    })
 }
 
 /// Evaluate LSCV over a bandwidth grid and return (best h, all scores).
@@ -46,21 +117,49 @@ pub fn select_bandwidth(
 ) -> Result<(f64, Vec<f64>), AlgoError> {
     assert!(!grid.is_empty());
     let mut scores = Vec::with_capacity(grid.len());
-    let mut best = (grid[0], f64::INFINITY);
     for &h in grid {
-        let s = lscv_score(data, h, epsilon, engine)?;
-        if s < best.1 {
-            best = (h, s);
-        }
-        scores.push(s);
+        scores.push(lscv_score(data, h, epsilon, engine)?);
     }
-    Ok((best.0, scores))
+    Ok((pick_best(grid, &scores)?, scores))
+}
+
+/// Evaluate LSCV over a bandwidth grid on a prepared [`SweepEngine`]:
+/// the kd-tree is built once for the whole grid, and both summation
+/// grids (h and √2·h) run through [`SweepEngine::evaluate_grid`], which
+/// parallelizes across bandwidths with the engine's thread count.
+pub fn select_bandwidth_engine(
+    engine: &SweepEngine,
+    grid: &[f64],
+    epsilon: f64,
+    variant: &DualTreeConfig,
+) -> Result<(f64, Vec<f64>), AlgoError> {
+    assert!(!grid.is_empty());
+    assert!(
+        engine.is_monochromatic(),
+        "LSCV is defined on a single dataset (monochromatic engine)"
+    );
+    let n = engine.num_points() as f64;
+    let d = engine.dim();
+    let grid2: Vec<f64> = grid.iter().map(|&h| std::f64::consts::SQRT_2 * h).collect();
+    let r1 = engine.evaluate_grid(grid, epsilon, variant)?;
+    let r2 = engine.evaluate_grid(&grid2, epsilon, variant)?;
+    let scores: Vec<f64> = grid
+        .iter()
+        .enumerate()
+        .map(|(i, &h)| {
+            let s1: f64 = r1[i].sums.iter().sum();
+            let s2: f64 = r2[i].sums.iter().sum();
+            score_from_sums(n, d, h, s1, s2)
+        })
+        .collect();
+    Ok((pick_best(grid, &scores)?, scores))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::algo::naive::Naive;
+    use crate::algo::{GaussSumResult, RunStats};
     use crate::kde::bandwidth::{log_grid, silverman};
     use crate::util::Pcg32;
 
@@ -140,5 +239,84 @@ mod tests {
         let (h_naive, _) = select_bandwidth(&data, &grid, 1e-4, &Naive::new()).unwrap();
         let (h_dito, _) = select_bandwidth(&data, &grid, 1e-4, &Dito::default()).unwrap();
         assert_eq!(h_naive, h_dito);
+    }
+
+    /// The prepared-engine sweep must select the same bandwidth as the
+    /// per-h rebuild path.
+    #[test]
+    fn engine_sweep_agrees_with_rebuild_path() {
+        let mut rng = Pcg32::new(144);
+        let data = Matrix::from_rows(
+            &(0..300)
+                .map(|_| vec![0.4 + 0.06 * rng.normal(), 0.6 + 0.05 * rng.normal()])
+                .collect::<Vec<_>>(),
+        );
+        let pilot = silverman(&data);
+        let grid = log_grid(pilot, 0.1, 10.0, 7);
+        let variant = DualTreeConfig::default();
+        let (h_rebuild, scores_rebuild) =
+            select_bandwidth(&data, &grid, 1e-4, &crate::algo::dito::Dito::default()).unwrap();
+        let engine = SweepEngine::for_kde(&data, 32).with_threads(2);
+        let (h_engine, scores_engine) =
+            select_bandwidth_engine(&engine, &grid, 1e-4, &variant).unwrap();
+        assert_eq!(h_rebuild, h_engine);
+        assert_eq!(engine.tree_builds(), 1);
+        for (a, b) in scores_rebuild.iter().zip(&scores_engine) {
+            assert!((a - b).abs() <= 1e-12 * a.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    /// A mock summation engine that poisons chosen bandwidths with NaN.
+    struct NanAt {
+        nan_below_h: f64,
+    }
+
+    impl GaussSum for NanAt {
+        fn name(&self) -> &'static str {
+            "NanAt"
+        }
+
+        fn run(&self, problem: &GaussSumProblem<'_>) -> Result<GaussSumResult, AlgoError> {
+            let n = problem.num_queries();
+            let v = if problem.h < self.nan_below_h { f64::NAN } else { problem.h };
+            Ok(GaussSumResult { sums: vec![v; n], stats: RunStats::default() })
+        }
+    }
+
+    /// Regression: a NaN score must be skipped (previously `s < best`
+    /// was false for NaN, so a fully poisoned grid silently returned
+    /// `grid[0]` as the winner).
+    #[test]
+    fn nan_scores_are_skipped_not_winners() {
+        let data = gaussian_1d(40, 145);
+        // h=0.1 and h=0.2 poisoned; only h=0.4 yields a finite score
+        let grid = [0.1, 0.2, 0.4];
+        let engine = NanAt { nan_below_h: 0.3 };
+        let (h, scores) = select_bandwidth(&data, &grid, 1e-6, &engine).unwrap();
+        assert!(scores[0].is_nan() && scores[1].is_nan());
+        assert!(scores[2].is_finite());
+        assert_eq!(h, 0.4, "NaN score must not win the grid");
+    }
+
+    /// Regression: an all-NaN grid must surface an error, not grid[0].
+    #[test]
+    fn all_nan_grid_errors() {
+        let data = gaussian_1d(40, 146);
+        let grid = [0.1, 0.2];
+        let engine = NanAt { nan_below_h: f64::INFINITY };
+        let err = select_bandwidth(&data, &grid, 1e-6, &engine).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+    }
+
+    /// Exact score ties break toward the smaller bandwidth.
+    #[test]
+    fn ties_break_toward_smaller_h() {
+        assert_eq!(pick_best(&[0.4, 0.1, 0.2], &[1.0, 1.0, 1.0]).unwrap(), 0.1);
+        assert_eq!(pick_best(&[0.4, 0.1], &[0.5, 1.0]).unwrap(), 0.4);
+        // non-finite entries are ignored entirely
+        assert_eq!(
+            pick_best(&[0.1, 0.2, 0.3], &[f64::NAN, 2.0, f64::INFINITY]).unwrap(),
+            0.2
+        );
     }
 }

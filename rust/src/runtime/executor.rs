@@ -2,172 +2,234 @@
 //! CPU client and stream (query tile × reference chunk) executions
 //! through it, handling all padding at this boundary so callers work
 //! with natural sizes.
+//!
+//! The real implementation needs the `xla` PJRT bindings, which are not
+//! vendored in this offline tree; it is gated behind the `pjrt` cargo
+//! feature. Without the feature a stub with the identical API is built
+//! whose `load` fails with a descriptive error, so every caller
+//! (CLI `runtime`, benches, `TiledNaive`) compiles and degrades
+//! gracefully at run time.
 
-use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::TileExecutor;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::TileExecutor;
 
-use crate::geometry::Matrix;
-use crate::kernel::GaussianKernel;
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use crate::anyhow;
+    use crate::geometry::Matrix;
+    use crate::kernel::GaussianKernel;
+    use crate::util::error::{Context, Result};
 
-use super::artifact::{ArtifactManifest, ArtifactSpec};
+    use super::super::artifact::{ArtifactManifest, ArtifactSpec};
 
-/// A compiled Gaussian-chunk executable for one dimension.
-pub struct TileExecutor {
-    exe: xla::PjRtLoadedExecutable,
-    spec: ArtifactSpec,
+    /// A compiled Gaussian-chunk executable for one dimension.
+    pub struct TileExecutor {
+        exe: xla::PjRtLoadedExecutable,
+        spec: ArtifactSpec,
+    }
+
+    impl TileExecutor {
+        /// Compile the artifact for `dim` from `dir` on a fresh CPU client.
+        pub fn load(dir: &std::path::Path, dim: usize) -> Result<Self> {
+            let manifest = ArtifactManifest::load(dir)?;
+            let spec = manifest
+                .spec(dim)
+                .ok_or_else(|| anyhow!("no artifact for D={dim} (run `make artifacts`)"))?
+                .clone();
+            let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+            )
+            .with_context(|| format!("parsing {}", spec.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).context("XLA compile")?;
+            Ok(TileExecutor { exe, spec })
+        }
+
+        pub fn spec(&self) -> &ArtifactSpec {
+            &self.spec
+        }
+
+        /// Execute one padded (TQ × NR) chunk. Inputs must already have the
+        /// artifact's exact shapes (flat row-major).
+        fn execute_raw(&self, q: &[f64], r: &[f64], w: &[f64], s: f64) -> Result<Vec<f64>> {
+            let d = self.spec.dim as i64;
+            let tq = self.spec.tile_queries as i64;
+            let nr = self.spec.chunk_refs as i64;
+            debug_assert_eq!(q.len() as i64, tq * d);
+            debug_assert_eq!(r.len() as i64, nr * d);
+            debug_assert_eq!(w.len() as i64, nr);
+            let ql = xla::Literal::vec1(q).reshape(&[tq, d])?;
+            let rl = xla::Literal::vec1(r).reshape(&[nr, d])?;
+            let wl = xla::Literal::vec1(w);
+            let sl = xla::Literal::vec1(&[s]);
+            let out = self.exe.execute::<xla::Literal>(&[ql, rl, wl, sl])?[0][0]
+                .to_literal_sync()?
+                .to_tuple1()?;
+            Ok(out.to_vec::<f64>()?)
+        }
+
+        /// Full Gaussian summation of `queries` against `(references,
+        /// weights)` at bandwidth `h`: pads/chunks everything to the
+        /// artifact shapes and accumulates partial sums across chunks.
+        pub fn gauss_sum(
+            &self,
+            queries: &Matrix,
+            references: &Matrix,
+            weights: &[f64],
+            h: f64,
+        ) -> Result<Vec<f64>> {
+            let d = self.spec.dim;
+            crate::ensure!(queries.cols() == d && references.cols() == d, "dim mismatch");
+            crate::ensure!(weights.len() == references.rows(), "weights length");
+            let kernel = GaussianKernel::new(h);
+            let s = -0.5 / (h * h);
+            let _ = kernel; // kernel kept for parity/validation hooks
+            let tq = self.spec.tile_queries;
+            let nr = self.spec.chunk_refs;
+
+            let mut sums = vec![0.0; queries.rows()];
+            let mut qbuf = vec![0.0; tq * d];
+            let mut rbuf = vec![0.0; nr * d];
+            let mut wbuf = vec![0.0; nr];
+
+            for q0 in (0..queries.rows()).step_by(tq) {
+                let qn = (q0 + tq).min(queries.rows()) - q0;
+                qbuf.fill(0.0);
+                for i in 0..qn {
+                    qbuf[i * d..(i + 1) * d].copy_from_slice(queries.row(q0 + i));
+                }
+                for r0 in (0..references.rows()).step_by(nr) {
+                    let rn = (r0 + nr).min(references.rows()) - r0;
+                    rbuf.fill(0.0);
+                    wbuf.fill(0.0); // zero weight ⇒ padded rows contribute 0
+                    for i in 0..rn {
+                        rbuf[i * d..(i + 1) * d].copy_from_slice(references.row(r0 + i));
+                        wbuf[i] = weights[r0 + i];
+                    }
+                    let part = self.execute_raw(&qbuf, &rbuf, &wbuf, s)?;
+                    for i in 0..qn {
+                        sums[q0 + i] += part[i];
+                    }
+                }
+            }
+            Ok(sums)
+        }
+    }
 }
 
-impl TileExecutor {
-    /// Compile the artifact for `dim` from `dir` on a fresh CPU client.
-    pub fn load(dir: &std::path::Path, dim: usize) -> Result<Self> {
-        let manifest = ArtifactManifest::load(dir)?;
-        let spec = manifest
-            .spec(dim)
-            .ok_or_else(|| anyhow!("no artifact for D={dim} (run `make artifacts`)"))?
-            .clone();
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
-        let proto = xla::HloModuleProto::from_text_file(
-            spec.file
-                .to_str()
-                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
-        )
-        .with_context(|| format!("parsing {}", spec.file.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).context("XLA compile")?;
-        Ok(TileExecutor { exe, spec })
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use crate::geometry::Matrix;
+    use crate::util::error::Result;
+
+    use super::super::artifact::ArtifactSpec;
+
+    /// Unconstructible placeholder built when the `pjrt` feature is off.
+    pub struct TileExecutor {
+        spec: ArtifactSpec,
+        never: std::convert::Infallible,
     }
 
-    pub fn spec(&self) -> &ArtifactSpec {
-        &self.spec
-    }
-
-    /// Execute one padded (TQ × NR) chunk. Inputs must already have the
-    /// artifact's exact shapes (flat row-major).
-    fn execute_raw(&self, q: &[f64], r: &[f64], w: &[f64], s: f64) -> Result<Vec<f64>> {
-        let d = self.spec.dim as i64;
-        let tq = self.spec.tile_queries as i64;
-        let nr = self.spec.chunk_refs as i64;
-        debug_assert_eq!(q.len() as i64, tq * d);
-        debug_assert_eq!(r.len() as i64, nr * d);
-        debug_assert_eq!(w.len() as i64, nr);
-        let ql = xla::Literal::vec1(q).reshape(&[tq, d])?;
-        let rl = xla::Literal::vec1(r).reshape(&[nr, d])?;
-        let wl = xla::Literal::vec1(w);
-        let sl = xla::Literal::vec1(&[s]);
-        let out = self.exe.execute::<xla::Literal>(&[ql, rl, wl, sl])?[0][0]
-            .to_literal_sync()?
-            .to_tuple1()?;
-        Ok(out.to_vec::<f64>()?)
-    }
-
-    /// Full Gaussian summation of `queries` against `(references,
-    /// weights)` at bandwidth `h`: pads/chunks everything to the
-    /// artifact shapes and accumulates partial sums across chunks.
-    pub fn gauss_sum(
-        &self,
-        queries: &Matrix,
-        references: &Matrix,
-        weights: &[f64],
-        h: f64,
-    ) -> Result<Vec<f64>> {
-        let d = self.spec.dim;
-        anyhow::ensure!(queries.cols() == d && references.cols() == d, "dim mismatch");
-        anyhow::ensure!(weights.len() == references.rows(), "weights length");
-        let kernel = GaussianKernel::new(h);
-        let s = -0.5 / (h * h);
-        let _ = kernel; // kernel kept for parity/validation hooks
-        let tq = self.spec.tile_queries;
-        let nr = self.spec.chunk_refs;
-
-        let mut sums = vec![0.0; queries.rows()];
-        let mut qbuf = vec![0.0; tq * d];
-        let mut rbuf = vec![0.0; nr * d];
-        let mut wbuf = vec![0.0; nr];
-
-        for q0 in (0..queries.rows()).step_by(tq) {
-            let qn = (q0 + tq).min(queries.rows()) - q0;
-            qbuf.fill(0.0);
-            for i in 0..qn {
-                qbuf[i * d..(i + 1) * d].copy_from_slice(queries.row(q0 + i));
-            }
-            for r0 in (0..references.rows()).step_by(nr) {
-                let rn = (r0 + nr).min(references.rows()) - r0;
-                rbuf.fill(0.0);
-                wbuf.fill(0.0); // zero weight ⇒ padded rows contribute 0
-                for i in 0..rn {
-                    rbuf[i * d..(i + 1) * d].copy_from_slice(references.row(r0 + i));
-                    wbuf[i] = weights[r0 + i];
-                }
-                let part = self.execute_raw(&qbuf, &rbuf, &wbuf, s)?;
-                for i in 0..qn {
-                    sums[q0 + i] += part[i];
-                }
-            }
+    impl TileExecutor {
+        /// Always fails: the PJRT bindings are not part of this build.
+        pub fn load(_dir: &std::path::Path, dim: usize) -> Result<Self> {
+            Err(crate::anyhow!(
+                "PJRT runtime unavailable: fastgauss was built without the `pjrt` \
+                 feature, so the artifact for D={dim} cannot be executed \
+                 (rebuild with `--features pjrt` and the xla bindings)"
+            ))
         }
-        Ok(sums)
+
+        pub fn spec(&self) -> &ArtifactSpec {
+            &self.spec
+        }
+
+        pub fn gauss_sum(
+            &self,
+            _queries: &Matrix,
+            _references: &Matrix,
+            _weights: &[f64],
+            _h: f64,
+        ) -> Result<Vec<f64>> {
+            match self.never {}
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
+    #[allow(unused_imports)]
     use super::*;
-    use crate::algo::{naive::Naive, GaussSum, GaussSumProblem};
-    use crate::util::Pcg32;
 
-    fn artifacts_available() -> bool {
-        crate::runtime::artifacts_dir().join("manifest.json").exists()
-    }
-
-    fn random(n: usize, d: usize, seed: u64) -> Matrix {
-        let mut rng = Pcg32::new(seed);
-        Matrix::from_rows(
-            &(0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect::<Vec<_>>(),
-        )
-    }
-
-    /// End-to-end: PJRT chunk execution equals the rust naive sum.
-    /// (Requires `make artifacts`; skipped otherwise.)
+    #[cfg(not(feature = "pjrt"))]
     #[test]
-    fn pjrt_matches_rust_naive() {
-        if !artifacts_available() {
-            eprintln!("skipping: no artifacts");
-            return;
-        }
-        let exec = TileExecutor::load(&crate::runtime::artifacts_dir(), 2).unwrap();
-        // sizes that exercise both query and reference padding
-        let q = random(300, 2, 21);
-        let r = random(5000, 2, 22);
-        let mut rng = Pcg32::new(23);
-        let w: Vec<f64> = (0..5000).map(|_| rng.uniform_in(0.1, 2.0)).collect();
-        let h = 0.2;
-        let got = exec.gauss_sum(&q, &r, &w, h).unwrap();
-        let p = GaussSumProblem::new(&q, &r, Some(&w), h, 0.01);
-        let want = Naive::new().run(&p).unwrap().sums;
-        for i in 0..got.len() {
-            assert!(
-                (got[i] - want[i]).abs() < 1e-9 * want[i].max(1.0),
-                "i={i}: {} vs {}",
-                got[i],
-                want[i]
-            );
-        }
+    fn stub_load_reports_missing_feature() {
+        let err = TileExecutor::load(std::path::Path::new("artifacts"), 2).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 
-    #[test]
-    fn load_missing_dim_errors() {
-        if !artifacts_available() {
-            return;
-        }
-        assert!(TileExecutor::load(&crate::runtime::artifacts_dir(), 4).is_err());
-    }
+    #[cfg(feature = "pjrt")]
+    mod with_pjrt {
+        use super::super::*;
+        use crate::algo::max_relative_error;
+        use crate::algo::{naive::Naive, GaussSum, GaussSumProblem};
+        use crate::geometry::Matrix;
+        use crate::util::Pcg32;
 
-    #[test]
-    fn spec_shapes_consistent() {
-        if !artifacts_available() {
-            return;
+        fn artifacts_available() -> bool {
+            crate::runtime::artifacts_dir().join("manifest.json").exists()
         }
-        let exec = TileExecutor::load(&crate::runtime::artifacts_dir(), 3).unwrap();
-        let s = exec.spec();
-        assert_eq!(s.dim, 3);
-        assert_eq!(s.chunk_refs % s.block_refs, 0);
+
+        fn random(n: usize, d: usize, seed: u64) -> Matrix {
+            let mut rng = Pcg32::new(seed);
+            Matrix::from_rows(
+                &(0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect::<Vec<_>>(),
+            )
+        }
+
+        /// End-to-end: PJRT chunk execution equals the rust naive sum.
+        /// (Requires `make artifacts`; skipped otherwise.)
+        #[test]
+        fn pjrt_matches_rust_naive() {
+            if !artifacts_available() {
+                eprintln!("skipping: no artifacts");
+                return;
+            }
+            let exec = TileExecutor::load(&crate::runtime::artifacts_dir(), 2).unwrap();
+            // sizes that exercise both query and reference padding
+            let q = random(300, 2, 21);
+            let r = random(5000, 2, 22);
+            let mut rng = Pcg32::new(23);
+            let w: Vec<f64> = (0..5000).map(|_| rng.uniform_in(0.1, 2.0)).collect();
+            let h = 0.2;
+            let got = exec.gauss_sum(&q, &r, &w, h).unwrap();
+            let p = GaussSumProblem::new(&q, &r, Some(&w), h, 0.01);
+            let want = Naive::new().run(&p).unwrap().sums;
+            assert!(max_relative_error(&got, &want) < 1e-9);
+        }
+
+        #[test]
+        fn load_missing_dim_errors() {
+            if !artifacts_available() {
+                return;
+            }
+            assert!(TileExecutor::load(&crate::runtime::artifacts_dir(), 4).is_err());
+        }
+
+        #[test]
+        fn spec_shapes_consistent() {
+            if !artifacts_available() {
+                return;
+            }
+            let exec = TileExecutor::load(&crate::runtime::artifacts_dir(), 3).unwrap();
+            let s = exec.spec();
+            assert_eq!(s.dim, 3);
+            assert_eq!(s.chunk_refs % s.block_refs, 0);
+        }
     }
 }

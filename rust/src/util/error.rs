@@ -1,0 +1,143 @@
+//! Minimal string-backed error plumbing in the style of `anyhow` — the
+//! build is fully offline and std-only, so we carry our own
+//! [`Error`]/[`Result`]/[`Context`] instead of the crate.
+//!
+//! The crate-root macros [`crate::anyhow!`], [`crate::bail!`] and
+//! [`crate::ensure!`] mirror their namesakes; downstream users invoke
+//! them as `fastgauss::anyhow!(...)` etc.
+
+use std::fmt;
+
+/// A boxed-string error with optional context prefixes.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> Result<()>` prints the Debug form on exit; keep
+        // it human-readable.
+        f.write_str(&self.msg)
+    }
+}
+
+// Any std error converts via `?`. (`Error` itself deliberately does NOT
+// implement `std::error::Error`, which keeps this blanket impl free of
+// overlap with `impl From<T> for T`.)
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// Crate-wide result type defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-style extension for attaching context to errors.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{ctx}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an `Err` built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Early-return an `Err` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let e = crate::anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        assert_eq!(format!("{e:?}"), "bad value 7");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            crate::ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                crate::bail!("too big");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(-1).unwrap_err().to_string().contains("positive"));
+        assert_eq!(f(200).unwrap_err().to_string(), "too big");
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let e = io_fail().context("reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config: gone");
+        let e2 = io_fail().with_context(|| format!("pass {}", 2)).unwrap_err();
+        assert_eq!(e2.to_string(), "pass 2: gone");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            io_fail()?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "gone");
+        fn g() -> Result<usize> {
+            let n: usize = "xyz".parse()?;
+            Ok(n)
+        }
+        assert!(g().is_err());
+    }
+}

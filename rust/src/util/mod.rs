@@ -2,6 +2,7 @@
 //! leveled logging. The build is fully offline, so we carry our own RNG
 //! instead of the `rand` crate.
 
+pub mod error;
 pub mod json;
 pub mod log;
 pub mod rng;

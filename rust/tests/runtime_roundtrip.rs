@@ -10,6 +10,10 @@ use fastgauss::kde::bandwidth::silverman;
 use fastgauss::runtime::{artifacts_dir, ArtifactManifest, TiledNaive};
 
 fn have_artifacts() -> bool {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("NOTE: built without the `pjrt` feature — skipping artifact round-trips");
+        return false;
+    }
     let ok = artifacts_dir().join("manifest.json").exists();
     if !ok {
         eprintln!("NOTE: artifacts missing — run `make artifacts`; skipping");

@@ -1,0 +1,113 @@
+//! Regression suite for the two-phase [`SweepEngine`]: a prepared
+//! engine must reproduce the per-h rebuild path exactly, build its
+//! kd-tree exactly once per sweep, and keep the ε guarantee when the
+//! sweep is multi-threaded.
+
+use fastgauss::algo::dualtree::{run_dualtree, DualTreeConfig, SeriesKind, SweepEngine};
+use fastgauss::algo::{max_relative_error, naive::Naive, GaussSum, GaussSumProblem};
+use fastgauss::data;
+use fastgauss::kde::bandwidth::{log_grid, silverman};
+use fastgauss::kde::lscv::select_bandwidth_engine;
+
+const EPS: f64 = 0.01;
+
+/// The headline regression: across a 7-point log grid, a prepared
+/// engine's sums are identical (within 1e-12) to rebuilding the tree at
+/// every h via `run_dualtree` — and the engine built its tree once.
+#[test]
+fn engine_matches_per_h_rebuilds_on_paper_datasets() {
+    for name in ["astro2d", "galaxy3d"] {
+        let ds = data::by_name(name, 400, 2024).unwrap();
+        let pilot = silverman(&ds.points);
+        let grid = log_grid(pilot, 1e-3, 1e3, 7);
+        let engine = SweepEngine::for_kde(&ds.points, 32);
+        let cfg = DualTreeConfig::default();
+        for &h in &grid {
+            let problem = GaussSumProblem::kde(&ds.points, h, EPS);
+            let rebuilt = run_dualtree(&problem, &cfg).unwrap();
+            let prepared = engine.evaluate(h, EPS, &cfg).unwrap();
+            assert_eq!(rebuilt.sums.len(), prepared.sums.len());
+            for (a, b) in rebuilt.sums.iter().zip(&prepared.sums) {
+                assert!(
+                    (a - b).abs() <= 1e-12 * a.abs().max(1.0),
+                    "{name} h={h:.4e}: {a} vs {b}"
+                );
+            }
+            // per-h rebuild reports its builds; the engine reports none
+            assert!(rebuilt.stats.tree_builds >= 1);
+            assert_eq!(prepared.stats.tree_builds, 0);
+        }
+        // exactly one kd-tree construction for the whole 7-point sweep
+        assert_eq!(engine.tree_builds(), 1, "{name}");
+        assert!(engine.build_secs() >= 0.0);
+    }
+}
+
+/// evaluate_grid (the multi-threaded sweep) performs one build total
+/// and meets the ε guarantee at every grid point.
+#[test]
+fn threaded_grid_sweep_builds_once_and_verifies() {
+    let ds = data::by_name("astro2d", 500, 7).unwrap();
+    let pilot = silverman(&ds.points);
+    let grid = log_grid(pilot, 1e-2, 1e2, 7);
+    let engine = SweepEngine::for_kde(&ds.points, 32).with_threads(4);
+    let cfg = DualTreeConfig::default();
+    let results = engine.evaluate_grid(&grid, EPS, &cfg).unwrap();
+    assert_eq!(results.len(), grid.len());
+    assert_eq!(engine.tree_builds(), 1);
+    for (res, &h) in results.iter().zip(&grid) {
+        let problem = GaussSumProblem::kde(&ds.points, h, EPS);
+        let exact = Naive::new().run(&problem).unwrap().sums;
+        let rel = max_relative_error(&res.sums, &exact);
+        assert!(rel <= EPS * (1.0 + 1e-9), "h={h:.4e}: rel={rel:.2e}");
+        assert_eq!(res.stats.tree_builds, 0);
+    }
+}
+
+/// Subtree-parallel evaluation keeps the guarantee for every variant
+/// the paper's table runs (DFD / DFDO / DFTO / DITO settings).
+#[test]
+fn parallel_evaluate_guarantee_all_variants() {
+    let ds = data::by_name("galaxy3d", 400, 11).unwrap();
+    let pilot = silverman(&ds.points);
+    let engine = SweepEngine::for_kde(&ds.points, 16).with_threads(3);
+    let variants = [
+        DualTreeConfig { use_tokens: false, series: None, ..Default::default() },
+        DualTreeConfig { use_tokens: true, series: None, ..Default::default() },
+        DualTreeConfig { series: Some(SeriesKind::OpdGrid), ..Default::default() },
+        DualTreeConfig::default(),
+    ];
+    for mult in [0.1, 1.0, 10.0] {
+        let h = pilot * mult;
+        let problem = GaussSumProblem::kde(&ds.points, h, EPS);
+        let exact = Naive::new().run(&problem).unwrap().sums;
+        for cfg in &variants {
+            let res = engine.evaluate(h, EPS, cfg).unwrap();
+            let rel = max_relative_error(&res.sums, &exact);
+            assert!(rel <= EPS * (1.0 + 1e-9), "h={h:.4e} cfg={cfg:?}: rel={rel:.2e}");
+        }
+    }
+    assert_eq!(engine.tree_builds(), 1);
+}
+
+/// The engine-based LSCV sweep touches tree construction once and
+/// agrees with DITO-over-rebuilds on the selected bandwidth.
+#[test]
+fn lscv_engine_sweep_one_build_and_consistent() {
+    let ds = data::by_name("astro2d", 300, 5).unwrap();
+    let pilot = silverman(&ds.points);
+    let grid = log_grid(pilot, 0.1, 10.0, 7);
+    let engine = SweepEngine::for_kde(&ds.points, 32).with_threads(2);
+    let (h_engine, scores) =
+        select_bandwidth_engine(&engine, &grid, 1e-4, &DualTreeConfig::default()).unwrap();
+    assert_eq!(scores.len(), 7);
+    assert_eq!(engine.tree_builds(), 1);
+    let (h_rebuild, _) = fastgauss::kde::lscv::select_bandwidth(
+        &ds.points,
+        &grid,
+        1e-4,
+        &fastgauss::algo::dito::Dito::default(),
+    )
+    .unwrap();
+    assert_eq!(h_engine, h_rebuild);
+}
