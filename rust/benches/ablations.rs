@@ -9,18 +9,22 @@
 //!   §sweep   — the PR's amortization claim: a 13-point LSCV-style
 //!              bandwidth sweep via per-h rebuilds (sequential) vs one
 //!              prepared multi-threaded SweepEngine, verified against
-//!              Naive at every grid point.
+//!              Naive at every grid point;
+//!   §basecase — the SoA compute microkernel (the base case every
+//!              algorithm now routes through) vs the old scalar triple
+//!              loop, on galaxy3d at default ε.
 //!
 //! Run: `cargo bench --bench ablations`
 //! (knobs: FASTGAUSS_N, FASTGAUSS_SWEEP_N)
 
 use fastgauss::algo::dualtree::{run_dualtree, DualTreeConfig, SeriesKind, SweepEngine};
 use fastgauss::algo::{max_relative_error, naive::Naive, GaussSum, GaussSumProblem};
+use fastgauss::compute;
 use fastgauss::data;
 use fastgauss::kde::bandwidth::{log_grid, silverman};
 use fastgauss::util::timer::time_it;
 
-fn median_secs<F: FnMut() -> ()>(mut f: F, reps: usize) -> f64 {
+fn median_secs<F: FnMut()>(mut f: F, reps: usize) -> f64 {
     let mut times: Vec<f64> = (0..reps)
         .map(|_| {
             let ((), s) = time_it(&mut f);
@@ -148,6 +152,59 @@ fn main() {
         t_rebuild / t_engine
     );
 
+    // ---- §basecase: SoA microkernel vs scalar base case ----
+    // galaxy3d at the default ε of this harness; this is the leaf-leaf
+    // workload that dominates dual-tree time at tight ε, isolated.
+    let nb = n.min(4000);
+    println!(
+        "\n§basecase — compute microkernel vs scalar triple loop (galaxy3d N={nb}, ε = {eps})"
+    );
+    let ds_base = data::by_name("galaxy3d", nb, 42).unwrap();
+    let h_base = silverman(&ds_base.points);
+    let kernel = fastgauss::kernel::GaussianKernel::new(h_base);
+    let w_base = vec![1.0; nb];
+    let mut out_scalar = vec![0.0; nb];
+    let mut out_micro = vec![0.0; nb];
+    let t_scalar = median_secs(
+        || {
+            out_scalar.fill(0.0);
+            compute::reference::scalar_gauss_sums(
+                &ds_base.points,
+                &ds_base.points,
+                &w_base,
+                &kernel,
+                &mut out_scalar,
+            );
+        },
+        3,
+    );
+    let mut scratch = compute::Scratch::with_block(ds_base.dim(), compute::BLOCK);
+    let t_micro = median_secs(
+        || {
+            out_micro.fill(0.0);
+            compute::gauss_sum_all(
+                &ds_base.points,
+                &ds_base.points,
+                &w_base,
+                &kernel,
+                compute::BLOCK,
+                &mut scratch,
+                &mut out_micro,
+            );
+        },
+        3,
+    );
+    let mut worst_dev = 0.0f64;
+    for i in 0..nb {
+        worst_dev = worst_dev.max((out_micro[i] - out_scalar[i]).abs() / out_scalar[i].max(1.0));
+    }
+    assert!(worst_dev <= 1e-12, "microkernel diverged from scalar: {worst_dev:.2e}");
+    println!(
+        "scalar={t_scalar:.4}s  microkernel={t_micro:.4}s  speedup = {:.2}x  \
+         max rel dev = {worst_dev:.1e}",
+        t_scalar / t_micro
+    );
+
     // ---- §tile: PJRT artifact vs pure-rust exhaustive path ----
     println!("\n§tile — exhaustive path: rust loops vs PJRT artifact (one run)");
     if cfg!(feature = "pjrt")
@@ -162,10 +219,27 @@ fn main() {
             let (_, t_warm) = time_it(|| tiled.run(&problem).unwrap()); // compile+exec
             let (_, t_pjrt) = time_it(|| tiled.run(&problem).unwrap());
             println!(
-                "{name:<10} rust={t_rust:.3}s  pjrt(first)={t_warm:.3}s  pjrt(warm)={t_pjrt:.3}s"
+                "{name:<10} rust={t_rust:.3}s  pjrt(first)={t_warm:.3}s  \
+                 pjrt(warm)={t_pjrt:.3}s"
             );
         }
+    } else if cfg!(not(feature = "pjrt")) {
+        // the tiled runtime degrades to the CPU microkernel fallback,
+        // which is bit-identical to Naive — timing the pair against
+        // each other would be a self-comparison, so just prove the
+        // path works
+        let ds = data::by_name("astro2d", n.min(2000), 42).unwrap();
+        let problem = GaussSumProblem::kde(&ds.points, silverman(&ds.points), eps);
+        let tiled = fastgauss::runtime::TiledNaive::load(ds.dim()).unwrap();
+        let (out, t_tiled) = time_it(|| tiled.run(&problem).unwrap());
+        let exact = Naive::new().run(&problem).unwrap();
+        assert_eq!(out.sums, exact.sums, "CPU fallback must equal Naive bitwise");
+        println!(
+            "(no pjrt feature: {} ran the CPU microkernel fallback in {t_tiled:.3}s, \
+             bit-identical to Naive — build with --features pjrt for the offload numbers)",
+            tiled.name()
+        );
     } else {
-        println!("(artifacts not built — run `make artifacts`)");
+        println!("(pjrt feature on but artifacts not built — run `make artifacts`)");
     }
 }

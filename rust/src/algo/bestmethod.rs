@@ -47,11 +47,14 @@ impl<'a> CostModel<'a> {
     /// Pick the cheapest feasible method for a pair.
     ///
     /// * `bounds`: the bound family (O(Dᵖ) for DITO, O(pᴰ) for DFTO).
+    ///   Generic so monomorphized traversal variants get static dispatch
+    ///   on this per-node-pair hot path; `&dyn TruncationBounds` still
+    ///   works for runtime-polymorphic callers.
     /// * `geo`: pair geometry; `weight`: W_R; `max_err`: admissible E_A.
     /// * `nq`, `nr`: point counts of the two nodes.
-    pub fn best_method(
+    pub fn best_method<B: TruncationBounds + ?Sized>(
         &self,
-        bounds: &dyn TruncationBounds,
+        bounds: &B,
         geo: &NodeGeometry,
         weight: f64,
         max_err: f64,

@@ -1,8 +1,10 @@
 //! **DFD** — dual-tree finite difference (Gray & Moore 2003b): the
-//! classic baseline. Finite-difference approximation only, classic
-//! per-node Theorem-2 rule *without* the token ledger.
+//! classic baseline. A thin instantiation of the generic engine:
+//! `run_dualtree_variant::<NoExpansion, Theorem2>` — finite-difference
+//! approximation only, classic per-node Theorem-2 rule *without* the
+//! token ledger.
 
-use super::dualtree::{run_dualtree, DualTreeConfig};
+use super::dualtree::{run_dualtree_variant, NoExpansion, Theorem2};
 use super::{AlgoError, GaussSum, GaussSumProblem, GaussSumResult};
 
 #[derive(Copy, Clone, Debug)]
@@ -20,15 +22,6 @@ impl Dfd {
     pub fn new() -> Self {
         Self::default()
     }
-
-    fn config(&self) -> DualTreeConfig {
-        DualTreeConfig {
-            leaf_size: self.leaf_size,
-            use_tokens: false,
-            series: None,
-            plimit: None,
-        }
-    }
 }
 
 impl GaussSum for Dfd {
@@ -37,7 +30,7 @@ impl GaussSum for Dfd {
     }
 
     fn run(&self, problem: &GaussSumProblem<'_>) -> Result<GaussSumResult, AlgoError> {
-        run_dualtree(problem, &self.config())
+        run_dualtree_variant::<NoExpansion, Theorem2>(problem, self.leaf_size, None)
     }
 }
 

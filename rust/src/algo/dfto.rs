@@ -1,10 +1,12 @@
 //! **DFTO** — dual-tree fast Gauss transform with the classical O(pᴰ)
 //! grid expansion (Lee et al. 2006) and the improved (token) error
-//! control. Its geometric-series error bounds require scaled node radii
-//! < 1, so series pruning only activates once nodes are small relative
-//! to the bandwidth — the node-size restriction the O(Dᵖ) bounds remove.
+//! control. A thin instantiation of the generic engine:
+//! `run_dualtree_variant::<OpdGrid, TokenLedger>`. Its geometric-series
+//! error bounds require scaled node radii < 1, so series pruning only
+//! activates once nodes are small relative to the bandwidth — the
+//! node-size restriction the O(Dᵖ) bounds remove.
 
-use super::dualtree::{run_dualtree, DualTreeConfig, SeriesKind};
+use super::dualtree::{run_dualtree_variant, OpdGrid, TokenLedger};
 use super::{AlgoError, GaussSum, GaussSumProblem, GaussSumResult};
 
 #[derive(Copy, Clone, Debug)]
@@ -24,15 +26,6 @@ impl Dfto {
     pub fn new() -> Self {
         Self::default()
     }
-
-    fn config(&self) -> DualTreeConfig {
-        DualTreeConfig {
-            leaf_size: self.leaf_size,
-            use_tokens: true,
-            series: Some(SeriesKind::OpdGrid),
-            plimit: self.plimit,
-        }
-    }
 }
 
 impl GaussSum for Dfto {
@@ -41,7 +34,7 @@ impl GaussSum for Dfto {
     }
 
     fn run(&self, problem: &GaussSumProblem<'_>) -> Result<GaussSumResult, AlgoError> {
-        run_dualtree(problem, &self.config())
+        run_dualtree_variant::<OpdGrid, TokenLedger>(problem, self.leaf_size, self.plimit)
     }
 }
 

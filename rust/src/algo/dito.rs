@@ -2,9 +2,11 @@
 //! the O(Dᵖ) graded expansion, the Lemma 4–6 error bounds (no node-size
 //! restriction), per-pair cheapest-method selection (Fig. 6), and the
 //! token-based error control (Section 5), with H2H moment precomputation
-//! (Fig. 5) and L2L post-processing (Fig. 8).
+//! (Fig. 5) and L2L post-processing (Fig. 8). A thin instantiation of
+//! the generic engine: `run_dualtree_variant::<OdpGraded, TokenLedger>`
+//! (or `Theorem2` when the token ablation switch is off).
 
-use super::dualtree::{run_dualtree, DualTreeConfig, SeriesKind};
+use super::dualtree::{run_dualtree_variant, OdpGraded, Theorem2, TokenLedger};
 use super::{AlgoError, GaussSum, GaussSumProblem, GaussSumResult};
 
 /// Configuration for [`Dito`].
@@ -33,15 +35,6 @@ impl Dito {
     pub fn new(config: DitoConfig) -> Self {
         Dito { config }
     }
-
-    fn engine_config(&self) -> DualTreeConfig {
-        DualTreeConfig {
-            leaf_size: self.config.leaf_size,
-            use_tokens: self.config.use_tokens,
-            series: Some(SeriesKind::OdpGraded),
-            plimit: self.config.plimit,
-        }
-    }
 }
 
 impl GaussSum for Dito {
@@ -50,7 +43,12 @@ impl GaussSum for Dito {
     }
 
     fn run(&self, problem: &GaussSumProblem<'_>) -> Result<GaussSumResult, AlgoError> {
-        run_dualtree(problem, &self.engine_config())
+        let (leaf, plimit) = (self.config.leaf_size, self.config.plimit);
+        if self.config.use_tokens {
+            run_dualtree_variant::<OdpGraded, TokenLedger>(problem, leaf, plimit)
+        } else {
+            run_dualtree_variant::<OdpGraded, Theorem2>(problem, leaf, plimit)
+        }
     }
 }
 

@@ -1,11 +1,26 @@
 //! The shared dual-tree engine behind DFD, DFDO, DFTO and DITO.
 //!
-//! One recursion (paper Fig. 7), parameterized by:
-//! * `use_tokens` — plain Theorem-2 rule (DFD) vs the W_T token ledger
-//!   (DFDO/DFTO/DITO);
-//! * `series` — `None` (finite difference only) or an expansion family:
-//!   O(Dᵖ) graded + Lemma 4–6 bounds (DITO) or O(pᴰ) grid + geometric
-//!   bounds (DFTO).
+//! One recursion (paper Fig. 7), with the paper's "one algorithm with
+//! switches" lifted into the type system: the traversal is generic over
+//!
+//! * [`PruneRule`] — plain Theorem-2 acceptance ([`Theorem2`], DFD) vs
+//!   the W_T token ledger ([`TokenLedger`], DFDO/DFTO/DITO);
+//! * [`Expansion`] — [`NoExpansion`] (finite difference only),
+//!   [`OdpGraded`] (O(Dᵖ) graded expansion + Lemma 4–6 bounds, DITO) or
+//!   [`OpdGrid`] (O(pᴰ) grid expansion + geometric bounds, DFTO);
+//!
+//! and each of the six (expansion × rule) combinations monomorphizes
+//! into its own branch-free hot loop — no `SeriesKind` or `use_tokens`
+//! test survives inside the per-pair recursion. The four paper
+//! algorithms are thin instantiations ([`run_dualtree_variant`]); the
+//! runtime-switch interface ([`DualTreeConfig`] + [`run_dualtree`] /
+//! [`SweepEngine::evaluate`]) dispatches **once per evaluate** to the
+//! matching instantiation and is otherwise identical.
+//!
+//! Leaf-leaf base cases — the dominant cost at tight ε — run on the
+//! shared SoA microkernel in [`crate::compute`], through a per-thread
+//! [`crate::compute::Scratch`] arena sized at prepare time so the
+//! traversal performs zero allocations after `prepare`.
 //!
 //! Correctness architecture: per-query-node state lives in a
 //! [`QueryLedger`]; bounds are hierarchical (summed along the root→leaf
@@ -26,7 +41,9 @@
 //! [`SweepEngine::prepare`], done **once per dataset**; each
 //! [`SweepEngine::evaluate`] call then computes only the h-dependent
 //! state (Hermite moment tables, the [`QueryLedger`]) and runs the
-//! traversal. Per-(h, layout, plimit) moments are memoized internally,
+//! traversal. Per-(h, layout, plimit) moments are memoized in a
+//! **bounded** cache (capacity [`DEFAULT_MOMENT_CACHE_CAPACITY`],
+//! oldest-entry eviction — see [`SweepEngine::with_moment_cache_capacity`]),
 //! and both [`SweepEngine::evaluate`] (across independent query
 //! subtrees) and [`SweepEngine::evaluate_grid`] (across grid
 //! bandwidths) parallelize with `std::thread::scope`.
@@ -38,8 +55,10 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
-use crate::bounds::{odp::OdpBounds, opd::OpdBounds, NodeGeometry, TruncationBounds};
-use crate::errorcontrol::{token_rule, PruneDecision, QueryLedger};
+use crate::bounds::{odp::OdpBounds, opd::OpdBounds, NeverBounds, NodeGeometry, TruncationBounds};
+use crate::compute::Scratch;
+use crate::errorcontrol::{PruneDecision, QueryLedger};
+pub use crate::errorcontrol::{PruneRule, Theorem2, TokenLedger};
 use crate::geometry::Matrix;
 use crate::hermite::{
     accumulate_local_truncated, eval_farfield_truncated, eval_local, h2l_truncated, l2l,
@@ -53,7 +72,9 @@ use crate::util::timer::time_it;
 use super::bestmethod::{Choice, CostModel};
 use super::{AlgoError, GaussSumProblem, GaussSumResult, RunStats};
 
-/// Expansion family for FMM-type pruning.
+/// Expansion family for FMM-type pruning — the runtime tag used by
+/// [`DualTreeConfig`] and the moment cache; the traversal itself works
+/// on the type-level [`Expansion`] instantiations.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub enum SeriesKind {
     /// O(Dᵖ) graded expansion with the paper's Lemma 4–6 bounds (DITO).
@@ -69,17 +90,62 @@ impl SeriesKind {
             SeriesKind::OpdGrid => Layout::Grid,
         }
     }
+}
 
-    fn bounds(self) -> &'static dyn TruncationBounds {
-        match self {
-            SeriesKind::OdpGraded => &OdpBounds,
-            SeriesKind::OpdGrid => &OpdBounds,
-        }
-    }
+/// The series half of the paper's switchboard, lifted to a type: which
+/// expansion family (if any) the traversal may prune with. The three
+/// instantiations are [`NoExpansion`], [`OdpGraded`] and [`OpdGrid`];
+/// `ENABLED == false` compiles the whole FMM branch out of the
+/// recursion, and `Bounds` is statically dispatched on the per-pair
+/// order search.
+pub trait Expansion: Copy + Send + Sync + 'static {
+    /// Series pruning active? `false` = finite-difference-only engine.
+    const ENABLED: bool;
+    /// Runtime tag for moments/caching; `None` iff `!ENABLED`.
+    const KIND: Option<SeriesKind>;
+    /// Truncation-bound family (zero-sized, monomorphized).
+    type Bounds: TruncationBounds + Send + Sync;
+    /// The bound family instance handed to the cost model.
+    const BOUNDS: Self::Bounds;
+}
+
+/// Finite-difference-only traversal (DFD/DFDO): no series machinery is
+/// even compiled into the hot loop.
+#[derive(Copy, Clone, Debug, Default)]
+pub struct NoExpansion;
+
+impl Expansion for NoExpansion {
+    const ENABLED: bool = false;
+    const KIND: Option<SeriesKind> = None;
+    type Bounds = NeverBounds;
+    const BOUNDS: NeverBounds = NeverBounds;
+}
+
+/// O(Dᵖ) graded expansion with the Lemma 4–6 bounds (DITO).
+#[derive(Copy, Clone, Debug, Default)]
+pub struct OdpGraded;
+
+impl Expansion for OdpGraded {
+    const ENABLED: bool = true;
+    const KIND: Option<SeriesKind> = Some(SeriesKind::OdpGraded);
+    type Bounds = OdpBounds;
+    const BOUNDS: OdpBounds = OdpBounds;
+}
+
+/// O(pᴰ) grid expansion with geometric-series bounds (DFTO).
+#[derive(Copy, Clone, Debug, Default)]
+pub struct OpdGrid;
+
+impl Expansion for OpdGrid {
+    const ENABLED: bool = true;
+    const KIND: Option<SeriesKind> = Some(SeriesKind::OpdGrid);
+    type Bounds = OpdBounds;
+    const BOUNDS: OpdBounds = OpdBounds;
 }
 
 /// Engine configuration; the four public algorithms are fixed settings
-/// of this struct.
+/// of this struct. Each `evaluate` resolves the switches **once** to a
+/// monomorphized (Expansion, PruneRule) instantiation.
 #[derive(Copy, Clone, Debug)]
 pub struct DualTreeConfig {
     /// Tree leaf size. Used at preparation time ([`run_dualtree`] /
@@ -105,24 +171,64 @@ impl Default for DualTreeConfig {
     }
 }
 
-/// Immutable per-run context.
+/// Resolve the runtime switches of a [`DualTreeConfig`] into one of the
+/// six monomorphized (Expansion, PruneRule) instantiations and run
+/// `$body` with `$X`/`$P` bound to the chosen types.
+macro_rules! dispatch_variant {
+    ($cfg:expr, $X:ident, $P:ident => $body:expr) => {{
+        match ($cfg.series, $cfg.use_tokens) {
+            (None, false) => {
+                type $X = NoExpansion;
+                type $P = Theorem2;
+                $body
+            }
+            (None, true) => {
+                type $X = NoExpansion;
+                type $P = TokenLedger;
+                $body
+            }
+            (Some(SeriesKind::OdpGraded), false) => {
+                type $X = OdpGraded;
+                type $P = Theorem2;
+                $body
+            }
+            (Some(SeriesKind::OdpGraded), true) => {
+                type $X = OdpGraded;
+                type $P = TokenLedger;
+                $body
+            }
+            (Some(SeriesKind::OpdGrid), false) => {
+                type $X = OpdGrid;
+                type $P = Theorem2;
+                $body
+            }
+            (Some(SeriesKind::OpdGrid), true) => {
+                type $X = OpdGrid;
+                type $P = TokenLedger;
+                $body
+            }
+        }
+    }};
+}
+
+/// Immutable per-run context (data only; the algorithm switches live in
+/// the generic parameters of the traversal functions).
 struct Ctx<'a> {
     qt: &'a KdTree,
     rt: &'a KdTree,
     kernel: GaussianKernel,
     eps: f64,
     total_w: f64,
-    use_tokens: bool,
+    /// Present iff the variant's `Expansion::ENABLED`.
     series: Option<SeriesPack<'a>>,
 }
 
 struct SeriesPack<'a> {
     moments: &'a RefMoments,
-    bounds: &'a dyn TruncationBounds,
     p_limit: usize,
 }
 
-/// Mutable per-run state.
+/// Mutable per-run state (one per worker thread).
 struct State {
     ledger: QueryLedger,
     /// Local Taylor coefficients per query node (node-major), when a
@@ -132,11 +238,14 @@ struct State {
     table: HermiteTable,
     mono: Vec<f64>,
     off: Vec<f64>,
+    /// SoA block arena for the base case, sized to the reference tree's
+    /// largest leaf so base cases never allocate.
+    scratch: Scratch,
     stats: RunStats,
 }
 
 impl State {
-    fn new(qt: &KdTree, set_len: usize, dim: usize, table_order: usize) -> Self {
+    fn new(qt: &KdTree, set_len: usize, dim: usize, table_order: usize, leaf_block: usize) -> Self {
         State {
             ledger: QueryLedger::new(qt.num_nodes(), qt.num_points()),
             lcoeffs: vec![0.0; qt.num_nodes() * set_len],
@@ -144,6 +253,7 @@ impl State {
             table: HermiteTable::new(dim, table_order),
             mono: vec![0.0; set_len.max(1)],
             off: vec![0.0; dim],
+            scratch: Scratch::with_block(dim, leaf_block),
             stats: RunStats::default(),
         }
     }
@@ -152,15 +262,79 @@ impl State {
 /// Memoization key for per-bandwidth reference moments.
 type MomentKey = (u64, Layout, usize);
 
+/// Default capacity of the per-engine moment memo (distinct
+/// `(h, layout, plimit)` triples kept live).
+pub const DEFAULT_MOMENT_CACHE_CAPACITY: usize = 64;
+
+/// Bounded memo for per-bandwidth moment tables: capacity-capped with
+/// oldest-entry (insertion-order) eviction, plus hit/miss counters.
+struct MomentCache {
+    map: HashMap<MomentKey, (u64, Arc<RefMoments>)>,
+    /// Monotone insertion stamp; the minimum stamp is the oldest entry.
+    next_stamp: u64,
+    capacity: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl MomentCache {
+    fn new(capacity: usize) -> Self {
+        MomentCache {
+            map: HashMap::new(),
+            next_stamp: 0,
+            capacity: capacity.max(1),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    fn get(&mut self, key: &MomentKey) -> Option<Arc<RefMoments>> {
+        match self.map.get(key) {
+            Some((_, m)) => {
+                self.hits += 1;
+                Some(Arc::clone(m))
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    fn insert(&mut self, key: MomentKey, m: Arc<RefMoments>) {
+        if let Some(slot) = self.map.get_mut(&key) {
+            // racing compute of the same key: keep the original stamp
+            slot.1 = m;
+            return;
+        }
+        self.evict_down_to(self.capacity.saturating_sub(1));
+        self.map.insert(key, (self.next_stamp, m));
+        self.next_stamp += 1;
+    }
+
+    /// Evict oldest-inserted entries until at most `keep` remain.
+    fn evict_down_to(&mut self, keep: usize) {
+        while self.map.len() > keep {
+            let oldest = self.map.iter().min_by_key(|(_, (s, _))| *s).map(|(k, _)| *k);
+            match oldest {
+                Some(k) => {
+                    self.map.remove(&k);
+                }
+                None => break,
+            }
+        }
+    }
+}
+
 /// A dataset prepared for repeated dual-tree evaluation across
 /// bandwidths and engine variants.
 ///
 /// `prepare` does all h-independent work exactly once: kd-tree
 /// construction (with the point permutation and cached node geometry /
 /// sufficient statistics). `evaluate` does only h-dependent work —
-/// Hermite moments (memoized per `(h, layout, plimit)`), the
-/// [`QueryLedger`] and the traversal itself — so a full LSCV grid
-/// touches tree construction exactly once.
+/// Hermite moments (memoized per `(h, layout, plimit)` in a bounded
+/// cache), the [`QueryLedger`] and the traversal itself — so a full
+/// LSCV grid touches tree construction exactly once.
 ///
 /// ```no_run
 /// use fastgauss::algo::dualtree::{DualTreeConfig, SweepEngine};
@@ -180,7 +354,7 @@ pub struct SweepEngine {
     build_secs: f64,
     tree_builds: u64,
     threads: usize,
-    moment_cache: Mutex<HashMap<MomentKey, Arc<RefMoments>>>,
+    moment_cache: Mutex<MomentCache>,
 }
 
 impl SweepEngine {
@@ -211,7 +385,7 @@ impl SweepEngine {
             build_secs,
             tree_builds,
             threads: 1,
-            moment_cache: Mutex::new(HashMap::new()),
+            moment_cache: Mutex::new(MomentCache::new(DEFAULT_MOMENT_CACHE_CAPACITY)),
         }
     }
 
@@ -230,6 +404,23 @@ impl SweepEngine {
     /// [`evaluate_grid`]: SweepEngine::evaluate_grid
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
+        self
+    }
+
+    /// Cap the moment memo at `capacity` entries (≥ 1). The default is
+    /// [`DEFAULT_MOMENT_CACHE_CAPACITY`]; grid sweeps want at least the
+    /// grid size, adaptive h-searches can shrink it (or call
+    /// [`clear_moment_cache`] between phases). Shrinking below the
+    /// current occupancy evicts the oldest entries immediately.
+    ///
+    /// [`clear_moment_cache`]: SweepEngine::clear_moment_cache
+    pub fn with_moment_cache_capacity(self, capacity: usize) -> Self {
+        {
+            let mut cache = self.moment_cache.lock().unwrap();
+            cache.capacity = capacity.max(1);
+            let keep = cache.capacity;
+            cache.evict_down_to(keep);
+        }
         self
     }
 
@@ -259,25 +450,41 @@ impl SweepEngine {
         self.qtree.is_none()
     }
 
-    /// Drop all memoized per-bandwidth moment tables. The cache is
-    /// unbounded by design (one entry per distinct `(h, layout,
-    /// plimit)` evaluated), which is right for grid sweeps but grows
-    /// without limit under adaptive searches that keep refining h —
-    /// call this between search phases to release the memory.
+    /// Drop all memoized per-bandwidth moment tables — the documented
+    /// escape hatch for releasing moment memory immediately (e.g.
+    /// between phases of an adaptive bandwidth search). The cache is
+    /// otherwise self-bounding: at most
+    /// [`with_moment_cache_capacity`](SweepEngine::with_moment_cache_capacity)
+    /// entries stay live, with the oldest-inserted entry evicted first.
+    /// Hit/miss counters survive the clear.
     pub fn clear_moment_cache(&self) {
-        self.moment_cache.lock().unwrap().clear();
+        self.moment_cache.lock().unwrap().map.clear();
     }
 
-    /// Memoized per-bandwidth reference moments.
+    /// Lifetime `(hits, misses)` of the moment memo. Per-run hit/miss
+    /// flags are also reported in
+    /// [`RunStats::moment_cache_hits`]/[`RunStats::moment_cache_misses`].
+    pub fn moment_cache_stats(&self) -> (u64, u64) {
+        let c = self.moment_cache.lock().unwrap();
+        (c.hits, c.misses)
+    }
+
+    /// Entries currently memoized.
+    pub fn moment_cache_len(&self) -> usize {
+        self.moment_cache.lock().unwrap().map.len()
+    }
+
+    /// Memoized per-bandwidth reference moments. Returns the table, the
+    /// seconds spent computing it (0 on a hit) and whether it was a hit.
     fn moments_for(
         &self,
         kernel: &GaussianKernel,
         kind: SeriesKind,
         plimit: usize,
-    ) -> (Arc<RefMoments>, f64) {
+    ) -> (Arc<RefMoments>, f64, bool) {
         let key = (kernel.bandwidth().to_bits(), kind.layout(), plimit);
         if let Some(m) = self.moment_cache.lock().unwrap().get(&key) {
-            return (Arc::clone(m), 0.0);
+            return (m, 0.0, true);
         }
         // compute outside the lock: concurrent h-workers must not
         // serialize on each other's moment passes (racing computes of
@@ -286,7 +493,7 @@ impl SweepEngine {
             Arc::new(RefMoments::compute(&self.rtree, kernel, kind.layout(), plimit))
         });
         self.moment_cache.lock().unwrap().insert(key, Arc::clone(&m));
-        (m, secs)
+        (m, secs, false)
     }
 
     /// Run one bandwidth under `cfg`, using the engine's thread count
@@ -304,6 +511,21 @@ impl SweepEngine {
         self.evaluate_with_threads(h, epsilon, cfg, self.threads)
     }
 
+    /// Run one bandwidth as an explicit monomorphized variant — the
+    /// type-level form of [`evaluate`]; the four paper algorithms are
+    /// `X`/`P` choices (e.g. DITO = `evaluate_variant::<OdpGraded,
+    /// TokenLedger>`).
+    ///
+    /// [`evaluate`]: SweepEngine::evaluate
+    pub fn evaluate_variant<X: Expansion, P: PruneRule>(
+        &self,
+        h: f64,
+        epsilon: f64,
+        plimit: Option<usize>,
+    ) -> Result<GaussSumResult, AlgoError> {
+        self.evaluate_variant_with_threads::<X, P>(h, epsilon, plimit, self.threads)
+    }
+
     fn evaluate_with_threads(
         &self,
         h: f64,
@@ -311,24 +533,36 @@ impl SweepEngine {
         cfg: &DualTreeConfig,
         threads: usize,
     ) -> Result<GaussSumResult, AlgoError> {
+        dispatch_variant!(cfg, X, P => {
+            self.evaluate_variant_with_threads::<X, P>(h, epsilon, cfg.plimit, threads)
+        })
+    }
+
+    fn evaluate_variant_with_threads<X: Expansion, P: PruneRule>(
+        &self,
+        h: f64,
+        epsilon: f64,
+        plimit_override: Option<usize>,
+        threads: usize,
+    ) -> Result<GaussSumResult, AlgoError> {
         assert!(h > 0.0 && h.is_finite(), "bandwidth must be positive");
         assert!(epsilon > 0.0, "epsilon must be positive");
         let kernel = GaussianKernel::new(h);
         let dim = self.dim;
-        let plimit = cfg.plimit.unwrap_or_else(|| plimit_for_dim(dim));
-        let (moments, moment_secs) = match cfg.series {
+        let plimit = plimit_override.unwrap_or_else(|| plimit_for_dim(dim));
+        let (moments, moment_secs, cache_hit) = match X::KIND {
             Some(kind) => {
-                let (m, secs) = self.moments_for(&kernel, kind, plimit);
-                (Some((m, kind)), secs)
+                let (m, secs, hit) = self.moments_for(&kernel, kind, plimit);
+                (Some(m), secs, hit)
             }
-            None => (None, 0.0),
+            None => (None, 0.0, false),
         };
         let qt: &KdTree = self.qtree.as_ref().unwrap_or(&self.rtree);
         let rt: &KdTree = &self.rtree;
-        let set_len = moments.as_ref().map_or(0, |(m, _)| m.set().len());
+        let set_len = moments.as_ref().map_or(0, |m| m.set().len());
         let table_order = if set_len > 0 { 2 * plimit.max(1) } else { 1 };
         let total_w = self.total_w;
-        let use_tokens = cfg.use_tokens;
+        let leaf_block = rt.max_leaf_count().max(1);
 
         let threads = threads.max(1);
         let mut tree_sums = vec![0.0; qt.num_points()];
@@ -341,12 +575,11 @@ impl SweepEngine {
                 kernel,
                 eps: epsilon,
                 total_w,
-                use_tokens,
                 series: series_pack(&moments, plimit),
             };
-            let mut st = State::new(qt, set_len, dim, table_order);
-            recurse(&ctx, &mut st, qt.root(), rt.root(), 0.0);
-            postprocess_from(&ctx, &mut st, qt.root(), &mut tree_sums);
+            let mut st = State::new(qt, set_len, dim, table_order, leaf_block);
+            recurse::<X, P>(&ctx, &mut st, qt.root(), rt.root(), 0.0);
+            postprocess_from::<X>(&ctx, &mut st, qt.root(), &mut tree_sums);
             stats = st.stats;
         } else {
             // Fan out over disjoint query subtrees: every per-node /
@@ -370,10 +603,9 @@ impl SweepEngine {
                             kernel,
                             eps: epsilon,
                             total_w,
-                            use_tokens,
                             series: series_pack(moments, plimit),
                         };
-                        let mut st = State::new(qt, set_len, dim, table_order);
+                        let mut st = State::new(qt, set_len, dim, table_order, leaf_block);
                         let mut out = vec![0.0; qt.num_points()];
                         let mut my_roots: Vec<usize> = Vec::new();
                         loop {
@@ -382,11 +614,11 @@ impl SweepEngine {
                                 break;
                             }
                             let q0 = roots[k];
-                            recurse(&ctx, &mut st, q0, rt.root(), 0.0);
+                            recurse::<X, P>(&ctx, &mut st, q0, rt.root(), 0.0);
                             my_roots.push(q0);
                         }
                         for &q0 in &my_roots {
-                            postprocess_from(&ctx, &mut st, q0, &mut out);
+                            postprocess_from::<X>(&ctx, &mut st, q0, &mut out);
                         }
                         let _ = tx.send((out, st.stats));
                     });
@@ -402,6 +634,8 @@ impl SweepEngine {
         }
 
         stats.build_secs = moment_secs;
+        stats.moment_cache_hits = cache_hit as u64;
+        stats.moment_cache_misses = (X::KIND.is_some() && !cache_hit) as u64;
         let sums = qt.unpermute(&tree_sums);
         Ok(GaussSumResult { sums, stats })
     }
@@ -446,15 +680,8 @@ impl SweepEngine {
 }
 
 /// Borrow a [`SeriesPack`] out of the memoized moments.
-fn series_pack(
-    moments: &Option<(Arc<RefMoments>, SeriesKind)>,
-    plimit: usize,
-) -> Option<SeriesPack<'_>> {
-    moments.as_ref().map(|(m, kind)| SeriesPack {
-        moments: m.as_ref(),
-        bounds: kind.bounds(),
-        p_limit: plimit,
-    })
+fn series_pack(moments: &Option<Arc<RefMoments>>, plimit: usize) -> Option<SeriesPack<'_>> {
+    moments.as_ref().map(|m| SeriesPack { moments: m.as_ref(), p_limit: plimit })
 }
 
 /// Pick ≥ `want` disjoint query-subtree roots that cover the whole
@@ -493,16 +720,46 @@ pub fn run_dualtree(
     problem: &GaussSumProblem<'_>,
     cfg: &DualTreeConfig,
 ) -> Result<GaussSumResult, AlgoError> {
-    let engine = SweepEngine::prepare(problem, cfg.leaf_size);
-    let mut res = engine.evaluate_with_threads(problem.h, problem.epsilon, cfg, 1)?;
+    dispatch_variant!(cfg, X, P => {
+        run_dualtree_variant::<X, P>(problem, cfg.leaf_size, cfg.plimit)
+    })
+}
+
+/// One-shot prepare + evaluate of an explicit monomorphized variant —
+/// the type-level form of [`run_dualtree`]. The four paper algorithms
+/// are thin instantiations:
+///
+/// | algorithm | instantiation |
+/// |---|---|
+/// | DFD  | `run_dualtree_variant::<NoExpansion, Theorem2>`   |
+/// | DFDO | `run_dualtree_variant::<NoExpansion, TokenLedger>`|
+/// | DFTO | `run_dualtree_variant::<OpdGrid, TokenLedger>`    |
+/// | DITO | `run_dualtree_variant::<OdpGraded, TokenLedger>`  |
+pub fn run_dualtree_variant<X: Expansion, P: PruneRule>(
+    problem: &GaussSumProblem<'_>,
+    leaf_size: usize,
+    plimit: Option<usize>,
+) -> Result<GaussSumResult, AlgoError> {
+    let engine = SweepEngine::prepare(problem, leaf_size);
+    let mut res =
+        engine.evaluate_variant_with_threads::<X, P>(problem.h, problem.epsilon, plimit, 1)?;
     // preserve the paper's "times include preprocessing" convention
     res.stats.build_secs += engine.build_secs();
     res.stats.tree_builds = engine.tree_builds();
     Ok(res)
 }
 
-/// The main recursion (paper Fig. 7).
-fn recurse(ctx: &Ctx<'_>, st: &mut State, q: usize, r: usize, inherited_min: f64) {
+/// The main recursion (paper Fig. 7), monomorphized per variant: all
+/// `X::ENABLED` / `P::USE_TOKENS` tests below are compile-time
+/// constants, so each instantiation's hot loop is branch-free on the
+/// algorithm switches.
+fn recurse<X: Expansion, P: PruneRule>(
+    ctx: &Ctx<'_>,
+    st: &mut State,
+    q: usize,
+    r: usize,
+    inherited_min: f64,
+) {
     st.stats.node_pairs += 1;
     let qn = ctx.qt.node(q);
     let rn = ctx.rt.node(r);
@@ -517,8 +774,7 @@ fn recurse(ctx: &Ctx<'_>, st: &mut State, q: usize, r: usize, inherited_min: f64
 
     // ---- finite-difference prune (optimized rule first, Fig. 7) ----
     let e_fd = 0.5 * wr * (ku - kl);
-    match token_rule(e_fd, wr, st.ledger.tokens[q], gq_min, ctx.eps, ctx.total_w, ctx.use_tokens)
-    {
+    match P::decide(e_fd, wr, st.ledger.tokens[q], gq_min, ctx.eps, ctx.total_w) {
         PruneDecision::Accept { token_delta } => {
             apply_tokens(st, q, token_delta);
             st.ledger.node_min[q] += dl;
@@ -530,10 +786,12 @@ fn recurse(ctx: &Ctx<'_>, st: &mut State, q: usize, r: usize, inherited_min: f64
         PruneDecision::Reject => {}
     }
 
-    // ---- FMM-type prune (series families only) ----
-    if let Some(series) = &ctx.series {
+    // ---- FMM-type prune (series variants only; compiled out when
+    //      X::ENABLED is false) ----
+    if X::ENABLED {
+        let series = ctx.series.as_ref().expect("series moments for expansion variant");
         if gq_min > 0.0 {
-            let budget_w = wr + if ctx.use_tokens { st.ledger.tokens[q] } else { 0.0 };
+            let budget_w = wr + if P::USE_TOKENS { st.ledger.tokens[q] } else { 0.0 };
             let max_err = ctx.eps * budget_w * gq_min / ctx.total_w;
             let geo = NodeGeometry {
                 dim: ctx.qt.dim(),
@@ -543,8 +801,7 @@ fn recurse(ctx: &Ctx<'_>, st: &mut State, q: usize, r: usize, inherited_min: f64
                 h: ctx.kernel.bandwidth(),
             };
             let cm = CostModel { set: series.moments.set(), p_limit: series.p_limit };
-            let choice =
-                cm.best_method(series.bounds, &geo, wr, max_err, qn.count(), rn.count());
+            let choice = cm.best_method(&X::BOUNDS, &geo, wr, max_err, qn.count(), rn.count());
             if choice != Choice::Direct {
                 let err = match choice {
                     Choice::DH { p, err } => {
@@ -603,15 +860,7 @@ fn recurse(ctx: &Ctx<'_>, st: &mut State, q: usize, r: usize, inherited_min: f64
                     Choice::Direct => unreachable!(),
                 };
                 // account the accepted error against the ledger
-                match token_rule(
-                    err,
-                    wr,
-                    st.ledger.tokens[q],
-                    gq_min,
-                    ctx.eps,
-                    ctx.total_w,
-                    ctx.use_tokens,
-                ) {
+                match P::decide(err, wr, st.ledger.tokens[q], gq_min, ctx.eps, ctx.total_w) {
                     PruneDecision::Accept { token_delta } => apply_tokens(st, q, token_delta),
                     // feasibility guaranteed by max_err construction
                     PruneDecision::Reject => unreachable!("bestMethod returned infeasible"),
@@ -625,20 +874,20 @@ fn recurse(ctx: &Ctx<'_>, st: &mut State, q: usize, r: usize, inherited_min: f64
 
     // ---- expand ----
     match (qn.is_leaf(), rn.is_leaf()) {
-        (true, true) => base_case(ctx, st, q, r),
+        (true, true) => base_case::<P>(ctx, st, q, r),
         (true, false) => {
             // split reference side, nearer child first (tightens G_Q^min
             // before the farther child is considered)
             let (a, b) = ctx.rt.children(r).unwrap();
             let (near, far) = order_by_dist(ctx.qt.node(q), ctx.rt, a, b);
-            recurse(ctx, st, q, near, inherited_min);
-            recurse(ctx, st, q, far, inherited_min);
+            recurse::<X, P>(ctx, st, q, near, inherited_min);
+            recurse::<X, P>(ctx, st, q, far, inherited_min);
         }
         (false, true) => {
             let (l, rr) = ctx.qt.children(q).unwrap();
             let inh = inherited_min + st.ledger.node_min[q];
-            recurse(ctx, st, l, r, inh);
-            recurse(ctx, st, rr, r, inh);
+            recurse::<X, P>(ctx, st, l, r, inh);
+            recurse::<X, P>(ctx, st, rr, r, inh);
             st.ledger.refresh_below_from_children(q, l, rr);
         }
         (false, false) => {
@@ -647,8 +896,8 @@ fn recurse(ctx: &Ctx<'_>, st: &mut State, q: usize, r: usize, inherited_min: f64
             for qc in [ql, qr] {
                 let (a, b) = ctx.rt.children(r).unwrap();
                 let (near, far) = order_by_dist(ctx.qt.node(qc), ctx.rt, a, b);
-                recurse(ctx, st, qc, near, inh);
-                recurse(ctx, st, qc, far, inh);
+                recurse::<X, P>(ctx, st, qc, near, inh);
+                recurse::<X, P>(ctx, st, qc, far, inh);
             }
             st.ledger.refresh_below_from_children(q, ql, qr);
         }
@@ -672,30 +921,25 @@ fn order_by_dist(qn: &crate::tree::Node, rt: &KdTree, a: usize, b: usize) -> (us
     }
 }
 
-/// Leaf–leaf exhaustive base case (paper's DITOBase).
-fn base_case(ctx: &Ctx<'_>, st: &mut State, q: usize, r: usize) {
+/// Leaf–leaf exhaustive base case (paper's DITOBase) on the SoA
+/// microkernel: the reference leaf is transposed into the per-thread
+/// [`Scratch`] once, then each query point runs the fused
+/// distance → exp → accumulate block path. Arithmetic order matches the
+/// old scalar loop exactly (see `compute`'s numerical contract).
+fn base_case<P: PruneRule>(ctx: &Ctx<'_>, st: &mut State, q: usize, r: usize) {
     let qn = ctx.qt.node(q);
     let rn = ctx.rt.node(r);
     let wr_total = rn.weight;
-    let d = ctx.qt.dim();
+    st.scratch.load(ctx.rt.points(), rn.begin, rn.end);
+    st.scratch.load_weights(ctx.rt.weights(), rn.begin, rn.end);
     for qi in qn.begin..qn.end {
-        let qrow = ctx.qt.points().row(qi);
-        let mut acc = 0.0;
-        for ri in rn.begin..rn.end {
-            let rrow = ctx.rt.points().row(ri);
-            let mut sq = 0.0;
-            for k in 0..d {
-                let dd = qrow[k] - rrow[k];
-                sq += dd * dd;
-            }
-            acc += ctx.rt.weights()[ri] * ctx.kernel.eval_sq(sq);
-        }
+        let acc = st.scratch.gauss_dot(&ctx.kernel, ctx.qt.points().row(qi));
         st.ledger.point_min[qi] += acc;
         st.ledger.point_est[qi] += acc;
         st.ledger.point_max[qi] += acc - wr_total;
     }
     st.stats.base_point_pairs += (qn.count() * rn.count()) as u64;
-    if ctx.use_tokens {
+    if P::USE_TOKENS {
         // exhaustive computation banks its full entitlement (Fig. 7)
         st.ledger.tokens[q] += wr_total;
         st.stats.tokens_banked += wr_total;
@@ -707,7 +951,7 @@ fn base_case(ctx: &Ctx<'_>, st: &mut State, q: usize, r: usize) {
 /// expansions down the query subtree rooted at `start` (L2L), then
 /// evaluate at leaf points, writing per-point sums (tree order) into
 /// `out`. Only slots owned by `start`'s subtree are written.
-fn postprocess_from(ctx: &Ctx<'_>, st: &mut State, start: usize, out: &mut [f64]) {
+fn postprocess_from<X: Expansion>(ctx: &Ctx<'_>, st: &mut State, start: usize, out: &mut [f64]) {
     let qt = ctx.qt;
     // BFS order: parents processed before children.
     let mut queue = std::collections::VecDeque::from([start]);
@@ -716,7 +960,8 @@ fn postprocess_from(ctx: &Ctx<'_>, st: &mut State, start: usize, out: &mut [f64]
             let est = st.ledger.node_est[q];
             st.ledger.node_est[l] += est;
             st.ledger.node_est[r] += est;
-            if let Some(series) = &ctx.series {
+            if X::ENABLED {
+                let series = ctx.series.as_ref().expect("series moments for expansion variant");
                 let set = series.moments.set();
                 let pairs = series.moments.pairs();
                 let scale = series.moments.scale();
@@ -744,7 +989,9 @@ fn postprocess_from(ctx: &Ctx<'_>, st: &mut State, start: usize, out: &mut [f64]
             let node_est = st.ledger.node_est[q];
             for qi in qt.node(q).begin..qt.node(q).end {
                 let mut v = st.ledger.point_est[qi] + node_est;
-                if let Some(series) = &ctx.series {
+                if X::ENABLED {
+                    let series =
+                        ctx.series.as_ref().expect("series moments for expansion variant");
                     let set = series.moments.set();
                     let lc = &st.lcoeffs[q * st.set_len..(q + 1) * st.set_len];
                     v += eval_local(
@@ -934,6 +1181,66 @@ mod tests {
         }
     }
 
+    // ---- monomorphized variants ----
+
+    #[test]
+    fn monomorphized_variants_match_config_dispatch_bitwise() {
+        // the runtime-switch interface must resolve to exactly the same
+        // monomorphized code as the explicit type instantiation
+        fn check(
+            problem: &GaussSumProblem<'_>,
+            cfg: DualTreeConfig,
+            via_type: GaussSumResult,
+        ) {
+            let via_cfg = run_dualtree(problem, &cfg).unwrap();
+            assert_eq!(via_cfg.sums, via_type.sums, "h={} cfg={cfg:?}", problem.h);
+            assert_eq!(
+                via_cfg.stats.base_point_pairs, via_type.stats.base_point_pairs,
+                "h={} cfg={cfg:?}",
+                problem.h
+            );
+        }
+        let data = clustered(350, 2, 89);
+        for h in [0.05, 0.4, 3.0] {
+            let p = GaussSumProblem::kde(&data, h, 0.01);
+            check(
+                &p,
+                DualTreeConfig { use_tokens: false, series: None, ..Default::default() },
+                run_dualtree_variant::<NoExpansion, Theorem2>(&p, 32, None).unwrap(),
+            );
+            check(
+                &p,
+                DualTreeConfig { use_tokens: true, series: None, ..Default::default() },
+                run_dualtree_variant::<NoExpansion, TokenLedger>(&p, 32, None).unwrap(),
+            );
+            check(
+                &p,
+                DualTreeConfig { series: Some(SeriesKind::OpdGrid), ..Default::default() },
+                run_dualtree_variant::<OpdGrid, TokenLedger>(&p, 32, None).unwrap(),
+            );
+            check(
+                &p,
+                DualTreeConfig::default(),
+                run_dualtree_variant::<OdpGraded, TokenLedger>(&p, 32, None).unwrap(),
+            );
+        }
+    }
+
+    #[test]
+    fn theorem2_with_series_is_a_valid_variant() {
+        // the two ablation-only combinations (series without tokens)
+        // must also meet the guarantee
+        let data = clustered(400, 2, 90);
+        let problem = GaussSumProblem::kde(&data, 0.3, 0.01);
+        let exact = Naive::new().run(&problem).unwrap().sums;
+        let a = run_dualtree_variant::<OdpGraded, Theorem2>(&problem, 32, None).unwrap();
+        let b = run_dualtree_variant::<OpdGrid, Theorem2>(&problem, 32, None).unwrap();
+        assert!(max_relative_error(&a.sums, &exact) <= 0.01 * (1.0 + 1e-9));
+        assert!(max_relative_error(&b.sums, &exact) <= 0.01 * (1.0 + 1e-9));
+        assert_eq!(a.stats.tokens_banked, 0.0);
+        assert_eq!(a.stats.tokens_spent, 0.0);
+    }
+
     // ---- SweepEngine ----
 
     #[test]
@@ -997,6 +1304,63 @@ mod tests {
         // cached moments → no recompute time attributed to the second run
         assert_eq!(second.stats.build_secs, 0.0);
         assert!(first.stats.build_secs > 0.0);
+        assert_eq!(first.stats.moment_cache_misses, 1);
+        assert_eq!(second.stats.moment_cache_hits, 1);
+        assert_eq!(engine.moment_cache_stats(), (1, 1));
+    }
+
+    #[test]
+    fn engine_moment_cache_is_bounded_with_fifo_eviction() {
+        let data = clustered(200, 2, 91);
+        let engine = SweepEngine::for_kde(&data, 32).with_moment_cache_capacity(2);
+        let cfg = DualTreeConfig::default();
+        let baseline = engine.evaluate(0.1, 0.01, &cfg).unwrap();
+        engine.evaluate(0.2, 0.01, &cfg).unwrap();
+        assert_eq!(engine.moment_cache_len(), 2);
+        // third distinct h evicts the oldest entry (h = 0.1)
+        engine.evaluate(0.4, 0.01, &cfg).unwrap();
+        assert_eq!(engine.moment_cache_len(), 2);
+        let again = engine.evaluate(0.1, 0.01, &cfg).unwrap();
+        assert_eq!(again.stats.moment_cache_misses, 1, "evicted entry must recompute");
+        assert_eq!(again.sums, baseline.sums, "eviction must not change results");
+        // h = 0.4 survived the h = 0.1 re-insert (it evicted h = 0.2,
+        // the oldest remaining)
+        let warm = engine.evaluate(0.4, 0.01, &cfg).unwrap();
+        assert_eq!(warm.stats.moment_cache_hits, 1);
+        let (hits, misses) = engine.moment_cache_stats();
+        assert_eq!((hits, misses), (1, 4));
+        // the documented escape hatch drops everything
+        engine.clear_moment_cache();
+        assert_eq!(engine.moment_cache_len(), 0);
+        let cold = engine.evaluate(0.4, 0.01, &cfg).unwrap();
+        assert_eq!(cold.stats.moment_cache_misses, 1);
+    }
+
+    #[test]
+    fn shrinking_moment_cache_capacity_evicts_immediately() {
+        let data = clustered(150, 2, 93);
+        let engine = SweepEngine::for_kde(&data, 32);
+        let cfg = DualTreeConfig::default();
+        for h in [0.1, 0.2, 0.4, 0.8] {
+            engine.evaluate(h, 0.01, &cfg).unwrap();
+        }
+        assert_eq!(engine.moment_cache_len(), 4);
+        let engine = engine.with_moment_cache_capacity(2);
+        assert_eq!(engine.moment_cache_len(), 2, "shrink must release entries immediately");
+        // the two newest entries (h = 0.4, 0.8) survive
+        assert_eq!(engine.evaluate(0.8, 0.01, &cfg).unwrap().stats.moment_cache_hits, 1);
+        assert_eq!(engine.evaluate(0.1, 0.01, &cfg).unwrap().stats.moment_cache_misses, 1);
+    }
+
+    #[test]
+    fn fd_only_variants_skip_the_moment_cache() {
+        let data = clustered(150, 2, 92);
+        let engine = SweepEngine::for_kde(&data, 32);
+        let cfg = DualTreeConfig { series: None, ..Default::default() };
+        let res = engine.evaluate(0.3, 0.01, &cfg).unwrap();
+        assert_eq!(res.stats.moment_cache_hits + res.stats.moment_cache_misses, 0);
+        assert_eq!(engine.moment_cache_stats(), (0, 0));
+        assert_eq!(engine.moment_cache_len(), 0);
     }
 
     #[test]

@@ -12,7 +12,10 @@
 //! reproduced faithfully as an [`AlgoError::RamExhausted`] (the paper's
 //! `X` cells) past a memory cap, matching the 2 GB testbed.
 
+use std::collections::HashMap;
+
 use crate::bounds::{opd::OpdBounds, NodeGeometry};
+use crate::compute::microkernel;
 use crate::hermite::{accumulate_farfield, eval_farfield, HermiteTable};
 use crate::kernel::GaussianKernel;
 use crate::multiindex::{Layout, MultiIndexSet};
@@ -203,6 +206,11 @@ impl GaussSum for Fgt {
         let mut sums = vec![0.0; queries.rows()];
         let mut stats = RunStats { dh_prunes: nonempty, ..Default::default() };
         let direct_cheaper = set.len(); // box with fewer sources: direct
+        // Sparse boxes evaluate exhaustively on the SoA microkernel;
+        // each box's gathered lanes + weights are transposed once and
+        // amortized across every query that visits the box.
+        let mut box_lanes: HashMap<usize, (Vec<f64>, Vec<f64>)> = HashMap::new();
+        let mut sqbuf = vec![0.0; direct_cheaper.max(1)];
         let mut qbox = vec![0usize; d];
         for (qi, sum) in sums.iter_mut().enumerate() {
             let qrow = queries.row(qi);
@@ -232,16 +240,17 @@ impl GaussSum for Fgt {
                 if inb && !members[flat].is_empty() {
                     let rows = &members[flat];
                     if rows.len() < direct_cheaper {
-                        for &ri in rows {
-                            let mut sq = 0.0;
-                            let rrow = refs.row(ri);
-                            for k in 0..d {
-                                let dd = qrow[k] - rrow[k];
-                                sq += dd * dd;
-                            }
-                            *sum += weights[ri] * kernel.eval_sq(sq);
-                        }
-                        stats.base_point_pairs += rows.len() as u64;
+                        let m = rows.len();
+                        let (soa, wblk) = box_lanes.entry(flat).or_insert_with(|| {
+                            let mut soa = vec![0.0; d * m];
+                            microkernel::transpose_rows_indexed(refs, rows, m, &mut soa);
+                            let wblk: Vec<f64> = rows.iter().map(|&i| weights[i]).collect();
+                            (soa, wblk)
+                        });
+                        microkernel::sqdist_soa(qrow, soa, m, m, &mut sqbuf);
+                        microkernel::gauss_in_place(&kernel, &mut sqbuf[..m]);
+                        *sum += microkernel::weighted_sum(wblk, &sqbuf[..m]);
+                        stats.base_point_pairs += m as u64;
                     } else {
                         *sum += eval_farfield(
                             &set,

@@ -11,7 +11,8 @@
 //! paper's protocol (recommended parameters, double K until verified
 //! tolerance or give up → the tables' `∞` entries).
 
-use crate::geometry::{dist, sqdist, Matrix};
+use crate::compute;
+use crate::geometry::{dist, Matrix};
 use crate::kernel::GaussianKernel;
 use crate::multiindex::{Layout, MultiIndexSet};
 
@@ -46,19 +47,23 @@ impl Ifgt {
 }
 
 /// Farthest-point (Gonzalez) k-center clustering: returns (assignment,
-/// center indices).
+/// center indices). The O(k·N) distance sweep runs on the shared SoA
+/// microkernel: the point set is transposed into lanes once, then each
+/// center streams one branch-free squared-distance pass over them.
 pub fn k_center(points: &Matrix, k: usize, seed: u64) -> (Vec<usize>, Vec<usize>) {
     let n = points.rows();
     let k = k.min(n).max(1);
     let mut centers = Vec::with_capacity(k);
     let mut assign = vec![0usize; n];
     let mut best_d = vec![f64::INFINITY; n];
+    let mut scratch = compute::Scratch::with_block(points.cols(), n);
+    scratch.load(points, 0, n);
     let first = (seed as usize) % n;
     centers.push(first);
     for c in 0.. {
         let ci = centers[c];
-        for i in 0..n {
-            let d = sqdist(points.row(i), points.row(ci));
+        let sq = scratch.sqdist_into(points.row(ci));
+        for (i, &d) in sq.iter().enumerate() {
             if d < best_d[i] {
                 best_d[i] = d;
                 assign[i] = c;
@@ -121,12 +126,7 @@ impl GaussSum for Ifgt {
         let mut v = vec![0.0; d];
         for i in 0..refs.rows() {
             let c = assign[i];
-            let row = refs.row(i);
-            let mut v2 = 0.0;
-            for j in 0..d {
-                v[j] = (row[j] - centers[c][j]) / scale;
-                v2 += v[j] * v[j];
-            }
+            let v2 = compute::scaled_offset(refs.row(i), &centers[c], scale, &mut v);
             let base = weights[i] * (-v2).exp();
             set.eval_monomials(&v, &mut mono);
             let cc = &mut coeffs[c * set.len()..(c + 1) * set.len()];
@@ -149,11 +149,7 @@ impl GaussSum for Ifgt {
                     continue; // dropped — the (unaccounted) source of IFGT's error
                 }
                 stats.dh_prunes += 1;
-                let mut u2 = 0.0;
-                for j in 0..d {
-                    u[j] = (qrow[j] - centers[c][j]) / scale;
-                    u2 += u[j] * u[j];
-                }
+                let u2 = compute::scaled_offset(qrow, &centers[c], scale, &mut u);
                 set.eval_monomials(&u, &mut mono);
                 let cc = &coeffs[c * set.len()..(c + 1) * set.len()];
                 let mut acc = 0.0;
@@ -220,6 +216,7 @@ mod tests {
     use super::*;
     use crate::algo::naive::Naive;
     use crate::algo::max_relative_error;
+    use crate::geometry::sqdist;
     use crate::util::Pcg32;
 
     fn uniform(n: usize, d: usize, seed: u64) -> Matrix {

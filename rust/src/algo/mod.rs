@@ -11,9 +11,13 @@
 //! | DITO  | [`dito`]  | **the paper's contribution**: dual-tree O(Dᵖ) expansion + token control |
 //!
 //! All implement [`GaussSum`] over a shared [`GaussSumProblem`]. The four
-//! dual-tree variants share one engine ([`dualtree`]) parameterized by
-//! expansion layout / bound family / token usage, mirroring how the
-//! paper presents them as one algorithm with switches.
+//! dual-tree variants are monomorphized instantiations of one generic
+//! engine ([`dualtree`]), generic over the expansion family
+//! ([`dualtree::Expansion`]) and the prune rule
+//! ([`crate::errorcontrol::PruneRule`]) — the paper's "one algorithm
+//! with switches", with the switches resolved at compile time. Every
+//! exhaustive inner loop (here and in FGT/IFGT/the runtime fallback)
+//! runs on the shared [`crate::compute`] SoA microkernel.
 
 pub mod bestmethod;
 pub mod dualtree;
@@ -150,6 +154,11 @@ pub struct RunStats {
     /// [`dualtree::run_dualtree`], 0 for an evaluate on a prepared
     /// [`SweepEngine`] (the engine amortizes its builds over the sweep).
     pub tree_builds: u64,
+    /// Moment-memo hits for this evaluate (0 or 1; [`SweepEngine`]
+    /// variants with a series family only).
+    pub moment_cache_hits: u64,
+    /// Moment-memo misses for this evaluate (0 or 1).
+    pub moment_cache_misses: u64,
     /// Total wall-clock seconds (filled by the harness/run wrapper).
     pub total_secs: f64,
 }
@@ -173,6 +182,8 @@ impl RunStats {
         self.tokens_spent += other.tokens_spent;
         self.build_secs += other.build_secs;
         self.tree_builds += other.tree_builds;
+        self.moment_cache_hits += other.moment_cache_hits;
+        self.moment_cache_misses += other.moment_cache_misses;
         self.total_secs += other.total_secs;
     }
 }

@@ -1,8 +1,10 @@
 //! Exhaustive O(N·M) Gaussian summation — the ground truth every other
 //! algorithm is verified against, and the "Naive" row of the paper's
-//! tables. The inner loop is blocked over references for cache locality;
-//! a PJRT-offloaded variant lives in [`crate::runtime::tiled_naive`].
+//! tables. Runs on the shared [`crate::compute`] SoA microkernel,
+//! blocked over references for cache locality; a PJRT-offloaded variant
+//! lives in [`crate::runtime::tiled_naive`].
 
+use crate::compute::{self, Scratch};
 use crate::kernel::GaussianKernel;
 
 use super::{AlgoError, GaussSum, GaussSumProblem, GaussSumResult, RunStats};
@@ -30,28 +32,13 @@ impl GaussSum for Naive {
         let q = problem.queries;
         let r = problem.references;
         let w = problem.weight_vec();
-        let d = q.cols();
         let mut sums = vec![0.0; q.rows()];
-        let block = if self.block == 0 { r.rows() } else { self.block };
         let mut stats = RunStats::default();
 
-        for rb in (0..r.rows()).step_by(block) {
-            let rend = (rb + block).min(r.rows());
-            for (qi, sum) in sums.iter_mut().enumerate() {
-                let qrow = q.row(qi);
-                let mut acc = 0.0;
-                for ri in rb..rend {
-                    let rrow = r.row(ri);
-                    let mut sq = 0.0;
-                    for k in 0..d {
-                        let dd = qrow[k] - rrow[k];
-                        sq += dd * dd;
-                    }
-                    acc += w[ri] * kernel.eval_sq(sq);
-                }
-                *sum += acc;
-            }
-        }
+        let block = if self.block == 0 { r.rows() } else { self.block };
+        let mut scratch = Scratch::with_block(q.cols(), block.min(r.rows()).max(1));
+        compute::gauss_sum_all(q, r, &w, &kernel, self.block, &mut scratch, &mut sums);
+
         stats.base_point_pairs = (q.rows() * r.rows()) as u64;
         Ok(GaussSumResult { sums, stats })
     }
@@ -100,6 +87,18 @@ mod tests {
         for i in 0..a.len() {
             assert!((a[i] - b[i]).abs() < 1e-12 * b[i].max(1.0));
         }
+    }
+
+    #[test]
+    fn microkernel_path_matches_scalar_reference() {
+        let m = random(80, 4, 6);
+        let p = GaussSumProblem::kde(&m, 0.25, 0.01);
+        let got = Naive { block: 0 }.run(&p).unwrap().sums;
+        let kernel = GaussianKernel::new(0.25);
+        let w = vec![1.0; 80];
+        let mut want = vec![0.0; 80];
+        crate::compute::reference::scalar_gauss_sums(&m, &m, &w, &kernel, &mut want);
+        assert_eq!(got, want, "unblocked naive must equal the scalar loop bit-for-bit");
     }
 
     #[test]

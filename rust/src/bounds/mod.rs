@@ -90,9 +90,31 @@ pub trait TruncationBounds {
     }
 }
 
+/// Placeholder bound family for traversal variants with series pruning
+/// disabled (`Expansion::ENABLED == false`): every bound is `+∞`, so no
+/// truncation order is ever feasible. The monomorphized
+/// finite-difference-only engines compile their series branch out
+/// entirely, so this is never reached at run time — it exists only to
+/// satisfy the `Expansion::Bounds` associated type.
+#[derive(Copy, Clone, Debug, Default)]
+pub struct NeverBounds;
+
+impl TruncationBounds for NeverBounds {
+    fn unit_error_nodecay(&self, _method: SeriesMethod, _geo: &NodeGeometry, _p: usize) -> f64 {
+        f64::INFINITY
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn never_bounds_is_always_infeasible() {
+        let g = NodeGeometry { dim: 2, min_sqdist: 100.0, r_ref: 0.01, r_query: 0.01, h: 1.0 };
+        assert_eq!(NeverBounds.unit_error_nodecay(SeriesMethod::DH, &g, 8), f64::INFINITY);
+        assert!(NeverBounds.smallest_order(SeriesMethod::H2L, &g, 1.0, 1e300, 8).is_none());
+    }
 
     #[test]
     fn decay_factor() {

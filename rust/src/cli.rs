@@ -174,8 +174,10 @@ fn cmd_runtime(cfg: &RunConfig) -> Result<()> {
     let (rust, rust_secs) = crate::util::timer::time_it(|| Naive::new().run(&p).unwrap());
     let rel = max_relative_error(&pjrt.sums, &rust.sums);
     println!(
-        "PJRT artifact D={}: rel_err vs rust naive = {rel:.2e}  (pjrt {:.3}s, rust {:.3}s)",
+        "{} D={}: rel_err vs rust naive = {rel:.2e}  ({} {:.3}s, rust {:.3}s)",
+        tiled.name(),
         ds.dim(),
+        if tiled.is_cpu_fallback() { "cpu-fallback" } else { "pjrt" },
         pjrt_secs,
         rust_secs
     );

@@ -1,0 +1,118 @@
+//! The block primitives under [`Scratch`](super::Scratch): plain free
+//! functions over slices, kept separate so tests and benches can drive
+//! them directly against the scalar reference.
+//!
+//! All loops are branch-free over `n` lanes with the slice lengths
+//! hoisted (`&lane[..n]` re-slices) so the bounds checks vanish and the
+//! auto-vectorizer sees straight-line streaming code. Ordering is part
+//! of the contract (see the module docs of [`super`]): dims ascending,
+//! lanes ascending.
+
+use crate::geometry::Matrix;
+use crate::kernel::GaussianKernel;
+
+/// Transpose rows `[begin, end)` of a row-major matrix into dim-major
+/// SoA lanes: `soa[k·stride + j] = pts[(begin+j), k]`.
+pub fn transpose_rows(pts: &Matrix, begin: usize, end: usize, stride: usize, soa: &mut [f64]) {
+    let d = pts.cols();
+    let n = end - begin;
+    debug_assert!(n <= stride && d * stride <= soa.len());
+    for j in 0..n {
+        let row = pts.row(begin + j);
+        for k in 0..d {
+            soa[k * stride + j] = row[k];
+        }
+    }
+}
+
+/// Gather `idx` rows of a row-major matrix into dim-major SoA lanes,
+/// preserving `idx` order.
+pub fn transpose_rows_indexed(pts: &Matrix, idx: &[usize], stride: usize, soa: &mut [f64]) {
+    let d = pts.cols();
+    debug_assert!(idx.len() <= stride && d * stride <= soa.len());
+    for (j, &i) in idx.iter().enumerate() {
+        let row = pts.row(i);
+        for k in 0..d {
+            soa[k * stride + j] = row[k];
+        }
+    }
+}
+
+/// `sq[j] = ‖q − lane_j‖²` over `n` SoA lanes, dims accumulated in
+/// ascending order (bit-compatible with the scalar per-pair loop).
+pub fn sqdist_soa(q: &[f64], soa: &[f64], stride: usize, n: usize, sq: &mut [f64]) {
+    let sq = &mut sq[..n];
+    sq.fill(0.0);
+    for (k, &qk) in q.iter().enumerate() {
+        let lane = &soa[k * stride..k * stride + n];
+        for j in 0..n {
+            let dd = qk - lane[j];
+            sq[j] += dd * dd;
+        }
+    }
+}
+
+/// In place Gaussian over a block of squared distances:
+/// `sq[j] ← K(sq[j])`. No per-pair branching — one fused exp pass.
+pub fn gauss_in_place(kernel: &GaussianKernel, sq: &mut [f64]) {
+    for v in sq.iter_mut() {
+        *v = kernel.eval_sq(*v);
+    }
+}
+
+/// Weighted reduction `Σ_j w[j]·v[j]` in ascending lane order.
+pub fn weighted_sum(w: &[f64], v: &[f64]) -> f64 {
+    debug_assert_eq!(w.len(), v.len());
+    let mut acc = 0.0;
+    for j in 0..w.len() {
+        acc += w[j] * v[j];
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::sqdist;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn transpose_and_sqdist_agree_with_rowwise() {
+        let mut rng = Pcg32::new(11);
+        let pts = Matrix::from_rows(
+            &(0..20).map(|_| (0..3).map(|_| rng.uniform()).collect()).collect::<Vec<_>>(),
+        );
+        let stride = 32;
+        let mut soa = vec![0.0; 3 * stride];
+        transpose_rows(&pts, 4, 17, stride, &mut soa);
+        let q = [0.3, 0.7, 0.1];
+        let mut sq = vec![0.0; stride];
+        sqdist_soa(&q, &soa, stride, 13, &mut sq);
+        for j in 0..13 {
+            assert_eq!(sq[j], sqdist(&q, pts.row(4 + j)), "lane {j}");
+        }
+    }
+
+    #[test]
+    fn indexed_transpose_preserves_order() {
+        let pts = Matrix::from_rows(&[vec![1.0], vec![2.0], vec![3.0], vec![4.0]]);
+        let mut soa = vec![0.0; 8];
+        transpose_rows_indexed(&pts, &[3, 0, 2], 8, &mut soa);
+        assert_eq!(&soa[..3], &[4.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn gauss_block_equals_pointwise_eval() {
+        let kernel = GaussianKernel::new(0.7);
+        let mut sq = vec![0.0, 0.5, 2.0, 9.0];
+        let want: Vec<f64> = sq.iter().map(|&s| kernel.eval_sq(s)).collect();
+        gauss_in_place(&kernel, &mut sq);
+        assert_eq!(sq, want);
+    }
+
+    #[test]
+    fn weighted_sum_ascending_order() {
+        assert_eq!(weighted_sum(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 4.0 + 10.0 + 18.0);
+        assert_eq!(weighted_sum(&[], &[]), 0.0);
+    }
+}

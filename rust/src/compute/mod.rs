@@ -1,0 +1,225 @@
+//! The shared compute layer: one SoA (structure-of-arrays) batch
+//! microkernel that every exhaustive Gaussian-summation loop in the
+//! crate routes through.
+//!
+//! Before this module existed, `algo::naive`, the dual-tree leaf-leaf
+//! base case, the FGT per-box direct path, the IFGT clustering loops and
+//! the tiled runtime fallback each hand-rolled the same scalar
+//! distance → exp → accumulate triple loop. Now there is exactly one
+//! implementation to optimize for every current and future backend,
+//! structured the way hardware likes it (following the blocked/batched
+//! summation style of fast-sum-updating KDE, arXiv:1712.00993, and the
+//! slicing fastsum line, arXiv:2401.08260):
+//!
+//! 1. **Load** ([`Scratch::load`]) — transpose a contiguous (or
+//!    gathered) block of row-major points into dimension-major SoA
+//!    lanes, so every subsequent pass streams unit-stride.
+//! 2. **Distance** ([`microkernel::sqdist_soa`]) — blocked pairwise
+//!    squared distances, dims in the outer loop, lanes in the inner:
+//!    a branch-free, bounds-check-free loop the auto-vectorizer handles.
+//! 3. **Kernel** ([`microkernel::gauss_in_place`]) — fused Gaussian
+//!    `exp` over the block, no per-pair branching.
+//! 4. **Accumulate** ([`microkernel::weighted_sum`]) — weighted
+//!    reduction in ascending lane order.
+//!
+//! # Numerical contract
+//!
+//! Per (query, reference) pair the arithmetic is *identical in value
+//! and order* to the scalar triple loop it replaced (dims accumulate
+//! ascending, references accumulate ascending within a block, blocks
+//! ascending), so results are bit-for-bit equal to the old code
+//! whenever a range fits in one block, and within a few ulps otherwise.
+//! [`reference::scalar_gauss_sums`] keeps the pre-microkernel loop
+//! alive as the ground truth for tests and the `§basecase` ablation.
+//!
+//! # Allocation contract
+//!
+//! All block state lives in a caller-owned [`Scratch`] arena. Sizing it
+//! once (e.g. to the tree's maximum leaf count) makes every later call
+//! allocation-free — the dual-tree traversal holds one `Scratch` per
+//! worker thread and performs **zero** allocations after prepare.
+
+pub mod microkernel;
+pub mod reference;
+mod scratch;
+
+pub use scratch::Scratch;
+
+use crate::geometry::Matrix;
+use crate::kernel::GaussianKernel;
+
+/// Default block width (lanes) — 256 points × 8 bytes = one 2 KiB lane
+/// per dimension, comfortably L1-resident alongside the weight and
+/// distance lanes up to D = 16.
+pub const BLOCK: usize = 256;
+
+/// Exhaustive weighted Gaussian summation, blocked over references:
+/// `out[qi] += Σ_r weights[r]·K(‖queries_qi − refs_r‖)` for every query
+/// row. `block = 0` means "one block spanning all references" (the
+/// unblocked scalar order). Accumulates into `out`.
+pub fn gauss_sum_all(
+    queries: &Matrix,
+    refs: &Matrix,
+    weights: &[f64],
+    kernel: &GaussianKernel,
+    block: usize,
+    scratch: &mut Scratch,
+    out: &mut [f64],
+) {
+    assert_eq!(queries.cols(), refs.cols(), "dimension mismatch");
+    assert_eq!(weights.len(), refs.rows(), "weights length");
+    assert_eq!(out.len(), queries.rows(), "output length");
+    if refs.rows() == 0 {
+        return; // nothing to accumulate (and step_by(0) would panic)
+    }
+    let block = if block == 0 { refs.rows() } else { block };
+    for rb in (0..refs.rows()).step_by(block) {
+        let rend = (rb + block).min(refs.rows());
+        scratch.load(refs, rb, rend);
+        scratch.load_weights(weights, rb, rend);
+        for (qi, sum) in out.iter_mut().enumerate() {
+            *sum += scratch.gauss_dot(kernel, queries.row(qi));
+        }
+    }
+}
+
+/// One query against a gathered reference subset:
+/// `Σ_j weights[idx[j]]·K(‖q − refs_idx[j]‖)`. The one-shot gather
+/// form — callers that revisit the same subset (e.g. FGT's sparse
+/// boxes) should instead transpose once via
+/// [`microkernel::transpose_rows_indexed`] and reuse the lanes.
+pub fn gauss_sum_indexed(
+    q: &[f64],
+    refs: &Matrix,
+    idx: &[usize],
+    weights: &[f64],
+    kernel: &GaussianKernel,
+    scratch: &mut Scratch,
+) -> f64 {
+    scratch.load_indexed(refs, idx);
+    scratch.load_weights_indexed(weights, idx);
+    scratch.gauss_dot(kernel, q)
+}
+
+/// `v[k] = (x[k] − center[k]) / scale`, returning `‖v‖²` with dims
+/// accumulated in ascending order — the scaled-offset form shared by
+/// the IFGT source-accumulation and evaluation loops.
+#[inline]
+pub fn scaled_offset(x: &[f64], center: &[f64], scale: f64, v: &mut [f64]) -> f64 {
+    debug_assert_eq!(x.len(), center.len());
+    debug_assert_eq!(x.len(), v.len());
+    let mut sq = 0.0;
+    for k in 0..x.len() {
+        let t = (x[k] - center[k]) / scale;
+        v[k] = t;
+        sq += t * t;
+    }
+    sq
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::sqdist;
+    use crate::util::Pcg32;
+
+    fn random(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg32::new(seed);
+        Matrix::from_rows(
+            &(0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect::<Vec<_>>(),
+        )
+    }
+
+    #[test]
+    fn blocked_matches_scalar_reference_bitwise_when_unblocked() {
+        let q = random(40, 3, 1);
+        let r = random(90, 3, 2);
+        let w: Vec<f64> = (0..90).map(|i| 0.5 + i as f64 * 0.01).collect();
+        let kernel = GaussianKernel::new(0.3);
+        let mut a = vec![0.0; 40];
+        let mut b = vec![0.0; 40];
+        reference::scalar_gauss_sums(&q, &r, &w, &kernel, &mut a);
+        let mut scratch = Scratch::with_block(3, 90);
+        gauss_sum_all(&q, &r, &w, &kernel, 0, &mut scratch, &mut b);
+        assert_eq!(a, b, "block=0 must reproduce the scalar order bit-for-bit");
+    }
+
+    #[test]
+    fn odd_block_sizes_match_within_ulps() {
+        let q = random(30, 2, 3);
+        let r = random(70, 2, 4);
+        let w = vec![1.0; 70];
+        let kernel = GaussianKernel::new(0.2);
+        let mut want = vec![0.0; 30];
+        reference::scalar_gauss_sums(&q, &r, &w, &kernel, &mut want);
+        for block in [1, 7, 64, 256] {
+            let mut scratch = Scratch::with_block(2, block);
+            let mut got = vec![0.0; 30];
+            gauss_sum_all(&q, &r, &w, &kernel, block, &mut scratch, &mut got);
+            for i in 0..30 {
+                assert!(
+                    (got[i] - want[i]).abs() <= 1e-12 * want[i].max(1.0),
+                    "block={block} i={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_reference_set_is_a_noop() {
+        let q = random(3, 2, 20);
+        let r = Matrix::zeros(0, 2);
+        let kernel = GaussianKernel::new(0.5);
+        let mut scratch = Scratch::new(2);
+        let mut out = vec![1.0, 2.0, 3.0];
+        // block = 0 must not panic via step_by(0); out is untouched
+        gauss_sum_all(&q, &r, &[], &kernel, 0, &mut scratch, &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn indexed_gather_matches_subset() {
+        let r = random(50, 4, 5);
+        let w: Vec<f64> = (0..50).map(|i| 1.0 + i as f64 * 0.02).collect();
+        let idx = [3usize, 17, 4, 49, 0, 31];
+        let q = vec![0.2, 0.4, 0.6, 0.8];
+        let kernel = GaussianKernel::new(0.5);
+        let mut scratch = Scratch::new(4);
+        let got = gauss_sum_indexed(&q, &r, &idx, &w, &kernel, &mut scratch);
+        let mut want = 0.0;
+        for &i in &idx {
+            want += w[i] * kernel.eval_sq(sqdist(&q, r.row(i)));
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn scaled_offset_matches_manual() {
+        let x = [1.0, 2.0, 3.0];
+        let c = [0.5, 1.0, -1.0];
+        let mut v = [0.0; 3];
+        let sq = scaled_offset(&x, &c, 2.0, &mut v);
+        assert_eq!(v, [0.25, 0.5, 2.0]);
+        assert!((sq - (0.0625 + 0.25 + 4.0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn scratch_reuse_is_stateless() {
+        let kernel = GaussianKernel::new(0.4);
+        let mut scratch = Scratch::new(2);
+        // first use on one dataset, then a smaller one: stale lanes from
+        // the first must not leak into the second
+        let big = random(120, 2, 6);
+        let wb = vec![1.0; 120];
+        let mut out = vec![0.0; 1];
+        let q = Matrix::from_rows(&[vec![0.5, 0.5]]);
+        gauss_sum_all(&q, &big, &wb, &kernel, 256, &mut scratch, &mut out);
+        let small = random(9, 2, 7);
+        let ws = vec![1.0; 9];
+        let mut got = vec![0.0; 1];
+        gauss_sum_all(&q, &small, &ws, &kernel, 256, &mut scratch, &mut got);
+        let mut want = vec![0.0; 1];
+        reference::scalar_gauss_sums(&q, &small, &ws, &kernel, &mut want);
+        assert_eq!(got, want);
+    }
+}

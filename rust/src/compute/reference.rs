@@ -1,0 +1,37 @@
+//! The pre-microkernel scalar triple loop, preserved verbatim as the
+//! ground truth the SoA microkernel is tested (and benchmarked, see
+//! `ablations` §basecase) against. Not used on any hot path.
+
+use crate::geometry::Matrix;
+use crate::kernel::GaussianKernel;
+
+/// Unblocked exhaustive summation, one running accumulator per query:
+/// `out[qi] += Σ_r weights[r]·K(‖queries_qi − refs_r‖)`. This is the
+/// exact loop `algo::naive` and the dual-tree base case ran before the
+/// compute layer existed.
+pub fn scalar_gauss_sums(
+    queries: &Matrix,
+    refs: &Matrix,
+    weights: &[f64],
+    kernel: &GaussianKernel,
+    out: &mut [f64],
+) {
+    assert_eq!(queries.cols(), refs.cols(), "dimension mismatch");
+    assert_eq!(weights.len(), refs.rows(), "weights length");
+    assert_eq!(out.len(), queries.rows(), "output length");
+    let d = queries.cols();
+    for (qi, sum) in out.iter_mut().enumerate() {
+        let qrow = queries.row(qi);
+        let mut acc = 0.0;
+        for ri in 0..refs.rows() {
+            let rrow = refs.row(ri);
+            let mut sq = 0.0;
+            for k in 0..d {
+                let dd = qrow[k] - rrow[k];
+                sq += dd * dd;
+            }
+            acc += weights[ri] * kernel.eval_sq(sq);
+        }
+        *sum += acc;
+    }
+}

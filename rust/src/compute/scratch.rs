@@ -1,0 +1,165 @@
+//! The per-thread scratch arena behind the SoA microkernel.
+
+use crate::geometry::Matrix;
+use crate::kernel::GaussianKernel;
+
+use super::microkernel;
+use super::BLOCK;
+
+/// Reusable block workspace: SoA coordinate lanes, a weight lane and a
+/// squared-distance/kernel-value lane.
+///
+/// Capacity grows on demand, so sizing is an *optimization*, not a
+/// correctness requirement: construct it once with the largest block the
+/// workload will see (e.g. the tree's maximum leaf count) and every
+/// later call is allocation-free. The dual-tree traversal keeps one
+/// `Scratch` per worker thread inside its per-run state.
+#[derive(Clone, Debug)]
+pub struct Scratch {
+    dim: usize,
+    /// Lane capacity (the SoA stride).
+    cap: usize,
+    /// Lanes currently loaded.
+    len: usize,
+    /// Dim-major coordinates: `soa[k·cap + j]` = coordinate k of lane j.
+    soa: Vec<f64>,
+    /// Per-lane weights.
+    w: Vec<f64>,
+    /// Per-lane squared distances, overwritten with kernel values.
+    sq: Vec<f64>,
+}
+
+impl Scratch {
+    /// Workspace for dimension `dim` with the default [`BLOCK`] width.
+    pub fn new(dim: usize) -> Self {
+        Self::with_block(dim, BLOCK)
+    }
+
+    /// Workspace with an explicit initial block capacity.
+    pub fn with_block(dim: usize, block: usize) -> Self {
+        let cap = block.max(1);
+        Scratch {
+            dim,
+            cap,
+            len: 0,
+            soa: vec![0.0; dim.max(1) * cap],
+            w: vec![0.0; cap],
+            sq: vec![0.0; cap],
+        }
+    }
+
+    /// Current lane capacity.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Lanes loaded by the last `load*` call.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no lanes are loaded.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn reserve(&mut self, n: usize) {
+        if n > self.cap {
+            self.cap = n;
+            self.soa = vec![0.0; self.dim.max(1) * n];
+            self.w = vec![0.0; n];
+            self.sq = vec![0.0; n];
+        }
+    }
+
+    /// Load rows `[begin, end)` of `pts` into the SoA lanes. Returns the
+    /// lane count.
+    pub fn load(&mut self, pts: &Matrix, begin: usize, end: usize) -> usize {
+        debug_assert_eq!(pts.cols(), self.dim, "scratch dimension mismatch");
+        let n = end - begin;
+        self.reserve(n);
+        microkernel::transpose_rows(pts, begin, end, self.cap, &mut self.soa);
+        self.len = n;
+        n
+    }
+
+    /// Gather `idx` rows of `pts` into the SoA lanes (in `idx` order).
+    pub fn load_indexed(&mut self, pts: &Matrix, idx: &[usize]) -> usize {
+        debug_assert_eq!(pts.cols(), self.dim, "scratch dimension mismatch");
+        self.reserve(idx.len());
+        microkernel::transpose_rows_indexed(pts, idx, self.cap, &mut self.soa);
+        self.len = idx.len();
+        self.len
+    }
+
+    /// Load the weight lane for the same range as the last [`load`].
+    ///
+    /// [`load`]: Scratch::load
+    pub fn load_weights(&mut self, weights: &[f64], begin: usize, end: usize) {
+        debug_assert_eq!(end - begin, self.len, "weight range must match loaded lanes");
+        self.w[..self.len].copy_from_slice(&weights[begin..end]);
+    }
+
+    /// Gather the weight lane for the same `idx` as [`load_indexed`].
+    ///
+    /// [`load_indexed`]: Scratch::load_indexed
+    pub fn load_weights_indexed(&mut self, weights: &[f64], idx: &[usize]) {
+        debug_assert_eq!(idx.len(), self.len, "weight index must match loaded lanes");
+        for (j, &i) in idx.iter().enumerate() {
+            self.w[j] = weights[i];
+        }
+    }
+
+    /// Squared distances from `q` to every loaded lane; returns the
+    /// filled slice.
+    pub fn sqdist_into(&mut self, q: &[f64]) -> &[f64] {
+        microkernel::sqdist_soa(q, &self.soa, self.cap, self.len, &mut self.sq);
+        &self.sq[..self.len]
+    }
+
+    /// The fused hot path: squared distances from `q`, Gaussian over the
+    /// block, then the weighted reduction against the loaded weights —
+    /// `Σ_j w_j·K(‖q − lane_j‖)`.
+    pub fn gauss_dot(&mut self, kernel: &GaussianKernel, q: &[f64]) -> f64 {
+        let n = self.len;
+        microkernel::sqdist_soa(q, &self.soa, self.cap, n, &mut self.sq);
+        microkernel::gauss_in_place(kernel, &mut self.sq[..n]);
+        microkernel::weighted_sum(&self.w[..n], &self.sq[..n])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::sqdist;
+
+    #[test]
+    fn grows_beyond_initial_block() {
+        let pts = Matrix::from_rows(&(0..40).map(|i| vec![i as f64, 0.0]).collect::<Vec<_>>());
+        let mut s = Scratch::with_block(2, 4);
+        assert_eq!(s.capacity(), 4);
+        assert_eq!(s.load(&pts, 0, 40), 40);
+        assert!(s.capacity() >= 40);
+        let sq = s.sqdist_into(&[0.0, 0.0]);
+        for (j, &v) in sq.iter().enumerate() {
+            assert_eq!(v, (j * j) as f64);
+        }
+    }
+
+    #[test]
+    fn gauss_dot_matches_scalar() {
+        let pts = Matrix::from_rows(&[vec![0.0, 1.0], vec![2.0, 2.0], vec![-1.0, 0.5]]);
+        let w = [1.0, 0.5, 2.0];
+        let kernel = GaussianKernel::new(0.8);
+        let q = [0.25, 0.75];
+        let mut s = Scratch::new(2);
+        s.load(&pts, 0, 3);
+        s.load_weights(&w, 0, 3);
+        let got = s.gauss_dot(&kernel, &q);
+        let mut want = 0.0;
+        for i in 0..3 {
+            want += w[i] * kernel.eval_sq(sqdist(&q, pts.row(i)));
+        }
+        assert_eq!(got, want);
+    }
+}

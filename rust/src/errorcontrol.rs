@@ -31,8 +31,56 @@ pub enum PruneDecision {
     Reject,
 }
 
+/// A prune-acceptance policy, lifted to the type system so the generic
+/// dual-tree traversal monomorphizes it: the runtime `use_tokens`
+/// switch becomes the associated const [`USE_TOKENS`], and every
+/// `if use_tokens` in the hot loop folds away per instantiation.
+///
+/// Two policies exist, mirroring the paper: [`Theorem2`] (the classic
+/// per-node rule, DFD) and [`TokenLedger`] (the Section-5 banked-token
+/// scheme, DFDO/DFTO/DITO).
+///
+/// [`USE_TOKENS`]: PruneRule::USE_TOKENS
+pub trait PruneRule: Copy + Send + Sync + 'static {
+    /// Whether slack budget is banked in the W_T ledger.
+    const USE_TOKENS: bool;
+
+    /// Decide one candidate prune (see [`token_rule`] for the
+    /// parameters). Inlined so `USE_TOKENS` constant-folds.
+    #[inline]
+    fn decide(
+        err: f64,
+        weight: f64,
+        available_tokens: f64,
+        gq_min: f64,
+        eps: f64,
+        total_weight: f64,
+    ) -> PruneDecision {
+        token_rule(err, weight, available_tokens, gq_min, eps, total_weight, Self::USE_TOKENS)
+    }
+}
+
+/// Plain Theorem-2 acceptance: each reference node must fit its own
+/// entitlement `E_A ≤ (W_R/W)·ε·G_Q^min`; no banking (DFD).
+#[derive(Copy, Clone, Debug, Default)]
+pub struct Theorem2;
+
+impl PruneRule for Theorem2 {
+    const USE_TOKENS: bool = false;
+}
+
+/// The paper's improved control: leftover entitlement is banked in the
+/// per-node W_T ledger and spent by later prunes (DFDO/DFTO/DITO).
+#[derive(Copy, Clone, Debug, Default)]
+pub struct TokenLedger;
+
+impl PruneRule for TokenLedger {
+    const USE_TOKENS: bool = true;
+}
+
 /// The token rule in one place, used by DFDO/DFTO/DITO (with
 /// `use_tokens = true`) and plain DFD (with `use_tokens = false`).
+/// Monomorphized callers go through [`PruneRule::decide`] instead.
 ///
 /// * `err`: absolute error bound E_A of the candidate approximation.
 /// * `weight`: W_R of the reference node being accounted.
@@ -149,6 +197,30 @@ impl QueryLedger {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn prune_rule_consts_mirror_runtime_switch() {
+        // the monomorphized policies must agree with the runtime-switch
+        // rule they absorbed, for both accept shapes and reject
+        let cases = [
+            (0.0, 5.0, 0.0, 0.0),
+            (0.001, 5.0, 0.0, 10.0),
+            (0.02, 2.0, 12.0, 50.0),
+            (0.1, 1.0, 0.0, 10.0),
+        ];
+        for (e, wr, bank, gmin) in cases {
+            assert_eq!(
+                Theorem2::decide(e, wr, bank, gmin, 0.01, 100.0),
+                token_rule(e, wr, bank, gmin, 0.01, 100.0, false)
+            );
+            assert_eq!(
+                TokenLedger::decide(e, wr, bank, gmin, 0.01, 100.0),
+                token_rule(e, wr, bank, gmin, 0.01, 100.0, true)
+            );
+        }
+        assert!(!Theorem2::USE_TOKENS);
+        assert!(TokenLedger::USE_TOKENS);
+    }
 
     #[test]
     fn exact_accounting_banks_full_weight() {

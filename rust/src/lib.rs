@@ -7,12 +7,18 @@
 //! paper compares against (naive, FGT, IFGT, DFD) and a KDE/bandwidth-
 //! selection layer on top.
 //!
-//! Layer map (see DESIGN.md):
+//! Layer map (see DESIGN.md and the README "Architecture" section):
 //! * L3 (this crate): trees, expansions, translation operators, error
-//!   control, the six algorithms, LSCV, sweep coordination, CLI.
+//!   control, the six algorithms, LSCV, sweep coordination, CLI. All
+//!   exhaustive inner loops route through the shared [`compute`] SoA
+//!   microkernel; the dual-tree traversal is generic over
+//!   [`algo::dualtree::Expansion`] × [`errorcontrol::PruneRule`], with
+//!   the four paper variants monomorphized from it.
 //! * L2/L1 (python, build-time only): a tiled exhaustive Gaussian
 //!   summation graph whose hot tile is a Pallas kernel; AOT-lowered to
-//!   HLO text in `artifacts/` and executed from [`runtime`] via PJRT.
+//!   HLO text in `artifacts/` and executed from [`runtime`] via PJRT
+//!   (with a [`compute`]-backed CPU fallback when the `pjrt` feature is
+//!   off).
 //!
 //! Quick start:
 //! ```no_run
@@ -28,6 +34,7 @@ pub mod prop;
 pub mod geometry;
 pub mod multiindex;
 pub mod kernel;
+pub mod compute;
 pub mod hermite;
 pub mod bounds;
 pub mod tree;

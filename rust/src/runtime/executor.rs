@@ -6,9 +6,11 @@
 //! The real implementation needs the `xla` PJRT bindings, which are not
 //! vendored in this offline tree; it is gated behind the `pjrt` cargo
 //! feature. Without the feature a stub with the identical API is built
-//! whose `load` fails with a descriptive error, so every caller
-//! (CLI `runtime`, benches, `TiledNaive`) compiles and degrades
-//! gracefully at run time.
+//! whose `load` fails with a descriptive error, so code that names
+//! `TileExecutor` behind runtime `cfg!` guards (the `kernels` bench)
+//! still compiles. [`super::TiledNaive`] no longer routes through the
+//! stub at all — without `pjrt` it falls back to the
+//! [`crate::compute`] CPU microkernel instead.
 
 #[cfg(feature = "pjrt")]
 pub use pjrt_impl::TileExecutor;

@@ -1,7 +1,9 @@
 //! PJRT runtime: load the AOT-compiled HLO artifacts (`make artifacts`)
 //! and execute them from the rust hot path. Python never runs here —
 //! the artifacts are self-contained HLO text compiled once per process
-//! by the XLA CPU backend.
+//! by the XLA CPU backend. Built without the `pjrt` feature,
+//! [`TiledNaive`] degrades gracefully to the [`crate::compute`] SoA
+//! microkernel so every bench and CLI path still runs.
 
 pub mod artifact;
 pub mod executor;

@@ -2,45 +2,111 @@
 //! PJRT artifacts — i.e. the L1 Pallas kernel driven from the L3 rust
 //! coordinator with python nowhere in sight. Implements [`GaussSum`] so
 //! the bench harness can swap it in for the pure-rust `Naive`.
-
-use std::sync::Mutex;
+//!
+//! Without the `pjrt` cargo feature the executor bindings don't exist;
+//! instead of erroring through the stub, [`TiledNaive::load`] degrades
+//! to a CPU backend on the shared [`crate::compute`] SoA microkernel
+//! (logged once per process), so benches and the CLI `runtime` command
+//! run everywhere. With the feature enabled, a missing artifact is
+//! still a hard error — that's a build/setup problem, not a platform
+//! limitation.
 
 use crate::algo::{AlgoError, GaussSum, GaussSumProblem, GaussSumResult, RunStats};
 
+#[cfg(feature = "pjrt")]
+use std::sync::Mutex;
+
+#[cfg(feature = "pjrt")]
 use super::executor::TileExecutor;
 
-/// Exhaustive summation through the compiled artifact for its dimension.
+/// Reference block width of the CPU fallback — matches the default
+/// `algo::naive` tiling, so fallback results are bit-identical to
+/// `Naive::new()`.
+#[cfg(not(feature = "pjrt"))]
+const CPU_FALLBACK_BLOCK: usize = 256;
+
+/// Exhaustive summation through the compiled artifact for its dimension
+/// (or the CPU microkernel fallback when built without `pjrt`).
 pub struct TiledNaive {
+    #[cfg(feature = "pjrt")]
     exec: Mutex<TileExecutor>,
     dim: usize,
 }
 
 impl TiledNaive {
     /// Load the artifact for `dim` from the default artifacts directory.
+    #[cfg(feature = "pjrt")]
     pub fn load(dim: usize) -> crate::util::error::Result<Self> {
         let exec = TileExecutor::load(&super::artifacts_dir(), dim)?;
         Ok(TiledNaive { exec: Mutex::new(exec), dim })
     }
 
+    /// Built without `pjrt`: fall back to the CPU compute microkernel.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(dim: usize) -> crate::util::error::Result<Self> {
+        static FALLBACK_NOTICE: std::sync::Once = std::sync::Once::new();
+        FALLBACK_NOTICE.call_once(|| {
+            crate::log_warn!(
+                "PJRT runtime unavailable (built without the `pjrt` feature); \
+                 TiledNaive falls back to the CPU compute microkernel"
+            );
+        });
+        Ok(TiledNaive { dim })
+    }
+
     pub fn dim(&self) -> usize {
         self.dim
+    }
+
+    /// True when this instance runs on the CPU microkernel instead of a
+    /// PJRT artifact.
+    pub fn is_cpu_fallback(&self) -> bool {
+        cfg!(not(feature = "pjrt"))
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn sums_for(&self, problem: &GaussSumProblem<'_>, w: &[f64]) -> Result<Vec<f64>, AlgoError> {
+        self.exec
+            .lock()
+            .unwrap()
+            .gauss_sum(problem.queries, problem.references, w, problem.h)
+            .map_err(|e| AlgoError::RamExhausted(format!("PJRT failure: {e}")))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn sums_for(&self, problem: &GaussSumProblem<'_>, w: &[f64]) -> Result<Vec<f64>, AlgoError> {
+        let kernel = crate::kernel::GaussianKernel::new(problem.h);
+        let mut scratch = crate::compute::Scratch::with_block(
+            self.dim,
+            CPU_FALLBACK_BLOCK.min(problem.num_references()).max(1),
+        );
+        let mut sums = vec![0.0; problem.num_queries()];
+        crate::compute::gauss_sum_all(
+            problem.queries,
+            problem.references,
+            w,
+            &kernel,
+            CPU_FALLBACK_BLOCK,
+            &mut scratch,
+            &mut sums,
+        );
+        Ok(sums)
     }
 }
 
 impl GaussSum for TiledNaive {
     fn name(&self) -> &'static str {
-        "Naive(PJRT)"
+        if cfg!(feature = "pjrt") {
+            "Naive(PJRT)"
+        } else {
+            "Naive(TiledCPU)"
+        }
     }
 
     fn run(&self, problem: &GaussSumProblem<'_>) -> Result<GaussSumResult, AlgoError> {
         assert_eq!(problem.dim(), self.dim, "artifact dimension mismatch");
         let w = problem.weight_vec();
-        let sums = self
-            .exec
-            .lock()
-            .unwrap()
-            .gauss_sum(problem.queries, problem.references, &w, problem.h)
-            .map_err(|e| AlgoError::RamExhausted(format!("PJRT failure: {e}")))?;
+        let sums = self.sums_for(problem, &w)?;
         let stats = RunStats {
             base_point_pairs: (problem.num_queries() * problem.num_references()) as u64,
             ..Default::default()
@@ -57,23 +123,48 @@ mod tests {
     use crate::geometry::Matrix;
     use crate::util::Pcg32;
 
+    fn random3d(n: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg32::new(seed);
+        Matrix::from_rows(
+            &(0..n)
+                .map(|_| vec![rng.uniform(), rng.uniform(), rng.uniform()])
+                .collect::<Vec<_>>(),
+        )
+    }
+
     #[test]
     fn matches_pure_rust_naive() {
-        if !cfg!(feature = "pjrt")
-            || !crate::runtime::artifacts_dir().join("manifest.json").exists()
+        if cfg!(feature = "pjrt")
+            && !crate::runtime::artifacts_dir().join("manifest.json").exists()
         {
-            eprintln!("skipping: no pjrt feature or no artifacts");
+            eprintln!("skipping: pjrt feature on but no artifacts");
             return;
         }
-        let mut rng = Pcg32::new(31);
-        let data = Matrix::from_rows(
-            &(0..700).map(|_| vec![rng.uniform(), rng.uniform(), rng.uniform()]).collect::<Vec<_>>(),
-        );
+        // with pjrt + artifacts this exercises the compiled kernel;
+        // without pjrt it exercises the CPU microkernel fallback
+        let data = random3d(700, 31);
         let p = GaussSumProblem::kde(&data, 0.15, 0.01);
         let tiled = TiledNaive::load(3).unwrap();
         let a = tiled.run(&p).unwrap().sums;
         let b = Naive::new().run(&p).unwrap().sums;
         assert!(max_relative_error(&a, &b) < 1e-10);
-        assert_eq!(tiled.name(), "Naive(PJRT)");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn cpu_fallback_loads_any_dimension_and_is_bitwise_naive() {
+        let tiled = TiledNaive::load(3).unwrap();
+        assert!(tiled.is_cpu_fallback());
+        assert_eq!(tiled.name(), "Naive(TiledCPU)");
+        assert_eq!(tiled.dim(), 3);
+        let data = random3d(300, 32);
+        let mut rng = Pcg32::new(33);
+        let w: Vec<f64> = (0..300).map(|_| rng.uniform_in(0.2, 2.0)).collect();
+        let p = GaussSumProblem::new(&data, &data, Some(&w), 0.2, 0.01);
+        let a = tiled.run(&p).unwrap();
+        let b = Naive::new().run(&p).unwrap();
+        // same block width, same microkernel → identical arithmetic
+        assert_eq!(a.sums, b.sums);
+        assert_eq!(a.stats.base_point_pairs, b.stats.base_point_pairs);
     }
 }

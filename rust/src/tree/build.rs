@@ -110,6 +110,18 @@ impl KdTree {
         self.nodes[0].weight
     }
 
+    /// Largest point count over leaf nodes — the block size a
+    /// [`crate::compute::Scratch`] needs so leaf-leaf base cases run
+    /// allocation-free.
+    pub fn max_leaf_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.is_leaf())
+            .map(|n| n.count())
+            .max()
+            .unwrap_or(0)
+    }
+
     /// Scatter per-tree-position values back to original row order.
     pub fn unpermute(&self, tree_vals: &[f64]) -> Vec<f64> {
         assert_eq!(tree_vals.len(), self.perm.len());
@@ -261,6 +273,25 @@ mod tests {
                 assert!(n.count() > 25);
             }
         }
+    }
+
+    #[test]
+    fn max_leaf_count_bounds_every_leaf() {
+        let (_, t) = build(700, 3, 20, 11);
+        let m = t.max_leaf_count();
+        assert!(m >= 1 && m <= 20);
+        for i in 0..t.num_nodes() {
+            let n = t.node(i);
+            if n.is_leaf() {
+                assert!(n.count() <= m);
+            }
+        }
+        let single = KdTree::build(
+            &Matrix::from_rows(&[vec![0.0, 0.0]]),
+            &[1.0],
+            BuildParams::default(),
+        );
+        assert_eq!(single.max_leaf_count(), 1);
     }
 
     #[test]

@@ -1,0 +1,122 @@
+//! The compute layer's contract: the blocked SoA microkernel must
+//! reproduce the scalar triple loop it replaced — bit-for-bit when a
+//! range fits one block, within ulps otherwise — across dimensions,
+//! block widths, gathers and scratch reuse.
+
+use fastgauss::compute::{self, reference, Scratch, BLOCK};
+use fastgauss::geometry::{sqdist, Matrix};
+use fastgauss::kernel::GaussianKernel;
+use fastgauss::util::Pcg32;
+
+fn random(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg32::new(seed);
+    Matrix::from_rows(
+        &(0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect::<Vec<_>>(),
+    )
+}
+
+fn random_weights(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg32::new(seed);
+    (0..n).map(|_| rng.uniform_in(0.1, 3.0)).collect()
+}
+
+#[test]
+fn blocked_microkernel_matches_scalar_triple_loop() {
+    let shapes = [(50, 200, 1, 0.1), (40, 333, 2, 0.3), (30, 128, 5, 1.0), (25, 64, 10, 0.7)];
+    for (n_q, n_r, d, h) in shapes {
+        let q = random(n_q, d, 100 + d as u64);
+        let r = random(n_r, d, 200 + d as u64);
+        let w = random_weights(n_r, 300 + d as u64);
+        let kernel = GaussianKernel::new(h);
+        let mut want = vec![0.0; n_q];
+        reference::scalar_gauss_sums(&q, &r, &w, &kernel, &mut want);
+        for block in [0, 1, 13, BLOCK, 4 * BLOCK] {
+            let mut scratch = Scratch::new(d);
+            let mut got = vec![0.0; n_q];
+            compute::gauss_sum_all(&q, &r, &w, &kernel, block, &mut scratch, &mut got);
+            for i in 0..n_q {
+                let tol = if block == 0 || block >= n_r { 0.0 } else { 1e-12 * want[i].max(1.0) };
+                assert!(
+                    (got[i] - want[i]).abs() <= tol,
+                    "d={d} block={block} i={i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn single_block_ranges_are_bitwise_identical() {
+    // leaf-sized ranges (the dual-tree base case) fit one block: the
+    // microkernel must produce the exact bits of the scalar loop
+    let q = random(20, 3, 7);
+    let r = random(32, 3, 8);
+    let w = random_weights(32, 9);
+    let kernel = GaussianKernel::new(0.2);
+    let mut scratch = Scratch::new(3);
+    scratch.load(&r, 0, 32);
+    scratch.load_weights(&w, 0, 32);
+    for qi in 0..20 {
+        let got = scratch.gauss_dot(&kernel, q.row(qi));
+        let mut want = 0.0;
+        for ri in 0..32 {
+            want += w[ri] * kernel.eval_sq(sqdist(q.row(qi), r.row(ri)));
+        }
+        assert_eq!(got, want, "query {qi}");
+    }
+}
+
+#[test]
+fn indexed_gather_matches_scalar_subset() {
+    let r = random(100, 4, 10);
+    let w = random_weights(100, 11);
+    let kernel = GaussianKernel::new(0.4);
+    let mut rng = Pcg32::new(12);
+    let idx: Vec<usize> = (0..37).map(|_| rng.below(100)).collect();
+    let q: Vec<f64> = (0..4).map(|_| rng.uniform()).collect();
+    let mut scratch = Scratch::new(4);
+    let got = compute::gauss_sum_indexed(&q, &r, &idx, &w, &kernel, &mut scratch);
+    let mut want = 0.0;
+    for &i in &idx {
+        want += w[i] * kernel.eval_sq(sqdist(&q, r.row(i)));
+    }
+    assert_eq!(got, want);
+}
+
+#[test]
+fn sqdist_lane_matches_geometry() {
+    let pts = random(77, 6, 13);
+    let q = random(1, 6, 14);
+    let mut scratch = Scratch::with_block(6, 16); // force multi-block growth
+    scratch.load(&pts, 10, 60);
+    let sq = scratch.sqdist_into(q.row(0));
+    assert_eq!(sq.len(), 50);
+    for (j, &v) in sq.iter().enumerate() {
+        assert_eq!(v, sqdist(q.row(0), pts.row(10 + j)), "lane {j}");
+    }
+}
+
+#[test]
+fn scratch_survives_interleaved_workloads() {
+    // alternating shapes and ranges must never leak state between calls
+    let kernel = GaussianKernel::new(0.5);
+    let r1 = random(300, 2, 15);
+    let r2 = random(17, 2, 16);
+    let w1 = random_weights(300, 17);
+    let w2 = random_weights(17, 18);
+    let q = random(5, 2, 19);
+    let mut scratch = Scratch::new(2);
+    for _round in 0..3 {
+        for (r, w) in [(&r1, &w1), (&r2, &w2)] {
+            let mut got = vec![0.0; 5];
+            compute::gauss_sum_all(&q, r, w, &kernel, BLOCK, &mut scratch, &mut got);
+            let mut want = vec![0.0; 5];
+            reference::scalar_gauss_sums(&q, r, w, &kernel, &mut want);
+            for i in 0..5 {
+                assert!((got[i] - want[i]).abs() <= 1e-12 * want[i].max(1.0));
+            }
+        }
+    }
+}

@@ -21,6 +21,24 @@ fn have_artifacts() -> bool {
     ok
 }
 
+/// Without `pjrt`, `TiledNaive` must load anyway and round-trip through
+/// the CPU compute-microkernel fallback for every paper dimension.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn cpu_fallback_round_trips_every_dimension() {
+    for (name, _, d) in data::PAPER_SUITE {
+        let ds = data::by_name(name, 250, 5).unwrap();
+        let h = silverman(&ds.points);
+        let problem = GaussSumProblem::kde(&ds.points, h, 0.01);
+        let tiled = TiledNaive::load(*d).unwrap();
+        assert!(tiled.is_cpu_fallback());
+        let got = tiled.run(&problem).unwrap().sums;
+        let want = Naive::new().run(&problem).unwrap().sums;
+        let rel = max_relative_error(&got, &want);
+        assert!(rel < 1e-12, "{name} (D={d}): rel {rel:.2e}");
+    }
+}
+
 #[test]
 fn manifest_covers_all_paper_dims() {
     if !have_artifacts() {

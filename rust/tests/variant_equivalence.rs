@@ -1,0 +1,129 @@
+//! Property suite for the monomorphization refactor: each type-level
+//! dual-tree variant must match the runtime-switch interface (the
+//! `DualTreeConfig`-driven engine that predates the refactor) within
+//! 1e-12, and meet the ε guarantee against exhaustive truth — on the
+//! paper datasets (astro2d, galaxy3d) and on random monochromatic and
+//! bichromatic problems, across ε ∈ {1e-2, 1e-4, 1e-6}.
+
+use fastgauss::algo::dualtree::{
+    run_dualtree, run_dualtree_variant, DualTreeConfig, NoExpansion, OdpGraded, OpdGrid,
+    SeriesKind, Theorem2, TokenLedger,
+};
+use fastgauss::algo::{max_relative_error, naive::Naive, GaussSum, GaussSumProblem};
+use fastgauss::data;
+use fastgauss::geometry::Matrix;
+use fastgauss::kde::bandwidth::silverman;
+use fastgauss::util::Pcg32;
+
+const EPSILONS: [f64; 3] = [1e-2, 1e-4, 1e-6];
+
+/// Max relative deviation between two result vectors (vs the second).
+fn max_rel_dev(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs() / y.abs().max(1e-300))
+        .fold(0.0, f64::max)
+}
+
+/// Run all four paper variants on `problem` through both interfaces and
+/// check: (1) type-level ≡ config-dispatch within 1e-12 (they are the
+/// same monomorphized code, so this is a bitwise regression harness for
+/// the dispatch layer), (2) ε guarantee vs `exact`.
+fn check_all_variants(problem: &GaussSumProblem<'_>, exact: &[f64], label: &str) {
+    let cases: [(&str, DualTreeConfig); 4] = [
+        (
+            "DFD",
+            DualTreeConfig { use_tokens: false, series: None, ..Default::default() },
+        ),
+        (
+            "DFDO",
+            DualTreeConfig { use_tokens: true, series: None, ..Default::default() },
+        ),
+        (
+            "DFTO",
+            DualTreeConfig { series: Some(SeriesKind::OpdGrid), ..Default::default() },
+        ),
+        ("DITO", DualTreeConfig::default()),
+    ];
+    for (name, cfg) in cases {
+        let via_cfg = run_dualtree(problem, &cfg).unwrap();
+        let via_type = match name {
+            "DFD" => run_dualtree_variant::<NoExpansion, Theorem2>(problem, 32, None),
+            "DFDO" => run_dualtree_variant::<NoExpansion, TokenLedger>(problem, 32, None),
+            "DFTO" => run_dualtree_variant::<OpdGrid, TokenLedger>(problem, 32, None),
+            _ => run_dualtree_variant::<OdpGraded, TokenLedger>(problem, 32, None),
+        }
+        .unwrap();
+        let dev = max_rel_dev(&via_type.sums, &via_cfg.sums);
+        assert!(
+            dev <= 1e-12,
+            "{label} {name} eps={}: type-level vs config dispatch diverged by {dev:.2e}",
+            problem.epsilon
+        );
+        let rel = max_relative_error(&via_cfg.sums, exact);
+        assert!(
+            rel <= problem.epsilon * (1.0 + 1e-9),
+            "{label} {name}: rel {rel:.2e} > eps {}",
+            problem.epsilon
+        );
+    }
+}
+
+#[test]
+fn paper_datasets_all_variants_all_epsilons() {
+    for (name, n) in [("astro2d", 600), ("galaxy3d", 450)] {
+        let ds = data::by_name(name, n, 42).unwrap();
+        let h = silverman(&ds.points);
+        for eps in EPSILONS {
+            let problem = GaussSumProblem::kde(&ds.points, h, eps);
+            let exact = Naive::new().run(&problem).unwrap().sums;
+            check_all_variants(&problem, &exact, name);
+        }
+    }
+}
+
+#[test]
+fn random_monochromatic_all_variants_all_epsilons() {
+    let mut rng = Pcg32::new(2024);
+    let data = Matrix::from_rows(
+        &(0..400)
+            .map(|i| {
+                // two blobs + a uniform background
+                match i % 3 {
+                    0 => vec![0.3 + 0.05 * rng.normal(), 0.3 + 0.05 * rng.normal()],
+                    1 => vec![0.7 + 0.05 * rng.normal(), 0.8 + 0.05 * rng.normal()],
+                    _ => vec![rng.uniform(), rng.uniform()],
+                }
+            })
+            .collect::<Vec<_>>(),
+    );
+    for h in [0.05, 0.5] {
+        for eps in EPSILONS {
+            let problem = GaussSumProblem::kde(&data, h, eps);
+            let exact = Naive::new().run(&problem).unwrap().sums;
+            check_all_variants(&problem, &exact, "random-mono");
+        }
+    }
+}
+
+#[test]
+fn random_bichromatic_weighted_all_variants_all_epsilons() {
+    let mut rng = Pcg32::new(2025);
+    let refs = Matrix::from_rows(
+        &(0..350)
+            .map(|_| (0..3).map(|_| rng.uniform()).collect())
+            .collect::<Vec<_>>(),
+    );
+    let queries = Matrix::from_rows(
+        &(0..90)
+            .map(|_| (0..3).map(|_| rng.uniform_in(-0.2, 1.2)).collect())
+            .collect::<Vec<_>>(),
+    );
+    let w: Vec<f64> = (0..350).map(|_| rng.uniform_in(0.2, 2.5)).collect();
+    for eps in EPSILONS {
+        let problem = GaussSumProblem::new(&queries, &refs, Some(&w), 0.25, eps);
+        let exact = Naive::new().run(&problem).unwrap().sums;
+        check_all_variants(&problem, &exact, "random-bichromatic");
+    }
+}
