@@ -3,22 +3,22 @@
 //! paper's motivating workload — on the astronomy-like dataset.
 //!
 //! The full pipeline composes every layer: synthetic data generation →
-//! Silverman pilot → LSCV sweep over a 10⁻³…10³ log grid where each
-//! score is two guaranteed Gaussian summations by DITO (L3 trees +
-//! expansions + token error control) → verification of the chosen-h
-//! density against the exhaustive PJRT artifact path (L1 Pallas kernel
-//! via the L2 AOT graph) when artifacts are present — and reports the
-//! paper's headline metric: guaranteed-ε speedup of the whole
-//! cross-validation sweep over exhaustive summation.
+//! Silverman pilot → a session LSCV sweep over a 10⁻³…10³ log grid
+//! (2×13 guaranteed summations through one `Session::evaluate_batch`,
+//! parallel across requests, one kd-tree build total) → verification of
+//! the chosen-h density against exhaustive truth and, when artifacts
+//! are present, the PJRT Pallas path — and reports the paper's headline
+//! metric: guaranteed-ε speedup of the whole cross-validation sweep
+//! over exhaustive summation.
 //!
 //! Run: `cargo run --release --example bandwidth_selection [n]`
 //! (default n = 5000; the result is recorded in EXPERIMENTS.md)
 
-use fastgauss::algo::dualtree::{DualTreeConfig, SweepEngine};
-use fastgauss::algo::{dito::Dito, naive::Naive, GaussSum, GaussSumProblem};
+use fastgauss::api::{EvalRequest, Method, PrepareOptions, Session};
+use fastgauss::algo::GaussSum;
 use fastgauss::data;
 use fastgauss::kde::bandwidth::{log_grid, silverman};
-use fastgauss::kde::lscv::{lscv_score, select_bandwidth_engine};
+use fastgauss::kde::lscv::{lscv_score, select_bandwidth_session};
 use fastgauss::util::timer::time_it;
 
 fn main() -> fastgauss::util::error::Result<()> {
@@ -34,14 +34,16 @@ fn main() -> fastgauss::util::error::Result<()> {
         ds.dim(),
     );
 
-    // ---- the fast path: LSCV sweep on a prepared SweepEngine (one
-    // tree build for the whole grid, parallel across bandwidths) ----
+    // ---- the fast path: LSCV sweep on a prepared session (one tree
+    // build for the whole grid, parallel across the 26 requests) ----
     let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
     let ((h_star, scores), fast_secs) = time_it(|| {
-        let sweep = SweepEngine::for_kde(&ds.points, 32).with_threads(threads);
-        let out =
-            select_bandwidth_engine(&sweep, &grid, eps, &DualTreeConfig::default()).unwrap();
-        assert_eq!(sweep.tree_builds(), 1);
+        let session = Session::prepare(
+            &ds.points,
+            PrepareOptions { threads, ..Default::default() },
+        );
+        let out = select_bandwidth_session(&session, &grid, eps, Method::Dito).unwrap();
+        assert_eq!(session.tree_builds(), 1);
         out
     });
     println!("\n  h                LSCV score");
@@ -51,11 +53,13 @@ fn main() -> fastgauss::util::error::Result<()> {
     }
     println!("\nDITO sweep time: {fast_secs:.2}s  →  h* = {h_star:.6}");
 
-    // ---- the baseline: the same sweep exhaustively ----
+    // ---- the baseline: the same sweep exhaustively (the one-shot
+    // engine shim, rebuilt per score — exactly what the session killed) ----
     let (_, slow_secs) = time_it(|| {
         let mut best = (grid[0], f64::INFINITY);
         for &h in &grid {
-            let s = lscv_score(&ds.points, h, eps, &Naive::new()).unwrap();
+            let s =
+                lscv_score(&ds.points, h, eps, &fastgauss::algo::naive::Naive::new()).unwrap();
             if s < best.1 {
                 best = (h, s);
             }
@@ -65,11 +69,15 @@ fn main() -> fastgauss::util::error::Result<()> {
     println!("Naive sweep time: {slow_secs:.2}s");
     println!("headline: {:.1}× speedup at guaranteed ε = {eps}", slow_secs / fast_secs);
 
-    // ---- verify the chosen-h density, vs rust naive AND the PJRT path ----
-    let engine = Dito::default();
-    let problem = GaussSumProblem::kde(&ds.points, h_star, eps);
-    let fast = engine.run(&problem)?;
-    let exact = Naive::new().run(&problem)?;
+    // ---- verify the chosen-h density, vs exhaustive truth AND the
+    // PJRT path — all through one fresh session ----
+    let session = Session::kde(&ds.points);
+    let fast = session
+        .evaluate(&EvalRequest::kde(h_star, eps).with_method(Method::Dito))
+        .map_err(|e| fastgauss::anyhow!("{e}"))?;
+    let exact = session
+        .evaluate(&EvalRequest::kde(h_star, eps).with_method(Method::Naive))
+        .map_err(|e| fastgauss::anyhow!("{e}"))?;
     let rel = fastgauss::algo::max_relative_error(&fast.sums, &exact.sums);
     println!("verified max relative error at h*: {rel:.2e} (≤ {eps})");
     assert!(rel <= eps * (1.0 + 1e-9));
@@ -77,6 +85,7 @@ fn main() -> fastgauss::util::error::Result<()> {
     if cfg!(feature = "pjrt")
         && fastgauss::runtime::artifacts_dir().join("manifest.json").exists()
     {
+        let problem = fastgauss::algo::GaussSumProblem::kde(&ds.points, h_star, eps);
         let tiled = fastgauss::runtime::TiledNaive::load(ds.dim())?;
         let (pjrt, pjrt_secs) = time_it(|| tiled.run(&problem).unwrap());
         let rel_pjrt = fastgauss::algo::max_relative_error(&pjrt.sums, &exact.sums);

@@ -1,6 +1,12 @@
 //! Regenerate one of the paper's tables from the public API: all seven
 //! algorithms across the 10⁻³…10³ bandwidth sweep, with verified error
-//! and the X/∞ conventions.
+//! and the X/∞ conventions — plus an eighth `Auto` row showing what
+//! the session's cost model picks at each bandwidth.
+//!
+//! The whole table runs on one prepared session inside
+//! `coordinator::run_sweep`: one kd-tree build, shared per-bandwidth
+//! truth/moment/clustering memos, exhaustive truth computed inside the
+//! worker pool.
 //!
 //! Run: `cargo run --release --example compare_algorithms [dataset] [n]`
 //! Datasets: astro2d galaxy3d bio5 pall7 covtype10 texture16
@@ -16,12 +22,14 @@ fn main() -> fastgauss::util::error::Result<()> {
     let ds = data::by_name(&dataset, n, 42)
         .ok_or_else(|| fastgauss::anyhow!("unknown dataset {dataset}"))?;
     let h_star = silverman(&ds.points);
+    let mut algorithms = AlgoSpec::paper_order();
+    algorithms.push(AlgoSpec::Auto); // the session's per-cell pick
     let cfg = SweepConfig {
         dataset: ds,
         epsilon: 0.01,
         h_star,
         multipliers: vec![1e-3, 1e-2, 1e-1, 1.0, 1e1, 1e2, 1e3],
-        algorithms: AlgoSpec::paper_order(),
+        algorithms,
         workers: 1,
         leaf_size: 32,
     };

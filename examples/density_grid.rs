@@ -1,15 +1,16 @@
 //! Evaluate a 2-D KDE on a regular grid (bichromatic summation) and
-//! write `density_grid.csv` (x, y, f̂) — ready for plotting. Uses DITO
-//! with the guarantee, and demonstrates the bichromatic public API on a
-//! query set disjoint from the data.
+//! write `density_grid.csv` (x, y, f̂) — ready for plotting.
+//! Demonstrates the session's bichromatic path: the reference tree and
+//! per-bandwidth state are prepared once, and the query grid rides on
+//! top with only a query-tree build.
 //!
 //! Run: `cargo run --release --example density_grid [n] [grid]`
 
-use fastgauss::algo::dito::Dito;
+use fastgauss::api::{EvalRequest, Session};
 use fastgauss::data;
 use fastgauss::geometry::Matrix;
 use fastgauss::kde::bandwidth::silverman;
-use fastgauss::kde::density_at;
+use fastgauss::kde::density_at_session;
 
 fn main() -> fastgauss::util::error::Result<()> {
     let mut args = std::env::args().skip(1);
@@ -28,8 +29,9 @@ fn main() -> fastgauss::util::error::Result<()> {
     }
     let grid = Matrix::from_rows(&rows);
 
-    let engine = Dito::default();
-    let dens = density_at(&grid, &ds.points, h, 0.01, &engine)
+    let session = Session::kde(&ds.points);
+    let resolved = session.resolve(&EvalRequest::kde(h, 0.01).with_queries(&grid));
+    let dens = density_at_session(&session, &grid, h, 0.01, resolved)
         .map_err(|e| fastgauss::anyhow!("{e}"))?;
 
     let out = "density_grid.csv";
@@ -44,7 +46,7 @@ fn main() -> fastgauss::util::error::Result<()> {
     let peak = dens.iter().cloned().fold(0.0f64, f64::max);
     let mean = fastgauss::util::stats::mean(&dens);
     println!(
-        "wrote {out}: {g}×{g} grid, n={n}, h={h:.5}; peak density {peak:.3}, mean {mean:.3}"
+        "wrote {out}: {g}×{g} grid, n={n}, h={h:.5}, method={resolved}; peak density {peak:.3}, mean {mean:.3}"
     );
     Ok(())
 }

@@ -1,12 +1,13 @@
-//! Quickstart: compute a guaranteed-accuracy Gaussian summation / KDE
-//! with DITO, the paper's algorithm, in a dozen lines.
+//! Quickstart: guaranteed-accuracy Gaussian summation / KDE through
+//! the `Session` front door — prepare once, evaluate many, automatic
+//! method selection.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use fastgauss::algo::{dito::Dito, naive::Naive, GaussSum, GaussSumProblem};
+use fastgauss::api::{EvalRequest, Method, Session};
 use fastgauss::data;
 use fastgauss::kde::bandwidth::silverman;
-use fastgauss::kde::density_at_points;
+use fastgauss::kde::density_at_points_session;
 
 fn main() -> fastgauss::util::error::Result<()> {
     // 1. a dataset (any Matrix works; this is the 2-D astronomy-like set)
@@ -16,19 +17,34 @@ fn main() -> fastgauss::util::error::Result<()> {
     let h = silverman(&ds.points);
     println!("dataset={} n={} D={} h={h:.5}", ds.name, ds.len(), ds.dim());
 
-    // 3. Gaussian summation with a guaranteed 1% relative tolerance
-    let problem = GaussSumProblem::kde(&ds.points, h, 0.01);
-    let engine = Dito::default();
-    let result = engine.run(&problem)?;
-    println!("G(x_0) = {:.6}  (prunes: {})", result.sums[0], result.stats.total_prunes());
+    // 3. prepare the session once — one kd-tree build serves every
+    //    request below
+    let session = Session::kde(&ds.points);
 
-    // 4. verified against the exhaustive sum
-    let exact = Naive::new().run(&problem)?;
-    let rel = fastgauss::algo::max_relative_error(&result.sums, &exact.sums);
+    // 4. Gaussian summation with a guaranteed 1% relative tolerance;
+    //    Method::Auto (the default) picks the algorithm from the
+    //    problem's dimension, size and bandwidth
+    let auto = session.evaluate(&EvalRequest::kde(h, 0.01))?;
+    println!(
+        "G(x_0) = {:.6}  via {} (prunes: {})",
+        auto.sums[0],
+        auto.method,
+        auto.stats.total_prunes()
+    );
+
+    // 5. or pin the paper's algorithm explicitly
+    let dito = session.evaluate(&EvalRequest::kde(h, 0.01).with_method(Method::Dito))?;
+
+    // 6. verified against the exhaustive sum (also served — and
+    //    memoized — by the session)
+    let exact = session.evaluate(&EvalRequest::kde(h, 0.01).with_method(Method::Naive))?;
+    let rel = fastgauss::algo::max_relative_error(&dito.sums, &exact.sums);
     println!("verified max relative error = {rel:.2e} (ε = 0.01)");
 
-    // 5. or as a normalized density estimate
-    let dens = density_at_points(&ds.points, h, 0.01, &engine)?;
+    // 7. or as a normalized density estimate
+    let dens = density_at_points_session(&session, h, 0.01, Method::Auto)?;
     println!("f̂(x_0) = {:.6}", dens[0]);
+
+    assert_eq!(session.tree_builds(), 1); // everything shared one build
     Ok(())
 }

@@ -6,10 +6,10 @@
 //!   §plimit  — truncation-order cap;
 //!   §tile    — PJRT-artifact base kernel vs pure-rust base case on the
 //!              exhaustive path (when does offload pay?);
-//!   §sweep   — the PR's amortization claim: a 13-point LSCV-style
+//!   §sweep   — the amortization claim: a 13-point LSCV-style
 //!              bandwidth sweep via per-h rebuilds (sequential) vs one
-//!              prepared multi-threaded SweepEngine, verified against
-//!              Naive at every grid point;
+//!              prepared multi-threaded Session (evaluate_batch over
+//!              the grid), verified against Naive at every grid point;
 //!   §basecase — the SoA compute microkernel (the base case every
 //!              algorithm now routes through) vs the old scalar triple
 //!              loop, on galaxy3d at default ε.
@@ -17,7 +17,8 @@
 //! Run: `cargo bench --bench ablations`
 //! (knobs: FASTGAUSS_N, FASTGAUSS_SWEEP_N)
 
-use fastgauss::algo::dualtree::{run_dualtree, DualTreeConfig, SeriesKind, SweepEngine};
+use fastgauss::api::{EvalRequest, Method, PrepareOptions, Session};
+use fastgauss::algo::dualtree::{run_dualtree, DualTreeConfig, SeriesKind};
 use fastgauss::algo::{max_relative_error, naive::Naive, GaussSum, GaussSumProblem};
 use fastgauss::compute;
 use fastgauss::data;
@@ -126,12 +127,21 @@ fn main() {
             .collect::<Vec<_>>()
     });
 
-    // engine: one tree build for the whole grid, parallel across h
-    let (engine, t_prep) =
-        time_it(|| SweepEngine::for_kde(&ds_sweep.points, 32).with_threads(threads));
-    let (engine_results, t_eval) =
-        time_it(|| engine.evaluate_grid(&grid, eps, &cfg_sweep).unwrap());
-    assert_eq!(engine.tree_builds(), 1, "engine must build the tree exactly once");
+    // session: one tree build for the whole grid, parallel across the
+    // batched requests (the front door every caller now uses)
+    let (session, t_prep) = time_it(|| {
+        Session::prepare(&ds_sweep.points, PrepareOptions { threads, ..Default::default() })
+    });
+    let reqs: Vec<EvalRequest<'static>> =
+        grid.iter().map(|&h| EvalRequest::kde(h, eps).with_method(Method::Dito)).collect();
+    let (engine_results, t_eval) = time_it(|| {
+        session
+            .evaluate_batch(&reqs)
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect::<Vec<_>>()
+    });
+    assert_eq!(session.tree_builds(), 1, "session must build the tree exactly once");
     let t_engine = t_prep + t_eval;
 
     // verify every grid point against exhaustive truth
@@ -147,7 +157,7 @@ fn main() {
         worst = worst.max(rel.max(max_relative_error(&rebuild_sums[i], &exact)));
     }
     println!(
-        "rebuild×13 = {t_rebuild:.3}s   engine(prep {t_prep:.3}s + eval {t_eval:.3}s) = \
+        "rebuild×13 = {t_rebuild:.3}s   session(prep {t_prep:.3}s + eval {t_eval:.3}s) = \
          {t_engine:.3}s   speedup = {:.2}x   worst rel_err = {worst:.2e} (ε = {eps})",
         t_rebuild / t_engine
     );

@@ -1,7 +1,9 @@
 //! Regenerates ALL SIX of the paper's evaluation tables (the paper's
 //! entire results section): six datasets × seven algorithms × seven
 //! bandwidths, times in seconds with verified ε = 0.01 and the X/∞
-//! conventions.
+//! conventions. Each table runs on one prepared `api::Session` inside
+//! `coordinator::run_sweep` (one tree build; truth computed inside the
+//! worker pool and shared by every cell's verification).
 //!
 //! Scale knobs (1-vCPU default keeps the full run in minutes):
 //!   FASTGAUSS_N=5000        points per dataset (paper: 50000)

@@ -526,7 +526,44 @@ impl SweepEngine {
         self.evaluate_variant_with_threads::<X, P>(h, epsilon, plimit, self.threads)
     }
 
-    fn evaluate_with_threads(
+    /// Evaluate one bandwidth against an *explicit* query matrix: a
+    /// query kd-tree is built for this call, while the reference tree,
+    /// its node geometry and the per-bandwidth moment memo are all
+    /// reused — the bichromatic form of the prepare-once contract.
+    /// Results are bit-identical to a one-shot [`run_dualtree`] on the
+    /// same (queries, references) problem with matching leaf size.
+    pub fn evaluate_queries(
+        &self,
+        queries: &Matrix,
+        leaf_size: usize,
+        h: f64,
+        epsilon: f64,
+        cfg: &DualTreeConfig,
+    ) -> Result<GaussSumResult, AlgoError> {
+        self.evaluate_queries_with_threads(queries, leaf_size, h, epsilon, cfg, self.threads)
+    }
+
+    pub(crate) fn evaluate_queries_with_threads(
+        &self,
+        queries: &Matrix,
+        leaf_size: usize,
+        h: f64,
+        epsilon: f64,
+        cfg: &DualTreeConfig,
+        threads: usize,
+    ) -> Result<GaussSumResult, AlgoError> {
+        assert_eq!(queries.cols(), self.dim, "query dimension mismatch");
+        let qw = vec![1.0; queries.rows()];
+        let (qtree, qsecs) = time_it(|| KdTree::build(queries, &qw, BuildParams { leaf_size }));
+        let mut res = dispatch_variant!(cfg, X, P => {
+            self.evaluate_variant_on::<X, P>(&qtree, h, epsilon, cfg.plimit, threads)
+        })?;
+        res.stats.build_secs += qsecs;
+        res.stats.tree_builds += 1;
+        Ok(res)
+    }
+
+    pub(crate) fn evaluate_with_threads(
         &self,
         h: f64,
         epsilon: f64,
@@ -545,6 +582,23 @@ impl SweepEngine {
         plimit_override: Option<usize>,
         threads: usize,
     ) -> Result<GaussSumResult, AlgoError> {
+        let qt: &KdTree = self.qtree.as_ref().unwrap_or(&self.rtree);
+        self.evaluate_variant_on::<X, P>(qt, h, epsilon, plimit_override, threads)
+    }
+
+    /// The traversal core, parameterized over the query tree so both
+    /// the prepared monochromatic/bichromatic trees and the per-call
+    /// trees of [`evaluate_queries`] share one implementation.
+    ///
+    /// [`evaluate_queries`]: SweepEngine::evaluate_queries
+    fn evaluate_variant_on<X: Expansion, P: PruneRule>(
+        &self,
+        qt: &KdTree,
+        h: f64,
+        epsilon: f64,
+        plimit_override: Option<usize>,
+        threads: usize,
+    ) -> Result<GaussSumResult, AlgoError> {
         assert!(h > 0.0 && h.is_finite(), "bandwidth must be positive");
         assert!(epsilon > 0.0, "epsilon must be positive");
         let kernel = GaussianKernel::new(h);
@@ -557,7 +611,6 @@ impl SweepEngine {
             }
             None => (None, 0.0, false),
         };
-        let qt: &KdTree = self.qtree.as_ref().unwrap_or(&self.rtree);
         let rt: &KdTree = &self.rtree;
         let set_len = moments.as_ref().map_or(0, |m| m.set().len());
         let table_order = if set_len > 0 { 2 * plimit.max(1) } else { 1 };

@@ -55,16 +55,43 @@ impl Fgt {
     }
 }
 
-impl GaussSum for Fgt {
-    fn name(&self) -> &'static str {
-        "FGT"
-    }
+/// The h-independent joint bounding box of (queries ∪ references) —
+/// the dataset-dependent half of FGT's grid geometry. The session
+/// layer computes it lazily once per dataset and reuses it across
+/// bandwidths and τ-halving attempts; [`Fgt::run`] derives it on the
+/// fly, bit-identically.
+#[derive(Clone, Debug)]
+pub struct GridFrame {
+    pub lo: Vec<f64>,
+    pub hi: Vec<f64>,
+}
 
-    fn guarantees_tolerance(&self) -> bool {
-        false // absolute-τ scheme; relative ε needs the verification loop
+impl GridFrame {
+    /// Per-dimension min/max over both point sets (no padding — the
+    /// grid's `+1e-12` open-end nudge is applied at run time).
+    pub fn joint(queries: &Matrix, refs: &Matrix) -> Self {
+        let mut lo = refs.col_min();
+        let mut hi = refs.col_max();
+        let qlo = queries.col_min();
+        let qhi = queries.col_max();
+        for j in 0..lo.len() {
+            lo[j] = lo[j].min(qlo[j]);
+            hi[j] = hi[j].max(qhi[j]);
+        }
+        GridFrame { lo, hi }
     }
+}
 
-    fn run(&self, problem: &GaussSumProblem<'_>) -> Result<GaussSumResult, AlgoError> {
+impl Fgt {
+    /// [`GaussSum::run`] with the bounding-box scan factored out:
+    /// callers that evaluate many bandwidths on one dataset (the
+    /// session layer) pass a precomputed [`GridFrame`] instead of
+    /// rescanning the point sets every attempt.
+    pub fn run_with_frame(
+        &self,
+        problem: &GaussSumProblem<'_>,
+        frame: &GridFrame,
+    ) -> Result<GaussSumResult, AlgoError> {
         let d = problem.dim();
         let h = problem.h;
         let kernel = GaussianKernel::new(h);
@@ -73,13 +100,11 @@ impl GaussSum for Fgt {
         let weights = problem.weight_vec();
 
         // ---- grid geometry over the joint bounding box ----
-        let mut lo = refs.col_min();
-        let mut hi = refs.col_max();
-        let qlo = queries.col_min();
-        let qhi = queries.col_max();
+        debug_assert_eq!(frame.lo.len(), d, "frame dimension mismatch");
+        let lo = frame.lo.clone();
+        let mut hi = frame.hi.clone();
         for j in 0..d {
-            lo[j] = lo[j].min(qlo[j]);
-            hi[j] = hi[j].max(qhi[j]) + 1e-12;
+            hi[j] += 1e-12;
         }
         let side = 2.0 * self.box_radius * h;
         let mut boxes_per_dim = vec![0usize; d];
@@ -275,6 +300,20 @@ impl GaussSum for Fgt {
             }
         }
         Ok(GaussSumResult { sums, stats })
+    }
+}
+
+impl GaussSum for Fgt {
+    fn name(&self) -> &'static str {
+        "FGT"
+    }
+
+    fn guarantees_tolerance(&self) -> bool {
+        false // absolute-τ scheme; relative ε needs the verification loop
+    }
+
+    fn run(&self, problem: &GaussSumProblem<'_>) -> Result<GaussSumResult, AlgoError> {
+        self.run_with_frame(problem, &GridFrame::joint(problem.queries, problem.references))
     }
 }
 

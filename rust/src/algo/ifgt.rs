@@ -82,16 +82,63 @@ pub fn k_center(points: &Matrix, k: usize, seed: u64) -> (Vec<usize>, Vec<usize>
     (assign, centers)
 }
 
-impl GaussSum for Ifgt {
-    fn name(&self) -> &'static str {
-        "IFGT"
+/// H-independent clustering state for IFGT on one reference set:
+/// farthest-point assignment, cluster centers and per-cluster radii.
+/// Depends only on `(points, clusters, seed)` — the session layer
+/// caches one plan per `(K, seed)` and reuses it across bandwidths and
+/// K-doubling tuning rounds; [`Ifgt::run`] builds a throwaway plan.
+#[derive(Clone, Debug)]
+pub struct IfgtPlan {
+    pub assign: Vec<usize>,
+    pub centers: Vec<Vec<f64>>,
+    pub radius: Vec<f64>,
+}
+
+impl IfgtPlan {
+    pub fn build(refs: &Matrix, clusters: usize, seed: u64) -> Self {
+        let (assign, center_idx) = k_center(refs, clusters, seed);
+        let centers: Vec<Vec<f64>> =
+            center_idx.iter().map(|&i| refs.row(i).to_vec()).collect();
+        let mut radius = vec![0.0f64; centers.len()];
+        for i in 0..refs.rows() {
+            let c = assign[i];
+            radius[c] = radius[c].max(dist(refs.row(i), &centers[c]));
+        }
+        IfgtPlan { assign, centers, radius }
+    }
+}
+
+/// Expansion-workspace memory guard (2 GB testbed, as for FGT).
+const MEM_CAP_SLOTS: usize = (2usize << 30) / 8;
+
+impl Ifgt {
+    /// Build the h-independent clustering plan for this parameter set.
+    pub fn plan(&self, refs: &Matrix) -> IfgtPlan {
+        IfgtPlan::build(refs, self.clusters, self.seed)
     }
 
-    fn guarantees_tolerance(&self) -> bool {
-        false // the original bound is incorrect; needs external verification
+    /// The 2 GB expansion-workspace guard (the paper's `X`), cheap
+    /// enough to run *before* the O(K·N) clustering pass so hopeless K
+    /// fails fast on every path (one-shot run and tuning loop alike).
+    pub fn check_memory(&self, dim: usize) -> Result<(), AlgoError> {
+        let terms = MultiIndexSet::new(Layout::Graded, dim, self.order).len();
+        if terms * self.clusters > MEM_CAP_SLOTS {
+            return Err(AlgoError::RamExhausted(format!(
+                "{} clusters × {terms} coeffs",
+                self.clusters
+            )));
+        }
+        Ok(())
     }
 
-    fn run(&self, problem: &GaussSumProblem<'_>) -> Result<GaussSumResult, AlgoError> {
+    /// [`GaussSum::run`] with the clustering factored out: callers that
+    /// evaluate many bandwidths on one dataset (the session layer) pass
+    /// a cached [`IfgtPlan`] instead of re-clustering every call.
+    pub fn run_with_plan(
+        &self,
+        problem: &GaussSumProblem<'_>,
+        plan: &IfgtPlan,
+    ) -> Result<GaussSumResult, AlgoError> {
         let d = problem.dim();
         let h = problem.h;
         let kernel = GaussianKernel::new(h);
@@ -101,7 +148,7 @@ impl GaussSum for Ifgt {
         let scale = kernel.series_scale();
 
         let set = MultiIndexSet::new(Layout::Graded, d, self.order);
-        if set.len() * self.clusters > (2usize << 30) / 8 {
+        if set.len() * self.clusters > MEM_CAP_SLOTS {
             return Err(AlgoError::RamExhausted(format!(
                 "{} clusters × {} coeffs",
                 self.clusters,
@@ -109,16 +156,11 @@ impl GaussSum for Ifgt {
             )));
         }
 
-        // ---- clustering ----
-        let (assign, center_idx) = k_center(refs, self.clusters, self.seed);
-        let kk = center_idx.len();
-        let centers: Vec<Vec<f64>> =
-            center_idx.iter().map(|&i| refs.row(i).to_vec()).collect();
-        let mut radius = vec![0.0f64; kk];
-        for i in 0..refs.rows() {
-            let c = assign[i];
-            radius[c] = radius[c].max(dist(refs.row(i), &centers[c]));
-        }
+        let assign = &plan.assign;
+        let centers = &plan.centers;
+        let radius = &plan.radius;
+        let kk = centers.len();
+        debug_assert_eq!(assign.len(), refs.rows(), "plan built for another point set");
 
         // ---- cluster coefficients C_α = 2^|α|/α! Σ w e^(−‖v‖²) v^α ----
         let mut coeffs = vec![0.0; kk * set.len()];
@@ -163,6 +205,21 @@ impl GaussSum for Ifgt {
     }
 }
 
+impl GaussSum for Ifgt {
+    fn name(&self) -> &'static str {
+        "IFGT"
+    }
+
+    fn guarantees_tolerance(&self) -> bool {
+        false // the original bound is incorrect; needs external verification
+    }
+
+    fn run(&self, problem: &GaussSumProblem<'_>) -> Result<GaussSumResult, AlgoError> {
+        self.check_memory(problem.dim())?;
+        self.run_with_plan(problem, &self.plan(problem.references))
+    }
+}
+
 /// The paper's IFGT protocol: start at the recommended parameters,
 /// double K (and stretch ρ) until the *verified* relative error meets ε,
 /// or give up — producing the tables' `∞`. Requires the exact sums
@@ -183,6 +240,24 @@ pub fn ifgt_tuning_loop(
     max_rounds: usize,
     budget_secs: f64,
 ) -> Result<(GaussSumResult, Ifgt), AlgoError> {
+    ifgt_tuning_loop_with_plans(problem, exact, max_rounds, budget_secs, |p| {
+        std::sync::Arc::new(p.plan(problem.references))
+    })
+}
+
+/// [`ifgt_tuning_loop`] with the clustering supplied by the caller —
+/// the session layer passes its per-`(K, seed)` plan cache here so
+/// repeated tuning on one dataset re-clusters nothing.
+pub fn ifgt_tuning_loop_with_plans<F>(
+    problem: &GaussSumProblem<'_>,
+    exact: &[f64],
+    max_rounds: usize,
+    budget_secs: f64,
+    mut plan_for: F,
+) -> Result<(GaussSumResult, Ifgt), AlgoError>
+where
+    F: FnMut(&Ifgt) -> std::sync::Arc<IfgtPlan>,
+{
     let started = std::time::Instant::now();
     let k_cap = (problem.num_references() / 2).max(1);
     let mut params = Ifgt::recommended(problem.dim(), problem.num_references());
@@ -193,7 +268,11 @@ pub fn ifgt_tuning_loop(
                 "IFGT tuning exceeded {budget_secs:.1}s budget at round {round}"
             )));
         }
-        let out = params.run(problem)?;
+        // fail fast (and skip polluting any plan cache) before the
+        // O(K·N) clustering when this K can't fit in memory anyway
+        params.check_memory(problem.dim())?;
+        let plan = plan_for(&params);
+        let out = params.run_with_plan(problem, &plan)?;
         let rel = super::max_relative_error(&out.sums, exact);
         if rel <= problem.epsilon {
             return Ok((out, params));

@@ -159,6 +159,12 @@ pub struct RunStats {
     pub moment_cache_hits: u64,
     /// Moment-memo misses for this evaluate (0 or 1).
     pub moment_cache_misses: u64,
+    /// Session-level lazy-state hits for this evaluate: exhaustive-truth
+    /// memo, FGT grid frame and IFGT clustering plans reused from a
+    /// prepared [`crate::api::Session`].
+    pub session_cache_hits: u64,
+    /// Session-level lazy-state misses (entries built by this evaluate).
+    pub session_cache_misses: u64,
     /// Total wall-clock seconds (filled by the harness/run wrapper).
     pub total_secs: f64,
 }
@@ -184,6 +190,8 @@ impl RunStats {
         self.tree_builds += other.tree_builds;
         self.moment_cache_hits += other.moment_cache_hits;
         self.moment_cache_misses += other.moment_cache_misses;
+        self.session_cache_hits += other.session_cache_hits;
+        self.session_cache_misses += other.session_cache_misses;
         self.total_secs += other.total_secs;
     }
 }

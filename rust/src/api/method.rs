@@ -1,0 +1,282 @@
+//! The [`Method`] enum — the one name every caller uses to pick a
+//! Gaussian-summation algorithm — and the promoted, problem-level
+//! [`CostModel`] behind [`Method::Auto`].
+//!
+//! `Method` replaces the coordinator's stringly-routed `AlgoSpec` (kept
+//! as a re-export alias) *and* the ad-hoc `DualTreeConfig` construction
+//! scattered across callers: the four dual-tree variants map to their
+//! configs via [`Method::dual_tree_config`], and Naive/FGT/IFGT are
+//! first-class variants instead of side doors.
+
+use crate::algo::dualtree::{DualTreeConfig, SeriesKind};
+
+/// Which algorithm a [`crate::api::Session`] evaluation runs.
+///
+/// The seven concrete variants are the paper's seven table rows;
+/// [`Method::Auto`] defers the choice to the session's [`CostModel`]
+/// (dimension, N, h-to-scale ratio) at evaluate time.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Exhaustive O(N·M) summation.
+    Naive,
+    /// Flat-grid Fast Gauss Transform (needs ε-verification; the
+    /// session runs the paper's τ-halving loop).
+    Fgt,
+    /// Improved FGT (needs ε-verification; the session runs the
+    /// paper's K-doubling loop).
+    Ifgt,
+    /// Dual-tree finite difference, Theorem-2 control.
+    Dfd,
+    /// DFD + the paper's token error control.
+    Dfdo,
+    /// Dual-tree O(pᴰ) grid expansion + token control.
+    Dfto,
+    /// The paper's contribution: dual-tree O(Dᵖ) graded expansion +
+    /// token control.
+    Dito,
+    /// Let the session's [`CostModel`] pick per problem.
+    Auto,
+}
+
+impl Method {
+    /// Short table name ("DITO", "FGT", …; "Auto" for the selector).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Naive => "Naive",
+            Method::Fgt => "FGT",
+            Method::Ifgt => "IFGT",
+            Method::Dfd => "DFD",
+            Method::Dfdo => "DFDO",
+            Method::Dfto => "DFTO",
+            Method::Dito => "DITO",
+            Method::Auto => "Auto",
+        }
+    }
+
+    /// Case-insensitive parse of [`name`](Method::name)-style strings.
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "naive" => Some(Method::Naive),
+            "fgt" => Some(Method::Fgt),
+            "ifgt" => Some(Method::Ifgt),
+            "dfd" => Some(Method::Dfd),
+            "dfdo" => Some(Method::Dfdo),
+            "dfto" => Some(Method::Dfto),
+            "dito" => Some(Method::Dito),
+            "auto" => Some(Method::Auto),
+            _ => None,
+        }
+    }
+
+    /// The paper's seven-row table order (concrete methods only).
+    pub fn paper_order() -> Vec<Method> {
+        vec![
+            Method::Naive,
+            Method::Fgt,
+            Method::Ifgt,
+            Method::Dfd,
+            Method::Dfdo,
+            Method::Dfto,
+            Method::Dito,
+        ]
+    }
+
+    /// Every variant, `Auto` included.
+    pub const ALL: [Method; 8] = [
+        Method::Naive,
+        Method::Fgt,
+        Method::Ifgt,
+        Method::Dfd,
+        Method::Dfdo,
+        Method::Dfto,
+        Method::Dito,
+        Method::Auto,
+    ];
+
+    /// Whether this method runs on the generic dual-tree engine.
+    pub fn is_dual_tree(&self) -> bool {
+        matches!(self, Method::Dfd | Method::Dfdo | Method::Dfto | Method::Dito)
+    }
+
+    /// Whether an answer carries the ε guarantee *by construction*.
+    /// FGT/IFGT answers are still ε-verified by the session's tuning
+    /// loops, just not by the algorithm itself. `Auto` only resolves to
+    /// guaranteed methods, so it reports `true`.
+    pub fn guarantees_tolerance(&self) -> bool {
+        !matches!(self, Method::Fgt | Method::Ifgt)
+    }
+
+    /// The engine configuration a dual-tree method denotes, or `None`
+    /// for Naive/FGT/IFGT/Auto. This is the single point where method
+    /// names meet `DualTreeConfig` — callers no longer hand-assemble
+    /// `use_tokens`/`series` combinations.
+    pub fn dual_tree_config(
+        &self,
+        leaf_size: usize,
+        plimit: Option<usize>,
+    ) -> Option<DualTreeConfig> {
+        let base = DualTreeConfig { leaf_size, plimit, ..Default::default() };
+        match self {
+            Method::Dfd => Some(DualTreeConfig { use_tokens: false, series: None, ..base }),
+            Method::Dfdo => Some(DualTreeConfig { use_tokens: true, series: None, ..base }),
+            Method::Dfto => Some(DualTreeConfig { series: Some(SeriesKind::OpdGrid), ..base }),
+            Method::Dito => Some(base),
+            Method::Naive | Method::Fgt | Method::Ifgt | Method::Auto => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Method {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Everything [`CostModel::best_method`] looks at: the problem-level
+/// analogue of the per-node-pair geometry the traversal's
+/// [`crate::algo::bestmethod::CostModel`] costs out.
+#[derive(Copy, Clone, Debug)]
+pub struct ProblemProfile {
+    pub dim: usize,
+    pub n_queries: usize,
+    pub n_references: usize,
+    pub h: f64,
+    pub epsilon: f64,
+    /// Mean per-dimension standard deviation of the reference set (the
+    /// same spread measure Silverman's rule uses) — the yardstick the
+    /// bandwidth is compared against.
+    pub data_scale: f64,
+}
+
+impl ProblemProfile {
+    /// Bandwidth relative to the data spread — the axis the paper's
+    /// tables sweep (h as a multiple of h*, up to the pilot constant).
+    pub fn h_ratio(&self) -> f64 {
+        let scale = if self.data_scale > 0.0 { self.data_scale } else { 1.0 };
+        self.h / scale
+    }
+}
+
+/// The promoted, problem-level `bestMethod`: where the traversal-level
+/// [`crate::algo::bestmethod::CostModel`] picks the cheapest *operator*
+/// per node pair, this one picks the cheapest *algorithm* per problem
+/// from (dimension, N, h-to-scale ratio). Thresholds are data-driven
+/// defaults from the paper's tables and this repo's `ablations` bench;
+/// all are overridable via [`crate::api::PrepareOptions`].
+///
+/// The decision table (see DESIGN.md for the full rationale):
+///
+/// | regime | choice | why |
+/// |---|---|---|
+/// | max(N_Q, N_R) ≤ `naive_cutoff` | Naive | tree prep can't pay for itself |
+/// | h/scale < `fd_ratio` | DFDO | kernel ≈ local: series never fires, FD-only constant wins |
+/// | h/scale > `far_ratio`/√D | DFDO | kernel ≈ flat: root-level FD prune, skip the moment pass |
+/// | otherwise | DITO | the paper's winner in the contested middle band |
+///
+/// FGT/IFGT are never auto-selected: their answers need ε-verification
+/// against an exhaustive run, so as one-shot choices they are dominated
+/// by Naive itself (they remain reachable explicitly for the paper's
+/// table protocol). DFD is dominated by DFDO (tokens only add prune
+/// opportunities) and DFTO by DITO (the O(Dᵖ) bounds subsume the grid
+/// expansion's node-size restriction), per the paper's conclusions.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct CostModel {
+    /// Below this many points on the larger side, preparation cannot
+    /// amortize: exhaustive summation wins outright.
+    pub naive_cutoff: usize,
+    /// h/scale below which the finite-difference-only engine wins.
+    pub fd_ratio: f64,
+    /// Dimension-normalized h/scale above which everything is far
+    /// field and the FD-only engine wins again (threshold is
+    /// `far_ratio / sqrt(D)`: the contested series band narrows as the
+    /// expansion sizes grow with D).
+    pub far_ratio: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel { naive_cutoff: 256, fd_ratio: 0.02, far_ratio: 5.0 }
+    }
+}
+
+impl CostModel {
+    /// Resolve [`Method::Auto`] for one problem.
+    pub fn best_method(&self, p: &ProblemProfile) -> Method {
+        if p.n_queries.max(p.n_references) <= self.naive_cutoff {
+            return Method::Naive;
+        }
+        let ratio = p.h_ratio();
+        let far = self.far_ratio / (p.dim as f64).sqrt();
+        if ratio < self.fd_ratio || ratio > far {
+            Method::Dfdo
+        } else {
+            Method::Dito
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_all_methods() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()), Some(m));
+            assert_eq!(Method::parse(&m.name().to_lowercase()), Some(m));
+        }
+        assert_eq!(Method::parse("bogus"), None);
+        assert_eq!(Method::parse("auto"), Some(Method::Auto));
+    }
+
+    #[test]
+    fn paper_order_is_the_seven_concrete_rows() {
+        let order = Method::paper_order();
+        assert_eq!(order.len(), 7);
+        assert!(!order.contains(&Method::Auto));
+        assert_eq!(order[0], Method::Naive);
+        assert_eq!(order[6], Method::Dito);
+    }
+
+    #[test]
+    fn dual_tree_config_matches_paper_switchboard() {
+        let dfd = Method::Dfd.dual_tree_config(16, None).unwrap();
+        assert!(!dfd.use_tokens && dfd.series.is_none() && dfd.leaf_size == 16);
+        let dfdo = Method::Dfdo.dual_tree_config(32, None).unwrap();
+        assert!(dfdo.use_tokens && dfdo.series.is_none());
+        let dfto = Method::Dfto.dual_tree_config(32, Some(4)).unwrap();
+        assert_eq!(dfto.series, Some(SeriesKind::OpdGrid));
+        assert_eq!(dfto.plimit, Some(4));
+        let dito = Method::Dito.dual_tree_config(32, None).unwrap();
+        assert_eq!(dito.series, Some(SeriesKind::OdpGraded));
+        assert!(dito.use_tokens);
+        for m in [Method::Naive, Method::Fgt, Method::Ifgt, Method::Auto] {
+            assert!(m.dual_tree_config(32, None).is_none(), "{m}");
+        }
+    }
+
+    #[test]
+    fn cost_model_regimes() {
+        let cm = CostModel::default();
+        let mk = |dim, n, h, scale| ProblemProfile {
+            dim,
+            n_queries: n,
+            n_references: n,
+            h,
+            epsilon: 0.01,
+            data_scale: scale,
+        };
+        // tiny problems: exhaustive
+        assert_eq!(cm.best_method(&mk(2, 100, 0.1, 0.2)), Method::Naive);
+        // local kernel: FD-only
+        assert_eq!(cm.best_method(&mk(2, 5000, 1e-4, 0.2)), Method::Dfdo);
+        // flat kernel: FD-only again
+        assert_eq!(cm.best_method(&mk(2, 5000, 100.0, 0.2)), Method::Dfdo);
+        // contested middle band: the paper's algorithm
+        assert_eq!(cm.best_method(&mk(2, 5000, 0.05, 0.2)), Method::Dito);
+        // high-D middle band still DITO (the O(Dᵖ) selling point)
+        assert_eq!(cm.best_method(&mk(16, 5000, 0.1, 0.2)), Method::Dito);
+        // degenerate zero spread must not divide by zero
+        assert_eq!(cm.best_method(&mk(2, 5000, 0.5, 0.0)), Method::Dito);
+    }
+}

@@ -1,0 +1,31 @@
+//! The crate's front door: a prepare-once / evaluate-many [`Session`]
+//! over all seven Gaussian-summation engines, with automatic method
+//! selection.
+//!
+//! The paper's central performance lesson is that the hierarchical
+//! data structure should be amortized across many evaluations, and
+//! that the best operator is problem-dependent. This layer exposes
+//! both halves as one API:
+//!
+//! * [`Session::prepare`] builds every dataset-dependent structure
+//!   once (kd-tree eagerly; FGT grid frame, IFGT clustering plans and
+//!   exhaustive truth lazily, memoized per session);
+//! * [`Session::evaluate`] / [`Session::evaluate_batch`] answer
+//!   [`EvalRequest`]s — monochromatic or with explicit queries, any
+//!   [`Method`] including [`Method::Auto`] (resolved by the promoted
+//!   [`CostModel`]), with the FGT τ-halving and IFGT K-doubling
+//!   verification loops ([`tuning`]) run inside the session so every
+//!   caller gets ε-verified answers.
+//!
+//! Every pre-existing call path — `kde::*`, `coordinator::run_sweep`,
+//! the CLI, the examples and the paper benches — routes through here;
+//! the one-shot [`crate::algo::GaussSum`] impls and the raw
+//! [`crate::algo::SweepEngine`] remain as thin compatibility shims
+//! underneath (prefer a `Session` in new code).
+
+pub mod method;
+pub mod session;
+pub mod tuning;
+
+pub use method::{CostModel, Method, ProblemProfile};
+pub use session::{EvalRequest, Evaluation, PrepareOptions, Session};

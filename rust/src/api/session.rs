@@ -1,0 +1,645 @@
+//! The [`Session`] — prepare a dataset once, answer many
+//! Gaussian-summation requests.
+//!
+//! `prepare` does all dataset-dependent, h-independent work eagerly:
+//! the kd-tree (with its permuted SoA point storage and cached node
+//! geometry) via the embedded [`SweepEngine`], plus the data-spread
+//! statistic the [`CostModel`] compares bandwidths against. Everything
+//! else is built lazily on first use and memoized per session:
+//!
+//! * per-bandwidth Hermite **moments** (the engine's bounded memo),
+//! * per-bandwidth **exhaustive truth** (needed to ε-verify FGT/IFGT
+//!   and to serve [`Method::Naive`]; computed at most once per h, with
+//!   concurrent requesters blocking on the first computation instead
+//!   of duplicating it),
+//! * the **FGT grid frame** (joint bounding box),
+//! * **IFGT clustering plans** per (K, seed).
+//!
+//! [`Session::evaluate`] answers one [`EvalRequest`];
+//! [`Session::evaluate_batch`] fans a request list out over the scoped
+//! thread pool (each request evaluated single-threaded, so batch
+//! results are bit-identical to sequential evaluation in any worker
+//! count). Monochromatic dual-tree requests run on the prepared tree;
+//! requests with an explicit query matrix reuse the prepared reference
+//! tree and moment memo and build only a query tree; requests with a
+//! per-request weight override fall back to a one-shot prepare (the
+//! prepared tree bakes the session weights into its node statistics).
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use crate::algo::dualtree::{run_dualtree, SweepEngine, DEFAULT_MOMENT_CACHE_CAPACITY};
+use crate::algo::fgt::GridFrame;
+use crate::algo::ifgt::IfgtPlan;
+use crate::algo::naive::Naive;
+use crate::algo::{AlgoError, GaussSum, GaussSumProblem, RunStats};
+use crate::geometry::Matrix;
+use crate::util::stats;
+use crate::util::timer::time_it;
+
+use super::method::{CostModel, Method, ProblemProfile};
+use super::tuning;
+
+/// Preparation-time knobs. The defaults match the paper protocol and
+/// every pre-session call path (leaf 32, one thread, unit weights).
+#[derive(Clone, Debug)]
+pub struct PrepareOptions {
+    /// kd-tree leaf size (also used for per-request query trees).
+    pub leaf_size: usize,
+    /// Worker threads for [`Session::evaluate`] (across query subtrees)
+    /// and [`Session::evaluate_batch`] (across requests). One thread
+    /// reproduces sequential evaluation bit-for-bit.
+    pub threads: usize,
+    /// Per-reference weights baked into the prepared tree (`None` =
+    /// unit weights, the paper's KDE setting).
+    pub weights: Option<Vec<f64>>,
+    /// Capacity of the per-bandwidth Hermite-moment memo.
+    pub moment_cache_capacity: usize,
+    /// Capacity of the per-bandwidth exhaustive-truth memo. Size it to
+    /// at least the number of distinct bandwidths a sweep will touch
+    /// (the coordinator does) — an evicted entry costs a repeated
+    /// O(N·M) run on the next request for that h.
+    pub truth_cache_capacity: usize,
+    /// Thresholds behind [`Method::Auto`].
+    pub cost_model: CostModel,
+}
+
+impl Default for PrepareOptions {
+    fn default() -> Self {
+        PrepareOptions {
+            leaf_size: 32,
+            threads: 1,
+            weights: None,
+            moment_cache_capacity: DEFAULT_MOMENT_CACHE_CAPACITY,
+            truth_cache_capacity: DEFAULT_TRUTH_CACHE_CAPACITY,
+            cost_model: CostModel::default(),
+        }
+    }
+}
+
+/// One summation request against a prepared [`Session`].
+#[derive(Copy, Clone, Debug)]
+pub struct EvalRequest<'a> {
+    /// Explicit query matrix, or `None` for the monochromatic setting
+    /// (queries = the session's reference data, the paper's KDE case).
+    pub queries: Option<&'a Matrix>,
+    /// Per-request weight override. Dual-tree methods fall back to a
+    /// one-shot tree build for such requests (the prepared tree bakes
+    /// the session weights in); prefer [`PrepareOptions::weights`] for
+    /// weighted workloads that should amortize.
+    pub weights: Option<&'a [f64]>,
+    /// Bandwidth h of the Gaussian kernel.
+    pub h: f64,
+    /// Relative error tolerance ε.
+    pub epsilon: f64,
+    /// Algorithm, or [`Method::Auto`] (the default) to let the
+    /// session's cost model choose.
+    pub method: Method,
+    /// Override the paper's PLIMIT-per-dimension schedule (dual-tree
+    /// series variants only).
+    pub plimit: Option<usize>,
+}
+
+impl<'a> EvalRequest<'a> {
+    /// A monochromatic (KDE) request with automatic method selection.
+    pub fn kde(h: f64, epsilon: f64) -> Self {
+        EvalRequest { queries: None, weights: None, h, epsilon, method: Method::Auto, plimit: None }
+    }
+
+    pub fn with_method(mut self, method: Method) -> Self {
+        self.method = method;
+        self
+    }
+
+    pub fn with_queries(mut self, queries: &'a Matrix) -> Self {
+        self.queries = Some(queries);
+        self
+    }
+
+    pub fn with_weights(mut self, weights: &'a [f64]) -> Self {
+        self.weights = Some(weights);
+        self
+    }
+
+    pub fn with_plimit(mut self, plimit: usize) -> Self {
+        self.plimit = Some(plimit);
+        self
+    }
+}
+
+/// An answered request: per-query sums in the original row order, the
+/// run's counters, the *resolved* method (`Auto` never appears here),
+/// and — for the verified paths (Naive, FGT, IFGT) — the measured max
+/// relative error. Dual-tree answers carry `rel_err: None`: their ε
+/// bound holds by construction, so no exhaustive verification is run.
+#[derive(Clone, Debug)]
+pub struct Evaluation {
+    pub sums: Vec<f64>,
+    pub stats: RunStats,
+    pub method: Method,
+    pub rel_err: Option<f64>,
+}
+
+/// Insertion-order-bounded memo backing the session's truth and
+/// clustering-plan caches — deliberately the same capacity/FIFO
+/// eviction policy as the engine's `MomentCache` (kept separate: that
+/// one also owns hit/miss counters and its own locking discipline).
+struct BoundedMemo<K, V> {
+    map: HashMap<K, (u64, V)>,
+    next_stamp: u64,
+    capacity: usize,
+}
+
+impl<K: Eq + Hash + Copy, V: Clone> BoundedMemo<K, V> {
+    fn new(capacity: usize) -> Self {
+        BoundedMemo { map: HashMap::new(), next_stamp: 0, capacity: capacity.max(1) }
+    }
+
+    fn get(&mut self, key: &K) -> Option<V> {
+        self.map.get(key).map(|(_, v)| v.clone())
+    }
+
+    fn insert(&mut self, key: K, value: V) {
+        if let Some(slot) = self.map.get_mut(&key) {
+            slot.1 = value;
+            return;
+        }
+        while self.map.len() + 1 > self.capacity {
+            let oldest = self.map.iter().min_by_key(|(_, (s, _))| *s).map(|(k, _)| *k);
+            match oldest {
+                Some(k) => {
+                    self.map.remove(&k);
+                }
+                None => break,
+            }
+        }
+        self.map.insert(key, (self.next_stamp, value));
+        self.next_stamp += 1;
+    }
+}
+
+/// One bandwidth's exhaustive truth: computed under the cell lock so a
+/// concurrent second requester blocks and reuses instead of duplicating
+/// the O(N²) run — this is what lets the coordinator schedule truth
+/// *inside* its worker pool.
+#[derive(Default)]
+struct TruthCell {
+    slot: Mutex<Option<(Arc<Vec<f64>>, f64)>>,
+}
+
+/// Default count of distinct bandwidths whose exhaustive truth stays
+/// memoized — comfortably above the paper's 7-multiplier sweeps and the
+/// 2×13-request LSCV grids.
+pub const DEFAULT_TRUTH_CACHE_CAPACITY: usize = 64;
+
+/// Distinct (K, seed) IFGT clustering plans kept live.
+const IFGT_PLAN_CACHE_CAPACITY: usize = 16;
+
+/// A dataset prepared for repeated Gaussian-summation evaluation — the
+/// crate's front door (see DESIGN.md for the lifecycle diagram).
+///
+/// ```no_run
+/// use fastgauss::api::{EvalRequest, Method, PrepareOptions, Session};
+/// let data = fastgauss::data::synthetic::astro2d(10_000, 42);
+/// let session = Session::prepare(&data, PrepareOptions::default());
+/// // one request, automatic method selection, guaranteed ε
+/// let ans = session.evaluate(&EvalRequest::kde(0.05, 0.01)).unwrap();
+/// println!("G(x_0) = {} via {}", ans.sums[0], ans.method);
+/// // a bandwidth sweep amortized across the prepared state
+/// let reqs: Vec<_> = [0.01, 0.05, 0.25]
+///     .iter()
+///     .map(|&h| EvalRequest::kde(h, 0.01).with_method(Method::Dito))
+///     .collect();
+/// for ans in session.evaluate_batch(&reqs) {
+///     println!("{}", ans.unwrap().sums[0]);
+/// }
+/// assert_eq!(session.tree_builds(), 1); // everything shared one build
+/// ```
+pub struct Session<'d> {
+    data: &'d Matrix,
+    weights: Option<Vec<f64>>,
+    leaf_size: usize,
+    threads: usize,
+    cost_model: CostModel,
+    data_scale: f64,
+    prep_secs: f64,
+    engine: SweepEngine,
+    grid_frame: Mutex<Option<Arc<GridFrame>>>,
+    ifgt_plans: Mutex<BoundedMemo<(usize, u64), Arc<IfgtPlan>>>,
+    truth: Mutex<BoundedMemo<u64, Arc<TruthCell>>>,
+}
+
+impl<'d> Session<'d> {
+    /// Build all eager dataset-dependent state: the kd-tree (one build,
+    /// amortized over every evaluation this session answers) and the
+    /// data-spread statistic for [`Method::Auto`].
+    pub fn prepare(data: &'d Matrix, opts: PrepareOptions) -> Self {
+        let PrepareOptions {
+            leaf_size,
+            threads,
+            weights,
+            moment_cache_capacity,
+            truth_cache_capacity,
+            cost_model,
+        } = opts;
+        let (engine, prep_secs) = time_it(|| {
+            // placeholder h/ε: prepare ignores them by construction
+            let problem = match &weights {
+                None => GaussSumProblem::kde(data, 1.0, 1.0),
+                Some(w) => {
+                    let mut p = GaussSumProblem::new(data, data, Some(w), 1.0, 1.0);
+                    p.monochromatic = true;
+                    p
+                }
+            };
+            SweepEngine::prepare(&problem, leaf_size)
+                .with_threads(threads)
+                .with_moment_cache_capacity(moment_cache_capacity)
+        });
+        let data_scale = stats::mean(&data.col_std());
+        Session {
+            data,
+            weights,
+            leaf_size,
+            threads: threads.max(1),
+            cost_model,
+            data_scale,
+            prep_secs,
+            engine,
+            grid_frame: Mutex::new(None),
+            ifgt_plans: Mutex::new(BoundedMemo::new(IFGT_PLAN_CACHE_CAPACITY)),
+            truth: Mutex::new(BoundedMemo::new(truth_cache_capacity)),
+        }
+    }
+
+    /// [`prepare`](Session::prepare) with defaults — the paper's KDE
+    /// setting on one dataset.
+    pub fn kde(data: &'d Matrix) -> Self {
+        Self::prepare(data, PrepareOptions::default())
+    }
+
+    /// The reference data this session was prepared on.
+    pub fn data(&self) -> &'d Matrix {
+        self.data
+    }
+
+    pub fn dim(&self) -> usize {
+        self.data.cols()
+    }
+
+    /// Number of reference points (= query points in the monochromatic
+    /// setting).
+    pub fn num_points(&self) -> usize {
+        self.data.rows()
+    }
+
+    /// Whether the session carries unit weights (LSCV requires this).
+    pub fn is_unweighted(&self) -> bool {
+        self.weights.is_none()
+    }
+
+    /// Seconds spent in [`prepare`](Session::prepare).
+    pub fn prepare_secs(&self) -> f64 {
+        self.prep_secs
+    }
+
+    /// kd-tree constructions performed by `prepare` — constant over any
+    /// number of evaluations (per-request query trees are reported in
+    /// each answer's `stats.tree_builds` instead).
+    pub fn tree_builds(&self) -> u64 {
+        self.engine.tree_builds()
+    }
+
+    /// Mean per-dimension standard deviation of the data — the h
+    /// yardstick behind [`Method::Auto`].
+    pub fn data_scale(&self) -> f64 {
+        self.data_scale
+    }
+
+    /// The embedded two-phase dual-tree engine (lower-level API; kept
+    /// public for callers that want `evaluate_grid`-style access).
+    pub fn engine(&self) -> &SweepEngine {
+        &self.engine
+    }
+
+    /// The problem-level profile [`Method::Auto`] is resolved from.
+    pub fn profile(&self, req: &EvalRequest<'_>) -> ProblemProfile {
+        ProblemProfile {
+            dim: self.data.cols(),
+            n_queries: req.queries.map_or(self.data.rows(), |q| q.rows()),
+            n_references: self.data.rows(),
+            h: req.h,
+            epsilon: req.epsilon,
+            data_scale: self.data_scale,
+        }
+    }
+
+    /// The concrete method `req` will run: `req.method` itself, or the
+    /// cost model's pick when it is [`Method::Auto`].
+    pub fn resolve(&self, req: &EvalRequest<'_>) -> Method {
+        match req.method {
+            Method::Auto => self.cost_model.best_method(&self.profile(req)),
+            m => m,
+        }
+    }
+
+    /// Answer one request. Panics on malformed requests (non-positive
+    /// h/ε, dimension mismatch, non-positive weights) — the same
+    /// contract as [`GaussSumProblem::new`]; algorithmic failure modes
+    /// (the paper's X/∞) come back as [`AlgoError`].
+    pub fn evaluate(&self, req: &EvalRequest<'_>) -> Result<Evaluation, AlgoError> {
+        self.evaluate_with_threads(req, self.threads)
+    }
+
+    /// Answer a request list, fanned out over the session's thread
+    /// count. Each request is evaluated with a single inner thread, so
+    /// the results are bit-identical to calling
+    /// [`evaluate`](Session::evaluate) sequentially on a one-thread
+    /// session, in any worker count. Per-request failures (e.g. an FGT
+    /// X cell) come back in place; they do not abort the batch.
+    pub fn evaluate_batch(
+        &self,
+        requests: &[EvalRequest<'_>],
+    ) -> Vec<Result<Evaluation, AlgoError>> {
+        let workers = self.threads.min(requests.len()).max(1);
+        if workers == 1 {
+            return requests.iter().map(|r| self.evaluate_with_threads(r, 1)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, Result<Evaluation, AlgoError>)>();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let next = &next;
+                scope.spawn(move || loop {
+                    let k = next.fetch_add(1, Ordering::Relaxed);
+                    if k >= requests.len() {
+                        break;
+                    }
+                    let _ = tx.send((k, self.evaluate_with_threads(&requests[k], 1)));
+                });
+            }
+            drop(tx);
+        });
+        let mut slots: Vec<Option<Result<Evaluation, AlgoError>>> =
+            (0..requests.len()).map(|_| None).collect();
+        for (k, res) in rx.into_iter() {
+            slots[k] = Some(res);
+        }
+        slots.into_iter().map(|s| s.expect("batch worker lost a request")).collect()
+    }
+
+    fn evaluate_with_threads(
+        &self,
+        req: &EvalRequest<'_>,
+        threads: usize,
+    ) -> Result<Evaluation, AlgoError> {
+        assert!(req.h > 0.0 && req.h.is_finite(), "bandwidth must be positive");
+        assert!(req.epsilon > 0.0, "epsilon must be positive");
+        if let Some(q) = req.queries {
+            assert_eq!(q.cols(), self.data.cols(), "query dimension mismatch");
+        }
+        match self.resolve(req) {
+            Method::Naive => self.eval_naive(req),
+            Method::Fgt => self.eval_fgt(req),
+            Method::Ifgt => self.eval_ifgt(req),
+            Method::Auto => unreachable!("resolve() returns a concrete method"),
+            dual => self.eval_dualtree(dual, req, threads),
+        }
+    }
+
+    /// The memoized exhaustive truth for one monochromatic bandwidth
+    /// (session weights): `(sums, compute seconds, was_cached)`. The
+    /// first requester computes under the per-bandwidth cell lock;
+    /// concurrent requesters block on that cell and then share the
+    /// result — whole different bandwidths never serialize on each
+    /// other.
+    pub fn exact_sums(&self, h: f64, epsilon: f64) -> (Arc<Vec<f64>>, f64, bool) {
+        let cell = {
+            let mut truth = self.truth.lock().unwrap();
+            match truth.get(&h.to_bits()) {
+                Some(c) => c,
+                None => {
+                    let c = Arc::new(TruthCell::default());
+                    truth.insert(h.to_bits(), Arc::clone(&c));
+                    c
+                }
+            }
+        };
+        let mut slot = cell.slot.lock().unwrap();
+        match &*slot {
+            Some((sums, secs)) => (Arc::clone(sums), *secs, true),
+            None => {
+                let problem = self.mono_problem(h, epsilon);
+                let (res, secs) =
+                    time_it(|| Naive::new().run(&problem).expect("exhaustive run cannot fail"));
+                let sums = Arc::new(res.sums);
+                *slot = Some((Arc::clone(&sums), secs));
+                (sums, secs, false)
+            }
+        }
+    }
+
+    // ---- per-method evaluation paths ----
+
+    fn eval_dualtree(
+        &self,
+        method: Method,
+        req: &EvalRequest<'_>,
+        threads: usize,
+    ) -> Result<Evaluation, AlgoError> {
+        let cfg = method
+            .dual_tree_config(self.leaf_size, req.plimit)
+            .expect("eval_dualtree called with a dual-tree method");
+        let (res, secs) = if req.weights.is_some() {
+            // per-request weight override: the prepared tree bakes the
+            // session weights into its node statistics, so this request
+            // pays a one-shot prepare (documented trade-off)
+            let problem = self.problem(req);
+            time_it(|| run_dualtree(&problem, &cfg))
+        } else if let Some(q) = req.queries {
+            time_it(|| {
+                self.engine.evaluate_queries_with_threads(
+                    q,
+                    self.leaf_size,
+                    req.h,
+                    req.epsilon,
+                    &cfg,
+                    threads,
+                )
+            })
+        } else {
+            time_it(|| self.engine.evaluate_with_threads(req.h, req.epsilon, &cfg, threads))
+        };
+        let mut res = res?;
+        res.stats.total_secs = secs;
+        Ok(Evaluation { sums: res.sums, stats: res.stats, method, rel_err: None })
+    }
+
+    fn eval_naive(&self, req: &EvalRequest<'_>) -> Result<Evaluation, AlgoError> {
+        let n_refs = self.data.rows();
+        if req.queries.is_none() && req.weights.is_none() {
+            let (sums, secs, cached) = self.exact_sums(req.h, req.epsilon);
+            let stats = RunStats {
+                base_point_pairs: (n_refs * n_refs) as u64,
+                session_cache_hits: cached as u64,
+                session_cache_misses: !cached as u64,
+                // on a cache hit this is the original compute time — the
+                // honest cost of the answer, not of the lookup
+                total_secs: secs,
+                ..Default::default()
+            };
+            return Ok(Evaluation {
+                sums: (*sums).clone(),
+                stats,
+                method: Method::Naive,
+                rel_err: Some(0.0),
+            });
+        }
+        let problem = self.problem(req);
+        let (res, secs) = time_it(|| Naive::new().run(&problem));
+        let mut res = res?;
+        res.stats.total_secs = secs;
+        Ok(Evaluation {
+            sums: res.sums,
+            stats: res.stats,
+            method: Method::Naive,
+            rel_err: Some(0.0),
+        })
+    }
+
+    fn eval_fgt(&self, req: &EvalRequest<'_>) -> Result<Evaluation, AlgoError> {
+        let problem = self.problem(req);
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        let frame = if req.queries.is_none() {
+            self.fgt_frame(&mut hits, &mut misses)
+        } else {
+            Arc::new(GridFrame::joint(problem.queries, problem.references))
+        };
+        let (exact, _truth_secs) = self.truth_for(&problem, req, &mut hits, &mut misses);
+        let outcome = tuning::fgt_halving(&problem, &frame, &exact, tuning::FGT_MAX_ATTEMPTS)?;
+        let mut res = outcome.result;
+        res.stats.total_secs = outcome.attempt_secs;
+        res.stats.session_cache_hits = hits;
+        res.stats.session_cache_misses = misses;
+        Ok(Evaluation {
+            sums: res.sums,
+            stats: res.stats,
+            method: Method::Fgt,
+            rel_err: Some(outcome.rel_err),
+        })
+    }
+
+    fn eval_ifgt(&self, req: &EvalRequest<'_>) -> Result<Evaluation, AlgoError> {
+        let problem = self.problem(req);
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        let (exact, truth_secs) = self.truth_for(&problem, req, &mut hits, &mut misses);
+        // tuning budget: a few multiples of the exhaustive time — past
+        // that, IFGT has lost by definition (paper's by-hand cutoff)
+        let budget_secs = (5.0 * truth_secs).max(2.0);
+        let (outcome, total_secs) = time_it(|| {
+            tuning::ifgt_doubling(&problem, &exact, tuning::IFGT_MAX_ROUNDS, budget_secs, |p| {
+                self.ifgt_plan(p.clusters, p.seed, &mut hits, &mut misses)
+            })
+        });
+        let outcome = outcome?;
+        let rel_err = outcome.rel_err;
+        let mut res = outcome.result;
+        res.stats.total_secs = total_secs;
+        res.stats.session_cache_hits = hits;
+        res.stats.session_cache_misses = misses;
+        Ok(Evaluation {
+            sums: res.sums,
+            stats: res.stats,
+            method: Method::Ifgt,
+            rel_err: Some(rel_err),
+        })
+    }
+
+    // ---- lazy session state ----
+
+    /// The request's problem view over the session data.
+    fn problem<'s>(&'s self, req: &'s EvalRequest<'_>) -> GaussSumProblem<'s> {
+        let weights = req.weights.or(self.weights.as_deref());
+        match req.queries {
+            Some(q) => GaussSumProblem::new(q, self.data, weights, req.h, req.epsilon),
+            None => {
+                let mut p = GaussSumProblem::new(self.data, self.data, weights, req.h, req.epsilon);
+                p.monochromatic = true;
+                p
+            }
+        }
+    }
+
+    fn mono_problem(&self, h: f64, epsilon: f64) -> GaussSumProblem<'_> {
+        let mut p = GaussSumProblem::new(self.data, self.data, self.weights.as_deref(), h, epsilon);
+        p.monochromatic = true;
+        p
+    }
+
+    /// Exhaustive truth for verification: the session memo for
+    /// monochromatic session-weight requests, a fresh run otherwise.
+    fn truth_for(
+        &self,
+        problem: &GaussSumProblem<'_>,
+        req: &EvalRequest<'_>,
+        hits: &mut u64,
+        misses: &mut u64,
+    ) -> (Arc<Vec<f64>>, f64) {
+        if req.queries.is_none() && req.weights.is_none() {
+            let (sums, secs, cached) = self.exact_sums(req.h, req.epsilon);
+            if cached {
+                *hits += 1;
+            } else {
+                *misses += 1;
+            }
+            (sums, secs)
+        } else {
+            let (res, secs) =
+                time_it(|| Naive::new().run(problem).expect("exhaustive run cannot fail"));
+            (Arc::new(res.sums), secs)
+        }
+    }
+
+    /// The lazily-built, session-cached FGT grid frame (monochromatic
+    /// requests only — bichromatic frames depend on the query set).
+    fn fgt_frame(&self, hits: &mut u64, misses: &mut u64) -> Arc<GridFrame> {
+        let mut slot = self.grid_frame.lock().unwrap();
+        match &*slot {
+            Some(f) => {
+                *hits += 1;
+                Arc::clone(f)
+            }
+            None => {
+                *misses += 1;
+                let f = Arc::new(GridFrame::joint(self.data, self.data));
+                *slot = Some(Arc::clone(&f));
+                f
+            }
+        }
+    }
+
+    /// The lazily-built, session-cached IFGT clustering plan for one
+    /// (K, seed). Computed outside the lock — racing computes of the
+    /// same key are identical, exactly like the engine's moment memo.
+    fn ifgt_plan(
+        &self,
+        clusters: usize,
+        seed: u64,
+        hits: &mut u64,
+        misses: &mut u64,
+    ) -> Arc<IfgtPlan> {
+        if let Some(p) = self.ifgt_plans.lock().unwrap().get(&(clusters, seed)) {
+            *hits += 1;
+            return p;
+        }
+        *misses += 1;
+        let plan = Arc::new(IfgtPlan::build(self.data, clusters, seed));
+        self.ifgt_plans.lock().unwrap().insert((clusters, seed), Arc::clone(&plan));
+        plan
+    }
+}

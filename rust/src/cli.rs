@@ -2,27 +2,33 @@
 //!
 //! ```text
 //! fastgauss table    [--dataset astro2d --n 5000 ...]   paper-style table
-//! fastgauss kde      [--dataset X --h 0|H --out f.csv]  density + LSCV h*
+//! fastgauss kde      [--dataset X --h 0|H --method auto --out f.csv]
+//!                                                       density + LSCV h*
 //! fastgauss datagen  [--dataset X --out f.csv]          write a dataset
 //! fastgauss selftest [--n 500]                          verify all engines
 //! fastgauss runtime  [--n 2000]                         PJRT artifact check
 //! ```
+//!
+//! Every command runs on the `api::Session` front door; `--method`
+//! (default `auto`) picks the summation engine for `kde`, with `auto`
+//! resolved per problem by the session's cost model.
 
 use crate::util::error::Result;
 use crate::{anyhow, bail};
 
-use crate::algo::dualtree::DualTreeConfig;
-use crate::algo::{max_relative_error, naive::Naive, GaussSum, GaussSumProblem, SweepEngine};
+use crate::api::{EvalRequest, Method, PrepareOptions, Session};
+use crate::algo::{max_relative_error, naive::Naive, GaussSum, GaussSumProblem};
 use crate::config::RunConfig;
 use crate::coordinator::{run_sweep, AlgoSpec, SweepConfig};
 use crate::data;
 use crate::kde::bandwidth::{log_grid, silverman};
-use crate::kde::lscv::select_bandwidth_engine;
+use crate::kde::lscv::select_bandwidth_session;
 
 const USAGE: &str = "usage: fastgauss <table|kde|datagen|selftest|runtime> [--option value ...]
 options: --dataset NAME --n N --seed S --epsilon E --algos a,b,c
-         --workers W --leaf-size L --multipliers m1,m2 --h H --out FILE
-         --config FILE";
+         --workers W --leaf-size L --multipliers m1,m2 --h H
+         --method naive|fgt|ifgt|dfd|dfdo|dfto|dito|auto
+         --out FILE --config FILE";
 
 /// Entry point used by `main.rs`. Returns the process exit code.
 pub fn run(args: &[String]) -> Result<()> {
@@ -56,24 +62,34 @@ fn load_dataset(cfg: &RunConfig) -> Result<data::Dataset> {
     }
 }
 
-fn pick_h_star(cfg: &RunConfig, ds: &data::Dataset) -> Result<f64> {
+fn session_for<'d>(cfg: &RunConfig, ds: &'d data::Dataset) -> Session<'d> {
+    Session::prepare(
+        &ds.points,
+        PrepareOptions { leaf_size: cfg.leaf_size, threads: cfg.workers, ..Default::default() },
+    )
+}
+
+/// LSCV around the Silverman pilot on a prepared session: one tree
+/// build for the whole grid, parallel across grid bandwidths, with the
+/// configured `--method` (default: automatic selection per bandwidth).
+fn pick_h_star(cfg: &RunConfig, session: &Session<'_>) -> Result<f64> {
     if cfg.bandwidth > 0.0 {
         return Ok(cfg.bandwidth);
     }
-    // LSCV around the Silverman pilot with the DITO variant on a
-    // prepared sweep engine: one tree build for the whole grid,
-    // parallel across grid bandwidths.
-    let pilot = silverman(&ds.points);
+    let pilot = silverman(session.data());
     let grid = log_grid(pilot, 0.1, 10.0, 9);
-    let engine = SweepEngine::for_kde(&ds.points, cfg.leaf_size).with_threads(cfg.workers);
-    let (h, _) = select_bandwidth_engine(&engine, &grid, cfg.epsilon, &DualTreeConfig::default())
+    let (h, _) = select_bandwidth_session(session, &grid, cfg.epsilon, cfg.method)
         .map_err(|e| anyhow!("LSCV failed: {e}"))?;
     Ok(h)
 }
 
 fn cmd_table(cfg: &RunConfig) -> Result<()> {
     let ds = load_dataset(cfg)?;
-    let h_star = pick_h_star(cfg, &ds)?;
+    let h_star = if cfg.bandwidth > 0.0 {
+        cfg.bandwidth
+    } else {
+        pick_h_star(cfg, &session_for(cfg, &ds))?
+    };
     let algorithms: Vec<AlgoSpec> = cfg
         .algorithms
         .iter()
@@ -99,15 +115,20 @@ fn cmd_table(cfg: &RunConfig) -> Result<()> {
 
 fn cmd_kde(cfg: &RunConfig) -> Result<()> {
     let ds = load_dataset(cfg)?;
-    let engine = crate::algo::dito::Dito::default();
-    let h = pick_h_star(cfg, &ds)?;
-    let dens = crate::kde::density_at_points(&ds.points, h, cfg.epsilon, &engine)
+    // one session serves the LSCV bandwidth search AND the final
+    // density pass — a single tree build end to end
+    let session = session_for(cfg, &ds);
+    let h = pick_h_star(cfg, &session)?;
+    let resolved = session.resolve(&EvalRequest::kde(h, cfg.epsilon).with_method(cfg.method));
+    let dens = crate::kde::density_at_points_session(&session, h, cfg.epsilon, cfg.method)
         .map_err(|e| anyhow!("{e}"))?;
     println!(
-        "dataset={} n={} D={} h={h:.6} mean_density={:.6e}",
+        "dataset={} n={} D={} h={h:.6} method={}({}) mean_density={:.6e}",
         ds.name,
         ds.len(),
         ds.dim(),
+        cfg.method.name(),
+        resolved.name(),
         crate::util::stats::mean(&dens)
     );
     if let Some(out) = &cfg.out {
@@ -132,28 +153,28 @@ fn cmd_datagen(cfg: &RunConfig) -> Result<()> {
 }
 
 fn cmd_selftest(cfg: &RunConfig) -> Result<()> {
-    use crate::algo::{dfd::Dfd, dfdo::Dfdo, dfto::Dfto, dito::Dito};
     let ds = load_dataset(cfg)?;
+    let session = session_for(cfg, &ds);
     let pilot = silverman(&ds.points);
     let mut ok = true;
     for mult in [1e-2, 1.0, 1e2] {
         let h = pilot * mult;
-        let p = GaussSumProblem::kde(&ds.points, h, cfg.epsilon);
-        let exact = Naive::new().run(&p).unwrap().sums;
-        let engines: Vec<Box<dyn GaussSum>> = vec![
-            Box::new(Dfd::new()),
-            Box::new(Dfdo::new()),
-            Box::new(Dfto::new()),
-            Box::new(Dito::default()),
-        ];
-        for e in engines {
-            let res = e.run(&p).map_err(|err| anyhow!("{}: {err}", e.name()))?;
+        let (exact, _, _) = session.exact_sums(h, cfg.epsilon);
+        let methods =
+            [Method::Dfd, Method::Dfdo, Method::Dfto, Method::Dito, Method::Auto];
+        for m in methods {
+            let req = EvalRequest::kde(h, cfg.epsilon).with_method(m);
+            let res = session.evaluate(&req).map_err(|err| anyhow!("{}: {err}", m.name()))?;
             let rel = max_relative_error(&res.sums, &exact);
             let pass = rel <= cfg.epsilon * (1.0 + 1e-9);
             ok &= pass;
+            let label = if m == Method::Auto {
+                format!("Auto({})", res.method.name())
+            } else {
+                m.name().to_string()
+            };
             println!(
-                "{:<6} h={h:<12.5} rel_err={rel:.2e}  {}",
-                e.name(),
+                "{label:<12} h={h:<12.5} rel_err={rel:.2e}  {}",
                 if pass { "OK" } else { "FAIL" }
             );
         }
@@ -209,6 +230,26 @@ mod tests {
             .map(|s| s.to_string())
             .collect();
         run(&args).unwrap();
+    }
+
+    #[test]
+    fn kde_with_auto_method_end_to_end() {
+        // --method auto exercises Session + cost-model resolution +
+        // LSCV through the batch API, end to end from the CLI
+        let args: Vec<String> =
+            ["kde", "--n", "200", "--dataset", "astro2d", "--method", "auto"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        run(&args).unwrap();
+    }
+
+    #[test]
+    fn kde_rejects_unknown_method_with_listing() {
+        let args: Vec<String> =
+            ["kde", "--method", "bogus"].iter().map(|s| s.to_string()).collect();
+        let err = run(&args).unwrap_err().to_string();
+        assert!(err.contains("auto") && err.contains("dito"), "{err}");
     }
 
     #[test]

@@ -4,8 +4,29 @@
 
 use std::path::Path;
 
+use crate::api::Method;
 use crate::util::error::{Context, Result};
 use crate::{anyhow, bail};
+
+/// Every option key `RunConfig::set` accepts (aliases joined by `|`),
+/// listed in unknown-key errors so typos are self-diagnosing.
+pub const VALID_KEYS: &[&str] = &[
+    "dataset",
+    "n",
+    "seed",
+    "epsilon|eps",
+    "algorithms|algos",
+    "workers",
+    "leaf-size|leaf_size",
+    "multipliers",
+    "bandwidth|h",
+    "method",
+    "out",
+    "config",
+];
+
+/// The method names `--method` / `--algos` accept.
+const VALID_METHODS: &str = "naive, fgt, ifgt, dfd, dfdo, dfto, dito, auto";
 
 /// Everything the CLI subcommands need.
 #[derive(Clone, Debug, PartialEq)]
@@ -24,6 +45,9 @@ pub struct RunConfig {
     pub multipliers: Vec<f64>,
     /// Explicit bandwidth (`0` = auto/Silverman-LSCV).
     pub bandwidth: f64,
+    /// Summation method for the kde command (default: automatic
+    /// selection by the session cost model).
+    pub method: Method,
     /// Output path for commands that write files.
     pub out: Option<String>,
 }
@@ -48,6 +72,7 @@ impl Default for RunConfig {
             leaf_size: 32,
             multipliers: vec![1e-3, 1e-2, 1e-1, 1.0, 1e1, 1e2, 1e3],
             bandwidth: 0.0,
+            method: Method::Auto,
             out: None,
         }
     }
@@ -62,10 +87,20 @@ impl RunConfig {
             "seed" => self.seed = value.parse().context("seed")?,
             "epsilon" | "eps" => self.epsilon = value.parse().context("epsilon")?,
             "algorithms" | "algos" => {
-                self.algorithms = value.split(',').map(|s| s.trim().to_string()).collect()
+                let parts: Vec<String> = value.split(',').map(|s| s.trim().to_string()).collect();
+                for p in &parts {
+                    if Method::parse(p).is_none() {
+                        bail!("unknown algorithm {p:?} (valid: {VALID_METHODS})");
+                    }
+                }
+                self.algorithms = parts;
             }
             "workers" => self.workers = value.parse().context("workers")?,
             "leaf-size" | "leaf_size" => self.leaf_size = value.parse().context("leaf size")?,
+            "method" => {
+                self.method = Method::parse(value)
+                    .ok_or_else(|| anyhow!("unknown method {value:?} (valid: {VALID_METHODS})"))?
+            }
             "multipliers" => {
                 self.multipliers = value
                     .split(',')
@@ -74,7 +109,14 @@ impl RunConfig {
             }
             "bandwidth" | "h" => self.bandwidth = value.parse().context("bandwidth")?,
             "out" => self.out = Some(value.to_string()),
-            other => bail!("unknown option --{other}"),
+            other => bail!(
+                "unknown option --{other} (valid: {})",
+                VALID_KEYS
+                    .iter()
+                    .map(|k| format!("--{k}"))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            ),
         }
         self.validate()
     }
@@ -118,15 +160,27 @@ impl RunConfig {
         Ok(())
     }
 
+    /// Parse-time validation: reject impossible settings with a clear
+    /// message instead of letting them fail as asserts deep inside the
+    /// engines.
     fn validate(&self) -> Result<()> {
         if self.n == 0 {
             bail!("n must be positive");
         }
         if !(self.epsilon > 0.0) {
-            bail!("epsilon must be positive");
+            bail!("epsilon must be positive (got {})", self.epsilon);
+        }
+        if self.workers == 0 {
+            bail!("workers must be >= 1 (got 0)");
+        }
+        if self.leaf_size == 0 {
+            bail!("leaf-size must be >= 1 (got 0)");
         }
         if self.multipliers.is_empty() {
             bail!("multipliers must be non-empty");
+        }
+        if let Some(&m) = self.multipliers.iter().find(|m| !(**m > 0.0 && m.is_finite())) {
+            bail!("multipliers must be positive and finite (got {m})");
         }
         Ok(())
     }
@@ -178,6 +232,43 @@ mod tests {
         assert!(c.set("multipliers", "").is_err());
         let args = vec!["--n".to_string()];
         assert!(c.apply_args(&args).is_err());
+    }
+
+    #[test]
+    fn unknown_key_error_lists_all_valid_keys() {
+        let mut c = RunConfig::default();
+        let msg = c.set("bogus", "1").unwrap_err().to_string();
+        for key in VALID_KEYS {
+            let first = key.split('|').next().unwrap();
+            assert!(msg.contains(first), "error must list --{first}: {msg}");
+        }
+    }
+
+    #[test]
+    fn method_key_parses_and_rejects_with_listing() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.method, Method::Auto, "auto must be the default");
+        c.set("method", "dito").unwrap();
+        assert_eq!(c.method, Method::Dito);
+        c.set("method", "AUTO").unwrap();
+        assert_eq!(c.method, Method::Auto);
+        let msg = c.set("method", "bogus").unwrap_err().to_string();
+        assert!(msg.contains("dito") && msg.contains("auto"), "{msg}");
+    }
+
+    #[test]
+    fn parse_time_bounds_checks() {
+        // fresh config per case: a failed set leaves its value behind
+        let msg = RunConfig::default().set("workers", "0").unwrap_err().to_string();
+        assert!(msg.contains(">= 1"), "{msg}");
+        let msg = RunConfig::default().set("leaf-size", "0").unwrap_err().to_string();
+        assert!(msg.contains(">= 1"), "{msg}");
+        assert!(RunConfig::default().set("multipliers", "1,0,10").is_err());
+        assert!(RunConfig::default().set("multipliers", "0.5,2").is_ok());
+        // algos validated at parse time, with the listing in the error
+        let msg = RunConfig::default().set("algos", "dito,bogus").unwrap_err().to_string();
+        assert!(msg.contains("bogus") && msg.contains("dfdo"), "{msg}");
+        assert!(RunConfig::default().set("algos", "auto,dito").is_ok());
     }
 
     #[test]

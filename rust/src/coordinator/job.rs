@@ -4,57 +4,12 @@
 use crate::algo::RunStats;
 use crate::data::Dataset;
 
-/// Which algorithm a sweep row runs.
-#[derive(Copy, Clone, Debug, PartialEq, Eq)]
-pub enum AlgoSpec {
-    Naive,
-    Fgt,
-    Ifgt,
-    Dfd,
-    Dfdo,
-    Dfto,
-    Dito,
-}
-
-impl AlgoSpec {
-    pub fn name(&self) -> &'static str {
-        match self {
-            AlgoSpec::Naive => "Naive",
-            AlgoSpec::Fgt => "FGT",
-            AlgoSpec::Ifgt => "IFGT",
-            AlgoSpec::Dfd => "DFD",
-            AlgoSpec::Dfdo => "DFDO",
-            AlgoSpec::Dfto => "DFTO",
-            AlgoSpec::Dito => "DITO",
-        }
-    }
-
-    /// The paper's six-row table order.
-    pub fn paper_order() -> Vec<AlgoSpec> {
-        vec![
-            AlgoSpec::Naive,
-            AlgoSpec::Fgt,
-            AlgoSpec::Ifgt,
-            AlgoSpec::Dfd,
-            AlgoSpec::Dfdo,
-            AlgoSpec::Dfto,
-            AlgoSpec::Dito,
-        ]
-    }
-
-    pub fn parse(s: &str) -> Option<AlgoSpec> {
-        match s.to_ascii_lowercase().as_str() {
-            "naive" => Some(AlgoSpec::Naive),
-            "fgt" => Some(AlgoSpec::Fgt),
-            "ifgt" => Some(AlgoSpec::Ifgt),
-            "dfd" => Some(AlgoSpec::Dfd),
-            "dfdo" => Some(AlgoSpec::Dfdo),
-            "dfto" => Some(AlgoSpec::Dfto),
-            "dito" => Some(AlgoSpec::Dito),
-            _ => None,
-        }
-    }
-}
+/// Which algorithm a sweep row runs — since the session front door
+/// unified method naming, this is simply [`crate::api::Method`] (rows
+/// may therefore also be `Auto`, resolved per cell by the session's
+/// cost model). The alias is kept so pre-session coordinator callers
+/// compile unchanged.
+pub use crate::api::Method as AlgoSpec;
 
 /// Configuration for one dataset's table sweep.
 #[derive(Clone, Debug)]
@@ -104,8 +59,10 @@ pub struct SweepResult {
     pub algorithms: Vec<AlgoSpec>,
     /// The Naive row (exhaustive truth timings, one per bandwidth).
     pub naive_secs: Vec<f64>,
-    /// One-time dual-tree preparation (kd-tree build) amortized over
-    /// every dual-tree cell of the table.
+    /// One-time session preparation (kd-tree build) amortized over the
+    /// whole table. Built even for sweeps without dual-tree rows: the
+    /// session's truth/frame/plan memos serve every cell, and the tree
+    /// cost is negligible next to a single exhaustive truth run.
     pub prep_secs: f64,
     pub cells: Vec<CellResult>,
 }

@@ -1,69 +1,54 @@
-//! The sweep coordinator — the L3 "leader" that reproduces the paper's
+//! The sweep coordinator — the "leader" that reproduces the paper's
 //! experiment protocol: for one dataset, run every algorithm at every
 //! bandwidth multiplier around h*, verify each cell against exhaustive
 //! truth, and render the paper-style table.
 //!
-//! Work is scheduled as (algorithm × bandwidth) cells on a small worker
-//! pool (std threads + channels; the protocol is embarrassingly
-//! parallel across cells once the shared exact sums are cached).
-//! FGT/IFGT cells embed the paper's parameter-tuning protocols: τ is
-//! halved until FGT meets ε; IFGT doubles K until verified or hopeless.
+//! The whole protocol runs on one prepared [`Session`]: the kd-tree is
+//! built once, cells share the per-bandwidth moment/truth/clustering
+//! memos, and the FGT τ-halving / IFGT K-doubling tuning live in the
+//! session (`api::tuning`), not here. Work is scheduled as
+//! (algorithm × bandwidth) cells on a small worker pool; the
+//! per-bandwidth exhaustive truth runs — formerly a *serial* pass the
+//! pool sat idle behind — are folded into the scheduled cells: the
+//! first worker that needs a bandwidth's truth computes it inside the
+//! pool, concurrent requesters of the same bandwidth block on that one
+//! computation, and other bandwidths proceed in parallel.
+//!
+//! Rows may also be [`AlgoSpec::Auto`] (= [`crate::api::Method::Auto`]):
+//! the cell resolves through the session's cost model before running.
 
 pub mod job;
 pub mod report;
 
 use std::sync::mpsc;
 
-use crate::algo::dualtree::{DualTreeConfig, SeriesKind};
-use crate::algo::{
-    fgt::Fgt, ifgt::ifgt_tuning_loop, max_relative_error, naive::Naive, AlgoError, GaussSum,
-    GaussSumProblem, SweepEngine,
-};
+use crate::api::{EvalRequest, PrepareOptions, Session};
+use crate::algo::{max_relative_error, AlgoError};
 use crate::util::timer::time_it;
 
 pub use job::{AlgoSpec, CellOutcome, CellResult, SweepConfig, SweepResult};
-
-/// The engine variant a dual-tree table row runs, or `None` for the
-/// non-dual-tree algorithms (Naive/FGT/IFGT).
-fn dual_tree_variant(spec: AlgoSpec, leaf_size: usize) -> Option<DualTreeConfig> {
-    let base = DualTreeConfig { leaf_size, ..Default::default() };
-    match spec {
-        AlgoSpec::Dfd => Some(DualTreeConfig { use_tokens: false, series: None, ..base }),
-        AlgoSpec::Dfdo => Some(DualTreeConfig { use_tokens: true, series: None, ..base }),
-        AlgoSpec::Dfto => {
-            Some(DualTreeConfig { series: Some(SeriesKind::OpdGrid), ..base })
-        }
-        AlgoSpec::Dito => Some(base),
-        AlgoSpec::Naive | AlgoSpec::Fgt | AlgoSpec::Ifgt => None,
-    }
-}
 
 /// Run the full table protocol for one dataset.
 pub fn run_sweep(cfg: &SweepConfig) -> SweepResult {
     let data = &cfg.dataset.points;
     let bandwidths: Vec<f64> = cfg.multipliers.iter().map(|m| m * cfg.h_star).collect();
 
-    // ---- exhaustive truth per bandwidth (timed → the Naive row) ----
-    let mut exact: Vec<Vec<f64>> = Vec::with_capacity(bandwidths.len());
-    let mut naive_secs: Vec<f64> = Vec::with_capacity(bandwidths.len());
-    for &h in &bandwidths {
-        let p = GaussSumProblem::kde(data, h, cfg.epsilon);
-        let (res, secs) = time_it(|| Naive::new().run(&p).unwrap());
-        exact.push(res.sums);
-        naive_secs.push(secs);
-    }
-
-    // ---- one tree build for the whole table: every dual-tree cell
-    // (all four variants × all bandwidths) shares this engine; skipped
-    // entirely when the sweep runs no dual-tree algorithm ----
-    let needs_engine =
-        cfg.algorithms.iter().any(|&a| dual_tree_variant(a, cfg.leaf_size).is_some());
-    let (engine, prep_secs) = if needs_engine {
-        let (e, secs) = time_it(|| SweepEngine::for_kde(data, cfg.leaf_size));
-        (Some(e), secs)
-    } else {
-        (None, 0.0)
-    };
+    // ---- one prepared session for the whole table: every cell (all
+    // algorithms × all bandwidths) shares its tree, moment memo, truth
+    // memo, FGT frame and IFGT clustering plans ----
+    let (session, prep_secs) = time_it(|| {
+        let defaults = PrepareOptions::default();
+        Session::prepare(
+            data,
+            PrepareOptions {
+                leaf_size: cfg.leaf_size,
+                // never evict a truth this sweep will revisit: each of
+                // the 7 algorithm rows verifies against every bandwidth
+                truth_cache_capacity: bandwidths.len().max(defaults.truth_cache_capacity),
+                ..defaults
+            },
+        )
+    });
 
     // ---- schedule the (algo × h) cells on a worker pool ----
     let jobs: Vec<(usize, usize)> = (0..cfg.algorithms.len())
@@ -78,26 +63,15 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepResult {
             let result_tx = result_tx.clone();
             let jobs = &jobs;
             let next = &next;
-            let exact = &exact;
             let bandwidths = &bandwidths;
-            let naive_secs = &naive_secs;
-            let engine = &engine;
+            let session = &session;
             scope.spawn(move || loop {
                 let k = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 if k >= jobs.len() {
                     break;
                 }
                 let (ai, bi) = jobs[k];
-                let cell = run_cell(
-                    cfg,
-                    engine.as_ref(),
-                    cfg.algorithms[ai],
-                    ai,
-                    bi,
-                    bandwidths[bi],
-                    &exact[bi],
-                    naive_secs[bi],
-                );
+                let cell = run_cell(cfg, session, cfg.algorithms[ai], ai, bi, bandwidths[bi]);
                 let _ = result_tx.send(cell);
             });
         }
@@ -106,6 +80,12 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepResult {
 
     let mut cells: Vec<CellResult> = result_rx.into_iter().collect();
     cells.sort_by_key(|c| (c.algo_index, c.bandwidth_index));
+
+    // The Naive row's timings, read back from the session's truth memo
+    // (every scheduled cell verified against it, so these are all warm;
+    // a sweep with no cells at all computes them here).
+    let naive_secs: Vec<f64> =
+        bandwidths.iter().map(|&h| session.exact_sums(h, cfg.epsilon).1).collect();
 
     SweepResult {
         dataset: cfg.dataset.name.clone(),
@@ -121,23 +101,21 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepResult {
     }
 }
 
-/// Run one (algorithm, bandwidth) cell with verification. Dual-tree
-/// cells evaluate on the shared prepared `engine` (zero tree builds);
-/// their reported time is the h-dependent evaluate only, with the
-/// one-time preparation in `SweepResult::prep_secs`.
-#[allow(clippy::too_many_arguments)]
+/// Run one (algorithm, bandwidth) cell with verification on the shared
+/// session. Dual-tree cells evaluate on the prepared tree (zero
+/// per-cell builds); their reported time is the h-dependent evaluate
+/// only, with the one-time preparation in `SweepResult::prep_secs`.
+/// FGT/IFGT cells run the session's verification-tuning and report the
+/// time the paper reports (successful attempt / whole tuning,
+/// respectively).
 fn run_cell(
     cfg: &SweepConfig,
-    engine: Option<&SweepEngine>,
+    session: &Session<'_>,
     spec: AlgoSpec,
     algo_index: usize,
     bandwidth_index: usize,
     h: f64,
-    exact: &[f64],
-    naive_secs: f64,
 ) -> CellResult {
-    let data = &cfg.dataset.points;
-    let problem = GaussSumProblem::kde(data, h, cfg.epsilon);
     let mut cell = CellResult {
         algo_index,
         bandwidth_index,
@@ -146,81 +124,32 @@ fn run_cell(
         stats: None,
     };
 
-    let finish = |cell: &mut CellResult,
-                  res: Result<(crate::algo::GaussSumResult, f64), AlgoError>| {
-        match res {
-            Ok((r, secs)) => {
-                let rel = max_relative_error(&r.sums, exact);
-                cell.rel_err = Some(rel);
-                if rel <= cfg.epsilon * (1.0 + 1e-9) {
-                    cell.outcome = CellOutcome::Time(secs);
-                } else {
-                    cell.outcome = CellOutcome::ToleranceUnreachable;
-                }
-                cell.stats = Some(r.stats);
-            }
-            Err(AlgoError::RamExhausted(_)) => cell.outcome = CellOutcome::RamExhausted,
-            Err(AlgoError::ToleranceUnreachable(_)) => {
-                cell.outcome = CellOutcome::ToleranceUnreachable
-            }
-        }
-    };
+    // Fold this bandwidth's exhaustive truth into the pool: the paper
+    // protocol verifies every cell, so fetch (= compute, first time)
+    // before running the algorithm.
+    let (exact, _naive_secs, _warm) = session.exact_sums(h, cfg.epsilon);
 
-    match spec {
-        AlgoSpec::Naive => {
-            let (r, secs) = time_it(|| Naive::new().run(&problem));
-            finish(&mut cell, r.map(|r| (r, secs)));
+    let req = EvalRequest::kde(h, cfg.epsilon).with_method(spec);
+    match session.evaluate(&req) {
+        Ok(ev) => {
+            let rel = match ev.rel_err {
+                Some(r) => r, // Naive/FGT/IFGT come back pre-verified
+                None => max_relative_error(&ev.sums, &exact),
+            };
+            cell.rel_err = Some(rel);
+            cell.outcome = if rel <= cfg.epsilon * (1.0 + 1e-9) {
+                CellOutcome::Time(ev.stats.total_secs)
+            } else {
+                CellOutcome::ToleranceUnreachable
+            };
+            cell.stats = Some(ev.stats);
         }
-        AlgoSpec::Dfd | AlgoSpec::Dfdo | AlgoSpec::Dfto | AlgoSpec::Dito => {
-            let variant = dual_tree_variant(spec, cfg.leaf_size).unwrap();
-            let engine = engine.expect("engine prepared whenever a dual-tree algo runs");
-            let (r, secs) = time_it(|| engine.evaluate(h, cfg.epsilon, &variant));
-            finish(&mut cell, r.map(|r| (r, secs)));
-        }
-        AlgoSpec::Fgt => {
-            // paper protocol: τ = ε, halve until the relative tolerance
-            // holds (verified against exact); report the successful run.
-            let mut tau = cfg.epsilon;
-            let mut attempts = 0;
-            loop {
-                attempts += 1;
-                let (r, secs) = time_it(|| Fgt::new(tau).run(&problem));
-                match r {
-                    Err(e) => {
-                        finish(&mut cell, Err(e));
-                        break;
-                    }
-                    Ok(r) => {
-                        let rel = max_relative_error(&r.sums, exact);
-                        if rel <= cfg.epsilon * (1.0 + 1e-9) {
-                            cell.rel_err = Some(rel);
-                            cell.outcome = CellOutcome::Time(secs);
-                            cell.stats = Some(r.stats);
-                            break;
-                        }
-                        if attempts >= 20 {
-                            cell.rel_err = Some(rel);
-                            cell.outcome = CellOutcome::ToleranceUnreachable;
-                            break;
-                        }
-                        tau *= 0.5;
-                    }
-                }
-            }
-        }
-        AlgoSpec::Ifgt => {
-            // tuning budget: a few multiples of the exhaustive time —
-            // past that, IFGT has lost by definition (paper's by-hand cutoff)
-            let budget = (5.0 * naive_secs).max(2.0);
-            let (r, secs) = time_it(|| ifgt_tuning_loop(&problem, exact, 8, budget));
-            match r {
-                Ok((res, _params)) => {
-                    cell.rel_err = Some(max_relative_error(&res.sums, exact));
-                    cell.outcome = CellOutcome::Time(secs);
-                    cell.stats = Some(res.stats);
-                }
-                Err(e) => finish(&mut cell, Err(e)),
-            }
+        Err(AlgoError::RamExhausted(_)) => cell.outcome = CellOutcome::RamExhausted,
+        Err(AlgoError::ToleranceUnreachable(_)) => {
+            // no result was produced, so rel_err stays None (an FGT cell
+            // that exhausts its τ-halvings reports the last measured rel
+            // only in the error message — its sums are discarded)
+            cell.outcome = CellOutcome::ToleranceUnreachable
         }
     }
     cell
@@ -288,12 +217,40 @@ mod tests {
         assert!(res.prep_secs >= 0.0);
         for c in &res.cells {
             let spec = res.algorithms[c.algo_index];
-            if dual_tree_variant(spec, cfg.leaf_size).is_some() {
-                // evaluated on the shared engine → zero per-cell builds
+            if spec.is_dual_tree() {
+                // evaluated on the shared session → zero per-cell builds
                 let stats = c.stats.as_ref().expect("dual-tree cell must have stats");
                 assert_eq!(stats.tree_builds, 0, "{} rebuilt its tree", spec.name());
             }
         }
+    }
+
+    #[test]
+    fn auto_rows_resolve_and_verify() {
+        let ds = data::by_name("astro2d", 400, 13).unwrap();
+        let h = silverman(&ds.points);
+        let cfg = SweepConfig {
+            dataset: ds,
+            epsilon: 0.01,
+            h_star: h,
+            // spans the FD-only and the series regimes of the cost model
+            multipliers: vec![1e-3, 1.0],
+            algorithms: vec![AlgoSpec::Auto],
+            workers: 2,
+            leaf_size: 16,
+        };
+        let res = run_sweep(&cfg);
+        assert_eq!(res.cells.len(), 2);
+        for c in &res.cells {
+            assert!(
+                matches!(c.outcome, CellOutcome::Time(_)),
+                "auto cell failed: {:?}",
+                c.outcome
+            );
+            assert!(c.rel_err.unwrap() <= 0.01 * (1.0 + 1e-9));
+        }
+        assert_eq!(res.naive_secs.len(), 2, "truth must be recorded per bandwidth");
+        assert!(res.naive_secs.iter().all(|&s| s > 0.0));
     }
 
     #[test]

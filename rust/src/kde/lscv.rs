@@ -12,13 +12,17 @@
 //! with S_h = Σ_i Σ_j K_h(‖x_i−x_j‖) the self-included summation both
 //! engines already compute.
 //!
-//! Two evaluation paths:
-//! * [`lscv_score`]/[`select_bandwidth`] run any [`GaussSum`] engine and
-//!   rebuild its data structures per call — fine for one-off scores;
+//! Three evaluation paths:
+//! * [`lscv_score_session`]/[`select_bandwidth_session`] — the front
+//!   door: a prepared [`Session`], any [`Method`] (incl. `Auto`), the
+//!   whole grid batched through [`Session::evaluate_batch`];
 //! * [`lscv_score_engine`]/[`select_bandwidth_engine`] run a prepared
-//!   [`SweepEngine`], so the whole grid shares a single kd-tree build
-//!   and the sweep parallelizes across grid bandwidths.
+//!   [`SweepEngine`] directly (the dual-tree layer the session embeds);
+//! * [`lscv_score`]/[`select_bandwidth`] run any [`GaussSum`] engine and
+//!   rebuild its data structures per call — deprecated shims for
+//!   one-off scores and engine mocks.
 
+use crate::api::{EvalRequest, Method, Session};
 use crate::algo::dualtree::DualTreeConfig;
 use crate::algo::{AlgoError, GaussSum, GaussSumProblem, SweepEngine};
 use crate::geometry::Matrix;
@@ -120,6 +124,60 @@ pub fn select_bandwidth(
     for &h in grid {
         scores.push(lscv_score(data, h, epsilon, engine)?);
     }
+    Ok((pick_best(grid, &scores)?, scores))
+}
+
+/// The LSCV score for one bandwidth through the session front door:
+/// two summations against the session's prepared state, any
+/// [`Method`] (including `Auto`, resolved per bandwidth).
+pub fn lscv_score_session(
+    session: &Session<'_>,
+    h: f64,
+    epsilon: f64,
+    method: Method,
+) -> Result<f64, AlgoError> {
+    assert!(session.is_unweighted(), "LSCV is defined for unweighted KDE");
+    let n = session.num_points() as f64;
+    let d = session.dim();
+    let h2 = std::f64::consts::SQRT_2 * h;
+    let s2: f64 =
+        session.evaluate(&EvalRequest::kde(h2, epsilon).with_method(method))?.sums.iter().sum();
+    let s1: f64 =
+        session.evaluate(&EvalRequest::kde(h, epsilon).with_method(method))?.sums.iter().sum();
+    Ok(score_from_sums(n, d, h, s1, s2))
+}
+
+/// Evaluate LSCV over a bandwidth grid on a prepared [`Session`]: the
+/// 2·G summations (each grid h and its √2·h companion) go through one
+/// [`Session::evaluate_batch`] call, parallel across requests with the
+/// session's thread count, zero further tree builds. Scores are
+/// bit-identical to [`select_bandwidth_engine`] for the corresponding
+/// dual-tree method.
+pub fn select_bandwidth_session(
+    session: &Session<'_>,
+    grid: &[f64],
+    epsilon: f64,
+    method: Method,
+) -> Result<(f64, Vec<f64>), AlgoError> {
+    assert!(!grid.is_empty());
+    assert!(session.is_unweighted(), "LSCV is defined for unweighted KDE");
+    let n = session.num_points() as f64;
+    let d = session.dim();
+    let grid2: Vec<f64> = grid.iter().map(|&h| std::f64::consts::SQRT_2 * h).collect();
+    let requests: Vec<EvalRequest<'static>> = grid
+        .iter()
+        .chain(grid2.iter())
+        .map(|&h| EvalRequest::kde(h, epsilon).with_method(method))
+        .collect();
+    let mut sums = Vec::with_capacity(requests.len());
+    for res in session.evaluate_batch(&requests) {
+        sums.push(res?.sums.iter().sum::<f64>());
+    }
+    let scores: Vec<f64> = grid
+        .iter()
+        .enumerate()
+        .map(|(i, &h)| score_from_sums(n, d, h, sums[i], sums[grid.len() + i]))
+        .collect();
     Ok((pick_best(grid, &scores)?, scores))
 }
 
@@ -264,6 +322,38 @@ mod tests {
         for (a, b) in scores_rebuild.iter().zip(&scores_engine) {
             assert!((a - b).abs() <= 1e-12 * a.abs().max(1.0), "{a} vs {b}");
         }
+    }
+
+    /// The session sweep must reproduce the engine sweep bit-for-bit
+    /// (same single-threaded per-h code path underneath).
+    #[test]
+    fn session_sweep_matches_engine_sweep() {
+        use crate::api::{PrepareOptions, Session};
+        let mut rng = Pcg32::new(147);
+        let data = Matrix::from_rows(
+            &(0..250)
+                .map(|_| vec![0.5 + 0.07 * rng.normal(), 0.5 + 0.05 * rng.normal()])
+                .collect::<Vec<_>>(),
+        );
+        let pilot = silverman(&data);
+        let grid = log_grid(pilot, 0.1, 10.0, 5);
+        let engine = SweepEngine::for_kde(&data, 32).with_threads(2);
+        let (h_engine, scores_engine) =
+            select_bandwidth_engine(&engine, &grid, 1e-4, &DualTreeConfig::default()).unwrap();
+        let session =
+            Session::prepare(&data, PrepareOptions { threads: 2, ..Default::default() });
+        let (h_session, scores_session) =
+            select_bandwidth_session(&session, &grid, 1e-4, Method::Dito).unwrap();
+        assert_eq!(h_engine, h_session);
+        assert_eq!(scores_engine, scores_session, "session sweep diverged from engine sweep");
+        assert_eq!(session.tree_builds(), 1);
+        // per-h scores also match the single-score session entry point —
+        // on a one-thread session: lscv_score_session evaluates with the
+        // session's thread count, and the multi-threaded traversal is
+        // deliberately not bit-identical to the single-threaded one
+        let session1 = Session::kde(&data);
+        let s0 = lscv_score_session(&session1, grid[0], 1e-4, Method::Dito).unwrap();
+        assert_eq!(s0, scores_session[0]);
     }
 
     /// A mock summation engine that poisons chosen bandwidths with NaN.

@@ -5,15 +5,53 @@
 pub mod bandwidth;
 pub mod lscv;
 
+use crate::api::{EvalRequest, Method, Session};
 use crate::algo::{AlgoError, GaussSum, GaussSumProblem};
 use crate::geometry::Matrix;
 use crate::kernel::GaussianKernel;
 
-/// Density estimates f̂(x_i) for every point of `data` at bandwidth `h`,
-/// computed with `engine` under relative tolerance `epsilon`.
+/// f̂ normalization: (1/n)·(2πh²)^(−D/2).
+fn kde_norm(h: f64, dim: usize, n: usize) -> f64 {
+    GaussianKernel::new(h).norm_const(dim) / n as f64
+}
+
+/// Density estimates f̂(x_i) for every point of the session's dataset
+/// at bandwidth `h`, under relative tolerance `epsilon`, with `method`
+/// (use [`Method::Auto`] to let the session choose).
 ///
 /// f̂(x) = (1/n)·(2πh²)^(−D/2)·Σ_r K_h(‖x−x_r‖)   (self term included,
 /// as in the paper's summation definition).
+pub fn density_at_points_session(
+    session: &Session<'_>,
+    h: f64,
+    epsilon: f64,
+    method: Method,
+) -> Result<Vec<f64>, AlgoError> {
+    let ev = session.evaluate(&EvalRequest::kde(h, epsilon).with_method(method))?;
+    let norm = kde_norm(h, session.dim(), session.num_points());
+    Ok(ev.sums.into_iter().map(|s| s * norm).collect())
+}
+
+/// Density at arbitrary query points (bichromatic form) on a prepared
+/// session: the reference tree and per-bandwidth state are reused, only
+/// a query tree is built per call.
+pub fn density_at_session(
+    session: &Session<'_>,
+    queries: &Matrix,
+    h: f64,
+    epsilon: f64,
+    method: Method,
+) -> Result<Vec<f64>, AlgoError> {
+    let req = EvalRequest::kde(h, epsilon).with_queries(queries).with_method(method);
+    let ev = session.evaluate(&req)?;
+    let norm = kde_norm(h, session.dim(), session.num_points());
+    Ok(ev.sums.into_iter().map(|s| s * norm).collect())
+}
+
+/// One-shot form of [`density_at_points_session`] with an explicit
+/// engine — a deprecated shim kept for callers (and mocks) that carry
+/// their own [`GaussSum`]; it rebuilds all data structures per call.
+/// Prefer a [`Session`] in new code.
 pub fn density_at_points(
     data: &Matrix,
     h: f64,
@@ -22,11 +60,12 @@ pub fn density_at_points(
 ) -> Result<Vec<f64>, AlgoError> {
     let problem = GaussSumProblem::kde(data, h, epsilon);
     let sums = engine.run(&problem)?.sums;
-    let norm = GaussianKernel::new(h).norm_const(data.cols()) / data.rows() as f64;
+    let norm = kde_norm(h, data.cols(), data.rows());
     Ok(sums.into_iter().map(|s| s * norm).collect())
 }
 
-/// Density at arbitrary query points (bichromatic form).
+/// One-shot form of [`density_at_session`] — deprecated shim, see
+/// [`density_at_points`].
 pub fn density_at(
     queries: &Matrix,
     data: &Matrix,
@@ -36,7 +75,7 @@ pub fn density_at(
 ) -> Result<Vec<f64>, AlgoError> {
     let problem = GaussSumProblem::new(queries, data, None, h, epsilon);
     let sums = engine.run(&problem)?.sums;
-    let norm = GaussianKernel::new(h).norm_const(data.cols()) / data.rows() as f64;
+    let norm = kde_norm(h, data.cols(), data.rows());
     Ok(sums.into_iter().map(|s| s * norm).collect())
 }
 
@@ -67,6 +106,22 @@ mod tests {
         let dens = density_at(&q, &data, 0.5, 1e-9, &Naive::new()).unwrap();
         assert!(dens.iter().all(|&v| v > 0.0));
         assert!(dens[0] > dens[1]);
+    }
+
+    #[test]
+    fn session_densities_match_oneshot_shims() {
+        let mut rng = Pcg32::new(123);
+        let data = Matrix::from_rows(
+            &(0..80).map(|_| vec![rng.uniform(), rng.uniform()]).collect::<Vec<_>>(),
+        );
+        let q = Matrix::from_rows(&[vec![0.2, 0.3], vec![0.8, 0.1]]);
+        let session = Session::kde(&data);
+        let a = density_at_points_session(&session, 0.2, 1e-9, Method::Naive).unwrap();
+        let b = density_at_points(&data, 0.2, 1e-9, &Naive::new()).unwrap();
+        assert_eq!(a, b, "session Naive density must equal the one-shot shim bitwise");
+        let c = density_at_session(&session, &q, 0.2, 1e-9, Method::Naive).unwrap();
+        let d = density_at(&q, &data, 0.2, 1e-9, &Naive::new()).unwrap();
+        assert_eq!(c, d);
     }
 
     #[test]

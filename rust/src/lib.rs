@@ -8,8 +8,12 @@
 //! selection layer on top.
 //!
 //! Layer map (see DESIGN.md and the README "Architecture" section):
+//! * L4 ([`api`]): the [`api::Session`] front door — prepare a dataset
+//!   once, answer many [`api::EvalRequest`]s with any [`api::Method`]
+//!   (or `Auto`), ε-verified FGT/IFGT tuning included. Every caller
+//!   (KDE, LSCV, coordinator, CLI, examples, benches) goes through it.
 //! * L3 (this crate): trees, expansions, translation operators, error
-//!   control, the six algorithms, LSCV, sweep coordination, CLI. All
+//!   control, the seven algorithms, LSCV, sweep coordination, CLI. All
 //!   exhaustive inner loops route through the shared [`compute`] SoA
 //!   microkernel; the dual-tree traversal is generic over
 //!   [`algo::dualtree::Expansion`] × [`errorcontrol::PruneRule`], with
@@ -20,13 +24,15 @@
 //!   (with a [`compute`]-backed CPU fallback when the `pjrt` feature is
 //!   off).
 //!
-//! Quick start:
+//! Quick start — the [`api::Session`] front door (prepare once,
+//! evaluate many, automatic method selection):
 //! ```no_run
-//! use fastgauss::algo::{dito::Dito, GaussSum, GaussSumProblem};
+//! use fastgauss::api::{EvalRequest, Session};
 //! let data = fastgauss::data::synthetic::astro2d(1000, 42);
 //! let h = fastgauss::kde::bandwidth::silverman(&data);
-//! let out = Dito::default().run(&GaussSumProblem::kde(&data, h, 0.01)).unwrap();
-//! println!("G(x_0) = {}", out.sums[0]);
+//! let session = Session::kde(&data);
+//! let ans = session.evaluate(&EvalRequest::kde(h, 0.01)).unwrap();
+//! println!("G(x_0) = {} via {}", ans.sums[0], ans.method);
 //! ```
 
 pub mod util;
@@ -40,6 +46,7 @@ pub mod bounds;
 pub mod tree;
 pub mod errorcontrol;
 pub mod algo;
+pub mod api;
 pub mod kde;
 pub mod data;
 pub mod runtime;
@@ -49,6 +56,7 @@ pub mod config;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
+    pub use crate::api::{EvalRequest, Evaluation, Method, PrepareOptions, Session};
     pub use crate::geometry::Matrix;
     pub use crate::kernel::GaussianKernel;
     pub use crate::tree::KdTree;

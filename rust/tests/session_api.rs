@@ -1,0 +1,297 @@
+//! Session front-door integration: session-vs-oneshot equivalence for
+//! every `Method`, golden `Auto` selections, and the built-once /
+//! reused-everywhere contract of the lazy session state.
+
+use fastgauss::api::{EvalRequest, Method, PrepareOptions, Session};
+use fastgauss::algo::dualtree::run_dualtree;
+use fastgauss::algo::fgt::Fgt;
+use fastgauss::algo::ifgt::ifgt_tuning_loop;
+use fastgauss::algo::naive::Naive;
+use fastgauss::algo::{max_relative_error, GaussSum, GaussSumProblem};
+use fastgauss::data;
+use fastgauss::geometry::Matrix;
+use fastgauss::kde::bandwidth::silverman;
+use fastgauss::util::Pcg32;
+
+fn dataset(name: &str, n: usize) -> Matrix {
+    data::by_name(name, n, 21).unwrap().points
+}
+
+/// (a) On astro2d and galaxy3d, the session answer for every
+/// deterministic method equals the pre-session one-shot path exactly
+/// (the 1e-12 equivalence budget is met with room to spare: the code
+/// paths are the same monomorphized functions).
+#[test]
+fn session_matches_oneshot_for_naive_and_dual_tree() {
+    for name in ["astro2d", "galaxy3d"] {
+        let data = dataset(name, 400);
+        let h_star = silverman(&data);
+        let session = Session::kde(&data);
+        for mult in [0.1, 1.0, 10.0] {
+            let h = h_star * mult;
+            let problem = GaussSumProblem::kde(&data, h, 0.01);
+            for method in [Method::Naive, Method::Dfd, Method::Dfdo, Method::Dfto, Method::Dito]
+            {
+                let ev = session
+                    .evaluate(&EvalRequest::kde(h, 0.01).with_method(method))
+                    .unwrap();
+                assert_eq!(ev.method, method);
+                let oneshot = match method {
+                    Method::Naive => Naive::new().run(&problem).unwrap().sums,
+                    m => {
+                        let cfg = m.dual_tree_config(32, None).unwrap();
+                        run_dualtree(&problem, &cfg).unwrap().sums
+                    }
+                };
+                assert_eq!(
+                    ev.sums, oneshot,
+                    "{name} h={h}: session {method} diverged from one-shot"
+                );
+            }
+        }
+        assert_eq!(session.tree_builds(), 1, "{name}: one build for all methods × h");
+    }
+}
+
+/// (a) FGT: the session's built-in τ-halving must reproduce the paper
+/// protocol (the loop the coordinator used to own) bit-for-bit, and
+/// come back ε-verified.
+#[test]
+fn session_matches_oneshot_fgt_protocol() {
+    for name in ["astro2d", "galaxy3d"] {
+        let data = dataset(name, 350);
+        let h = silverman(&data);
+        let eps = 0.01;
+        let session = Session::kde(&data);
+        let ev = session.evaluate(&EvalRequest::kde(h, eps).with_method(Method::Fgt)).unwrap();
+        assert!(ev.rel_err.unwrap() <= eps * (1.0 + 1e-9), "{name}: unverified FGT answer");
+        // replicate the paper protocol by hand
+        let problem = GaussSumProblem::kde(&data, h, eps);
+        let exact = Naive::new().run(&problem).unwrap().sums;
+        let mut tau = eps;
+        let manual = loop {
+            let r = Fgt::new(tau).run(&problem).unwrap();
+            if max_relative_error(&r.sums, &exact) <= eps * (1.0 + 1e-9) {
+                break r.sums;
+            }
+            tau *= 0.5;
+        };
+        assert_eq!(ev.sums, manual, "{name}: session FGT diverged from the manual protocol");
+    }
+}
+
+/// (a) FGT failure modes surface as the paper's X through the session.
+#[test]
+fn session_fgt_propagates_ram_exhaustion() {
+    let data = dataset("astro2d", 200);
+    let session = Session::kde(&data);
+    let err = session
+        .evaluate(&EvalRequest::kde(1e-5, 0.01).with_method(Method::Fgt))
+        .unwrap_err();
+    assert!(err.to_string().contains('X'), "{err}");
+}
+
+/// (a) IFGT: the session's K-doubling equals the standalone tuning
+/// loop on the same problem (same rounds, same plans, same result).
+#[test]
+fn session_matches_oneshot_ifgt_protocol() {
+    let data = dataset("astro2d", 300);
+    let eps = 0.01;
+    let h = 2.0; // large bandwidth: tuning converges in the early rounds
+    let session = Session::kde(&data);
+    let ev = session.evaluate(&EvalRequest::kde(h, eps).with_method(Method::Ifgt)).unwrap();
+    assert!(ev.rel_err.unwrap() <= eps, "unverified IFGT answer");
+    let problem = GaussSumProblem::kde(&data, h, eps);
+    let exact = Naive::new().run(&problem).unwrap().sums;
+    let (manual, _params) = ifgt_tuning_loop(&problem, &exact, 8, 60.0).unwrap();
+    assert_eq!(ev.sums, manual.sums, "session IFGT diverged from the manual protocol");
+}
+
+/// (b) Golden `Auto` selections. The h-to-scale ratio equals the
+/// Silverman factor (4/((D+2)n))^(1/(D+4)) exactly (the data spread
+/// cancels), so these pins are deterministic for any seed.
+#[test]
+fn auto_selection_goldens() {
+    let eps = 0.01;
+    // low-D, mid-size: the paper's regimes
+    let data = dataset("astro2d", 1000);
+    let h_star = silverman(&data);
+    let session = Session::kde(&data);
+    let resolve = |h: f64| session.resolve(&EvalRequest::kde(h, eps));
+    assert_eq!(resolve(1e-3 * h_star), Method::Dfdo, "low-D tiny h → FD-only");
+    assert_eq!(resolve(h_star), Method::Dito, "low-D mid h → the paper's algorithm");
+    assert_eq!(resolve(1e3 * h_star), Method::Dfdo, "low-D huge h → FD-only");
+    // high-D: DITO holds the middle band, FD-only takes tiny h
+    let hi = dataset("texture16", 600);
+    let hi_star = silverman(&hi);
+    let hi_session = Session::kde(&hi);
+    assert_eq!(
+        hi_session.resolve(&EvalRequest::kde(hi_star, eps)),
+        Method::Dito,
+        "high-D mid h → DITO"
+    );
+    assert_eq!(
+        hi_session.resolve(&EvalRequest::kde(1e-3 * hi_star, eps)),
+        Method::Dfdo,
+        "high-D tiny h → FD-only"
+    );
+    // tiny N: preparation cannot pay for itself
+    let small = dataset("astro2d", 100);
+    let small_session = Session::kde(&small);
+    assert_eq!(
+        small_session.resolve(&EvalRequest::kde(silverman(&small), eps)),
+        Method::Naive,
+        "tiny N → exhaustive"
+    );
+    // an Auto evaluation reports the resolved method and meets ε
+    let ev = session.evaluate(&EvalRequest::kde(h_star, eps)).unwrap();
+    assert_eq!(ev.method, Method::Dito);
+    let exact = session.exact_sums(h_star, eps).0;
+    assert!(max_relative_error(&ev.sums, &exact) <= eps * (1.0 + 1e-9));
+}
+
+/// (c) Lazy FGT state (grid frame + truth) is built once per session
+/// and reused across requests, observable through `RunStats`.
+#[test]
+fn fgt_session_state_built_once_and_reused() {
+    let data = dataset("astro2d", 300);
+    let h = silverman(&data);
+    let session = Session::kde(&data);
+    let req = EvalRequest::kde(h, 0.01).with_method(Method::Fgt);
+    let first = session.evaluate(&req).unwrap();
+    assert!(first.stats.session_cache_misses >= 1, "first request must build state");
+    let second = session.evaluate(&req).unwrap();
+    assert_eq!(second.stats.session_cache_misses, 0, "state must be reused, not rebuilt");
+    assert!(second.stats.session_cache_hits >= 1);
+    assert_eq!(first.sums, second.sums);
+}
+
+/// (c) Lazy IFGT clustering plans are built once per (K, seed) and
+/// reused across requests (and across tuning rounds within a request).
+#[test]
+fn ifgt_session_state_built_once_and_reused() {
+    let data = dataset("astro2d", 300);
+    let session = Session::kde(&data);
+    let req = EvalRequest::kde(2.0, 0.01).with_method(Method::Ifgt);
+    let first = session.evaluate(&req).unwrap();
+    assert!(first.stats.session_cache_misses >= 1, "first request must cluster");
+    let second = session.evaluate(&req).unwrap();
+    assert_eq!(second.stats.session_cache_misses, 0, "clustering must be reused");
+    assert!(second.stats.session_cache_hits >= 1);
+    assert_eq!(first.sums, second.sums);
+}
+
+/// (c) The exhaustive-truth memo: Naive answers are computed once per
+/// bandwidth, then served from the session.
+#[test]
+fn truth_memo_serves_repeat_naive_requests() {
+    let data = dataset("galaxy3d", 250);
+    let h = silverman(&data);
+    let session = Session::kde(&data);
+    let req = EvalRequest::kde(h, 0.01).with_method(Method::Naive);
+    let first = session.evaluate(&req).unwrap();
+    assert_eq!(first.stats.session_cache_misses, 1);
+    assert_eq!(first.rel_err, Some(0.0));
+    let second = session.evaluate(&req).unwrap();
+    assert_eq!(second.stats.session_cache_hits, 1);
+    assert_eq!(second.stats.session_cache_misses, 0);
+    assert_eq!(first.sums, second.sums);
+    // reported cost is the original compute time, not the lookup
+    assert_eq!(first.stats.total_secs, second.stats.total_secs);
+}
+
+/// evaluate_batch ≡ sequential evaluate, bit-for-bit, regardless of
+/// the session's worker count (each request runs one inner thread).
+#[test]
+fn batch_matches_sequential_in_any_worker_count() {
+    let data = dataset("astro2d", 400);
+    let h_star = silverman(&data);
+    let sequential = Session::kde(&data); // threads = 1
+    let parallel =
+        Session::prepare(&data, PrepareOptions { threads: 3, ..Default::default() });
+    let reqs: Vec<EvalRequest<'static>> = [0.1, 1.0, 10.0]
+        .iter()
+        .flat_map(|&m| {
+            [Method::Dito, Method::Dfdo, Method::Naive, Method::Auto]
+                .into_iter()
+                .map(move |method| EvalRequest::kde(m * h_star, 0.01).with_method(method))
+        })
+        .collect();
+    let batch = parallel.evaluate_batch(&reqs);
+    assert_eq!(batch.len(), reqs.len());
+    for (req, res) in reqs.iter().zip(batch) {
+        let got = res.unwrap();
+        let want = sequential.evaluate(req).unwrap();
+        assert_eq!(got.sums, want.sums, "h={} {}", req.h, req.method);
+        assert_eq!(got.method, want.method);
+    }
+}
+
+/// Bichromatic requests ride on the prepared reference tree: results
+/// equal the one-shot paths exactly, with exactly one per-request
+/// query-tree build.
+#[test]
+fn bichromatic_requests_match_oneshot() {
+    let mut rng = Pcg32::new(31);
+    let refs = dataset("astro2d", 300);
+    let queries = Matrix::from_rows(
+        &(0..60).map(|_| vec![rng.uniform(), rng.uniform()]).collect::<Vec<_>>(),
+    );
+    let h = silverman(&refs);
+    let session = Session::kde(&refs);
+    let problem = GaussSumProblem::new(&queries, &refs, None, h, 0.01);
+
+    let naive = session
+        .evaluate(&EvalRequest::kde(h, 0.01).with_queries(&queries).with_method(Method::Naive))
+        .unwrap();
+    assert_eq!(naive.sums, Naive::new().run(&problem).unwrap().sums);
+
+    let dito = session
+        .evaluate(&EvalRequest::kde(h, 0.01).with_queries(&queries).with_method(Method::Dito))
+        .unwrap();
+    let cfg = Method::Dito.dual_tree_config(32, None).unwrap();
+    assert_eq!(dito.sums, run_dualtree(&problem, &cfg).unwrap().sums);
+    assert_eq!(dito.stats.tree_builds, 1, "one query-tree build per bichromatic request");
+    assert_eq!(session.tree_builds(), 1, "the reference tree is never rebuilt");
+}
+
+/// Per-request weight overrides stay correct through the documented
+/// one-shot fallback.
+#[test]
+fn weight_override_falls_back_and_matches_oneshot() {
+    let mut rng = Pcg32::new(32);
+    let data = dataset("astro2d", 250);
+    let w: Vec<f64> = (0..250).map(|_| rng.uniform_in(0.5, 1.5)).collect();
+    let h = silverman(&data);
+    let session = Session::kde(&data);
+    let ev = session
+        .evaluate(&EvalRequest::kde(h, 0.01).with_weights(&w).with_method(Method::Dito))
+        .unwrap();
+    let mut problem = GaussSumProblem::new(&data, &data, Some(&w), h, 0.01);
+    problem.monochromatic = true;
+    let cfg = Method::Dito.dual_tree_config(32, None).unwrap();
+    let oneshot = run_dualtree(&problem, &cfg).unwrap();
+    assert_eq!(ev.sums, oneshot.sums);
+    assert_eq!(ev.stats.tree_builds, 1, "override pays a one-shot build");
+    // the weighted answer is ε-correct vs the weighted exhaustive sum
+    let exact = Naive::new().run(&problem).unwrap().sums;
+    assert!(max_relative_error(&ev.sums, &exact) <= 0.01 * (1.0 + 1e-9));
+}
+
+/// plimit overrides thread through to the engine.
+#[test]
+fn plimit_override_respected_via_session() {
+    let data = dataset("astro2d", 300);
+    let h = silverman(&data);
+    let session = Session::kde(&data);
+    let exact = session.exact_sums(h, 0.01).0;
+    for plimit in [1, 2, 4] {
+        let ev = session
+            .evaluate(&EvalRequest::kde(h, 0.01).with_method(Method::Dito).with_plimit(plimit))
+            .unwrap();
+        assert!(
+            max_relative_error(&ev.sums, &exact) <= 0.01 * (1.0 + 1e-9),
+            "plimit={plimit}"
+        );
+    }
+}
