@@ -10,9 +10,11 @@
 //!              bandwidth sweep via per-h rebuilds (sequential) vs one
 //!              prepared multi-threaded Session (evaluate_batch over
 //!              the grid), verified against Naive at every grid point;
-//!   §basecase — the SoA compute microkernel (the base case every
-//!              algorithm now routes through) vs the old scalar triple
-//!              loop, on galaxy3d at default ε.
+//!   §basecase — the base-case ladder on galaxy3d: old scalar triple
+//!              loop vs SoA microkernel vs the PR-4 tiled fast path
+//!              (cached norms + dot tiles + certified exp_block; see
+//!              also `cargo run --release --bin bench_json` for the
+//!              machine-readable old-vs-tiled trajectory).
 //!
 //! Run: `cargo bench --bench ablations`
 //! (knobs: FASTGAUSS_N, FASTGAUSS_SWEEP_N)
@@ -209,10 +211,33 @@ fn main() {
         worst_dev = worst_dev.max((out_micro[i] - out_scalar[i]).abs() / out_scalar[i].max(1.0));
     }
     assert!(worst_dev <= 1e-12, "microkernel diverged from scalar: {worst_dev:.2e}");
+    // the PR-4 tiled fast path: norms trick + certified exp_block
+    let mut out_tiled = vec![0.0; nb];
+    let t_tiled = median_secs(
+        || {
+            out_tiled.fill(0.0);
+            compute::gauss_sum_all_fast(
+                &ds_base.points,
+                &ds_base.points,
+                &w_base,
+                &kernel,
+                compute::BLOCK,
+                &mut scratch,
+                &mut out_tiled,
+            );
+        },
+        3,
+    );
+    let mut worst_fast = 0.0f64;
+    for i in 0..nb {
+        worst_fast = worst_fast.max((out_tiled[i] - out_scalar[i]).abs() / out_scalar[i].max(1.0));
+    }
+    assert!(worst_fast <= 1e-11, "tiled fast path out of certified range: {worst_fast:.2e}");
     println!(
-        "scalar={t_scalar:.4}s  microkernel={t_micro:.4}s  speedup = {:.2}x  \
-         max rel dev = {worst_dev:.1e}",
-        t_scalar / t_micro
+        "scalar={t_scalar:.4}s  microkernel={t_micro:.4}s ({:.2}x)  \
+         tiled+fastexp={t_tiled:.4}s ({:.2}x)  max rel dev: micro={worst_dev:.1e} tiled={worst_fast:.1e}",
+        t_scalar / t_micro,
+        t_scalar / t_tiled
     );
 
     // ---- §tile: PJRT artifact vs pure-rust exhaustive path ----

@@ -94,6 +94,22 @@ fn main() {
         });
     }
 
+    // the exp that dominates base cases: libm vs the certified block poly
+    let args: Vec<f64> = (0..256).map(|i| -(i as f64) * 0.11 - 0.01).collect();
+    let mut buf = vec![0.0; 256];
+    bench("libm exp ×256", 50_000, || {
+        buf.copy_from_slice(&args);
+        for v in buf.iter_mut() {
+            *v = v.exp();
+        }
+        std::hint::black_box(&buf);
+    });
+    bench("fastexp::exp_block ×256", 50_000, || {
+        buf.copy_from_slice(&args);
+        fastgauss::compute::fastexp::exp_block(&mut buf);
+        std::hint::black_box(&buf);
+    });
+
     // base-case kernel loop: 32×32 points, D=5
     let d = 5;
     let kernel = GaussianKernel::new(0.3);

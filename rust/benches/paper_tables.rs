@@ -48,6 +48,7 @@ fn main() {
             algorithms: AlgoSpec::paper_order(),
             workers: 1,
             leaf_size: 32,
+            fast_exp: true,
         };
         let res = run_sweep(&cfg);
         println!("--- {name} (paper: {paper_name}, D = {d}) ---");

@@ -17,10 +17,19 @@
 //! [`SweepEngine::evaluate`]) dispatches **once per evaluate** to the
 //! matching instantiation and is otherwise identical.
 //!
-//! Leaf-leaf base cases — the dominant cost at tight ε — run on the
-//! shared SoA microkernel in [`crate::compute`], through a per-thread
-//! [`crate::compute::Scratch`] arena sized at prepare time so the
-//! traversal performs zero allocations after `prepare`.
+//! Leaf-leaf base cases — the dominant cost at tight ε — are **not**
+//! computed eagerly: the traversal registers each surviving pair's
+//! bounds (and banks its full token entitlement) and pushes the pair
+//! onto a per-thread queue, which is drained after the recursion in
+//! tile batches *grouped by reference leaf* — each reference leaf's SoA
+//! transpose is amortized across every query leaf that hit it, and the
+//! per-thread [`crate::compute::Scratch`] arena (sized at prepare time)
+//! stays hot, still with zero allocations after `prepare`. The drain
+//! runs the GEMM-shaped fast kernel ([`crate::compute::tile`]: cached
+//! norms + dot-product tiles + certified `exp_block`) whenever
+//! [`crate::errorcontrol::split_epsilon`] admits its certified error
+//! into the ε budget (`fast_exp` on [`DualTreeConfig`], default on),
+//! and the bit-exact per-query scalar-order path otherwise.
 //!
 //! Correctness architecture: per-query-node state lives in a
 //! [`QueryLedger`]; bounds are hierarchical (summed along the root→leaf
@@ -43,7 +52,8 @@
 //! state (Hermite moment tables, the [`QueryLedger`]) and runs the
 //! traversal. Per-(h, layout, plimit) moments are memoized in a
 //! **bounded** cache (capacity [`DEFAULT_MOMENT_CACHE_CAPACITY`],
-//! oldest-entry eviction — see [`SweepEngine::with_moment_cache_capacity`]),
+//! true LRU — hits promote recency; see
+//! [`SweepEngine::with_moment_cache_capacity`]),
 //! and both [`SweepEngine::evaluate`] (across independent query
 //! subtrees) and [`SweepEngine::evaluate_grid`] (across grid
 //! bandwidths) parallelize with `std::thread::scope`.
@@ -56,8 +66,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
 use crate::bounds::{odp::OdpBounds, opd::OpdBounds, NeverBounds, NodeGeometry, TruncationBounds};
-use crate::compute::Scratch;
-use crate::errorcontrol::{PruneDecision, QueryLedger};
+use crate::compute::{tile, Scratch};
+use crate::errorcontrol::{split_epsilon, PruneDecision, QueryLedger};
 pub use crate::errorcontrol::{PruneRule, Theorem2, TokenLedger};
 use crate::geometry::Matrix;
 use crate::hermite::{
@@ -158,6 +168,14 @@ pub struct DualTreeConfig {
     pub series: Option<SeriesKind>,
     /// Override the PLIMIT schedule (`None` = paper's per-D schedule).
     pub plimit: Option<usize>,
+    /// Run drained base cases on the certified fast tiled kernel
+    /// (default on). The ε guarantee is preserved by reserving the
+    /// certified error out of the budget
+    /// ([`crate::errorcontrol::split_epsilon`]); bandwidths where the
+    /// certified bound is not affordable fall back to the bit-exact
+    /// path automatically, and `false` forces the bit-exact path
+    /// everywhere (the reference configuration).
+    pub fast_exp: bool,
 }
 
 impl Default for DualTreeConfig {
@@ -167,6 +185,7 @@ impl Default for DualTreeConfig {
             use_tokens: true,
             series: Some(SeriesKind::OdpGraded),
             plimit: None,
+            fast_exp: true,
         }
     }
 }
@@ -217,8 +236,12 @@ struct Ctx<'a> {
     qt: &'a KdTree,
     rt: &'a KdTree,
     kernel: GaussianKernel,
+    /// The *tree* half of the ε budget (user ε minus the certified
+    /// base-case reservation when `fast` is on).
     eps: f64,
     total_w: f64,
+    /// Drain base cases through the certified fast tiled kernel.
+    fast: bool,
     /// Present iff the variant's `Expansion::ENABLED`.
     series: Option<SeriesPack<'a>>,
 }
@@ -241,6 +264,10 @@ struct State {
     /// SoA block arena for the base case, sized to the reference tree's
     /// largest leaf so base cases never allocate.
     scratch: Scratch,
+    /// Surviving (query leaf, reference leaf) pairs awaiting their
+    /// exhaustive sums — bounds/tokens are registered at enqueue time,
+    /// the sums at drain time (grouped by reference leaf).
+    queue: Vec<(u32, u32)>,
     stats: RunStats,
 }
 
@@ -254,6 +281,7 @@ impl State {
             mono: vec![0.0; set_len.max(1)],
             off: vec![0.0; dim],
             scratch: Scratch::with_block(dim, leaf_block),
+            queue: Vec::new(),
             stats: RunStats::default(),
         }
     }
@@ -266,11 +294,14 @@ type MomentKey = (u64, Layout, usize);
 /// `(h, layout, plimit)` triples kept live).
 pub const DEFAULT_MOMENT_CACHE_CAPACITY: usize = 64;
 
-/// Bounded memo for per-bandwidth moment tables: capacity-capped with
-/// oldest-entry (insertion-order) eviction, plus hit/miss counters.
+/// Bounded memo for per-bandwidth moment tables: capacity-capped,
+/// true-LRU eviction (a hit promotes its entry to most-recent, so an
+/// adaptive h-search hammering one bandwidth never loses it to grid
+/// churn), plus hit/miss counters.
 struct MomentCache {
     map: HashMap<MomentKey, (u64, Arc<RefMoments>)>,
-    /// Monotone insertion stamp; the minimum stamp is the oldest entry.
+    /// Monotone use stamp; the minimum stamp is the least recently
+    /// used entry. Refreshed on hit, not just on insert.
     next_stamp: u64,
     capacity: usize,
     hits: u64,
@@ -289,10 +320,14 @@ impl MomentCache {
     }
 
     fn get(&mut self, key: &MomentKey) -> Option<Arc<RefMoments>> {
-        match self.map.get(key) {
-            Some((_, m)) => {
+        let stamp = self.next_stamp;
+        match self.map.get_mut(key) {
+            Some(slot) => {
+                // LRU: a hit promotes the entry to most-recently-used
+                slot.0 = stamp;
+                self.next_stamp += 1;
                 self.hits += 1;
-                Some(Arc::clone(m))
+                Some(Arc::clone(&slot.1))
             }
             None => {
                 self.misses += 1;
@@ -303,8 +338,11 @@ impl MomentCache {
 
     fn insert(&mut self, key: MomentKey, m: Arc<RefMoments>) {
         if let Some(slot) = self.map.get_mut(&key) {
-            // racing compute of the same key: keep the original stamp
+            // racing compute of the same key: replacing the value is a
+            // use — promote it like a hit
+            slot.0 = self.next_stamp;
             slot.1 = m;
+            self.next_stamp += 1;
             return;
         }
         self.evict_down_to(self.capacity.saturating_sub(1));
@@ -312,11 +350,11 @@ impl MomentCache {
         self.next_stamp += 1;
     }
 
-    /// Evict oldest-inserted entries until at most `keep` remain.
+    /// Evict least-recently-used entries until at most `keep` remain.
     fn evict_down_to(&mut self, keep: usize) {
         while self.map.len() > keep {
-            let oldest = self.map.iter().min_by_key(|(_, (s, _))| *s).map(|(k, _)| *k);
-            match oldest {
+            let lru = self.map.iter().min_by_key(|(_, (s, _))| *s).map(|(k, _)| *k);
+            match lru {
                 Some(k) => {
                     self.map.remove(&k);
                 }
@@ -411,7 +449,8 @@ impl SweepEngine {
     /// [`DEFAULT_MOMENT_CACHE_CAPACITY`]; grid sweeps want at least the
     /// grid size, adaptive h-searches can shrink it (or call
     /// [`clear_moment_cache`] between phases). Shrinking below the
-    /// current occupancy evicts the oldest entries immediately.
+    /// current occupancy evicts the least-recently-used entries
+    /// immediately.
     ///
     /// [`clear_moment_cache`]: SweepEngine::clear_moment_cache
     pub fn with_moment_cache_capacity(self, capacity: usize) -> Self {
@@ -455,7 +494,8 @@ impl SweepEngine {
     /// between phases of an adaptive bandwidth search). The cache is
     /// otherwise self-bounding: at most
     /// [`with_moment_cache_capacity`](SweepEngine::with_moment_cache_capacity)
-    /// entries stay live, with the oldest-inserted entry evicted first.
+    /// entries stay live, with the least-recently-*used* entry evicted
+    /// first (hits promote recency — true LRU, not insertion order).
     /// Hit/miss counters survive the clear.
     pub fn clear_moment_cache(&self) {
         self.moment_cache.lock().unwrap().map.clear();
@@ -514,7 +554,8 @@ impl SweepEngine {
     /// Run one bandwidth as an explicit monomorphized variant — the
     /// type-level form of [`evaluate`]; the four paper algorithms are
     /// `X`/`P` choices (e.g. DITO = `evaluate_variant::<OdpGraded,
-    /// TokenLedger>`).
+    /// TokenLedger>`). Runs with the default fast-exp base case (use
+    /// [`evaluate`] with a [`DualTreeConfig`] for the toggle).
     ///
     /// [`evaluate`]: SweepEngine::evaluate
     pub fn evaluate_variant<X: Expansion, P: PruneRule>(
@@ -523,7 +564,7 @@ impl SweepEngine {
         epsilon: f64,
         plimit: Option<usize>,
     ) -> Result<GaussSumResult, AlgoError> {
-        self.evaluate_variant_with_threads::<X, P>(h, epsilon, plimit, self.threads)
+        self.evaluate_variant_with_threads::<X, P>(h, epsilon, plimit, true, self.threads)
     }
 
     /// Evaluate one bandwidth against an *explicit* query matrix: a
@@ -556,7 +597,7 @@ impl SweepEngine {
         let qw = vec![1.0; queries.rows()];
         let (qtree, qsecs) = time_it(|| KdTree::build(queries, &qw, BuildParams { leaf_size }));
         let mut res = dispatch_variant!(cfg, X, P => {
-            self.evaluate_variant_on::<X, P>(&qtree, h, epsilon, cfg.plimit, threads)
+            self.evaluate_variant_on::<X, P>(&qtree, h, epsilon, cfg.plimit, cfg.fast_exp, threads)
         })?;
         res.stats.build_secs += qsecs;
         res.stats.tree_builds += 1;
@@ -571,7 +612,13 @@ impl SweepEngine {
         threads: usize,
     ) -> Result<GaussSumResult, AlgoError> {
         dispatch_variant!(cfg, X, P => {
-            self.evaluate_variant_with_threads::<X, P>(h, epsilon, cfg.plimit, threads)
+            self.evaluate_variant_with_threads::<X, P>(
+                h,
+                epsilon,
+                cfg.plimit,
+                cfg.fast_exp,
+                threads,
+            )
         })
     }
 
@@ -580,10 +627,11 @@ impl SweepEngine {
         h: f64,
         epsilon: f64,
         plimit_override: Option<usize>,
+        fast_exp: bool,
         threads: usize,
     ) -> Result<GaussSumResult, AlgoError> {
         let qt: &KdTree = self.qtree.as_ref().unwrap_or(&self.rtree);
-        self.evaluate_variant_on::<X, P>(qt, h, epsilon, plimit_override, threads)
+        self.evaluate_variant_on::<X, P>(qt, h, epsilon, plimit_override, fast_exp, threads)
     }
 
     /// The traversal core, parameterized over the query tree so both
@@ -597,12 +645,23 @@ impl SweepEngine {
         h: f64,
         epsilon: f64,
         plimit_override: Option<usize>,
+        fast_exp: bool,
         threads: usize,
     ) -> Result<GaussSumResult, AlgoError> {
         assert!(h > 0.0 && h.is_finite(), "bandwidth must be positive");
         assert!(epsilon > 0.0, "epsilon must be positive");
         let kernel = GaussianKernel::new(h);
         let dim = self.dim;
+        // ε-budget split: reserve the certified fast-base-case error
+        // out of the tree budget, or fall back to the bit-exact path
+        // when the bound is not affordable at this bandwidth
+        let split = split_epsilon(
+            epsilon,
+            fast_exp,
+            dim,
+            h,
+            self.rtree.max_sq_norm().max(qt.max_sq_norm()),
+        );
         let plimit = plimit_override.unwrap_or_else(|| plimit_for_dim(dim));
         let (moments, moment_secs, cache_hit) = match X::KIND {
             Some(kind) => {
@@ -626,12 +685,14 @@ impl SweepEngine {
                 qt,
                 rt,
                 kernel,
-                eps: epsilon,
+                eps: split.tree_eps,
                 total_w,
+                fast: split.fast,
                 series: series_pack(&moments, plimit),
             };
             let mut st = State::new(qt, set_len, dim, table_order, leaf_block);
             recurse::<X, P>(&ctx, &mut st, qt.root(), rt.root(), 0.0);
+            drain_base_cases(&ctx, &mut st);
             postprocess_from::<X>(&ctx, &mut st, qt.root(), &mut tree_sums);
             stats = st.stats;
         } else {
@@ -654,8 +715,9 @@ impl SweepEngine {
                             qt,
                             rt,
                             kernel,
-                            eps: epsilon,
+                            eps: split.tree_eps,
                             total_w,
+                            fast: split.fast,
                             series: series_pack(moments, plimit),
                         };
                         let mut st = State::new(qt, set_len, dim, table_order, leaf_block);
@@ -670,6 +732,9 @@ impl SweepEngine {
                             recurse::<X, P>(&ctx, &mut st, q0, rt.root(), 0.0);
                             my_roots.push(q0);
                         }
+                        // this worker's whole base-case queue drains in
+                        // one grouped pass before its post-processing
+                        drain_base_cases(&ctx, &mut st);
                         for &q0 in &my_roots {
                             postprocess_from::<X>(&ctx, &mut st, q0, &mut out);
                         }
@@ -794,8 +859,8 @@ pub fn run_dualtree_variant<X: Expansion, P: PruneRule>(
     plimit: Option<usize>,
 ) -> Result<GaussSumResult, AlgoError> {
     let engine = SweepEngine::prepare(problem, leaf_size);
-    let mut res =
-        engine.evaluate_variant_with_threads::<X, P>(problem.h, problem.epsilon, plimit, 1)?;
+    let mut res = engine
+        .evaluate_variant_with_threads::<X, P>(problem.h, problem.epsilon, plimit, true, 1)?;
     // preserve the paper's "times include preprocessing" convention
     res.stats.build_secs += engine.build_secs();
     res.stats.tree_builds = engine.tree_builds();
@@ -927,7 +992,26 @@ fn recurse<X: Expansion, P: PruneRule>(
 
     // ---- expand ----
     match (qn.is_leaf(), rn.is_leaf()) {
-        (true, true) => base_case::<P>(ctx, st, q, r),
+        (true, true) => {
+            // Exhaustive base case, deferred: register the pair's exact
+            // bounds now (dl/du from the libm kernel at dmax/dmin, like
+            // an FD prune) and bank the full token entitlement — the
+            // sums are exact up to the drained kernel's certified
+            // error, which split_epsilon already reserved — then queue
+            // the pair for the grouped tile drain. G_Q^min only ever
+            // reads these exact bounds, never the approximate sums, so
+            // later prune tests stay sound (if a little conservative:
+            // wr·kl in place of the computed per-point minima the
+            // eager base case used to register).
+            st.ledger.node_min[q] += dl;
+            st.ledger.node_max[q] += du;
+            if P::USE_TOKENS {
+                st.ledger.tokens[q] += wr;
+                st.stats.tokens_banked += wr;
+            }
+            st.stats.base_point_pairs += (qn.count() * rn.count()) as u64;
+            st.queue.push((q as u32, r as u32));
+        }
         (true, false) => {
             // split reference side, nearer child first (tightens G_Q^min
             // before the farther child is considered)
@@ -974,30 +1058,56 @@ fn order_by_dist(qn: &crate::tree::Node, rt: &KdTree, a: usize, b: usize) -> (us
     }
 }
 
-/// Leaf–leaf exhaustive base case (paper's DITOBase) on the SoA
-/// microkernel: the reference leaf is transposed into the per-thread
-/// [`Scratch`] once, then each query point runs the fused
-/// distance → exp → accumulate block path. Arithmetic order matches the
-/// old scalar loop exactly (see `compute`'s numerical contract).
-fn base_case<P: PruneRule>(ctx: &Ctx<'_>, st: &mut State, q: usize, r: usize) {
-    let qn = ctx.qt.node(q);
-    let rn = ctx.rt.node(r);
-    let wr_total = rn.weight;
-    st.scratch.load(ctx.rt.points(), rn.begin, rn.end);
-    st.scratch.load_weights(ctx.rt.weights(), rn.begin, rn.end);
-    for qi in qn.begin..qn.end {
-        let acc = st.scratch.gauss_dot(&ctx.kernel, ctx.qt.points().row(qi));
-        st.ledger.point_min[qi] += acc;
-        st.ledger.point_est[qi] += acc;
-        st.ledger.point_max[qi] += acc - wr_total;
+/// Drain the deferred leaf–leaf base cases (paper's DITOBase), grouped
+/// by reference leaf: each reference leaf is transposed into the
+/// per-thread [`Scratch`] exactly once per drain and reused by every
+/// query leaf that hit it. With `ctx.fast` the Q×R tile runs the
+/// GEMM-shaped kernel (cached norms outer sum − 2·dot, fused certified
+/// `exp_block` — see [`crate::compute::tile`]); otherwise each query
+/// runs the bit-exact fused distance → libm-exp → accumulate sweep,
+/// whose per-pair arithmetic matches the pre-queue scalar loop exactly.
+/// Sums land in `point_est` only — bounds and tokens were already
+/// registered at enqueue time.
+fn drain_base_cases(ctx: &Ctx<'_>, st: &mut State) {
+    if st.queue.is_empty() {
+        return;
     }
-    st.stats.base_point_pairs += (qn.count() * rn.count()) as u64;
-    if P::USE_TOKENS {
-        // exhaustive computation banks its full entitlement (Fig. 7)
-        st.ledger.tokens[q] += wr_total;
-        st.stats.tokens_banked += wr_total;
+    // group by reference leaf; ascending query order within a group
+    // keeps the drain deterministic for a fixed traversal
+    st.queue.sort_unstable_by_key(|&(q, r)| (r, q));
+    let State { queue, scratch, ledger, stats, .. } = st;
+    let (qt, rt) = (ctx.qt, ctx.rt);
+    let mut cur_r = u32::MAX;
+    for &(q, r) in queue.iter() {
+        let rn = rt.node(r as usize);
+        if r != cur_r {
+            scratch.load(rt.points(), rn.begin, rn.end);
+            scratch.load_weights(rt.weights(), rn.begin, rn.end);
+            if ctx.fast {
+                scratch.load_ref_norms(rt.sq_norms(), rn.begin, rn.end);
+            }
+            cur_r = r;
+        }
+        let qn = qt.node(q as usize);
+        if ctx.fast {
+            tile::gauss_sums_fast_on_loaded(
+                scratch,
+                &ctx.kernel,
+                qt.points(),
+                qt.sq_norms(),
+                qn.begin,
+                qn.end,
+                &mut ledger.point_est[qn.begin..qn.end],
+            );
+            stats.fast_base_cases += 1;
+        } else {
+            for qi in qn.begin..qn.end {
+                ledger.point_est[qi] += scratch.gauss_dot(&ctx.kernel, qt.points().row(qi));
+            }
+            stats.exact_base_cases += 1;
+        }
     }
-    st.ledger.refresh_below_from_points(q, qn.begin, qn.end);
+    queue.clear();
 }
 
 /// Post-processing (paper Fig. 8): push node-level estimates and local
@@ -1363,21 +1473,21 @@ mod tests {
     }
 
     #[test]
-    fn engine_moment_cache_is_bounded_with_fifo_eviction() {
+    fn engine_moment_cache_is_bounded_with_lru_eviction() {
         let data = clustered(200, 2, 91);
         let engine = SweepEngine::for_kde(&data, 32).with_moment_cache_capacity(2);
         let cfg = DualTreeConfig::default();
         let baseline = engine.evaluate(0.1, 0.01, &cfg).unwrap();
         engine.evaluate(0.2, 0.01, &cfg).unwrap();
         assert_eq!(engine.moment_cache_len(), 2);
-        // third distinct h evicts the oldest entry (h = 0.1)
+        // third distinct h evicts the least recently used (h = 0.1)
         engine.evaluate(0.4, 0.01, &cfg).unwrap();
         assert_eq!(engine.moment_cache_len(), 2);
         let again = engine.evaluate(0.1, 0.01, &cfg).unwrap();
         assert_eq!(again.stats.moment_cache_misses, 1, "evicted entry must recompute");
         assert_eq!(again.sums, baseline.sums, "eviction must not change results");
         // h = 0.4 survived the h = 0.1 re-insert (it evicted h = 0.2,
-        // the oldest remaining)
+        // the least recently used remaining)
         let warm = engine.evaluate(0.4, 0.01, &cfg).unwrap();
         assert_eq!(warm.stats.moment_cache_hits, 1);
         let (hits, misses) = engine.moment_cache_stats();
@@ -1387,6 +1497,78 @@ mod tests {
         assert_eq!(engine.moment_cache_len(), 0);
         let cold = engine.evaluate(0.4, 0.01, &cfg).unwrap();
         assert_eq!(cold.stats.moment_cache_misses, 1);
+    }
+
+    /// Regression for the advertised-but-absent LRU behavior: the cache
+    /// claimed recency eviction yet never refreshed recency on hit, so
+    /// a hot entry could be evicted by cold grid churn. A hit must
+    /// promote: after touching h = 0.1, inserting a third bandwidth
+    /// evicts h = 0.2 (the true LRU), not h = 0.1 (the oldest insert).
+    #[test]
+    fn moment_cache_hit_promotes_recency() {
+        let data = clustered(200, 2, 94);
+        let engine = SweepEngine::for_kde(&data, 32).with_moment_cache_capacity(2);
+        let cfg = DualTreeConfig::default();
+        engine.evaluate(0.1, 0.01, &cfg).unwrap(); // miss, insert 0.1
+        engine.evaluate(0.2, 0.01, &cfg).unwrap(); // miss, insert 0.2
+        let touch = engine.evaluate(0.1, 0.01, &cfg).unwrap(); // hit → promote
+        assert_eq!(touch.stats.moment_cache_hits, 1);
+        engine.evaluate(0.4, 0.01, &cfg).unwrap(); // miss → evicts 0.2, NOT 0.1
+        let hot = engine.evaluate(0.1, 0.01, &cfg).unwrap();
+        assert_eq!(
+            hot.stats.moment_cache_hits, 1,
+            "hit must have promoted h = 0.1 past insertion-order eviction"
+        );
+        let cold = engine.evaluate(0.2, 0.01, &cfg).unwrap();
+        assert_eq!(cold.stats.moment_cache_misses, 1, "h = 0.2 was the true LRU victim");
+        // lifetime counters stay exact across promotions:
+        // hits = {touch 0.1, hot 0.1}; misses = {0.1, 0.2, 0.4, 0.2}
+        assert_eq!(engine.moment_cache_stats(), (2, 4));
+    }
+
+    #[test]
+    fn fast_and_exact_base_case_routing() {
+        let data = clustered(400, 2, 95);
+        let engine = SweepEngine::for_kde(&data, 32);
+        // small-ish h so real leaf-leaf work survives pruning
+        let on = engine.evaluate(0.05, 1e-4, &DualTreeConfig::default()).unwrap();
+        assert!(on.stats.fast_base_cases > 0, "{:?}", on.stats);
+        assert_eq!(on.stats.exact_base_cases, 0);
+        let off = engine
+            .evaluate(0.05, 1e-4, &DualTreeConfig { fast_exp: false, ..Default::default() })
+            .unwrap();
+        assert!(off.stats.exact_base_cases > 0, "{:?}", off.stats);
+        assert_eq!(off.stats.fast_base_cases, 0);
+        // both modes meet ε against exhaustive truth
+        let problem = GaussSumProblem::kde(&data, 0.05, 1e-4);
+        let exact = Naive::new().run(&problem).unwrap().sums;
+        for sums in [&on.sums, &off.sums] {
+            assert!(max_relative_error(sums, &exact) <= 1e-4 * (1.0 + 1e-9));
+        }
+        // and agree with each other to the certified reservation
+        let dev = on
+            .sums
+            .iter()
+            .zip(&off.sums)
+            .map(|(a, b)| (a - b).abs() / b.max(1e-300))
+            .fold(0.0f64, f64::max);
+        assert!(dev <= 2.1e-4, "fast vs exact diverged by {dev:.2e}");
+    }
+
+    #[test]
+    fn tiny_bandwidth_auto_falls_back_to_exact_base_case() {
+        // at h = 1e-7 the certified norms-trick bound exceeds ε/4, so
+        // even with fast_exp requested the drain must run bit-exact
+        // (FD-only engine: no point computing a degenerate moment table
+        // at a bandwidth where series prunes can never fire)
+        let data = clustered(300, 2, 96);
+        let engine = SweepEngine::for_kde(&data, 32);
+        let res = engine
+            .evaluate(1e-7, 1e-6, &DualTreeConfig { series: None, ..Default::default() })
+            .unwrap();
+        assert_eq!(res.stats.fast_base_cases, 0, "{:?}", res.stats);
+        // (prunes may absorb everything at extreme h; the invariant is
+        // that nothing routed through the fast kernel)
     }
 
     #[test]

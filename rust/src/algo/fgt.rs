@@ -15,7 +15,8 @@
 use std::collections::HashMap;
 
 use crate::bounds::{opd::OpdBounds, NodeGeometry};
-use crate::compute::microkernel;
+use crate::compute::{microkernel, tile};
+use crate::geometry::Matrix;
 use crate::hermite::{accumulate_farfield, eval_farfield, HermiteTable};
 use crate::kernel::GaussianKernel;
 use crate::multiindex::{Layout, MultiIndexSet};
@@ -35,6 +36,12 @@ pub struct Fgt {
     /// Memory cap in f64 slots for (boxes × coefficients) — exceeding it
     /// reproduces the paper's RAM-exhaustion `X` (2 GB testbed).
     pub mem_cap_slots: usize,
+    /// Run the sparse-box direct path on the GEMM-shaped fast kernel
+    /// (cached box norms + dot products + certified fast exp). Default
+    /// on: FGT answers are ε-verified downstream (the τ-halving loop),
+    /// and the certified ~1e-13 per-pair error is far inside the W·τ
+    /// absolute budget. `false` restores the bit-exact direct path.
+    pub fast_exp: bool,
 }
 
 impl Default for Fgt {
@@ -45,6 +52,7 @@ impl Default for Fgt {
             max_order: 12,
             // 2 GB of f64 — the paper machine's main memory
             mem_cap_slots: (2usize << 30) / 8,
+            fast_exp: true,
         }
     }
 }
@@ -231,14 +239,21 @@ impl Fgt {
         let mut sums = vec![0.0; queries.rows()];
         let mut stats = RunStats { dh_prunes: nonempty, ..Default::default() };
         let direct_cheaper = set.len(); // box with fewer sources: direct
-        // Sparse boxes evaluate exhaustively on the SoA microkernel;
-        // each box's gathered lanes + weights are transposed once and
-        // amortized across every query that visits the box.
-        let mut box_lanes: HashMap<usize, (Vec<f64>, Vec<f64>)> = HashMap::new();
+        // Sparse boxes evaluate exhaustively through the shared tiled
+        // drivers: each box's gathered lanes, weights and (fast path)
+        // squared norms are transposed once and amortized across every
+        // query that visits the box; per-query squared norms are
+        // computed once and reused across its whole neighbor cube.
+        let mut box_lanes: HashMap<usize, (Vec<f64>, Vec<f64>, Vec<f64>)> = HashMap::new();
         let mut sqbuf = vec![0.0; direct_cheaper.max(1)];
         let mut qbox = vec![0usize; d];
         for (qi, sum) in sums.iter_mut().enumerate() {
             let qrow = queries.row(qi);
+            let qnorm: f64 = if self.fast_exp {
+                qrow.iter().map(|v| v * v).sum()
+            } else {
+                0.0
+            };
             for j in 0..d {
                 let mut b = ((qrow[j] - lo[j]) / side) as usize;
                 if b >= boxes_per_dim[j] {
@@ -266,14 +281,27 @@ impl Fgt {
                     let rows = &members[flat];
                     if rows.len() < direct_cheaper {
                         let m = rows.len();
-                        let (soa, wblk) = box_lanes.entry(flat).or_insert_with(|| {
+                        let fast = self.fast_exp;
+                        let (soa, wblk, rnorm) = box_lanes.entry(flat).or_insert_with(|| {
                             let mut soa = vec![0.0; d * m];
                             microkernel::transpose_rows_indexed(refs, rows, m, &mut soa);
                             let wblk: Vec<f64> = rows.iter().map(|&i| weights[i]).collect();
-                            (soa, wblk)
+                            let rnorm: Vec<f64> = if fast {
+                                rows.iter()
+                                    .map(|&i| refs.row(i).iter().map(|v| v * v).sum())
+                                    .collect()
+                            } else {
+                                Vec::new()
+                            };
+                            (soa, wblk, rnorm)
                         });
-                        microkernel::sqdist_soa(qrow, soa, m, m, &mut sqbuf);
-                        microkernel::gauss_in_place(&kernel, &mut sqbuf[..m]);
+                        if fast {
+                            microkernel::dot_soa(qrow, soa, m, m, &mut sqbuf);
+                            tile::gauss_from_norms_into(&kernel, qnorm, rnorm, &mut sqbuf, m);
+                        } else {
+                            microkernel::sqdist_soa(qrow, soa, m, m, &mut sqbuf);
+                            microkernel::gauss_in_place(&kernel, &mut sqbuf[..m]);
+                        }
                         *sum += microkernel::weighted_sum(wblk, &sqbuf[..m]);
                         stats.base_point_pairs += m as u64;
                     } else {
@@ -391,5 +419,20 @@ mod tests {
     #[test]
     fn not_flagged_as_guaranteeing() {
         assert!(!Fgt::default().guarantees_tolerance());
+    }
+
+    #[test]
+    fn fast_and_exact_direct_paths_agree() {
+        // small h drives everything through the sparse-box direct path
+        let data = uniform(250, 2, 105);
+        let p = GaussSumProblem::kde(&data, 0.05, 0.01);
+        let exact_mode = Fgt { fast_exp: false, ..Fgt::new(1e-5) }.run(&p).unwrap();
+        let fast_mode = Fgt::new(1e-5).run(&p).unwrap();
+        assert!(fast_mode.stats.base_point_pairs > 0, "direct path not exercised");
+        for i in 0..250 {
+            let rel = (fast_mode.sums[i] - exact_mode.sums[i]).abs()
+                / exact_mode.sums[i].max(1e-300);
+            assert!(rel <= 1e-10, "i={i}: rel={rel:.2e}");
+        }
     }
 }

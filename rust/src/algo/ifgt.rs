@@ -47,22 +47,29 @@ impl Ifgt {
 }
 
 /// Farthest-point (Gonzalez) k-center clustering: returns (assignment,
-/// center indices). The O(k·N) distance sweep runs on the shared SoA
-/// microkernel: the point set is transposed into lanes once, then each
-/// center streams one branch-free squared-distance pass over them.
+/// center indices). The O(k·N) distance sweep runs on the shared tiled
+/// drivers: the point set is transposed into SoA lanes *and* its
+/// squared norms cached once, then each center streams one GEMM-shaped
+/// pass (`‖c‖² + ‖x‖² − 2·c·x`, one multiply-add chain per dimension)
+/// over the lanes. The norms-trick cancellation (≤ O(ε_mach·‖x‖²)
+/// absolute) is harmless here: any clustering is a *valid* clustering —
+/// radii and the downstream expansion error are computed from it, and
+/// IFGT answers are ε-verified regardless.
 pub fn k_center(points: &Matrix, k: usize, seed: u64) -> (Vec<usize>, Vec<usize>) {
     let n = points.rows();
     let k = k.min(n).max(1);
     let mut centers = Vec::with_capacity(k);
     let mut assign = vec![0usize; n];
     let mut best_d = vec![f64::INFINITY; n];
+    let norms = compute::tile::sq_norms(points);
     let mut scratch = compute::Scratch::with_block(points.cols(), n);
     scratch.load(points, 0, n);
+    scratch.load_ref_norms(&norms, 0, n);
     let first = (seed as usize) % n;
     centers.push(first);
     for c in 0.. {
         let ci = centers[c];
-        let sq = scratch.sqdist_into(points.row(ci));
+        let sq = scratch.sqdist_into_via_norms(points.row(ci), norms[ci]);
         for (i, &d) in sq.iter().enumerate() {
             if d < best_d[i] {
                 best_d[i] = d;

@@ -148,6 +148,13 @@ pub struct RunStats {
     /// Tokens banked / spent by the error-control ledger.
     pub tokens_banked: f64,
     pub tokens_spent: f64,
+    /// Leaf-pair base cases drained through the certified fast tiled
+    /// kernel (norms trick + `exp_block`).
+    pub fast_base_cases: u64,
+    /// Leaf-pair base cases drained through the bit-exact scalar-order
+    /// path (fast-exp off, or the ε-split refused the certified bound
+    /// at this bandwidth).
+    pub exact_base_cases: u64,
     /// Tree construction + moment precomputation seconds.
     pub build_secs: f64,
     /// kd-tree constructions performed by this run: 1–2 for a one-shot
@@ -186,6 +193,8 @@ impl RunStats {
         self.h2l_prunes += other.h2l_prunes;
         self.tokens_banked += other.tokens_banked;
         self.tokens_spent += other.tokens_spent;
+        self.fast_base_cases += other.fast_base_cases;
+        self.exact_base_cases += other.exact_base_cases;
         self.build_secs += other.build_secs;
         self.tree_builds += other.tree_builds;
         self.moment_cache_hits += other.moment_cache_hits;

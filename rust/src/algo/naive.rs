@@ -14,11 +14,24 @@ use super::{AlgoError, GaussSum, GaussSumProblem, GaussSumResult, RunStats};
 pub struct Naive {
     /// Reference block size (cache tile). 0 = unblocked.
     pub block: usize,
+    /// Route through the GEMM-shaped fast driver
+    /// ([`compute::gauss_sum_all_fast`]: cached norms + query tiles +
+    /// certified fast exp). **Off by default**: `Naive` is the
+    /// verification truth every other engine is measured against, so
+    /// its default stays bit-exact; opt in via [`Naive::fast`] for
+    /// workloads where ~1e-13-relative answers are fine.
+    pub fast_exp: bool,
 }
 
 impl Naive {
     pub fn new() -> Self {
-        Naive { block: 256 }
+        Naive { block: 256, fast_exp: false }
+    }
+
+    /// The tiled fast-exp configuration (certified per-pair relative
+    /// error ≤ `errorcontrol::base_case_rel_err(dim, h, max‖x‖²)`).
+    pub fn fast() -> Self {
+        Naive { block: 256, fast_exp: true }
     }
 }
 
@@ -37,7 +50,11 @@ impl GaussSum for Naive {
 
         let block = if self.block == 0 { r.rows() } else { self.block };
         let mut scratch = Scratch::with_block(q.cols(), block.min(r.rows()).max(1));
-        compute::gauss_sum_all(q, r, &w, &kernel, self.block, &mut scratch, &mut sums);
+        if self.fast_exp {
+            compute::gauss_sum_all_fast(q, r, &w, &kernel, self.block, &mut scratch, &mut sums);
+        } else {
+            compute::gauss_sum_all(q, r, &w, &kernel, self.block, &mut scratch, &mut sums);
+        }
 
         stats.base_point_pairs = (q.rows() * r.rows()) as u64;
         Ok(GaussSumResult { sums, stats })
@@ -82,18 +99,32 @@ mod tests {
     fn blocked_equals_unblocked() {
         let m = random(100, 3, 2);
         let p = GaussSumProblem::kde(&m, 0.2, 0.01);
-        let a = Naive { block: 7 }.run(&p).unwrap().sums;
-        let b = Naive { block: 0 }.run(&p).unwrap().sums;
+        let a = Naive { block: 7, ..Naive::default() }.run(&p).unwrap().sums;
+        let b = Naive { block: 0, ..Naive::default() }.run(&p).unwrap().sums;
         for i in 0..a.len() {
             assert!((a[i] - b[i]).abs() < 1e-12 * b[i].max(1.0));
         }
     }
 
     #[test]
+    fn fast_config_matches_exact_within_certified_budget() {
+        let m = random(120, 3, 11);
+        let p = GaussSumProblem::kde(&m, 0.25, 0.01);
+        let exact = Naive::new().run(&p).unwrap().sums;
+        let fast = Naive::fast().run(&p).unwrap().sums;
+        for i in 0..120 {
+            let rel = (fast[i] - exact[i]).abs() / exact[i];
+            assert!(rel <= 1e-12, "i={i}: rel={rel:.2e}");
+        }
+        // the default stays the bit-exact truth configuration
+        assert!(!Naive::new().fast_exp && !Naive::default().fast_exp);
+    }
+
+    #[test]
     fn microkernel_path_matches_scalar_reference() {
         let m = random(80, 4, 6);
         let p = GaussSumProblem::kde(&m, 0.25, 0.01);
-        let got = Naive { block: 0 }.run(&p).unwrap().sums;
+        let got = Naive { block: 0, ..Naive::default() }.run(&p).unwrap().sums;
         let kernel = GaussianKernel::new(0.25);
         let w = vec![1.0; 80];
         let mut want = vec![0.0; 80];

@@ -64,6 +64,16 @@ pub struct PrepareOptions {
     pub truth_cache_capacity: usize,
     /// Thresholds behind [`Method::Auto`].
     pub cost_model: CostModel,
+    /// Run dual-tree base cases on the certified fast tiled kernel
+    /// (default on). The certified error is reserved out of each
+    /// request's ε budget (`errorcontrol::split_epsilon`), so answers
+    /// stay ε-guaranteed; bandwidths where the bound is unaffordable
+    /// fall back to the bit-exact path automatically. `false` forces
+    /// the bit-exact base case for every request (the reference
+    /// configuration, also reachable as the `fast_exp = false` config
+    /// key / `--fast-exp false` CLI flag). Naive answers (the
+    /// verification truth) are always bit-exact regardless.
+    pub fast_exp: bool,
 }
 
 impl Default for PrepareOptions {
@@ -75,6 +85,7 @@ impl Default for PrepareOptions {
             moment_cache_capacity: DEFAULT_MOMENT_CACHE_CAPACITY,
             truth_cache_capacity: DEFAULT_TRUTH_CACHE_CAPACITY,
             cost_model: CostModel::default(),
+            fast_exp: true,
         }
     }
 }
@@ -143,9 +154,10 @@ pub struct Evaluation {
 }
 
 /// Insertion-order-bounded memo backing the session's truth and
-/// clustering-plan caches — deliberately the same capacity/FIFO
-/// eviction policy as the engine's `MomentCache` (kept separate: that
-/// one also owns hit/miss counters and its own locking discipline).
+/// clustering-plan caches. (The engine's `MomentCache` graduated to
+/// true LRU — hot bandwidths get hammered by adaptive h-searches;
+/// truth cells and clustering plans see one access pattern, the sweep
+/// grid, where insertion order ≈ recency, so FIFO stays.)
 struct BoundedMemo<K, V> {
     map: HashMap<K, (u64, V)>,
     next_stamp: u64,
@@ -222,6 +234,7 @@ pub struct Session<'d> {
     weights: Option<Vec<f64>>,
     leaf_size: usize,
     threads: usize,
+    fast_exp: bool,
     cost_model: CostModel,
     data_scale: f64,
     prep_secs: f64,
@@ -243,6 +256,7 @@ impl<'d> Session<'d> {
             moment_cache_capacity,
             truth_cache_capacity,
             cost_model,
+            fast_exp,
         } = opts;
         let (engine, prep_secs) = time_it(|| {
             // placeholder h/ε: prepare ignores them by construction
@@ -264,6 +278,7 @@ impl<'d> Session<'d> {
             weights,
             leaf_size,
             threads: threads.max(1),
+            fast_exp,
             cost_model,
             data_scale,
             prep_secs,
@@ -450,9 +465,10 @@ impl<'d> Session<'d> {
         req: &EvalRequest<'_>,
         threads: usize,
     ) -> Result<Evaluation, AlgoError> {
-        let cfg = method
+        let mut cfg = method
             .dual_tree_config(self.leaf_size, req.plimit)
             .expect("eval_dualtree called with a dual-tree method");
+        cfg.fast_exp = self.fast_exp;
         let (res, secs) = if req.weights.is_some() {
             // per-request weight override: the prepared tree bakes the
             // session weights into its node statistics, so this request

@@ -48,11 +48,25 @@ pub fn fgt_halving(
     exact: &[f64],
     max_attempts: usize,
 ) -> Result<FgtOutcome, AlgoError> {
+    fgt_halving_with(problem, frame, exact, max_attempts, Fgt::default().fast_exp)
+}
+
+/// [`fgt_halving`] with an explicit sparse-box kernel choice —
+/// `fast_exp = false` runs the bit-exact direct path on every attempt
+/// (the `bench_json` old-vs-tiled comparison needs both).
+pub fn fgt_halving_with(
+    problem: &GaussSumProblem<'_>,
+    frame: &GridFrame,
+    exact: &[f64],
+    max_attempts: usize,
+    fast_exp: bool,
+) -> Result<FgtOutcome, AlgoError> {
     let mut tau = problem.epsilon;
     let mut attempts = 0;
     loop {
         attempts += 1;
-        let (r, secs) = time_it(|| Fgt::new(tau).run_with_frame(problem, frame));
+        let fgt = Fgt { fast_exp, ..Fgt::new(tau) };
+        let (r, secs) = time_it(|| fgt.run_with_frame(problem, frame));
         let r = r?;
         let rel = max_relative_error(&r.sums, exact);
         if rel <= problem.epsilon * (1.0 + 1e-9) {

@@ -1,0 +1,201 @@
+//! The machine-readable perf-trajectory runner: times the old
+//! (single-query, libm-exp) base cases against the tiled fast path on
+//! the paper datasets and emits JSON — `BENCH_PR4.json` at the repo
+//! root by convention (`cargo run --release --bin bench_json`).
+//!
+//! No external deps: timing via [`crate::util::timer::time_it`], JSON
+//! emitted by hand and kept parseable by [`crate::util::json`] (the
+//! smoke test round-trips it). Methods covered, per dataset
+//! (astro2d, galaxy3d) at ε = 1e-4, h = Silverman's h*:
+//!
+//! * **Naive** — `gauss_sum_all` (bit-exact) vs `gauss_sum_all_fast`;
+//! * **DFDO / DITO** — one prepared [`SweepEngine`], `fast_exp` off vs
+//!   on (same tree, same memoized moments: the diff is the base case);
+//! * **FGT** — the τ-halving protocol with the sparse-box direct path
+//!   bit-exact vs tiled (may report the paper's X/∞ as a status).
+//!
+//! Every timed answer is ε-verified against the exhaustive truth
+//! before its time is reported.
+
+use crate::algo::dualtree::{DualTreeConfig, SweepEngine};
+use crate::algo::fgt::GridFrame;
+use crate::algo::naive::Naive;
+use crate::algo::{max_relative_error, GaussSum, GaussSumProblem};
+use crate::api::tuning;
+use crate::data;
+use crate::kde::bandwidth::silverman;
+use crate::util::timer::time_it;
+
+/// Knobs for one bench run.
+#[derive(Copy, Clone, Debug)]
+pub struct BenchConfig {
+    /// Points per dataset (default 4000; `--smoke` uses 400).
+    pub n: usize,
+    /// Timing repetitions (median reported; 1 in smoke mode).
+    pub reps: usize,
+    /// Verified relative tolerance for every cell.
+    pub epsilon: f64,
+    /// Marked in the output so consumers can tell smoke JSON from a
+    /// real trajectory point.
+    pub smoke: bool,
+}
+
+impl BenchConfig {
+    pub fn full() -> Self {
+        BenchConfig { n: 4000, reps: 3, epsilon: 1e-4, smoke: false }
+    }
+
+    pub fn smoke() -> Self {
+        BenchConfig { n: 400, reps: 1, epsilon: 1e-4, smoke: true }
+    }
+}
+
+fn median_secs<F: FnMut()>(mut f: F, reps: usize) -> f64 {
+    let mut times: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let ((), s) = time_it(&mut f);
+            s
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+fn num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.6e}")
+    } else {
+        "null".into()
+    }
+}
+
+/// One method's old-vs-tiled cell.
+fn cell(old_secs: f64, tiled_secs: f64, rel_err: f64, status: &str) -> String {
+    format!(
+        "{{\"old_secs\": {}, \"tiled_secs\": {}, \"speedup\": {}, \"rel_err_tiled\": {}, \"status\": \"{status}\"}}",
+        num(old_secs),
+        num(tiled_secs),
+        num(old_secs / tiled_secs),
+        num(rel_err),
+    )
+}
+
+fn failed_cell(status: &str) -> String {
+    format!(
+        "{{\"old_secs\": null, \"tiled_secs\": null, \"speedup\": null, \"rel_err_tiled\": null, \"status\": \"{status}\"}}"
+    )
+}
+
+/// Run the whole protocol and return the JSON document.
+pub fn run_bench(cfg: &BenchConfig) -> String {
+    let eps = cfg.epsilon;
+    let mut dataset_objs: Vec<String> = Vec::new();
+    for name in ["astro2d", "galaxy3d"] {
+        let ds = data::by_name(name, cfg.n, 42).expect("paper dataset");
+        let h = silverman(&ds.points);
+        let problem = GaussSumProblem::kde(&ds.points, h, eps);
+
+        // ---- exhaustive truth (also the Naive "old" timing) ----
+        let (truth, truth_secs) = time_it(|| Naive::new().run(&problem).unwrap().sums);
+        let naive_old = if cfg.reps > 1 {
+            median_secs(|| drop(Naive::new().run(&problem).unwrap()), cfg.reps)
+        } else {
+            truth_secs
+        };
+        let fast_naive = Naive::fast();
+        let mut naive_fast_sums = Vec::new();
+        let naive_tiled = median_secs(
+            || naive_fast_sums = fast_naive.run(&problem).unwrap().sums,
+            cfg.reps,
+        );
+        let naive_rel = max_relative_error(&naive_fast_sums, &truth);
+        assert!(naive_rel <= eps, "{name} Naive(fast): rel {naive_rel:.2e} > ε");
+        let mut methods: Vec<(String, String)> =
+            vec![("Naive".into(), cell(naive_old, naive_tiled, naive_rel, "ok"))];
+
+        // ---- dual-tree variants on one prepared engine ----
+        let engine = SweepEngine::for_kde(&ds.points, 32);
+        let dualtree_cfgs = [
+            ("DFDO", DualTreeConfig { use_tokens: true, series: None, ..Default::default() }),
+            ("DITO", DualTreeConfig::default()),
+        ];
+        for (label, base) in dualtree_cfgs {
+            let old_cfg = DualTreeConfig { fast_exp: false, ..base };
+            let new_cfg = DualTreeConfig { fast_exp: true, ..base };
+            // warm the (shared) moment memo so both modes time the
+            // traversal + base cases, not the h-dependent moment pass
+            engine.evaluate(h, eps, &old_cfg).unwrap();
+            let t_old = median_secs(|| drop(engine.evaluate(h, eps, &old_cfg).unwrap()), cfg.reps);
+            let mut sums = Vec::new();
+            let t_new =
+                median_secs(|| sums = engine.evaluate(h, eps, &new_cfg).unwrap().sums, cfg.reps);
+            let rel = max_relative_error(&sums, &truth);
+            assert!(rel <= eps * (1.0 + 1e-9), "{name} {label}: rel {rel:.2e} > ε");
+            methods.push((label.into(), cell(t_old, t_new, rel, "ok")));
+        }
+
+        // ---- FGT through the paper's τ-halving, both kernels ----
+        let frame = GridFrame::joint(&ds.points, &ds.points);
+        let fgt_cell = {
+            let old = tuning::fgt_halving_with(&problem, &frame, &truth, 20, false);
+            let new = tuning::fgt_halving_with(&problem, &frame, &truth, 20, true);
+            match (old, new) {
+                (Ok(o), Ok(nw)) => cell(o.attempt_secs, nw.attempt_secs, nw.rel_err, "ok"),
+                (Err(crate::algo::AlgoError::RamExhausted(_)), _)
+                | (_, Err(crate::algo::AlgoError::RamExhausted(_))) => failed_cell("X"),
+                _ => failed_cell("inf"),
+            }
+        };
+        methods.push(("FGT".into(), fgt_cell));
+
+        let body: Vec<String> =
+            methods.iter().map(|(k, v)| format!("      \"{k}\": {v}")).collect();
+        dataset_objs.push(format!(
+            "  \"{name}\": {{\n    \"h\": {},\n    \"naive_truth_secs\": {},\n    \"methods\": {{\n{}\n    }}\n  }}",
+            num(h),
+            num(truth_secs),
+            body.join(",\n"),
+        ));
+    }
+    format!(
+        "{{\n\"bench\": \"BENCH_PR4\",\n\"description\": \"old (single-query, libm exp) vs tiled \
+         (norms-trick + certified fast-exp) base cases\",\n\"epsilon\": {},\n\"n\": {},\n\
+         \"reps\": {},\n\"smoke\": {},\n\"generated_by\": \"cargo run --release --bin bench_json\",\n\
+         \"datasets\": {{\n{}\n}}\n}}\n",
+        num(eps),
+        cfg.n,
+        cfg.reps,
+        cfg.smoke,
+        dataset_objs.join(",\n"),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    /// The emitter must produce parseable JSON with every advertised
+    /// cell — this is what the CI smoke step exercises release-built.
+    #[test]
+    fn smoke_bench_emits_parseable_json() {
+        let cfg = BenchConfig { n: 200, reps: 1, epsilon: 1e-4, smoke: true };
+        let text = run_bench(&cfg);
+        let doc = Json::parse(&text).expect("bench_json output must parse");
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("BENCH_PR4"));
+        assert_eq!(doc.get("smoke").unwrap(), &Json::Bool(true));
+        for ds in ["astro2d", "galaxy3d"] {
+            let d = doc.get("datasets").unwrap().get(ds).unwrap_or_else(|| panic!("{ds}"));
+            let methods = d.get("methods").unwrap();
+            for m in ["Naive", "DFDO", "DITO", "FGT"] {
+                let cell = methods.get(m).unwrap_or_else(|| panic!("{ds}/{m}"));
+                assert!(cell.get("status").unwrap().as_str().is_some(), "{ds}/{m}");
+            }
+            // the guaranteed methods always verify at ε
+            for m in ["Naive", "DFDO", "DITO"] {
+                let rel = methods.get(m).unwrap().get("rel_err_tiled").unwrap();
+                assert!(rel.as_f64().unwrap() <= 1e-4, "{ds}/{m}");
+            }
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! `bench_json` — the perf-trajectory runner (see
+//! `fastgauss::benchjson`). Times old vs tiled base cases for
+//! Naive/DFDO/DITO/FGT on astro2d + galaxy3d at ε = 1e-4 and writes
+//! machine-readable JSON.
+//!
+//! ```text
+//! cargo run --release --bin bench_json                 # BENCH_PR4.json
+//! cargo run --release --bin bench_json -- --smoke      # tiny sizes (CI)
+//! cargo run --release --bin bench_json -- --n 8000 --reps 5 --out perf.json
+//! ```
+
+use fastgauss::benchjson::{run_bench, BenchConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cfg = BenchConfig::full();
+    let mut out = "BENCH_PR4.json".to_string();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--smoke" => {
+                cfg = BenchConfig::smoke();
+                i += 1;
+            }
+            "--n" => {
+                cfg.n = args
+                    .get(i + 1)
+                    .and_then(|v| v.parse().ok())
+                    .filter(|&v: &usize| v > 0)
+                    .unwrap_or_else(|| {
+                        eprintln!("--n needs a positive integer");
+                        std::process::exit(2)
+                    });
+                i += 2;
+            }
+            "--reps" => {
+                cfg.reps = args
+                    .get(i + 1)
+                    .and_then(|v| v.parse().ok())
+                    .filter(|&v: &usize| v > 0)
+                    .unwrap_or_else(|| {
+                        eprintln!("--reps needs a positive integer");
+                        std::process::exit(2)
+                    });
+                i += 2;
+            }
+            "--out" => {
+                out = args.get(i + 1).cloned().unwrap_or_else(|| {
+                    eprintln!("--out needs a path");
+                    std::process::exit(2)
+                });
+                i += 2;
+            }
+            other => {
+                eprintln!(
+                    "unknown option {other:?}\nusage: bench_json [--smoke] [--n N] [--reps R] [--out FILE]"
+                );
+                std::process::exit(2);
+            }
+        }
+    }
+    let json = run_bench(&cfg);
+    std::fs::write(&out, &json).unwrap_or_else(|e| {
+        eprintln!("writing {out}: {e}");
+        std::process::exit(1);
+    });
+    eprintln!("wrote {out} (n = {}, reps = {}, smoke = {})", cfg.n, cfg.reps, cfg.smoke);
+    print!("{json}");
+}

@@ -28,6 +28,7 @@ const USAGE: &str = "usage: fastgauss <table|kde|datagen|selftest|runtime> [--op
 options: --dataset NAME --n N --seed S --epsilon E --algos a,b,c
          --workers W --leaf-size L --multipliers m1,m2 --h H
          --method naive|fgt|ifgt|dfd|dfdo|dfto|dito|auto
+         --fast-exp true|false (certified tiled base case; default true)
          --out FILE --config FILE";
 
 /// Entry point used by `main.rs`. Returns the process exit code.
@@ -65,7 +66,12 @@ fn load_dataset(cfg: &RunConfig) -> Result<data::Dataset> {
 fn session_for<'d>(cfg: &RunConfig, ds: &'d data::Dataset) -> Session<'d> {
     Session::prepare(
         &ds.points,
-        PrepareOptions { leaf_size: cfg.leaf_size, threads: cfg.workers, ..Default::default() },
+        PrepareOptions {
+            leaf_size: cfg.leaf_size,
+            threads: cfg.workers,
+            fast_exp: cfg.fast_exp,
+            ..Default::default()
+        },
     )
 }
 
@@ -103,6 +109,7 @@ fn cmd_table(cfg: &RunConfig) -> Result<()> {
         algorithms,
         workers: cfg.workers,
         leaf_size: cfg.leaf_size,
+        fast_exp: cfg.fast_exp,
     };
     let res = run_sweep(&sweep);
     print!("{}", crate::coordinator::report::render_table(&res));
@@ -229,6 +236,18 @@ mod tests {
             .iter()
             .map(|s| s.to_string())
             .collect();
+        run(&args).unwrap();
+    }
+
+    #[test]
+    fn selftest_with_fast_exp_off_uses_bit_exact_path() {
+        // --fast-exp false must thread through config → session →
+        // DualTreeConfig and still pass every engine's ε check
+        let args: Vec<String> =
+            ["selftest", "--n", "150", "--dataset", "astro2d", "--fast-exp", "false"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
         run(&args).unwrap();
     }
 

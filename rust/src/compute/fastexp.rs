@@ -1,0 +1,198 @@
+//! A certified fast exponential for kernel blocks.
+//!
+//! The Gaussian base case spends most of its time in `f64::exp`: one
+//! libm call per (query, reference) pair, opaque to the vectorizer. The
+//! paper's error-control scheme is explicitly designed to "integrate
+//! any arbitrary approximation method", which licenses replacing libm
+//! with a *certified* polynomial approximation and charging its bound
+//! against the same ε budget (`errorcontrol::split_epsilon` performs
+//! the split; see DESIGN.md §"Tiled base cases").
+//!
+//! [`fast_exp`] is the classic branch-free range reduction
+//!
+//! ```text
+//!   k = round(x / ln 2),   r = x − k·ln 2   (|r| ≤ ln(2)/2 + 1 ulp)
+//!   exp(x) = 2^k · exp(r) ≈ 2^k · P₁₁(r)
+//! ```
+//!
+//! with `P₁₁` the degree-11 Taylor polynomial of `exp` and the `2^k`
+//! scaling done by assembling the exponent bits directly — no table, no
+//! data-dependent branch, and the whole body inlines into the block
+//! loops of [`exp_block`] where it auto-vectorizes.
+//!
+//! # Certified error bound
+//!
+//! On the domain `[EXP_UNDERFLOW_X, 709]` the relative error versus the
+//! true exponential is at most [`EXP_MAX_REL_ERR`] = 1e-13. The budget
+//! decomposes as follows (u = 2⁻⁵³, |r| ≤ ρ = ln(2)/2 ≈ 0.34658):
+//!
+//! * **Truncation.** The Taylor remainder after degree 11 is
+//!   `|exp(r) − P₁₁(r)| ≤ ρ¹²/12! · e^ρ ≤ 8.9e-15`; relative to
+//!   `exp(r) ≥ e^(−ρ) ≈ 0.7071` that is ≤ 1.26e-14.
+//! * **Range reduction.** `k·LN2_HI` is exact (LN2_HI carries 20
+//!   trailing zero bits and |k| ≤ 1024 < 2²⁰), and the first
+//!   subtraction cancels exactly, so the computed `r` differs from the
+//!   true reduced argument by ≤ 1 ulp(ρ) + |k|·ulp(LN2_LO) ≤ 6e-17;
+//!   `exp`'s sensitivity turns |Δr| into the same relative error.
+//! * **Polynomial rounding.** Horner with 11 fused steps on |r| ≤ ρ
+//!   accumulates ≤ 24·u·e^ρ/e^(−ρ) ≤ 5.3e-15 relative.
+//! * **Scaling.** Multiplying by the exactly-representable power of two
+//!   `2^k` adds ≤ 1 ulp = 1.1e-16 (the result is normal on the stated
+//!   domain, so no double-rounding in the subnormal range).
+//!
+//! Total ≤ 2.0e-14, certified as 1e-13 with a 5× margin; the property
+//! suite (`rust/tests/tiled_basecase.rs`) checks the bound on 10⁶
+//! random inputs plus the adversarial seams (reduction boundaries,
+//! underflow tail, ±0).
+//!
+//! Below `EXP_UNDERFLOW_X` the function returns exactly 0.0. True
+//! values there are < e⁻⁷⁰⁸ ≈ 3.3e-308 (the bottom of the normal f64
+//! range), so zeroing the tail contributes < 3.3e-308·W of *absolute*
+//! error to any Gaussian sum — negligible against every representable
+//! error budget (see `errorcontrol::split_epsilon` for where this is
+//! accounted).
+
+/// Certified relative-error bound of [`fast_exp`] / [`exp_block`] on
+/// `[EXP_UNDERFLOW_X, 709]` (derivation in the module docs).
+pub const EXP_MAX_REL_ERR: f64 = 1e-13;
+
+/// Arguments below this return exactly 0.0. Chosen so that every
+/// non-zero result is a *normal* f64 (e⁻⁷⁰⁸ > DBL_MIN), keeping the
+/// bit-assembled `2^k` scaling exact.
+pub const EXP_UNDERFLOW_X: f64 = -708.0;
+
+/// 1/ln(2).
+const INV_LN2: f64 = std::f64::consts::LOG2_E;
+/// High part of ln(2): 20 trailing zero mantissa bits, so `k·LN2_HI`
+/// is exact for |k| < 2²⁰ (fdlibm's split).
+#[allow(clippy::excessive_precision)]
+const LN2_HI: f64 = 6.931_471_803_691_238_164_90e-1;
+/// Low part: ln(2) − LN2_HI to full precision.
+#[allow(clippy::excessive_precision)]
+const LN2_LO: f64 = 1.908_214_929_270_587_700_02e-10;
+
+/// Taylor coefficients 1/j! for j = 0..=11.
+const C: [f64; 12] = [
+    1.0,
+    1.0,
+    1.0 / 2.0,
+    1.0 / 6.0,
+    1.0 / 24.0,
+    1.0 / 120.0,
+    1.0 / 720.0,
+    1.0 / 5040.0,
+    1.0 / 40320.0,
+    1.0 / 362880.0,
+    1.0 / 3628800.0,
+    1.0 / 39916800.0,
+];
+
+/// Branch-free range-reduced polynomial `exp` with the certified bound
+/// [`EXP_MAX_REL_ERR`] on `[EXP_UNDERFLOW_X, 709]`; exactly 0.0 below,
+/// unspecified above 709 and on non-finite input (the kernel paths
+/// only produce finite non-positive arguments).
+#[inline]
+pub fn fast_exp(x: f64) -> f64 {
+    let k = (x * INV_LN2).round();
+    let r = (x - k * LN2_HI) - k * LN2_LO;
+    // degree-11 Taylor, Horner form
+    let mut p = C[11];
+    p = p * r + C[10];
+    p = p * r + C[9];
+    p = p * r + C[8];
+    p = p * r + C[7];
+    p = p * r + C[6];
+    p = p * r + C[5];
+    p = p * r + C[4];
+    p = p * r + C[3];
+    p = p * r + C[2];
+    p = p * r + C[1];
+    p = p * r + C[0];
+    // 2^k assembled from the exponent bits; the clamp only engages
+    // outside the certified domain, where the select below discards
+    // the value anyway (no wrap-around garbage reaches a caller).
+    let biased = (1023i64 + k as i64).clamp(0, 2046) as u64;
+    let scale = f64::from_bits(biased << 52);
+    // compiles to a select on the already-computed value, not a branch
+    // around the computation
+    if x < EXP_UNDERFLOW_X {
+        return 0.0;
+    }
+    p * scale
+}
+
+/// In-place [`fast_exp`] over a block of exponents — the fused tail of
+/// the tiled base case (`compute::tile`): one straight-line pass the
+/// auto-vectorizer handles, no per-element libm call.
+#[inline]
+pub fn exp_block(xs: &mut [f64]) {
+    for v in xs.iter_mut() {
+        *v = fast_exp(*v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rel_err(x: f64) -> f64 {
+        let truth = x.exp();
+        let got = fast_exp(x);
+        (got - truth).abs() / truth
+    }
+
+    #[test]
+    fn exact_at_zero_both_signs() {
+        assert_eq!(fast_exp(0.0), 1.0);
+        assert_eq!(fast_exp(-0.0), 1.0);
+    }
+
+    #[test]
+    fn certified_bound_on_spot_checks() {
+        for x in [
+            -1e-300, -1e-16, -0.1, -0.5, -1.0, -2.0, -10.0, -87.3, -345.678, -700.0, -707.999,
+        ] {
+            assert!(rel_err(x) <= EXP_MAX_REL_ERR, "x={x}: rel={:.2e}", rel_err(x));
+        }
+    }
+
+    #[test]
+    fn positive_domain_also_within_bound() {
+        // clamped-negative squared distances can round to tiny positive
+        // exponents; the certification extends to [0, 709]
+        for x in [1e-18, 0.3, 1.0, 100.0, 700.0] {
+            assert!(rel_err(x) <= EXP_MAX_REL_ERR, "x={x}");
+        }
+    }
+
+    #[test]
+    fn underflow_tail_is_exactly_zero() {
+        for x in [-708.0001, -710.0, -745.0, -1e4, -1e300, f64::MIN] {
+            assert_eq!(fast_exp(x), 0.0, "x={x}");
+        }
+        // the boundary itself is still computed (and positive)
+        assert!(fast_exp(EXP_UNDERFLOW_X) > 0.0);
+    }
+
+    #[test]
+    fn reduction_seams() {
+        // half-ln2 multiples sit exactly on the k-rounding boundary
+        let ulp_up = |x: f64| f64::from_bits(x.to_bits() - 1); // toward 0 for negative x
+        let ulp_down = |x: f64| f64::from_bits(x.to_bits() + 1);
+        let ln2 = std::f64::consts::LN_2;
+        for m in 1..1000 {
+            let x = -(m as f64) * 0.5 * ln2;
+            assert!(rel_err(x) <= EXP_MAX_REL_ERR, "m={m}");
+            assert!(rel_err(ulp_up(x)) <= EXP_MAX_REL_ERR, "m={m}+ulp");
+            assert!(rel_err(ulp_down(x)) <= EXP_MAX_REL_ERR, "m={m}-ulp");
+        }
+    }
+
+    #[test]
+    fn block_matches_scalar() {
+        let mut xs = vec![-0.0, -0.25, -3.5, -100.0, -720.0];
+        let want: Vec<f64> = xs.iter().map(|&x| fast_exp(x)).collect();
+        exp_block(&mut xs);
+        assert_eq!(xs, want);
+    }
+}

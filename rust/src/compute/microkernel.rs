@@ -52,6 +52,53 @@ pub fn sqdist_soa(q: &[f64], soa: &[f64], stride: usize, n: usize, sq: &mut [f64
     }
 }
 
+/// `out[j] = Σ_k q[k]·soa[k·stride + j]` over `n` SoA lanes — the
+/// dot-product half of the norms-trick squared distance
+/// `‖q − r‖² = ‖q‖² + ‖r‖² − 2·q·r` used by the tiled base case
+/// ([`crate::compute::tile`]).
+pub fn dot_soa(q: &[f64], soa: &[f64], stride: usize, n: usize, out: &mut [f64]) {
+    let out = &mut out[..n];
+    out.fill(0.0);
+    for (k, &qk) in q.iter().enumerate() {
+        let lane = &soa[k * stride..k * stride + n];
+        for j in 0..n {
+            out[j] += qk * lane[j];
+        }
+    }
+}
+
+/// GEMM-shaped dot products of a query tile against reference lanes:
+/// `tile[t·rstride + j] = Σ_k qsoa[k·qstride + t]·rsoa[k·rstride + j]`
+/// for `t < nq`, `j < n`. Each reference lane is streamed once per
+/// *tile* instead of once per query — the register/cache reuse the
+/// single-query sweep leaves on the table.
+pub fn dot_tile(
+    qsoa: &[f64],
+    qstride: usize,
+    nq: usize,
+    rsoa: &[f64],
+    rstride: usize,
+    n: usize,
+    dims: usize,
+    tile: &mut [f64],
+) {
+    debug_assert!(nq <= qstride && dims * qstride <= qsoa.len());
+    debug_assert!(n <= rstride && nq * rstride <= tile.len());
+    for t in 0..nq {
+        tile[t * rstride..t * rstride + n].fill(0.0);
+    }
+    for k in 0..dims {
+        let lane = &rsoa[k * rstride..k * rstride + n];
+        for t in 0..nq {
+            let qv = qsoa[k * qstride + t];
+            let row = &mut tile[t * rstride..t * rstride + n];
+            for j in 0..n {
+                row[j] += qv * lane[j];
+            }
+        }
+    }
+}
+
 /// In place Gaussian over a block of squared distances:
 /// `sq[j] ← K(sq[j])`. No per-pair branching — one fused exp pass.
 pub fn gauss_in_place(kernel: &GaussianKernel, sq: &mut [f64]) {
@@ -99,6 +146,50 @@ mod tests {
         let mut soa = vec![0.0; 8];
         transpose_rows_indexed(&pts, &[3, 0, 2], 8, &mut soa);
         assert_eq!(&soa[..3], &[4.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn dot_soa_matches_manual_dot() {
+        let pts = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, -1.0], vec![0.5, 0.25]]);
+        let stride = 4;
+        let mut soa = vec![0.0; 2 * stride];
+        transpose_rows(&pts, 0, 3, stride, &mut soa);
+        let q = [2.0, -0.5];
+        let mut out = vec![0.0; stride];
+        dot_soa(&q, &soa, stride, 3, &mut out);
+        for j in 0..3 {
+            let want: f64 = q.iter().zip(pts.row(j)).map(|(a, b)| a * b).sum();
+            assert_eq!(out[j], want, "lane {j}");
+        }
+    }
+
+    #[test]
+    fn dot_tile_matches_per_query_dot_soa() {
+        let mut rng = Pcg32::new(31);
+        let d = 3;
+        let refs = Matrix::from_rows(
+            &(0..11).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect::<Vec<_>>(),
+        );
+        let queries = Matrix::from_rows(
+            &(0..5).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect::<Vec<_>>(),
+        );
+        let rstride = 16;
+        let mut rsoa = vec![0.0; d * rstride];
+        transpose_rows(&refs, 0, 11, rstride, &mut rsoa);
+        let qstride = 8;
+        let mut qsoa = vec![0.0; d * qstride];
+        for t in 0..5 {
+            for k in 0..d {
+                qsoa[k * qstride + t] = queries.get(t, k);
+            }
+        }
+        let mut tile = vec![0.0; 5 * rstride];
+        dot_tile(&qsoa, qstride, 5, &rsoa, rstride, 11, d, &mut tile);
+        let mut per_query = vec![0.0; rstride];
+        for t in 0..5 {
+            dot_soa(queries.row(t), &rsoa, rstride, 11, &mut per_query);
+            assert_eq!(&tile[t * rstride..t * rstride + 11], &per_query[..11], "tile row {t}");
+        }
     }
 
     #[test]

@@ -32,6 +32,16 @@
 //! [`reference::scalar_gauss_sums`] keeps the pre-microkernel loop
 //! alive as the ground truth for tests and the `§basecase` ablation.
 //!
+//! # The fast tiled path
+//!
+//! On top of the bit-exact microkernel sits the GEMM-shaped fast base
+//! case ([`tile`]): cached squared norms + a blocked dot-product tile
+//! replace the per-query subtract-square-accumulate sweep, and the
+//! certified polynomial [`fastexp`] replaces per-pair libm `exp`. Its
+//! per-pair relative error is *certified* and charged against the
+//! caller's ε budget by `errorcontrol::split_epsilon`; drivers that
+//! serve as verification truth keep the exact path.
+//!
 //! # Allocation contract
 //!
 //! All block state lives in a caller-owned [`Scratch`] arena. Sizing it
@@ -39,9 +49,11 @@
 //! allocation-free — the dual-tree traversal holds one `Scratch` per
 //! worker thread and performs **zero** allocations after prepare.
 
+pub mod fastexp;
 pub mod microkernel;
 pub mod reference;
 mod scratch;
+pub mod tile;
 
 pub use scratch::Scratch;
 
@@ -80,6 +92,40 @@ pub fn gauss_sum_all(
         for (qi, sum) in out.iter_mut().enumerate() {
             *sum += scratch.gauss_dot(kernel, queries.row(qi));
         }
+    }
+}
+
+/// [`gauss_sum_all`] on the GEMM-shaped fast path: squared distances
+/// from the norms outer sum, [`tile::QUERY_TILE`] queries per pass over
+/// each reference block, and the certified [`fastexp`] instead of libm.
+/// Per-pair kernel values carry relative error ≤
+/// `errorcontrol::base_case_rel_err(dim, h, max‖x‖²)`; exhaustive
+/// *truth* paths (`algo::naive::Naive::new`, verification baselines)
+/// stay on the bit-exact [`gauss_sum_all`].
+pub fn gauss_sum_all_fast(
+    queries: &Matrix,
+    refs: &Matrix,
+    weights: &[f64],
+    kernel: &GaussianKernel,
+    block: usize,
+    scratch: &mut Scratch,
+    out: &mut [f64],
+) {
+    assert_eq!(queries.cols(), refs.cols(), "dimension mismatch");
+    assert_eq!(weights.len(), refs.rows(), "weights length");
+    assert_eq!(out.len(), queries.rows(), "output length");
+    if refs.rows() == 0 {
+        return;
+    }
+    let qnorms = tile::sq_norms(queries);
+    let rnorms = tile::sq_norms(refs);
+    let block = if block == 0 { refs.rows() } else { block };
+    for rb in (0..refs.rows()).step_by(block) {
+        let rend = (rb + block).min(refs.rows());
+        scratch.load(refs, rb, rend);
+        scratch.load_weights(weights, rb, rend);
+        scratch.load_ref_norms(&rnorms, rb, rend);
+        tile::gauss_sums_fast_on_loaded(scratch, kernel, queries, &qnorms, 0, queries.rows(), out);
     }
 }
 
@@ -163,6 +209,30 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn fast_driver_matches_exact_within_certified_budget() {
+        let q = random(37, 3, 8);
+        let r = random(101, 3, 9);
+        let w: Vec<f64> = (0..101).map(|i| 0.4 + 0.01 * i as f64).collect();
+        let kernel = GaussianKernel::new(0.3);
+        let mut exact = vec![0.0; 37];
+        reference::scalar_gauss_sums(&q, &r, &w, &kernel, &mut exact);
+        for block in [0, 16, 64] {
+            let mut scratch = Scratch::new(3);
+            let mut fast = vec![0.0; 37];
+            gauss_sum_all_fast(&q, &r, &w, &kernel, block, &mut scratch, &mut fast);
+            for i in 0..37 {
+                let rel = (fast[i] - exact[i]).abs() / exact[i];
+                assert!(rel <= 1e-12, "block={block} i={i}: rel={rel:.2e}");
+            }
+        }
+        // empty reference set is a no-op on the fast path too
+        let empty = Matrix::zeros(0, 3);
+        let mut out = vec![7.0; 37];
+        gauss_sum_all_fast(&q, &empty, &[], &kernel, 0, &mut Scratch::new(3), &mut out);
+        assert!(out.iter().all(|&v| v == 7.0));
     }
 
     #[test]

@@ -4,10 +4,12 @@ use crate::geometry::Matrix;
 use crate::kernel::GaussianKernel;
 
 use super::microkernel;
+use super::tile::QUERY_TILE;
 use super::BLOCK;
 
-/// Reusable block workspace: SoA coordinate lanes, a weight lane and a
-/// squared-distance/kernel-value lane.
+/// Reusable block workspace: SoA coordinate lanes, a weight lane, a
+/// squared-distance/kernel-value lane, and (for the tiled fast path,
+/// see [`super::tile`]) a reference-norm lane plus a query tile.
 ///
 /// Capacity grows on demand, so sizing is an *optimization*, not a
 /// correctness requirement: construct it once with the largest block the
@@ -16,17 +18,26 @@ use super::BLOCK;
 /// `Scratch` per worker thread inside its per-run state.
 #[derive(Clone, Debug)]
 pub struct Scratch {
-    dim: usize,
+    pub(super) dim: usize,
     /// Lane capacity (the SoA stride).
-    cap: usize,
+    pub(super) cap: usize,
     /// Lanes currently loaded.
-    len: usize,
+    pub(super) len: usize,
     /// Dim-major coordinates: `soa[k·cap + j]` = coordinate k of lane j.
-    soa: Vec<f64>,
+    pub(super) soa: Vec<f64>,
     /// Per-lane weights.
-    w: Vec<f64>,
+    pub(super) w: Vec<f64>,
     /// Per-lane squared distances, overwritten with kernel values.
-    sq: Vec<f64>,
+    pub(super) sq: Vec<f64>,
+    /// Per-lane cached squared norms ‖r‖² (tiled fast path only).
+    pub(super) rnorm: Vec<f64>,
+    /// Dim-major query tile, stride [`QUERY_TILE`].
+    pub(super) qsoa: Vec<f64>,
+    /// Per-tile-row query squared norms.
+    pub(super) qnorm: [f64; QUERY_TILE],
+    /// QUERY_TILE × cap exponent/kernel-value tile (sized lazily by
+    /// [`Scratch::ensure_tile`] — only the tiled drivers pay for it).
+    pub(super) tile: Vec<f64>,
 }
 
 impl Scratch {
@@ -45,6 +56,10 @@ impl Scratch {
             soa: vec![0.0; dim.max(1) * cap],
             w: vec![0.0; cap],
             sq: vec![0.0; cap],
+            rnorm: vec![0.0; cap],
+            qsoa: vec![0.0; dim.max(1) * QUERY_TILE],
+            qnorm: [0.0; QUERY_TILE],
+            tile: Vec::new(),
         }
     }
 
@@ -69,6 +84,19 @@ impl Scratch {
             self.soa = vec![0.0; self.dim.max(1) * n];
             self.w = vec![0.0; n];
             self.sq = vec![0.0; n];
+            self.rnorm = vec![0.0; n];
+            if !self.tile.is_empty() {
+                self.tile = vec![0.0; QUERY_TILE * n];
+            }
+        }
+    }
+
+    /// Size the QUERY_TILE × cap value tile (lazy: only the tiled fast
+    /// drivers need it, and e.g. the k-center sweep's giant scratch
+    /// never should pay QUERY_TILE× its lane memory).
+    pub(super) fn ensure_tile(&mut self) {
+        if self.tile.len() < QUERY_TILE * self.cap {
+            self.tile = vec![0.0; QUERY_TILE * self.cap];
         }
     }
 
@@ -110,11 +138,39 @@ impl Scratch {
         }
     }
 
+    /// Load the cached squared-norm lane for the same range as the last
+    /// [`load`] (tiled fast path; `norms[i]` = ‖pts.row(i)‖²).
+    ///
+    /// [`load`]: Scratch::load
+    pub fn load_ref_norms(&mut self, norms: &[f64], begin: usize, end: usize) {
+        debug_assert_eq!(end - begin, self.len, "norm range must match loaded lanes");
+        self.rnorm[..self.len].copy_from_slice(&norms[begin..end]);
+    }
+
     /// Squared distances from `q` to every loaded lane; returns the
     /// filled slice.
     pub fn sqdist_into(&mut self, q: &[f64]) -> &[f64] {
         microkernel::sqdist_soa(q, &self.soa, self.cap, self.len, &mut self.sq);
         &self.sq[..self.len]
+    }
+
+    /// Squared distances via the norms trick
+    /// `‖q − r‖² = ‖q‖² + ‖r‖² − 2·q·r` (clamped at 0), using the lane
+    /// norms loaded by [`load_ref_norms`]. One multiply-add stream per
+    /// dimension instead of sub-square-add — the GEMM-shaped form. The
+    /// cancellation error is O(ε_mach·‖q‖·‖r‖) *absolute* (not
+    /// relative), which is why ε-guaranteed callers go through
+    /// `errorcontrol::split_epsilon` before choosing this path.
+    ///
+    /// [`load_ref_norms`]: Scratch::load_ref_norms
+    pub fn sqdist_into_via_norms(&mut self, q: &[f64], qnorm: f64) -> &[f64] {
+        microkernel::dot_soa(q, &self.soa, self.cap, self.len, &mut self.sq);
+        let n = self.len;
+        let (sq, rnorm) = (&mut self.sq[..n], &self.rnorm[..n]);
+        for j in 0..n {
+            sq[j] = (qnorm + rnorm[j] - 2.0 * sq[j]).max(0.0);
+        }
+        &self.sq[..n]
     }
 
     /// The fused hot path: squared distances from `q`, Gaussian over the
@@ -143,6 +199,25 @@ mod tests {
         let sq = s.sqdist_into(&[0.0, 0.0]);
         for (j, &v) in sq.iter().enumerate() {
             assert_eq!(v, (j * j) as f64);
+        }
+    }
+
+    #[test]
+    fn sqdist_via_norms_matches_direct_within_cancellation() {
+        let pts = Matrix::from_rows(&[vec![0.1, 0.9], vec![0.4, 0.4], vec![0.85, 0.2]]);
+        let norms: Vec<f64> = (0..3)
+            .map(|i| pts.row(i).iter().map(|v| v * v).sum())
+            .collect();
+        let mut s = Scratch::new(2);
+        s.load(&pts, 0, 3);
+        s.load_ref_norms(&norms, 0, 3);
+        let q = [0.3, 0.6];
+        let qn: f64 = q.iter().map(|v| v * v).sum();
+        let via_norms: Vec<f64> = s.sqdist_into_via_norms(&q, qn).to_vec();
+        for (j, &v) in via_norms.iter().enumerate() {
+            let direct = sqdist(&q, pts.row(j));
+            assert!((v - direct).abs() <= 1e-14, "lane {j}: {v} vs {direct}");
+            assert!(v >= 0.0);
         }
     }
 

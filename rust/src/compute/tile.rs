@@ -1,0 +1,206 @@
+//! GEMM-shaped Q×R tile drivers — the fast base case.
+//!
+//! The single-query sweep ([`Scratch::gauss_dot`]) re-streams the
+//! reference SoA lanes once *per query* and pays one libm `exp` per
+//! pair. The tiled drivers here restructure the same leaf-sized
+//! workload the way hardware likes it:
+//!
+//! 1. **Norms outer sum.** Squared distances come from the cached
+//!    per-point squared norms (`‖q − r‖² = ‖q‖² + ‖r‖² − 2·q·r`,
+//!    clamped at 0) — reference norms are computed once per dataset
+//!    (at `KdTree::build`, h-independent) and live alongside the
+//!    reordered points.
+//! 2. **Dot-product tile.** [`microkernel::dot_tile`] streams each
+//!    reference lane once per [`QUERY_TILE`] queries, a blocked
+//!    multiply-accumulate the auto-vectorizer turns into FMA chains.
+//! 3. **Fused fast exp.** The whole tile's exponents go through one
+//!    [`fastexp::exp_block`] pass with a *certified* relative-error
+//!    bound ([`fastexp::EXP_MAX_REL_ERR`]) instead of per-pair libm
+//!    calls.
+//!
+//! The drivers never decide on their own whether the certified error is
+//! affordable: ε-guaranteed callers run `errorcontrol::split_epsilon`
+//! first, which subtracts the certified base-case error from the ε
+//! budget (and falls back to the bit-exact [`Scratch::gauss_dot`] path
+//! when the bandwidth is too small for the norms trick to be safe).
+
+use crate::geometry::Matrix;
+use crate::kernel::GaussianKernel;
+
+use super::fastexp;
+use super::microkernel;
+use super::Scratch;
+
+/// Queries processed per tile row-block: 8 keeps the query lanes and a
+/// 2 KiB-per-row value tile L1-resident next to the reference lanes.
+pub const QUERY_TILE: usize = 8;
+
+/// Per-row squared norms `‖x_i‖²` of a point set, dims accumulated in
+/// ascending order — the h-independent half of the norms-trick squared
+/// distance. `KdTree::build` caches this in tree order.
+pub fn sq_norms(points: &Matrix) -> Vec<f64> {
+    (0..points.rows())
+        .map(|i| {
+            let row = points.row(i);
+            let mut s = 0.0;
+            for &v in row {
+                s += v * v;
+            }
+            s
+        })
+        .collect()
+}
+
+/// Turn a dot-product row into Gaussian kernel values in place:
+/// `vals[j] = K̃(max(qnorm + rnorm[j] − 2·vals[j], 0))` with the
+/// certified fast exp. Shared by the tiled drivers and FGT's
+/// sparse-box direct path.
+#[inline]
+pub fn gauss_from_norms_into(
+    kernel: &GaussianKernel,
+    qnorm: f64,
+    rnorm: &[f64],
+    vals: &mut [f64],
+    n: usize,
+) {
+    let neg = kernel.neg_inv_two_h2();
+    let (vals, rnorm) = (&mut vals[..n], &rnorm[..n]);
+    for j in 0..n {
+        vals[j] = (qnorm + rnorm[j] - 2.0 * vals[j]).max(0.0) * neg;
+    }
+    fastexp::exp_block(vals);
+}
+
+/// The fast tiled base case: query rows `[qb, qe)` of `queries` (with
+/// per-row squared norms `qnorms`, indexed by absolute row) against the
+/// lanes currently loaded in `scratch` ([`Scratch::load`] +
+/// [`Scratch::load_weights`] + [`Scratch::load_ref_norms`]).
+/// Accumulates `out[i] += Σ_j w_j·K̃(‖q_(qb+i) − r_j‖)`.
+///
+/// Per pair the kernel value carries relative error ≤
+/// [`fastexp::EXP_MAX_REL_ERR`] plus the norms-trick cancellation term
+/// bounded by `errorcontrol::base_case_rel_err` — callers charge that
+/// against their ε budget.
+pub fn gauss_sums_fast_on_loaded(
+    scratch: &mut Scratch,
+    kernel: &GaussianKernel,
+    queries: &Matrix,
+    qnorms: &[f64],
+    qb: usize,
+    qe: usize,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(queries.cols(), scratch.dim, "scratch dimension mismatch");
+    debug_assert_eq!(out.len(), qe - qb, "output length");
+    let n = scratch.len;
+    if n == 0 || qe == qb {
+        return;
+    }
+    scratch.ensure_tile();
+    let d = queries.cols();
+    let stride = scratch.cap;
+    let Scratch { soa, w, rnorm, qsoa, qnorm, tile, .. } = scratch;
+    let mut q = qb;
+    while q < qe {
+        let nq = QUERY_TILE.min(qe - q);
+        for t in 0..nq {
+            let row = queries.row(q + t);
+            for k in 0..d {
+                qsoa[k * QUERY_TILE + t] = row[k];
+            }
+            qnorm[t] = qnorms[q + t];
+        }
+        microkernel::dot_tile(qsoa, QUERY_TILE, nq, soa, stride, n, d, tile);
+        for t in 0..nq {
+            let row = &mut tile[t * stride..t * stride + n];
+            gauss_from_norms_into(kernel, qnorm[t], rnorm, row, n);
+            out[q - qb + t] += microkernel::weighted_sum(&w[..n], row);
+        }
+        q += nq;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::reference;
+    use crate::util::Pcg32;
+
+    fn random(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg32::new(seed);
+        Matrix::from_rows(
+            &(0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect::<Vec<_>>(),
+        )
+    }
+
+    #[test]
+    fn sq_norms_matches_manual() {
+        let m = Matrix::from_rows(&[vec![3.0, 4.0], vec![0.0, 0.0], vec![-1.0, 2.0]]);
+        assert_eq!(sq_norms(&m), vec![25.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn fast_tile_matches_scalar_reference_within_certified_budget() {
+        let kernel = GaussianKernel::new(0.35);
+        for (nq, nr, d) in [(1, 1, 1), (3, 7, 2), (8, 13, 3), (13, 40, 5), (30, 64, 2)] {
+            let q = random(nq, d, 500 + nq as u64);
+            let r = random(nr, d, 600 + nr as u64);
+            let w: Vec<f64> = (0..nr).map(|i| 0.5 + 0.01 * i as f64).collect();
+            let mut want = vec![0.0; nq];
+            reference::scalar_gauss_sums(&q, &r, &w, &kernel, &mut want);
+            let qnorms = sq_norms(&q);
+            let rnorms = sq_norms(&r);
+            let mut scratch = Scratch::new(d);
+            scratch.load(&r, 0, nr);
+            scratch.load_weights(&w, 0, nr);
+            scratch.load_ref_norms(&rnorms, 0, nr);
+            let mut got = vec![0.0; nq];
+            gauss_sums_fast_on_loaded(&mut scratch, &kernel, &q, &qnorms, 0, nq, &mut got);
+            for i in 0..nq {
+                let rel = (got[i] - want[i]).abs() / want[i];
+                assert!(rel <= 1e-12, "nq={nq} nr={nr} d={d} i={i}: rel={rel:.2e}");
+            }
+        }
+    }
+
+    #[test]
+    fn gauss_from_norms_matches_eval_sq() {
+        let kernel = GaussianKernel::new(0.6);
+        let r = random(9, 3, 77);
+        let rnorms = sq_norms(&r);
+        let q = [0.2, 0.5, 0.9];
+        let qn: f64 = q.iter().map(|v| v * v).sum();
+        let stride = 16;
+        let mut soa = vec![0.0; 3 * stride];
+        microkernel::transpose_rows(&r, 0, 9, stride, &mut soa);
+        let mut vals = vec![0.0; stride];
+        microkernel::dot_soa(&q, &soa, stride, 9, &mut vals);
+        gauss_from_norms_into(&kernel, qn, &rnorms, &mut vals, 9);
+        for j in 0..9 {
+            let want = kernel.eval_sq(crate::geometry::sqdist(&q, r.row(j)));
+            let rel = (vals[j] - want).abs() / want.max(1e-300);
+            assert!(rel <= 1e-12, "j={j}: rel={rel:.2e}");
+        }
+    }
+
+    #[test]
+    fn tile_accumulates_into_existing_output() {
+        let kernel = GaussianKernel::new(0.5);
+        let r = random(5, 2, 88);
+        let q = random(2, 2, 89);
+        let w = vec![1.0; 5];
+        let (qnorms, rnorms) = (sq_norms(&q), sq_norms(&r));
+        let mut scratch = Scratch::new(2);
+        scratch.load(&r, 0, 5);
+        scratch.load_weights(&w, 0, 5);
+        scratch.load_ref_norms(&rnorms, 0, 5);
+        let mut once = vec![0.0; 2];
+        gauss_sums_fast_on_loaded(&mut scratch, &kernel, &q, &qnorms, 0, 2, &mut once);
+        let mut twice = vec![0.0; 2];
+        gauss_sums_fast_on_loaded(&mut scratch, &kernel, &q, &qnorms, 0, 2, &mut twice);
+        gauss_sums_fast_on_loaded(&mut scratch, &kernel, &q, &qnorms, 0, 2, &mut twice);
+        for i in 0..2 {
+            assert!((twice[i] - 2.0 * once[i]).abs() < 1e-14);
+        }
+    }
+}

@@ -21,6 +21,7 @@ pub const VALID_KEYS: &[&str] = &[
     "multipliers",
     "bandwidth|h",
     "method",
+    "fast-exp|fast_exp",
     "out",
     "config",
 ];
@@ -48,6 +49,9 @@ pub struct RunConfig {
     /// Summation method for the kde command (default: automatic
     /// selection by the session cost model).
     pub method: Method,
+    /// Certified fast-exp tiled base cases (default on; `false` forces
+    /// the bit-exact reference path everywhere).
+    pub fast_exp: bool,
     /// Output path for commands that write files.
     pub out: Option<String>,
 }
@@ -73,6 +77,7 @@ impl Default for RunConfig {
             multipliers: vec![1e-3, 1e-2, 1e-1, 1.0, 1e1, 1e2, 1e3],
             bandwidth: 0.0,
             method: Method::Auto,
+            fast_exp: true,
             out: None,
         }
     }
@@ -108,6 +113,13 @@ impl RunConfig {
                     .collect::<Result<_>>()?
             }
             "bandwidth" | "h" => self.bandwidth = value.parse().context("bandwidth")?,
+            "fast-exp" | "fast_exp" => {
+                self.fast_exp = match value.to_ascii_lowercase().as_str() {
+                    "true" | "1" | "on" | "yes" => true,
+                    "false" | "0" | "off" | "no" => false,
+                    other => bail!("fast-exp must be true/false (got {other:?})"),
+                }
+            }
             "out" => self.out = Some(value.to_string()),
             other => bail!(
                 "unknown option --{other} (valid: {})",
@@ -269,6 +281,20 @@ mod tests {
         let msg = RunConfig::default().set("algos", "dito,bogus").unwrap_err().to_string();
         assert!(msg.contains("bogus") && msg.contains("dfdo"), "{msg}");
         assert!(RunConfig::default().set("algos", "auto,dito").is_ok());
+    }
+
+    #[test]
+    fn fast_exp_key_parses_and_rejects() {
+        let mut c = RunConfig::default();
+        assert!(c.fast_exp, "fast-exp must default on");
+        c.set("fast-exp", "false").unwrap();
+        assert!(!c.fast_exp);
+        c.set("fast_exp", "ON").unwrap();
+        assert!(c.fast_exp);
+        c.set("fast-exp", "0").unwrap();
+        assert!(!c.fast_exp);
+        let msg = c.set("fast-exp", "maybe").unwrap_err().to_string();
+        assert!(msg.contains("true/false"), "{msg}");
     }
 
     #[test]

@@ -23,6 +23,10 @@ pub struct SweepConfig {
     pub algorithms: Vec<AlgoSpec>,
     pub workers: usize,
     pub leaf_size: usize,
+    /// Certified fast tiled base cases for the dual-tree cells
+    /// (`true` = the default production path; `false` = the bit-exact
+    /// reference configuration, what `--fast-exp false` requests).
+    pub fast_exp: bool,
 }
 
 /// One table cell's outcome, mirroring the paper's entries.

@@ -42,6 +42,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepResult {
             data,
             PrepareOptions {
                 leaf_size: cfg.leaf_size,
+                fast_exp: cfg.fast_exp,
                 // never evict a truth this sweep will revisit: each of
                 // the 7 algorithm rows verifies against every bandwidth
                 truth_cache_capacity: bandwidths.len().max(defaults.truth_cache_capacity),
@@ -172,6 +173,7 @@ mod tests {
             algorithms: vec![AlgoSpec::Naive, AlgoSpec::Dfd, AlgoSpec::Dito],
             workers: 2,
             leaf_size: 16,
+            fast_exp: true,
         }
     }
 
@@ -238,6 +240,7 @@ mod tests {
             algorithms: vec![AlgoSpec::Auto],
             workers: 2,
             leaf_size: 16,
+            fast_exp: true,
         };
         let res = run_sweep(&cfg);
         assert_eq!(res.cells.len(), 2);
@@ -265,6 +268,7 @@ mod tests {
             algorithms: vec![AlgoSpec::Fgt],
             workers: 1,
             leaf_size: 16,
+            fast_exp: true,
         };
         let res = run_sweep(&cfg);
         assert!(matches!(res.cells[0].outcome, CellOutcome::RamExhausted));

@@ -121,14 +121,100 @@ pub fn token_rule(
     }
 }
 
+// ---- ε-budget split for the certified fast base case ----
+
+/// How one evaluate's ε budget is divided between the tree's prune
+/// accounting and the certified error of the tiled fast base case
+/// (see [`split_epsilon`]).
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct EpsSplit {
+    /// The ε handed to every prune test: the user's ε minus the
+    /// base-case reservation. Equal to the user's ε when `fast` is off.
+    pub tree_eps: f64,
+    /// Certified per-pair relative error of the drained base cases
+    /// (0.0 when `fast` is off).
+    pub base_rel_err: f64,
+    /// Whether the tiled fast kernel is admitted for this evaluate.
+    pub fast: bool,
+}
+
+/// Certified per-pair relative error of the fast tiled base case at
+/// bandwidth `h` on data whose squared norms are ≤ `max_sq_norm`:
+///
+/// * the fast-exp polynomial bound
+///   [`crate::compute::fastexp::EXP_MAX_REL_ERR`], plus
+/// * the norms-trick cancellation term. Computing
+///   `‖q‖² + ‖r‖² − 2·q·r` in f64 perturbs the squared distance by at
+///   most `|Δsq| ≤ 4(D+3)·ε_mach·max‖x‖²` (a standard γ-style bound:
+///   each norm is a D-term nonneg sum, the dot a D-term sum bounded by
+///   `‖q‖·‖r‖`, and `(‖q‖+‖r‖)² ≤ 4·max‖x‖²`; `f64::EPSILON` = 2u
+///   already doubles the per-op unit, absorbing the combination slop).
+///   The kernel turns that into a relative factor
+///   `e^(Δsq/2h²) − 1 ≤ 1.2·Δsq/(2h²)` — the linearization is valid
+///   for ratios ≤ 0.25, which [`split_epsilon`]'s admission gate
+///   (`bound ≤ ε/4 ≤ 0.25`) guarantees.
+///
+/// The bound is h-dependent: it blows up as `1/h²`, which is exactly
+/// why tiny-bandwidth evaluates automatically fall back to the
+/// bit-exact base case instead of carrying an unpayable reservation.
+pub fn base_case_rel_err(dim: usize, h: f64, max_sq_norm: f64) -> f64 {
+    let dsq = 4.0 * (dim as f64 + 3.0) * f64::EPSILON * max_sq_norm;
+    let ratio = dsq / (2.0 * h * h);
+    crate::compute::fastexp::EXP_MAX_REL_ERR + 1.2 * ratio
+}
+
+/// Decide whether this evaluate may run the fast tiled base case, and
+/// reserve its certified error out of the ε budget if so.
+///
+/// Soundness: with the fast path on, the traversal's bounds (kl/ku,
+/// FD estimates, series operators) are all still computed with exact
+/// libm kernels — only the *drained base-case sums* are approximate,
+/// each pair within `base_rel_err` relatively. So
+///
+/// ```text
+///   |G̃(q) − G(q)| ≤ tree_eps·G(q)  +  base_rel_err·G_base(q)
+///                 ≤ (tree_eps + base_rel_err)·G(q)  =  ε·G(q),
+/// ```
+///
+/// since the base-case portion `G_base(q) ≤ G(q)` and `G_Q^min` never
+/// reads an approximate value (base-case bounds are registered from
+/// exact `kl` at enqueue time — see `algo::dualtree`). The fast path is
+/// admitted only when its certified bound costs at most a quarter of
+/// the budget, so `tree_eps ≥ 3ε/4` and pruning power is essentially
+/// unaffected. (The fast exp's underflow-to-zero tail additionally
+/// contributes < e⁻⁷⁰⁸·W ≈ 3e-308·W of absolute error — vacuous for
+/// any G representable as a normal f64 sum, stated for completeness.)
+pub fn split_epsilon(
+    eps: f64,
+    fast_requested: bool,
+    dim: usize,
+    h: f64,
+    max_sq_norm: f64,
+) -> EpsSplit {
+    if fast_requested {
+        let base = base_case_rel_err(dim, h, max_sq_norm);
+        if base <= 0.25 * eps {
+            return EpsSplit { tree_eps: eps - base, base_rel_err: base, fast: true };
+        }
+    }
+    EpsSplit { tree_eps: eps, base_rel_err: 0.0, fast: false }
+}
+
 /// Per-query-node mutable state for one dual-tree run.
 ///
 /// Bounds are *hierarchical*: the true running bound for a query point q
-/// is the sum of `node_min` over the root→leaf path plus `point_min[q]`
-/// (and similarly for est/max). `below_min` caches a lower bound on the
-/// contributions registered strictly below each node, refined on the way
-/// back up the recursion, so prune tests can read
+/// is the sum of `node_min` over the root→leaf path (and similarly for
+/// est/max). `below_min` caches a lower bound on the contributions
+/// registered strictly below each node, refined on the way back up the
+/// recursion, so prune tests can read
 /// `inherited + node_min[Q] + below_min[Q]` in O(1).
+///
+/// Since the deferred base-case queue (PR 4), *all* bound registration
+/// is node-level: leaf–leaf pairs register `W_R·kl`/`W_R·(ku−1)` into
+/// `node_min`/`node_max` at enqueue time, and only the estimates
+/// (`point_est`) are per-point. The former `point_min`/`point_max`
+/// lanes and `refresh_below_from_points` had no remaining writers and
+/// were removed rather than carried as misleading dead state.
 #[derive(Clone, Debug)]
 pub struct QueryLedger {
     /// Contributions to the lower bound registered exactly at each node.
@@ -143,12 +229,9 @@ pub struct QueryLedger {
     pub tokens: Vec<f64>,
     /// Cached min of contributions registered below each node.
     pub below_min: Vec<f64>,
-    /// Per-point exact/base-case lower-bound accumulations.
-    pub point_min: Vec<f64>,
-    /// Per-point estimates (base cases + direct Hermite evaluations).
+    /// Per-point estimates (drained base cases + direct Hermite
+    /// evaluations).
     pub point_est: Vec<f64>,
-    /// Per-point upper-bound deficits.
-    pub point_max: Vec<f64>,
 }
 
 impl QueryLedger {
@@ -159,9 +242,7 @@ impl QueryLedger {
             node_est: vec![0.0; num_nodes],
             tokens: vec![0.0; num_nodes],
             below_min: vec![0.0; num_nodes],
-            point_min: vec![0.0; num_points],
             point_est: vec![0.0; num_points],
-            point_max: vec![0.0; num_points],
         }
     }
 
@@ -177,20 +258,6 @@ impl QueryLedger {
         let l = self.node_min[left] + self.below_min[left];
         let r = self.node_min[right] + self.below_min[right];
         self.below_min[q] = l.min(r);
-    }
-
-    /// Refresh `below_min[leaf]` from its points after a base case.
-    ///
-    /// An empty range contributes no lower bound: it clamps to 0.0
-    /// rather than leaving the fold's +∞ identity in place, which would
-    /// poison `gq_min` for the subtree (an infinite lower bound lets
-    /// every later prune pass its error test).
-    pub fn refresh_below_from_points(&mut self, leaf: usize, begin: usize, end: usize) {
-        let mut m = f64::INFINITY;
-        for i in begin..end {
-            m = m.min(self.point_min[i]);
-        }
-        self.below_min[leaf] = if m.is_finite() { m } else { 0.0 };
     }
 }
 
@@ -296,35 +363,45 @@ mod tests {
     }
 
     #[test]
-    fn ledger_bound_bookkeeping() {
-        let mut l = QueryLedger::new(3, 4); // root 0, children 1,2; 4 pts
-        l.node_min[1] = 2.0;
-        l.node_min[2] = 3.0;
-        l.point_min = vec![1.0, 4.0, 0.5, 2.0];
-        // leaf 1 owns points 0..2, leaf 2 owns 2..4
-        l.refresh_below_from_points(1, 0, 2);
-        l.refresh_below_from_points(2, 2, 4);
-        assert_eq!(l.below_min[1], 1.0);
-        assert_eq!(l.below_min[2], 0.5);
-        l.refresh_below_from_children(0, 1, 2);
-        assert_eq!(l.below_min[0], 3.0); // min(2+1, 3+0.5)
-        assert_eq!(l.gq_min(0, 0.0), 3.0);
-        assert_eq!(l.gq_min(1, 5.0), 8.0);
+    fn split_epsilon_reserves_and_gates() {
+        // moderate h on unit-cube-ish data: fast admitted, reservation
+        // comes out of the tree budget
+        let s = split_epsilon(1e-4, true, 3, 0.3, 3.0);
+        assert!(s.fast);
+        assert!(s.base_rel_err > 0.0 && s.base_rel_err <= 0.25e-4);
+        assert_eq!(s.tree_eps, 1e-4 - s.base_rel_err);
+        // fast not requested: untouched budget
+        let off = split_epsilon(1e-4, false, 3, 0.3, 3.0);
+        assert_eq!(off, EpsSplit { tree_eps: 1e-4, base_rel_err: 0.0, fast: false });
+        // tiny bandwidth: the 1/h² cancellation bound exceeds ε/4, so
+        // the evaluate falls back to the exact base case on its own
+        let tiny = split_epsilon(1e-6, true, 3, 1e-7, 3.0);
+        assert!(!tiny.fast);
+        assert_eq!(tiny.tree_eps, 1e-6);
+        // the bound grows with 1/h² and with the data magnitude
+        assert!(base_case_rel_err(3, 0.01, 3.0) > base_case_rel_err(3, 0.1, 3.0));
+        assert!(base_case_rel_err(3, 0.1, 300.0) > base_case_rel_err(3, 0.1, 3.0));
+        assert!(base_case_rel_err(3, 0.1, 3.0) >= crate::compute::fastexp::EXP_MAX_REL_ERR);
     }
 
-    /// Regression: an empty point range must clamp `below_min` to 0.0.
-    /// The +∞ fold identity previously leaked through, making `gq_min`
-    /// infinite for the subtree — an unsoundly permissive error budget.
     #[test]
-    fn empty_point_range_clamps_to_zero() {
-        let mut l = QueryLedger::new(2, 4);
-        l.point_min = vec![1.0, 2.0, 3.0, 4.0];
-        l.refresh_below_from_points(1, 2, 2); // empty range
+    fn ledger_bound_bookkeeping() {
+        // root 0, leaf children 1,2 — since the deferred base-case
+        // queue, leaves register everything (FD prunes AND queued base
+        // cases) at node level; below_min stays 0 for leaves
+        let mut l = QueryLedger::new(3, 4);
+        l.node_min[1] = 3.0; // e.g. 2.0 FD prune + 1.0 enqueued W_R·kl
+        l.node_min[2] = 3.5;
         assert_eq!(l.below_min[1], 0.0);
-        assert!(l.gq_min(1, 0.5).is_finite());
-        assert_eq!(l.gq_min(1, 0.5), 0.5);
-        // non-empty ranges are unaffected
-        l.refresh_below_from_points(1, 1, 3);
-        assert_eq!(l.below_min[1], 2.0);
+        assert_eq!(l.below_min[2], 0.0);
+        l.refresh_below_from_children(0, 1, 2);
+        assert_eq!(l.below_min[0], 3.0); // min(3+0, 3.5+0)
+        assert_eq!(l.gq_min(0, 0.0), 3.0);
+        assert_eq!(l.gq_min(1, 5.0), 8.0);
+        // deeper hierarchies sum node + below along the path
+        l.below_min[1] = 0.5;
+        l.refresh_below_from_children(0, 1, 2);
+        assert_eq!(l.below_min[0], 3.5); // min(3+0.5, 3.5+0)
+        assert!(l.gq_min(0, 0.0).is_finite());
     }
 }

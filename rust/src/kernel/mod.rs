@@ -31,6 +31,14 @@ impl GaussianKernel {
         (sqdist * self.neg_inv_2h2).exp()
     }
 
+    /// The precomputed exponent scale −1/(2h²) — what the tiled base
+    /// case multiplies squared distances by before the fused
+    /// [`crate::compute::fastexp::exp_block`] pass.
+    #[inline]
+    pub fn neg_inv_two_h2(&self) -> f64 {
+        self.neg_inv_2h2
+    }
+
     /// K from a distance.
     #[inline]
     pub fn eval(&self, dist: f64) -> f64 {

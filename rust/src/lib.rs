@@ -14,10 +14,15 @@
 //!   (KDE, LSCV, coordinator, CLI, examples, benches) goes through it.
 //! * L3 (this crate): trees, expansions, translation operators, error
 //!   control, the seven algorithms, LSCV, sweep coordination, CLI. All
-//!   exhaustive inner loops route through the shared [`compute`] SoA
-//!   microkernel; the dual-tree traversal is generic over
-//!   [`algo::dualtree::Expansion`] × [`errorcontrol::PruneRule`], with
-//!   the four paper variants monomorphized from it.
+//!   exhaustive inner loops route through the shared [`compute`]
+//!   drivers — by default the GEMM-shaped tiled base case
+//!   ([`compute::tile`]: cached squared norms + dot-product tiles +
+//!   the certified [`compute::fastexp`], its error reserved out of the
+//!   ε budget by [`errorcontrol::split_epsilon`]), with the bit-exact
+//!   SoA microkernel as the reference/fallback; the dual-tree
+//!   traversal is generic over [`algo::dualtree::Expansion`] ×
+//!   [`errorcontrol::PruneRule`], with the four paper variants
+//!   monomorphized from it.
 //! * L2/L1 (python, build-time only): a tiled exhaustive Gaussian
 //!   summation graph whose hot tile is a Pallas kernel; AOT-lowered to
 //!   HLO text in `artifacts/` and executed from [`runtime`] via PJRT
@@ -51,6 +56,7 @@ pub mod kde;
 pub mod data;
 pub mod runtime;
 pub mod coordinator;
+pub mod benchjson;
 pub mod cli;
 pub mod config;
 

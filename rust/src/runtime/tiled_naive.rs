@@ -31,6 +31,12 @@ pub struct TiledNaive {
     #[cfg(feature = "pjrt")]
     exec: Mutex<TileExecutor>,
     dim: usize,
+    /// CPU fallback only: run the GEMM-shaped fast driver
+    /// (`compute::gauss_sum_all_fast`) instead of the bit-exact
+    /// microkernel. Off by default so the fallback stays bit-identical
+    /// to `algo::naive::Naive::new()` (the documented contract).
+    #[cfg_attr(feature = "pjrt", allow(dead_code))]
+    fast_exp: bool,
 }
 
 impl TiledNaive {
@@ -38,7 +44,7 @@ impl TiledNaive {
     #[cfg(feature = "pjrt")]
     pub fn load(dim: usize) -> crate::util::error::Result<Self> {
         let exec = TileExecutor::load(&super::artifacts_dir(), dim)?;
-        Ok(TiledNaive { exec: Mutex::new(exec), dim })
+        Ok(TiledNaive { exec: Mutex::new(exec), dim, fast_exp: false })
     }
 
     /// Built without `pjrt`: fall back to the CPU compute microkernel.
@@ -51,7 +57,15 @@ impl TiledNaive {
                  TiledNaive falls back to the CPU compute microkernel"
             );
         });
-        Ok(TiledNaive { dim })
+        Ok(TiledNaive { dim, fast_exp: false })
+    }
+
+    /// Opt the CPU fallback into the certified fast tiled driver
+    /// (norms trick + `exp_block`; no effect on the PJRT path, whose
+    /// kernel is fixed at artifact-compile time).
+    pub fn with_fast_exp(mut self, on: bool) -> Self {
+        self.fast_exp = on;
+        self
     }
 
     pub fn dim(&self) -> usize {
@@ -81,15 +95,27 @@ impl TiledNaive {
             CPU_FALLBACK_BLOCK.min(problem.num_references()).max(1),
         );
         let mut sums = vec![0.0; problem.num_queries()];
-        crate::compute::gauss_sum_all(
-            problem.queries,
-            problem.references,
-            w,
-            &kernel,
-            CPU_FALLBACK_BLOCK,
-            &mut scratch,
-            &mut sums,
-        );
+        if self.fast_exp {
+            crate::compute::gauss_sum_all_fast(
+                problem.queries,
+                problem.references,
+                w,
+                &kernel,
+                CPU_FALLBACK_BLOCK,
+                &mut scratch,
+                &mut sums,
+            );
+        } else {
+            crate::compute::gauss_sum_all(
+                problem.queries,
+                problem.references,
+                w,
+                &kernel,
+                CPU_FALLBACK_BLOCK,
+                &mut scratch,
+                &mut sums,
+            );
+        }
         Ok(sums)
     }
 }
@@ -166,5 +192,18 @@ mod tests {
         // same block width, same microkernel → identical arithmetic
         assert_eq!(a.sums, b.sums);
         assert_eq!(a.stats.base_point_pairs, b.stats.base_point_pairs);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn cpu_fallback_fast_exp_matches_within_certified_budget() {
+        let data = random3d(200, 34);
+        let p = GaussSumProblem::kde(&data, 0.2, 0.01);
+        let exact = TiledNaive::load(3).unwrap().run(&p).unwrap().sums;
+        let fast = TiledNaive::load(3).unwrap().with_fast_exp(true).run(&p).unwrap().sums;
+        for i in 0..200 {
+            let rel = (fast[i] - exact[i]).abs() / exact[i];
+            assert!(rel <= 1e-12, "i={i}: rel={rel:.2e}");
+        }
     }
 }

@@ -33,6 +33,14 @@ pub struct KdTree {
     points: Matrix,
     /// Weights in tree order.
     weights: Vec<f64>,
+    /// Cached squared norms ‖x‖² in tree order — h-independent, computed
+    /// once here so the tiled base case's norms-trick distances never
+    /// rescan coordinates (see `compute::tile`).
+    sq_norms: Vec<f64>,
+    /// max over `sq_norms` — the magnitude bound
+    /// `errorcontrol::base_case_rel_err` certifies the norms-trick
+    /// cancellation against.
+    max_sq_norm: f64,
 }
 
 impl KdTree {
@@ -45,10 +53,12 @@ impl KdTree {
         let mut perm: Vec<usize> = (0..n).collect();
         let mut nodes = Vec::new();
         build_rec(points, weights, &mut perm, &mut nodes, 0, n, 0, params.leaf_size);
-        // materialize reordered copies
+        // materialize reordered copies (+ h-independent squared norms)
         let reordered = points.select_rows(&perm);
         let rw: Vec<f64> = perm.iter().map(|&i| weights[i]).collect();
-        KdTree { nodes, perm, points: reordered, weights: rw }
+        let sq_norms = crate::compute::tile::sq_norms(&reordered);
+        let max_sq_norm = sq_norms.iter().cloned().fold(0.0, f64::max);
+        KdTree { nodes, perm, points: reordered, weights: rw, sq_norms, max_sq_norm }
     }
 
     /// Root node index (always 0).
@@ -87,6 +97,20 @@ impl KdTree {
     #[inline]
     pub fn weights(&self) -> &[f64] {
         &self.weights
+    }
+
+    /// Cached squared norms ‖x‖² in tree order (computed once at build;
+    /// h-independent).
+    #[inline]
+    pub fn sq_norms(&self) -> &[f64] {
+        &self.sq_norms
+    }
+
+    /// Largest cached squared norm — feeds the certified norms-trick
+    /// error bound (`errorcontrol::base_case_rel_err`).
+    #[inline]
+    pub fn max_sq_norm(&self) -> f64 {
+        self.max_sq_norm
     }
 
     /// Original row of tree position `i`.
@@ -317,6 +341,19 @@ mod tests {
                 .fold(0.0f64, f64::max);
             assert!((n.linf_radius - direct).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn sq_norms_cached_in_tree_order() {
+        let (_, t) = build(150, 3, 10, 12);
+        assert_eq!(t.sq_norms().len(), 150);
+        let mut max_seen = 0.0f64;
+        for pos in 0..150 {
+            let want: f64 = t.points().row(pos).iter().map(|v| v * v).sum();
+            assert_eq!(t.sq_norms()[pos], want, "pos {pos}");
+            max_seen = max_seen.max(want);
+        }
+        assert_eq!(t.max_sq_norm(), max_seen);
     }
 
     #[test]

@@ -17,6 +17,7 @@ fn base_cfg(name: &str, n: usize, mult: Vec<f64>, algos: Vec<AlgoSpec>) -> Sweep
         algorithms: algos,
         workers: 2,
         leaf_size: 24,
+        fast_exp: true,
     }
 }
 

@@ -172,6 +172,9 @@ fn prop_error_guarantee_fuzz() {
                 _ => Some(SeriesKind::OpdGrid),
             },
             plimit: if g.bool() { None } else { Some(g.usize_in(1, 6)) },
+            // fuzz both base-case kernels: the guarantee must hold with
+            // the certified fast path and the bit-exact one alike
+            fast_exp: g.bool(),
         };
         let problem = GaussSumProblem::kde(&pts, h, eps);
         let exact = Naive::new().run(&problem).unwrap().sums;

@@ -1,0 +1,227 @@
+//! Property suite for the GEMM-shaped base-case pipeline:
+//!
+//! 1. the certified fast-exp bound holds on 10⁶ random inputs plus the
+//!    adversarial cases (range-reduction seams, underflow-to-zero
+//!    tail, ±0);
+//! 2. the tiled drivers match the scalar reference within 1e-12 across
+//!    odd tile shapes, monochromatic and bichromatic;
+//! 3. end to end, every method stays ε-correct against exhaustive
+//!    truth with fast-exp ON, at ε ∈ {1e-2, 1e-4, 1e-6}.
+
+use fastgauss::algo::{max_relative_error, naive::Naive, GaussSum, GaussSumProblem};
+use fastgauss::api::{EvalRequest, Method, PrepareOptions, Session};
+use fastgauss::compute::fastexp::{exp_block, fast_exp, EXP_MAX_REL_ERR, EXP_UNDERFLOW_X};
+use fastgauss::compute::{self, reference, Scratch};
+use fastgauss::data;
+use fastgauss::geometry::Matrix;
+use fastgauss::kde::bandwidth::silverman;
+use fastgauss::kernel::GaussianKernel;
+use fastgauss::util::Pcg32;
+
+fn rel_vs_libm(x: f64) -> f64 {
+    let truth = x.exp();
+    (fast_exp(x) - truth).abs() / truth
+}
+
+// ---- 1. certified fast-exp bound ----
+
+#[test]
+fn fastexp_bound_holds_on_a_million_random_inputs() {
+    let mut rng = Pcg32::new(0xFA57E);
+    let mut worst = (0.0f64, 0.0f64);
+    for i in 0..1_000_000u32 {
+        // mix uniform coverage of the full domain with log-uniform
+        // coverage of the near-zero regime the kernel visits most
+        let x = if i % 2 == 0 {
+            rng.uniform_in(EXP_UNDERFLOW_X, 0.0)
+        } else {
+            -10f64.powf(rng.uniform_in(-12.0, 2.8)) // −1e-12 .. −630
+        };
+        let rel = rel_vs_libm(x);
+        if rel > worst.1 {
+            worst = (x, rel);
+        }
+    }
+    assert!(
+        worst.1 <= EXP_MAX_REL_ERR,
+        "certified bound violated: x = {:.17e} rel = {:.3e}",
+        worst.0,
+        worst.1
+    );
+}
+
+#[test]
+fn fastexp_adversarial_cases() {
+    // ±0 → exactly 1
+    assert_eq!(fast_exp(0.0), 1.0);
+    assert_eq!(fast_exp(-0.0), 1.0);
+    // range-reduction seams: k·ln2 and the half-way rounding boundaries
+    let ln2 = std::f64::consts::LN_2;
+    let ulp_next = |x: f64| f64::from_bits(x.to_bits() + 1);
+    let ulp_prev = |x: f64| f64::from_bits(x.to_bits() - 1);
+    for k in 1..=1021 {
+        for x in [-(k as f64) * ln2, -(k as f64 - 0.5) * ln2] {
+            if x < EXP_UNDERFLOW_X {
+                continue;
+            }
+            for v in [x, ulp_next(x), ulp_prev(x)] {
+                assert!(rel_vs_libm(v) <= EXP_MAX_REL_ERR, "seam k={k} x={v:.17e}");
+            }
+        }
+    }
+    // underflow-to-zero tail: exactly 0.0, monotonically
+    for x in [EXP_UNDERFLOW_X - 1e-9, -709.0, -745.0, -1e6, -1e308, f64::MIN] {
+        assert_eq!(fast_exp(x), 0.0, "x={x}");
+    }
+    // just inside the domain: positive and within bound
+    assert!(fast_exp(EXP_UNDERFLOW_X) > 0.0);
+    assert!(rel_vs_libm(EXP_UNDERFLOW_X) <= EXP_MAX_REL_ERR);
+    // tiny magnitudes must not lose to cancellation
+    for x in [-1e-300, -1e-100, -1e-30, -4.9e-324] {
+        assert_eq!(fast_exp(x), 1.0, "x={x}");
+    }
+    // block form ≡ scalar form
+    let mut xs: Vec<f64> = (0..4096).map(|i| -(i as f64) * 0.173).collect();
+    let want: Vec<f64> = xs.iter().map(|&x| fast_exp(x)).collect();
+    exp_block(&mut xs);
+    assert_eq!(xs, want);
+}
+
+// ---- 2. tiled vs scalar equivalence ----
+
+fn random(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg32::new(seed);
+    Matrix::from_rows(
+        &(0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect::<Vec<_>>(),
+    )
+}
+
+#[test]
+fn tiled_matches_scalar_across_odd_shapes_mono_and_bichromatic() {
+    // shapes straddle the QUERY_TILE boundary and odd block remainders
+    let shapes = [(1usize, 1usize), (3, 7), (7, 8), (8, 9), (9, 257), (13, 100), (31, 63)];
+    for (nq, nr) in shapes {
+        for d in [1usize, 2, 3, 5] {
+            let refs = random(nr, d, 1000 + (nq * nr + d) as u64);
+            let queries = random(nq, d, 2000 + (nq + nr * d) as u64);
+            let mut rng = Pcg32::new(3000 + nr as u64);
+            let w: Vec<f64> = (0..nr).map(|_| rng.uniform_in(0.1, 2.0)).collect();
+            // h ≥ 0.2 keeps even the *worst-case* certified norms-trick
+            // bound (4(D+3)·ε_mach·max‖x‖²/2h²) under the 1e-12 budget
+            // for unit-cube data up to D = 5
+            for h in [0.2, 0.5, 1.5] {
+                let kernel = GaussianKernel::new(h);
+                // bichromatic
+                let mut want = vec![0.0; nq];
+                reference::scalar_gauss_sums(&queries, &refs, &w, &kernel, &mut want);
+                let mut got = vec![0.0; nq];
+                let mut scratch = Scratch::new(d);
+                compute::gauss_sum_all_fast(
+                    &queries, &refs, &w, &kernel, 64, &mut scratch, &mut got,
+                );
+                for i in 0..nq {
+                    let rel = (got[i] - want[i]).abs() / want[i].max(1e-300);
+                    assert!(
+                        rel <= 1e-12,
+                        "bichromatic nq={nq} nr={nr} d={d} h={h} i={i}: {rel:.2e}"
+                    );
+                }
+                // monochromatic (queries = references)
+                let mut want_m = vec![0.0; nr];
+                reference::scalar_gauss_sums(&refs, &refs, &w, &kernel, &mut want_m);
+                let mut got_m = vec![0.0; nr];
+                compute::gauss_sum_all_fast(
+                    &refs, &refs, &w, &kernel, 64, &mut scratch, &mut got_m,
+                );
+                for i in 0..nr {
+                    let rel = (got_m[i] - want_m[i]).abs() / want_m[i].max(1e-300);
+                    assert!(rel <= 1e-12, "mono nr={nr} d={d} h={h} i={i}: {rel:.2e}");
+                }
+            }
+        }
+    }
+}
+
+// ---- 3. end-to-end ε-correctness with fast-exp on ----
+
+const EPSILONS: [f64; 3] = [1e-2, 1e-4, 1e-6];
+
+#[test]
+fn every_method_stays_eps_correct_with_fast_exp_on() {
+    for (name, n) in [("astro2d", 400), ("galaxy3d", 350)] {
+        let ds = data::by_name(name, n, 42).unwrap();
+        let h = silverman(&ds.points);
+        // fast_exp defaults ON in PrepareOptions — assert that, then
+        // rely on it: this whole test runs the tiled pipeline
+        assert!(PrepareOptions::default().fast_exp);
+        let session = Session::kde(&ds.points);
+        for eps in EPSILONS {
+            let (exact, _, _) = session.exact_sums(h, eps);
+            for method in [Method::Dfd, Method::Dfdo, Method::Dfto, Method::Dito, Method::Auto]
+            {
+                let ev = session
+                    .evaluate(&EvalRequest::kde(h, eps).with_method(method))
+                    .unwrap();
+                let rel = max_relative_error(&ev.sums, &exact);
+                assert!(
+                    rel <= eps * (1.0 + 1e-9),
+                    "{name} {method} eps={eps}: rel {rel:.2e}"
+                );
+            }
+            // the verified methods report their measured error ≤ ε
+            for method in [Method::Fgt, Method::Ifgt] {
+                match session.evaluate(&EvalRequest::kde(h, eps).with_method(method)) {
+                    Ok(ev) => {
+                        let rel = ev.rel_err.expect("verified method reports rel_err");
+                        assert!(rel <= eps * (1.0 + 1e-9), "{name} {method} eps={eps}: {rel:.2e}");
+                    }
+                    // the paper's X/∞ cells are legitimate outcomes for
+                    // FGT/IFGT at tight ε — ε-correctness is only
+                    // claimed for answers actually returned
+                    Err(e) => eprintln!("{name} {method} eps={eps}: {e} (paper X/∞)"),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_exp_off_session_also_meets_eps_and_routes_exact() {
+    let ds = data::by_name("galaxy3d", 300, 7).unwrap();
+    let h = silverman(&ds.points);
+    let session = Session::prepare(
+        &ds.points,
+        PrepareOptions { fast_exp: false, ..Default::default() },
+    );
+    let (exact, _, _) = session.exact_sums(h, 1e-4);
+    let ev = session.evaluate(&EvalRequest::kde(h, 1e-4).with_method(Method::Dito)).unwrap();
+    assert!(max_relative_error(&ev.sums, &exact) <= 1e-4 * (1.0 + 1e-9));
+    assert_eq!(ev.stats.fast_base_cases, 0, "{:?}", ev.stats);
+    // and the default session actually exercises the fast kernel
+    let fast_session = Session::kde(&ds.points);
+    let ev_fast =
+        fast_session.evaluate(&EvalRequest::kde(h, 1e-4).with_method(Method::Dito)).unwrap();
+    assert!(ev_fast.stats.fast_base_cases > 0, "{:?}", ev_fast.stats);
+    assert!(max_relative_error(&ev_fast.sums, &exact) <= 1e-4 * (1.0 + 1e-9));
+}
+
+#[test]
+fn bichromatic_dual_tree_with_fast_exp_meets_eps() {
+    let mut rng = Pcg32::new(99);
+    let refs = random(320, 3, 55);
+    let queries = Matrix::from_rows(
+        &(0..75).map(|_| (0..3).map(|_| rng.uniform_in(-0.2, 1.2)).collect()).collect::<Vec<_>>(),
+    );
+    let w: Vec<f64> = (0..320).map(|_| rng.uniform_in(0.3, 2.0)).collect();
+    for eps in EPSILONS {
+        let problem = GaussSumProblem::new(&queries, &refs, Some(&w), 0.2, eps);
+        let exact = Naive::new().run(&problem).unwrap().sums;
+        let got = fastgauss::algo::dualtree::run_dualtree(
+            &problem,
+            &fastgauss::algo::dualtree::DualTreeConfig::default(),
+        )
+        .unwrap();
+        let rel = max_relative_error(&got.sums, &exact);
+        assert!(rel <= eps * (1.0 + 1e-9), "eps={eps}: rel {rel:.2e}");
+    }
+}
