@@ -20,11 +20,11 @@
 //! Leaf-leaf base cases — the dominant cost at tight ε — are **not**
 //! computed eagerly: the traversal registers each surviving pair's
 //! bounds (and banks its full token entitlement) and pushes the pair
-//! onto a per-thread queue, which is drained after the recursion in
+//! onto the task's queue, which is drained after the recursion in
 //! tile batches *grouped by reference leaf* — each reference leaf's SoA
-//! transpose is amortized across every query leaf that hit it, and the
-//! per-thread [`crate::compute::Scratch`] arena (sized at prepare time)
-//! stays hot, still with zero allocations after `prepare`. The drain
+//! transpose is amortized across every query leaf that hit it within
+//! the task, and the recycled [`crate::compute::Scratch`] arena (sized
+//! at prepare time) stays hot across tasks. The drain
 //! runs the GEMM-shaped fast kernel ([`crate::compute::tile`]: cached
 //! norms + dot-product tiles + certified `exp_block`) whenever
 //! [`crate::errorcontrol::split_epsilon`] admits its certified error
@@ -53,17 +53,41 @@
 //! traversal. Per-(h, layout, plimit) moments are memoized in a
 //! **bounded** cache (capacity [`DEFAULT_MOMENT_CACHE_CAPACITY`],
 //! true LRU — hits promote recency; see
-//! [`SweepEngine::with_moment_cache_capacity`]),
-//! and both [`SweepEngine::evaluate`] (across independent query
-//! subtrees) and [`SweepEngine::evaluate_grid`] (across grid
-//! bandwidths) parallelize with `std::thread::scope`.
-//! [`run_dualtree`] is the one-shot wrapper: prepare + a single
-//! single-threaded evaluate, bit-identical to evaluating on a prepared
-//! engine with one thread.
+//! [`SweepEngine::with_moment_cache_capacity`]).
+//!
+//! # Threading: the shared pool + a fixed task decomposition
+//!
+//! All parallelism runs on one [`WorkStealPool`]
+//! (see [`crate::runtime::pool`]), shared with the session batch and
+//! sweep layers above so nested fan-outs compose instead of
+//! fragmenting. Each evaluate cuts the query tree into **at most
+//! [`TRAVERSAL_TASKS`] disjoint subtree tasks — a decomposition that
+//! depends only on the tree, never on the pool width** — and each task
+//! recurses against the full reference tree, drains its own base-case
+//! queue, and post-processes its own subtree into a private output
+//! slice. Partial results are then combined by an *indexed reduction*
+//! in fixed task order. Per-task mutable state (ledger, Hermite
+//! workspace, the [`crate::compute::Scratch`] arena sized at prepare)
+//! is recycled through a per-evaluate free list, so the number of
+//! `State` allocations equals the pool's effective concurrency, not
+//! the task count (each task additionally owns just a small
+//! subtree-sized output buffer). Because the task set, each task's
+//! work, and the reduction
+//! order are all width-independent, **results are bit-identical for
+//! every pool width** — an inline width-1 pool reproduces an 8-worker
+//! pool exactly (`rust/tests/pool_determinism.rs` pins {1, 2, 8}).
+//! Each subtree root starts with `inherited_min = 0` (no ancestor
+//! bound), which only makes prune tests more conservative — the ε
+//! guarantee is unaffected.
+//!
+//! [`evaluate_grid`](SweepEngine::evaluate_grid) schedules its grid
+//! points as pool tasks too (each nests its own traversal tasks), and
+//! [`run_dualtree`] is the one-shot wrapper: prepare + evaluate on an
+//! inline pool, bit-identical to every other width by the invariance
+//! above.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{Arc, Mutex};
 
 use crate::bounds::{odp::OdpBounds, opd::OpdBounds, NeverBounds, NodeGeometry, TruncationBounds};
 use crate::compute::{tile, Scratch};
@@ -76,6 +100,7 @@ use crate::hermite::{
 };
 use crate::kernel::GaussianKernel;
 use crate::multiindex::Layout;
+use crate::runtime::pool::WorkStealPool;
 use crate::tree::{plimit_for_dim, BuildParams, KdTree, RefMoments};
 use crate::util::timer::time_it;
 
@@ -251,7 +276,9 @@ struct SeriesPack<'a> {
     p_limit: usize,
 }
 
-/// Mutable per-run state (one per worker thread).
+/// Mutable per-task state, recycled through a per-evaluate free list
+/// (tasks own disjoint query subtrees, so a reused instance's stale
+/// slots are never read).
 struct State {
     ledger: QueryLedger,
     /// Local Taylor coefficients per query node (node-major), when a
@@ -286,6 +313,14 @@ impl State {
         }
     }
 }
+
+/// Upper bound on the number of disjoint query-subtree tasks one
+/// evaluate fans out (fewer on shallow trees). Deliberately a constant
+/// rather than `pool width × k`: the decomposition must depend only on
+/// the tree so that results are bit-identical across pool widths, and
+/// 32 tasks keep an 8-worker pool load-balanced under stealing while
+/// preserving most of the per-task ref-leaf drain grouping.
+pub const TRAVERSAL_TASKS: usize = 32;
 
 /// Memoization key for per-bandwidth reference moments.
 type MomentKey = (u64, Layout, usize);
@@ -391,7 +426,10 @@ pub struct SweepEngine {
     total_w: f64,
     build_secs: f64,
     tree_builds: u64,
-    threads: usize,
+    /// The shared work-stealing pool every evaluate schedules onto
+    /// (inline/width-1 by default; a [`crate::api::Session`] shares its
+    /// pool here so batches and traversals compose).
+    pool: Arc<WorkStealPool>,
     moment_cache: Mutex<MomentCache>,
 }
 
@@ -422,7 +460,7 @@ impl SweepEngine {
             qtree,
             build_secs,
             tree_builds,
-            threads: 1,
+            pool: Arc::new(WorkStealPool::inline()),
             moment_cache: Mutex::new(MomentCache::new(DEFAULT_MOMENT_CACHE_CAPACITY)),
         }
     }
@@ -434,15 +472,30 @@ impl SweepEngine {
         Self::prepare(&GaussSumProblem::kde(data, 1.0, 1.0), leaf_size)
     }
 
-    /// Set the worker-thread count used by [`evaluate`] (across query
-    /// subtrees) and [`evaluate_grid`] (across bandwidths). One thread
-    /// (the default) reproduces the sequential traversal bit-for-bit.
+    /// Give the engine a private work-stealing pool of `threads`
+    /// workers, used by [`evaluate`] (across query-subtree tasks) and
+    /// [`evaluate_grid`] (across bandwidths, nesting the subtree
+    /// tasks). The task decomposition and reduction order are fixed, so
+    /// **results are bit-identical for every worker count** — width
+    /// only changes wall-clock time. Width 1 (the default) is the
+    /// inline pool: no threads are spawned at all.
     ///
     /// [`evaluate`]: SweepEngine::evaluate
     /// [`evaluate_grid`]: SweepEngine::evaluate_grid
-    pub fn with_threads(mut self, threads: usize) -> Self {
-        self.threads = threads.max(1);
+    pub fn with_threads(self, threads: usize) -> Self {
+        self.with_pool(Arc::new(WorkStealPool::new(threads)))
+    }
+
+    /// Share an existing pool — how a [`crate::api::Session`] puts its
+    /// batch fan-out and every traversal it triggers on one scheduler.
+    pub fn with_pool(mut self, pool: Arc<WorkStealPool>) -> Self {
+        self.pool = pool;
         self
+    }
+
+    /// The pool this engine schedules onto.
+    pub fn pool(&self) -> &Arc<WorkStealPool> {
+        &self.pool
     }
 
     /// Cap the moment memo at `capacity` entries (≥ 1). The default is
@@ -536,10 +589,11 @@ impl SweepEngine {
         (m, secs, false)
     }
 
-    /// Run one bandwidth under `cfg`, using the engine's thread count
-    /// for query-subtree parallelism. The result's
-    /// `stats.build_secs` covers only the h-dependent moment pass;
-    /// the one-time tree cost is reported by [`build_secs`].
+    /// Run one bandwidth under `cfg` on the engine's shared pool. The
+    /// result's `stats.build_secs` covers only the h-dependent moment
+    /// pass; the one-time tree cost is reported by [`build_secs`].
+    /// Results are bit-identical for every pool width (see the module
+    /// docs: fixed task decomposition + indexed reduction).
     ///
     /// [`build_secs`]: SweepEngine::build_secs
     pub fn evaluate(
@@ -548,7 +602,9 @@ impl SweepEngine {
         epsilon: f64,
         cfg: &DualTreeConfig,
     ) -> Result<GaussSumResult, AlgoError> {
-        self.evaluate_with_threads(h, epsilon, cfg, self.threads)
+        dispatch_variant!(cfg, X, P => {
+            self.evaluate_variant_cfg::<X, P>(h, epsilon, cfg.plimit, cfg.fast_exp)
+        })
     }
 
     /// Run one bandwidth as an explicit monomorphized variant — the
@@ -564,7 +620,7 @@ impl SweepEngine {
         epsilon: f64,
         plimit: Option<usize>,
     ) -> Result<GaussSumResult, AlgoError> {
-        self.evaluate_variant_with_threads::<X, P>(h, epsilon, plimit, true, self.threads)
+        self.evaluate_variant_cfg::<X, P>(h, epsilon, plimit, true)
     }
 
     /// Evaluate one bandwidth against an *explicit* query matrix: a
@@ -581,72 +637,49 @@ impl SweepEngine {
         epsilon: f64,
         cfg: &DualTreeConfig,
     ) -> Result<GaussSumResult, AlgoError> {
-        self.evaluate_queries_with_threads(queries, leaf_size, h, epsilon, cfg, self.threads)
-    }
-
-    pub(crate) fn evaluate_queries_with_threads(
-        &self,
-        queries: &Matrix,
-        leaf_size: usize,
-        h: f64,
-        epsilon: f64,
-        cfg: &DualTreeConfig,
-        threads: usize,
-    ) -> Result<GaussSumResult, AlgoError> {
         assert_eq!(queries.cols(), self.dim, "query dimension mismatch");
         let qw = vec![1.0; queries.rows()];
         let (qtree, qsecs) = time_it(|| KdTree::build(queries, &qw, BuildParams { leaf_size }));
         let mut res = dispatch_variant!(cfg, X, P => {
-            self.evaluate_variant_on::<X, P>(&qtree, h, epsilon, cfg.plimit, cfg.fast_exp, threads)
+            self.evaluate_variant_inner::<X, P>(&qtree, h, epsilon, cfg.plimit, cfg.fast_exp)
         })?;
         res.stats.build_secs += qsecs;
         res.stats.tree_builds += 1;
         Ok(res)
     }
 
-    pub(crate) fn evaluate_with_threads(
-        &self,
-        h: f64,
-        epsilon: f64,
-        cfg: &DualTreeConfig,
-        threads: usize,
-    ) -> Result<GaussSumResult, AlgoError> {
-        dispatch_variant!(cfg, X, P => {
-            self.evaluate_variant_with_threads::<X, P>(
-                h,
-                epsilon,
-                cfg.plimit,
-                cfg.fast_exp,
-                threads,
-            )
-        })
-    }
-
-    fn evaluate_variant_with_threads<X: Expansion, P: PruneRule>(
+    /// Resolve the prepared query tree and run the traversal.
+    fn evaluate_variant_cfg<X: Expansion, P: PruneRule>(
         &self,
         h: f64,
         epsilon: f64,
         plimit_override: Option<usize>,
         fast_exp: bool,
-        threads: usize,
     ) -> Result<GaussSumResult, AlgoError> {
         let qt: &KdTree = self.qtree.as_ref().unwrap_or(&self.rtree);
-        self.evaluate_variant_on::<X, P>(qt, h, epsilon, plimit_override, fast_exp, threads)
+        self.evaluate_variant_inner::<X, P>(qt, h, epsilon, plimit_override, fast_exp)
     }
 
     /// The traversal core, parameterized over the query tree so both
     /// the prepared monochromatic/bichromatic trees and the per-call
     /// trees of [`evaluate_queries`] share one implementation.
     ///
+    /// Scheduling: the query tree is cut into at most
+    /// [`TRAVERSAL_TASKS`] disjoint subtree tasks (a function of the
+    /// tree only), each task runs recursion → base-case drain →
+    /// post-processing for its subtree on the shared pool, and the
+    /// partial results are combined by an indexed reduction in fixed
+    /// task order — so the sums and the merged stats are independent
+    /// of the pool width and of work stealing.
+    ///
     /// [`evaluate_queries`]: SweepEngine::evaluate_queries
-    fn evaluate_variant_on<X: Expansion, P: PruneRule>(
+    fn evaluate_variant_inner<X: Expansion, P: PruneRule>(
         &self,
         qt: &KdTree,
         h: f64,
         epsilon: f64,
         plimit_override: Option<usize>,
         fast_exp: bool,
-        threads: usize,
     ) -> Result<GaussSumResult, AlgoError> {
         assert!(h > 0.0 && h.is_finite(), "bandwidth must be positive");
         assert!(epsilon > 0.0, "epsilon must be positive");
@@ -676,79 +709,55 @@ impl SweepEngine {
         let total_w = self.total_w;
         let leaf_block = rt.max_leaf_count().max(1);
 
-        let threads = threads.max(1);
+        let ctx = Ctx {
+            qt,
+            rt,
+            kernel,
+            eps: split.tree_eps,
+            total_w,
+            fast: split.fast,
+            series: series_pack(&moments, plimit),
+        };
+
+        // Fixed decomposition: disjoint subtree roots covering every
+        // query point, a function of the tree alone. Each root starts
+        // with inherited_min = 0 (no ancestor bound), which only makes
+        // prune tests more conservative — the ε guarantee holds.
+        let roots = subtree_roots(qt, TRAVERSAL_TASKS);
+        // Per-evaluate free list of task states: a task pops a recycled
+        // State (ledger + Hermite workspace + Scratch arena, all sized
+        // at prepare) or builds one on first use, and returns it after
+        // draining — live States ≈ effective concurrency, not tasks.
+        // Reuse is sound because tasks touch disjoint subtree slots.
+        let states: Mutex<Vec<State>> = Mutex::new(Vec::new());
+        let parts: Vec<(RunStats, Vec<f64>)> = self.pool.run_indexed(roots.len(), |k| {
+            let q0 = roots[k];
+            let mut st = states
+                .lock()
+                .unwrap()
+                .pop()
+                .unwrap_or_else(|| State::new(qt, set_len, dim, table_order, leaf_block));
+            recurse::<X, P>(&ctx, &mut st, q0, rt.root(), 0.0);
+            // this task's whole base-case queue drains in one grouped
+            // pass before its post-processing
+            drain_base_cases(&ctx, &mut st);
+            let begin = qt.node(q0).begin;
+            let mut out = vec![0.0; qt.node(q0).end - begin];
+            postprocess_from::<X>(&ctx, &mut st, q0, begin, &mut out);
+            let stats = std::mem::take(&mut st.stats);
+            states.lock().unwrap().push(st);
+            (stats, out)
+        });
+
+        // Indexed reduction: partials combine in fixed task order, so
+        // the merged counters (f64 token sums included) are identical
+        // however the tasks were scheduled.
         let mut tree_sums = vec![0.0; qt.num_points()];
         let mut stats = RunStats::default();
-
-        if threads == 1 {
-            let ctx = Ctx {
-                qt,
-                rt,
-                kernel,
-                eps: split.tree_eps,
-                total_w,
-                fast: split.fast,
-                series: series_pack(&moments, plimit),
-            };
-            let mut st = State::new(qt, set_len, dim, table_order, leaf_block);
-            recurse::<X, P>(&ctx, &mut st, qt.root(), rt.root(), 0.0);
-            drain_base_cases(&ctx, &mut st);
-            postprocess_from::<X>(&ctx, &mut st, qt.root(), &mut tree_sums);
-            stats = st.stats;
-        } else {
-            // Fan out over disjoint query subtrees: every per-node /
-            // per-point ledger slot a worker touches lies inside its
-            // subtree, so workers are independent. Each starts with
-            // inherited_min = 0 (no ancestor bound), which only makes
-            // prune tests more conservative — the ε guarantee holds.
-            let roots = subtree_roots(qt, threads * 4);
-            let next = AtomicUsize::new(0);
-            let (tx, rx) = mpsc::channel::<(Vec<f64>, RunStats)>();
-            std::thread::scope(|scope| {
-                for _ in 0..threads {
-                    let tx = tx.clone();
-                    let roots = &roots;
-                    let next = &next;
-                    let moments = &moments;
-                    scope.spawn(move || {
-                        let ctx = Ctx {
-                            qt,
-                            rt,
-                            kernel,
-                            eps: split.tree_eps,
-                            total_w,
-                            fast: split.fast,
-                            series: series_pack(moments, plimit),
-                        };
-                        let mut st = State::new(qt, set_len, dim, table_order, leaf_block);
-                        let mut out = vec![0.0; qt.num_points()];
-                        let mut my_roots: Vec<usize> = Vec::new();
-                        loop {
-                            let k = next.fetch_add(1, Ordering::Relaxed);
-                            if k >= roots.len() {
-                                break;
-                            }
-                            let q0 = roots[k];
-                            recurse::<X, P>(&ctx, &mut st, q0, rt.root(), 0.0);
-                            my_roots.push(q0);
-                        }
-                        // this worker's whole base-case queue drains in
-                        // one grouped pass before its post-processing
-                        drain_base_cases(&ctx, &mut st);
-                        for &q0 in &my_roots {
-                            postprocess_from::<X>(&ctx, &mut st, q0, &mut out);
-                        }
-                        let _ = tx.send((out, st.stats));
-                    });
-                }
-                drop(tx);
-            });
-            for (out, s) in rx.into_iter() {
-                for (i, v) in out.into_iter().enumerate() {
-                    tree_sums[i] += v;
-                }
-                stats.merge(&s);
-            }
+        for (&q0, (task_stats, out)) in roots.iter().zip(parts) {
+            stats.merge(&task_stats);
+            let node = qt.node(q0);
+            tree_sums[node.begin..node.end].copy_from_slice(&out);
         }
 
         stats.build_secs = moment_secs;
@@ -758,42 +767,21 @@ impl SweepEngine {
         Ok(GaussSumResult { sums, stats })
     }
 
-    /// Evaluate a whole bandwidth grid, parallelized across grid points
-    /// with the engine's thread count (each grid point runs the
-    /// single-threaded traversal, which keeps per-h results identical
-    /// to sequential evaluation). Results come back in grid order.
+    /// Evaluate a whole bandwidth grid: grid points are scheduled as
+    /// pool tasks, and each nests its own traversal tasks into the same
+    /// pool (so a 2-point grid on an 8-worker pool still keeps every
+    /// worker busy). Results come back in grid order, each bit-identical
+    /// to a standalone [`evaluate`](SweepEngine::evaluate) at that h.
     pub fn evaluate_grid(
         &self,
         grid: &[f64],
         epsilon: f64,
         cfg: &DualTreeConfig,
     ) -> Result<Vec<GaussSumResult>, AlgoError> {
-        let workers = self.threads.min(grid.len()).max(1);
-        if workers == 1 {
-            return grid.iter().map(|&h| self.evaluate_with_threads(h, epsilon, cfg, 1)).collect();
-        }
-        let next = AtomicUsize::new(0);
-        let (tx, rx) = mpsc::channel::<(usize, Result<GaussSumResult, AlgoError>)>();
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                let tx = tx.clone();
-                let next = &next;
-                scope.spawn(move || loop {
-                    let k = next.fetch_add(1, Ordering::Relaxed);
-                    if k >= grid.len() {
-                        break;
-                    }
-                    let res = self.evaluate_with_threads(grid[k], epsilon, cfg, 1);
-                    let _ = tx.send((k, res));
-                });
-            }
-            drop(tx);
-        });
-        let mut slots: Vec<Option<GaussSumResult>> = (0..grid.len()).map(|_| None).collect();
-        for (k, res) in rx.into_iter() {
-            slots[k] = Some(res?);
-        }
-        Ok(slots.into_iter().map(|s| s.expect("grid worker lost a cell")).collect())
+        self.pool
+            .run_indexed(grid.len(), |k| self.evaluate(grid[k], epsilon, cfg))
+            .into_iter()
+            .collect()
     }
 }
 
@@ -859,8 +847,8 @@ pub fn run_dualtree_variant<X: Expansion, P: PruneRule>(
     plimit: Option<usize>,
 ) -> Result<GaussSumResult, AlgoError> {
     let engine = SweepEngine::prepare(problem, leaf_size);
-    let mut res = engine
-        .evaluate_variant_with_threads::<X, P>(problem.h, problem.epsilon, plimit, true, 1)?;
+    let mut res =
+        engine.evaluate_variant_cfg::<X, P>(problem.h, problem.epsilon, plimit, true)?;
     // preserve the paper's "times include preprocessing" convention
     res.stats.build_secs += engine.build_secs();
     res.stats.tree_builds = engine.tree_builds();
@@ -1060,7 +1048,7 @@ fn order_by_dist(qn: &crate::tree::Node, rt: &KdTree, a: usize, b: usize) -> (us
 
 /// Drain the deferred leaf–leaf base cases (paper's DITOBase), grouped
 /// by reference leaf: each reference leaf is transposed into the
-/// per-thread [`Scratch`] exactly once per drain and reused by every
+/// task's [`Scratch`] exactly once per drain and reused by every
 /// query leaf that hit it. With `ctx.fast` the Q×R tile runs the
 /// GEMM-shaped kernel (cached norms outer sum − 2·dot, fused certified
 /// `exp_block` — see [`crate::compute::tile`]); otherwise each query
@@ -1112,9 +1100,17 @@ fn drain_base_cases(ctx: &Ctx<'_>, st: &mut State) {
 
 /// Post-processing (paper Fig. 8): push node-level estimates and local
 /// expansions down the query subtree rooted at `start` (L2L), then
-/// evaluate at leaf points, writing per-point sums (tree order) into
-/// `out`. Only slots owned by `start`'s subtree are written.
-fn postprocess_from<X: Expansion>(ctx: &Ctx<'_>, st: &mut State, start: usize, out: &mut [f64]) {
+/// evaluate at leaf points, writing per-point sums into `out`, which
+/// covers exactly `start`'s point range — tree index `qi` lands at
+/// `out[qi - base]` (each pool task owns a private slice of the final
+/// buffer, so tasks never write through shared memory).
+fn postprocess_from<X: Expansion>(
+    ctx: &Ctx<'_>,
+    st: &mut State,
+    start: usize,
+    base: usize,
+    out: &mut [f64],
+) {
     let qt = ctx.qt;
     // BFS order: parents processed before children.
     let mut queue = std::collections::VecDeque::from([start]);
@@ -1167,7 +1163,7 @@ fn postprocess_from<X: Expansion>(ctx: &Ctx<'_>, st: &mut State, start: usize, o
                         &mut st.off,
                     );
                 }
-                out[qi] = v;
+                out[qi - base] = v;
             }
         }
     }
@@ -1451,8 +1447,40 @@ mod tests {
         let batch = engine.evaluate_grid(&grid, 0.01, &cfg).unwrap();
         assert_eq!(batch.len(), grid.len());
         for (res, &h) in batch.iter().zip(&grid) {
-            let single = engine.evaluate_with_threads(h, 0.01, &cfg, 1).unwrap();
+            let single = engine.evaluate(h, 0.01, &cfg).unwrap();
             assert_eq!(res.sums, single.sums, "h={h}");
+        }
+    }
+
+    /// The pool-width invariance that the batch ≡ sequential and
+    /// sweep-bit-identity guarantees rest on: the fixed subtree
+    /// decomposition + indexed reduction make every evaluate
+    /// bit-identical whether the pool is inline or 8 workers wide —
+    /// down to the f64 token counters merged across tasks.
+    #[test]
+    fn evaluate_bitwise_identical_across_pool_widths() {
+        let data = clustered(500, 2, 97);
+        let variants = [
+            DualTreeConfig { use_tokens: false, series: None, ..Default::default() },
+            DualTreeConfig::default(),
+        ];
+        for cfg in &variants {
+            for h in [0.03, 0.3] {
+                let base_engine = SweepEngine::for_kde(&data, 16); // inline pool
+                let base = base_engine.evaluate(h, 0.01, cfg).unwrap();
+                for threads in [2, 8] {
+                    let engine = SweepEngine::for_kde(&data, 16).with_threads(threads);
+                    let got = engine.evaluate(h, 0.01, cfg).unwrap();
+                    assert_eq!(got.sums, base.sums, "threads={threads} h={h}");
+                    assert_eq!(got.stats.node_pairs, base.stats.node_pairs);
+                    assert_eq!(got.stats.base_point_pairs, base.stats.base_point_pairs);
+                    assert_eq!(
+                        got.stats.tokens_banked.to_bits(),
+                        base.stats.tokens_banked.to_bits(),
+                        "stats reduction must be order-fixed (threads={threads} h={h})"
+                    );
+                }
+            }
         }
     }
 

@@ -42,6 +42,11 @@ pub enum AlgoError {
     RamExhausted(String),
     /// No parameter setting can satisfy the error tolerance (paper's `∞`).
     ToleranceUnreachable(String),
+    /// Infrastructure failure, not an algorithmic verdict — e.g. the
+    /// shared exhaustive-truth computation panicked and the session
+    /// reports a clean error to every waiter instead of poisoning the
+    /// cell lock. Callers must not record this as an X/∞ table entry.
+    Internal(String),
 }
 
 impl std::fmt::Display for AlgoError {
@@ -51,6 +56,7 @@ impl std::fmt::Display for AlgoError {
             AlgoError::ToleranceUnreachable(s) => {
                 write!(f, "tolerance unreachable (paper '∞'): {s}")
             }
+            AlgoError::Internal(s) => write!(f, "internal failure: {s}"),
         }
     }
 }

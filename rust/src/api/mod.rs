@@ -15,7 +15,10 @@
 //!   [`Method`] including [`Method::Auto`] (resolved by the promoted
 //!   [`CostModel`]), with the FGT τ-halving and IFGT K-doubling
 //!   verification loops ([`tuning`]) run inside the session so every
-//!   caller gets ε-verified answers.
+//!   caller gets ε-verified answers. Batches and the traversals they
+//!   trigger share the session's one work-stealing pool
+//!   ([`crate::runtime::pool`]), and results are bit-identical to
+//!   sequential evaluation in any pool width.
 //!
 //! Every pre-existing call path — `kde::*`, `coordinator::run_sweep`,
 //! the CLI, the examples and the paper benches — routes through here;

@@ -16,19 +16,29 @@
 //! * **IFGT clustering plans** per (K, seed).
 //!
 //! [`Session::evaluate`] answers one [`EvalRequest`];
-//! [`Session::evaluate_batch`] fans a request list out over the scoped
-//! thread pool (each request evaluated single-threaded, so batch
-//! results are bit-identical to sequential evaluation in any worker
-//! count). Monochromatic dual-tree requests run on the prepared tree;
-//! requests with an explicit query matrix reuse the prepared reference
-//! tree and moment memo and build only a query tree; requests with a
-//! per-request weight override fall back to a one-shot prepare (the
-//! prepared tree bakes the session weights into its node statistics).
+//! [`Session::evaluate_batch`] schedules the whole request list onto
+//! the session's shared [`WorkStealPool`] — the *same* pool every
+//! dual-tree traversal fans its subtree tasks into, so a batch of 2
+//! requests on an 8-worker session exposes 2 × up-to-32 leaf tasks and
+//! keeps every worker busy (the pre-pool design pinned each request to
+//! one inner thread, leaving workers − requests cores idle). Results
+//! of the deterministic methods are still bit-identical to sequential
+//! evaluation in any worker count: the traversal's task decomposition
+//! and indexed reduction are pool-width-invariant (see
+//! [`crate::algo::dualtree`]), and the batch itself reduces by request
+//! index. (IFGT is the standing exception — its K-doubling tunes
+//! against a wall-clock budget, so it is ε-verified but
+//! timing-dependent at any width.) Monochromatic dual-tree requests
+//! run on the prepared tree; requests with an explicit query matrix
+//! reuse the prepared reference tree and moment memo and build only a
+//! query tree; requests with a per-request weight override fall back
+//! to a one-shot prepare (the prepared tree bakes the session weights
+//! into its node statistics).
 
 use std::collections::HashMap;
 use std::hash::Hash;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex};
 
 use crate::algo::dualtree::{run_dualtree, SweepEngine, DEFAULT_MOMENT_CACHE_CAPACITY};
 use crate::algo::fgt::GridFrame;
@@ -36,6 +46,7 @@ use crate::algo::ifgt::IfgtPlan;
 use crate::algo::naive::Naive;
 use crate::algo::{AlgoError, GaussSum, GaussSumProblem, RunStats};
 use crate::geometry::Matrix;
+use crate::runtime::pool::WorkStealPool;
 use crate::util::stats;
 use crate::util::timer::time_it;
 
@@ -48,9 +59,15 @@ use super::tuning;
 pub struct PrepareOptions {
     /// kd-tree leaf size (also used for per-request query trees).
     pub leaf_size: usize,
-    /// Worker threads for [`Session::evaluate`] (across query subtrees)
-    /// and [`Session::evaluate_batch`] (across requests). One thread
-    /// reproduces sequential evaluation bit-for-bit.
+    /// Width of the session's shared work-stealing pool, used by
+    /// [`Session::evaluate`] (across query-subtree tasks) and
+    /// [`Session::evaluate_batch`] (across requests *and* their nested
+    /// subtree tasks — one scheduler, so small batches still use every
+    /// worker). Results of the deterministic methods (Naive, the
+    /// dual-tree family, FGT's τ-halving) are bit-identical for every
+    /// width; IFGT tunes against a wall-clock budget and is therefore
+    /// ε-verified but timing-dependent at *any* width. 1 (the default)
+    /// runs inline without spawning threads.
     pub threads: usize,
     /// Per-reference weights baked into the prepared tree (`None` =
     /// unit weights, the paper's KDE setting).
@@ -192,13 +209,45 @@ impl<K: Eq + Hash + Copy, V: Clone> BoundedMemo<K, V> {
     }
 }
 
+/// One bandwidth's exhaustive-truth slot.
+enum TruthSlot {
+    /// Not yet computed — the first requester computes under the cell
+    /// lock while concurrent requesters of the same h block on it.
+    Pending,
+    /// `(sums, compute seconds)`.
+    Ready(Arc<Vec<f64>>, f64),
+    /// The computing requester panicked. The message is kept so every
+    /// current and future waiter gets a clean [`AlgoError::Internal`]
+    /// instead of panicking on a poisoned mutex or silently recomputing
+    /// a run that just proved it can crash.
+    Failed(String),
+}
+
 /// One bandwidth's exhaustive truth: computed under the cell lock so a
 /// concurrent second requester blocks and reuses instead of duplicating
 /// the O(N²) run — this is what lets the coordinator schedule truth
-/// *inside* its worker pool.
-#[derive(Default)]
+/// *inside* the shared pool. The compute runs under `catch_unwind`, so
+/// a panic can neither poison this mutex nor strand waiters (see
+/// [`TruthSlot::Failed`]).
 struct TruthCell {
-    slot: Mutex<Option<(Arc<Vec<f64>>, f64)>>,
+    slot: Mutex<TruthSlot>,
+}
+
+impl Default for TruthCell {
+    fn default() -> Self {
+        TruthCell { slot: Mutex::new(TruthSlot::Pending) }
+    }
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// Default count of distinct bandwidths whose exhaustive truth stays
@@ -233,7 +282,6 @@ pub struct Session<'d> {
     data: &'d Matrix,
     weights: Option<Vec<f64>>,
     leaf_size: usize,
-    threads: usize,
     fast_exp: bool,
     cost_model: CostModel,
     data_scale: f64,
@@ -268,6 +316,8 @@ impl<'d> Session<'d> {
                     p
                 }
             };
+            // one pool for the whole session: the engine's traversal
+            // tasks and evaluate_batch's request tasks share it
             SweepEngine::prepare(&problem, leaf_size)
                 .with_threads(threads)
                 .with_moment_cache_capacity(moment_cache_capacity)
@@ -277,7 +327,6 @@ impl<'d> Session<'d> {
             data,
             weights,
             leaf_size,
-            threads: threads.max(1),
             fast_exp,
             cost_model,
             data_scale,
@@ -339,6 +388,13 @@ impl<'d> Session<'d> {
         &self.engine
     }
 
+    /// The session's shared work-stealing pool — the one scheduler
+    /// under every traversal split, request batch and (through the
+    /// coordinator) sweep cell this session serves.
+    pub fn pool(&self) -> &Arc<WorkStealPool> {
+        self.engine.pool()
+    }
+
     /// The problem-level profile [`Method::Auto`] is resolved from.
     pub fn profile(&self, req: &EvalRequest<'_>) -> ProblemProfile {
         ProblemProfile {
@@ -365,52 +421,6 @@ impl<'d> Session<'d> {
     /// contract as [`GaussSumProblem::new`]; algorithmic failure modes
     /// (the paper's X/∞) come back as [`AlgoError`].
     pub fn evaluate(&self, req: &EvalRequest<'_>) -> Result<Evaluation, AlgoError> {
-        self.evaluate_with_threads(req, self.threads)
-    }
-
-    /// Answer a request list, fanned out over the session's thread
-    /// count. Each request is evaluated with a single inner thread, so
-    /// the results are bit-identical to calling
-    /// [`evaluate`](Session::evaluate) sequentially on a one-thread
-    /// session, in any worker count. Per-request failures (e.g. an FGT
-    /// X cell) come back in place; they do not abort the batch.
-    pub fn evaluate_batch(
-        &self,
-        requests: &[EvalRequest<'_>],
-    ) -> Vec<Result<Evaluation, AlgoError>> {
-        let workers = self.threads.min(requests.len()).max(1);
-        if workers == 1 {
-            return requests.iter().map(|r| self.evaluate_with_threads(r, 1)).collect();
-        }
-        let next = AtomicUsize::new(0);
-        let (tx, rx) = mpsc::channel::<(usize, Result<Evaluation, AlgoError>)>();
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                let tx = tx.clone();
-                let next = &next;
-                scope.spawn(move || loop {
-                    let k = next.fetch_add(1, Ordering::Relaxed);
-                    if k >= requests.len() {
-                        break;
-                    }
-                    let _ = tx.send((k, self.evaluate_with_threads(&requests[k], 1)));
-                });
-            }
-            drop(tx);
-        });
-        let mut slots: Vec<Option<Result<Evaluation, AlgoError>>> =
-            (0..requests.len()).map(|_| None).collect();
-        for (k, res) in rx.into_iter() {
-            slots[k] = Some(res);
-        }
-        slots.into_iter().map(|s| s.expect("batch worker lost a request")).collect()
-    }
-
-    fn evaluate_with_threads(
-        &self,
-        req: &EvalRequest<'_>,
-        threads: usize,
-    ) -> Result<Evaluation, AlgoError> {
         assert!(req.h > 0.0 && req.h.is_finite(), "bandwidth must be positive");
         assert!(req.epsilon > 0.0, "epsilon must be positive");
         if let Some(q) = req.queries {
@@ -421,8 +431,28 @@ impl<'d> Session<'d> {
             Method::Fgt => self.eval_fgt(req),
             Method::Ifgt => self.eval_ifgt(req),
             Method::Auto => unreachable!("resolve() returns a concrete method"),
-            dual => self.eval_dualtree(dual, req, threads),
+            dual => self.eval_dualtree(dual, req),
         }
+    }
+
+    /// Answer a request list. Every request becomes a task on the
+    /// session's shared pool, and each dual-tree request fans its
+    /// subtree tasks into the *same* pool — so 2 requests on an
+    /// 8-worker session yield 16-way useful work instead of pinning
+    /// each request to one thread. Results come back in request order;
+    /// for the deterministic methods (Naive, dual-tree, FGT) they are
+    /// bit-identical to calling [`evaluate`](Session::evaluate)
+    /// sequentially, in any worker count (each such evaluation is
+    /// pool-width-invariant, and the batch reduces by request index) —
+    /// IFGT requests tune against a wall-clock budget and are
+    /// ε-verified but not schedule-invariant, batched or not.
+    /// Per-request failures (e.g. an FGT X cell) come back in place;
+    /// they do not abort the batch.
+    pub fn evaluate_batch(
+        &self,
+        requests: &[EvalRequest<'_>],
+    ) -> Vec<Result<Evaluation, AlgoError>> {
+        self.pool().run_indexed(requests.len(), |k| self.evaluate(&requests[k]))
     }
 
     /// The memoized exhaustive truth for one monochromatic bandwidth
@@ -430,8 +460,29 @@ impl<'d> Session<'d> {
     /// first requester computes under the per-bandwidth cell lock;
     /// concurrent requesters block on that cell and then share the
     /// result — whole different bandwidths never serialize on each
-    /// other.
-    pub fn exact_sums(&self, h: f64, epsilon: f64) -> (Arc<Vec<f64>>, f64, bool) {
+    /// other. If the computation panics, every waiter (and every later
+    /// requester of this h) gets a clean [`AlgoError::Internal`]
+    /// carrying the panic message — the cell mutex is never poisoned.
+    pub fn exact_sums(
+        &self,
+        h: f64,
+        epsilon: f64,
+    ) -> Result<(Arc<Vec<f64>>, f64, bool), AlgoError> {
+        self.exact_sums_with(h, || {
+            let problem = self.mono_problem(h, epsilon);
+            let (res, secs) =
+                time_it(|| Naive::new().run(&problem).expect("exhaustive run cannot fail"));
+            (res.sums, secs)
+        })
+    }
+
+    /// [`exact_sums`](Session::exact_sums) with an explicit compute
+    /// closure — the seam the panic-injection regression tests use.
+    pub(crate) fn exact_sums_with(
+        &self,
+        h: f64,
+        compute: impl FnOnce() -> (Vec<f64>, f64),
+    ) -> Result<(Arc<Vec<f64>>, f64, bool), AlgoError> {
         let cell = {
             let mut truth = self.truth.lock().unwrap();
             match truth.get(&h.to_bits()) {
@@ -445,14 +496,29 @@ impl<'d> Session<'d> {
         };
         let mut slot = cell.slot.lock().unwrap();
         match &*slot {
-            Some((sums, secs)) => (Arc::clone(sums), *secs, true),
-            None => {
-                let problem = self.mono_problem(h, epsilon);
-                let (res, secs) =
-                    time_it(|| Naive::new().run(&problem).expect("exhaustive run cannot fail"));
-                let sums = Arc::new(res.sums);
-                *slot = Some((Arc::clone(&sums), secs));
-                (sums, secs, false)
+            TruthSlot::Ready(sums, secs) => Ok((Arc::clone(sums), *secs, true)),
+            TruthSlot::Failed(msg) => Err(AlgoError::Internal(format!(
+                "exhaustive truth for h={h:.6e} previously failed: {msg}"
+            ))),
+            TruthSlot::Pending => {
+                // catch_unwind: the guard stays valid across a panic of
+                // `compute`, so the mutex is not poisoned and blocked
+                // waiters proceed into the Failed arm instead of
+                // panicking on `.lock().unwrap()`.
+                match catch_unwind(AssertUnwindSafe(compute)) {
+                    Ok((sums, secs)) => {
+                        let sums = Arc::new(sums);
+                        *slot = TruthSlot::Ready(Arc::clone(&sums), secs);
+                        Ok((sums, secs, false))
+                    }
+                    Err(payload) => {
+                        let msg = panic_message(payload.as_ref());
+                        *slot = TruthSlot::Failed(msg.clone());
+                        Err(AlgoError::Internal(format!(
+                            "exhaustive truth for h={h:.6e} panicked: {msg}"
+                        )))
+                    }
+                }
             }
         }
     }
@@ -463,7 +529,6 @@ impl<'d> Session<'d> {
         &self,
         method: Method,
         req: &EvalRequest<'_>,
-        threads: usize,
     ) -> Result<Evaluation, AlgoError> {
         let mut cfg = method
             .dual_tree_config(self.leaf_size, req.plimit)
@@ -476,18 +541,9 @@ impl<'d> Session<'d> {
             let problem = self.problem(req);
             time_it(|| run_dualtree(&problem, &cfg))
         } else if let Some(q) = req.queries {
-            time_it(|| {
-                self.engine.evaluate_queries_with_threads(
-                    q,
-                    self.leaf_size,
-                    req.h,
-                    req.epsilon,
-                    &cfg,
-                    threads,
-                )
-            })
+            time_it(|| self.engine.evaluate_queries(q, self.leaf_size, req.h, req.epsilon, &cfg))
         } else {
-            time_it(|| self.engine.evaluate_with_threads(req.h, req.epsilon, &cfg, threads))
+            time_it(|| self.engine.evaluate(req.h, req.epsilon, &cfg))
         };
         let mut res = res?;
         res.stats.total_secs = secs;
@@ -497,7 +553,7 @@ impl<'d> Session<'d> {
     fn eval_naive(&self, req: &EvalRequest<'_>) -> Result<Evaluation, AlgoError> {
         let n_refs = self.data.rows();
         if req.queries.is_none() && req.weights.is_none() {
-            let (sums, secs, cached) = self.exact_sums(req.h, req.epsilon);
+            let (sums, secs, cached) = self.exact_sums(req.h, req.epsilon)?;
             let stats = RunStats {
                 base_point_pairs: (n_refs * n_refs) as u64,
                 session_cache_hits: cached as u64,
@@ -535,7 +591,7 @@ impl<'d> Session<'d> {
         } else {
             Arc::new(GridFrame::joint(problem.queries, problem.references))
         };
-        let (exact, _truth_secs) = self.truth_for(&problem, req, &mut hits, &mut misses);
+        let (exact, _truth_secs) = self.truth_for(&problem, req, &mut hits, &mut misses)?;
         let outcome = tuning::fgt_halving(&problem, &frame, &exact, tuning::FGT_MAX_ATTEMPTS)?;
         let mut res = outcome.result;
         res.stats.total_secs = outcome.attempt_secs;
@@ -553,7 +609,7 @@ impl<'d> Session<'d> {
         let problem = self.problem(req);
         let mut hits = 0u64;
         let mut misses = 0u64;
-        let (exact, truth_secs) = self.truth_for(&problem, req, &mut hits, &mut misses);
+        let (exact, truth_secs) = self.truth_for(&problem, req, &mut hits, &mut misses)?;
         // tuning budget: a few multiples of the exhaustive time — past
         // that, IFGT has lost by definition (paper's by-hand cutoff)
         let budget_secs = (5.0 * truth_secs).max(2.0);
@@ -605,19 +661,19 @@ impl<'d> Session<'d> {
         req: &EvalRequest<'_>,
         hits: &mut u64,
         misses: &mut u64,
-    ) -> (Arc<Vec<f64>>, f64) {
+    ) -> Result<(Arc<Vec<f64>>, f64), AlgoError> {
         if req.queries.is_none() && req.weights.is_none() {
-            let (sums, secs, cached) = self.exact_sums(req.h, req.epsilon);
+            let (sums, secs, cached) = self.exact_sums(req.h, req.epsilon)?;
             if cached {
                 *hits += 1;
             } else {
                 *misses += 1;
             }
-            (sums, secs)
+            Ok((sums, secs))
         } else {
             let (res, secs) =
                 time_it(|| Naive::new().run(problem).expect("exhaustive run cannot fail"));
-            (Arc::new(res.sums), secs)
+            Ok((Arc::new(res.sums), secs))
         }
     }
 
@@ -657,5 +713,70 @@ impl<'d> Session<'d> {
         let plan = Arc::new(IfgtPlan::build(self.data, clusters, seed));
         self.ifgt_plans.lock().unwrap().insert((clusters, seed), Arc::clone(&plan));
         plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn small_data(n: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg32::new(seed);
+        Matrix::from_rows(
+            &(0..n).map(|_| vec![rng.uniform(), rng.uniform()]).collect::<Vec<_>>(),
+        )
+    }
+
+    /// Regression for the poisoned-`TruthCell` bug: a panic inside the
+    /// one requester computing a bandwidth's exhaustive truth used to
+    /// poison the slot mutex, making every concurrent waiter panic on
+    /// `.lock().unwrap()`. Now every requester — concurrent or later —
+    /// gets a clean `AlgoError::Internal` carrying the injected panic
+    /// message, and other bandwidths are unaffected.
+    #[test]
+    fn truth_panic_yields_clean_errors_not_poisoned_mutex() {
+        let data = small_data(32, 9001);
+        let session =
+            Session::prepare(&data, PrepareOptions { threads: 2, ..Default::default() });
+        let poisoned_h = 0.125;
+        // two concurrent requesters race on the same bandwidth's cell;
+        // the loser blocks on the winner's computation — both must get
+        // a clean error, not a poisoned-mutex panic
+        let results = session.pool().run_indexed(2, |_| {
+            session.exact_sums_with(poisoned_h, || panic!("injected truth failure"))
+        });
+        for res in &results {
+            let err = res.as_ref().expect_err("poisoned truth must error").to_string();
+            assert!(err.contains("injected truth failure"), "{err}");
+        }
+        // the failure is sticky for that h (no silent recompute storm) …
+        let again = session.exact_sums(poisoned_h, 0.01).expect_err("failure must stick");
+        assert!(matches!(&again, AlgoError::Internal(_)), "{again}");
+        // … surfaces through the evaluation path as an error in place …
+        let ev = session
+            .evaluate(&EvalRequest::kde(poisoned_h, 0.01).with_method(Method::Naive))
+            .expect_err("Naive on a poisoned bandwidth must error cleanly");
+        assert!(matches!(&ev, AlgoError::Internal(_)), "{ev}");
+        // … and other bandwidths still compute fine on the same memo
+        let (sums, _, cached) = session.exact_sums(0.25, 0.01).expect("fresh h must work");
+        assert_eq!(sums.len(), 32);
+        assert!(!cached);
+    }
+
+    /// The blocking-dedupe contract still holds on the happy path: one
+    /// compute, every waiter shares it.
+    #[test]
+    fn concurrent_truth_requests_share_one_compute() {
+        let data = small_data(48, 9002);
+        let session =
+            Session::prepare(&data, PrepareOptions { threads: 4, ..Default::default() });
+        let h = 0.2;
+        let results = session.pool().run_indexed(4, |_| session.exact_sums(h, 0.01).unwrap());
+        let misses = results.iter().filter(|(_, _, cached)| !cached).count();
+        assert_eq!(misses, 1, "exactly one requester may compute the truth");
+        for (sums, _, _) in &results {
+            assert!(Arc::ptr_eq(sums, &results[0].0), "waiters must share the one result");
+        }
     }
 }

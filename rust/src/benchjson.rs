@@ -1,27 +1,29 @@
-//! The machine-readable perf-trajectory runner: times the old
-//! (single-query, libm-exp) base cases against the tiled fast path on
-//! the paper datasets and emits JSON — `BENCH_PR4.json` at the repo
-//! root by convention (`cargo run --release --bin bench_json`).
+//! The machine-readable perf-trajectory runner. Two documents:
+//!
+//! * **PR 5 (default, `BENCH_PR5.json`)** — [`run_bench_pr5`]: the old
+//!   fractured thread model (per-request scoped threads, each request
+//!   pinned to one inner thread) vs the shared work-stealing pool
+//!   (requests and their nested traversal tasks on one scheduler) on
+//!   astro2d + galaxy3d *batch* workloads, ε-verified per request and
+//!   pinned bitwise-equal between the two models.
+//! * **PR 4 (`--pr4`, `BENCH_PR4.json`)** — [`run_bench`]: old
+//!   (single-query, libm-exp) base cases vs the tiled fast path.
 //!
 //! No external deps: timing via [`crate::util::timer::time_it`], JSON
 //! emitted by hand and kept parseable by [`crate::util::json`] (the
-//! smoke test round-trips it). Methods covered, per dataset
-//! (astro2d, galaxy3d) at ε = 1e-4, h = Silverman's h*:
-//!
-//! * **Naive** — `gauss_sum_all` (bit-exact) vs `gauss_sum_all_fast`;
-//! * **DFDO / DITO** — one prepared [`SweepEngine`], `fast_exp` off vs
-//!   on (same tree, same memoized moments: the diff is the base case);
-//! * **FGT** — the τ-halving protocol with the sparse-box direct path
-//!   bit-exact vs tiled (may report the paper's X/∞ as a status).
-//!
-//! Every timed answer is ε-verified against the exhaustive truth
-//! before its time is reported.
+//! smoke tests round-trip both). Every timed answer is ε-verified
+//! against the exhaustive truth before its time is reported — the CI
+//! smoke run therefore *fails the job* if any measured `rel_err`
+//! exceeds its ε.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::algo::dualtree::{DualTreeConfig, SweepEngine};
 use crate::algo::fgt::GridFrame;
 use crate::algo::naive::Naive;
 use crate::algo::{max_relative_error, GaussSum, GaussSumProblem};
-use crate::api::tuning;
+use crate::api::{tuning, EvalRequest, Method, PrepareOptions, Session};
 use crate::data;
 use crate::kde::bandwidth::silverman;
 use crate::util::timer::time_it;
@@ -170,10 +172,157 @@ pub fn run_bench(cfg: &BenchConfig) -> String {
     )
 }
 
+/// Emulate the pre-pool `Session::evaluate_batch`: `min(workers, k)`
+/// scoped threads pull requests off a shared counter and evaluate each
+/// on an inline (single-threaded) session — the fan-out this PR
+/// removed, kept here as the measured baseline. A batch of k < workers
+/// requests provably leaves `workers − k` cores idle.
+fn old_model_batch(
+    session: &Session<'_>,
+    requests: &[EvalRequest<'_>],
+    workers: usize,
+) -> Vec<Vec<f64>> {
+    let workers = workers.min(requests.len()).max(1);
+    let slots: Vec<Mutex<Option<Vec<f64>>>> =
+        (0..requests.len()).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let slots = &slots;
+            let next = &next;
+            scope.spawn(move || loop {
+                let k = next.fetch_add(1, Ordering::Relaxed);
+                if k >= requests.len() {
+                    break;
+                }
+                let ev = session.evaluate(&requests[k]).expect("bench request cannot fail");
+                *slots[k].lock().unwrap() = Some(ev.sums);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("old-model worker lost a request"))
+        .collect()
+}
+
+/// PR 5 protocol: batch workloads (3 bandwidths × {DFDO, DITO}) on
+/// astro2d + galaxy3d, old thread model vs shared pool at the same
+/// worker count. Every request is ε-verified against exhaustive truth
+/// (the run aborts otherwise), and the two models' batches are pinned
+/// bitwise-equal — the speedup comes from scheduling alone.
+pub fn run_bench_pr5(cfg: &BenchConfig) -> String {
+    let eps = cfg.epsilon;
+    let workers =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 8);
+    let mults = [0.5, 1.0, 2.0];
+    let methods = [Method::Dfdo, Method::Dito];
+    let mut dataset_objs: Vec<String> = Vec::new();
+    for name in ["astro2d", "galaxy3d"] {
+        let ds = data::by_name(name, cfg.n, 42).expect("paper dataset");
+        let h_star = silverman(&ds.points);
+        let hs: Vec<f64> = mults.iter().map(|m| m * h_star).collect();
+        let requests: Vec<EvalRequest<'static>> = hs
+            .iter()
+            .flat_map(|&h| methods.into_iter().map(move |m| EvalRequest::kde(h, eps).with_method(m)))
+            .collect();
+
+        // exhaustive truths, one per distinct bandwidth
+        let truths: Vec<Vec<f64>> = hs
+            .iter()
+            .map(|&h| {
+                let p = GaussSumProblem::kde(&ds.points, h, eps);
+                Naive::new().run(&p).unwrap().sums
+            })
+            .collect();
+
+        // ---- old fractured model: outer request threads, inner
+        // sequential (first pass warms the moment memo) ----
+        let old_session =
+            Session::prepare(&ds.points, PrepareOptions { threads: 1, ..Default::default() });
+        let old_sums = old_model_batch(&old_session, &requests, workers);
+        let old_secs =
+            median_secs(|| drop(old_model_batch(&old_session, &requests, workers)), cfg.reps);
+
+        // ---- shared pool: same batch, requests + nested traversal
+        // tasks on one scheduler ----
+        let pool_session = Session::prepare(
+            &ds.points,
+            PrepareOptions { threads: workers, ..Default::default() },
+        );
+        let pool_sums: Vec<Vec<f64>> = pool_session
+            .evaluate_batch(&requests)
+            .into_iter()
+            .map(|r| r.expect("bench request cannot fail").sums)
+            .collect();
+        let pool_secs = median_secs(|| drop(pool_session.evaluate_batch(&requests)), cfg.reps);
+
+        // ε-verify every request and pin the two models bitwise-equal
+        let mut max_rel = 0.0f64;
+        for (k, sums) in pool_sums.iter().enumerate() {
+            let rel = max_relative_error(sums, &truths[k / methods.len()]);
+            assert!(rel <= eps * (1.0 + 1e-9), "{name} request {k}: rel {rel:.2e} > ε");
+            max_rel = max_rel.max(rel);
+        }
+        assert_eq!(
+            old_sums, pool_sums,
+            "{name}: pool batch diverged bitwise from the old thread model"
+        );
+
+        dataset_objs.push(format!(
+            "  \"{name}\": {{\"h_star\": {}, \"requests\": {}, \"old_model_secs\": {}, \
+             \"pool_secs\": {}, \"speedup\": {}, \"max_rel_err\": {}, \
+             \"bitwise_equal_old_vs_pool\": true, \"status\": \"ok\"}}",
+            num(h_star),
+            requests.len(),
+            num(old_secs),
+            num(pool_secs),
+            num(old_secs / pool_secs),
+            num(max_rel),
+        ));
+    }
+    format!(
+        "{{\n\"bench\": \"BENCH_PR5\",\n\"description\": \"fractured thread model (per-request \
+         scoped threads, 1 inner thread each) vs shared work-stealing pool (requests + nested \
+         traversal tasks on one scheduler) on batch workloads\",\n\"measured\": true,\n\
+         \"epsilon\": {},\n\"n\": {},\n\"reps\": {},\n\"smoke\": {},\n\"workers\": {},\n\
+         \"generated_by\": \"cargo run --release --bin bench_json\",\n\"datasets\": {{\n{}\n}}\n}}\n",
+        num(eps),
+        cfg.n,
+        cfg.reps,
+        cfg.smoke,
+        workers,
+        dataset_objs.join(",\n"),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::json::Json;
+
+    /// The PR 5 emitter must produce parseable JSON with every
+    /// advertised cell — this is what the CI smoke step exercises
+    /// release-built (its internal asserts fail the job on any
+    /// ε-violating cell).
+    #[test]
+    fn smoke_bench_pr5_emits_parseable_json() {
+        let cfg = BenchConfig { n: 150, reps: 1, epsilon: 1e-4, smoke: true };
+        let text = run_bench_pr5(&cfg);
+        let doc = Json::parse(&text).expect("bench_json PR5 output must parse");
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("BENCH_PR5"));
+        assert_eq!(doc.get("measured").unwrap(), &Json::Bool(true));
+        assert_eq!(doc.get("smoke").unwrap(), &Json::Bool(true));
+        for ds in ["astro2d", "galaxy3d"] {
+            let d = doc.get("datasets").unwrap().get(ds).unwrap_or_else(|| panic!("{ds}"));
+            assert_eq!(d.get("status").unwrap().as_str(), Some("ok"), "{ds}");
+            assert_eq!(d.get("bitwise_equal_old_vs_pool").unwrap(), &Json::Bool(true));
+            let rel = d.get("max_rel_err").unwrap().as_f64().unwrap();
+            assert!(rel <= 1e-4, "{ds}: {rel}");
+            assert!(d.get("old_model_secs").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(d.get("pool_secs").unwrap().as_f64().unwrap() >= 0.0);
+        }
+    }
 
     /// The emitter must produce parseable JSON with every advertised
     /// cell — this is what the CI smoke step exercises release-built.

@@ -1,25 +1,33 @@
 //! `bench_json` — the perf-trajectory runner (see
-//! `fastgauss::benchjson`). Times old vs tiled base cases for
-//! Naive/DFDO/DITO/FGT on astro2d + galaxy3d at ε = 1e-4 and writes
-//! machine-readable JSON.
+//! `fastgauss::benchjson`). Default protocol (PR 5): old fractured
+//! thread model vs the shared work-stealing pool on astro2d + galaxy3d
+//! batch workloads at ε = 1e-4, every request ε-verified (the process
+//! aborts on a violating cell, which is how CI fails the job). `--pr4`
+//! re-runs the PR 4 protocol (old vs tiled base cases).
 //!
 //! ```text
-//! cargo run --release --bin bench_json                 # BENCH_PR4.json
+//! cargo run --release --bin bench_json                 # BENCH_PR5.json
 //! cargo run --release --bin bench_json -- --smoke      # tiny sizes (CI)
+//! cargo run --release --bin bench_json -- --pr4        # BENCH_PR4.json
 //! cargo run --release --bin bench_json -- --n 8000 --reps 5 --out perf.json
 //! ```
 
-use fastgauss::benchjson::{run_bench, BenchConfig};
+use fastgauss::benchjson::{run_bench, run_bench_pr5, BenchConfig};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut cfg = BenchConfig::full();
-    let mut out = "BENCH_PR4.json".to_string();
+    let mut pr4 = false;
+    let mut out: Option<String> = None;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
             "--smoke" => {
                 cfg = BenchConfig::smoke();
+                i += 1;
+            }
+            "--pr4" => {
+                pr4 = true;
                 i += 1;
             }
             "--n" => {
@@ -45,21 +53,24 @@ fn main() {
                 i += 2;
             }
             "--out" => {
-                out = args.get(i + 1).cloned().unwrap_or_else(|| {
+                out = Some(args.get(i + 1).cloned().unwrap_or_else(|| {
                     eprintln!("--out needs a path");
                     std::process::exit(2)
-                });
+                }));
                 i += 2;
             }
             other => {
                 eprintln!(
-                    "unknown option {other:?}\nusage: bench_json [--smoke] [--n N] [--reps R] [--out FILE]"
+                    "unknown option {other:?}\nusage: bench_json [--smoke] [--pr4] [--n N] [--reps R] [--out FILE]"
                 );
                 std::process::exit(2);
             }
         }
     }
-    let json = run_bench(&cfg);
+    let out = out.unwrap_or_else(|| {
+        if pr4 { "BENCH_PR4.json".to_string() } else { "BENCH_PR5.json".to_string() }
+    });
+    let json = if pr4 { run_bench(&cfg) } else { run_bench_pr5(&cfg) };
     std::fs::write(&out, &json).unwrap_or_else(|e| {
         eprintln!("writing {out}: {e}");
         std::process::exit(1);

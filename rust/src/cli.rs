@@ -11,7 +11,12 @@
 //!
 //! Every command runs on the `api::Session` front door; `--method`
 //! (default `auto`) picks the summation engine for `kde`, with `auto`
-//! resolved per problem by the session's cost model.
+//! resolved per problem by the session's cost model. `--workers W`
+//! sizes the session's shared work-stealing pool — sweep cells, batch
+//! requests and their nested traversal tasks all run on it, and
+//! results of the deterministic engines (Naive, dual-tree, FGT) are
+//! bit-identical for every width (IFGT tunes against a wall-clock
+//! budget, so its cells are ε-verified but timing-dependent).
 
 use crate::util::error::Result;
 use crate::{anyhow, bail};
@@ -166,7 +171,8 @@ fn cmd_selftest(cfg: &RunConfig) -> Result<()> {
     let mut ok = true;
     for mult in [1e-2, 1.0, 1e2] {
         let h = pilot * mult;
-        let (exact, _, _) = session.exact_sums(h, cfg.epsilon);
+        let (exact, _, _) =
+            session.exact_sums(h, cfg.epsilon).map_err(|e| anyhow!("truth at h={h}: {e}"))?;
         let methods =
             [Method::Dfd, Method::Dfdo, Method::Dfto, Method::Dito, Method::Auto];
         for m in methods {

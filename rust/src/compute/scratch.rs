@@ -15,7 +15,10 @@ use super::BLOCK;
 /// correctness requirement: construct it once with the largest block the
 /// workload will see (e.g. the tree's maximum leaf count) and every
 /// later call is allocation-free. The dual-tree traversal keeps one
-/// `Scratch` per worker thread inside its per-run state.
+/// `Scratch` inside each task `State`, recycled through a
+/// per-evaluate free list on the shared work-stealing pool — so live
+/// arenas track the pool's effective concurrency and stay hot across
+/// the tasks each one serves.
 #[derive(Clone, Debug)]
 pub struct Scratch {
     pub(super) dim: usize,

@@ -21,6 +21,15 @@ pub struct SweepConfig {
     /// Bandwidth multipliers (paper: 10⁻³…10³).
     pub multipliers: Vec<f64>,
     pub algorithms: Vec<AlgoSpec>,
+    /// Width of the session's shared work-stealing pool for the whole
+    /// sweep: (algo × h) cells *and* the traversal tasks each dual-tree
+    /// cell fans out run on the same workers, so the tail of a sweep no
+    /// longer leaves cores idle. For the deterministic rows — Naive,
+    /// the dual-tree family, FGT's τ-halving — results (outcomes and
+    /// verified errors) are bit-identical for every width; only
+    /// wall-clock changes. IFGT rows are the exception at *any* width:
+    /// its K-doubling stops on a wall-clock budget, so those cells are
+    /// ε-verified but inherently schedule/load-dependent.
     pub workers: usize,
     pub leaf_size: usize,
     /// Certified fast tiled base cases for the dual-tree cells

@@ -6,21 +6,35 @@
 //! The whole protocol runs on one prepared [`Session`]: the kd-tree is
 //! built once, cells share the per-bandwidth moment/truth/clustering
 //! memos, and the FGT τ-halving / IFGT K-doubling tuning live in the
-//! session (`api::tuning`), not here. Work is scheduled as
-//! (algorithm × bandwidth) cells on a small worker pool; the
-//! per-bandwidth exhaustive truth runs — formerly a *serial* pass the
-//! pool sat idle behind — are folded into the scheduled cells: the
-//! first worker that needs a bandwidth's truth computes it inside the
-//! pool, concurrent requesters of the same bandwidth block on that one
-//! computation, and other bandwidths proceed in parallel.
+//! session (`api::tuning`), not here. The (algorithm × bandwidth)
+//! cells are scheduled straight onto the **session's shared
+//! work-stealing pool** (sized by [`SweepConfig::workers`]) — the same
+//! pool every dual-tree cell fans its traversal tasks into, so a
+//! 2-cell tail no longer strands the other workers. The per-bandwidth
+//! exhaustive truth runs — formerly a *serial* pass the pool sat idle
+//! behind — stay folded into the scheduled cells: the first cell that
+//! needs a bandwidth's truth computes it inside the pool, concurrent
+//! requesters of the same bandwidth block on that one computation, and
+//! other bandwidths proceed in parallel.
+//!
+//! Cell results come back through the pool's **indexed reduction**:
+//! every scheduled cell is either present at its slot or the sweep
+//! panics with the worker's original panic — a crashing cell can no
+//! longer silently vanish from the table (the old code ignored
+//! `result_tx.send` failures and never compared received against
+//! scheduled). Because each deterministic cell's evaluation is
+//! pool-width-invariant, tables built from Naive / dual-tree / FGT
+//! rows are bit-identical (outcomes and verified errors, not timings)
+//! for any `workers` setting; IFGT rows remain wall-clock-dependent at
+//! every width — its K-doubling tuning stops on a time budget — so
+//! they are ε-verified but not schedule-invariant (see
+//! [`SweepConfig::workers`]).
 //!
 //! Rows may also be [`AlgoSpec::Auto`] (= [`crate::api::Method::Auto`]):
 //! the cell resolves through the session's cost model before running.
 
 pub mod job;
 pub mod report;
-
-use std::sync::mpsc;
 
 use crate::api::{EvalRequest, PrepareOptions, Session};
 use crate::algo::{max_relative_error, AlgoError};
@@ -35,13 +49,15 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepResult {
 
     // ---- one prepared session for the whole table: every cell (all
     // algorithms × all bandwidths) shares its tree, moment memo, truth
-    // memo, FGT frame and IFGT clustering plans ----
+    // memo, FGT frame, IFGT clustering plans — and its work-stealing
+    // pool, which `threads: cfg.workers` sizes for the whole sweep ----
     let (session, prep_secs) = time_it(|| {
         let defaults = PrepareOptions::default();
         Session::prepare(
             data,
             PrepareOptions {
                 leaf_size: cfg.leaf_size,
+                threads: cfg.workers,
                 fast_exp: cfg.fast_exp,
                 // never evict a truth this sweep will revisit: each of
                 // the 7 algorithm rows verifies against every bandwidth
@@ -50,43 +66,52 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepResult {
             },
         )
     });
+    run_sweep_on(cfg, &session, prep_secs)
+}
 
-    // ---- schedule the (algo × h) cells on a worker pool ----
+/// The scheduling core of [`run_sweep`], split out so tests can inject
+/// a pre-poisoned session: fan the (algo × h) cells onto the session's
+/// pool, reduce by cell index, and assemble the table.
+pub(crate) fn run_sweep_on(
+    cfg: &SweepConfig,
+    session: &Session<'_>,
+    prep_secs: f64,
+) -> SweepResult {
+    let bandwidths: Vec<f64> = cfg.multipliers.iter().map(|m| m * cfg.h_star).collect();
     let jobs: Vec<(usize, usize)> = (0..cfg.algorithms.len())
         .flat_map(|a| (0..bandwidths.len()).map(move |b| (a, b)))
         .collect();
-    let workers = cfg.workers.max(1);
-    let (result_tx, result_rx) = mpsc::channel::<CellResult>();
-    let next = std::sync::atomic::AtomicUsize::new(0);
 
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let result_tx = result_tx.clone();
-            let jobs = &jobs;
-            let next = &next;
-            let bandwidths = &bandwidths;
-            let session = &session;
-            scope.spawn(move || loop {
-                let k = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if k >= jobs.len() {
-                    break;
-                }
-                let (ai, bi) = jobs[k];
-                let cell = run_cell(cfg, session, cfg.algorithms[ai], ai, bi, bandwidths[bi]);
-                let _ = result_tx.send(cell);
-            });
-        }
-        drop(result_tx);
+    // Indexed reduction: cell k lands at slot k or the pool re-raises
+    // the worker's panic — results cannot be silently dropped.
+    let cells: Vec<CellResult> = session.pool().run_indexed(jobs.len(), |k| {
+        let (ai, bi) = jobs[k];
+        run_cell(cfg, session, cfg.algorithms[ai], ai, bi, bandwidths[bi])
     });
-
-    let mut cells: Vec<CellResult> = result_rx.into_iter().collect();
-    cells.sort_by_key(|c| (c.algo_index, c.bandwidth_index));
+    assert_eq!(
+        cells.len(),
+        jobs.len(),
+        "sweep lost cells: received {} of {} scheduled",
+        cells.len(),
+        jobs.len()
+    );
+    debug_assert!(
+        cells.iter().enumerate().all(|(k, c)| (c.algo_index, c.bandwidth_index) == jobs[k]),
+        "indexed reduction must preserve (algo, h) order"
+    );
 
     // The Naive row's timings, read back from the session's truth memo
     // (every scheduled cell verified against it, so these are all warm;
     // a sweep with no cells at all computes them here).
-    let naive_secs: Vec<f64> =
-        bandwidths.iter().map(|&h| session.exact_sums(h, cfg.epsilon).1).collect();
+    let naive_secs: Vec<f64> = bandwidths
+        .iter()
+        .map(|&h| {
+            session
+                .exact_sums(h, cfg.epsilon)
+                .unwrap_or_else(|e| panic!("naive row truth for h={h:.6e}: {e}"))
+                .1
+        })
+        .collect();
 
     SweepResult {
         dataset: cfg.dataset.name.clone(),
@@ -127,8 +152,17 @@ fn run_cell(
 
     // Fold this bandwidth's exhaustive truth into the pool: the paper
     // protocol verifies every cell, so fetch (= compute, first time)
-    // before running the algorithm.
-    let (exact, _naive_secs, _warm) = session.exact_sums(h, cfg.epsilon);
+    // before running the algorithm. A truth failure is infrastructure,
+    // not an algorithmic X/∞ — surface the underlying panic instead of
+    // mislabeling the cell (the pool re-raises it to run_sweep's
+    // caller).
+    let exact = match session.exact_sums(h, cfg.epsilon) {
+        Ok((exact, _, _)) => exact,
+        Err(e) => panic!(
+            "sweep cell {}×h[{bandwidth_index}]: exhaustive truth unavailable: {e}",
+            spec.name()
+        ),
+    };
 
     let req = EvalRequest::kde(h, cfg.epsilon).with_method(spec);
     match session.evaluate(&req) {
@@ -152,6 +186,10 @@ fn run_cell(
             // only in the error message — its sums are discarded)
             cell.outcome = CellOutcome::ToleranceUnreachable
         }
+        Err(e @ AlgoError::Internal(_)) => panic!(
+            "sweep cell {}×h[{bandwidth_index}] hit an internal failure: {e}",
+            spec.name()
+        ),
     }
     cell
 }
@@ -254,6 +292,60 @@ mod tests {
         }
         assert_eq!(res.naive_secs.len(), 2, "truth must be recorded per bandwidth");
         assert!(res.naive_secs.iter().all(|&s| s > 0.0));
+    }
+
+    /// Regression for the silently-dropped-cell bug: the old pool
+    /// ignored `result_tx.send` failures and never compared received
+    /// against scheduled, so a panicking worker shrank the table. Now a
+    /// poisoned cell surfaces the original panic to `run_sweep`'s
+    /// caller instead of returning a partial table.
+    #[test]
+    fn poisoned_cell_panics_the_sweep_instead_of_dropping_cells() {
+        let cfg = small_cfg();
+        let bandwidths: Vec<f64> = cfg.multipliers.iter().map(|m| m * cfg.h_star).collect();
+        let session = Session::prepare(
+            &cfg.dataset.points,
+            PrepareOptions {
+                leaf_size: cfg.leaf_size,
+                threads: cfg.workers,
+                fast_exp: cfg.fast_exp,
+                truth_cache_capacity: bandwidths.len().max(64),
+                ..Default::default()
+            },
+        );
+        // poison one bandwidth's truth: its computing requester panics
+        assert!(session
+            .exact_sums_with(bandwidths[1], || panic!("injected cell failure"))
+            .is_err());
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_sweep_on(&cfg, &session, 0.0)
+        }));
+        let payload = result.expect_err("a poisoned cell must fail the sweep loudly");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(
+            msg.contains("injected cell failure") || msg.contains("truth unavailable"),
+            "panic must carry the cell context: {msg}"
+        );
+    }
+
+    /// Every scheduled cell is delivered, in (algo, h) order, on every
+    /// pool width — the received == scheduled contract.
+    #[test]
+    fn all_scheduled_cells_are_received_in_order() {
+        for workers in [1, 3] {
+            let mut cfg = small_cfg();
+            cfg.workers = workers;
+            let res = run_sweep(&cfg);
+            assert_eq!(res.cells.len(), cfg.algorithms.len() * cfg.multipliers.len());
+            for (k, c) in res.cells.iter().enumerate() {
+                assert_eq!(c.algo_index, k / cfg.multipliers.len(), "workers={workers}");
+                assert_eq!(c.bandwidth_index, k % cfg.multipliers.len(), "workers={workers}");
+            }
+        }
     }
 
     #[test]

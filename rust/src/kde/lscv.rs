@@ -149,10 +149,11 @@ pub fn lscv_score_session(
 
 /// Evaluate LSCV over a bandwidth grid on a prepared [`Session`]: the
 /// 2·G summations (each grid h and its √2·h companion) go through one
-/// [`Session::evaluate_batch`] call, parallel across requests with the
-/// session's thread count, zero further tree builds. Scores are
-/// bit-identical to [`select_bandwidth_engine`] for the corresponding
-/// dual-tree method.
+/// [`Session::evaluate_batch`] call — request tasks and their nested
+/// traversal tasks share the session's work-stealing pool, so even a
+/// 2-bandwidth grid saturates every worker — with zero further tree
+/// builds. Scores are bit-identical to [`select_bandwidth_engine`] for
+/// the corresponding dual-tree method, in any pool width.
 pub fn select_bandwidth_session(
     session: &Session<'_>,
     grid: &[f64],
@@ -347,13 +348,17 @@ mod tests {
         assert_eq!(h_engine, h_session);
         assert_eq!(scores_engine, scores_session, "session sweep diverged from engine sweep");
         assert_eq!(session.tree_builds(), 1);
-        // per-h scores also match the single-score session entry point —
-        // on a one-thread session: lscv_score_session evaluates with the
-        // session's thread count, and the multi-threaded traversal is
-        // deliberately not bit-identical to the single-threaded one
+        // per-h scores also match the single-score session entry point.
+        // Since the shared pool's fixed task decomposition made the
+        // traversal pool-width-invariant, this holds for ANY thread
+        // count — pin both the inline-pool and a wide-pool session.
         let session1 = Session::kde(&data);
         let s0 = lscv_score_session(&session1, grid[0], 1e-4, Method::Dito).unwrap();
         assert_eq!(s0, scores_session[0]);
+        let session8 =
+            Session::prepare(&data, PrepareOptions { threads: 8, ..Default::default() });
+        let s0_wide = lscv_score_session(&session8, grid[0], 1e-4, Method::Dito).unwrap();
+        assert_eq!(s0_wide, scores_session[0], "pool width must not change LSCV scores");
     }
 
     /// A mock summation engine that poisons chosen bandwidths with NaN.

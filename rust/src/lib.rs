@@ -13,9 +13,14 @@
 //!   (or `Auto`), ε-verified FGT/IFGT tuning included. Every caller
 //!   (KDE, LSCV, coordinator, CLI, examples, benches) goes through it.
 //! * L3 (this crate): trees, expansions, translation operators, error
-//!   control, the seven algorithms, LSCV, sweep coordination, CLI. All
-//!   exhaustive inner loops route through the shared [`compute`]
-//!   drivers — by default the GEMM-shaped tiled base case
+//!   control, the seven algorithms, LSCV, sweep coordination, CLI.
+//!   Every fan-out — dual-tree traversal splits, session batches, the
+//!   coordinator's sweep cells — schedules onto one shared
+//!   work-stealing pool ([`runtime::pool::WorkStealPool`]) with a
+//!   fixed task decomposition and indexed reduction, so nested
+//!   parallelism composes and results are bit-identical across pool
+//!   widths. All exhaustive inner loops route through the shared
+//!   [`compute`] drivers — by default the GEMM-shaped tiled base case
 //!   ([`compute::tile`]: cached squared norms + dot-product tiles +
 //!   the certified [`compute::fastexp`], its error reserved out of the
 //!   ε budget by [`errorcontrol::split_epsilon`]), with the bit-exact

@@ -1,16 +1,20 @@
-//! PJRT runtime: load the AOT-compiled HLO artifacts (`make artifacts`)
-//! and execute them from the rust hot path. Python never runs here —
-//! the artifacts are self-contained HLO text compiled once per process
-//! by the XLA CPU backend. Built without the `pjrt` feature,
-//! [`TiledNaive`] degrades gracefully to the [`crate::compute`] SoA
-//! microkernel so every bench and CLI path still runs.
+//! Execution runtime: the shared work-stealing task pool every fan-out
+//! in the crate schedules onto ([`pool`]), plus the PJRT path — load
+//! the AOT-compiled HLO artifacts (`make artifacts`) and execute them
+//! from the rust hot path. Python never runs here — the artifacts are
+//! self-contained HLO text compiled once per process by the XLA CPU
+//! backend. Built without the `pjrt` feature, [`TiledNaive`] degrades
+//! gracefully to the [`crate::compute`] SoA microkernel so every bench
+//! and CLI path still runs.
 
 pub mod artifact;
 pub mod executor;
+pub mod pool;
 pub mod tiled_naive;
 
 pub use artifact::{ArtifactManifest, ArtifactSpec};
 pub use executor::TileExecutor;
+pub use pool::WorkStealPool;
 pub use tiled_naive::TiledNaive;
 
 /// Default artifacts directory, overridable with `FASTGAUSS_ARTIFACTS`.

@@ -1,0 +1,584 @@
+//! The one shared work-stealing task pool under every fan-out in the
+//! crate: dual-tree traversal splits, [`crate::api::Session`] request
+//! batches, and the coordinator's (algorithm × bandwidth) sweep cells
+//! all schedule onto the same workers, so nested parallelism composes
+//! instead of fragmenting (a batch of 2 requests on an 8-worker pool
+//! exposes 2 × up-to-[`crate::algo::dualtree::TRAVERSAL_TASKS`] leaf
+//! tasks — every core stays busy, where the pre-pool design pinned
+//! each request to one inner thread and left 6 cores idle).
+//!
+//! # Design
+//!
+//! * **Per-worker deques + stealing.** Each worker owns a deque; it
+//!   pushes tasks it spawns onto its own deque (LIFO pop for cache
+//!   locality) and steals FIFO from the injector or from other workers
+//!   when its deque runs dry. External (non-worker) threads submit
+//!   through the shared injector queue.
+//! * **Scoped tasks, no `'static` bound.** [`WorkStealPool::scope`]
+//!   mirrors `std::thread::scope`: tasks may borrow the caller's stack,
+//!   and the scope does not return until every spawned task has
+//!   finished (the lifetime erasure inside `spawn` is sound for exactly
+//!   this reason).
+//! * **Workers help, externals park.** A pool worker waiting on a
+//!   nested scope executes pending tasks instead of blocking — this is
+//!   what makes nested parallelism deadlock-free: a batch task that
+//!   fans its traversal out into the same pool helps drain that work
+//!   rather than occupying a worker with a bare wait. An *external*
+//!   caller waiting on its scope just parks: its tasks drain on the
+//!   workers anyway, and helping would let one stolen multi-second
+//!   foreign task delay a cheap call long after its own tasks
+//!   finished.
+//! * **Deterministic indexed reduction.** [`WorkStealPool::run_indexed`]
+//!   runs `n` tasks and returns their results **in index order**,
+//!   regardless of which worker ran what when. Callers that combine
+//!   floating-point partial results iterate that vector in order, so
+//!   the combination order — and therefore every bit of the result —
+//!   is independent of the pool width and of stealing. All three
+//!   fan-outs are built on it.
+//! * **Panic propagation.** A panicking task can neither poison the
+//!   pool nor silently vanish: the first panic of a scope is captured
+//!   and re-raised from `scope`/`run_indexed` on the waiting thread
+//!   after the remaining tasks finish.
+//! * **Inline mode.** `WorkStealPool::new(1)` spawns no threads at
+//!   all: `spawn` runs the task immediately on the caller, in spawn
+//!   order. Combined with the fixed task decomposition used by the
+//!   traversal, results are bit-identical across every pool width —
+//!   the determinism suite (`rust/tests/pool_determinism.rs`) pins
+//!   widths {1, 2, 8}.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// A queued unit of work (lifetime-erased; see the safety comment in
+/// [`PoolScope::spawn`]).
+type RawTask = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    /// `(pool id, worker index)` when the current thread is a pool
+    /// worker — lets `spawn` push to the worker's own deque and lets a
+    /// nested `scope` help under the correct identity. A thread belongs
+    /// to at most one pool, so the id disambiguates nested pools.
+    static CURRENT_WORKER: Cell<Option<(u64, usize)>> = const { Cell::new(None) };
+}
+
+/// Process-unique pool ids for `CURRENT_WORKER` disambiguation.
+static NEXT_POOL_ID: AtomicU64 = AtomicU64::new(0);
+
+/// How long an idle worker parks between queue re-checks. The wake
+/// protocol has no missed-wakeup window (pushers notify under the
+/// `idle` lock, workers re-check the predicate under the same lock
+/// before parking), so this is purely a safety net — generous, so an
+/// idle pool costs ~1 wakeup/s/worker instead of busy-ticking.
+const PARK_TIMEOUT: Duration = Duration::from_millis(1000);
+
+/// How long a helping worker mid-scope parks when no task is runnable
+/// (woken by task completions as well as pushes; same airtight
+/// protocol, so also just a safety net).
+const WAIT_TIMEOUT: Duration = Duration::from_millis(50);
+
+struct Shared {
+    id: u64,
+    /// One deque per spawned worker (empty for an inline pool).
+    deques: Vec<Mutex<VecDeque<RawTask>>>,
+    /// Submission queue for external (non-worker) threads.
+    injector: Mutex<VecDeque<RawTask>>,
+    /// Tasks pushed but not yet popped — sleep/wake bookkeeping only.
+    pending: AtomicUsize,
+    shutdown: AtomicBool,
+    idle: Mutex<()>,
+    wake: Condvar,
+    /// Tasks executed per worker (telemetry; the determinism suite's
+    /// engagement assertion reads this).
+    worker_tasks: Vec<AtomicU64>,
+    /// Tasks executed inline or by helping external threads.
+    external_tasks: AtomicU64,
+}
+
+impl Shared {
+    /// Pop one runnable task: own deque (LIFO), then the injector, then
+    /// steal FIFO from the other workers.
+    fn pop_task(&self, me: Option<usize>) -> Option<RawTask> {
+        if let Some(i) = me {
+            if let Some(t) = self.deques[i].lock().unwrap().pop_back() {
+                self.pending.fetch_sub(1, Ordering::AcqRel);
+                return Some(t);
+            }
+        }
+        if let Some(t) = self.injector.lock().unwrap().pop_front() {
+            self.pending.fetch_sub(1, Ordering::AcqRel);
+            return Some(t);
+        }
+        let n = self.deques.len();
+        let start = me.map_or(0, |i| i + 1);
+        for k in 0..n {
+            let j = (start + k) % n;
+            if Some(j) == me {
+                continue;
+            }
+            if let Some(t) = self.deques[j].lock().unwrap().pop_front() {
+                self.pending.fetch_sub(1, Ordering::AcqRel);
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    /// Pop and execute one task; `false` when nothing was runnable.
+    fn run_one(&self, me: Option<usize>) -> bool {
+        match self.pop_task(me) {
+            Some(task) => {
+                match me {
+                    Some(i) => {
+                        self.worker_tasks[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                    None => {
+                        self.external_tasks.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                task();
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn notify_all(&self) {
+        let _guard = self.idle.lock().unwrap();
+        self.wake.notify_all();
+    }
+
+    fn push(&self, task: RawTask) {
+        // pending is incremented BEFORE the push so a racing pop can
+        // never decrement below zero.
+        self.pending.fetch_add(1, Ordering::AcqRel);
+        let me = CURRENT_WORKER.with(|c| c.get());
+        match me {
+            Some((pool, i)) if pool == self.id => {
+                self.deques[i].lock().unwrap().push_back(task);
+            }
+            _ => self.injector.lock().unwrap().push_back(task),
+        }
+        self.notify_all();
+    }
+
+    /// This thread's worker index in *this* pool, if any.
+    fn my_index(&self) -> Option<usize> {
+        CURRENT_WORKER
+            .with(|c| c.get())
+            .and_then(|(pool, i)| (pool == self.id).then_some(i))
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, index: usize) {
+    CURRENT_WORKER.with(|c| c.set(Some((shared.id, index))));
+    loop {
+        if shared.run_one(Some(index)) {
+            continue;
+        }
+        if shared.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        let guard = shared.idle.lock().unwrap();
+        if shared.pending.load(Ordering::Acquire) == 0
+            && !shared.shutdown.load(Ordering::Acquire)
+        {
+            let (_parked, _) = shared.wake.wait_timeout(guard, PARK_TIMEOUT).unwrap();
+        }
+    }
+}
+
+/// Completion latch of one [`WorkStealPool::scope`]: outstanding-task
+/// count plus the first captured panic.
+struct ScopeLatch {
+    remaining: AtomicUsize,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl ScopeLatch {
+    fn record_panic(&self, payload: Box<dyn std::any::Any + Send>) {
+        let mut slot = self.panic.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+}
+
+/// Spawn handle passed to the closure of [`WorkStealPool::scope`];
+/// tasks may borrow anything that outlives the scope (`'env`).
+pub struct PoolScope<'scope, 'env: 'scope> {
+    shared: &'scope Arc<Shared>,
+    latch: &'scope Arc<ScopeLatch>,
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'scope, 'env> PoolScope<'scope, 'env> {
+    /// Queue `task` onto the pool. On an inline pool (width 1) the task
+    /// runs immediately, in spawn order; panics are captured either way
+    /// and re-raised when the scope completes.
+    pub fn spawn<F: FnOnce() + Send + 'env>(&self, task: F) {
+        if self.shared.deques.is_empty() {
+            // inline pool: no workers — run now, deterministically in
+            // spawn order, with pooled panic semantics (remaining tasks
+            // still run; the first panic re-raises at scope exit)
+            self.shared.external_tasks.fetch_add(1, Ordering::Relaxed);
+            if let Err(p) = catch_unwind(AssertUnwindSafe(task)) {
+                self.latch.record_panic(p);
+            }
+            return;
+        }
+        self.latch.remaining.fetch_add(1, Ordering::AcqRel);
+        let latch = Arc::clone(self.latch);
+        let shared = Arc::clone(self.shared);
+        let wrapped: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            if let Err(p) = catch_unwind(AssertUnwindSafe(task)) {
+                latch.record_panic(p);
+            }
+            latch.remaining.fetch_sub(1, Ordering::AcqRel);
+            // wake any scope waiter parked on the shared condvar
+            shared.notify_all();
+        });
+        // SAFETY: `scope` does not return (or unwind) before `remaining`
+        // reaches zero, i.e. before this closure — and every `'env`
+        // borrow it captures — has finished running. The transmute only
+        // erases that lifetime so the task can sit in a queue typed
+        // `'static`; it can never actually outlive the borrowed data.
+        let raw = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, RawTask>(wrapped)
+        };
+        self.shared.push(raw);
+    }
+}
+
+/// The shared work-stealing pool. See the module docs for the design;
+/// construction is cheap for width 1 (no threads are spawned).
+pub struct WorkStealPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkStealPool {
+    /// A pool of `workers` parallel executors. `workers <= 1` builds an
+    /// *inline* pool: no threads, `spawn` executes immediately on the
+    /// caller — the deterministic sequential baseline every other width
+    /// must (and does) reproduce bit-for-bit.
+    pub fn new(workers: usize) -> Self {
+        let spawned = if workers <= 1 { 0 } else { workers };
+        let shared = Arc::new(Shared {
+            id: NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed),
+            deques: (0..spawned).map(|_| Mutex::new(VecDeque::new())).collect(),
+            injector: Mutex::new(VecDeque::new()),
+            pending: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            idle: Mutex::new(()),
+            wake: Condvar::new(),
+            worker_tasks: (0..spawned).map(|_| AtomicU64::new(0)).collect(),
+            external_tasks: AtomicU64::new(0),
+        });
+        let handles = (0..spawned)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("fastgauss-pool-{i}"))
+                    // helping waits can nest task chains (a worker
+                    // waiting on a nested scope executes further tasks
+                    // on its own stack) — give workers generous room
+                    .stack_size(8 << 20)
+                    .spawn(move || worker_loop(shared, i))
+                    .expect("failed to spawn pool worker")
+            })
+            .collect();
+        WorkStealPool { shared, handles }
+    }
+
+    /// The inline (width-1, zero-thread) pool.
+    pub fn inline() -> Self {
+        Self::new(1)
+    }
+
+    /// Parallelism width: spawned workers, or 1 for an inline pool.
+    pub fn workers(&self) -> usize {
+        self.shared.deques.len().max(1)
+    }
+
+    /// True when this pool runs everything inline on the caller.
+    pub fn is_inline(&self) -> bool {
+        self.shared.deques.is_empty()
+    }
+
+    /// Tasks executed so far by each spawned worker (empty for an
+    /// inline pool). Telemetry: the determinism suite asserts a small
+    /// batch on a wide pool engages more workers than requests.
+    pub fn worker_task_counts(&self) -> Vec<u64> {
+        self.shared
+            .worker_tasks
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Tasks executed inline on the caller (width-1 pools only — on a
+    /// threaded pool every task runs on a worker).
+    pub fn external_task_count(&self) -> u64 {
+        self.shared.external_tasks.load(Ordering::Relaxed)
+    }
+
+    /// Run `f(&scope)` with the ability to spawn borrowed tasks, then
+    /// wait for every spawned task. A pool worker waiting here (a
+    /// nested scope) *helps* execute pending pool work, so nested
+    /// scopes never deadlock; an external caller parks until its tasks
+    /// drain on the workers. The first task panic (or a panic of `f`
+    /// itself) is re-raised here after all tasks finish.
+    pub fn scope<'env, R>(
+        &self,
+        f: impl for<'scope> FnOnce(&'scope PoolScope<'scope, 'env>) -> R,
+    ) -> R {
+        let latch = Arc::new(ScopeLatch {
+            remaining: AtomicUsize::new(0),
+            panic: Mutex::new(None),
+        });
+        let result = {
+            let scope = PoolScope { shared: &self.shared, latch: &latch, _env: PhantomData };
+            catch_unwind(AssertUnwindSafe(|| f(&scope)))
+        };
+        // Wait for completion. Must happen even if `f` panicked:
+        // spawned tasks still borrow `'env` data on our stack.
+        //
+        // Only POOL WORKERS help while waiting: a worker parked inside
+        // a nested scope would deadlock the pool, so it executes
+        // pending tasks instead — that is what makes batch → traversal
+        // nesting compose. An external caller, by contrast, simply
+        // parks: its tasks drain on the workers regardless, and
+        // helping would let one stolen multi-second foreign task delay
+        // this scope's return long after its own tasks finished.
+        match self.shared.my_index() {
+            me @ Some(_) => {
+                while latch.remaining.load(Ordering::Acquire) != 0 {
+                    if self.shared.run_one(me) {
+                        continue;
+                    }
+                    let guard = self.shared.idle.lock().unwrap();
+                    if latch.remaining.load(Ordering::Acquire) != 0
+                        && self.shared.pending.load(Ordering::Acquire) == 0
+                    {
+                        let (_parked, _) =
+                            self.shared.wake.wait_timeout(guard, WAIT_TIMEOUT).unwrap();
+                    }
+                }
+            }
+            None => loop {
+                let guard = self.shared.idle.lock().unwrap();
+                if latch.remaining.load(Ordering::Acquire) == 0 {
+                    break;
+                }
+                let (_parked, _) = self.shared.wake.wait_timeout(guard, WAIT_TIMEOUT).unwrap();
+            },
+        }
+        match result {
+            Err(p) => resume_unwind(p),
+            Ok(r) => {
+                if let Some(p) = latch.panic.lock().unwrap().take() {
+                    resume_unwind(p);
+                }
+                r
+            }
+        }
+    }
+
+    /// The deterministic fan-out primitive: run `f(0) .. f(n-1)` as
+    /// pool tasks and return the results **in index order**, however
+    /// the tasks were scheduled or stolen. Callers that fold
+    /// floating-point partials iterate the returned vector in order,
+    /// which makes their reductions independent of the pool width —
+    /// the keystone of the batch ≡ sequential and sweep-bit-identity
+    /// guarantees. Panics inside any task propagate to the caller
+    /// (after the remaining tasks finish); results can therefore never
+    /// be silently dropped — every index is either present or the call
+    /// panics.
+    pub fn run_indexed<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        {
+            let slots = &slots;
+            let f = &f;
+            self.scope(|scope| {
+                for k in 0..n {
+                    scope.spawn(move || {
+                        let value = f(k);
+                        *slots[k].lock().unwrap() = Some(value);
+                    });
+                }
+            });
+        }
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(k, slot)| {
+                slot.into_inner()
+                    .unwrap()
+                    .unwrap_or_else(|| panic!("work-steal pool lost indexed task {k}"))
+            })
+            .collect()
+    }
+}
+
+impl Drop for WorkStealPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.notify_all();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn run_indexed_returns_results_in_index_order() {
+        for workers in [1, 2, 4, 8] {
+            let pool = WorkStealPool::new(workers);
+            let out = pool.run_indexed(100, |k| k * k);
+            assert_eq!(out.len(), 100, "workers={workers}");
+            for (k, v) in out.iter().enumerate() {
+                assert_eq!(*v, k * k, "workers={workers} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn inline_pool_spawns_no_threads_and_runs_in_spawn_order() {
+        let pool = WorkStealPool::inline();
+        assert!(pool.is_inline());
+        assert_eq!(pool.workers(), 1);
+        let order = Mutex::new(Vec::new());
+        pool.scope(|s| {
+            for k in 0..10 {
+                let order = &order;
+                s.spawn(move || order.lock().unwrap().push(k));
+            }
+        });
+        assert_eq!(*order.lock().unwrap(), (0..10).collect::<Vec<_>>());
+        assert!(pool.worker_task_counts().is_empty());
+        assert_eq!(pool.external_task_count(), 10);
+    }
+
+    #[test]
+    fn scoped_tasks_borrow_caller_stack() {
+        let pool = WorkStealPool::new(4);
+        let data: Vec<u64> = (0..1000).collect();
+        let total = AtomicU64::new(0);
+        pool.scope(|s| {
+            for chunk in data.chunks(100) {
+                let total = &total;
+                s.spawn(move || {
+                    total.fetch_add(chunk.iter().sum::<u64>(), Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 1000 * 999 / 2);
+    }
+
+    #[test]
+    fn panic_in_task_propagates_and_pool_survives() {
+        let pool = WorkStealPool::new(2);
+        let ran = AtomicU32::new(0);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_indexed(8, |k| {
+                ran.fetch_add(1, Ordering::Relaxed);
+                if k == 3 {
+                    panic!("injected task failure");
+                }
+                k
+            })
+        }));
+        let payload = result.expect_err("task panic must propagate to the caller");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("injected task failure"), "{msg}");
+        // every task still ran (no sibling cancellation) …
+        assert_eq!(ran.load(Ordering::Relaxed), 8);
+        // … and the pool is not poisoned: it keeps scheduling fine
+        let out = pool.run_indexed(5, |k| k + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn panic_propagates_from_inline_pool_too() {
+        let pool = WorkStealPool::inline();
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_indexed(3, |k| {
+                if k == 1 {
+                    panic!("inline failure");
+                }
+                k
+            })
+        }));
+        assert!(result.is_err());
+        let out = pool.run_indexed(2, |k| k);
+        assert_eq!(out, vec![0, 1]);
+    }
+
+    #[test]
+    fn nested_scopes_compose_without_deadlock() {
+        // outer tasks each fan out again into the same pool — the
+        // worker running an outer task must help drain inner tasks
+        // rather than block (this is the batch × traversal shape)
+        for workers in [1, 2, 4] {
+            let pool = WorkStealPool::new(workers);
+            let out = pool.run_indexed(4, |outer| {
+                let inner = pool.run_indexed(8, |k| (outer * 100 + k) as u64);
+                inner.iter().sum::<u64>()
+            });
+            for (outer, total) in out.iter().enumerate() {
+                let want: u64 = (0..8).map(|k| (outer * 100 + k) as u64).sum();
+                assert_eq!(*total, want, "workers={workers} outer={outer}");
+            }
+        }
+    }
+
+    #[test]
+    fn external_and_worker_task_counts_account_everything() {
+        let pool = WorkStealPool::new(3);
+        pool.run_indexed(50, |k| k);
+        let by_workers: u64 = pool.worker_task_counts().iter().sum();
+        let total = by_workers + pool.external_task_count();
+        assert_eq!(total, 50, "every task must be counted exactly once");
+    }
+
+    #[test]
+    fn empty_scope_and_zero_tasks_return_immediately() {
+        let pool = WorkStealPool::new(2);
+        pool.scope(|_| {});
+        let out: Vec<u32> = pool.run_indexed(0, |_| unreachable!());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn results_bitwise_identical_across_widths() {
+        // a floating-point fold over indexed results must not depend on
+        // the pool width — the contract every engine guarantee rests on
+        let fold = |workers: usize| -> f64 {
+            let pool = WorkStealPool::new(workers);
+            let parts = pool.run_indexed(64, |k| 1.0 / (k as f64 + 1.0));
+            parts.iter().fold(0.0, |acc, v| acc + v)
+        };
+        let base = fold(1);
+        for workers in [2, 4, 8] {
+            assert_eq!(fold(workers).to_bits(), base.to_bits(), "workers={workers}");
+        }
+    }
+}

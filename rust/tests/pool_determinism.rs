@@ -1,0 +1,173 @@
+//! Determinism suite for the shared work-stealing pool (PR 5): the
+//! batch ≡ sequential bitwise guarantee and sweep-table bit-identity
+//! across pool widths {1, 2, 8}, plus a stats-based check that nested
+//! parallelism actually engages more workers than requests.
+//!
+//! Why these hold at all: the traversal cuts the query tree into a
+//! *fixed* task set (a function of the tree, never of the pool width)
+//! and every fan-out reduces its partial results by task index — so
+//! scheduling and stealing can change wall-clock time but not a single
+//! bit of any result.
+//!
+//! Scope: the suite covers the deterministic engines (Naive, the
+//! dual-tree family, Auto which only resolves to those, and FGT's
+//! τ-halving). IFGT is deliberately excluded — its K-doubling tuning
+//! stops on a wall-clock budget, so its answers are ε-verified but
+//! inherently timing-dependent at any pool width (documented in
+//! DESIGN.md and `SweepConfig::workers`).
+
+use fastgauss::api::{EvalRequest, Method, PrepareOptions, Session};
+use fastgauss::coordinator::{run_sweep, AlgoSpec, SweepConfig};
+use fastgauss::data;
+use fastgauss::kde::bandwidth::silverman;
+use fastgauss::kde::lscv::select_bandwidth_session;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+fn prepared(data: &fastgauss::geometry::Matrix, threads: usize) -> Session<'_> {
+    Session::prepare(data, PrepareOptions { threads, ..Default::default() })
+}
+
+/// evaluate_batch on a session of ANY pool width {1, 2, 8} must equal
+/// sequential evaluation on an inline-pool session bit-for-bit — for
+/// dual-tree methods (pool-width-invariant traversal), Naive (truth
+/// memo) and Auto (deterministic resolution) alike.
+#[test]
+fn batch_bitwise_equals_sequential_across_widths_1_2_8() {
+    let data = data::by_name("astro2d", 400, 17).unwrap().points;
+    let h_star = silverman(&data);
+    let requests: Vec<EvalRequest<'static>> = [0.1, 1.0, 10.0]
+        .iter()
+        .flat_map(|&m| {
+            [Method::Dito, Method::Dfdo, Method::Dfd, Method::Naive, Method::Auto]
+                .into_iter()
+                .map(move |method| EvalRequest::kde(m * h_star, 0.01).with_method(method))
+        })
+        .collect();
+
+    let sequential = prepared(&data, 1);
+    let want: Vec<_> = requests.iter().map(|r| sequential.evaluate(r).unwrap()).collect();
+
+    for threads in THREAD_COUNTS {
+        let session = prepared(&data, threads);
+        assert_eq!(session.pool().workers(), threads.max(1));
+        let batch = session.evaluate_batch(&requests);
+        assert_eq!(batch.len(), requests.len(), "threads={threads}: lost requests");
+        for ((req, got), want) in requests.iter().zip(batch).zip(&want) {
+            let got = got.unwrap();
+            assert_eq!(
+                got.sums, want.sums,
+                "threads={threads} h={} {}: batch diverged from sequential",
+                req.h, req.method
+            );
+            assert_eq!(got.method, want.method);
+            // merged traversal counters are part of the guarantee too
+            assert_eq!(got.stats.node_pairs, want.stats.node_pairs);
+            assert_eq!(got.stats.base_point_pairs, want.stats.base_point_pairs);
+            assert_eq!(
+                got.stats.tokens_banked.to_bits(),
+                want.stats.tokens_banked.to_bits(),
+                "threads={threads}: stats reduction must be order-fixed"
+            );
+        }
+    }
+}
+
+/// Whole sweep tables — outcomes and verified errors, the bits the
+/// paper table is rendered from — are identical across worker counts
+/// {1, 2, 8}.
+#[test]
+fn sweep_tables_bit_identical_across_workers_1_2_8() {
+    let run = |workers: usize| {
+        let ds = data::by_name("astro2d", 300, 23).unwrap();
+        let h_star = silverman(&ds.points);
+        run_sweep(&SweepConfig {
+            dataset: ds,
+            epsilon: 0.01,
+            h_star,
+            multipliers: vec![0.1, 1.0, 10.0],
+            algorithms: vec![AlgoSpec::Naive, AlgoSpec::Dfd, AlgoSpec::Dito, AlgoSpec::Auto],
+            workers,
+            leaf_size: 16,
+            fast_exp: true,
+        })
+    };
+    let base = run(1);
+    assert_eq!(base.cells.len(), 12);
+    for workers in [2, 8] {
+        let table = run(workers);
+        assert_eq!(table.cells.len(), base.cells.len(), "workers={workers}");
+        for (a, b) in base.cells.iter().zip(&table.cells) {
+            assert_eq!(
+                (a.algo_index, a.bandwidth_index),
+                (b.algo_index, b.bandwidth_index),
+                "workers={workers}: cell order must be fixed"
+            );
+            // verified errors bitwise (f64), outcomes same kind
+            // (timings legitimately differ)
+            assert_eq!(
+                a.rel_err.map(f64::to_bits),
+                b.rel_err.map(f64::to_bits),
+                "workers={workers} cell ({}, {})",
+                a.algo_index,
+                a.bandwidth_index
+            );
+            assert_eq!(
+                std::mem::discriminant(&a.outcome),
+                std::mem::discriminant(&b.outcome),
+                "workers={workers}: outcome kind changed"
+            );
+        }
+    }
+}
+
+/// LSCV bandwidth selection — the paper's end-to-end workload — picks
+/// the same h* with the same scores on every pool width.
+#[test]
+fn lscv_selection_identical_across_widths() {
+    let data = data::by_name("galaxy3d", 250, 29).unwrap().points;
+    let pilot = silverman(&data);
+    let grid: Vec<f64> = (0..5).map(|i| pilot * 0.25 * (i + 1) as f64).collect();
+    let base_session = prepared(&data, 1);
+    let (h_base, scores_base) =
+        select_bandwidth_session(&base_session, &grid, 1e-4, Method::Dito).unwrap();
+    for threads in [2, 8] {
+        let session = prepared(&data, threads);
+        let (h, scores) = select_bandwidth_session(&session, &grid, 1e-4, Method::Dito).unwrap();
+        assert_eq!(h, h_base, "threads={threads}");
+        assert_eq!(scores, scores_base, "threads={threads}: scores diverged");
+    }
+}
+
+/// The undersubscription fix, observed through pool telemetry: a
+/// 2-request batch on an 8-worker session engages MORE than 2 workers,
+/// because each request fans its traversal tasks into the shared pool
+/// (the old model pinned each request to one inner thread, so exactly
+/// min(workers, requests) = 2 threads ever did work). Stats-based: we
+/// union engaged workers over a few repetitions to be robust to
+/// scheduling noise.
+#[test]
+fn two_request_batch_engages_more_than_two_workers() {
+    let data = data::by_name("astro2d", 2000, 31).unwrap().points;
+    let h_star = silverman(&data);
+    let session = prepared(&data, 8);
+    let requests = [
+        EvalRequest::kde(0.5 * h_star, 0.01).with_method(Method::Dito),
+        EvalRequest::kde(1.5 * h_star, 0.01).with_method(Method::Dito),
+    ];
+    let mut engaged = 0;
+    for _ in 0..10 {
+        for res in session.evaluate_batch(&requests) {
+            res.unwrap();
+        }
+        engaged = session.pool().worker_task_counts().iter().filter(|&&c| c > 0).count();
+        if engaged > 2 {
+            break;
+        }
+    }
+    assert!(
+        engaged > 2,
+        "2 requests × 8 workers must spread beyond 2 workers (engaged {engaged}); \
+         nested traversal tasks are not reaching the shared pool"
+    );
+}

@@ -146,7 +146,7 @@ fn auto_selection_goldens() {
     // an Auto evaluation reports the resolved method and meets ε
     let ev = session.evaluate(&EvalRequest::kde(h_star, eps)).unwrap();
     assert_eq!(ev.method, Method::Dito);
-    let exact = session.exact_sums(h_star, eps).0;
+    let exact = session.exact_sums(h_star, eps).unwrap().0;
     assert!(max_relative_error(&ev.sums, &exact) <= eps * (1.0 + 1e-9));
 }
 
@@ -201,7 +201,10 @@ fn truth_memo_serves_repeat_naive_requests() {
 }
 
 /// evaluate_batch ≡ sequential evaluate, bit-for-bit, regardless of
-/// the session's worker count (each request runs one inner thread).
+/// the session's worker count. Requests now share one work-stealing
+/// pool with their nested traversal tasks (no more one-inner-thread
+/// pinning); the guarantee survives because the traversal's task
+/// decomposition and reduction order are pool-width-invariant.
 #[test]
 fn batch_matches_sequential_in_any_worker_count() {
     let data = dataset("astro2d", 400);
@@ -284,7 +287,7 @@ fn plimit_override_respected_via_session() {
     let data = dataset("astro2d", 300);
     let h = silverman(&data);
     let session = Session::kde(&data);
-    let exact = session.exact_sums(h, 0.01).0;
+    let exact = session.exact_sums(h, 0.01).unwrap().0;
     for plimit in [1, 2, 4] {
         let ev = session
             .evaluate(&EvalRequest::kde(h, 0.01).with_method(Method::Dito).with_plimit(plimit))

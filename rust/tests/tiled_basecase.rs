@@ -156,7 +156,7 @@ fn every_method_stays_eps_correct_with_fast_exp_on() {
         assert!(PrepareOptions::default().fast_exp);
         let session = Session::kde(&ds.points);
         for eps in EPSILONS {
-            let (exact, _, _) = session.exact_sums(h, eps);
+            let (exact, _, _) = session.exact_sums(h, eps).unwrap();
             for method in [Method::Dfd, Method::Dfdo, Method::Dfto, Method::Dito, Method::Auto]
             {
                 let ev = session
@@ -193,7 +193,7 @@ fn fast_exp_off_session_also_meets_eps_and_routes_exact() {
         &ds.points,
         PrepareOptions { fast_exp: false, ..Default::default() },
     );
-    let (exact, _, _) = session.exact_sums(h, 1e-4);
+    let (exact, _, _) = session.exact_sums(h, 1e-4).unwrap();
     let ev = session.evaluate(&EvalRequest::kde(h, 1e-4).with_method(Method::Dito)).unwrap();
     assert!(max_relative_error(&ev.sums, &exact) <= 1e-4 * (1.0 + 1e-9));
     assert_eq!(ev.stats.fast_base_cases, 0, "{:?}", ev.stats);
