@@ -8,21 +8,38 @@
 //! truth/moment/clustering memos, exhaustive truth computed inside the
 //! worker pool.
 //!
-//! Run: `cargo run --release --example compare_algorithms [dataset] [n]`
+//! Run: `cargo run --release --example compare_algorithms [dataset] [n] [kernel]`
 //! Datasets: astro2d galaxy3d bio5 pall7 covtype10 texture16
+//! Kernels: gaussian (default) laplace matern32 matern52 imq — the
+//! non-Gaussian ones route every cell through the sum-of-Gaussians
+//! layer and verify against the weight-scaled guarantee.
 
 use fastgauss::coordinator::{report, run_sweep, AlgoSpec, SweepConfig};
 use fastgauss::data;
 use fastgauss::kde::bandwidth::silverman;
+use fastgauss::kernel::Kernel;
 
 fn main() -> fastgauss::util::error::Result<()> {
     let mut args = std::env::args().skip(1);
     let dataset = args.next().unwrap_or_else(|| "astro2d".to_string());
     let n: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let kernel = match args.next() {
+        Some(name) => Kernel::parse(&name).ok_or_else(|| {
+            fastgauss::anyhow!("unknown kernel {name} (valid: {})", Kernel::VALID_NAMES)
+        })?,
+        None => Kernel::Gaussian,
+    };
     let ds = data::by_name(&dataset, n, 42)
         .ok_or_else(|| fastgauss::anyhow!("unknown dataset {dataset}"))?;
     let h_star = silverman(&ds.points);
-    let mut algorithms = AlgoSpec::paper_order();
+    let mut algorithms = if kernel.is_gaussian() {
+        AlgoSpec::paper_order()
+    } else {
+        // SoG cells fan one Gaussian request per component; keep the
+        // table to the tree methods that stay fast at every component
+        // bandwidth
+        vec![AlgoSpec::Dfdo, AlgoSpec::Dito]
+    };
     algorithms.push(AlgoSpec::Auto); // the session's per-cell pick
     let cfg = SweepConfig {
         dataset: ds,
@@ -32,6 +49,8 @@ fn main() -> fastgauss::util::error::Result<()> {
         algorithms,
         workers: 1,
         leaf_size: 32,
+        fast_exp: true,
+        kernel,
     };
     let res = run_sweep(&cfg);
     print!("{}", report::render_table(&res));

@@ -8,6 +8,7 @@ use fastgauss::api::{EvalRequest, Method, Session};
 use fastgauss::data;
 use fastgauss::kde::bandwidth::silverman;
 use fastgauss::kde::density_at_points_session;
+use fastgauss::kernel::Kernel;
 
 fn main() -> fastgauss::util::error::Result<()> {
     // 1. a dataset (any Matrix works; this is the 2-D astronomy-like set)
@@ -46,5 +47,20 @@ fn main() -> fastgauss::util::error::Result<()> {
     println!("f̂(x_0) = {:.6}", dens[0]);
 
     assert_eq!(session.tree_builds(), 1); // everything shared one build
+
+    // 8. kernels beyond the Gaussian: pin one per request and the
+    //    session answers through a certified sum-of-Gaussians
+    //    decomposition — the decomposition's sup-norm error is charged
+    //    out of ε, each Gaussian component is routed through the cost
+    //    model, and the answer satisfies max_q|K̃−K| ≤ ε·W
+    let matern =
+        session.evaluate(&EvalRequest::kde(h, 0.01).with_kernel(Kernel::Matern32))?;
+    let report = matern.sog.as_ref().expect("non-Gaussian answers carry a SoG report");
+    println!(
+        "Matérn-3/2 sum(x_0) = {:.6}  ({} Gaussian components, decomposition error {:.1e})",
+        matern.sums[0],
+        report.components.len(),
+        report.decomp_err
+    );
     Ok(())
 }

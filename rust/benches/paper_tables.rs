@@ -16,6 +16,7 @@
 use fastgauss::coordinator::{report, run_sweep, AlgoSpec, SweepConfig};
 use fastgauss::data;
 use fastgauss::kde::bandwidth::silverman;
+use fastgauss::kernel::Kernel;
 
 fn main() {
     let n: usize = if std::env::var("FASTGAUSS_FULL").is_ok_and(|v| v == "1") {
@@ -49,6 +50,7 @@ fn main() {
             workers: 1,
             leaf_size: 32,
             fast_exp: true,
+            kernel: Kernel::Gaussian,
         };
         let res = run_sweep(&cfg);
         println!("--- {name} (paper: {paper_name}, D = {d}) ---");

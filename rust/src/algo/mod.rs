@@ -180,6 +180,14 @@ pub struct RunStats {
     pub session_cache_misses: u64,
     /// Total wall-clock seconds (filled by the harness/run wrapper).
     pub total_secs: f64,
+    /// Gaussian component requests a sum-of-Gaussians (non-Gaussian
+    /// [`crate::kernel::Kernel`]) evaluate fanned out into; 0 on the
+    /// native Gaussian path.
+    pub sog_components: u64,
+    /// Per-method routing histogram of those components, indexed by the
+    /// paper's seven-row order ([`crate::api::Method::paper_index`]:
+    /// Naive, FGT, IFGT, DFD, DFDO, DFTO, DITO).
+    pub sog_routed: [u64; 7],
 }
 
 impl RunStats {
@@ -208,6 +216,10 @@ impl RunStats {
         self.session_cache_hits += other.session_cache_hits;
         self.session_cache_misses += other.session_cache_misses;
         self.total_secs += other.total_secs;
+        self.sog_components += other.sog_components;
+        for (mine, theirs) in self.sog_routed.iter_mut().zip(other.sog_routed.iter()) {
+            *mine += theirs;
+        }
     }
 }
 
@@ -242,6 +254,16 @@ pub fn max_relative_error(approx: &[f64], exact: &[f64]) -> f64 {
         .zip(exact)
         .map(|(a, e)| if *e > 0.0 { (a - e).abs() / e } else { (a - e).abs() })
         .fold(0.0, f64::max)
+}
+
+/// Maximum absolute error scaled by the total reference weight W —
+/// the verification criterion for sum-of-Gaussians kernels:
+/// max_q |G̃−G| / W ≤ ε (see
+/// [`crate::errorcontrol::split_epsilon_kernel`]).
+pub fn max_weight_scaled_error(approx: &[f64], exact: &[f64], total_weight: f64) -> f64 {
+    assert_eq!(approx.len(), exact.len());
+    assert!(total_weight > 0.0);
+    approx.iter().zip(exact).map(|(a, e)| (a - e).abs()).fold(0.0, f64::max) / total_weight
 }
 
 #[cfg(test)]
@@ -281,6 +303,12 @@ mod tests {
     fn max_rel_error_basic() {
         assert!((max_relative_error(&[1.1, 2.0], &[1.0, 2.0]) - 0.1).abs() < 1e-12);
         assert_eq!(max_relative_error(&[0.5], &[0.0]), 0.5);
+    }
+
+    #[test]
+    fn max_weight_scaled_error_basic() {
+        assert!((max_weight_scaled_error(&[1.2, 2.0], &[1.0, 2.1], 4.0) - 0.05).abs() < 1e-12);
+        assert_eq!(max_weight_scaled_error(&[3.0], &[3.0], 10.0), 0.0);
     }
 
     #[test]

@@ -81,6 +81,23 @@ impl Method {
         ]
     }
 
+    /// Index of a concrete method in [`paper_order`](Method::paper_order)
+    /// — the row this method occupies in per-method histograms such as
+    /// [`crate::algo::RunStats::sog_routed`]. `None` for `Auto`, which
+    /// always resolves to a concrete method before any work is counted.
+    pub fn paper_index(&self) -> Option<usize> {
+        match self {
+            Method::Naive => Some(0),
+            Method::Fgt => Some(1),
+            Method::Ifgt => Some(2),
+            Method::Dfd => Some(3),
+            Method::Dfdo => Some(4),
+            Method::Dfto => Some(5),
+            Method::Dito => Some(6),
+            Method::Auto => None,
+        }
+    }
+
     /// Every variant, `Auto` included.
     pub const ALL: [Method; 8] = [
         Method::Naive,
@@ -236,6 +253,10 @@ mod tests {
         assert!(!order.contains(&Method::Auto));
         assert_eq!(order[0], Method::Naive);
         assert_eq!(order[6], Method::Dito);
+        for (i, m) in order.iter().enumerate() {
+            assert_eq!(m.paper_index(), Some(i));
+        }
+        assert_eq!(Method::Auto.paper_index(), None);
     }
 
     #[test]

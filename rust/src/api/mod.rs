@@ -20,6 +20,12 @@
 //!   ([`crate::runtime::pool`]), and results are bit-identical to
 //!   sequential evaluation in any pool width.
 //!
+//! Sessions are kernel-independent: [`PrepareOptions::kernel`] /
+//! [`EvalRequest::with_kernel`] select any [`Kernel`] family, with the
+//! non-Gaussian ones answered through a certified sum-of-Gaussians
+//! component batch (see [`crate::kernel::sog`]) under the ε·W
+//! guarantee — the Gaussian default stays bit-for-bit identical.
+//!
 //! Every pre-existing call path — `kde::*`, `coordinator::run_sweep`,
 //! the CLI, the examples and the paper benches — routes through here;
 //! the one-shot [`crate::algo::GaussSum`] impls and the raw
@@ -30,5 +36,8 @@ pub mod method;
 pub mod session;
 pub mod tuning;
 
+pub use crate::kernel::Kernel;
 pub use method::{CostModel, Method, ProblemProfile};
-pub use session::{EvalRequest, Evaluation, PrepareOptions, Session};
+pub use session::{
+    EvalRequest, Evaluation, PrepareOptions, Session, SogComponentRoute, SogReport,
+};

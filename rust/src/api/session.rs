@@ -45,7 +45,9 @@ use crate::algo::fgt::GridFrame;
 use crate::algo::ifgt::IfgtPlan;
 use crate::algo::naive::Naive;
 use crate::algo::{AlgoError, GaussSum, GaussSumProblem, RunStats};
+use crate::errorcontrol::split_epsilon_kernel;
 use crate::geometry::Matrix;
+use crate::kernel::{Kernel, SumOfGaussians};
 use crate::runtime::pool::WorkStealPool;
 use crate::util::stats;
 use crate::util::timer::time_it;
@@ -91,6 +93,12 @@ pub struct PrepareOptions {
     /// key / `--fast-exp false` CLI flag). Naive answers (the
     /// verification truth) are always bit-exact regardless.
     pub fast_exp: bool,
+    /// Default kernel family for requests that don't carry their own
+    /// ([`EvalRequest::kernel`] = `None`). [`Kernel::Gaussian`] (the
+    /// default) leaves every existing path bit-for-bit untouched;
+    /// non-Gaussian families route through the certified
+    /// sum-of-Gaussians batch path (see [`Session::evaluate`]).
+    pub kernel: Kernel,
 }
 
 impl Default for PrepareOptions {
@@ -103,6 +111,7 @@ impl Default for PrepareOptions {
             truth_cache_capacity: DEFAULT_TRUTH_CACHE_CAPACITY,
             cost_model: CostModel::default(),
             fast_exp: true,
+            kernel: Kernel::Gaussian,
         }
     }
 }
@@ -128,12 +137,29 @@ pub struct EvalRequest<'a> {
     /// Override the paper's PLIMIT-per-dimension schedule (dual-tree
     /// series variants only).
     pub plimit: Option<usize>,
+    /// Kernel-family override: `None` (the default) inherits the
+    /// session's [`PrepareOptions::kernel`]. For non-Gaussian families
+    /// `h` is the family's scale parameter (σ / ℓ / c) and `epsilon`
+    /// bounds the *weight-scaled absolute* error max_q |G̃−G| ≤ ε·W
+    /// (see [`crate::errorcontrol::split_epsilon_kernel`]); `method`
+    /// applies to every Gaussian component, with [`Method::Auto`]
+    /// routing each component's hᵢ independently through the cost
+    /// model.
+    pub kernel: Option<Kernel>,
 }
 
 impl<'a> EvalRequest<'a> {
     /// A monochromatic (KDE) request with automatic method selection.
     pub fn kde(h: f64, epsilon: f64) -> Self {
-        EvalRequest { queries: None, weights: None, h, epsilon, method: Method::Auto, plimit: None }
+        EvalRequest {
+            queries: None,
+            weights: None,
+            h,
+            epsilon,
+            method: Method::Auto,
+            plimit: None,
+            kernel: None,
+        }
     }
 
     pub fn with_method(mut self, method: Method) -> Self {
@@ -155,6 +181,15 @@ impl<'a> EvalRequest<'a> {
         self.plimit = Some(plimit);
         self
     }
+
+    /// Pin this request to one kernel family, overriding the session
+    /// default (`with_kernel(Kernel::Gaussian)` forces the native path
+    /// on a non-Gaussian session — LSCV and the KDE normalizers do
+    /// exactly that, their closed forms being Gaussian-specific).
+    pub fn with_kernel(mut self, kernel: Kernel) -> Self {
+        self.kernel = Some(kernel);
+        self
+    }
 }
 
 /// An answered request: per-query sums in the original row order, the
@@ -162,12 +197,56 @@ impl<'a> EvalRequest<'a> {
 /// and — for the verified paths (Naive, FGT, IFGT) — the measured max
 /// relative error. Dual-tree answers carry `rel_err: None`: their ε
 /// bound holds by construction, so no exhaustive verification is run.
+/// Non-Gaussian answers also carry `rel_err: None` (their guarantee is
+/// the weight-scaled absolute form ε·W, certified by construction) plus
+/// a [`SogReport`] describing the decomposition and the per-component
+/// routing; `method` is then the resolved method of the
+/// largest-weight component.
 #[derive(Clone, Debug)]
 pub struct Evaluation {
     pub sums: Vec<f64>,
     pub stats: RunStats,
     pub method: Method,
     pub rel_err: Option<f64>,
+    /// The kernel family this answer is for (`Gaussian` on every
+    /// pre-existing path, including the components of a SoG answer).
+    pub kernel: Kernel,
+    /// Present exactly when `kernel` is non-Gaussian.
+    pub sog: Option<SogReport>,
+}
+
+/// How one Gaussian component of a sum-of-Gaussians evaluation was
+/// answered.
+#[derive(Clone, Debug)]
+pub struct SogComponentRoute {
+    /// Mixture weight wᵢ of this component.
+    pub weight: f64,
+    /// Gaussian bandwidth hᵢ of this component.
+    pub bandwidth: f64,
+    /// The resolved method this component ran (`Auto` never appears —
+    /// each hᵢ routes independently through the cost model).
+    pub method: Method,
+    /// Wall-clock seconds of this component's evaluation.
+    pub secs: f64,
+}
+
+/// The certificate trail of one non-Gaussian answer: how the ε budget
+/// was split (ε = decomp_err + Σᵢ wᵢ·component_eps·…, see
+/// [`crate::errorcontrol::split_epsilon_kernel`]) and which engine each
+/// Gaussian component routed to.
+#[derive(Clone, Debug)]
+pub struct SogReport {
+    /// Certified sup-norm error of the fitted decomposition, charged
+    /// up front (always ≤ ε/4).
+    pub decomp_err: f64,
+    /// Relative ε every Gaussian component request ran under.
+    pub component_eps: f64,
+    /// Total reference weight W scaling the guarantee
+    /// max_q |G̃(q) − G(q)| ≤ ε·W.
+    pub total_weight: f64,
+    /// Per-component routing, in fixed (ascending-u) decomposition
+    /// order.
+    pub components: Vec<SogComponentRoute>,
 }
 
 /// Insertion-order-bounded memo backing the session's truth and
@@ -258,6 +337,11 @@ pub const DEFAULT_TRUTH_CACHE_CAPACITY: usize = 64;
 /// Distinct (K, seed) IFGT clustering plans kept live.
 const IFGT_PLAN_CACHE_CAPACITY: usize = 16;
 
+/// Distinct fitted sum-of-Gaussians decompositions kept live, keyed by
+/// (kernel, scale, radius, fit target). A sweep touches one kernel at
+/// ~7 scales; fits are 10–100 ms, so a small memo suffices.
+const SOG_CACHE_CAPACITY: usize = 16;
+
 /// A dataset prepared for repeated Gaussian-summation evaluation — the
 /// crate's front door (see DESIGN.md for the lifecycle diagram).
 ///
@@ -283,13 +367,20 @@ pub struct Session<'d> {
     weights: Option<Vec<f64>>,
     leaf_size: usize,
     fast_exp: bool,
+    kernel: Kernel,
     cost_model: CostModel,
     data_scale: f64,
+    /// Per-dimension data bounding box — with a query box joined in,
+    /// its diagonal bounds every pair distance a request can produce,
+    /// which is the range SoG decompositions are certified on.
+    data_lo: Vec<f64>,
+    data_hi: Vec<f64>,
     prep_secs: f64,
     engine: SweepEngine,
     grid_frame: Mutex<Option<Arc<GridFrame>>>,
     ifgt_plans: Mutex<BoundedMemo<(usize, u64), Arc<IfgtPlan>>>,
-    truth: Mutex<BoundedMemo<u64, Arc<TruthCell>>>,
+    truth: Mutex<BoundedMemo<(Kernel, u64), Arc<TruthCell>>>,
+    sog_memo: Mutex<BoundedMemo<(Kernel, u64, u64, u64), Arc<SumOfGaussians>>>,
 }
 
 impl<'d> Session<'d> {
@@ -305,6 +396,7 @@ impl<'d> Session<'d> {
             truth_cache_capacity,
             cost_model,
             fast_exp,
+            kernel,
         } = opts;
         let (engine, prep_secs) = time_it(|| {
             // placeholder h/ε: prepare ignores them by construction
@@ -328,13 +420,17 @@ impl<'d> Session<'d> {
             weights,
             leaf_size,
             fast_exp,
+            kernel,
             cost_model,
             data_scale,
+            data_lo: data.col_min(),
+            data_hi: data.col_max(),
             prep_secs,
             engine,
             grid_frame: Mutex::new(None),
             ifgt_plans: Mutex::new(BoundedMemo::new(IFGT_PLAN_CACHE_CAPACITY)),
             truth: Mutex::new(BoundedMemo::new(truth_cache_capacity)),
+            sog_memo: Mutex::new(BoundedMemo::new(SOG_CACHE_CAPACITY)),
         }
     }
 
@@ -382,6 +478,26 @@ impl<'d> Session<'d> {
         self.data_scale
     }
 
+    /// The session's default kernel family ([`PrepareOptions::kernel`]).
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    /// Total reference weight W = Σ_j ω_j (= N for unit weights) — the
+    /// scale of the non-Gaussian guarantee max_q |G̃−G| ≤ ε·W.
+    pub fn total_weight(&self) -> f64 {
+        match &self.weights {
+            Some(w) => w.iter().sum(),
+            None => self.data.rows() as f64,
+        }
+    }
+
+    /// The kernel family `req` resolves to: its explicit override, or
+    /// the session default.
+    pub fn kernel_for(&self, req: &EvalRequest<'_>) -> Kernel {
+        req.kernel.unwrap_or(self.kernel)
+    }
+
     /// The embedded two-phase dual-tree engine (lower-level API; kept
     /// public for callers that want `evaluate_grid`-style access).
     pub fn engine(&self) -> &SweepEngine {
@@ -420,11 +536,22 @@ impl<'d> Session<'d> {
     /// h/ε, dimension mismatch, non-positive weights) — the same
     /// contract as [`GaussSumProblem::new`]; algorithmic failure modes
     /// (the paper's X/∞) come back as [`AlgoError`].
+    ///
+    /// A non-Gaussian request (see [`EvalRequest::kernel`]) is resolved
+    /// into its certified sum-of-Gaussians component batch and
+    /// dispatched through [`evaluate_batch`](Session::evaluate_batch)
+    /// — one tree, shared memos, each component's hᵢ routed through
+    /// the cost model when the method is `Auto`. Gaussian requests take
+    /// the pre-existing paths, bit for bit.
     pub fn evaluate(&self, req: &EvalRequest<'_>) -> Result<Evaluation, AlgoError> {
         assert!(req.h > 0.0 && req.h.is_finite(), "bandwidth must be positive");
         assert!(req.epsilon > 0.0, "epsilon must be positive");
         if let Some(q) = req.queries {
             assert_eq!(q.cols(), self.data.cols(), "query dimension mismatch");
+        }
+        let kernel = self.kernel_for(req);
+        if !kernel.is_gaussian() {
+            return self.eval_sog(kernel, req);
         }
         match self.resolve(req) {
             Method::Naive => self.eval_naive(req),
@@ -476,6 +603,27 @@ impl<'d> Session<'d> {
         })
     }
 
+    /// The memoized exhaustive truth of the *true* (non-decomposed)
+    /// kernel at one monochromatic scale — what SoG answers are
+    /// verified against under the weight-scaled absolute criterion.
+    /// Gaussian delegates to [`exact_sums`](Session::exact_sums)
+    /// (same memo slot, same bit-exact engine); the other families run
+    /// the direct O(N²) closed-form summation, under the same
+    /// blocking-dedupe cell machinery.
+    pub fn exact_kernel_sums(
+        &self,
+        kernel: Kernel,
+        scale: f64,
+        epsilon: f64,
+    ) -> Result<(Arc<Vec<f64>>, f64, bool), AlgoError> {
+        if kernel.is_gaussian() {
+            return self.exact_sums(scale, epsilon);
+        }
+        self.truth_slot(kernel, scale, || {
+            time_it(|| kernel.direct_sums(scale, self.data, self.data, self.weights.as_deref()))
+        })
+    }
+
     /// [`exact_sums`](Session::exact_sums) with an explicit compute
     /// closure — the seam the panic-injection regression tests use.
     pub(crate) fn exact_sums_with(
@@ -483,13 +631,25 @@ impl<'d> Session<'d> {
         h: f64,
         compute: impl FnOnce() -> (Vec<f64>, f64),
     ) -> Result<(Arc<Vec<f64>>, f64, bool), AlgoError> {
+        self.truth_slot(Kernel::Gaussian, h, compute)
+    }
+
+    /// The (kernel, scale)-keyed truth cell behind
+    /// [`exact_sums`](Session::exact_sums) and
+    /// [`exact_kernel_sums`](Session::exact_kernel_sums).
+    fn truth_slot(
+        &self,
+        kernel: Kernel,
+        h: f64,
+        compute: impl FnOnce() -> (Vec<f64>, f64),
+    ) -> Result<(Arc<Vec<f64>>, f64, bool), AlgoError> {
         let cell = {
             let mut truth = self.truth.lock().unwrap();
-            match truth.get(&h.to_bits()) {
+            match truth.get(&(kernel, h.to_bits())) {
                 Some(c) => c,
                 None => {
                     let c = Arc::new(TruthCell::default());
-                    truth.insert(h.to_bits(), Arc::clone(&c));
+                    truth.insert((kernel, h.to_bits()), Arc::clone(&c));
                     c
                 }
             }
@@ -498,7 +658,7 @@ impl<'d> Session<'d> {
         match &*slot {
             TruthSlot::Ready(sums, secs) => Ok((Arc::clone(sums), *secs, true)),
             TruthSlot::Failed(msg) => Err(AlgoError::Internal(format!(
-                "exhaustive truth for h={h:.6e} previously failed: {msg}"
+                "exhaustive {kernel} truth for h={h:.6e} previously failed: {msg}"
             ))),
             TruthSlot::Pending => {
                 // catch_unwind: the guard stays valid across a panic of
@@ -515,7 +675,7 @@ impl<'d> Session<'d> {
                         let msg = panic_message(payload.as_ref());
                         *slot = TruthSlot::Failed(msg.clone());
                         Err(AlgoError::Internal(format!(
-                            "exhaustive truth for h={h:.6e} panicked: {msg}"
+                            "exhaustive {kernel} truth for h={h:.6e} panicked: {msg}"
                         )))
                     }
                 }
@@ -547,7 +707,14 @@ impl<'d> Session<'d> {
         };
         let mut res = res?;
         res.stats.total_secs = secs;
-        Ok(Evaluation { sums: res.sums, stats: res.stats, method, rel_err: None })
+        Ok(Evaluation {
+            sums: res.sums,
+            stats: res.stats,
+            method,
+            rel_err: None,
+            kernel: Kernel::Gaussian,
+            sog: None,
+        })
     }
 
     fn eval_naive(&self, req: &EvalRequest<'_>) -> Result<Evaluation, AlgoError> {
@@ -568,6 +735,8 @@ impl<'d> Session<'d> {
                 stats,
                 method: Method::Naive,
                 rel_err: Some(0.0),
+                kernel: Kernel::Gaussian,
+                sog: None,
             });
         }
         let problem = self.problem(req);
@@ -579,6 +748,8 @@ impl<'d> Session<'d> {
             stats: res.stats,
             method: Method::Naive,
             rel_err: Some(0.0),
+            kernel: Kernel::Gaussian,
+            sog: None,
         })
     }
 
@@ -602,6 +773,8 @@ impl<'d> Session<'d> {
             stats: res.stats,
             method: Method::Fgt,
             rel_err: Some(outcome.rel_err),
+            kernel: Kernel::Gaussian,
+            sog: None,
         })
     }
 
@@ -629,6 +802,91 @@ impl<'d> Session<'d> {
             stats: res.stats,
             method: Method::Ifgt,
             rel_err: Some(rel_err),
+            kernel: Kernel::Gaussian,
+            sog: None,
+        })
+    }
+
+    /// Answer a non-Gaussian request through its certified
+    /// sum-of-Gaussians decomposition: fit (memoized) at target ε/4,
+    /// charge the certified sup error out of the budget
+    /// ([`split_epsilon_kernel`]), fan one Gaussian request per
+    /// component into the pooled batch evaluator, and combine in fixed
+    /// component order — bit-identical across pool widths for the
+    /// deterministic engines, like every other batch.
+    fn eval_sog(&self, kernel: Kernel, req: &EvalRequest<'_>) -> Result<Evaluation, AlgoError> {
+        let (fit_result, fit_secs) = time_it(|| self.sog_decomposition(kernel, req));
+        let (sog, cached) = fit_result?;
+        let split = split_epsilon_kernel(req.epsilon, sog.sup_error, sog.weight_sum())
+            .ok_or_else(|| {
+                // unreachable for fits at target ε/4 ≤ gate; kept as a
+                // clean failure rather than a debug assertion
+                AlgoError::ToleranceUnreachable(format!(
+                    "{kernel} decomposition error {:.3e} exceeds ε/4 = {:.3e}",
+                    sog.sup_error,
+                    0.25 * req.epsilon
+                ))
+            })?;
+        let component_reqs: Vec<EvalRequest<'_>> = sog
+            .terms
+            .iter()
+            .map(|t| EvalRequest {
+                queries: req.queries,
+                weights: req.weights,
+                h: t.bandwidth,
+                epsilon: split.component_eps,
+                method: req.method,
+                plimit: req.plimit,
+                // explicit: components never re-enter the SoG path
+                kernel: Some(Kernel::Gaussian),
+            })
+            .collect();
+        let (results, batch_secs) = time_it(|| self.evaluate_batch(&component_reqs));
+        let n_out = req.queries.map_or(self.data.rows(), |q| q.rows());
+        let mut sums = vec![0.0; n_out];
+        let mut stats = RunStats::default();
+        let mut components = Vec::with_capacity(sog.terms.len());
+        for (term, result) in sog.terms.iter().zip(results) {
+            let ev = result?;
+            for (acc, s) in sums.iter_mut().zip(&ev.sums) {
+                *acc += term.weight * s;
+            }
+            stats.merge(&ev.stats);
+            if let Some(idx) = ev.method.paper_index() {
+                stats.sog_routed[idx] += 1;
+            }
+            components.push(SogComponentRoute {
+                weight: term.weight,
+                bandwidth: term.bandwidth,
+                method: ev.method,
+                secs: ev.stats.total_secs,
+            });
+        }
+        stats.sog_components = components.len() as u64;
+        stats.session_cache_hits += cached as u64;
+        stats.session_cache_misses += !cached as u64;
+        stats.total_secs = fit_secs + batch_secs;
+        let method = components
+            .iter()
+            .max_by(|a, b| a.weight.partial_cmp(&b.weight).expect("weights are finite"))
+            .map(|c| c.method)
+            .expect("a fitted decomposition has at least one term");
+        let total_weight = match req.weights {
+            Some(w) => w.iter().sum(),
+            None => self.total_weight(),
+        };
+        Ok(Evaluation {
+            sums,
+            stats,
+            method,
+            rel_err: None,
+            kernel,
+            sog: Some(SogReport {
+                decomp_err: split.decomp_err,
+                component_eps: split.component_eps,
+                total_weight,
+                components,
+            }),
         })
     }
 
@@ -693,6 +951,52 @@ impl<'d> Session<'d> {
                 f
             }
         }
+    }
+
+    /// The memoized sum-of-Gaussians decomposition for `kernel` at the
+    /// request's scale, certified over every distance this request can
+    /// produce ([`pair_radius`](Session::pair_radius)). The fit target
+    /// is ε/4 — exactly [`split_epsilon_kernel`]'s admission gate, so a
+    /// successful fit always clears the budget split. Returns
+    /// `(decomposition, was_cached)`; fitted outside the memo lock —
+    /// racing fits of the same key are identical, like the moment memo.
+    fn sog_decomposition(
+        &self,
+        kernel: Kernel,
+        req: &EvalRequest<'_>,
+    ) -> Result<(Arc<SumOfGaussians>, bool), AlgoError> {
+        let radius = self.pair_radius(req.queries);
+        let target = 0.25 * req.epsilon;
+        let key = (kernel, req.h.to_bits(), radius.to_bits(), target.to_bits());
+        if let Some(s) = self.sog_memo.lock().unwrap().get(&key) {
+            return Ok((s, true));
+        }
+        let sog = SumOfGaussians::fit(kernel, req.h, radius, target).map_err(|e| {
+            AlgoError::ToleranceUnreachable(format!(
+                "{kernel} at scale {:.3e}: {e} — the ε·W guarantee needs a certified \
+                 decomposition within ε/4 = {target:.3e}",
+                req.h
+            ))
+        })?;
+        let sog = Arc::new(sog);
+        self.sog_memo.lock().unwrap().insert(key, Arc::clone(&sog));
+        Ok((sog, false))
+    }
+
+    /// Upper bound on the largest query–reference distance of one
+    /// request: the diagonal of the joint bounding box (the data box
+    /// alone in the monochromatic setting).
+    fn pair_radius(&self, queries: Option<&Matrix>) -> f64 {
+        let (qlo, qhi) = match queries {
+            Some(q) => (q.col_min(), q.col_max()),
+            None => (self.data_lo.clone(), self.data_hi.clone()),
+        };
+        let mut sq = 0.0;
+        for d in 0..self.data_lo.len() {
+            let w = self.data_hi[d].max(qhi[d]) - self.data_lo[d].min(qlo[d]);
+            sq += w * w;
+        }
+        sq.sqrt()
     }
 
     /// The lazily-built, session-cached IFGT clustering plan for one

@@ -22,10 +22,11 @@ use std::sync::Mutex;
 use crate::algo::dualtree::{DualTreeConfig, SweepEngine};
 use crate::algo::fgt::GridFrame;
 use crate::algo::naive::Naive;
-use crate::algo::{max_relative_error, GaussSum, GaussSumProblem};
+use crate::algo::{max_relative_error, max_weight_scaled_error, GaussSum, GaussSumProblem};
 use crate::api::{tuning, EvalRequest, Method, PrepareOptions, Session};
 use crate::data;
 use crate::kde::bandwidth::silverman;
+use crate::kernel::Kernel;
 use crate::util::timer::time_it;
 
 /// Knobs for one bench run.
@@ -281,17 +282,50 @@ pub fn run_bench_pr5(cfg: &BenchConfig) -> String {
             num(max_rel),
         ));
     }
+
+    // ---- one SoG cell: Matérn-3/2 on astro2d through the kernel
+    // layer (decomposition fit + ε split + pooled component batch),
+    // verified against the exhaustive true-kernel sum under the
+    // weight-scaled guarantee max_q|G̃−G| ≤ ε·W ----
+    let sog_obj = {
+        let ds = data::by_name("astro2d", cfg.n, 42).expect("paper dataset");
+        let h = silverman(&ds.points);
+        let session = Session::prepare(
+            &ds.points,
+            PrepareOptions { threads: workers, kernel: Kernel::Matern32, ..Default::default() },
+        );
+        let (exact, _, _) = session
+            .exact_kernel_sums(Kernel::Matern32, h, eps)
+            .expect("matern32 truth cannot fail");
+        let req = EvalRequest::kde(h, eps).with_method(Method::Auto);
+        let ev = session.evaluate(&req).expect("sog cell cannot fail");
+        let secs = median_secs(|| drop(session.evaluate(&req)), cfg.reps);
+        let err = max_weight_scaled_error(&ev.sums, &exact, session.total_weight());
+        assert!(err <= eps * (1.0 + 1e-9), "astro2d matern32: scaled err {err:.2e} > ε");
+        let report = ev.sog.as_ref().expect("non-Gaussian answers carry a SoG report");
+        format!(
+            "{{\"kernel\": \"matern32\", \"dataset\": \"astro2d\", \"components\": {}, \
+             \"decomp_err\": {}, \"scaled_err\": {}, \"secs\": {}, \"status\": \"ok\"}}",
+            report.components.len(),
+            num(report.decomp_err),
+            num(err),
+            num(secs),
+        )
+    };
+
     format!(
         "{{\n\"bench\": \"BENCH_PR5\",\n\"description\": \"fractured thread model (per-request \
          scoped threads, 1 inner thread each) vs shared work-stealing pool (requests + nested \
          traversal tasks on one scheduler) on batch workloads\",\n\"measured\": true,\n\
          \"epsilon\": {},\n\"n\": {},\n\"reps\": {},\n\"smoke\": {},\n\"workers\": {},\n\
-         \"generated_by\": \"cargo run --release --bin bench_json\",\n\"datasets\": {{\n{}\n}}\n}}\n",
+         \"generated_by\": \"cargo run --release --bin bench_json\",\n\"sog\": {},\n\
+         \"datasets\": {{\n{}\n}}\n}}\n",
         num(eps),
         cfg.n,
         cfg.reps,
         cfg.smoke,
         workers,
+        sog_obj,
         dataset_objs.join(",\n"),
     )
 }
@@ -322,6 +356,16 @@ mod tests {
             assert!(d.get("old_model_secs").unwrap().as_f64().unwrap() >= 0.0);
             assert!(d.get("pool_secs").unwrap().as_f64().unwrap() >= 0.0);
         }
+        // the SoG cell: Matérn-3/2 on astro2d through the kernel layer
+        let sog = doc.get("sog").expect("PR5 JSON must carry the sog cell");
+        assert_eq!(sog.get("kernel").unwrap().as_str(), Some("matern32"));
+        assert_eq!(sog.get("dataset").unwrap().as_str(), Some("astro2d"));
+        assert_eq!(sog.get("status").unwrap().as_str(), Some("ok"));
+        assert!(sog.get("components").unwrap().as_f64().unwrap() >= 1.0);
+        let scaled = sog.get("scaled_err").unwrap().as_f64().unwrap();
+        assert!(scaled <= 1e-4, "sog cell scaled_err {scaled}");
+        let decomp = sog.get("decomp_err").unwrap().as_f64().unwrap();
+        assert!(decomp <= 0.25 * 1e-4, "decomp_err {decomp} must fit the ε/4 gate");
     }
 
     /// The emitter must produce parseable JSON with every advertised

@@ -17,12 +17,18 @@
 //! results of the deterministic engines (Naive, dual-tree, FGT) are
 //! bit-identical for every width (IFGT tunes against a wall-clock
 //! budget, so its cells are ε-verified but timing-dependent).
+//! `--kernel` (default `gaussian`) selects the kernel family for
+//! `table`, `kde` and `selftest`: non-Gaussian families are answered
+//! through the certified sum-of-Gaussians batch path under the
+//! weight-scaled absolute guarantee max_q |G̃−G| ≤ ε·W.
 
 use crate::util::error::Result;
 use crate::{anyhow, bail};
 
-use crate::api::{EvalRequest, Method, PrepareOptions, Session};
-use crate::algo::{max_relative_error, naive::Naive, GaussSum, GaussSumProblem};
+use crate::api::{EvalRequest, Kernel, Method, PrepareOptions, Session};
+use crate::algo::{
+    max_relative_error, max_weight_scaled_error, naive::Naive, GaussSum, GaussSumProblem,
+};
 use crate::config::RunConfig;
 use crate::coordinator::{run_sweep, AlgoSpec, SweepConfig};
 use crate::data;
@@ -33,6 +39,7 @@ const USAGE: &str = "usage: fastgauss <table|kde|datagen|selftest|runtime> [--op
 options: --dataset NAME --n N --seed S --epsilon E --algos a,b,c
          --workers W --leaf-size L --multipliers m1,m2 --h H
          --method naive|fgt|ifgt|dfd|dfdo|dfto|dito|auto
+         --kernel gaussian|laplace|matern32|matern52|imq (default gaussian)
          --fast-exp true|false (certified tiled base case; default true)
          --out FILE --config FILE";
 
@@ -75,6 +82,7 @@ fn session_for<'d>(cfg: &RunConfig, ds: &'d data::Dataset) -> Session<'d> {
             leaf_size: cfg.leaf_size,
             threads: cfg.workers,
             fast_exp: cfg.fast_exp,
+            kernel: cfg.kernel,
             ..Default::default()
         },
     )
@@ -88,6 +96,11 @@ fn pick_h_star(cfg: &RunConfig, session: &Session<'_>) -> Result<f64> {
         return Ok(cfg.bandwidth);
     }
     let pilot = silverman(session.data());
+    if !cfg.kernel.is_gaussian() {
+        // LSCV's closed form is Gaussian-specific; non-Gaussian runs
+        // use the Silverman pilot as the scale (override with --h)
+        return Ok(pilot);
+    }
     let grid = log_grid(pilot, 0.1, 10.0, 9);
     let (h, _) = select_bandwidth_session(session, &grid, cfg.epsilon, cfg.method)
         .map_err(|e| anyhow!("LSCV failed: {e}"))?;
@@ -115,6 +128,7 @@ fn cmd_table(cfg: &RunConfig) -> Result<()> {
         workers: cfg.workers,
         leaf_size: cfg.leaf_size,
         fast_exp: cfg.fast_exp,
+        kernel: cfg.kernel,
     };
     let res = run_sweep(&sweep);
     print!("{}", crate::coordinator::report::render_table(&res));
@@ -131,21 +145,45 @@ fn cmd_kde(cfg: &RunConfig) -> Result<()> {
     // density pass — a single tree build end to end
     let session = session_for(cfg, &ds);
     let h = pick_h_star(cfg, &session)?;
-    let resolved = session.resolve(&EvalRequest::kde(h, cfg.epsilon).with_method(cfg.method));
-    let dens = crate::kde::density_at_points_session(&session, h, cfg.epsilon, cfg.method)
-        .map_err(|e| anyhow!("{e}"))?;
-    println!(
-        "dataset={} n={} D={} h={h:.6} method={}({}) mean_density={:.6e}",
-        ds.name,
-        ds.len(),
-        ds.dim(),
-        cfg.method.name(),
-        resolved.name(),
-        crate::util::stats::mean(&dens)
-    );
+    let values = if cfg.kernel.is_gaussian() {
+        let resolved = session.resolve(&EvalRequest::kde(h, cfg.epsilon).with_method(cfg.method));
+        let dens = crate::kde::density_at_points_session(&session, h, cfg.epsilon, cfg.method)
+            .map_err(|e| anyhow!("{e}"))?;
+        println!(
+            "dataset={} n={} D={} h={h:.6} method={}({}) mean_density={:.6e}",
+            ds.name,
+            ds.len(),
+            ds.dim(),
+            cfg.method.name(),
+            resolved.name(),
+            crate::util::stats::mean(&dens)
+        );
+        dens
+    } else {
+        // non-Gaussian kernels report raw kernel sums (the KDE
+        // normalization constant is Gaussian-specific) plus the SoG
+        // certificate trail
+        let req = EvalRequest::kde(h, cfg.epsilon).with_method(cfg.method);
+        let ev = session.evaluate(&req).map_err(|e| anyhow!("{e}"))?;
+        let report = ev.sog.as_ref().expect("non-Gaussian answers carry a SoG report");
+        println!(
+            "dataset={} n={} D={} kernel={} scale={h:.6} method={}({}) components={} \
+             decomp_err={:.2e} mean_sum={:.6e}",
+            ds.name,
+            ds.len(),
+            ds.dim(),
+            cfg.kernel,
+            cfg.method.name(),
+            ev.method.name(),
+            report.components.len(),
+            report.decomp_err,
+            crate::util::stats::mean(&ev.sums)
+        );
+        ev.sums
+    };
     if let Some(out) = &cfg.out {
-        let mut rows = Vec::with_capacity(dens.len());
-        for (i, d) in dens.iter().enumerate() {
+        let mut rows = Vec::with_capacity(values.len());
+        for (i, d) in values.iter().enumerate() {
             let mut row = ds.points.row(i).to_vec();
             row.push(*d);
             rows.push(row);
@@ -169,27 +207,56 @@ fn cmd_selftest(cfg: &RunConfig) -> Result<()> {
     let session = session_for(cfg, &ds);
     let pilot = silverman(&ds.points);
     let mut ok = true;
-    for mult in [1e-2, 1.0, 1e2] {
-        let h = pilot * mult;
-        let (exact, _, _) =
-            session.exact_sums(h, cfg.epsilon).map_err(|e| anyhow!("truth at h={h}: {e}"))?;
-        let methods =
-            [Method::Dfd, Method::Dfdo, Method::Dfto, Method::Dito, Method::Auto];
-        for m in methods {
-            let req = EvalRequest::kde(h, cfg.epsilon).with_method(m);
-            let res = session.evaluate(&req).map_err(|err| anyhow!("{}: {err}", m.name()))?;
-            let rel = max_relative_error(&res.sums, &exact);
-            let pass = rel <= cfg.epsilon * (1.0 + 1e-9);
-            ok &= pass;
-            let label = if m == Method::Auto {
-                format!("Auto({})", res.method.name())
-            } else {
-                m.name().to_string()
-            };
-            println!(
-                "{label:<12} h={h:<12.5} rel_err={rel:.2e}  {}",
-                if pass { "OK" } else { "FAIL" }
-            );
+    if cfg.kernel.is_gaussian() {
+        for mult in [1e-2, 1.0, 1e2] {
+            let h = pilot * mult;
+            let (exact, _, _) =
+                session.exact_sums(h, cfg.epsilon).map_err(|e| anyhow!("truth at h={h}: {e}"))?;
+            let methods =
+                [Method::Dfd, Method::Dfdo, Method::Dfto, Method::Dito, Method::Auto];
+            for m in methods {
+                let req = EvalRequest::kde(h, cfg.epsilon).with_method(m);
+                let res =
+                    session.evaluate(&req).map_err(|err| anyhow!("{}: {err}", m.name()))?;
+                let rel = max_relative_error(&res.sums, &exact);
+                let pass = rel <= cfg.epsilon * (1.0 + 1e-9);
+                ok &= pass;
+                let label = if m == Method::Auto {
+                    format!("Auto({})", res.method.name())
+                } else {
+                    m.name().to_string()
+                };
+                println!(
+                    "{label:<12} h={h:<12.5} rel_err={rel:.2e}  {}",
+                    if pass { "OK" } else { "FAIL" }
+                );
+            }
+        }
+    } else {
+        // SoG guarantee is absolute scaled by the total weight W:
+        // max_q |G̃(q) − G(q)| ≤ ε·W.  Tree methods only — Naive
+        // per-component would be O(terms·N²).
+        let w = session.total_weight();
+        for mult in [1e-2, 1.0, 1e2] {
+            let h = pilot * mult;
+            let (exact, _, _) = session
+                .exact_kernel_sums(cfg.kernel, h, cfg.epsilon)
+                .map_err(|e| anyhow!("{} truth at h={h}: {e}", cfg.kernel))?;
+            for m in [Method::Dfdo, Method::Dito, Method::Auto] {
+                let req = EvalRequest::kde(h, cfg.epsilon).with_method(m);
+                let res =
+                    session.evaluate(&req).map_err(|err| anyhow!("{}: {err}", m.name()))?;
+                let err = max_weight_scaled_error(&res.sums, &exact, w);
+                let pass = err <= cfg.epsilon * (1.0 + 1e-9);
+                ok &= pass;
+                let comps = res.sog.as_ref().map_or(0, |r| r.components.len());
+                println!(
+                    "{:<12} kernel={} h={h:<12.5} components={comps} scaled_err={err:.2e}  {}",
+                    m.name(),
+                    cfg.kernel,
+                    if pass { "OK" } else { "FAIL" }
+                );
+            }
         }
     }
     if !ok {
@@ -255,6 +322,27 @@ mod tests {
                 .map(|s| s.to_string())
                 .collect();
         run(&args).unwrap();
+    }
+
+    #[test]
+    fn selftest_with_laplace_kernel() {
+        // --kernel laplace routes through the SoG layer end to end:
+        // decomposition fit, ε split, pooled component batch, and the
+        // weight-scaled guarantee check against the exact Laplace sums
+        let args: Vec<String> =
+            ["selftest", "--n", "200", "--dataset", "astro2d", "--kernel", "laplace"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        run(&args).unwrap();
+    }
+
+    #[test]
+    fn kernel_flag_rejects_unknown_name() {
+        let args: Vec<String> =
+            ["selftest", "--kernel", "cauchy"].iter().map(|s| s.to_string()).collect();
+        let err = run(&args).unwrap_err().to_string();
+        assert!(err.contains("matern32") && err.contains("imq"), "{err}");
     }
 
     #[test]

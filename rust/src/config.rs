@@ -5,6 +5,7 @@
 use std::path::Path;
 
 use crate::api::Method;
+use crate::kernel::Kernel;
 use crate::util::error::{Context, Result};
 use crate::{anyhow, bail};
 
@@ -21,6 +22,7 @@ pub const VALID_KEYS: &[&str] = &[
     "multipliers",
     "bandwidth|h",
     "method",
+    "kernel",
     "fast-exp|fast_exp",
     "out",
     "config",
@@ -28,6 +30,9 @@ pub const VALID_KEYS: &[&str] = &[
 
 /// The method names `--method` / `--algos` accept.
 const VALID_METHODS: &str = "naive, fgt, ifgt, dfd, dfdo, dfto, dito, auto";
+
+/// The kernel names `--kernel` accepts (see [`Kernel::VALID_NAMES`]).
+const VALID_KERNELS: &str = Kernel::VALID_NAMES;
 
 /// Everything the CLI subcommands need.
 #[derive(Clone, Debug, PartialEq)]
@@ -49,6 +54,10 @@ pub struct RunConfig {
     /// Summation method for the kde command (default: automatic
     /// selection by the session cost model).
     pub method: Method,
+    /// Kernel family every command's session answers (default:
+    /// gaussian, the paper protocol; non-Gaussian families run under
+    /// the certified sum-of-Gaussians ε·W guarantee).
+    pub kernel: Kernel,
     /// Certified fast-exp tiled base cases (default on; `false` forces
     /// the bit-exact reference path everywhere).
     pub fast_exp: bool,
@@ -77,6 +86,7 @@ impl Default for RunConfig {
             multipliers: vec![1e-3, 1e-2, 1e-1, 1.0, 1e1, 1e2, 1e3],
             bandwidth: 0.0,
             method: Method::Auto,
+            kernel: Kernel::Gaussian,
             fast_exp: true,
             out: None,
         }
@@ -105,6 +115,10 @@ impl RunConfig {
             "method" => {
                 self.method = Method::parse(value)
                     .ok_or_else(|| anyhow!("unknown method {value:?} (valid: {VALID_METHODS})"))?
+            }
+            "kernel" => {
+                self.kernel = Kernel::parse(value)
+                    .ok_or_else(|| anyhow!("unknown kernel {value:?} (valid: {VALID_KERNELS})"))?
             }
             "multipliers" => {
                 self.multipliers = value
@@ -266,6 +280,25 @@ mod tests {
         assert_eq!(c.method, Method::Auto);
         let msg = c.set("method", "bogus").unwrap_err().to_string();
         assert!(msg.contains("dito") && msg.contains("auto"), "{msg}");
+    }
+
+    #[test]
+    fn kernel_key_parses_and_rejects_with_listing() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.kernel, Kernel::Gaussian, "gaussian must be the default");
+        c.set("kernel", "laplace").unwrap();
+        assert_eq!(c.kernel, Kernel::Laplace);
+        c.set("kernel", "MATERN32").unwrap();
+        assert_eq!(c.kernel, Kernel::Matern32);
+        c.set("kernel", "imq").unwrap();
+        assert_eq!(c.kernel, Kernel::InvMultiquadric);
+        // an unknown value is rejected at parse time (never a silent
+        // Gaussian default), with every valid name in the message
+        let msg = c.set("kernel", "bogus").unwrap_err().to_string();
+        for k in Kernel::ALL {
+            assert!(msg.contains(k.name()), "error must list {}: {msg}", k.name());
+        }
+        assert_eq!(c.kernel, Kernel::InvMultiquadric, "failed set must not change the value");
     }
 
     #[test]

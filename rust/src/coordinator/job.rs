@@ -3,6 +3,7 @@
 
 use crate::algo::RunStats;
 use crate::data::Dataset;
+use crate::kernel::Kernel;
 
 /// Which algorithm a sweep row runs — since the session front door
 /// unified method naming, this is simply [`crate::api::Method`] (rows
@@ -36,6 +37,12 @@ pub struct SweepConfig {
     /// (`true` = the default production path; `false` = the bit-exact
     /// reference configuration, what `--fast-exp false` requests).
     pub fast_exp: bool,
+    /// Kernel the sweep evaluates. Non-Gaussian kernels route every
+    /// cell through the session's sum-of-Gaussians layer, truth comes
+    /// from the exhaustive true-kernel sum, and cells are verified
+    /// against the weight-scaled absolute guarantee
+    /// max_q|G̃−G| ≤ ε·W instead of the Gaussian relative one.
+    pub kernel: Kernel,
 }
 
 /// One table cell's outcome, mirroring the paper's entries.
@@ -68,6 +75,10 @@ pub struct SweepResult {
     pub n: usize,
     pub h_star: f64,
     pub epsilon: f64,
+    /// Kernel the table was swept under (non-Gaussian rows went
+    /// through the SoG layer; their `rel_err` is the weight-scaled
+    /// absolute error).
+    pub kernel: Kernel,
     pub multipliers: Vec<f64>,
     pub algorithms: Vec<AlgoSpec>,
     /// The Naive row (exhaustive truth timings, one per bandwidth).
@@ -127,6 +138,7 @@ mod tests {
             n: 10,
             h_star: 0.1,
             epsilon: 0.01,
+            kernel: Kernel::Gaussian,
             multipliers: vec![1.0, 10.0],
             algorithms: vec![AlgoSpec::Dito, AlgoSpec::Fgt],
             naive_secs: vec![1.0, 1.0],

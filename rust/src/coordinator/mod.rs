@@ -37,7 +37,7 @@ pub mod job;
 pub mod report;
 
 use crate::api::{EvalRequest, PrepareOptions, Session};
-use crate::algo::{max_relative_error, AlgoError};
+use crate::algo::{max_relative_error, max_weight_scaled_error, AlgoError};
 use crate::util::timer::time_it;
 
 pub use job::{AlgoSpec, CellOutcome, CellResult, SweepConfig, SweepResult};
@@ -59,6 +59,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepResult {
                 leaf_size: cfg.leaf_size,
                 threads: cfg.workers,
                 fast_exp: cfg.fast_exp,
+                kernel: cfg.kernel,
                 // never evict a truth this sweep will revisit: each of
                 // the 7 algorithm rows verifies against every bandwidth
                 truth_cache_capacity: bandwidths.len().max(defaults.truth_cache_capacity),
@@ -102,12 +103,13 @@ pub(crate) fn run_sweep_on(
 
     // The Naive row's timings, read back from the session's truth memo
     // (every scheduled cell verified against it, so these are all warm;
-    // a sweep with no cells at all computes them here).
+    // a sweep with no cells at all computes them here). For a
+    // non-Gaussian sweep this is the exhaustive *true-kernel* sum.
     let naive_secs: Vec<f64> = bandwidths
         .iter()
         .map(|&h| {
             session
-                .exact_sums(h, cfg.epsilon)
+                .exact_kernel_sums(cfg.kernel, h, cfg.epsilon)
                 .unwrap_or_else(|e| panic!("naive row truth for h={h:.6e}: {e}"))
                 .1
         })
@@ -119,6 +121,7 @@ pub(crate) fn run_sweep_on(
         n: cfg.dataset.len(),
         h_star: cfg.h_star,
         epsilon: cfg.epsilon,
+        kernel: cfg.kernel,
         multipliers: cfg.multipliers.clone(),
         algorithms: cfg.algorithms.clone(),
         naive_secs,
@@ -155,8 +158,9 @@ fn run_cell(
     // before running the algorithm. A truth failure is infrastructure,
     // not an algorithmic X/∞ — surface the underlying panic instead of
     // mislabeling the cell (the pool re-raises it to run_sweep's
-    // caller).
-    let exact = match session.exact_sums(h, cfg.epsilon) {
+    // caller). Non-Gaussian sweeps verify against the exhaustive
+    // *true-kernel* sum, not a Gaussian proxy.
+    let exact = match session.exact_kernel_sums(cfg.kernel, h, cfg.epsilon) {
         Ok((exact, _, _)) => exact,
         Err(e) => panic!(
             "sweep cell {}×h[{bandwidth_index}]: exhaustive truth unavailable: {e}",
@@ -167,12 +171,19 @@ fn run_cell(
     let req = EvalRequest::kde(h, cfg.epsilon).with_method(spec);
     match session.evaluate(&req) {
         Ok(ev) => {
-            let rel = match ev.rel_err {
-                Some(r) => r, // Naive/FGT/IFGT come back pre-verified
-                None => max_relative_error(&ev.sums, &exact),
+            // Gaussian cells carry the paper's relative guarantee; SoG
+            // cells carry the weight-scaled absolute one
+            // (max_q|G̃−G| ≤ ε·W) — same ε threshold, different norm.
+            let err = if cfg.kernel.is_gaussian() {
+                match ev.rel_err {
+                    Some(r) => r, // Naive/FGT/IFGT come back pre-verified
+                    None => max_relative_error(&ev.sums, &exact),
+                }
+            } else {
+                max_weight_scaled_error(&ev.sums, &exact, session.total_weight())
             };
-            cell.rel_err = Some(rel);
-            cell.outcome = if rel <= cfg.epsilon * (1.0 + 1e-9) {
+            cell.rel_err = Some(err);
+            cell.outcome = if err <= cfg.epsilon * (1.0 + 1e-9) {
                 CellOutcome::Time(ev.stats.total_secs)
             } else {
                 CellOutcome::ToleranceUnreachable
@@ -199,6 +210,7 @@ mod tests {
     use super::*;
     use crate::data;
     use crate::kde::bandwidth::silverman;
+    use crate::kernel::Kernel;
 
     fn small_cfg() -> SweepConfig {
         let ds = data::by_name("astro2d", 300, 11).unwrap();
@@ -212,6 +224,7 @@ mod tests {
             workers: 2,
             leaf_size: 16,
             fast_exp: true,
+            kernel: Kernel::Gaussian,
         }
     }
 
@@ -279,6 +292,7 @@ mod tests {
             workers: 2,
             leaf_size: 16,
             fast_exp: true,
+            kernel: Kernel::Gaussian,
         };
         let res = run_sweep(&cfg);
         assert_eq!(res.cells.len(), 2);
@@ -361,8 +375,48 @@ mod tests {
             workers: 1,
             leaf_size: 16,
             fast_exp: true,
+            kernel: Kernel::Gaussian,
         };
         let res = run_sweep(&cfg);
         assert!(matches!(res.cells[0].outcome, CellOutcome::RamExhausted));
+    }
+
+    /// A non-Gaussian sweep: every cell routes through the SoG layer,
+    /// verifies against the exhaustive true-kernel sum under the
+    /// weight-scaled guarantee, and reports per-component routing.
+    #[test]
+    fn laplace_sweep_verifies_weight_scaled() {
+        let ds = data::by_name("astro2d", 200, 17).unwrap();
+        let h = silverman(&ds.points);
+        let cfg = SweepConfig {
+            dataset: ds,
+            epsilon: 0.01,
+            h_star: h,
+            multipliers: vec![1.0],
+            algorithms: vec![AlgoSpec::Dfdo, AlgoSpec::Auto],
+            workers: 2,
+            leaf_size: 16,
+            fast_exp: true,
+            kernel: Kernel::Laplace,
+        };
+        let res = run_sweep(&cfg);
+        assert_eq!(res.kernel, Kernel::Laplace);
+        assert_eq!(res.cells.len(), 2);
+        for c in &res.cells {
+            assert!(
+                matches!(c.outcome, CellOutcome::Time(_)),
+                "laplace cell failed: {:?}",
+                c.outcome
+            );
+            assert!(c.rel_err.unwrap() <= 0.01 * (1.0 + 1e-9));
+            let stats = c.stats.as_ref().expect("sog cell must carry stats");
+            assert!(stats.sog_components > 0, "cell must report SoG fan-out");
+            assert_eq!(
+                stats.sog_routed.iter().sum::<u64>(),
+                stats.sog_components,
+                "every component must be routed to a concrete method"
+            );
+        }
+        assert!(res.naive_secs.iter().all(|&s| s > 0.0));
     }
 }

@@ -10,9 +10,16 @@ use super::job::{CellOutcome, SweepResult};
 /// Render the sweep as the paper's table.
 pub fn render_table(res: &SweepResult) -> String {
     let mut out = String::new();
+    // the paper's tables are all Gaussian; flag SoG sweeps (and their
+    // weight-scaled error norm) explicitly rather than silently
+    let kernel_tag = if res.kernel.is_gaussian() {
+        String::new()
+    } else {
+        format!(", kernel = {} (SoG, err ≤ eps·W)", res.kernel)
+    };
     out.push_str(&format!(
-        "{}, D = {}, N = {}, h* = {:.6}, eps = {}\n",
-        res.dataset, res.dim, res.n, res.h_star, res.epsilon
+        "{}, D = {}, N = {}, h* = {:.6}, eps = {}{}\n",
+        res.dataset, res.dim, res.n, res.h_star, res.epsilon, kernel_tag
     ));
     // header
     out.push_str(&format!("{:<8}", "Alg\\h*"));
@@ -92,6 +99,7 @@ fn fmt_mult(m: f64) -> String {
 mod tests {
     use super::*;
     use crate::coordinator::job::{AlgoSpec, CellResult, SweepResult};
+    use crate::kernel::Kernel;
 
     fn sample() -> SweepResult {
         SweepResult {
@@ -100,6 +108,7 @@ mod tests {
             n: 100,
             h_star: 0.0139,
             epsilon: 0.01,
+            kernel: Kernel::Gaussian,
             multipliers: vec![0.001, 1.0, 1000.0],
             algorithms: vec![AlgoSpec::Naive, AlgoSpec::Fgt, AlgoSpec::Dito],
             naive_secs: vec![4.0, 4.0, 4.0],
@@ -139,6 +148,17 @@ mod tests {
         assert_eq!(c.lines().count(), 1 + 9);
         assert!(c.contains("FGT,0.001"));
         assert!(c.contains(",ram,"));
+    }
+
+    #[test]
+    fn non_gaussian_table_flags_kernel_and_norm() {
+        let mut res = sample();
+        res.kernel = Kernel::Matern32;
+        let t = render_table(&res);
+        assert!(t.contains("kernel = matern32"), "{t}");
+        assert!(t.contains("eps·W"), "{t}");
+        // Gaussian header stays byte-identical to the paper's
+        assert!(!render_table(&sample()).contains("kernel"), "gaussian must stay untagged");
     }
 
     #[test]

@@ -200,6 +200,50 @@ pub fn split_epsilon(
     EpsSplit { tree_eps: eps, base_rel_err: 0.0, fast: false }
 }
 
+// ---- ε-budget split for sum-of-Gaussians kernels ----
+
+/// How one non-Gaussian evaluate's ε budget is divided between the
+/// certified decomposition error and the per-component Gaussian
+/// requests (see [`split_epsilon_kernel`]).
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct KernelEpsSplit {
+    /// Certified sup-norm error of the sum-of-Gaussians decomposition
+    /// ([`crate::kernel::SumOfGaussians::sup_error`]), charged up front.
+    pub decomp_err: f64,
+    /// The relative ε handed to every Gaussian component request.
+    pub component_eps: f64,
+}
+
+/// Charge a SoG decomposition's certified sup-norm error out of the
+/// caller's ε *before* the per-component fast-exp/tree split, so the
+/// final answer carries one end-to-end certificate. Mirrors
+/// [`split_epsilon`]'s gate exactly: the decomposition is admitted only
+/// when it costs at most a quarter of the budget (`None` otherwise —
+/// the session re-fits with more terms, and since its fit target is
+/// ε/4 an in-budget decomposition always exists or the evaluate fails
+/// cleanly with `ToleranceUnreachable`).
+///
+/// Soundness — the SoG guarantee is *absolute, scaled by the total
+/// reference weight* W = Σ_j ω_j. With S(r) = Σᵢ wᵢ·Gauss_{hᵢ}(r),
+/// sup_{[0,R]} |K − S| ≤ η, and component i answered within
+/// |G̃ᵢ(q) − Gᵢ(q)| ≤ ε_c·Gᵢ(q) where Gᵢ(q) = Σ_j ω_j·Gauss_{hᵢ} ≤ W:
+///
+/// ```text
+///   |G̃(q) − G_K(q)| ≤ η·W + Σᵢ wᵢ·ε_c·Gᵢ(q)
+///                   ≤ (η + ε_c·Σᵢwᵢ)·W = ε·W
+/// ```
+///
+/// with ε_c = (ε − η)/Σᵢwᵢ, i.e. ε_total = ε_decomp + Σᵢ wᵢ·ε_gaussᵢ.
+/// Fitted decompositions have Σᵢwᵢ = 1, so components keep at least
+/// 3ε/4 of the budget.
+pub fn split_epsilon_kernel(eps: f64, decomp_err: f64, weight_sum: f64) -> Option<KernelEpsSplit> {
+    debug_assert!(eps > 0.0 && decomp_err >= 0.0 && weight_sum > 0.0);
+    if decomp_err > 0.25 * eps {
+        return None;
+    }
+    Some(KernelEpsSplit { decomp_err, component_eps: (eps - decomp_err) / weight_sum })
+}
+
 /// Per-query-node mutable state for one dual-tree run.
 ///
 /// Bounds are *hierarchical*: the true running bound for a query point q
@@ -382,6 +426,25 @@ mod tests {
         assert!(base_case_rel_err(3, 0.01, 3.0) > base_case_rel_err(3, 0.1, 3.0));
         assert!(base_case_rel_err(3, 0.1, 300.0) > base_case_rel_err(3, 0.1, 3.0));
         assert!(base_case_rel_err(3, 0.1, 3.0) >= crate::compute::fastexp::EXP_MAX_REL_ERR);
+    }
+
+    #[test]
+    fn split_epsilon_kernel_charges_and_gates() {
+        // in-budget decomposition: components get the remainder
+        let s = split_epsilon_kernel(1e-2, 2e-3, 1.0).unwrap();
+        assert_eq!(s.decomp_err, 2e-3);
+        assert_eq!(s.component_eps, 1e-2 - 2e-3);
+        // ε_total = ε_decomp + Σwᵢ·ε_gauss exactly
+        assert!((s.decomp_err + 1.0 * s.component_eps - 1e-2).abs() < 1e-18);
+        // weight sums ≠ 1 rescale the component budget
+        let w = split_epsilon_kernel(1e-2, 2e-3, 2.0).unwrap();
+        assert_eq!(w.component_eps, (1e-2 - 2e-3) / 2.0);
+        // same admission gate as the fast-exp split: > ε/4 is rejected
+        assert!(split_epsilon_kernel(1e-2, 2.6e-3, 1.0).is_none());
+        assert!(split_epsilon_kernel(1e-2, 2.5e-3, 1.0).is_some());
+        // components always keep at least 3ε/4 when Σw = 1
+        let edge = split_epsilon_kernel(1e-4, 0.25e-4, 1.0).unwrap();
+        assert!(edge.component_eps >= 0.75e-4);
     }
 
     #[test]

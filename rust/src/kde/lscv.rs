@@ -26,7 +26,7 @@ use crate::api::{EvalRequest, Method, Session};
 use crate::algo::dualtree::DualTreeConfig;
 use crate::algo::{AlgoError, GaussSum, GaussSumProblem, SweepEngine};
 use crate::geometry::Matrix;
-use crate::kernel::GaussianKernel;
+use crate::kernel::{GaussianKernel, Kernel};
 
 /// The closed-form LSCV score from the two self-summations
 /// S_h (`s1`) and S_{√2·h} (`s2`).
@@ -140,10 +140,19 @@ pub fn lscv_score_session(
     let n = session.num_points() as f64;
     let d = session.dim();
     let h2 = std::f64::consts::SQRT_2 * h;
-    let s2: f64 =
-        session.evaluate(&EvalRequest::kde(h2, epsilon).with_method(method))?.sums.iter().sum();
-    let s1: f64 =
-        session.evaluate(&EvalRequest::kde(h, epsilon).with_method(method))?.sums.iter().sum();
+    // the √2·h convolution identity behind the score is
+    // Gaussian-specific, so these requests pin the Gaussian kernel
+    // regardless of the session default
+    let s2: f64 = session
+        .evaluate(&EvalRequest::kde(h2, epsilon).with_method(method).with_kernel(Kernel::Gaussian))?
+        .sums
+        .iter()
+        .sum();
+    let s1: f64 = session
+        .evaluate(&EvalRequest::kde(h, epsilon).with_method(method).with_kernel(Kernel::Gaussian))?
+        .sums
+        .iter()
+        .sum();
     Ok(score_from_sums(n, d, h, s1, s2))
 }
 
@@ -165,10 +174,13 @@ pub fn select_bandwidth_session(
     let n = session.num_points() as f64;
     let d = session.dim();
     let grid2: Vec<f64> = grid.iter().map(|&h| std::f64::consts::SQRT_2 * h).collect();
+    // Gaussian pinned: the LSCV score's closed form is (see
+    // lscv_score_session) — a non-Gaussian session default must not
+    // leak into it
     let requests: Vec<EvalRequest<'static>> = grid
         .iter()
         .chain(grid2.iter())
-        .map(|&h| EvalRequest::kde(h, epsilon).with_method(method))
+        .map(|&h| EvalRequest::kde(h, epsilon).with_method(method).with_kernel(Kernel::Gaussian))
         .collect();
     let mut sums = Vec::with_capacity(requests.len());
     for res in session.evaluate_batch(&requests) {

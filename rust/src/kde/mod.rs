@@ -8,7 +8,7 @@ pub mod lscv;
 use crate::api::{EvalRequest, Method, Session};
 use crate::algo::{AlgoError, GaussSum, GaussSumProblem};
 use crate::geometry::Matrix;
-use crate::kernel::GaussianKernel;
+use crate::kernel::{GaussianKernel, Kernel};
 
 /// f̂ normalization: (1/n)·(2πh²)^(−D/2).
 fn kde_norm(h: f64, dim: usize, n: usize) -> f64 {
@@ -27,7 +27,10 @@ pub fn density_at_points_session(
     epsilon: f64,
     method: Method,
 ) -> Result<Vec<f64>, AlgoError> {
-    let ev = session.evaluate(&EvalRequest::kde(h, epsilon).with_method(method))?;
+    // Gaussian pinned: the (2πh²)^(−D/2) normalizer is the Gaussian
+    // one, so these estimators stay correct on any session default
+    let req = EvalRequest::kde(h, epsilon).with_method(method).with_kernel(Kernel::Gaussian);
+    let ev = session.evaluate(&req)?;
     let norm = kde_norm(h, session.dim(), session.num_points());
     Ok(ev.sums.into_iter().map(|s| s * norm).collect())
 }
@@ -42,7 +45,10 @@ pub fn density_at_session(
     epsilon: f64,
     method: Method,
 ) -> Result<Vec<f64>, AlgoError> {
-    let req = EvalRequest::kde(h, epsilon).with_queries(queries).with_method(method);
+    let req = EvalRequest::kde(h, epsilon)
+        .with_queries(queries)
+        .with_method(method)
+        .with_kernel(Kernel::Gaussian);
     let ev = session.evaluate(&req)?;
     let norm = kde_norm(h, session.dim(), session.num_points());
     Ok(ev.sums.into_iter().map(|s| s * norm).collect())

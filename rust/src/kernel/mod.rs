@@ -1,4 +1,158 @@
-//! The Gaussian kernel K(δ) = exp(−δ²/(2h²)) and bandwidth plumbing.
+//! The kernel layer: the natively-evaluated Gaussian kernel
+//! K(δ) = exp(−δ²/(2h²)) with its bandwidth plumbing, the [`Kernel`]
+//! enum naming every radial family a [`crate::api::Session`] answers,
+//! and the certified sum-of-Gaussians decompositions ([`sog`]) that
+//! reduce the non-Gaussian families to Gaussian bandwidth batches.
+
+pub mod sog;
+
+pub use sog::{SogFitError, SogTerm, SumOfGaussians};
+
+use crate::geometry::Matrix;
+
+/// √3 and √5, for the Matérn closed forms (f64::sqrt is not const).
+const SQRT_3: f64 = 1.732_050_807_568_877_2;
+const SQRT_5: f64 = 2.236_067_977_499_79;
+
+/// The radial kernel family of one summation request.
+///
+/// [`Kernel::Gaussian`] (the default) is evaluated natively by every
+/// engine — that path is bit-for-bit unchanged by this enum's
+/// existence. The other families are *sum-of-Gaussians* (SoG) kernels:
+/// the session fits a certified decomposition
+/// K(r) ≈ Σᵢ wᵢ·exp(−r²/(2hᵢ²)) (see [`sog`]) and answers through the
+/// existing Gaussian machinery, one pooled component request per term,
+/// with the decomposition's sup-norm error charged out of the caller's
+/// ε budget ([`crate::errorcontrol::split_epsilon_kernel`]).
+///
+/// Every family is normalized to K(0) = 1 and parameterized by one
+/// positive scale (reusing the request's `h` slot): the Gaussian
+/// bandwidth h, the Laplace decay σ, the Matérn lengthscale ℓ, or the
+/// inverse-multiquadric offset c.
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Kernel {
+    /// exp(−r²/(2h²)) — the paper's kernel, evaluated natively.
+    #[default]
+    Gaussian,
+    /// Laplace / exponential kernel exp(−r/σ) (= Matérn ν = 1/2).
+    Laplace,
+    /// Matérn ν = 3/2: (1+z)·e^(−z) with z = √3·r/ℓ.
+    Matern32,
+    /// Matérn ν = 5/2: (1+z+z²/3)·e^(−z) with z = √5·r/ℓ.
+    Matern52,
+    /// Inverse multiquadric 1/√(1+(r/c)²).
+    InvMultiquadric,
+}
+
+impl Kernel {
+    /// Every supported family, Gaussian first.
+    pub const ALL: [Kernel; 5] = [
+        Kernel::Gaussian,
+        Kernel::Laplace,
+        Kernel::Matern32,
+        Kernel::Matern52,
+        Kernel::InvMultiquadric,
+    ];
+
+    /// The canonical config/CLI tokens, for parse-error listings.
+    pub const VALID_NAMES: &'static str = "gaussian, laplace, matern32, matern52, imq";
+
+    /// Canonical config/CLI token ("gaussian", "laplace", …).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Gaussian => "gaussian",
+            Kernel::Laplace => "laplace",
+            Kernel::Matern32 => "matern32",
+            Kernel::Matern52 => "matern52",
+            Kernel::InvMultiquadric => "imq",
+        }
+    }
+
+    /// Case-insensitive parse of [`name`](Kernel::name)-style tokens
+    /// (with the common aliases).
+    pub fn parse(s: &str) -> Option<Kernel> {
+        match s.to_ascii_lowercase().as_str() {
+            "gaussian" | "gauss" => Some(Kernel::Gaussian),
+            "laplace" | "exponential" => Some(Kernel::Laplace),
+            "matern32" => Some(Kernel::Matern32),
+            "matern52" => Some(Kernel::Matern52),
+            "imq" | "invmultiquadric" | "inverse-multiquadric" => Some(Kernel::InvMultiquadric),
+            _ => None,
+        }
+    }
+
+    /// Whether this is the natively-evaluated family (no decomposition).
+    pub fn is_gaussian(&self) -> bool {
+        matches!(self, Kernel::Gaussian)
+    }
+
+    /// K(r) at distance `r ≥ 0` with the family's scale parameter.
+    /// Every family is monotone nonincreasing in `r` with K(0) = 1 —
+    /// the property the SoG certification leans on.
+    pub fn eval(&self, scale: f64, r: f64) -> f64 {
+        debug_assert!(scale > 0.0 && r >= 0.0);
+        match self {
+            Kernel::Gaussian => {
+                let x = r / scale;
+                (-0.5 * x * x).exp()
+            }
+            Kernel::Laplace => (-r / scale).exp(),
+            Kernel::Matern32 => {
+                let z = SQRT_3 * r / scale;
+                (1.0 + z) * (-z).exp()
+            }
+            Kernel::Matern52 => {
+                let z = SQRT_5 * r / scale;
+                (1.0 + z + z * z / 3.0) * (-z).exp()
+            }
+            Kernel::InvMultiquadric => {
+                let x = r / scale;
+                1.0 / (1.0 + x * x).sqrt()
+            }
+        }
+    }
+
+    /// Direct O(N·M) summation of the *true* (non-decomposed) kernel —
+    /// the exhaustive reference every SoG answer's `ε·W` guarantee is
+    /// verified against. Accumulation order is fixed (ascending
+    /// reference index), so results are deterministic.
+    pub fn direct_sums(
+        &self,
+        scale: f64,
+        queries: &Matrix,
+        references: &Matrix,
+        weights: Option<&[f64]>,
+    ) -> Vec<f64> {
+        assert_eq!(queries.cols(), references.cols(), "dimension mismatch");
+        if let Some(w) = weights {
+            assert_eq!(w.len(), references.rows());
+        }
+        let dim = queries.cols();
+        let mut out = vec![0.0; queries.rows()];
+        for (i, slot) in out.iter_mut().enumerate() {
+            let q = queries.row(i);
+            let mut acc = 0.0;
+            for j in 0..references.rows() {
+                let r = references.row(j);
+                let mut sq = 0.0;
+                for d in 0..dim {
+                    let t = q[d] - r[d];
+                    sq += t * t;
+                }
+                let w = weights.map_or(1.0, |w| w[j]);
+                acc += w * self.eval(scale, sq.sqrt());
+            }
+            *slot = acc;
+        }
+        out
+    }
+}
+
+impl std::fmt::Display for Kernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// An isotropic Gaussian kernel with bandwidth `h`.
 #[derive(Copy, Clone, Debug, PartialEq)]

@@ -12,6 +12,13 @@
 //!   once, answer many [`api::EvalRequest`]s with any [`api::Method`]
 //!   (or `Auto`), ε-verified FGT/IFGT tuning included. Every caller
 //!   (KDE, LSCV, coordinator, CLI, examples, benches) goes through it.
+//!   Sessions are kernel-independent ([`kernel::Kernel`]): Laplace,
+//!   Matérn and inverse-multiquadric requests are answered through a
+//!   certified sum-of-Gaussians decomposition ([`kernel::sog`]) whose
+//!   sup-norm error is charged out of the ε budget
+//!   ([`errorcontrol::split_epsilon_kernel`]) before fanning one
+//!   Gaussian request per component into the pooled batch path; the
+//!   Gaussian default is bit-for-bit unchanged.
 //! * L3 (this crate): trees, expansions, translation operators, error
 //!   control, the seven algorithms, LSCV, sweep coordination, CLI.
 //!   Every fan-out — dual-tree traversal splits, session batches, the
@@ -69,6 +76,6 @@ pub mod config;
 pub mod prelude {
     pub use crate::api::{EvalRequest, Evaluation, Method, PrepareOptions, Session};
     pub use crate::geometry::Matrix;
-    pub use crate::kernel::GaussianKernel;
+    pub use crate::kernel::{GaussianKernel, Kernel};
     pub use crate::tree::KdTree;
 }

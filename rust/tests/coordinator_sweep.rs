@@ -5,6 +5,7 @@
 use fastgauss::coordinator::{report, run_sweep, AlgoSpec, CellOutcome, SweepConfig};
 use fastgauss::data;
 use fastgauss::kde::bandwidth::silverman;
+use fastgauss::kernel::Kernel;
 
 fn base_cfg(name: &str, n: usize, mult: Vec<f64>, algos: Vec<AlgoSpec>) -> SweepConfig {
     let ds = data::by_name(name, n, 3).unwrap();
@@ -18,6 +19,7 @@ fn base_cfg(name: &str, n: usize, mult: Vec<f64>, algos: Vec<AlgoSpec>) -> Sweep
         workers: 2,
         leaf_size: 24,
         fast_exp: true,
+        kernel: Kernel::Gaussian,
     }
 }
 

@@ -1,0 +1,134 @@
+//! Integration suite for the kernel layer: the Gaussian default stays
+//! bit-for-bit untouched, non-Gaussian answers are pool-width
+//! invariant, `Auto` routes individual SoG components through the cost
+//! model, and the weight-scaled guarantee holds in the bichromatic and
+//! weighted settings.
+
+use fastgauss::algo::max_weight_scaled_error;
+use fastgauss::api::{EvalRequest, Method, PrepareOptions, Session};
+use fastgauss::data;
+use fastgauss::geometry::Matrix;
+use fastgauss::kde::bandwidth::silverman;
+use fastgauss::kernel::Kernel;
+use fastgauss::util::Pcg32;
+
+/// `kernel = gaussian` must be indistinguishable from a session that
+/// never heard of the kernel layer: same sums bitwise, no SoG report,
+/// no SoG stats — whether the default is implicit, set per session, or
+/// pinned per request.
+#[test]
+fn gaussian_default_is_bit_identical() {
+    let ds = data::by_name("astro2d", 300, 41).unwrap();
+    let h = silverman(&ds.points);
+    let plain = Session::prepare(&ds.points, PrepareOptions::default());
+    let explicit = Session::prepare(
+        &ds.points,
+        PrepareOptions { kernel: Kernel::Gaussian, ..Default::default() },
+    );
+    for m in [Method::Naive, Method::Dfdo, Method::Dito, Method::Auto] {
+        let req = EvalRequest::kde(h, 1e-4).with_method(m);
+        let pinned = EvalRequest::kde(h, 1e-4).with_method(m).with_kernel(Kernel::Gaussian);
+        let a = plain.evaluate(&req).unwrap();
+        let b = explicit.evaluate(&req).unwrap();
+        let c = plain.evaluate(&pinned).unwrap();
+        assert_eq!(a.sums, b.sums, "{m}: explicit gaussian session diverged");
+        assert_eq!(a.sums, c.sums, "{m}: per-request gaussian pin diverged");
+        for ev in [&a, &b, &c] {
+            assert_eq!(ev.kernel, Kernel::Gaussian);
+            assert!(ev.sog.is_none(), "{m}: gaussian answer must not carry a SoG report");
+            assert_eq!(ev.stats.sog_components, 0, "{m}");
+            assert_eq!(ev.stats.sog_routed, [0u64; 7], "{m}");
+        }
+    }
+}
+
+/// Non-Gaussian answers ride the same fixed task decomposition and
+/// indexed reduction as everything else: bitwise identical across pool
+/// widths.
+#[test]
+fn sog_answers_are_pool_width_invariant() {
+    let ds = data::by_name("astro2d", 300, 43).unwrap();
+    let h = silverman(&ds.points);
+    let run = |threads: usize| {
+        let session = Session::prepare(
+            &ds.points,
+            PrepareOptions { kernel: Kernel::Laplace, threads, ..Default::default() },
+        );
+        session.evaluate(&EvalRequest::kde(h, 1e-2).with_method(Method::Dfdo)).unwrap()
+    };
+    let base = run(1);
+    assert!(base.stats.sog_components > 0);
+    for threads in [2, 4] {
+        let other = run(threads);
+        assert_eq!(base.sums, other.sums, "threads={threads}: SoG sums diverged bitwise");
+        assert_eq!(
+            base.stats.sog_components, other.stats.sog_components,
+            "threads={threads}"
+        );
+    }
+}
+
+/// The SoG component bandwidths span the near-field and far-field
+/// regimes of the cost model, so `Auto` must route the components of
+/// one request to at least two distinct concrete methods — per-request
+/// selection would collapse them to one.
+#[test]
+fn auto_routes_components_through_the_cost_model() {
+    let ds = data::by_name("astro2d", 400, 47).unwrap();
+    let h = silverman(&ds.points);
+    let session = Session::prepare(
+        &ds.points,
+        PrepareOptions { kernel: Kernel::Laplace, ..Default::default() },
+    );
+    let ev = session.evaluate(&EvalRequest::kde(h, 1e-2).with_method(Method::Auto)).unwrap();
+    let report = ev.sog.as_ref().expect("laplace answer must carry a SoG report");
+    let distinct: std::collections::BTreeSet<&str> =
+        report.components.iter().map(|c| c.method.name()).collect();
+    assert!(
+        distinct.len() >= 2,
+        "Auto routed every component identically ({distinct:?}) — per-component \
+         selection is not engaging"
+    );
+    assert_eq!(
+        ev.stats.sog_routed.iter().sum::<u64>(),
+        ev.stats.sog_components,
+        "every component must land in a paper-method bucket"
+    );
+    assert!(ev.stats.sog_routed.iter().filter(|&&c| c > 0).count() >= 2);
+}
+
+/// Bichromatic + weighted: the guarantee max_q|K̃(q)−K(q)| ≤ ε·W holds
+/// against the exhaustive true-kernel reference with W = Σ request
+/// weights.
+#[test]
+fn bichromatic_weighted_sog_matches_direct_sums() {
+    let ds = data::by_name("galaxy3d", 250, 53).unwrap();
+    let mut rng = Pcg32::new(54);
+    let weights: Vec<f64> = (0..250).map(|_| rng.uniform_in(0.2, 3.0)).collect();
+    let queries = Matrix::from_rows(
+        &(0..60)
+            .map(|_| vec![rng.uniform(), rng.uniform(), rng.uniform()])
+            .collect::<Vec<_>>(),
+    );
+    let scale = silverman(&ds.points);
+    let w: f64 = weights.iter().sum();
+    let session = Session::prepare(
+        &ds.points,
+        PrepareOptions { kernel: Kernel::Matern52, ..Default::default() },
+    );
+    for eps in [1e-2, 1e-4] {
+        let exact =
+            Kernel::Matern52.direct_sums(scale, &queries, &ds.points, Some(&weights));
+        let req = EvalRequest::kde(scale, eps)
+            .with_queries(&queries)
+            .with_weights(&weights)
+            .with_method(Method::Dfdo);
+        let ev = session.evaluate(&req).unwrap();
+        assert_eq!(ev.sums.len(), 60);
+        let err = max_weight_scaled_error(&ev.sums, &exact, w);
+        assert!(err <= eps * (1.0 + 1e-9), "eps={eps}: scaled err {err:.2e}");
+        let report = ev.sog.as_ref().unwrap();
+        assert!((report.total_weight - w).abs() <= 1e-9 * w);
+        assert!(report.decomp_err <= 0.25 * eps);
+    }
+}

@@ -21,6 +21,7 @@ use fastgauss::coordinator::{run_sweep, AlgoSpec, SweepConfig};
 use fastgauss::data;
 use fastgauss::kde::bandwidth::silverman;
 use fastgauss::kde::lscv::select_bandwidth_session;
+use fastgauss::kernel::Kernel;
 
 const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
 
@@ -90,6 +91,7 @@ fn sweep_tables_bit_identical_across_workers_1_2_8() {
             workers,
             leaf_size: 16,
             fast_exp: true,
+            kernel: Kernel::Gaussian,
         })
     };
     let base = run(1);

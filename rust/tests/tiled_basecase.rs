@@ -142,6 +142,47 @@ fn tiled_matches_scalar_across_odd_shapes_mono_and_bichromatic() {
     }
 }
 
+/// Regression for the norms-trick clamp: with duplicated
+/// high-magnitude points, ‖q‖² + ‖r‖² − 2·q·r cancels catastrophically
+/// and can land a hair *negative* in floating point — unclamped, that
+/// negative squared distance becomes a positive exponent and a kernel
+/// value > 1. The clamp pins the self-pair distance to exactly 0, so
+/// every duplicated point contributes exactly weight·K(0) = weight.
+#[test]
+fn duplicated_high_magnitude_points_clamp_to_exact_self_interaction() {
+    for d in [2usize, 3] {
+        // one far-from-origin location, duplicated n times: worst-case
+        // cancellation (‖x‖² huge, distance 0)
+        let n = 37;
+        let coords: Vec<f64> = (0..d).map(|k| 1e6 + k as f64).collect();
+        let pts = Matrix::from_rows(&vec![coords.clone(); n]);
+        let mut rng = Pcg32::new(777 + d as u64);
+        let w: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.1, 2.0)).collect();
+        let total: f64 = w.iter().sum();
+        for h in [1e-3, 0.2] {
+            let kernel = GaussianKernel::new(h);
+            let mut got = vec![0.0; n];
+            let mut scratch = Scratch::new(d);
+            compute::gauss_sum_all_fast(&pts, &pts, &w, &kernel, 64, &mut scratch, &mut got);
+            for (i, &g) in got.iter().enumerate() {
+                assert!(
+                    (g - total).abs() <= 1e-12 * total,
+                    "d={d} h={h} i={i}: sum {g:.17e} != Σw {total:.17e} — negative \
+                     squared distance leaked through the clamp"
+                );
+            }
+            // the scalar reference (direct Σ(q−r)², no norms trick)
+            // agrees within the tiled pipeline's certified budget
+            let mut want = vec![0.0; n];
+            reference::scalar_gauss_sums(&pts, &pts, &w, &kernel, &mut want);
+            for i in 0..n {
+                let rel = (got[i] - want[i]).abs() / want[i];
+                assert!(rel <= 1e-12, "d={d} h={h} i={i}: {rel:.2e}");
+            }
+        }
+    }
+}
+
 // ---- 3. end-to-end ε-correctness with fast-exp on ----
 
 const EPSILONS: [f64; 3] = [1e-2, 1e-4, 1e-6];
