@@ -14,6 +14,7 @@
 //! non-Gaussian ones route every cell through the sum-of-Gaussians
 //! layer and verify against the weight-scaled guarantee.
 
+use fastgauss::api::{Precision, SimdMode};
 use fastgauss::coordinator::{report, run_sweep, AlgoSpec, SweepConfig};
 use fastgauss::data;
 use fastgauss::kde::bandwidth::silverman;
@@ -50,6 +51,8 @@ fn main() -> fastgauss::util::error::Result<()> {
         workers: 1,
         leaf_size: 32,
         fast_exp: true,
+        simd: SimdMode::Auto,
+        precision: Precision::F64,
         kernel,
     };
     let res = run_sweep(&cfg);

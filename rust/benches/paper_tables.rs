@@ -13,6 +13,7 @@
 //!
 //! Run: `cargo bench --bench paper_tables`
 
+use fastgauss::api::{Precision, SimdMode};
 use fastgauss::coordinator::{report, run_sweep, AlgoSpec, SweepConfig};
 use fastgauss::data;
 use fastgauss::kde::bandwidth::silverman;
@@ -50,6 +51,8 @@ fn main() {
             workers: 1,
             leaf_size: 32,
             fast_exp: true,
+            simd: SimdMode::Auto,
+            precision: Precision::F64,
             kernel: Kernel::Gaussian,
         };
         let res = run_sweep(&cfg);

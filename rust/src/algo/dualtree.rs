@@ -90,8 +90,9 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::bounds::{odp::OdpBounds, opd::OpdBounds, NeverBounds, NodeGeometry, TruncationBounds};
-use crate::compute::{tile, Scratch};
-use crate::errorcontrol::{split_epsilon, PruneDecision, QueryLedger};
+use crate::compute::simd::{Lanes, Precision, SimdMode};
+use crate::compute::{simd, tile, Scratch};
+use crate::errorcontrol::{split_epsilon_prec, PruneDecision, QueryLedger};
 pub use crate::errorcontrol::{PruneRule, Theorem2, TokenLedger};
 use crate::geometry::Matrix;
 use crate::hermite::{
@@ -201,6 +202,18 @@ pub struct DualTreeConfig {
     /// path automatically, and `false` forces the bit-exact path
     /// everywhere (the reference configuration).
     pub fast_exp: bool,
+    /// Vector-lane dispatch for the drained base cases: `Auto` installs
+    /// the per-process detected backend (AVX2/NEON/scalar), `Off` pins
+    /// the scalar table, which is bit-exact vs. the pre-SIMD code.
+    pub simd: SimdMode,
+    /// Arithmetic precision of the fast tile. `F32` stores the
+    /// reference lanes/weights/norms in f32 (f64 accumulation) and is
+    /// admitted per evaluate only when its *derived* certificate
+    /// ([`crate::errorcontrol::base_case_rel_err_f32`]) fits the ε/4
+    /// gate of [`crate::errorcontrol::split_epsilon_prec`]; otherwise
+    /// the evaluate silently demotes to the certified f64 fast path
+    /// (then to bit-exact), so the guarantee never weakens.
+    pub precision: Precision,
 }
 
 impl Default for DualTreeConfig {
@@ -211,6 +224,8 @@ impl Default for DualTreeConfig {
             series: Some(SeriesKind::OdpGraded),
             plimit: None,
             fast_exp: true,
+            simd: SimdMode::Auto,
+            precision: Precision::F64,
         }
     }
 }
@@ -267,6 +282,12 @@ struct Ctx<'a> {
     total_w: f64,
     /// Drain base cases through the certified fast tiled kernel.
     fast: bool,
+    /// Drain base cases through the f32 mixed-precision tile (implies
+    /// `fast`; admitted by `split_epsilon_prec`'s gate).
+    f32_tile: bool,
+    /// SIMD dispatch table the drained base cases run on (resolved
+    /// once per evaluate from the config's [`SimdMode`]).
+    lanes: &'static Lanes,
     /// Present iff the variant's `Expansion::ENABLED`.
     series: Option<SeriesPack<'a>>,
 }
@@ -603,7 +624,14 @@ impl SweepEngine {
         cfg: &DualTreeConfig,
     ) -> Result<GaussSumResult, AlgoError> {
         dispatch_variant!(cfg, X, P => {
-            self.evaluate_variant_cfg::<X, P>(h, epsilon, cfg.plimit, cfg.fast_exp)
+            self.evaluate_variant_cfg::<X, P>(
+                h,
+                epsilon,
+                cfg.plimit,
+                cfg.fast_exp,
+                cfg.simd,
+                cfg.precision,
+            )
         })
     }
 
@@ -620,7 +648,7 @@ impl SweepEngine {
         epsilon: f64,
         plimit: Option<usize>,
     ) -> Result<GaussSumResult, AlgoError> {
-        self.evaluate_variant_cfg::<X, P>(h, epsilon, plimit, true)
+        self.evaluate_variant_cfg::<X, P>(h, epsilon, plimit, true, SimdMode::Auto, Precision::F64)
     }
 
     /// Evaluate one bandwidth against an *explicit* query matrix: a
@@ -641,7 +669,15 @@ impl SweepEngine {
         let qw = vec![1.0; queries.rows()];
         let (qtree, qsecs) = time_it(|| KdTree::build(queries, &qw, BuildParams { leaf_size }));
         let mut res = dispatch_variant!(cfg, X, P => {
-            self.evaluate_variant_inner::<X, P>(&qtree, h, epsilon, cfg.plimit, cfg.fast_exp)
+            self.evaluate_variant_inner::<X, P>(
+                &qtree,
+                h,
+                epsilon,
+                cfg.plimit,
+                cfg.fast_exp,
+                cfg.simd,
+                cfg.precision,
+            )
         })?;
         res.stats.build_secs += qsecs;
         res.stats.tree_builds += 1;
@@ -655,9 +691,19 @@ impl SweepEngine {
         epsilon: f64,
         plimit_override: Option<usize>,
         fast_exp: bool,
+        simd: SimdMode,
+        precision: Precision,
     ) -> Result<GaussSumResult, AlgoError> {
         let qt: &KdTree = self.qtree.as_ref().unwrap_or(&self.rtree);
-        self.evaluate_variant_inner::<X, P>(qt, h, epsilon, plimit_override, fast_exp)
+        self.evaluate_variant_inner::<X, P>(
+            qt,
+            h,
+            epsilon,
+            plimit_override,
+            fast_exp,
+            simd,
+            precision,
+        )
     }
 
     /// The traversal core, parameterized over the query tree so both
@@ -680,17 +726,21 @@ impl SweepEngine {
         epsilon: f64,
         plimit_override: Option<usize>,
         fast_exp: bool,
+        simd: SimdMode,
+        precision: Precision,
     ) -> Result<GaussSumResult, AlgoError> {
         assert!(h > 0.0 && h.is_finite(), "bandwidth must be positive");
         assert!(epsilon > 0.0, "epsilon must be positive");
         let kernel = GaussianKernel::new(h);
         let dim = self.dim;
         // ε-budget split: reserve the certified fast-base-case error
-        // out of the tree budget, or fall back to the bit-exact path
-        // when the bound is not affordable at this bandwidth
-        let split = split_epsilon(
+        // (at the requested precision) out of the tree budget, or fall
+        // back — f32 → f64 fast → bit-exact — when a bound is not
+        // affordable at this bandwidth
+        let split = split_epsilon_prec(
             epsilon,
             fast_exp,
+            precision,
             dim,
             h,
             self.rtree.max_sq_norm().max(qt.max_sq_norm()),
@@ -716,6 +766,8 @@ impl SweepEngine {
             eps: split.tree_eps,
             total_w,
             fast: split.fast,
+            f32_tile: split.f32_tile,
+            lanes: simd::select(simd),
             series: series_pack(&moments, plimit),
         };
 
@@ -763,6 +815,9 @@ impl SweepEngine {
         stats.build_secs = moment_secs;
         stats.moment_cache_hits = cache_hit as u64;
         stats.moment_cache_misses = (X::KIND.is_some() && !cache_hit) as u64;
+        if split.fast {
+            stats.simd_backend = ctx.lanes.backend.name();
+        }
         let sums = qt.unpermute(&tree_sums);
         Ok(GaussSumResult { sums, stats })
     }
@@ -1051,7 +1106,10 @@ fn order_by_dist(qn: &crate::tree::Node, rt: &KdTree, a: usize, b: usize) -> (us
 /// task's [`Scratch`] exactly once per drain and reused by every
 /// query leaf that hit it. With `ctx.fast` the Q×R tile runs the
 /// GEMM-shaped kernel (cached norms outer sum − 2·dot, fused certified
-/// `exp_block` — see [`crate::compute::tile`]); otherwise each query
+/// `exp_block` — see [`crate::compute::tile`]) on the evaluate's
+/// resolved SIMD lane table; with `ctx.f32_tile` it runs the
+/// mixed-precision f32 variant instead, whose larger certified bound
+/// `split_epsilon_prec` already reserved; otherwise each query
 /// runs the bit-exact fused distance → libm-exp → accumulate sweep,
 /// whose per-pair arithmetic matches the pre-queue scalar loop exactly.
 /// Sums land in `point_est` only — bounds and tokens were already
@@ -1069,15 +1127,33 @@ fn drain_base_cases(ctx: &Ctx<'_>, st: &mut State) {
     for &(q, r) in queue.iter() {
         let rn = rt.node(r as usize);
         if r != cur_r {
-            scratch.load(rt.points(), rn.begin, rn.end);
-            scratch.load_weights(rt.weights(), rn.begin, rn.end);
-            if ctx.fast {
-                scratch.load_ref_norms(rt.sq_norms(), rn.begin, rn.end);
+            if ctx.f32_tile {
+                scratch.load_f32(rt.points(), rn.begin, rn.end);
+                scratch.load_weights_f32(rt.weights(), rn.begin, rn.end);
+                scratch.load_ref_norms_f32(rt.sq_norms_f32(), rn.begin, rn.end);
+            } else {
+                scratch.load(rt.points(), rn.begin, rn.end);
+                scratch.load_weights(rt.weights(), rn.begin, rn.end);
+                if ctx.fast {
+                    scratch.load_ref_norms(rt.sq_norms(), rn.begin, rn.end);
+                }
             }
             cur_r = r;
         }
         let qn = qt.node(q as usize);
-        if ctx.fast {
+        if ctx.f32_tile {
+            tile::gauss_sums_fast_f32_on_loaded(
+                scratch,
+                &ctx.kernel,
+                qt.points(),
+                qt.sq_norms(),
+                qn.begin,
+                qn.end,
+                &mut ledger.point_est[qn.begin..qn.end],
+                ctx.lanes,
+            );
+            stats.f32_base_cases += 1;
+        } else if ctx.fast {
             tile::gauss_sums_fast_on_loaded(
                 scratch,
                 &ctx.kernel,
@@ -1086,6 +1162,7 @@ fn drain_base_cases(ctx: &Ctx<'_>, st: &mut State) {
                 qn.begin,
                 qn.end,
                 &mut ledger.point_est[qn.begin..qn.end],
+                ctx.lanes,
             );
             stats.fast_base_cases += 1;
         } else {

@@ -15,7 +15,8 @@
 use std::collections::HashMap;
 
 use crate::bounds::{opd::OpdBounds, NodeGeometry};
-use crate::compute::{microkernel, tile};
+use crate::compute::simd::SimdMode;
+use crate::compute::{microkernel, simd, tile};
 use crate::geometry::Matrix;
 use crate::hermite::{accumulate_farfield, eval_farfield, HermiteTable};
 use crate::kernel::GaussianKernel;
@@ -42,6 +43,10 @@ pub struct Fgt {
     /// and the certified ~1e-13 per-pair error is far inside the W·τ
     /// absolute budget. `false` restores the bit-exact direct path.
     pub fast_exp: bool,
+    /// Vector-lane dispatch for the fast direct path (`Auto` = detected
+    /// backend, `Off` = scalar table, bit-exact vs. pre-SIMD). The
+    /// exact path (`fast_exp = false`) never consults the dispatcher.
+    pub simd: SimdMode,
 }
 
 impl Default for Fgt {
@@ -53,6 +58,7 @@ impl Default for Fgt {
             // 2 GB of f64 — the paper machine's main memory
             mem_cap_slots: (2usize << 30) / 8,
             fast_exp: true,
+            simd: SimdMode::Auto,
         }
     }
 }
@@ -247,6 +253,10 @@ impl Fgt {
         let mut box_lanes: HashMap<usize, (Vec<f64>, Vec<f64>, Vec<f64>)> = HashMap::new();
         let mut sqbuf = vec![0.0; direct_cheaper.max(1)];
         let mut qbox = vec![0usize; d];
+        let lanes = simd::select(self.simd);
+        if self.fast_exp {
+            stats.simd_backend = lanes.backend.name();
+        }
         for (qi, sum) in sums.iter_mut().enumerate() {
             let qrow = queries.row(qi);
             let qnorm: f64 = if self.fast_exp {
@@ -296,13 +306,15 @@ impl Fgt {
                             (soa, wblk, rnorm)
                         });
                         if fast {
-                            microkernel::dot_soa(qrow, soa, m, m, &mut sqbuf);
-                            tile::gauss_from_norms_into(&kernel, qnorm, rnorm, &mut sqbuf, m);
+                            (lanes.dot_soa)(qrow, soa, m, m, &mut sqbuf);
+                            let vals = &mut sqbuf;
+                            tile::gauss_from_norms_into_with(lanes, &kernel, qnorm, rnorm, vals, m);
+                            *sum += (lanes.weighted_sum)(wblk, &sqbuf[..m]);
                         } else {
                             microkernel::sqdist_soa(qrow, soa, m, m, &mut sqbuf);
                             microkernel::gauss_in_place(&kernel, &mut sqbuf[..m]);
+                            *sum += microkernel::weighted_sum(wblk, &sqbuf[..m]);
                         }
-                        *sum += microkernel::weighted_sum(wblk, &sqbuf[..m]);
                         stats.base_point_pairs += m as u64;
                     } else {
                         *sum += eval_farfield(

@@ -161,6 +161,14 @@ pub struct RunStats {
     /// path (fast-exp off, or the ε-split refused the certified bound
     /// at this bandwidth).
     pub exact_base_cases: u64,
+    /// Leaf-pair base cases drained through the mixed-precision f32
+    /// tile (admitted by `errorcontrol::split_epsilon_prec`; 0 whenever
+    /// an f32 request demoted itself to the f64 or bit-exact path).
+    pub f32_base_cases: u64,
+    /// SIMD dispatch table the run's fast tiles executed on ("avx2",
+    /// "neon" or "scalar"; empty for paths that never consult the
+    /// dispatcher, e.g. a pure bit-exact run).
+    pub simd_backend: &'static str,
     /// Tree construction + moment precomputation seconds.
     pub build_secs: f64,
     /// kd-tree constructions performed by this run: 1–2 for a one-shot
@@ -209,6 +217,10 @@ impl RunStats {
         self.tokens_spent += other.tokens_spent;
         self.fast_base_cases += other.fast_base_cases;
         self.exact_base_cases += other.exact_base_cases;
+        self.f32_base_cases += other.f32_base_cases;
+        if self.simd_backend.is_empty() {
+            self.simd_backend = other.simd_backend;
+        }
         self.build_secs += other.build_secs;
         self.tree_builds += other.tree_builds;
         self.moment_cache_hits += other.moment_cache_hits;

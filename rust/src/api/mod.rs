@@ -36,6 +36,7 @@ pub mod method;
 pub mod session;
 pub mod tuning;
 
+pub use crate::compute::simd::{Precision, SimdMode};
 pub use crate::kernel::Kernel;
 pub use method::{CostModel, Method, ProblemProfile};
 pub use session::{

@@ -45,6 +45,7 @@ use crate::algo::fgt::GridFrame;
 use crate::algo::ifgt::IfgtPlan;
 use crate::algo::naive::Naive;
 use crate::algo::{AlgoError, GaussSum, GaussSumProblem, RunStats};
+use crate::compute::simd::{Precision, SimdMode};
 use crate::errorcontrol::split_epsilon_kernel;
 use crate::geometry::Matrix;
 use crate::kernel::{Kernel, SumOfGaussians};
@@ -93,6 +94,22 @@ pub struct PrepareOptions {
     /// key / `--fast-exp false` CLI flag). Naive answers (the
     /// verification truth) are always bit-exact regardless.
     pub fast_exp: bool,
+    /// Vector-lane dispatch for the fast base-case tiles: `Auto` (the
+    /// default) installs the backend detected once per process
+    /// (AVX2+FMA on x86_64, NEON on aarch64, scalar otherwise); `Off`
+    /// pins the scalar table, whose results are bit-identical to the
+    /// pre-SIMD code. Also reachable as the `simd` config key /
+    /// `--simd` CLI flag, and the `FASTGAUSS_SIMD=off` environment
+    /// variable pins the whole process.
+    pub simd: SimdMode,
+    /// Arithmetic precision of the fast tile. [`Precision::F32`] stores
+    /// reference lanes, weights and norms in f32 (f64 accumulation) and
+    /// engages per request only when its derived certificate
+    /// (`errorcontrol::base_case_rel_err_f32`) fits the ε/4 admission
+    /// gate — otherwise the request silently demotes to the certified
+    /// f64 fast path, so every answer stays ε-guaranteed. Also
+    /// reachable as the `precision` config key / `--precision` flag.
+    pub precision: Precision,
     /// Default kernel family for requests that don't carry their own
     /// ([`EvalRequest::kernel`] = `None`). [`Kernel::Gaussian`] (the
     /// default) leaves every existing path bit-for-bit untouched;
@@ -111,6 +128,8 @@ impl Default for PrepareOptions {
             truth_cache_capacity: DEFAULT_TRUTH_CACHE_CAPACITY,
             cost_model: CostModel::default(),
             fast_exp: true,
+            simd: SimdMode::Auto,
+            precision: Precision::F64,
             kernel: Kernel::Gaussian,
         }
     }
@@ -367,6 +386,8 @@ pub struct Session<'d> {
     weights: Option<Vec<f64>>,
     leaf_size: usize,
     fast_exp: bool,
+    simd: SimdMode,
+    precision: Precision,
     kernel: Kernel,
     cost_model: CostModel,
     data_scale: f64,
@@ -396,6 +417,8 @@ impl<'d> Session<'d> {
             truth_cache_capacity,
             cost_model,
             fast_exp,
+            simd,
+            precision,
             kernel,
         } = opts;
         let (engine, prep_secs) = time_it(|| {
@@ -420,6 +443,8 @@ impl<'d> Session<'d> {
             weights,
             leaf_size,
             fast_exp,
+            simd,
+            precision,
             kernel,
             cost_model,
             data_scale,
@@ -694,6 +719,8 @@ impl<'d> Session<'d> {
             .dual_tree_config(self.leaf_size, req.plimit)
             .expect("eval_dualtree called with a dual-tree method");
         cfg.fast_exp = self.fast_exp;
+        cfg.simd = self.simd;
+        cfg.precision = self.precision;
         let (res, secs) = if req.weights.is_some() {
             // per-request weight override: the prepared tree bakes the
             // session weights into its node statistics, so this request

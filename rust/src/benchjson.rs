@@ -23,7 +23,7 @@ use crate::algo::dualtree::{DualTreeConfig, SweepEngine};
 use crate::algo::fgt::GridFrame;
 use crate::algo::naive::Naive;
 use crate::algo::{max_relative_error, max_weight_scaled_error, GaussSum, GaussSumProblem};
-use crate::api::{tuning, EvalRequest, Method, PrepareOptions, Session};
+use crate::api::{tuning, EvalRequest, Method, Precision, PrepareOptions, Session, SimdMode};
 use crate::data;
 use crate::kde::bandwidth::silverman;
 use crate::kernel::Kernel;
@@ -330,6 +330,94 @@ pub fn run_bench_pr5(cfg: &BenchConfig) -> String {
     )
 }
 
+/// PR 7 protocol: the three base-case configurations — forced-scalar
+/// lanes (`SimdMode::Off`), the auto-detected vector lanes, and the
+/// vector lanes plus the mixed-precision f32 tile — for DFDO + DITO
+/// on astro2d + galaxy3d at ε ∈ {1e-2, 1e-4} and fixed h = 0.2. At
+/// that bandwidth the derived f32 certificate
+/// (`errorcontrol::base_case_rel_err_f32`, ≈1e-4 on the unit-cube
+/// datasets) fits the ε/4 admission gate at 1e-2 and fails it at
+/// 1e-4, so the emitted `f32_engaged` flags document the gate in
+/// action. Every cell is ε-verified against the exhaustive truth (the
+/// run aborts on a violation) and records the lane backend it
+/// actually executed on.
+pub fn run_bench_pr7(cfg: &BenchConfig) -> String {
+    let h = 0.2;
+    let epsilons = [1e-2, 1e-4];
+    let methods = [Method::Dfdo, Method::Dito];
+    let mut dataset_objs: Vec<String> = Vec::new();
+    for name in ["astro2d", "galaxy3d"] {
+        let ds = data::by_name(name, cfg.n, 42).expect("paper dataset");
+        let problem = GaussSumProblem::kde(&ds.points, h, epsilons[0]);
+        let (truth, truth_secs) = time_it(|| Naive::new().run(&problem).unwrap().sums);
+        let prep = |simd: SimdMode, precision: Precision| {
+            let opts = PrepareOptions { simd, precision, ..Default::default() };
+            Session::prepare(&ds.points, opts)
+        };
+        let scalar_session = prep(SimdMode::Off, Precision::F64);
+        let vector_session = prep(SimdMode::Auto, Precision::F64);
+        let f32_session = prep(SimdMode::Auto, Precision::F32);
+        let mut eps_objs: Vec<String> = Vec::new();
+        for eps in epsilons {
+            let mut method_objs: Vec<String> = Vec::new();
+            for method in methods {
+                let req = EvalRequest::kde(h, eps).with_method(method);
+                let run = |s: &Session<'_>| {
+                    let ev = s.evaluate(&req).expect("bench request cannot fail");
+                    let rel = max_relative_error(&ev.sums, &truth);
+                    let ok = rel <= eps * (1.0 + 1e-9);
+                    assert!(ok, "{name} {method} ε={eps}: rel {rel:.2e} > ε");
+                    let secs = median_secs(|| drop(s.evaluate(&req)), cfg.reps);
+                    (secs, rel, ev.stats)
+                };
+                let (scalar_secs, _, _) = run(&scalar_session);
+                let (simd_secs, rel_simd, simd_stats) = run(&vector_session);
+                let (f32_secs, rel_f32, f32_stats) = run(&f32_session);
+                method_objs.push(format!(
+                    "        \"{}\": {{\"scalar_secs\": {}, \"simd_secs\": {}, \"f32_secs\": {}, \
+                     \"simd_speedup\": {}, \"f32_speedup\": {}, \"rel_err_simd\": {}, \
+                     \"rel_err_f32\": {}, \"backend\": \"{}\", \"f32_engaged\": {}, \
+                     \"status\": \"ok\"}}",
+                    method.name(),
+                    num(scalar_secs),
+                    num(simd_secs),
+                    num(f32_secs),
+                    num(scalar_secs / simd_secs),
+                    num(scalar_secs / f32_secs),
+                    num(rel_simd),
+                    num(rel_f32),
+                    simd_stats.simd_backend,
+                    f32_stats.f32_base_cases > 0,
+                ));
+            }
+            let body = method_objs.join(",\n");
+            eps_objs.push(format!("      \"{eps:e}\": {{\n{body}\n      }}"));
+        }
+        dataset_objs.push(format!(
+            "  \"{name}\": {{\n    \"h\": {}, \"naive_truth_secs\": {},\n    \
+             \"epsilons\": {{\n{}\n    }}\n  }}",
+            num(h),
+            num(truth_secs),
+            eps_objs.join(",\n"),
+        ));
+    }
+    format!(
+        "{{\n\"bench\": \"BENCH_PR7\",\n\"description\": \"forced-scalar vs runtime-dispatched \
+         vector lanes vs the certified mixed-precision f32 tile in the fast base cases; every \
+         cell eps-verified against exhaustive truth, backend recorded, and the f32_engaged \
+         flags show the eps/4 admission gate of split_epsilon_prec\",\n\"measured\": true,\n\
+         \"detected_backend\": \"{}\",\n\"h\": {},\n\"n\": {},\n\"reps\": {},\n\"smoke\": {},\n\
+         \"generated_by\": \"cargo run --release --bin bench_json -- --pr7\",\n\
+         \"datasets\": {{\n{}\n}}\n}}\n",
+        crate::compute::simd::active().backend.name(),
+        num(h),
+        cfg.n,
+        cfg.reps,
+        cfg.smoke,
+        dataset_objs.join(",\n"),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -366,6 +454,44 @@ mod tests {
         assert!(scaled <= 1e-4, "sog cell scaled_err {scaled}");
         let decomp = sog.get("decomp_err").unwrap().as_f64().unwrap();
         assert!(decomp <= 0.25 * 1e-4, "decomp_err {decomp} must fit the ε/4 gate");
+    }
+
+    /// The PR 7 emitter: parseable JSON, every cell ε-verified with a
+    /// recorded backend, and the f32 admission gate visible in the
+    /// emitted flags — DFDO's mixed-precision tile engages at ε = 1e-2
+    /// and demotes at ε = 1e-4.
+    #[test]
+    fn smoke_bench_pr7_emits_parseable_json() {
+        let cfg = BenchConfig { n: 150, reps: 1, epsilon: 1e-4, smoke: true };
+        let text = run_bench_pr7(&cfg);
+        let doc = Json::parse(&text).expect("bench_json PR7 output must parse");
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("BENCH_PR7"));
+        assert_eq!(doc.get("measured").unwrap(), &Json::Bool(true));
+        assert_eq!(doc.get("smoke").unwrap(), &Json::Bool(true));
+        let detected = doc.get("detected_backend").unwrap().as_str().unwrap();
+        assert!(["scalar", "avx2", "neon"].contains(&detected), "{detected}");
+        for ds in ["astro2d", "galaxy3d"] {
+            let d = doc.get("datasets").unwrap().get(ds).unwrap_or_else(|| panic!("{ds}"));
+            let eps_groups = d.get("epsilons").unwrap();
+            for (key, eps) in [("1e-2", 1e-2), ("1e-4", 1e-4)] {
+                let group = eps_groups.get(key).unwrap_or_else(|| panic!("{ds}/{key}"));
+                for m in ["DFDO", "DITO"] {
+                    let cell = group.get(m).unwrap_or_else(|| panic!("{ds}/{key}/{m}"));
+                    assert_eq!(cell.get("status").unwrap().as_str(), Some("ok"));
+                    for k in ["rel_err_simd", "rel_err_f32"] {
+                        let rel = cell.get(k).unwrap().as_f64().unwrap();
+                        assert!(rel <= eps, "{ds}/{key}/{m}/{k}: {rel}");
+                    }
+                    assert!(cell.get("scalar_secs").unwrap().as_f64().unwrap() >= 0.0);
+                    let backend = cell.get("backend").unwrap().as_str().unwrap();
+                    assert_eq!(backend, detected, "{ds}/{key}/{m}");
+                }
+                // the ε/4 admission gate in action: the derived f32
+                // certificate (≈1e-4 at h = 0.2) fits 1e-2, fails 1e-4
+                let engaged = group.get("DFDO").unwrap().get("f32_engaged").unwrap();
+                assert_eq!(engaged, &Json::Bool(eps > 1e-3), "{ds}/{key}");
+            }
+        }
     }
 
     /// The emitter must produce parseable JSON with every advertised

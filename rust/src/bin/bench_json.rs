@@ -5,19 +5,25 @@
 //! aborts on a violating cell, which is how CI fails the job). `--pr4`
 //! re-runs the PR 4 protocol (old vs tiled base cases).
 //!
+//! `--pr7` runs the SIMD-lane protocol (forced-scalar vs vector lanes
+//! vs the certified mixed-precision f32 tile, every cell ε-verified
+//! with the lane backend recorded).
+//!
 //! ```text
 //! cargo run --release --bin bench_json                 # BENCH_PR5.json
 //! cargo run --release --bin bench_json -- --smoke      # tiny sizes (CI)
 //! cargo run --release --bin bench_json -- --pr4        # BENCH_PR4.json
+//! cargo run --release --bin bench_json -- --pr7        # BENCH_PR7.json
 //! cargo run --release --bin bench_json -- --n 8000 --reps 5 --out perf.json
 //! ```
 
-use fastgauss::benchjson::{run_bench, run_bench_pr5, BenchConfig};
+use fastgauss::benchjson::{run_bench, run_bench_pr5, run_bench_pr7, BenchConfig};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut cfg = BenchConfig::full();
     let mut pr4 = false;
+    let mut pr7 = false;
     let mut out: Option<String> = None;
     let mut i = 0;
     while i < args.len() {
@@ -28,6 +34,10 @@ fn main() {
             }
             "--pr4" => {
                 pr4 = true;
+                i += 1;
+            }
+            "--pr7" => {
+                pr7 = true;
                 i += 1;
             }
             "--n" => {
@@ -61,16 +71,29 @@ fn main() {
             }
             other => {
                 eprintln!(
-                    "unknown option {other:?}\nusage: bench_json [--smoke] [--pr4] [--n N] [--reps R] [--out FILE]"
+                    "unknown option {other:?}\nusage: bench_json [--smoke] [--pr4] [--pr7] [--n N] [--reps R] [--out FILE]"
                 );
                 std::process::exit(2);
             }
         }
     }
     let out = out.unwrap_or_else(|| {
-        if pr4 { "BENCH_PR4.json".to_string() } else { "BENCH_PR5.json".to_string() }
+        let name = if pr4 {
+            "BENCH_PR4.json"
+        } else if pr7 {
+            "BENCH_PR7.json"
+        } else {
+            "BENCH_PR5.json"
+        };
+        name.to_string()
     });
-    let json = if pr4 { run_bench(&cfg) } else { run_bench_pr5(&cfg) };
+    let json = if pr4 {
+        run_bench(&cfg)
+    } else if pr7 {
+        run_bench_pr7(&cfg)
+    } else {
+        run_bench_pr5(&cfg)
+    };
     std::fs::write(&out, &json).unwrap_or_else(|e| {
         eprintln!("writing {out}: {e}");
         std::process::exit(1);

@@ -41,6 +41,8 @@ options: --dataset NAME --n N --seed S --epsilon E --algos a,b,c
          --method naive|fgt|ifgt|dfd|dfdo|dfto|dito|auto
          --kernel gaussian|laplace|matern32|matern52|imq (default gaussian)
          --fast-exp true|false (certified tiled base case; default true)
+         --simd auto|off (vector lanes in the fast tiles; default auto)
+         --precision f64|f32 (certified mixed-precision tile; default f64)
          --out FILE --config FILE";
 
 /// Entry point used by `main.rs`. Returns the process exit code.
@@ -82,6 +84,8 @@ fn session_for<'d>(cfg: &RunConfig, ds: &'d data::Dataset) -> Session<'d> {
             leaf_size: cfg.leaf_size,
             threads: cfg.workers,
             fast_exp: cfg.fast_exp,
+            simd: cfg.simd,
+            precision: cfg.precision,
             kernel: cfg.kernel,
             ..Default::default()
         },
@@ -128,6 +132,8 @@ fn cmd_table(cfg: &RunConfig) -> Result<()> {
         workers: cfg.workers,
         leaf_size: cfg.leaf_size,
         fast_exp: cfg.fast_exp,
+        simd: cfg.simd,
+        precision: cfg.precision,
         kernel: cfg.kernel,
     };
     let res = run_sweep(&sweep);
@@ -322,6 +328,39 @@ mod tests {
                 .map(|s| s.to_string())
                 .collect();
         run(&args).unwrap();
+    }
+
+    #[test]
+    fn selftest_with_simd_off_pins_the_scalar_table() {
+        // --simd off must thread through config → session →
+        // DualTreeConfig and still pass every engine's ε check
+        let args: Vec<String> =
+            ["selftest", "--n", "150", "--dataset", "astro2d", "--simd", "off"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        run(&args).unwrap();
+    }
+
+    #[test]
+    fn selftest_with_f32_precision_stays_eps_verified() {
+        // --precision f32 engages the mixed-precision tile where its
+        // certificate fits ε/4 and demotes elsewhere; either way the
+        // selftest's rel-err checks must hold
+        let args: Vec<String> =
+            ["selftest", "--n", "150", "--dataset", "astro2d", "--precision", "f32"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        run(&args).unwrap();
+    }
+
+    #[test]
+    fn simd_flag_rejects_unknown_name() {
+        let args: Vec<String> =
+            ["selftest", "--simd", "avx512"].iter().map(|s| s.to_string()).collect();
+        let err = run(&args).unwrap_err().to_string();
+        assert!(err.contains("auto") && err.contains("off"), "{err}");
     }
 
     #[test]

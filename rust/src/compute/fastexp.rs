@@ -62,17 +62,17 @@ pub const EXP_MAX_REL_ERR: f64 = 1e-13;
 pub const EXP_UNDERFLOW_X: f64 = -708.0;
 
 /// 1/ln(2).
-const INV_LN2: f64 = std::f64::consts::LOG2_E;
+pub(crate) const INV_LN2: f64 = std::f64::consts::LOG2_E;
 /// High part of ln(2): 20 trailing zero mantissa bits, so `k·LN2_HI`
 /// is exact for |k| < 2²⁰ (fdlibm's split).
 #[allow(clippy::excessive_precision)]
-const LN2_HI: f64 = 6.931_471_803_691_238_164_90e-1;
+pub(crate) const LN2_HI: f64 = 6.931_471_803_691_238_164_90e-1;
 /// Low part: ln(2) − LN2_HI to full precision.
 #[allow(clippy::excessive_precision)]
-const LN2_LO: f64 = 1.908_214_929_270_587_700_02e-10;
+pub(crate) const LN2_LO: f64 = 1.908_214_929_270_587_700_02e-10;
 
 /// Taylor coefficients 1/j! for j = 0..=11.
-const C: [f64; 12] = [
+pub(crate) const C: [f64; 12] = [
     1.0,
     1.0,
     1.0 / 2.0,

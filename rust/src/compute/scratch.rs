@@ -41,6 +41,16 @@ pub struct Scratch {
     /// QUERY_TILE × cap exponent/kernel-value tile (sized lazily by
     /// [`Scratch::ensure_tile`] — only the tiled drivers pay for it).
     pub(super) tile: Vec<f64>,
+    /// f32 mirrors of the SoA/weight/norm lanes plus an f32 dot tile,
+    /// for the mixed-precision base case ([`super::tile`]'s f32
+    /// driver). Sized lazily by [`Scratch::ensure_f32`] /
+    /// [`Scratch::ensure_tile32`] — f64-only sessions never pay for
+    /// them.
+    pub(super) soa32: Vec<f32>,
+    pub(super) w32: Vec<f32>,
+    pub(super) rnorm32: Vec<f32>,
+    pub(super) qsoa32: Vec<f32>,
+    pub(super) tile32: Vec<f32>,
 }
 
 impl Scratch {
@@ -63,6 +73,11 @@ impl Scratch {
             qsoa: vec![0.0; dim.max(1) * QUERY_TILE],
             qnorm: [0.0; QUERY_TILE],
             tile: Vec::new(),
+            soa32: Vec::new(),
+            w32: Vec::new(),
+            rnorm32: Vec::new(),
+            qsoa32: Vec::new(),
+            tile32: Vec::new(),
         }
     }
 
@@ -100,6 +115,29 @@ impl Scratch {
     pub(super) fn ensure_tile(&mut self) {
         if self.tile.len() < QUERY_TILE * self.cap {
             self.tile = vec![0.0; QUERY_TILE * self.cap];
+        }
+    }
+
+    /// Size the f32 coordinate/weight/norm lanes (lazy, self-healing
+    /// after a [`reserve`] growth: the length check re-allocates all
+    /// four together whenever the capacity has moved).
+    ///
+    /// [`reserve`]: Scratch::reserve
+    pub(super) fn ensure_f32(&mut self) {
+        let lanes = self.dim.max(1) * self.cap;
+        if self.soa32.len() < lanes {
+            self.soa32 = vec![0.0; lanes];
+            self.w32 = vec![0.0; self.cap];
+            self.rnorm32 = vec![0.0; self.cap];
+            self.qsoa32 = vec![0.0; self.dim.max(1) * QUERY_TILE];
+        }
+    }
+
+    /// Size the QUERY_TILE × cap f32 dot tile (lazy, like
+    /// [`Scratch::ensure_tile`]).
+    pub(super) fn ensure_tile32(&mut self) {
+        if self.tile32.len() < QUERY_TILE * self.cap {
+            self.tile32 = vec![0.0; QUERY_TILE * self.cap];
         }
     }
 
@@ -148,6 +186,41 @@ impl Scratch {
     pub fn load_ref_norms(&mut self, norms: &[f64], begin: usize, end: usize) {
         debug_assert_eq!(end - begin, self.len, "norm range must match loaded lanes");
         self.rnorm[..self.len].copy_from_slice(&norms[begin..end]);
+    }
+
+    /// [`Scratch::load`] rounded to the f32 coordinate lanes (the
+    /// mixed-precision tile; the f64→f32 representation error is
+    /// charged by `errorcontrol::base_case_rel_err_f32`).
+    pub fn load_f32(&mut self, pts: &Matrix, begin: usize, end: usize) -> usize {
+        debug_assert_eq!(pts.cols(), self.dim, "scratch dimension mismatch");
+        let n = end - begin;
+        self.reserve(n);
+        self.ensure_f32();
+        for j in 0..n {
+            let row = pts.row(begin + j);
+            for k in 0..self.dim {
+                self.soa32[k * self.cap + j] = row[k] as f32;
+            }
+        }
+        self.len = n;
+        n
+    }
+
+    /// [`Scratch::load_weights`] rounded to the f32 weight lane.
+    pub fn load_weights_f32(&mut self, weights: &[f64], begin: usize, end: usize) {
+        debug_assert_eq!(end - begin, self.len, "weight range must match loaded lanes");
+        self.ensure_f32();
+        for (j, &v) in weights[begin..end].iter().enumerate() {
+            self.w32[j] = v as f32;
+        }
+    }
+
+    /// [`Scratch::load_ref_norms`] from pre-rounded f32 shadow norms
+    /// (`KdTree::sq_norms_f32`).
+    pub fn load_ref_norms_f32(&mut self, norms: &[f32], begin: usize, end: usize) {
+        debug_assert_eq!(end - begin, self.len, "norm range must match loaded lanes");
+        self.ensure_f32();
+        self.rnorm32[..self.len].copy_from_slice(&norms[begin..end]);
     }
 
     /// Squared distances from `q` to every loaded lane; returns the

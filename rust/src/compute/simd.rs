@@ -1,0 +1,1006 @@
+//! Explicit vector lanes for the hot tile primitives, std-only.
+//!
+//! The GEMM-shaped base case (`compute::tile` + `compute::fastexp`)
+//! auto-vectorizes on a good day, but the portable build cannot assume
+//! AVX2/FMA or NEON at compile time, so the hottest loops — the dot
+//! tile, the fused norms-trick + certified exp pass, and the weighted
+//! reduction — are duplicated here as `core::arch` kernels and selected
+//! **once per process** by runtime feature detection behind a
+//! function-pointer table ([`Lanes`]).
+//!
+//! Three backends:
+//!
+//! * **scalar** — delegates verbatim to [`microkernel`] / [`fastexp`].
+//!   This is the bit-exact-vs-today reference: with SIMD forced off
+//!   (`SimdMode::Off`, or the process-wide `FASTGAUSS_SIMD=off`
+//!   environment override read at first detection) every deterministic
+//!   engine produces bit-identical sums to the pre-SIMD scalar path.
+//! * **avx2** (x86_64, requires AVX2+FMA at runtime) — 4×f64 / 8×f32
+//!   lanes, FMA chains, and a lane-wide [`fastexp`]: the same
+//!   `LN2_HI`/`LN2_LO` Cody–Waite reduction and degree-11 Horner
+//!   polynomial, with `2^k` assembled in the exponent field via
+//!   `_mm256_slli_epi64` and the underflow tail handled by a per-lane
+//!   blend instead of a branch.
+//! * **neon** (aarch64) — the same algorithm on 2×f64 / 4×f32 lanes.
+//!
+//! # Why the vector kernels stay inside the certificate
+//!
+//! The dot tile keeps the exact per-element contract (`tile[t,j] =
+//! Σ_k q_k·r_kj` accumulated dims-ascending); fusing the
+//! multiply-accumulate only *removes* intermediate roundings, so the
+//! `errorcontrol::base_case_rel_err` cancellation bound (derived for
+//! one rounding per operation) still holds. The vector exp mirrors the
+//! scalar algorithm constant-for-constant; FMA in the Horner recurrence
+//! and in the range reduction again only tightens the 2.0e-14 budget
+//! certified as [`fastexp::EXP_MAX_REL_ERR`] = 1e-13 (ties in
+//! `round(x/ln2)` may break to even instead of away from zero, which
+//! moves `r` across the seam but keeps `|r| ≤ ln(2)/2 + 1 ulp`, the
+//! only property the budget uses). The weighted reduction is the one
+//! primitive whose *order* changes (lane-strided partial sums folded at
+//! the end); for the non-negative terms `w_j·K̃ ≥ 0` any summation
+//! order is within `(n−1)·u · Σ w_j·K̃` of any other — the same class
+//! and magnitude of error the sequential sum already carries in every
+//! path including the exhaustive truth, absorbed by the existing
+//! `base_case_rel_err` slack (see DESIGN.md §"Vector lanes").
+//!
+//! The f32 lane variants ([`Lanes::dot_tile_f32`]) are *not* silently
+//! substituted: the mixed-precision tile is a separate driver
+//! (`tile::gauss_sums_fast_f32_on_loaded`) that only runs when
+//! `errorcontrol::split_epsilon_prec` has charged the derived f32
+//! representation error against the ε budget.
+
+use std::sync::OnceLock;
+
+use super::fastexp;
+use super::microkernel;
+
+/// SIMD dispatch policy, selectable per session/config (`simd=` key,
+/// `--simd`); `FASTGAUSS_SIMD=off` in the environment pins the whole
+/// process to scalar regardless (CI runs one such leg).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
+pub enum SimdMode {
+    /// Runtime feature detection: AVX2+FMA → avx2, aarch64 → neon,
+    /// otherwise (or under `FASTGAUSS_SIMD=off`) scalar.
+    #[default]
+    Auto,
+    /// Force the portable scalar kernels — bit-identical to the
+    /// pre-SIMD code path; the determinism-pinning override.
+    Off,
+}
+
+impl SimdMode {
+    /// Accepted spellings for config/CLI parsing.
+    pub const VALID: &'static str = "auto, off";
+
+    pub fn parse(s: &str) -> Option<SimdMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(SimdMode::Auto),
+            "off" | "scalar" => Some(SimdMode::Off),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdMode::Auto => "auto",
+            SimdMode::Off => "off",
+        }
+    }
+}
+
+/// Base-case arithmetic precision, selectable per session/config
+/// (`precision=` key, `--precision`).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Full f64 pipeline (default).
+    #[default]
+    F64,
+    /// Mixed precision: f32 reference lanes/norms/weights and f32 dot
+    /// tile, f64 exponent + accumulators. Only *taken* when
+    /// `errorcontrol::split_epsilon_prec` can afford the derived f32
+    /// bound inside ε/4; otherwise the evaluate silently falls back to
+    /// the certified f64 fast path (or bit-exact), staying ε-sound.
+    F32,
+}
+
+impl Precision {
+    /// Accepted spellings for config/CLI parsing.
+    pub const VALID: &'static str = "f64, f32";
+
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.to_ascii_lowercase().as_str() {
+            "f64" => Some(Precision::F64),
+            "f32" => Some(Precision::F32),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+}
+
+/// Which kernel set a [`Lanes`] table points at.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+}
+
+type ExpBlockFn = fn(&mut [f64]);
+type DotSoaFn = fn(&[f64], &[f64], usize, usize, &mut [f64]);
+type DotTileFn = fn(&[f64], usize, usize, &[f64], usize, usize, usize, &mut [f64]);
+type WeightedSumFn = fn(&[f64], &[f64]) -> f64;
+/// `(neg, qnorm, rnorm, vals, n)`: fused
+/// `vals[j] ← exp((qnorm + rnorm[j] − 2·vals[j]).max(0)·neg)`.
+type GaussFromNormsFn = fn(f64, f64, &[f64], &mut [f64], usize);
+type DotTileF32Fn = fn(&[f32], usize, usize, &[f32], usize, usize, usize, &mut [f32]);
+
+/// The per-process kernel table. Obtained from [`active`] /
+/// [`select`]; all entries of one table belong to the same backend, so
+/// a fixed table is deterministic across calls, threads and pool
+/// widths.
+pub struct Lanes {
+    pub backend: Backend,
+    /// Certified block exp (`fastexp` contract, same bound).
+    pub exp_block: ExpBlockFn,
+    /// Single-query SoA dot products (`microkernel::dot_soa` contract).
+    pub dot_soa: DotSoaFn,
+    /// Query-tile × reference-lane dot tile (`microkernel::dot_tile`).
+    pub dot_tile: DotTileFn,
+    /// Weighted reduction `Σ w_j·v_j` over non-negative terms.
+    pub weighted_sum: WeightedSumFn,
+    /// Fused norms-trick + certified exp row pass.
+    pub gauss_from_norms: GaussFromNormsFn,
+    /// f32-lane dot tile for the mixed-precision base case.
+    pub dot_tile_f32: DotTileF32Fn,
+}
+
+// ---------------------------------------------------------------------------
+// scalar backend — delegates to the existing portable code, verbatim
+// ---------------------------------------------------------------------------
+
+/// The scalar norms-trick fusion; `tile::gauss_from_norms_into` is a
+/// thin wrapper so there is exactly one bit-exact reference body.
+pub(crate) fn gauss_from_norms_scalar(
+    neg: f64,
+    qnorm: f64,
+    rnorm: &[f64],
+    vals: &mut [f64],
+    n: usize,
+) {
+    let (vals, rnorm) = (&mut vals[..n], &rnorm[..n]);
+    for j in 0..n {
+        vals[j] = (qnorm + rnorm[j] - 2.0 * vals[j]).max(0.0) * neg;
+    }
+    fastexp::exp_block(vals);
+}
+
+/// f32 mirror of `microkernel::dot_tile`: same zero-fill + dims-outer
+/// multiply-accumulate loop nest, f32 arithmetic.
+fn dot_tile_f32_scalar(
+    qsoa: &[f32],
+    qstride: usize,
+    nq: usize,
+    rsoa: &[f32],
+    rstride: usize,
+    n: usize,
+    dims: usize,
+    tile: &mut [f32],
+) {
+    debug_assert!(nq <= qstride && dims * qstride <= qsoa.len());
+    debug_assert!(n <= rstride && nq * rstride <= tile.len());
+    for t in 0..nq {
+        tile[t * rstride..t * rstride + n].fill(0.0);
+    }
+    for k in 0..dims {
+        let lane = &rsoa[k * rstride..k * rstride + n];
+        for t in 0..nq {
+            let qv = qsoa[k * qstride + t];
+            let row = &mut tile[t * rstride..t * rstride + n];
+            for j in 0..n {
+                row[j] += qv * lane[j];
+            }
+        }
+    }
+}
+
+static SCALAR: Lanes = Lanes {
+    backend: Backend::Scalar,
+    exp_block: fastexp::exp_block,
+    dot_soa: microkernel::dot_soa,
+    dot_tile: microkernel::dot_tile,
+    weighted_sum: microkernel::weighted_sum,
+    gauss_from_norms: gauss_from_norms_scalar,
+    dot_tile_f32: dot_tile_f32_scalar,
+};
+
+// ---------------------------------------------------------------------------
+// dispatch
+// ---------------------------------------------------------------------------
+
+/// The portable scalar table — the bit-exact reference backend.
+pub fn scalar() -> &'static Lanes {
+    &SCALAR
+}
+
+/// The process-wide auto-detected table, resolved once: honours
+/// `FASTGAUSS_SIMD=off|scalar|0` first, then runtime CPU features.
+pub fn active() -> &'static Lanes {
+    static ACTIVE: OnceLock<&'static Lanes> = OnceLock::new();
+    ACTIVE.get_or_init(|| {
+        let forced_off = std::env::var("FASTGAUSS_SIMD")
+            .map(|v| matches!(v.to_ascii_lowercase().as_str(), "off" | "scalar" | "0"))
+            .unwrap_or(false);
+        if forced_off {
+            &SCALAR
+        } else {
+            detect()
+        }
+    })
+}
+
+/// Resolve a [`SimdMode`] to its kernel table.
+pub fn select(mode: SimdMode) -> &'static Lanes {
+    match mode {
+        SimdMode::Auto => active(),
+        SimdMode::Off => &SCALAR,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> &'static Lanes {
+    if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma") {
+        &AVX2
+    } else {
+        &SCALAR
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect() -> &'static Lanes {
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        &NEON
+    } else {
+        &SCALAR
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect() -> &'static Lanes {
+    &SCALAR
+}
+
+// ---------------------------------------------------------------------------
+// avx2 backend (x86_64, runtime AVX2+FMA)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: Lanes = Lanes {
+    backend: Backend::Avx2,
+    exp_block: avx2::exp_block,
+    dot_soa: avx2::dot_soa,
+    dot_tile: avx2::dot_tile,
+    weighted_sum: avx2::weighted_sum,
+    gauss_from_norms: avx2::gauss_from_norms,
+    dot_tile_f32: avx2::dot_tile_f32,
+};
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! 4×f64 / 8×f32 kernels. Every public entry here is a *safe* fn
+    //! wrapper (so it coerces to the [`super::Lanes`] pointers) around
+    //! a `#[target_feature(enable = "avx2,fma")]` body; the wrappers
+    //! are only ever installed in the table after
+    //! `is_x86_feature_detected!` confirmed both features, which is
+    //! what makes the inner `unsafe` calls sound.
+
+    use std::arch::x86_64::*;
+
+    use crate::compute::fastexp;
+    use crate::compute::fastexp::{C, EXP_UNDERFLOW_X, INV_LN2, LN2_HI, LN2_LO};
+
+    /// One lane-wide certified exp: the scalar [`fastexp::fast_exp`]
+    /// algorithm verbatim — Cody–Waite reduction with the same
+    /// `LN2_HI`/`LN2_LO` split, degree-11 Horner on fused lanes, `2^k`
+    /// assembled in the exponent field, per-lane underflow blend.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn exp4(x: __m256d) -> __m256d {
+        // k = round(x / ln 2); rounding mode 0b00 (nearest) + NO_EXC.
+        let k = _mm256_round_pd::<0b1000>(_mm256_mul_pd(x, _mm256_set1_pd(INV_LN2)));
+        // r = (x − k·LN2_HI) − k·LN2_LO (fnmadd keeps k·LN2_HI exact —
+        // the product is exact by the Cody–Waite construction, so the
+        // fused form equals the scalar two-op form bit for bit).
+        let r = _mm256_fnmadd_pd(k, _mm256_set1_pd(LN2_HI), x);
+        let r = _mm256_fnmadd_pd(k, _mm256_set1_pd(LN2_LO), r);
+        let mut p = _mm256_set1_pd(C[11]);
+        let mut j = 11;
+        while j > 0 {
+            j -= 1;
+            p = _mm256_fmadd_pd(p, r, _mm256_set1_pd(C[j]));
+        }
+        // 2^k via the exponent bits. k is integral and, on the
+        // certified domain [−708, 709], within [−1022, 1023], so the
+        // biased exponent lands in [1, 2046] (a normal f64). Outside
+        // the domain the bits may wrap — exactly the lanes the
+        // underflow blend below zeroes (x < −708) or that the
+        // contract leaves unspecified (x > 709).
+        let ki = _mm256_cvtpd_epi32(k);
+        let k64 = _mm256_cvtepi32_epi64(ki);
+        let biased = _mm256_add_epi64(k64, _mm256_set1_epi64x(1023));
+        let scale = _mm256_castsi256_pd(_mm256_slli_epi64::<52>(biased));
+        let v = _mm256_mul_pd(p, scale);
+        let keep = _mm256_cmp_pd::<_CMP_GE_OQ>(x, _mm256_set1_pd(EXP_UNDERFLOW_X));
+        _mm256_and_pd(v, keep)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn exp_block_impl(xs: &mut [f64]) {
+        let n = xs.len();
+        let ptr = xs.as_mut_ptr();
+        let mut j = 0;
+        while j + 4 <= n {
+            let v = _mm256_loadu_pd(ptr.add(j));
+            _mm256_storeu_pd(ptr.add(j), exp4(v));
+            j += 4;
+        }
+        while j < n {
+            xs[j] = fastexp::fast_exp(xs[j]);
+            j += 1;
+        }
+    }
+
+    pub(super) fn exp_block(xs: &mut [f64]) {
+        // SAFETY: installed only after AVX2+FMA runtime detection.
+        unsafe { exp_block_impl(xs) }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot_soa_impl(q: &[f64], soa: &[f64], stride: usize, n: usize, out: &mut [f64]) {
+        let out = &mut out[..n];
+        out.fill(0.0);
+        for (k, &qk) in q.iter().enumerate() {
+            let lane = &soa[k * stride..k * stride + n];
+            let qv = _mm256_set1_pd(qk);
+            let mut j = 0;
+            while j + 4 <= n {
+                let l = _mm256_loadu_pd(lane.as_ptr().add(j));
+                let o = _mm256_loadu_pd(out.as_ptr().add(j));
+                _mm256_storeu_pd(out.as_mut_ptr().add(j), _mm256_fmadd_pd(qv, l, o));
+                j += 4;
+            }
+            while j < n {
+                out[j] += qk * lane[j];
+                j += 1;
+            }
+        }
+    }
+
+    pub(super) fn dot_soa(q: &[f64], soa: &[f64], stride: usize, n: usize, out: &mut [f64]) {
+        // SAFETY: installed only after AVX2+FMA runtime detection.
+        unsafe { dot_soa_impl(q, soa, stride, n, out) }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot_tile_impl(
+        qsoa: &[f64],
+        qstride: usize,
+        nq: usize,
+        rsoa: &[f64],
+        rstride: usize,
+        n: usize,
+        dims: usize,
+        tile: &mut [f64],
+    ) {
+        debug_assert!(nq <= qstride && dims * qstride <= qsoa.len());
+        debug_assert!(n <= rstride && nq * rstride <= tile.len());
+        for t in 0..nq {
+            tile[t * rstride..t * rstride + n].fill(0.0);
+        }
+        for k in 0..dims {
+            let lane = &rsoa[k * rstride..k * rstride + n];
+            for t in 0..nq {
+                let qk = qsoa[k * qstride + t];
+                let qv = _mm256_set1_pd(qk);
+                let row = &mut tile[t * rstride..t * rstride + n];
+                let mut j = 0;
+                while j + 4 <= n {
+                    let l = _mm256_loadu_pd(lane.as_ptr().add(j));
+                    let o = _mm256_loadu_pd(row.as_ptr().add(j));
+                    _mm256_storeu_pd(row.as_mut_ptr().add(j), _mm256_fmadd_pd(qv, l, o));
+                    j += 4;
+                }
+                while j < n {
+                    row[j] += qk * lane[j];
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn dot_tile(
+        qsoa: &[f64],
+        qstride: usize,
+        nq: usize,
+        rsoa: &[f64],
+        rstride: usize,
+        n: usize,
+        dims: usize,
+        tile: &mut [f64],
+    ) {
+        // SAFETY: installed only after AVX2+FMA runtime detection.
+        unsafe { dot_tile_impl(qsoa, qstride, nq, rsoa, rstride, n, dims, tile) }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn weighted_sum_impl(w: &[f64], v: &[f64]) -> f64 {
+        debug_assert_eq!(w.len(), v.len());
+        let n = w.len();
+        let mut acc = _mm256_setzero_pd();
+        let mut j = 0;
+        while j + 4 <= n {
+            let wv = _mm256_loadu_pd(w.as_ptr().add(j));
+            let vv = _mm256_loadu_pd(v.as_ptr().add(j));
+            acc = _mm256_fmadd_pd(wv, vv, acc);
+            j += 4;
+        }
+        // fixed fold order keeps the reduction deterministic
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut s = ((lanes[0] + lanes[1]) + lanes[2]) + lanes[3];
+        while j < n {
+            s += w[j] * v[j];
+            j += 1;
+        }
+        s
+    }
+
+    pub(super) fn weighted_sum(w: &[f64], v: &[f64]) -> f64 {
+        // SAFETY: installed only after AVX2+FMA runtime detection.
+        unsafe { weighted_sum_impl(w, v) }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn gauss_from_norms_impl(
+        neg: f64,
+        qnorm: f64,
+        rnorm: &[f64],
+        vals: &mut [f64],
+        n: usize,
+    ) {
+        let (vals, rnorm) = (&mut vals[..n], &rnorm[..n]);
+        let qn = _mm256_set1_pd(qnorm);
+        let negv = _mm256_set1_pd(neg);
+        let two = _mm256_set1_pd(2.0);
+        let zero = _mm256_setzero_pd();
+        let mut j = 0;
+        while j + 4 <= n {
+            let rn = _mm256_loadu_pd(rnorm.as_ptr().add(j));
+            let v = _mm256_loadu_pd(vals.as_ptr().add(j));
+            // (qn + rn) − 2·v: 2·v is exact, so the fused form matches
+            // the scalar `qnorm + rnorm[j] - 2.0*vals[j]` bit for bit.
+            let sq = _mm256_fnmadd_pd(two, v, _mm256_add_pd(qn, rn));
+            let x = _mm256_mul_pd(_mm256_max_pd(sq, zero), negv);
+            _mm256_storeu_pd(vals.as_mut_ptr().add(j), exp4(x));
+            j += 4;
+        }
+        while j < n {
+            vals[j] = fastexp::fast_exp((qnorm + rnorm[j] - 2.0 * vals[j]).max(0.0) * neg);
+            j += 1;
+        }
+    }
+
+    pub(super) fn gauss_from_norms(
+        neg: f64,
+        qnorm: f64,
+        rnorm: &[f64],
+        vals: &mut [f64],
+        n: usize,
+    ) {
+        // SAFETY: installed only after AVX2+FMA runtime detection.
+        unsafe { gauss_from_norms_impl(neg, qnorm, rnorm, vals, n) }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot_tile_f32_impl(
+        qsoa: &[f32],
+        qstride: usize,
+        nq: usize,
+        rsoa: &[f32],
+        rstride: usize,
+        n: usize,
+        dims: usize,
+        tile: &mut [f32],
+    ) {
+        debug_assert!(nq <= qstride && dims * qstride <= qsoa.len());
+        debug_assert!(n <= rstride && nq * rstride <= tile.len());
+        for t in 0..nq {
+            tile[t * rstride..t * rstride + n].fill(0.0);
+        }
+        for k in 0..dims {
+            let lane = &rsoa[k * rstride..k * rstride + n];
+            for t in 0..nq {
+                let qk = qsoa[k * qstride + t];
+                let qv = _mm256_set1_ps(qk);
+                let row = &mut tile[t * rstride..t * rstride + n];
+                let mut j = 0;
+                while j + 8 <= n {
+                    let l = _mm256_loadu_ps(lane.as_ptr().add(j));
+                    let o = _mm256_loadu_ps(row.as_ptr().add(j));
+                    _mm256_storeu_ps(row.as_mut_ptr().add(j), _mm256_fmadd_ps(qv, l, o));
+                    j += 8;
+                }
+                while j < n {
+                    row[j] += qk * lane[j];
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn dot_tile_f32(
+        qsoa: &[f32],
+        qstride: usize,
+        nq: usize,
+        rsoa: &[f32],
+        rstride: usize,
+        n: usize,
+        dims: usize,
+        tile: &mut [f32],
+    ) {
+        // SAFETY: installed only after AVX2+FMA runtime detection.
+        unsafe { dot_tile_f32_impl(qsoa, qstride, nq, rsoa, rstride, n, dims, tile) }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// neon backend (aarch64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+static NEON: Lanes = Lanes {
+    backend: Backend::Neon,
+    exp_block: neon::exp_block,
+    dot_soa: neon::dot_soa,
+    dot_tile: neon::dot_tile,
+    weighted_sum: neon::weighted_sum,
+    gauss_from_norms: neon::gauss_from_norms,
+    dot_tile_f32: neon::dot_tile_f32,
+};
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! 2×f64 / 4×f32 kernels — the same algorithms as the avx2 module
+    //! on half-width lanes. Safe wrappers around
+    //! `#[target_feature(enable = "neon")]` bodies, installed only
+    //! after `is_aarch64_feature_detected!("neon")`.
+
+    use std::arch::aarch64::*;
+
+    use crate::compute::fastexp;
+    use crate::compute::fastexp::{C, EXP_UNDERFLOW_X, INV_LN2, LN2_HI, LN2_LO};
+
+    /// Lane-wide certified exp; see `avx2::exp4` for the argument that
+    /// this stays inside [`fastexp::EXP_MAX_REL_ERR`].
+    #[target_feature(enable = "neon")]
+    unsafe fn exp2_lanes(x: float64x2_t) -> float64x2_t {
+        // round-to-nearest(-even) — tie direction is inside the budget
+        let k = vrndnq_f64(vmulq_f64(x, vdupq_n_f64(INV_LN2)));
+        let r = vfmsq_f64(x, k, vdupq_n_f64(LN2_HI));
+        let r = vfmsq_f64(r, k, vdupq_n_f64(LN2_LO));
+        let mut p = vdupq_n_f64(C[11]);
+        let mut j = 11;
+        while j > 0 {
+            j -= 1;
+            p = vfmaq_f64(vdupq_n_f64(C[j]), p, r);
+        }
+        // k is integral, so the toward-zero convert is exact
+        let ki = vcvtq_s64_f64(k);
+        let biased = vaddq_s64(ki, vdupq_n_s64(1023));
+        let scale = vreinterpretq_f64_s64(vshlq_n_s64::<52>(biased));
+        let v = vmulq_f64(p, scale);
+        let keep = vcgeq_f64(x, vdupq_n_f64(EXP_UNDERFLOW_X));
+        vreinterpretq_f64_u64(vandq_u64(vreinterpretq_u64_f64(v), keep))
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn exp_block_impl(xs: &mut [f64]) {
+        let n = xs.len();
+        let ptr = xs.as_mut_ptr();
+        let mut j = 0;
+        while j + 2 <= n {
+            let v = vld1q_f64(ptr.add(j));
+            vst1q_f64(ptr.add(j), exp2_lanes(v));
+            j += 2;
+        }
+        while j < n {
+            xs[j] = fastexp::fast_exp(xs[j]);
+            j += 1;
+        }
+    }
+
+    pub(super) fn exp_block(xs: &mut [f64]) {
+        // SAFETY: installed only after NEON runtime detection.
+        unsafe { exp_block_impl(xs) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_soa_impl(q: &[f64], soa: &[f64], stride: usize, n: usize, out: &mut [f64]) {
+        let out = &mut out[..n];
+        out.fill(0.0);
+        for (k, &qk) in q.iter().enumerate() {
+            let lane = &soa[k * stride..k * stride + n];
+            let qv = vdupq_n_f64(qk);
+            let mut j = 0;
+            while j + 2 <= n {
+                let l = vld1q_f64(lane.as_ptr().add(j));
+                let o = vld1q_f64(out.as_ptr().add(j));
+                vst1q_f64(out.as_mut_ptr().add(j), vfmaq_f64(o, qv, l));
+                j += 2;
+            }
+            while j < n {
+                out[j] += qk * lane[j];
+                j += 1;
+            }
+        }
+    }
+
+    pub(super) fn dot_soa(q: &[f64], soa: &[f64], stride: usize, n: usize, out: &mut [f64]) {
+        // SAFETY: installed only after NEON runtime detection.
+        unsafe { dot_soa_impl(q, soa, stride, n, out) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_tile_impl(
+        qsoa: &[f64],
+        qstride: usize,
+        nq: usize,
+        rsoa: &[f64],
+        rstride: usize,
+        n: usize,
+        dims: usize,
+        tile: &mut [f64],
+    ) {
+        debug_assert!(nq <= qstride && dims * qstride <= qsoa.len());
+        debug_assert!(n <= rstride && nq * rstride <= tile.len());
+        for t in 0..nq {
+            tile[t * rstride..t * rstride + n].fill(0.0);
+        }
+        for k in 0..dims {
+            let lane = &rsoa[k * rstride..k * rstride + n];
+            for t in 0..nq {
+                let qk = qsoa[k * qstride + t];
+                let qv = vdupq_n_f64(qk);
+                let row = &mut tile[t * rstride..t * rstride + n];
+                let mut j = 0;
+                while j + 2 <= n {
+                    let l = vld1q_f64(lane.as_ptr().add(j));
+                    let o = vld1q_f64(row.as_ptr().add(j));
+                    vst1q_f64(row.as_mut_ptr().add(j), vfmaq_f64(o, qv, l));
+                    j += 2;
+                }
+                while j < n {
+                    row[j] += qk * lane[j];
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn dot_tile(
+        qsoa: &[f64],
+        qstride: usize,
+        nq: usize,
+        rsoa: &[f64],
+        rstride: usize,
+        n: usize,
+        dims: usize,
+        tile: &mut [f64],
+    ) {
+        // SAFETY: installed only after NEON runtime detection.
+        unsafe { dot_tile_impl(qsoa, qstride, nq, rsoa, rstride, n, dims, tile) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn weighted_sum_impl(w: &[f64], v: &[f64]) -> f64 {
+        debug_assert_eq!(w.len(), v.len());
+        let n = w.len();
+        let mut acc = vdupq_n_f64(0.0);
+        let mut j = 0;
+        while j + 2 <= n {
+            let wv = vld1q_f64(w.as_ptr().add(j));
+            let vv = vld1q_f64(v.as_ptr().add(j));
+            acc = vfmaq_f64(acc, wv, vv);
+            j += 2;
+        }
+        let mut s = vgetq_lane_f64::<0>(acc) + vgetq_lane_f64::<1>(acc);
+        while j < n {
+            s += w[j] * v[j];
+            j += 1;
+        }
+        s
+    }
+
+    pub(super) fn weighted_sum(w: &[f64], v: &[f64]) -> f64 {
+        // SAFETY: installed only after NEON runtime detection.
+        unsafe { weighted_sum_impl(w, v) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn gauss_from_norms_impl(
+        neg: f64,
+        qnorm: f64,
+        rnorm: &[f64],
+        vals: &mut [f64],
+        n: usize,
+    ) {
+        let (vals, rnorm) = (&mut vals[..n], &rnorm[..n]);
+        let qn = vdupq_n_f64(qnorm);
+        let negv = vdupq_n_f64(neg);
+        let two = vdupq_n_f64(2.0);
+        let zero = vdupq_n_f64(0.0);
+        let mut j = 0;
+        while j + 2 <= n {
+            let rn = vld1q_f64(rnorm.as_ptr().add(j));
+            let v = vld1q_f64(vals.as_ptr().add(j));
+            let sq = vfmsq_f64(vaddq_f64(qn, rn), two, v);
+            let x = vmulq_f64(vmaxq_f64(sq, zero), negv);
+            vst1q_f64(vals.as_mut_ptr().add(j), exp2_lanes(x));
+            j += 2;
+        }
+        while j < n {
+            vals[j] = fastexp::fast_exp((qnorm + rnorm[j] - 2.0 * vals[j]).max(0.0) * neg);
+            j += 1;
+        }
+    }
+
+    pub(super) fn gauss_from_norms(
+        neg: f64,
+        qnorm: f64,
+        rnorm: &[f64],
+        vals: &mut [f64],
+        n: usize,
+    ) {
+        // SAFETY: installed only after NEON runtime detection.
+        unsafe { gauss_from_norms_impl(neg, qnorm, rnorm, vals, n) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_tile_f32_impl(
+        qsoa: &[f32],
+        qstride: usize,
+        nq: usize,
+        rsoa: &[f32],
+        rstride: usize,
+        n: usize,
+        dims: usize,
+        tile: &mut [f32],
+    ) {
+        debug_assert!(nq <= qstride && dims * qstride <= qsoa.len());
+        debug_assert!(n <= rstride && nq * rstride <= tile.len());
+        for t in 0..nq {
+            tile[t * rstride..t * rstride + n].fill(0.0);
+        }
+        for k in 0..dims {
+            let lane = &rsoa[k * rstride..k * rstride + n];
+            for t in 0..nq {
+                let qk = qsoa[k * qstride + t];
+                let qv = vdupq_n_f32(qk);
+                let row = &mut tile[t * rstride..t * rstride + n];
+                let mut j = 0;
+                while j + 4 <= n {
+                    let l = vld1q_f32(lane.as_ptr().add(j));
+                    let o = vld1q_f32(row.as_ptr().add(j));
+                    vst1q_f32(row.as_mut_ptr().add(j), vfmaq_f32(o, qv, l));
+                    j += 4;
+                }
+                while j < n {
+                    row[j] += qk * lane[j];
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn dot_tile_f32(
+        qsoa: &[f32],
+        qstride: usize,
+        nq: usize,
+        rsoa: &[f32],
+        rstride: usize,
+        n: usize,
+        dims: usize,
+        tile: &mut [f32],
+    ) {
+        // SAFETY: installed only after NEON runtime detection.
+        unsafe { dot_tile_f32_impl(qsoa, qstride, nq, rsoa, rstride, n, dims, tile) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn randvec(rng: &mut Pcg32, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| lo + (hi - lo) * rng.uniform()).collect()
+    }
+
+    #[test]
+    fn mode_and_precision_parse_roundtrip() {
+        assert_eq!(SimdMode::parse("AUTO"), Some(SimdMode::Auto));
+        assert_eq!(SimdMode::parse("off"), Some(SimdMode::Off));
+        assert_eq!(SimdMode::parse("scalar"), Some(SimdMode::Off));
+        assert_eq!(SimdMode::parse("fast"), None);
+        assert_eq!(Precision::parse("f32"), Some(Precision::F32));
+        assert_eq!(Precision::parse("F64"), Some(Precision::F64));
+        assert_eq!(Precision::parse("f16"), None);
+        assert_eq!(SimdMode::default(), SimdMode::Auto);
+        assert_eq!(Precision::default(), Precision::F64);
+    }
+
+    #[test]
+    fn select_off_is_the_scalar_table() {
+        let off = select(SimdMode::Off);
+        assert_eq!(off.backend, Backend::Scalar);
+        assert!(std::ptr::eq(off, scalar()));
+        // auto resolves to one fixed table for the whole process
+        assert!(std::ptr::eq(select(SimdMode::Auto), select(SimdMode::Auto)));
+    }
+
+    #[test]
+    fn scalar_table_delegates_verbatim() {
+        let mut rng = Pcg32::new(2024);
+        let n = 13;
+        let stride = 16;
+        let d = 3;
+        let soa = randvec(&mut rng, d * stride, -1.0, 1.0);
+        let q = randvec(&mut rng, d, -1.0, 1.0);
+        let mut a = vec![0.0; stride];
+        let mut b = vec![0.0; stride];
+        (scalar().dot_soa)(&q, &soa, stride, n, &mut a);
+        microkernel::dot_soa(&q, &soa, stride, n, &mut b);
+        assert_eq!(a, b);
+        let mut xs = randvec(&mut rng, 11, -30.0, 0.0);
+        let mut ys = xs.clone();
+        (scalar().exp_block)(&mut xs);
+        fastexp::exp_block(&mut ys);
+        assert_eq!(xs, ys);
+    }
+
+    /// Every active-table primitive agrees with the scalar reference on
+    /// every lane-tail residue (n mod width ∈ {0..width−1}) and odd
+    /// tile shapes — within the certified/documented slack, and
+    /// bit-exactly when the active table *is* the scalar one.
+    #[test]
+    fn active_matches_scalar_on_all_lane_tails() {
+        let act = active();
+        let mut rng = Pcg32::new(7);
+        for n in 0..=17 {
+            for d in [1usize, 2, 3, 5] {
+                let stride = n.max(1) + 3; // misaligned on purpose
+                let rsoa = randvec(&mut rng, d * stride, -1.0, 1.0);
+                let q = randvec(&mut rng, d, -1.0, 1.0);
+                let mut got = vec![0.0; stride];
+                let mut want = vec![0.0; stride];
+                (act.dot_soa)(&q, &rsoa, stride, n, &mut got);
+                (scalar().dot_soa)(&q, &rsoa, stride, n, &mut want);
+                for j in 0..n {
+                    let diff = (got[j] - want[j]).abs();
+                    assert!(diff <= 1e-14 * (1.0 + want[j].abs()), "dot_soa n={n} d={d} j={j}");
+                }
+
+                let nq = 1 + n % super::super::tile::QUERY_TILE;
+                let qstride = super::super::tile::QUERY_TILE;
+                let qsoa = randvec(&mut rng, d * qstride, -1.0, 1.0);
+                let mut tile_got = vec![0.0; nq * stride];
+                let mut tile_want = vec![0.0; nq * stride];
+                (act.dot_tile)(&qsoa, qstride, nq, &rsoa, stride, n, d, &mut tile_got);
+                (scalar().dot_tile)(&qsoa, qstride, nq, &rsoa, stride, n, d, &mut tile_want);
+                for i in 0..nq * stride {
+                    let diff = (tile_got[i] - tile_want[i]).abs();
+                    assert!(diff <= 1e-14 * (1.0 + tile_want[i].abs()), "tile n={n} d={d} i={i}");
+                }
+
+                let w = randvec(&mut rng, n, 0.0, 1.0);
+                let v = randvec(&mut rng, n, 0.0, 1.0);
+                let s_got = (act.weighted_sum)(&w, &v);
+                let s_want = (scalar().weighted_sum)(&w, &v);
+                let diff = (s_got - s_want).abs();
+                assert!(diff <= 1e-13 * (1.0 + s_want.abs()), "wsum n={n}: {s_got} vs {s_want}");
+            }
+        }
+    }
+
+    #[test]
+    fn active_exp_block_is_certified_on_all_tails() {
+        let act = active();
+        let mut rng = Pcg32::new(19);
+        for n in 0..=9 {
+            let xs = randvec(&mut rng, n, -40.0, 0.0);
+            let mut got = xs.clone();
+            (act.exp_block)(&mut got);
+            for j in 0..n {
+                let truth = xs[j].exp();
+                let rel = (got[j] - truth).abs() / truth;
+                assert!(rel <= fastexp::EXP_MAX_REL_ERR, "n={n} j={j} x={}", xs[j]);
+            }
+        }
+        // underflow tail and ±0 behave like the scalar contract
+        let mut edge = vec![-709.0, -708.0, 0.0, -0.0, -750.0];
+        (act.exp_block)(&mut edge);
+        assert_eq!(edge[0], 0.0);
+        let t708 = (-708.0f64).exp();
+        assert!((edge[1] - t708).abs() / t708 <= fastexp::EXP_MAX_REL_ERR);
+        assert_eq!(edge[2], 1.0);
+        assert_eq!(edge[3], 1.0);
+        assert_eq!(edge[4], 0.0);
+    }
+
+    #[test]
+    fn active_gauss_from_norms_matches_scalar_within_certificate() {
+        let act = active();
+        let mut rng = Pcg32::new(23);
+        let neg = -1.0 / (2.0 * 0.35 * 0.35);
+        for n in 0..=11 {
+            let rnorm = randvec(&mut rng, n, 0.0, 3.0);
+            let dots = randvec(&mut rng, n, -1.0, 1.0);
+            let qnorm = rng.uniform() * 3.0;
+            let mut got = dots.clone();
+            let mut want = dots.clone();
+            (act.gauss_from_norms)(neg, qnorm, &rnorm, &mut got, n);
+            gauss_from_norms_scalar(neg, qnorm, &rnorm, &mut want, n);
+            for j in 0..n {
+                let rel = (got[j] - want[j]).abs() / want[j].max(1e-300);
+                assert!(rel <= 4.0 * fastexp::EXP_MAX_REL_ERR, "n={n} j={j}: rel={rel:.2e}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_dot_tile_matches_f64_within_f32_slack() {
+        let act = active();
+        let mut rng = Pcg32::new(29);
+        for n in 0..=19 {
+            for d in [1usize, 3] {
+                let stride = n.max(1) + 5;
+                let rsoa = randvec(&mut rng, d * stride, -1.0, 1.0);
+                let qstride = super::super::tile::QUERY_TILE;
+                let nq = 1 + n % qstride;
+                let qsoa = randvec(&mut rng, d * qstride, -1.0, 1.0);
+                let rsoa32: Vec<f32> = rsoa.iter().map(|&v| v as f32).collect();
+                let qsoa32: Vec<f32> = qsoa.iter().map(|&v| v as f32).collect();
+                let mut t64 = vec![0.0f64; nq * stride];
+                let mut t32 = vec![0.0f32; nq * stride];
+                (scalar().dot_tile)(&qsoa, qstride, nq, &rsoa, stride, n, d, &mut t64);
+                (act.dot_tile_f32)(&qsoa32, qstride, nq, &rsoa32, stride, n, d, &mut t32);
+                for t in 0..nq {
+                    for j in 0..n {
+                        let a = f64::from(t32[t * stride + j]);
+                        let b = t64[t * stride + j];
+                        let tol = 1e-5 * (1.0 + b.abs()) * d as f64;
+                        assert!((a - b).abs() <= tol, "n={n} d={d} t={t} j={j}");
+                    }
+                }
+            }
+        }
+    }
+}

@@ -29,6 +29,8 @@ use crate::kernel::GaussianKernel;
 
 use super::fastexp;
 use super::microkernel;
+use super::simd;
+use super::simd::Lanes;
 use super::Scratch;
 
 /// Queries processed per tile row-block: 8 keeps the query lanes and a
@@ -63,12 +65,22 @@ pub fn gauss_from_norms_into(
     vals: &mut [f64],
     n: usize,
 ) {
-    let neg = kernel.neg_inv_two_h2();
-    let (vals, rnorm) = (&mut vals[..n], &rnorm[..n]);
-    for j in 0..n {
-        vals[j] = (qnorm + rnorm[j] - 2.0 * vals[j]).max(0.0) * neg;
-    }
-    fastexp::exp_block(vals);
+    simd::gauss_from_norms_scalar(kernel.neg_inv_two_h2(), qnorm, rnorm, vals, n);
+}
+
+/// [`gauss_from_norms_into`] through an explicit [`Lanes`] table — the
+/// scalar table reproduces the plain function bit for bit; the vector
+/// tables stay inside the certified budget (see `compute::simd`).
+#[inline]
+pub fn gauss_from_norms_into_with(
+    lanes: &Lanes,
+    kernel: &GaussianKernel,
+    qnorm: f64,
+    rnorm: &[f64],
+    vals: &mut [f64],
+    n: usize,
+) {
+    (lanes.gauss_from_norms)(kernel.neg_inv_two_h2(), qnorm, rnorm, vals, n);
 }
 
 /// The fast tiled base case: query rows `[qb, qe)` of `queries` (with
@@ -89,6 +101,7 @@ pub fn gauss_sums_fast_on_loaded(
     qb: usize,
     qe: usize,
     out: &mut [f64],
+    lanes: &Lanes,
 ) {
     debug_assert_eq!(queries.cols(), scratch.dim, "scratch dimension mismatch");
     debug_assert_eq!(out.len(), qe - qb, "output length");
@@ -99,6 +112,7 @@ pub fn gauss_sums_fast_on_loaded(
     scratch.ensure_tile();
     let d = queries.cols();
     let stride = scratch.cap;
+    let neg = kernel.neg_inv_two_h2();
     let Scratch { soa, w, rnorm, qsoa, qnorm, tile, .. } = scratch;
     let mut q = qb;
     while q < qe {
@@ -110,11 +124,75 @@ pub fn gauss_sums_fast_on_loaded(
             }
             qnorm[t] = qnorms[q + t];
         }
-        microkernel::dot_tile(qsoa, QUERY_TILE, nq, soa, stride, n, d, tile);
+        (lanes.dot_tile)(qsoa, QUERY_TILE, nq, soa, stride, n, d, tile);
         for t in 0..nq {
             let row = &mut tile[t * stride..t * stride + n];
-            gauss_from_norms_into(kernel, qnorm[t], rnorm, row, n);
-            out[q - qb + t] += microkernel::weighted_sum(&w[..n], row);
+            (lanes.gauss_from_norms)(neg, qnorm[t], rnorm, row, n);
+            out[q - qb + t] += (lanes.weighted_sum)(&w[..n], row);
+        }
+        q += nq;
+    }
+}
+
+/// The mixed-precision tiled base case: the same shape as
+/// [`gauss_sums_fast_on_loaded`] with the reference coordinates,
+/// weights, norms and the dot tile in f32 (loaded via
+/// [`Scratch::load_f32`] / [`Scratch::load_weights_f32`] /
+/// [`Scratch::load_ref_norms_f32`]) — half the lane memory traffic and
+/// twice the vector width in the GEMM part — while the exponent is
+/// widened back to f64 for the certified exp and the weighted
+/// reduction accumulates in f64.
+///
+/// Per pair the kernel value carries relative error ≤
+/// `errorcontrol::base_case_rel_err_f32(dim, h, max‖x‖²)`; callers
+/// must have charged that bound against ε via
+/// `errorcontrol::split_epsilon_prec` (which refuses the route — the
+/// `f32_tile` flag stays false — whenever it does not fit in ε/4).
+pub fn gauss_sums_fast_f32_on_loaded(
+    scratch: &mut Scratch,
+    kernel: &GaussianKernel,
+    queries: &Matrix,
+    qnorms: &[f64],
+    qb: usize,
+    qe: usize,
+    out: &mut [f64],
+    lanes: &Lanes,
+) {
+    debug_assert_eq!(queries.cols(), scratch.dim, "scratch dimension mismatch");
+    debug_assert_eq!(out.len(), qe - qb, "output length");
+    let n = scratch.len;
+    if n == 0 || qe == qb {
+        return;
+    }
+    scratch.ensure_f32();
+    scratch.ensure_tile32();
+    let d = queries.cols();
+    let stride = scratch.cap;
+    let neg = kernel.neg_inv_two_h2();
+    let Scratch { soa32, w32, rnorm32, qsoa32, tile32, sq, .. } = scratch;
+    let mut q = qb;
+    while q < qe {
+        let nq = QUERY_TILE.min(qe - q);
+        for t in 0..nq {
+            let row = queries.row(q + t);
+            for k in 0..d {
+                qsoa32[k * QUERY_TILE + t] = row[k] as f32;
+            }
+        }
+        (lanes.dot_tile_f32)(qsoa32, QUERY_TILE, nq, soa32, stride, n, d, tile32);
+        for t in 0..nq {
+            let qn32 = qnorms[q + t] as f32;
+            let dots = &tile32[t * stride..t * stride + n];
+            let (evals, rn) = (&mut sq[..n], &rnorm32[..n]);
+            for j in 0..n {
+                evals[j] = f64::from((qn32 + rn[j] - 2.0 * dots[j]).max(0.0)) * neg;
+            }
+            (lanes.exp_block)(evals);
+            let mut acc = 0.0;
+            for j in 0..n {
+                acc += f64::from(w32[j]) * evals[j];
+            }
+            out[q - qb + t] += acc;
         }
         q += nq;
     }
@@ -142,23 +220,76 @@ mod tests {
     #[test]
     fn fast_tile_matches_scalar_reference_within_certified_budget() {
         let kernel = GaussianKernel::new(0.35);
-        for (nq, nr, d) in [(1, 1, 1), (3, 7, 2), (8, 13, 3), (13, 40, 5), (30, 64, 2)] {
-            let q = random(nq, d, 500 + nq as u64);
-            let r = random(nr, d, 600 + nr as u64);
+        // both the scalar reference table and whatever the process
+        // detected must stay inside the certified budget
+        for lanes in [simd::scalar(), simd::active()] {
+            for (nq, nr, d) in [(1, 1, 1), (3, 7, 2), (8, 13, 3), (13, 40, 5), (30, 64, 2)] {
+                let q = random(nq, d, 500 + nq as u64);
+                let r = random(nr, d, 600 + nr as u64);
+                let w: Vec<f64> = (0..nr).map(|i| 0.5 + 0.01 * i as f64).collect();
+                let mut want = vec![0.0; nq];
+                reference::scalar_gauss_sums(&q, &r, &w, &kernel, &mut want);
+                let qnorms = sq_norms(&q);
+                let rnorms = sq_norms(&r);
+                let mut scratch = Scratch::new(d);
+                scratch.load(&r, 0, nr);
+                scratch.load_weights(&w, 0, nr);
+                scratch.load_ref_norms(&rnorms, 0, nr);
+                let mut got = vec![0.0; nq];
+                gauss_sums_fast_on_loaded(
+                    &mut scratch,
+                    &kernel,
+                    &q,
+                    &qnorms,
+                    0,
+                    nq,
+                    &mut got,
+                    lanes,
+                );
+                for i in 0..nq {
+                    // max(1e-300) keeps a zero-sum cell from turning the
+                    // assert into NaN (which would pass inverted)
+                    let rel = (got[i] - want[i]).abs() / want[i].max(1e-300);
+                    assert!(rel <= 1e-12, "nq={nq} nr={nr} d={d} i={i}: rel={rel:.2e}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_tile_stays_within_derived_f32_budget() {
+        let h = 0.5;
+        let kernel = GaussianKernel::new(h);
+        for lanes in [simd::scalar(), simd::active()] {
+            let (nq, nr, d) = (13, 40, 3);
+            let q = random(nq, d, 91);
+            let r = random(nr, d, 92);
             let w: Vec<f64> = (0..nr).map(|i| 0.5 + 0.01 * i as f64).collect();
             let mut want = vec![0.0; nq];
             reference::scalar_gauss_sums(&q, &r, &w, &kernel, &mut want);
             let qnorms = sq_norms(&q);
             let rnorms = sq_norms(&r);
+            let rnorms32: Vec<f32> = rnorms.iter().map(|&v| v as f32).collect();
             let mut scratch = Scratch::new(d);
-            scratch.load(&r, 0, nr);
-            scratch.load_weights(&w, 0, nr);
-            scratch.load_ref_norms(&rnorms, 0, nr);
+            scratch.load_f32(&r, 0, nr);
+            scratch.load_weights_f32(&w, 0, nr);
+            scratch.load_ref_norms_f32(&rnorms32, 0, nr);
             let mut got = vec![0.0; nq];
-            gauss_sums_fast_on_loaded(&mut scratch, &kernel, &q, &qnorms, 0, nq, &mut got);
+            gauss_sums_fast_f32_on_loaded(
+                &mut scratch,
+                &kernel,
+                &q,
+                &qnorms,
+                0,
+                nq,
+                &mut got,
+                lanes,
+            );
+            let max_sq = qnorms.iter().chain(rnorms.iter()).cloned().fold(0.0, f64::max);
+            let bound = crate::errorcontrol::base_case_rel_err_f32(d, h, max_sq);
             for i in 0..nq {
-                let rel = (got[i] - want[i]).abs() / want[i];
-                assert!(rel <= 1e-12, "nq={nq} nr={nr} d={d} i={i}: rel={rel:.2e}");
+                let rel = (got[i] - want[i]).abs() / want[i].max(1e-300);
+                assert!(rel <= bound, "i={i}: rel={rel:.2e} bound={bound:.2e}");
             }
         }
     }
@@ -194,11 +325,12 @@ mod tests {
         scratch.load(&r, 0, 5);
         scratch.load_weights(&w, 0, 5);
         scratch.load_ref_norms(&rnorms, 0, 5);
+        let lanes = simd::scalar();
         let mut once = vec![0.0; 2];
-        gauss_sums_fast_on_loaded(&mut scratch, &kernel, &q, &qnorms, 0, 2, &mut once);
+        gauss_sums_fast_on_loaded(&mut scratch, &kernel, &q, &qnorms, 0, 2, &mut once, lanes);
         let mut twice = vec![0.0; 2];
-        gauss_sums_fast_on_loaded(&mut scratch, &kernel, &q, &qnorms, 0, 2, &mut twice);
-        gauss_sums_fast_on_loaded(&mut scratch, &kernel, &q, &qnorms, 0, 2, &mut twice);
+        gauss_sums_fast_on_loaded(&mut scratch, &kernel, &q, &qnorms, 0, 2, &mut twice, lanes);
+        gauss_sums_fast_on_loaded(&mut scratch, &kernel, &q, &qnorms, 0, 2, &mut twice, lanes);
         for i in 0..2 {
             assert!((twice[i] - 2.0 * once[i]).abs() < 1e-14);
         }

@@ -5,6 +5,7 @@
 use std::path::Path;
 
 use crate::api::Method;
+use crate::compute::simd::{Precision, SimdMode};
 use crate::kernel::Kernel;
 use crate::util::error::{Context, Result};
 use crate::{anyhow, bail};
@@ -24,6 +25,8 @@ pub const VALID_KEYS: &[&str] = &[
     "method",
     "kernel",
     "fast-exp|fast_exp",
+    "simd",
+    "precision",
     "out",
     "config",
 ];
@@ -61,6 +64,12 @@ pub struct RunConfig {
     /// Certified fast-exp tiled base cases (default on; `false` forces
     /// the bit-exact reference path everywhere).
     pub fast_exp: bool,
+    /// SIMD dispatch for the fast tiles (`auto` = detected backend,
+    /// `off` = the bit-exact scalar table).
+    pub simd: SimdMode,
+    /// Fast-tile arithmetic precision (`f64` default; `f32` engages the
+    /// mixed-precision tile where its certificate fits the ε/4 gate).
+    pub precision: Precision,
     /// Output path for commands that write files.
     pub out: Option<String>,
 }
@@ -88,6 +97,8 @@ impl Default for RunConfig {
             method: Method::Auto,
             kernel: Kernel::Gaussian,
             fast_exp: true,
+            simd: SimdMode::Auto,
+            precision: Precision::F64,
             out: None,
         }
     }
@@ -133,6 +144,16 @@ impl RunConfig {
                     "false" | "0" | "off" | "no" => false,
                     other => bail!("fast-exp must be true/false (got {other:?})"),
                 }
+            }
+            "simd" => {
+                self.simd = SimdMode::parse(value).ok_or_else(|| {
+                    anyhow!("unknown simd mode {value:?} (valid: {})", SimdMode::VALID)
+                })?
+            }
+            "precision" => {
+                self.precision = Precision::parse(value).ok_or_else(|| {
+                    anyhow!("unknown precision {value:?} (valid: {})", Precision::VALID)
+                })?
             }
             "out" => self.out = Some(value.to_string()),
             other => bail!(
@@ -328,6 +349,36 @@ mod tests {
         assert!(!c.fast_exp);
         let msg = c.set("fast-exp", "maybe").unwrap_err().to_string();
         assert!(msg.contains("true/false"), "{msg}");
+    }
+
+    #[test]
+    fn simd_key_parses_and_rejects_with_listing() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.simd, SimdMode::Auto, "auto must be the default");
+        c.set("simd", "off").unwrap();
+        assert_eq!(c.simd, SimdMode::Off);
+        c.set("simd", "SCALAR").unwrap();
+        assert_eq!(c.simd, SimdMode::Off);
+        c.set("simd", "auto").unwrap();
+        assert_eq!(c.simd, SimdMode::Auto);
+        // an unknown value is rejected at parse time (never a silent
+        // auto default), with every valid name in the message
+        let msg = c.set("simd", "avx512").unwrap_err().to_string();
+        assert!(msg.contains("auto") && msg.contains("off"), "{msg}");
+        assert_eq!(c.simd, SimdMode::Auto, "failed set must not change the value");
+    }
+
+    #[test]
+    fn precision_key_parses_and_rejects_with_listing() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.precision, Precision::F64, "f64 must be the default");
+        c.set("precision", "f32").unwrap();
+        assert_eq!(c.precision, Precision::F32);
+        c.set("precision", "F64").unwrap();
+        assert_eq!(c.precision, Precision::F64);
+        let msg = c.set("precision", "f16").unwrap_err().to_string();
+        assert!(msg.contains("f64") && msg.contains("f32"), "{msg}");
+        assert_eq!(c.precision, Precision::F64, "failed set must not change the value");
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! bench harness.
 
 use crate::algo::RunStats;
+use crate::compute::simd::{Precision, SimdMode};
 use crate::data::Dataset;
 use crate::kernel::Kernel;
 
@@ -37,6 +38,13 @@ pub struct SweepConfig {
     /// (`true` = the default production path; `false` = the bit-exact
     /// reference configuration, what `--fast-exp false` requests).
     pub fast_exp: bool,
+    /// SIMD dispatch for the fast base cases (`--simd`): `Auto` = the
+    /// per-process detected backend, `Off` = the bit-exact scalar table.
+    pub simd: SimdMode,
+    /// Fast-tile arithmetic precision (`--precision`): `F32` engages
+    /// the mixed-precision tile only where its derived certificate fits
+    /// the ε/4 gate, demoting to f64 elsewhere — cells stay ε-verified.
+    pub precision: Precision,
     /// Kernel the sweep evaluates. Non-Gaussian kernels route every
     /// cell through the session's sum-of-Gaussians layer, truth comes
     /// from the exhaustive true-kernel sum, and cells are verified

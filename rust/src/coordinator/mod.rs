@@ -59,6 +59,8 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepResult {
                 leaf_size: cfg.leaf_size,
                 threads: cfg.workers,
                 fast_exp: cfg.fast_exp,
+                simd: cfg.simd,
+                precision: cfg.precision,
                 kernel: cfg.kernel,
                 // never evict a truth this sweep will revisit: each of
                 // the 7 algorithm rows verifies against every bandwidth
@@ -208,6 +210,7 @@ fn run_cell(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compute::simd::{Precision, SimdMode};
     use crate::data;
     use crate::kde::bandwidth::silverman;
     use crate::kernel::Kernel;
@@ -224,6 +227,8 @@ mod tests {
             workers: 2,
             leaf_size: 16,
             fast_exp: true,
+            simd: SimdMode::Auto,
+            precision: Precision::F64,
             kernel: Kernel::Gaussian,
         }
     }
@@ -292,6 +297,8 @@ mod tests {
             workers: 2,
             leaf_size: 16,
             fast_exp: true,
+            simd: SimdMode::Auto,
+            precision: Precision::F64,
             kernel: Kernel::Gaussian,
         };
         let res = run_sweep(&cfg);
@@ -375,6 +382,8 @@ mod tests {
             workers: 1,
             leaf_size: 16,
             fast_exp: true,
+            simd: SimdMode::Auto,
+            precision: Precision::F64,
             kernel: Kernel::Gaussian,
         };
         let res = run_sweep(&cfg);
@@ -397,6 +406,8 @@ mod tests {
             workers: 2,
             leaf_size: 16,
             fast_exp: true,
+            simd: SimdMode::Auto,
+            precision: Precision::F64,
             kernel: Kernel::Laplace,
         };
         let res = run_sweep(&cfg);

@@ -20,6 +20,8 @@
 //! (G_Q^min / G_Q^max deltas, far-field estimates G_Q^est) that the
 //! dual-tree algorithms maintain per query node.
 
+use crate::compute::simd::Precision;
+
 /// Decision returned by the token rule for one candidate prune.
 #[derive(Copy, Clone, Debug, PartialEq)]
 pub enum PruneDecision {
@@ -136,6 +138,10 @@ pub struct EpsSplit {
     pub base_rel_err: f64,
     /// Whether the tiled fast kernel is admitted for this evaluate.
     pub fast: bool,
+    /// Whether the admitted fast kernel may additionally store the
+    /// reference lanes, weights and value tile in f32 (implies `fast`;
+    /// its larger certified bound is what `base_rel_err` then carries).
+    pub f32_tile: bool,
 }
 
 /// Certified per-pair relative error of the fast tiled base case at
@@ -161,6 +167,35 @@ pub fn base_case_rel_err(dim: usize, h: f64, max_sq_norm: f64) -> f64 {
     let dsq = 4.0 * (dim as f64 + 3.0) * f64::EPSILON * max_sq_norm;
     let ratio = dsq / (2.0 * h * h);
     crate::compute::fastexp::EXP_MAX_REL_ERR + 1.2 * ratio
+}
+
+/// Certified per-pair relative error of the *mixed-precision* tiled
+/// base case: reference coordinates, norms, weights and the value tile
+/// stored as f32, dot products and exponent assembly in f32, exp and
+/// accumulation in f64 (see `compute::tile::gauss_sums_fast_f32_on_loaded`).
+///
+/// Same shape as [`base_case_rel_err`], with two extra charges:
+///
+/// * the squared-distance perturbation now runs at `ε_f32`
+///   (`f32::EPSILON`, ≈ 2u₃₂) instead of `f64::EPSILON`, and storing
+///   each coordinate as f32 perturbs every norm/dot *input*
+///   relatively by ≤ u₃₂ before any arithmetic — folded in by widening
+///   the γ-style constant from 4(D+3) to 4(D+5); the kernel turns the
+///   resulting `|Δsq| ≤ 4(D+5)·ε_f32·max‖x‖²` into a relative factor
+///   via the same `e^x − 1 ≤ 1.2x` linearization (valid under the
+///   [`split_epsilon_prec`] gate `bound ≤ ε/4 ≤ 0.25`);
+/// * a flat `2·ε_f32` for rounding each weight to f32 (the per-pair
+///   products `w_j·v_j` and the sum itself stay f64).
+///
+/// At moderate bandwidths on unit-scale data this lands around 1e-4,
+/// so f32 tiles are affordable at ε = 1e-2 but are rejected (falling
+/// back to the certified f64 fast path) at ε = 1e-4 — exactly the
+/// automatic-demotion behavior the gate is for.
+pub fn base_case_rel_err_f32(dim: usize, h: f64, max_sq_norm: f64) -> f64 {
+    let eps32 = f32::EPSILON as f64;
+    let dsq = 4.0 * (dim as f64 + 5.0) * eps32 * max_sq_norm;
+    let ratio = dsq / (2.0 * h * h);
+    crate::compute::fastexp::EXP_MAX_REL_ERR + 2.0 * eps32 + 1.2 * ratio
 }
 
 /// Decide whether this evaluate may run the fast tiled base case, and
@@ -194,10 +229,45 @@ pub fn split_epsilon(
     if fast_requested {
         let base = base_case_rel_err(dim, h, max_sq_norm);
         if base <= 0.25 * eps {
-            return EpsSplit { tree_eps: eps - base, base_rel_err: base, fast: true };
+            return EpsSplit {
+                tree_eps: eps - base,
+                base_rel_err: base,
+                fast: true,
+                f32_tile: false,
+            };
         }
     }
-    EpsSplit { tree_eps: eps, base_rel_err: 0.0, fast: false }
+    EpsSplit { tree_eps: eps, base_rel_err: 0.0, fast: false, f32_tile: false }
+}
+
+/// Precision-aware front end to [`split_epsilon`]: when the caller
+/// requested `precision = f32` (and the fast path at all), first try to
+/// reserve the larger [`base_case_rel_err_f32`] bound under the same
+/// ≤ ε/4 admission gate. If the f32 certificate is affordable the split
+/// carries it (`f32_tile = true`) and the tree budget visibly shrinks
+/// by that amount; otherwise the request *demotes* — first to the f64
+/// fast split, then (tiny h) to the bit-exact base case — so a `f32`
+/// request is always ε-sound, never best-effort.
+pub fn split_epsilon_prec(
+    eps: f64,
+    fast_requested: bool,
+    precision: Precision,
+    dim: usize,
+    h: f64,
+    max_sq_norm: f64,
+) -> EpsSplit {
+    if precision == Precision::F32 && fast_requested {
+        let base = base_case_rel_err_f32(dim, h, max_sq_norm);
+        if base <= 0.25 * eps {
+            return EpsSplit {
+                tree_eps: eps - base,
+                base_rel_err: base,
+                fast: true,
+                f32_tile: true,
+            };
+        }
+    }
+    split_epsilon(eps, fast_requested, dim, h, max_sq_norm)
 }
 
 // ---- ε-budget split for sum-of-Gaussians kernels ----
@@ -416,7 +486,8 @@ mod tests {
         assert_eq!(s.tree_eps, 1e-4 - s.base_rel_err);
         // fast not requested: untouched budget
         let off = split_epsilon(1e-4, false, 3, 0.3, 3.0);
-        assert_eq!(off, EpsSplit { tree_eps: 1e-4, base_rel_err: 0.0, fast: false });
+        let want = EpsSplit { tree_eps: 1e-4, base_rel_err: 0.0, fast: false, f32_tile: false };
+        assert_eq!(off, want);
         // tiny bandwidth: the 1/h² cancellation bound exceeds ε/4, so
         // the evaluate falls back to the exact base case on its own
         let tiny = split_epsilon(1e-6, true, 3, 1e-7, 3.0);
@@ -426,6 +497,31 @@ mod tests {
         assert!(base_case_rel_err(3, 0.01, 3.0) > base_case_rel_err(3, 0.1, 3.0));
         assert!(base_case_rel_err(3, 0.1, 300.0) > base_case_rel_err(3, 0.1, 3.0));
         assert!(base_case_rel_err(3, 0.1, 3.0) >= crate::compute::fastexp::EXP_MAX_REL_ERR);
+    }
+
+    #[test]
+    fn split_epsilon_prec_charges_f32_and_demotes() {
+        // moderate ε: the f32 certificate is affordable and its charge
+        // is visible as the exact reservation taken from the tree budget
+        let s = split_epsilon_prec(1e-2, true, Precision::F32, 3, 0.3, 3.0);
+        assert!(s.fast && s.f32_tile);
+        assert_eq!(s.base_rel_err, base_case_rel_err_f32(3, 0.3, 3.0));
+        assert_eq!(s.tree_eps, 1e-2 - s.base_rel_err);
+        assert!(s.base_rel_err <= 0.25e-2);
+        // tight ε: the f32 bound (~1e-4 here) exceeds ε/4, so the
+        // request demotes to the plain f64 fast split
+        let d = split_epsilon_prec(1e-4, true, Precision::F32, 3, 0.3, 3.0);
+        assert!(d.fast && !d.f32_tile);
+        assert_eq!(d, split_epsilon(1e-4, true, 3, 0.3, 3.0));
+        // tiny bandwidth: demotes all the way to the bit-exact base case
+        let tiny = split_epsilon_prec(1e-6, true, Precision::F32, 3, 1e-7, 3.0);
+        assert!(!tiny.fast && !tiny.f32_tile);
+        // an f64-precision request is exactly the classic split
+        let f = split_epsilon_prec(1e-2, true, Precision::F64, 3, 0.3, 3.0);
+        assert_eq!(f, split_epsilon(1e-2, true, 3, 0.3, 3.0));
+        // the f32 bound dominates the f64 one and keeps its 1/h² shape
+        assert!(base_case_rel_err_f32(3, 0.3, 3.0) > base_case_rel_err(3, 0.3, 3.0));
+        assert!(base_case_rel_err_f32(3, 0.05, 3.0) > base_case_rel_err_f32(3, 0.5, 3.0));
     }
 
     #[test]

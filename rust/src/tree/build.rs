@@ -37,6 +37,10 @@ pub struct KdTree {
     /// once here so the tiled base case's norms-trick distances never
     /// rescan coordinates (see `compute::tile`).
     sq_norms: Vec<f64>,
+    /// f32 shadow of `sq_norms` (rounded once at build) for the
+    /// mixed-precision tile; its representation error is part of the
+    /// certified `errorcontrol::base_case_rel_err_f32` bound.
+    sq_norms32: Vec<f32>,
     /// max over `sq_norms` — the magnitude bound
     /// `errorcontrol::base_case_rel_err` certifies the norms-trick
     /// cancellation against.
@@ -57,8 +61,9 @@ impl KdTree {
         let reordered = points.select_rows(&perm);
         let rw: Vec<f64> = perm.iter().map(|&i| weights[i]).collect();
         let sq_norms = crate::compute::tile::sq_norms(&reordered);
+        let sq_norms32: Vec<f32> = sq_norms.iter().map(|&s| s as f32).collect();
         let max_sq_norm = sq_norms.iter().cloned().fold(0.0, f64::max);
-        KdTree { nodes, perm, points: reordered, weights: rw, sq_norms, max_sq_norm }
+        KdTree { nodes, perm, points: reordered, weights: rw, sq_norms, sq_norms32, max_sq_norm }
     }
 
     /// Root node index (always 0).
@@ -104,6 +109,12 @@ impl KdTree {
     #[inline]
     pub fn sq_norms(&self) -> &[f64] {
         &self.sq_norms
+    }
+
+    /// f32 shadow of [`Self::sq_norms`] for the mixed-precision tile.
+    #[inline]
+    pub fn sq_norms_f32(&self) -> &[f32] {
+        &self.sq_norms32
     }
 
     /// Largest cached squared norm — feeds the certified norms-trick

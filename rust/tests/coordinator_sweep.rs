@@ -2,6 +2,7 @@
 //! algorithms including the FGT τ-halving and IFGT K-doubling loops) on
 //! a small dataset, with verified cells and paper-style rendering.
 
+use fastgauss::api::{Precision, SimdMode};
 use fastgauss::coordinator::{report, run_sweep, AlgoSpec, CellOutcome, SweepConfig};
 use fastgauss::data;
 use fastgauss::kde::bandwidth::silverman;
@@ -19,6 +20,8 @@ fn base_cfg(name: &str, n: usize, mult: Vec<f64>, algos: Vec<AlgoSpec>) -> Sweep
         workers: 2,
         leaf_size: 24,
         fast_exp: true,
+        simd: SimdMode::Auto,
+        precision: Precision::F64,
         kernel: Kernel::Gaussian,
     }
 }

@@ -16,7 +16,7 @@
 //! inherently timing-dependent at any pool width (documented in
 //! DESIGN.md and `SweepConfig::workers`).
 
-use fastgauss::api::{EvalRequest, Method, PrepareOptions, Session};
+use fastgauss::api::{EvalRequest, Method, Precision, PrepareOptions, Session, SimdMode};
 use fastgauss::coordinator::{run_sweep, AlgoSpec, SweepConfig};
 use fastgauss::data;
 use fastgauss::kde::bandwidth::silverman;
@@ -91,6 +91,8 @@ fn sweep_tables_bit_identical_across_workers_1_2_8() {
             workers,
             leaf_size: 16,
             fast_exp: true,
+            simd: SimdMode::Auto,
+            precision: Precision::F64,
             kernel: Kernel::Gaussian,
         })
     };

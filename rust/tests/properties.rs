@@ -6,6 +6,7 @@ use fastgauss::algo::dualtree::{run_dualtree, DualTreeConfig, SeriesKind};
 use fastgauss::algo::{max_relative_error, naive::Naive, GaussSum, GaussSumProblem};
 use fastgauss::bounds::odp::OdpBounds;
 use fastgauss::bounds::NodeGeometry;
+use fastgauss::compute::simd::{Precision, SimdMode};
 use fastgauss::geometry::{linf_dist, Matrix};
 use fastgauss::hermite::{
     accumulate_farfield, eval_farfield, eval_local, h2h, l2l, HermiteTable, PairTable,
@@ -175,6 +176,10 @@ fn prop_error_guarantee_fuzz() {
             // fuzz both base-case kernels: the guarantee must hold with
             // the certified fast path and the bit-exact one alike
             fast_exp: g.bool(),
+            simd: if g.bool() { SimdMode::Auto } else { SimdMode::Off },
+            // f32 requests must demote themselves whenever the derived
+            // certificate does not fit the ε/4 admission gate
+            precision: if g.bool() { Precision::F32 } else { Precision::F64 },
         };
         let problem = GaussSumProblem::kde(&pts, h, eps);
         let exact = Naive::new().run(&problem).unwrap().sums;

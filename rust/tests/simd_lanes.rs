@@ -1,0 +1,185 @@
+//! Integration suite for the vector-lane dispatch and the certified
+//! mixed-precision tile (PR 7).
+//!
+//! * `exp_block` — active table vs libm truth on 10⁶ random inputs
+//!   spanning the certified domain plus the adversarial seams (every
+//!   half-ln2 reduction boundary ± 1 ulp, the underflow edge, ±0),
+//!   streamed through odd-sized blocks so lane tails are exercised.
+//! * end-to-end lane equivalence — `SimdMode::Auto` and
+//!   `SimdMode::Off` sessions both hold ε on the paper datasets, and
+//!   agree bitwise whenever runtime detection resolves Auto to the
+//!   scalar table (the forced-off / no-AVX2 case).
+//! * the f32 tile — ε-correct through the session at ε ∈ {1e-2, 1e-4}
+//!   for Naive, DFDO, DITO and FGT, with `split_epsilon_prec`'s ε/4
+//!   admission gate observed through the `f32_base_cases` routing
+//!   counter: engaged at the loose ε, demoted to the f64 fast tile at
+//!   the tight one.
+//! * pool widths — batch answers with SIMD *and* f32 on are bitwise
+//!   identical across worker counts {1, 2, 8} (the fixed task
+//!   decomposition of PR 5 survives the lane kernels).
+
+use fastgauss::algo::{max_relative_error, naive::Naive, GaussSum, GaussSumProblem};
+use fastgauss::api::{EvalRequest, Method, Precision, PrepareOptions, Session, SimdMode};
+use fastgauss::compute::fastexp::{EXP_MAX_REL_ERR, EXP_UNDERFLOW_X};
+use fastgauss::compute::simd::{self, Backend};
+use fastgauss::data;
+use fastgauss::kde::bandwidth::silverman;
+use fastgauss::util::Pcg32;
+
+/// A nonzero float and its two 1-ulp neighbours — the adversarial
+/// inputs for range-reduction seams.
+fn neighbors(x: f64) -> [f64; 3] {
+    let b = x.to_bits();
+    [x, f64::from_bits(b + 1), f64::from_bits(b.wrapping_sub(1))]
+}
+
+#[test]
+fn exp_block_certified_on_a_million_random_and_seam_inputs() {
+    let mut rng = Pcg32::new(20_260_808);
+    let mut xs: Vec<f64> = (0..1_000_000).map(|_| -750.0 + 751.0 * rng.uniform()).collect();
+    // every half-ln2 multiple in (and just below) the certified
+    // domain, ± 1 ulp: the `k = round(x/ln2)` reduction boundaries
+    // where the polynomial argument |r| peaks
+    let half_ln2 = 0.5 * std::f64::consts::LN_2;
+    for m in -2046..0 {
+        xs.extend(neighbors(m as f64 * half_ln2));
+    }
+    xs.extend(neighbors(EXP_UNDERFLOW_X));
+    xs.extend([0.0, -0.0, 1.0, -1e-300, -709.0, -745.0, -750.0]);
+
+    let mut got_active = xs.clone();
+    let mut got_scalar = xs.clone();
+    // odd block size: every call ends in a lane tail on any backend
+    for chunk in got_active.chunks_mut(1021) {
+        (simd::active().exp_block)(chunk);
+    }
+    (simd::scalar().exp_block)(&mut got_scalar);
+    for (j, &x) in xs.iter().enumerate() {
+        for (label, got) in [("active", got_active[j]), ("scalar", got_scalar[j])] {
+            if x < EXP_UNDERFLOW_X {
+                assert_eq!(got, 0.0, "{label} x={x}: underflow tail must be exactly 0");
+            } else {
+                let truth = x.exp();
+                let rel = (got - truth).abs() / truth;
+                assert!(rel <= EXP_MAX_REL_ERR, "{label} x={x}: rel={rel:.2e}");
+            }
+        }
+    }
+}
+
+/// Auto and Off sessions both hold the ε guarantee; Off pins the
+/// scalar table (recorded in the stats), and when detection resolves
+/// Auto to scalar anyway the two runs must be bitwise identical —
+/// SimdMode::Off *is* the bit-exact reference, not a different
+/// algorithm.
+#[test]
+fn auto_and_off_sessions_hold_eps_and_off_pins_the_scalar_table() {
+    let eps = 1e-2;
+    let h = 0.25;
+    for name in ["astro2d", "galaxy3d"] {
+        let ds = data::by_name(name, 350, 11).unwrap();
+        let problem = GaussSumProblem::kde(&ds.points, h, eps);
+        let truth = Naive::new().run(&problem).unwrap().sums;
+        let run = |mode: SimdMode| {
+            let opts = PrepareOptions { simd: mode, ..Default::default() };
+            let session = Session::prepare(&ds.points, opts);
+            [Method::Dfdo, Method::Dito].map(|method| {
+                let req = EvalRequest::kde(h, eps).with_method(method);
+                session.evaluate(&req).unwrap()
+            })
+        };
+        let auto = run(SimdMode::Auto);
+        let off = run(SimdMode::Off);
+        for (a, o) in auto.iter().zip(&off) {
+            let rel_a = max_relative_error(&a.sums, &truth);
+            let rel_o = max_relative_error(&o.sums, &truth);
+            assert!(rel_a <= eps * (1.0 + 1e-9), "{name} {} auto: {rel_a:.2e}", a.method);
+            assert!(rel_o <= eps * (1.0 + 1e-9), "{name} {} off: {rel_o:.2e}", o.method);
+            assert_eq!(o.stats.simd_backend, "scalar", "{name}: Off must pin the scalar table");
+            assert!(!a.stats.simd_backend.is_empty(), "{name}: fast run must record a backend");
+            if simd::active().backend == Backend::Scalar {
+                assert_eq!(a.sums, o.sums, "{name}: scalar-resolved Auto diverged from Off");
+            }
+        }
+    }
+}
+
+/// The mixed-precision tile end to end: every answer stays inside ε at
+/// both tolerances, and the ε/4 admission gate routes exactly as the
+/// derived bound predicts — at h = 0.2 on the unit-cube datasets the
+/// f32 certificate is ≈1e-4, so it fits ε = 1e-2 (tile engages) and
+/// fails ε = 1e-4 (silent demotion to the f64 fast tile).
+#[test]
+fn f32_mode_is_eps_correct_and_gated_by_the_reserved_budget() {
+    let h = 0.2;
+    for name in ["astro2d", "galaxy3d"] {
+        let ds = data::by_name(name, 400, 42).unwrap();
+        let problem = GaussSumProblem::kde(&ds.points, h, 1e-2);
+        let truth = Naive::new().run(&problem).unwrap().sums;
+        let opts = PrepareOptions { precision: Precision::F32, ..Default::default() };
+        let session = Session::prepare(&ds.points, opts);
+        for eps in [1e-2, 1e-4] {
+            for method in [Method::Naive, Method::Dfdo, Method::Dito, Method::Fgt] {
+                let req = EvalRequest::kde(h, eps).with_method(method);
+                let ev = match session.evaluate(&req) {
+                    Ok(ev) => ev,
+                    // FGT tuning is ε-verified: an unreachable tolerance
+                    // is reported, never a silently wrong answer
+                    Err(_) if method == Method::Fgt => continue,
+                    Err(e) => panic!("{name} {method} ε={eps}: {e}"),
+                };
+                let rel = max_relative_error(&ev.sums, &truth);
+                assert!(rel <= eps * (1.0 + 1e-9), "{name} {} ε={eps}: rel={rel:.2e}", ev.method);
+                if method != Method::Dfdo {
+                    continue;
+                }
+                if eps == 1e-2 {
+                    assert!(ev.stats.f32_base_cases > 0, "{name}: f32 tile never engaged");
+                    let backend = ev.stats.simd_backend;
+                    assert!(!backend.is_empty(), "{name}: backend unrecorded on the fast path");
+                } else {
+                    assert_eq!(ev.stats.f32_base_cases, 0, "{name}: gate failed to demote");
+                    assert!(ev.stats.fast_base_cases > 0, "{name}: f64 fast tile not used");
+                }
+            }
+        }
+    }
+}
+
+/// Worker counts {1, 2, 8} with SIMD and the f32 tile both on: sums,
+/// routing counters and the recorded backend are bitwise identical —
+/// the lane kernels live inside the fixed task decomposition, so
+/// scheduling still cannot change a single bit.
+#[test]
+fn batch_answers_bitwise_invariant_across_pool_widths_with_lanes_on() {
+    let data = data::by_name("astro2d", 500, 17).unwrap().points;
+    let h_star = silverman(&data);
+    let requests: Vec<EvalRequest<'static>> = [0.5, 1.0, 2.0]
+        .iter()
+        .flat_map(|&m| {
+            [Method::Dfdo, Method::Dito]
+                .into_iter()
+                .map(move |method| EvalRequest::kde(m * h_star, 1e-2).with_method(method))
+        })
+        .collect();
+    let prep = |threads: usize| {
+        let opts = PrepareOptions {
+            threads,
+            simd: SimdMode::Auto,
+            precision: Precision::F32,
+            ..Default::default()
+        };
+        Session::prepare(&data, opts)
+    };
+    let base = prep(1);
+    let want: Vec<_> = requests.iter().map(|r| base.evaluate(r).unwrap()).collect();
+    for threads in [2usize, 8] {
+        let session = prep(threads);
+        for (got, want) in session.evaluate_batch(&requests).into_iter().zip(&want) {
+            let got = got.unwrap();
+            assert_eq!(got.sums, want.sums, "threads={threads}: lanes broke pool invariance");
+            assert_eq!(got.stats.f32_base_cases, want.stats.f32_base_cases);
+            assert_eq!(got.stats.simd_backend, want.stats.simd_backend);
+        }
+    }
+}
