@@ -79,12 +79,15 @@ impl<'a> CostModel<'a> {
         if c == c_direct {
             Choice::Direct
         } else if c == c_dh {
+            // lint: allow(no-panic): a winning finite cost implies the candidate was computed
             let (p, err) = dh.unwrap();
             Choice::DH { p, err }
         } else if c == c_dl {
+            // lint: allow(no-panic): a winning finite cost implies the candidate was computed
             let (p, err) = dl.unwrap();
             Choice::DL { p, err }
         } else {
+            // lint: allow(no-panic): a winning finite cost implies the candidate was computed
             let (p, err) = h2l.unwrap();
             Choice::H2L { p, err }
         }

@@ -297,6 +297,20 @@ struct SeriesPack<'a> {
     p_limit: usize,
 }
 
+impl<'a> Ctx<'a> {
+    /// The series pack of an expansion-enabled variant. Every caller
+    /// sits under `if X::ENABLED`, and construction populates the pack
+    /// for exactly those variants — reaching a `None` here means the
+    /// variant/config pairing is broken, not a user error.
+    fn series(&self) -> &SeriesPack<'a> {
+        match self.series.as_ref() {
+            Some(pack) => pack,
+            // lint: allow(no-panic): X::ENABLED without moments is a construction bug; abort loudly
+            None => panic!("series moments missing for expansion variant"),
+        }
+    }
+}
+
 /// Mutable per-task state, recycled through a per-evaluate free list
 /// (tasks own disjoint query subtrees, so a reused instance's stale
 /// slots are never read).
@@ -862,7 +876,7 @@ fn subtree_roots(qt: &KdTree, want: usize) -> Vec<usize> {
         }
         match best {
             Some((pos, _)) => {
-                let (l, r) = qt.children(roots[pos]).unwrap();
+                let (l, r) = qt.children_of_internal(roots[pos]);
                 roots[pos] = l;
                 roots.push(r);
             }
@@ -950,7 +964,7 @@ fn recurse<X: Expansion, P: PruneRule>(
     // ---- FMM-type prune (series variants only; compiled out when
     //      X::ENABLED is false) ----
     if X::ENABLED {
-        let series = ctx.series.as_ref().expect("series moments for expansion variant");
+        let series = ctx.series();
         if gq_min > 0.0 {
             let budget_w = wr + if P::USE_TOKENS { st.ledger.tokens[q] } else { 0.0 };
             let max_err = ctx.eps * budget_w * gq_min / ctx.total_w;
@@ -1018,12 +1032,14 @@ fn recurse<X: Expansion, P: PruneRule>(
                         st.stats.h2l_prunes += 1;
                         err
                     }
+                    // lint: allow(no-panic): the prune arm only runs when bestMethod chose a series form
                     Choice::Direct => unreachable!(),
                 };
                 // account the accepted error against the ledger
                 match P::decide(err, wr, st.ledger.tokens[q], gq_min, ctx.eps, ctx.total_w) {
                     PruneDecision::Accept { token_delta } => apply_tokens(st, q, token_delta),
                     // feasibility guaranteed by max_err construction
+                    // lint: allow(no-panic): feasibility is guaranteed by the max_err construction above
                     PruneDecision::Reject => unreachable!("bestMethod returned infeasible"),
                 }
                 st.ledger.node_min[q] += dl;
@@ -1058,23 +1074,23 @@ fn recurse<X: Expansion, P: PruneRule>(
         (true, false) => {
             // split reference side, nearer child first (tightens G_Q^min
             // before the farther child is considered)
-            let (a, b) = ctx.rt.children(r).unwrap();
+            let (a, b) = ctx.rt.children_of_internal(r);
             let (near, far) = order_by_dist(ctx.qt.node(q), ctx.rt, a, b);
             recurse::<X, P>(ctx, st, q, near, inherited_min);
             recurse::<X, P>(ctx, st, q, far, inherited_min);
         }
         (false, true) => {
-            let (l, rr) = ctx.qt.children(q).unwrap();
+            let (l, rr) = ctx.qt.children_of_internal(q);
             let inh = inherited_min + st.ledger.node_min[q];
             recurse::<X, P>(ctx, st, l, r, inh);
             recurse::<X, P>(ctx, st, rr, r, inh);
             st.ledger.refresh_below_from_children(q, l, rr);
         }
         (false, false) => {
-            let (ql, qr) = ctx.qt.children(q).unwrap();
+            let (ql, qr) = ctx.qt.children_of_internal(q);
             let inh = inherited_min + st.ledger.node_min[q];
             for qc in [ql, qr] {
-                let (a, b) = ctx.rt.children(r).unwrap();
+                let (a, b) = ctx.rt.children_of_internal(r);
                 let (near, far) = order_by_dist(ctx.qt.node(qc), ctx.rt, a, b);
                 recurse::<X, P>(ctx, st, qc, near, inh);
                 recurse::<X, P>(ctx, st, qc, far, inh);
@@ -1197,7 +1213,7 @@ fn postprocess_from<X: Expansion>(
             st.ledger.node_est[l] += est;
             st.ledger.node_est[r] += est;
             if X::ENABLED {
-                let series = ctx.series.as_ref().expect("series moments for expansion variant");
+                let series = ctx.series();
                 let set = series.moments.set();
                 let pairs = series.moments.pairs();
                 let scale = series.moments.scale();
@@ -1226,8 +1242,7 @@ fn postprocess_from<X: Expansion>(
             for qi in qt.node(q).begin..qt.node(q).end {
                 let mut v = st.ledger.point_est[qi] + node_est;
                 if X::ENABLED {
-                    let series =
-                        ctx.series.as_ref().expect("series moments for expansion variant");
+                    let series = ctx.series();
                     let set = series.moments.set();
                     let lc = &st.lcoeffs[q * st.set_len..(q + 1) * st.set_len];
                     v += eval_local(

@@ -313,7 +313,9 @@ impl Fgt {
                         } else {
                             microkernel::sqdist_soa(qrow, soa, m, m, &mut sqbuf);
                             microkernel::gauss_in_place(&kernel, &mut sqbuf[..m]);
-                            *sum += microkernel::weighted_sum(wblk, &sqbuf[..m]);
+                            // scalar table = the microkernel pointer:
+                            // the exact branch stays bit-exact
+                            *sum += (simd::scalar().weighted_sum)(wblk, &sqbuf[..m]);
                         }
                         stats.base_point_pairs += m as u64;
                     } else {

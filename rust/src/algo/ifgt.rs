@@ -80,7 +80,9 @@ pub fn k_center(points: &Matrix, k: usize, seed: u64) -> (Vec<usize>, Vec<usize>
             break;
         }
         // next center = farthest point from all current centers
-        let far = (0..n).max_by(|&a, &b| best_d[a].partial_cmp(&best_d[b]).unwrap()).unwrap();
+        // (total_cmp: distances are never NaN, and an empty point set
+        // simply ends the seeding loop)
+        let Some(far) = (0..n).max_by(|&a, &b| best_d[a].total_cmp(&best_d[b])) else { break };
         if best_d[far] == 0.0 {
             break; // fewer distinct points than k
         }

@@ -582,6 +582,7 @@ impl<'d> Session<'d> {
             Method::Naive => self.eval_naive(req),
             Method::Fgt => self.eval_fgt(req),
             Method::Ifgt => self.eval_ifgt(req),
+            // lint: allow(no-panic): resolve() maps Auto to a concrete method before dispatch
             Method::Auto => unreachable!("resolve() returns a concrete method"),
             dual => self.eval_dualtree(dual, req),
         }
@@ -622,8 +623,10 @@ impl<'d> Session<'d> {
     ) -> Result<(Arc<Vec<f64>>, f64, bool), AlgoError> {
         self.exact_sums_with(h, || {
             let problem = self.mono_problem(h, epsilon);
-            let (res, secs) =
-                time_it(|| Naive::new().run(&problem).expect("exhaustive run cannot fail"));
+            let (res, secs) = time_it(|| {
+                // lint: allow(no-panic): the exhaustive reference on a prepared session is total
+                Naive::new().run(&problem).expect("exhaustive run cannot fail")
+            });
             (res.sums, secs)
         })
     }
@@ -717,6 +720,7 @@ impl<'d> Session<'d> {
     ) -> Result<Evaluation, AlgoError> {
         let mut cfg = method
             .dual_tree_config(self.leaf_size, req.plimit)
+            // lint: allow(no-panic): evaluate's match dispatches only dual-tree methods here
             .expect("eval_dualtree called with a dual-tree method");
         cfg.fast_exp = self.fast_exp;
         cfg.simd = self.simd;
@@ -895,8 +899,9 @@ impl<'d> Session<'d> {
         stats.total_secs = fit_secs + batch_secs;
         let method = components
             .iter()
-            .max_by(|a, b| a.weight.partial_cmp(&b.weight).expect("weights are finite"))
+            .max_by(|a, b| a.weight.total_cmp(&b.weight))
             .map(|c| c.method)
+            // lint: allow(no-panic): fit() never returns an empty decomposition
             .expect("a fitted decomposition has at least one term");
         let total_weight = match req.weights {
             Some(w) => w.iter().sum(),
@@ -956,8 +961,10 @@ impl<'d> Session<'d> {
             }
             Ok((sums, secs))
         } else {
-            let (res, secs) =
-                time_it(|| Naive::new().run(problem).expect("exhaustive run cannot fail"));
+            let (res, secs) = time_it(|| {
+                // lint: allow(no-panic): the exhaustive reference on a prepared session is total
+                Naive::new().run(problem).expect("exhaustive run cannot fail")
+            });
             Ok((Arc::new(res.sums), secs))
         }
     }

@@ -187,6 +187,7 @@ fn old_model_batch(
     let slots: Vec<Mutex<Option<Vec<f64>>>> =
         (0..requests.len()).map(|_| Mutex::new(None)).collect();
     let next = AtomicUsize::new(0);
+    // lint: allow(raw-thread): this IS the pre-pool "old model" being benchmarked against the pool
     std::thread::scope(|scope| {
         for _ in 0..workers {
             let slots = &slots;

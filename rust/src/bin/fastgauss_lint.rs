@@ -1,0 +1,37 @@
+//! Tier-1 CI gate: run the repo-native invariant linter over
+//! `rust/src/**` and fail on any finding. See [`fastgauss::lint`] for
+//! the five rule families and the waiver syntax.
+//!
+//! Usage: `cargo run --bin fastgauss_lint [repo-root]` — the root
+//! defaults to `CARGO_MANIFEST_DIR` (i.e. `cargo run` from anywhere
+//! in the repo just works), falling back to the current directory.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use fastgauss::lint;
+
+fn main() -> ExitCode {
+    let default_root = std::env::var_os("CARGO_MANIFEST_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("."));
+    let root = std::env::args_os().nth(1).map(PathBuf::from).unwrap_or(default_root);
+    match lint::lint_tree(&root) {
+        Ok((files, findings)) => {
+            for finding in &findings {
+                eprintln!("{finding}");
+            }
+            if findings.is_empty() {
+                println!("fastgauss-lint: {files} files checked, 0 findings");
+                ExitCode::SUCCESS
+            } else {
+                eprintln!("fastgauss-lint: {files} files checked, {} findings", findings.len());
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("fastgauss-lint: cannot walk {}: {e}", root.display());
+            ExitCode::FAILURE
+        }
+    }
+}

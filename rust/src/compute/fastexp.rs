@@ -180,7 +180,10 @@ mod tests {
         let ulp_up = |x: f64| f64::from_bits(x.to_bits() - 1); // toward 0 for negative x
         let ulp_down = |x: f64| f64::from_bits(x.to_bits() + 1);
         let ln2 = std::f64::consts::LN_2;
-        for m in 1..1000 {
+        // under the interpreter, sample the seams instead of walking
+        // all of them — the full sweep runs on the native CI legs
+        let step = if cfg!(miri) { 37 } else { 1 };
+        for m in (1..1000).step_by(step) {
             let x = -(m as f64) * 0.5 * ln2;
             assert!(rel_err(x) <= EXP_MAX_REL_ERR, "m={m}");
             assert!(rel_err(ulp_up(x)) <= EXP_MAX_REL_ERR, "m={m}+ulp");

@@ -4,6 +4,7 @@ use crate::geometry::Matrix;
 use crate::kernel::GaussianKernel;
 
 use super::microkernel;
+use super::simd;
 use super::tile::QUERY_TILE;
 use super::BLOCK;
 
@@ -240,8 +241,12 @@ impl Scratch {
     ///
     /// [`load_ref_norms`]: Scratch::load_ref_norms
     pub fn sqdist_into_via_norms(&mut self, q: &[f64], qnorm: f64) -> &[f64] {
-        microkernel::dot_soa(q, &self.soa, self.cap, self.len, &mut self.sq);
+        // the scalar table entry IS `microkernel::dot_soa` — this is
+        // the pinned bit-exact reference path, reached like every
+        // other kernel call: through a Lanes table
+        (simd::scalar().dot_soa)(q, &self.soa, self.cap, self.len, &mut self.sq);
         let n = self.len;
+        debug_assert!(self.rnorm.len() >= n, "norm lane was not loaded for the loaded lanes");
         let (sq, rnorm) = (&mut self.sq[..n], &self.rnorm[..n]);
         for j in 0..n {
             sq[j] = (qnorm + rnorm[j] - 2.0 * sq[j]).max(0.0);
@@ -256,7 +261,9 @@ impl Scratch {
         let n = self.len;
         microkernel::sqdist_soa(q, &self.soa, self.cap, n, &mut self.sq);
         microkernel::gauss_in_place(kernel, &mut self.sq[..n]);
-        microkernel::weighted_sum(&self.w[..n], &self.sq[..n])
+        // scalar-table dispatch: same pointer as the microkernel, so
+        // the bit-exact contract of this path is untouched
+        (simd::scalar().weighted_sum)(&self.w[..n], &self.sq[..n])
     }
 }
 

@@ -238,18 +238,51 @@ pub fn scalar() -> &'static Lanes {
     &SCALAR
 }
 
+/// How a `FASTGAUSS_SIMD` value classifies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EnvSimd {
+    /// `off` / `scalar` / `0`: pin the scalar table.
+    ForceOff,
+    /// Unset, empty, or `auto` / `on` / `1`: use CPU detection.
+    Auto,
+    /// Anything else: warn once, then behave like [`EnvSimd::Auto`].
+    Unrecognized,
+}
+
+/// Classify a `FASTGAUSS_SIMD` value without touching the process
+/// environment (`None` = the variable is unset). Matching is
+/// case-insensitive and whitespace-tolerant.
+pub fn parse_env_simd(value: Option<&str>) -> EnvSimd {
+    match value {
+        None => EnvSimd::Auto,
+        Some(v) => match v.to_ascii_lowercase().trim() {
+            "off" | "scalar" | "0" => EnvSimd::ForceOff,
+            "" | "auto" | "on" | "1" => EnvSimd::Auto,
+            _ => EnvSimd::Unrecognized,
+        },
+    }
+}
+
 /// The process-wide auto-detected table, resolved once: honours
-/// `FASTGAUSS_SIMD=off|scalar|0` first, then runtime CPU features.
+/// `FASTGAUSS_SIMD=off|scalar|0` first, then runtime CPU features. An
+/// unrecognized value warns once on stderr and falls back to
+/// detection instead of being silently treated as `off`.
 pub fn active() -> &'static Lanes {
     static ACTIVE: OnceLock<&'static Lanes> = OnceLock::new();
     ACTIVE.get_or_init(|| {
-        let forced_off = std::env::var("FASTGAUSS_SIMD")
-            .map(|v| matches!(v.to_ascii_lowercase().as_str(), "off" | "scalar" | "0"))
-            .unwrap_or(false);
-        if forced_off {
-            &SCALAR
-        } else {
-            detect()
+        let raw = std::env::var("FASTGAUSS_SIMD").ok();
+        match parse_env_simd(raw.as_deref()) {
+            EnvSimd::ForceOff => &SCALAR,
+            EnvSimd::Auto => detect(),
+            EnvSimd::Unrecognized => {
+                // the OnceLock init runs once, so this warns once
+                let v = raw.unwrap_or_default();
+                eprintln!(
+                    "fastgauss: FASTGAUSS_SIMD={v:?} is not recognized \
+                     (expected off|scalar|0 or auto|on|1); using auto-detection"
+                );
+                detect()
+            }
         }
     })
 }
@@ -318,6 +351,10 @@ mod avx2 {
     /// algorithm verbatim — Cody–Waite reduction with the same
     /// `LN2_HI`/`LN2_LO` split, degree-11 Horner on fused lanes, `2^k`
     /// assembled in the exponent field, per-lane underflow blend.
+    // SAFETY: register-only arithmetic, no memory access; the caller
+    // must hold the avx2+fma witness (every caller is an `_impl` in
+    // this module, reached only through wrappers installed after
+    // runtime detection).
     #[target_feature(enable = "avx2,fma")]
     unsafe fn exp4(x: __m256d) -> __m256d {
         // k = round(x / ln 2); rounding mode 0b00 (nearest) + NO_EXC.
@@ -348,6 +385,10 @@ mod avx2 {
         _mm256_and_pd(v, keep)
     }
 
+    // SAFETY: caller must hold the avx2+fma witness (the safe wrapper
+    // below is installed only after runtime detection); every
+    // load/store stays inside `xs` — the vector loop requires
+    // `j + 4 <= n` and the tail is scalar.
     #[target_feature(enable = "avx2,fma")]
     unsafe fn exp_block_impl(xs: &mut [f64]) {
         let n = xs.len();
@@ -598,6 +639,10 @@ mod neon {
 
     /// Lane-wide certified exp; see `avx2::exp4` for the argument that
     /// this stays inside [`fastexp::EXP_MAX_REL_ERR`].
+    // SAFETY: register-only arithmetic, no memory access; the caller
+    // must hold the neon witness (every caller is an `_impl` in this
+    // module, reached only through wrappers installed after runtime
+    // detection).
     #[target_feature(enable = "neon")]
     unsafe fn exp2_lanes(x: float64x2_t) -> float64x2_t {
         // round-to-nearest(-even) — tie direction is inside the budget
@@ -619,6 +664,10 @@ mod neon {
         vreinterpretq_f64_u64(vandq_u64(vreinterpretq_u64_f64(v), keep))
     }
 
+    // SAFETY: caller must hold the neon witness (the safe wrapper
+    // below is installed only after runtime detection); every
+    // load/store stays inside `xs` — the vector loop requires
+    // `j + 2 <= n` and the tail is scalar.
     #[target_feature(enable = "neon")]
     unsafe fn exp_block_impl(xs: &mut [f64]) {
         let n = xs.len();
@@ -972,6 +1021,21 @@ mod tests {
                 let rel = (got[j] - want[j]).abs() / want[j].max(1e-300);
                 assert!(rel <= 4.0 * fastexp::EXP_MAX_REL_ERR, "n={n} j={j}: rel={rel:.2e}");
             }
+        }
+    }
+
+    #[test]
+    fn env_simd_parsing_covers_all_spellings() {
+        use super::EnvSimd::*;
+        assert_eq!(parse_env_simd(None), Auto);
+        for v in ["", "auto", "AUTO", "on", "1", " auto "] {
+            assert_eq!(parse_env_simd(Some(v)), Auto, "value {v:?}");
+        }
+        for v in ["off", "OFF", "scalar", "Scalar", "0", " off "] {
+            assert_eq!(parse_env_simd(Some(v)), ForceOff, "value {v:?}");
+        }
+        for v in ["offf", "none", "2", "true", "avx2"] {
+            assert_eq!(parse_env_simd(Some(v)), Unrecognized, "value {v:?}");
         }
     }
 

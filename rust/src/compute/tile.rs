@@ -114,6 +114,9 @@ pub fn gauss_sums_fast_on_loaded(
     let stride = scratch.cap;
     let neg = kernel.neg_inv_two_h2();
     let Scratch { soa, w, rnorm, qsoa, qnorm, tile, .. } = scratch;
+    debug_assert!(w.len() >= n && rnorm.len() >= n, "lane buffers shorter than loaded length");
+    debug_assert!(tile.len() >= QUERY_TILE * stride, "value tile smaller than QUERY_TILE rows");
+    debug_assert!(qnorms.len() >= qe, "query norms shorter than the query range");
     let mut q = qb;
     while q < qe {
         let nq = QUERY_TILE.min(qe - q);
@@ -170,6 +173,9 @@ pub fn gauss_sums_fast_f32_on_loaded(
     let stride = scratch.cap;
     let neg = kernel.neg_inv_two_h2();
     let Scratch { soa32, w32, rnorm32, qsoa32, tile32, sq, .. } = scratch;
+    debug_assert!(w32.len() >= n && rnorm32.len() >= n, "f32 lanes shorter than loaded length");
+    debug_assert!(tile32.len() >= QUERY_TILE * stride && sq.len() >= n, "f32 tile too small");
+    debug_assert!(qnorms.len() >= qe, "query norms shorter than the query range");
     let mut q = qb;
     while q < qe {
         let nq = QUERY_TILE.min(qe - q);

@@ -173,7 +173,7 @@ impl RunConfig {
         let text =
             std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
         for (lineno, line) in text.lines().enumerate() {
-            let line = line.split('#').next().unwrap().trim();
+            let line = line.split('#').next().unwrap_or("").trim();
             if line.is_empty() {
                 continue;
             }

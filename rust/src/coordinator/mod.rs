@@ -112,6 +112,7 @@ pub(crate) fn run_sweep_on(
         .map(|&h| {
             session
                 .exact_kernel_sums(cfg.kernel, h, cfg.epsilon)
+                // lint: allow(no-panic): sweep-abort by design — a missing truth row must fail the sweep, not mislabel it
                 .unwrap_or_else(|e| panic!("naive row truth for h={h:.6e}: {e}"))
                 .1
         })
@@ -164,6 +165,7 @@ fn run_cell(
     // *true-kernel* sum, not a Gaussian proxy.
     let exact = match session.exact_kernel_sums(cfg.kernel, h, cfg.epsilon) {
         Ok((exact, _, _)) => exact,
+        // lint: allow(no-panic): sweep-abort by design — the pool re-raises this to run_sweep's caller
         Err(e) => panic!(
             "sweep cell {}×h[{bandwidth_index}]: exhaustive truth unavailable: {e}",
             spec.name()
@@ -199,6 +201,7 @@ fn run_cell(
             // only in the error message — its sums are discarded)
             cell.outcome = CellOutcome::ToleranceUnreachable
         }
+        // lint: allow(no-panic): internal errors are bugs, not tolerance failures — abort the sweep loudly
         Err(e @ AlgoError::Internal(_)) => panic!(
             "sweep cell {}×h[{bandwidth_index}] hit an internal failure: {e}",
             spec.name()

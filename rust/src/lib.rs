@@ -71,6 +71,7 @@ pub mod coordinator;
 pub mod benchjson;
 pub mod cli;
 pub mod config;
+pub mod lint;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {

@@ -1,0 +1,930 @@
+//! A repo-native invariant linter for the `fastgauss` source tree.
+//!
+//! The architecture makes promises that `rustc` and clippy cannot
+//! check: every `unsafe` is justified, all hot-kernel dispatch flows
+//! through the [`crate::compute::simd::Lanes`] table, raw threads
+//! exist only inside the work-stealing pool, library code never
+//! panics outside a small audited set, and the three user-facing
+//! configuration surfaces (config keys, CLI flags,
+//! `PrepareOptions` fields) cannot drift apart. This module enforces
+//! those promises with a lightweight lexer — no external parser
+//! crates — and the `fastgauss_lint` binary (a tier-1 CI step) plus
+//! the `lint_rules` integration test keep the tree at zero findings.
+//!
+//! # Rule families
+//!
+//! * `safety-comment` — every `unsafe` token carries a `// SAFETY:`
+//!   justification within the six preceding lines.
+//! * `lanes-bypass` — the hot free functions (`exp_block`, `dot_soa`,
+//!   `dot_tile`, `weighted_sum`, `gauss_from_norms`) may be named
+//!   directly only by the modules that define them; everyone else
+//!   must go through a `Lanes` table (`(lanes.exp_block)(..)`), so a
+//!   scalar-vs-vector split can never be introduced by accident.
+//! * `raw-thread` — `thread::{spawn, scope, Builder}` only in
+//!   `runtime/pool.rs`; all other fan-out uses the pool.
+//! * `no-panic` — no `unwrap`/`expect`/`panic!` family in library
+//!   code, except the blessed mutex-poisoning idiom
+//!   (`.lock().unwrap()` et al. — poisoning means a panic already
+//!   happened elsewhere) and the driver modules listed in
+//!   [`DRIVER_FILES`].
+//! * `parity` — config keys, `--flags` and `PrepareOptions` fields
+//!   stay in one-to-one correspondence (modulo the explicit alias
+//!   and internal-field tables below).
+//!
+//! A violation that is genuinely intended is waived in place, on the
+//! same or the preceding line, with a comment naming the rule and the
+//! reason — e.g. `// lint: allow(no-panic): poisoning is re-raised`.
+//! The reason is mandatory, so every waiver is an audit record.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// `unsafe` without a `// SAFETY:` comment nearby.
+pub const RULE_SAFETY: &str = "safety-comment";
+/// Hot kernel named outside the dispatch-table modules.
+pub const RULE_LANES: &str = "lanes-bypass";
+/// Raw `std::thread` primitive outside the pool.
+pub const RULE_THREAD: &str = "raw-thread";
+/// Panicking construct in library code.
+pub const RULE_PANIC: &str = "no-panic";
+/// Config-key / CLI-flag / `PrepareOptions`-field drift.
+pub const RULE_PARITY: &str = "parity";
+/// Meta-rule: a waiver comment that is itself malformed.
+pub const RULE_WAIVER: &str = "waiver";
+
+const RULE_NAMES: [&str; 5] = [RULE_SAFETY, RULE_LANES, RULE_THREAD, RULE_PANIC, RULE_PARITY];
+
+/// The hot free functions behind the `Lanes` function-pointer table.
+const HOT_KERNELS: [&str; 5] =
+    ["exp_block", "dot_soa", "dot_tile", "weighted_sum", "gauss_from_norms"];
+
+/// Modules allowed to name the hot kernels directly: the dispatch
+/// table itself and the two modules defining the scalar bodies.
+const KERNEL_FILES: [&str; 3] = ["compute/simd.rs", "compute/microkernel.rs", "compute/fastexp.rs"];
+
+/// The one home of raw thread primitives.
+const POOL_FILE: &str = "runtime/pool.rs";
+
+/// Driver modules where aborting the process is the designed failure
+/// mode, exempt from `no-panic` (binaries under `bin/` and `main.rs`
+/// are exempt implicitly).
+const DRIVER_FILES: [(&str, &str); 3] = [
+    ("cli.rs", "CLI front end: argument errors abort with a usage message"),
+    ("benchjson.rs", "bench harness: an internal assert failing the run IS the test"),
+    ("prop.rs", "property-test harness: a counterexample aborts the search loudly"),
+];
+
+/// Receiver method names whose `.unwrap()` is the blessed poisoning
+/// idiom: the lock/channel can only fail if another thread already
+/// panicked, and propagating that panic is the correct response.
+const BLESSED_UNWRAP_RECEIVERS: [&str; 6] =
+    ["lock", "read", "write", "into_inner", "wait", "wait_timeout"];
+
+/// How many lines above an `unsafe` token a `SAFETY` comment may sit
+/// (multi-line justifications are common in `simd.rs`).
+const SAFETY_WINDOW: usize = 6;
+
+/// Config keys that surface as `PrepareOptions` fields, by their
+/// primary `key = value` spelling.
+const KEY_TO_FIELD: [(&str, &str); 6] = [
+    ("workers", "threads"),
+    ("leaf-size", "leaf_size"),
+    ("fast-exp", "fast_exp"),
+    ("simd", "simd"),
+    ("precision", "precision"),
+    ("kernel", "kernel"),
+];
+
+/// `PrepareOptions` fields that deliberately have no config-file
+/// spelling, with the reason on record.
+const INTERNAL_FIELDS: [(&str, &str); 4] = [
+    ("weights", "per-request data, not a scalar a config file could hold"),
+    ("moment_cache_capacity", "sized by the coordinator per sweep, not user-facing"),
+    ("truth_cache_capacity", "sized by the coordinator per sweep, not user-facing"),
+    ("cost_model", "programmatic tuning surface for embedders only"),
+];
+
+/// CLI tokens that look like flags but are not config keys.
+const CLI_EXEMPT: [&str; 2] = ["option", "help"];
+
+/// One rule violation (or malformed waiver) at a source location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path relative to `rust/src`, with `/` separators.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// One of the `RULE_*` constants.
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "rust/src/{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lexer: mask a source file into parallel views
+// ---------------------------------------------------------------------------
+
+/// Parallel same-length views of one source file: `code` keeps only
+/// code bytes (comments, strings and char literals blanked to
+/// spaces), `comments` keeps only comment text. Newlines survive in
+/// both so line numbers agree everywhere. `strings` records cooked
+/// and raw string literal contents with their byte offsets.
+struct Masked {
+    code: Vec<u8>,
+    comments: Vec<u8>,
+    strings: Vec<(usize, String)>,
+}
+
+fn is_ident(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+fn find_sub(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if needle.is_empty() || hay.len() < needle.len() {
+        return None;
+    }
+    (from..=hay.len() - needle.len()).find(|&i| &hay[i..i + needle.len()] == needle)
+}
+
+fn mask(src: &[u8]) -> Masked {
+    let n = src.len();
+    let mut code = vec![b' '; n];
+    let mut comments = vec![b' '; n];
+    for (i, &b) in src.iter().enumerate() {
+        if b == b'\n' {
+            code[i] = b'\n';
+            comments[i] = b'\n';
+        }
+    }
+    let mut strings = Vec::new();
+    let mut i = 0;
+    while i < n {
+        let c = src[i];
+        let c1 = if i + 1 < n { src[i + 1] } else { 0 };
+        // line comment (also doc comments — they are comments too)
+        if c == b'/' && c1 == b'/' {
+            i += 2;
+            while i < n && src[i] != b'\n' {
+                comments[i] = src[i];
+                i += 1;
+            }
+            continue;
+        }
+        // block comment, nested per Rust rules
+        if c == b'/' && c1 == b'*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if src[i] == b'/' && i + 1 < n && src[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if src[i] == b'*' && i + 1 < n && src[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if src[i] != b'\n' {
+                        comments[i] = src[i];
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw / byte string prefixes: r".."  r#".."#  br".."  b".."
+        let prev_ident = i > 0 && is_ident(src[i - 1]);
+        if (c == b'r' || c == b'b') && !prev_ident {
+            if let Some(next) = lex_prefixed_string(src, i, &mut strings) {
+                i = next;
+                continue;
+            }
+        }
+        if c == b'"' {
+            i = lex_cooked_string(src, i, &mut strings);
+            continue;
+        }
+        if c == b'\'' {
+            i = lex_quote(src, i);
+            continue;
+        }
+        code[i] = c;
+        i += 1;
+    }
+    Masked { code, comments, strings }
+}
+
+/// Lex `r"…"`, `r#"…"#`, `br"…"` or `b"…"` starting at `i` (which
+/// points at the prefix). Returns the index just past the literal, or
+/// `None` if this is not actually a string prefix (e.g. `b'x'`, or an
+/// identifier beginning with `r`).
+fn lex_prefixed_string(src: &[u8], i: usize, strings: &mut Vec<(usize, String)>) -> Option<usize> {
+    let n = src.len();
+    let (raw, mut j) = match src[i] {
+        b'r' => (true, i + 1),
+        b'b' if i + 1 < n && src[i + 1] == b'r' => (true, i + 2),
+        b'b' if i + 1 < n && src[i + 1] == b'"' => (false, i + 1),
+        _ => return None,
+    };
+    if !raw {
+        return Some(lex_cooked_string(src, j, strings));
+    }
+    let mut hashes = 0usize;
+    while j < n && src[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= n || src[j] != b'"' {
+        return None;
+    }
+    j += 1;
+    let start = j;
+    while j < n {
+        if src[j] == b'"' {
+            let mut k = j + 1;
+            let mut h = 0usize;
+            while k < n && h < hashes && src[k] == b'#' {
+                h += 1;
+                k += 1;
+            }
+            if h == hashes {
+                strings.push((start, String::from_utf8_lossy(&src[start..j]).into_owned()));
+                return Some(k);
+            }
+        }
+        j += 1;
+    }
+    Some(n)
+}
+
+/// Lex a cooked string starting at the opening quote `src[i] == b'"'`.
+/// Escapes are simplified (a backslash shields exactly the next byte),
+/// which is sound for delimiter tracking and for the ASCII literals
+/// the parity rule reads. Returns the index past the closing quote.
+fn lex_cooked_string(src: &[u8], i: usize, strings: &mut Vec<(usize, String)>) -> usize {
+    let n = src.len();
+    let mut j = i + 1;
+    let mut content = Vec::new();
+    while j < n {
+        match src[j] {
+            b'\\' => {
+                if j + 1 < n {
+                    content.push(src[j + 1]);
+                }
+                j += 2;
+            }
+            b'"' => {
+                strings.push((i + 1, String::from_utf8_lossy(&content).into_owned()));
+                return j + 1;
+            }
+            b => {
+                content.push(b);
+                j += 1;
+            }
+        }
+    }
+    n
+}
+
+/// Lex a `'` at `i`: a char literal (`'x'`, `'\n'`, `'\u{1F}'`) is
+/// consumed entirely; a lifetime tick is consumed alone, leaving the
+/// lifetime name as ordinary code.
+fn lex_quote(src: &[u8], i: usize) -> usize {
+    let n = src.len();
+    if i + 1 < n && src[i + 1] == b'\\' {
+        let mut j = i + 2;
+        if j + 1 < n && src[j] == b'u' && src[j + 1] == b'{' {
+            j += 2;
+            while j < n && src[j] != b'}' {
+                j += 1;
+            }
+        }
+        j += 1;
+        while j < n && src[j] != b'\'' {
+            j += 1;
+        }
+        return (j + 1).min(n);
+    }
+    if i + 2 < n && src[i + 2] == b'\'' && src[i + 1] != b'\'' {
+        return i + 3;
+    }
+    i + 1
+}
+
+// ---------------------------------------------------------------------------
+// Line bookkeeping, test regions, waivers
+// ---------------------------------------------------------------------------
+
+fn line_starts(src: &[u8]) -> Vec<usize> {
+    let mut starts = vec![0usize];
+    for (i, &b) in src.iter().enumerate() {
+        if b == b'\n' {
+            starts.push(i + 1);
+        }
+    }
+    starts
+}
+
+/// 1-based line number of byte offset `pos`.
+fn line_of(starts: &[usize], pos: usize) -> usize {
+    starts.partition_point(|&s| s <= pos)
+}
+
+fn split_lines(buf: &[u8]) -> Vec<String> {
+    buf.split(|&b| b == b'\n').map(|l| String::from_utf8_lossy(l).into_owned()).collect()
+}
+
+/// Per-line flags for `#[cfg(test)] mod … { … }` regions, where the
+/// library rules do not apply (tests may panic and may compare hot
+/// kernels against references directly).
+fn test_region_flags(code: &[u8], starts: &[usize]) -> Vec<bool> {
+    let mut flags = vec![false; starts.len() + 2];
+    let mut from = 0usize;
+    while let Some(p) = find_sub(code, b"#[cfg(test)]", from) {
+        from = p + 1;
+        let mut m = p;
+        let mod_pos = loop {
+            match find_sub(code, b"mod", m) {
+                None => break None,
+                Some(q) => {
+                    m = q + 1;
+                    let before_ok = q == 0 || !is_ident(code[q - 1]);
+                    let after_ok = q + 3 >= code.len() || !is_ident(code[q + 3]);
+                    if before_ok && after_ok {
+                        break Some(q);
+                    }
+                }
+            }
+        };
+        let open = mod_pos.and_then(|q| find_sub(code, b"{", q));
+        let Some(open) = open else { continue };
+        let mut depth = 0usize;
+        let mut close = open;
+        for (k, &b) in code.iter().enumerate().skip(open) {
+            match b {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        close = k;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let lo = line_of(starts, p);
+        let hi = line_of(starts, close);
+        for line in lo..=hi.min(flags.len() - 1) {
+            flags[line] = true;
+        }
+    }
+    flags
+}
+
+#[derive(Default)]
+struct Waivers {
+    by_line: BTreeMap<usize, Vec<&'static str>>,
+}
+
+impl Waivers {
+    fn allows(&self, line: usize, rule: &str) -> bool {
+        [line, line.saturating_sub(1)]
+            .iter()
+            .any(|l| self.by_line.get(l).is_some_and(|v| v.contains(&rule)))
+    }
+}
+
+/// Parse waiver comments (the rule-plus-reason form shown in the
+/// module docs). Malformed waivers — unknown rule, missing reason —
+/// are findings themselves: a waiver is an audit record, not an off
+/// switch.
+fn parse_waivers(rel: &str, comment_lines: &[String], findings: &mut Vec<Finding>) -> Waivers {
+    const MARK: &str = "lint: allow(";
+    let mut waivers = Waivers::default();
+    for (idx, text) in comment_lines.iter().enumerate() {
+        let line = idx + 1;
+        let Some(p) = text.find(MARK) else { continue };
+        let rest = &text[p + MARK.len()..];
+        let Some(close) = rest.find(')') else {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line,
+                rule: RULE_WAIVER,
+                message: "unclosed `lint: allow(` waiver".to_string(),
+            });
+            continue;
+        };
+        let name = rest[..close].trim();
+        let Some(rule) = RULE_NAMES.iter().copied().find(|r| *r == name) else {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line,
+                rule: RULE_WAIVER,
+                message: format!("waiver names unknown rule `{name}`"),
+            });
+            continue;
+        };
+        let after = rest[close + 1..].trim_start();
+        let reason_ok = after.strip_prefix(':').is_some_and(|r| !r.trim().is_empty());
+        if !reason_ok {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line,
+                rule: RULE_WAIVER,
+                message: format!("waiver for `{rule}` is missing its reason"),
+            });
+            continue;
+        }
+        waivers.by_line.entry(line).or_default().push(rule);
+    }
+    waivers
+}
+
+// ---------------------------------------------------------------------------
+// Per-file rules
+// ---------------------------------------------------------------------------
+
+/// Occurrences of `name` in `code` with identifier boundaries on both
+/// sides (so `dot_tile` does not match inside `dot_tile_f32`).
+fn ident_occurrences(code: &[u8], name: &[u8]) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = find_sub(code, name, from) {
+        from = p + 1;
+        let before_ok = p == 0 || !is_ident(code[p - 1]);
+        let after = p + name.len();
+        let after_ok = after >= code.len() || !is_ident(code[after]);
+        if before_ok && after_ok {
+            out.push(p);
+        }
+    }
+    out
+}
+
+/// Previous non-whitespace byte, if any.
+fn prev_nonspace(code: &[u8], pos: usize) -> Option<u8> {
+    code[..pos].iter().rev().copied().find(|b| !b" \t\n".contains(b))
+}
+
+/// True when the `.unwrap(` at `dot_pos` hangs off a call to one of
+/// [`BLESSED_UNWRAP_RECEIVERS`]: scan back over one balanced paren
+/// group and read the method name in front of it.
+fn is_blessed_unwrap(code: &[u8], dot_pos: usize) -> bool {
+    let mut q = dot_pos;
+    while q > 0 && b" \t\n".contains(&code[q - 1]) {
+        q -= 1;
+    }
+    if q == 0 || code[q - 1] != b')' {
+        return false;
+    }
+    let mut depth = 0usize;
+    let mut r = q; // one past the closing paren
+    while r > 0 {
+        r -= 1;
+        match code[r] {
+            b')' => depth += 1,
+            b'(' => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    while r > 0 && b" \t\n".contains(&code[r - 1]) {
+        r -= 1;
+    }
+    let end = r;
+    while r > 0 && is_ident(code[r - 1]) {
+        r -= 1;
+    }
+    let name = &code[r..end];
+    BLESSED_UNWRAP_RECEIVERS.iter().any(|b| b.as_bytes() == name)
+}
+
+fn is_driver(rel: &str) -> bool {
+    rel == "main.rs" || rel.starts_with("bin/") || DRIVER_FILES.iter().any(|(f, _)| *f == rel)
+}
+
+/// Run the four per-file rule families over one source file.
+/// `rel` is the path relative to `rust/src` with `/` separators.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let bytes = src.as_bytes();
+    let masked = mask(bytes);
+    let starts = line_starts(bytes);
+    let comment_lines = split_lines(&masked.comments);
+    let in_test = test_region_flags(&masked.code, &starts);
+    let mut findings = Vec::new();
+    let waivers = parse_waivers(rel, &comment_lines, &mut findings);
+    let code = &masked.code[..];
+
+    // safety-comment
+    for p in ident_occurrences(code, b"unsafe") {
+        let line = line_of(&starts, p);
+        let lo = line.saturating_sub(SAFETY_WINDOW).max(1);
+        let justified =
+            (lo..=line).any(|l| comment_lines.get(l - 1).is_some_and(|t| t.contains("SAFETY")));
+        if !justified && !waivers.allows(line, RULE_SAFETY) {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line,
+                rule: RULE_SAFETY,
+                message: "`unsafe` without a `// SAFETY:` justification above it".to_string(),
+            });
+        }
+    }
+
+    // lanes-bypass
+    if !KERNEL_FILES.contains(&rel) {
+        for name in HOT_KERNELS {
+            for p in ident_occurrences(code, name.as_bytes()) {
+                let line = line_of(&starts, p);
+                if in_test.get(line).copied().unwrap_or(false) {
+                    continue;
+                }
+                // `.name` is a Lanes field access — the sanctioned path
+                if prev_nonspace(code, p) == Some(b'.') {
+                    continue;
+                }
+                if waivers.allows(line, RULE_LANES) {
+                    continue;
+                }
+                findings.push(Finding {
+                    file: rel.to_string(),
+                    line,
+                    rule: RULE_LANES,
+                    message: format!(
+                        "hot kernel `{name}` named outside the Lanes table; \
+                         dispatch through `simd::active()` / `simd::scalar()`"
+                    ),
+                });
+            }
+        }
+    }
+
+    // raw-thread
+    if rel != POOL_FILE {
+        for token in ["thread::spawn", "thread::scope", "thread::Builder"] {
+            for p in ident_occurrences(code, token.as_bytes()) {
+                let line = line_of(&starts, p);
+                if in_test.get(line).copied().unwrap_or(false) {
+                    continue;
+                }
+                if waivers.allows(line, RULE_THREAD) {
+                    continue;
+                }
+                findings.push(Finding {
+                    file: rel.to_string(),
+                    line,
+                    rule: RULE_THREAD,
+                    message: format!(
+                        "`{token}` outside runtime/pool.rs; route work through WorkStealPool"
+                    ),
+                });
+            }
+        }
+    }
+
+    // no-panic
+    if !is_driver(rel) {
+        let dotted = [".unwrap(", ".expect("];
+        let macros = ["panic!", "unreachable!", "todo!", "unimplemented!"];
+        let mut hits: Vec<(usize, &str)> = Vec::new();
+        for token in dotted {
+            let mut from = 0usize;
+            while let Some(p) = find_sub(code, token.as_bytes(), from) {
+                from = p + 1;
+                hits.push((p, token));
+            }
+        }
+        for token in macros {
+            for p in ident_occurrences(code, token.trim_end_matches('!').as_bytes()) {
+                if code.get(p + token.len() - 1) == Some(&b'!') {
+                    hits.push((p, token));
+                }
+            }
+        }
+        for (p, token) in hits {
+            let line = line_of(&starts, p);
+            if in_test.get(line).copied().unwrap_or(false) {
+                continue;
+            }
+            if token == ".unwrap(" && is_blessed_unwrap(code, p) {
+                continue;
+            }
+            if waivers.allows(line, RULE_PANIC) {
+                continue;
+            }
+            let what = token.trim_start_matches('.').trim_end_matches('(');
+            findings.push(Finding {
+                file: rel.to_string(),
+                line,
+                rule: RULE_PANIC,
+                message: format!("`{what}` in library code; return an error or waive it"),
+            });
+        }
+    }
+
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Parity rule
+// ---------------------------------------------------------------------------
+
+/// The three configuration surfaces the parity rule cross-checks.
+pub struct ParitySources<'a> {
+    /// `rust/src/config.rs` (holds `VALID_KEYS`).
+    pub config: &'a str,
+    /// `rust/src/cli.rs` (holds the `--flag` spellings).
+    pub cli: &'a str,
+    /// `rust/src/api/session.rs` (holds `PrepareOptions`).
+    pub session: &'a str,
+}
+
+/// `VALID_KEYS` entries as alias sets, e.g. `["leaf-size", "leaf_size"]`.
+fn config_keys(config: &str) -> Vec<Vec<String>> {
+    let bytes = config.as_bytes();
+    let masked = mask(bytes);
+    let Some(p) = find_sub(&masked.code, b"VALID_KEYS", 0) else { return Vec::new() };
+    let end = find_sub(&masked.code, b"];", p).unwrap_or(bytes.len());
+    masked
+        .strings
+        .iter()
+        .filter(|(pos, _)| *pos > p && *pos < end)
+        .map(|(_, s)| s.split('|').map(|a| a.trim().to_string()).collect())
+        .collect()
+}
+
+/// Every `--token` spelled in any string literal of `cli.rs` (usage
+/// text and match arms both count — that is the point).
+fn cli_flags(cli: &str) -> BTreeSet<String> {
+    let masked = mask(cli.as_bytes());
+    let mut flags = BTreeSet::new();
+    for (_, s) in &masked.strings {
+        let b = s.as_bytes();
+        let mut from = 0usize;
+        while let Some(p) = find_sub(b, b"--", from) {
+            let mut end = p + 2;
+            while end < b.len() && (is_ident(b[end]) || b[end] == b'-') {
+                end += 1;
+            }
+            from = end.max(p + 2 + 1);
+            if end > p + 2 {
+                flags.insert(String::from_utf8_lossy(&b[p + 2..end]).into_owned());
+            }
+        }
+    }
+    flags
+}
+
+/// Field names of `pub struct PrepareOptions`.
+fn prepare_options_fields(session: &str) -> Vec<String> {
+    let masked = mask(session.as_bytes());
+    let code = &masked.code[..];
+    let Some(p) = find_sub(code, b"pub struct PrepareOptions", 0) else { return Vec::new() };
+    let Some(open) = find_sub(code, b"{", p) else { return Vec::new() };
+    let mut depth = 0usize;
+    let mut close = open;
+    for (k, &b) in code.iter().enumerate().skip(open) {
+        match b {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    close = k;
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut fields = Vec::new();
+    for q in ident_occurrences(&code[open..close], b"pub") {
+        let mut r = open + q + 3;
+        while r < close && code[r].is_ascii_whitespace() {
+            r += 1;
+        }
+        let start = r;
+        while r < close && is_ident(code[r]) {
+            r += 1;
+        }
+        let mut colon = r;
+        while colon < close && code[colon].is_ascii_whitespace() {
+            colon += 1;
+        }
+        if r > start && code.get(colon) == Some(&b':') {
+            fields.push(String::from_utf8_lossy(&code[start..r]).into_owned());
+        }
+    }
+    fields
+}
+
+/// Cross-check the three surfaces; see [`KEY_TO_FIELD`],
+/// [`INTERNAL_FIELDS`] and [`CLI_EXEMPT`] for the sanctioned deltas.
+pub fn lint_parity(src: &ParitySources<'_>) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let keys = config_keys(src.config);
+    let flags = cli_flags(src.cli);
+    let fields = prepare_options_fields(src.session);
+    let push = |findings: &mut Vec<Finding>, file: &str, message: String| {
+        findings.push(Finding { file: file.to_string(), line: 1, rule: RULE_PARITY, message });
+    };
+    if keys.is_empty() {
+        push(&mut findings, "config.rs", "VALID_KEYS not found; parity unchecked".to_string());
+    }
+    if fields.is_empty() {
+        push(
+            &mut findings,
+            "api/session.rs",
+            "PrepareOptions fields not found; parity unchecked".to_string(),
+        );
+    }
+    let aliases: BTreeSet<&str> = keys.iter().flatten().map(|a| a.as_str()).collect();
+    for (key, field) in KEY_TO_FIELD {
+        if !keys.is_empty() && !aliases.contains(key) {
+            push(&mut findings, "config.rs", format!("mapped key `{key}` missing from VALID_KEYS"));
+        }
+        if !fields.is_empty() && !fields.iter().any(|f| f == field) {
+            push(
+                &mut findings,
+                "api/session.rs",
+                format!("mapped field `{field}` missing from PrepareOptions"),
+            );
+        }
+    }
+    for field in &fields {
+        let mapped = KEY_TO_FIELD.iter().any(|(_, f)| f == field);
+        let internal = INTERNAL_FIELDS.iter().any(|(f, _)| f == field);
+        if !mapped && !internal {
+            push(
+                &mut findings,
+                "api/session.rs",
+                format!(
+                    "PrepareOptions field `{field}` has neither a config-key mapping \
+                     nor an internal-field allowlisting"
+                ),
+            );
+        }
+    }
+    for alias_set in &keys {
+        if !alias_set.iter().any(|a| flags.contains(a)) {
+            let key = alias_set.first().map(|s| s.as_str()).unwrap_or("");
+            push(&mut findings, "cli.rs", format!("config key `{key}` has no --flag in cli.rs"));
+        }
+    }
+    for flag in &flags {
+        let known = aliases.contains(flag.as_str()) || CLI_EXEMPT.iter().any(|e| e == flag);
+        if !known {
+            push(
+                &mut findings,
+                "cli.rs",
+                format!("cli flag `--{flag}` is neither a config key/alias nor exempt"),
+            );
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Tree walk
+// ---------------------------------------------------------------------------
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        entries.push(entry?.path());
+    }
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `<root>/rust/src` (per-file rules plus
+/// the cross-file parity rule). `root` is the repository root — the
+/// directory holding `Cargo.toml`.
+pub fn lint_tree(root: &Path) -> io::Result<(usize, Vec<Finding>)> {
+    let src_root = root.join("rust").join("src");
+    let mut files = Vec::new();
+    collect_rs(&src_root, &mut files)?;
+    let mut findings = Vec::new();
+    let mut config = None;
+    let mut cli = None;
+    let mut session = None;
+    for path in &files {
+        let src = String::from_utf8_lossy(&fs::read(path)?).into_owned();
+        let rel: String = match path.strip_prefix(&src_root) {
+            Ok(r) => r
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect::<Vec<_>>()
+                .join("/"),
+            Err(_) => path.to_string_lossy().into_owned(),
+        };
+        findings.extend(lint_source(&rel, &src));
+        match rel.as_str() {
+            "config.rs" => config = Some(src),
+            "cli.rs" => cli = Some(src),
+            "api/session.rs" => session = Some(src),
+            _ => {}
+        }
+    }
+    match (&config, &cli, &session) {
+        (Some(c), Some(l), Some(s)) => {
+            findings.extend(lint_parity(&ParitySources { config: c, cli: l, session: s }));
+        }
+        _ => findings.push(Finding {
+            file: String::new(),
+            line: 1,
+            rule: RULE_PARITY,
+            message: "config.rs / cli.rs / api/session.rs not all present; parity unchecked"
+                .to_string(),
+        }),
+    }
+    Ok((files.len(), findings))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masking_blanks_comments_strings_and_chars_but_not_code() {
+        let src = r##"let s = "unsafe // not code"; // unsafe in comment
+let c = 'x'; let lt: &'static str = r#"panic!"#; /* unsafe */ let u = 1;"##;
+        let m = mask(src.as_bytes());
+        let code = String::from_utf8_lossy(&m.code).into_owned();
+        assert!(!code.contains("unsafe"), "masked code leaked literal/comment text: {code}");
+        assert!(!code.contains("panic!"), "raw string leaked into code: {code}");
+        assert!(code.contains("let s ="));
+        assert!(code.contains("static"), "lifetime names must stay code");
+        let comments = String::from_utf8_lossy(&m.comments).into_owned();
+        assert!(comments.contains("unsafe in comment"));
+        assert_eq!(m.strings.len(), 2);
+        assert_eq!(m.strings[0].1, "unsafe // not code");
+        assert_eq!(m.strings[1].1, "panic!");
+    }
+
+    #[test]
+    fn nested_block_comments_and_escapes_terminate_where_rust_says() {
+        let src = "/* a /* b */ still comment */ let x = \"q\\\"uote\"; let y = 0;";
+        let m = mask(src.as_bytes());
+        let code = String::from_utf8_lossy(&m.code).into_owned();
+        assert!(!code.contains("still comment"));
+        assert!(code.contains("let x ="));
+        assert!(code.contains("let y = 0;"));
+        assert_eq!(m.strings[0].1, "q\"uote");
+    }
+
+    #[test]
+    fn line_of_is_one_based_and_stable_across_the_file() {
+        let src = b"a\nbb\nccc\n";
+        let starts = line_starts(src);
+        assert_eq!(line_of(&starts, 0), 1);
+        assert_eq!(line_of(&starts, 2), 2);
+        assert_eq!(line_of(&starts, 5), 3);
+    }
+
+    #[test]
+    fn blessed_unwrap_spans_newlines_and_nested_parens() {
+        let src = "let g = m\n    .lock()\n    .unwrap();\nlet h = v.last().unwrap();";
+        let f = lint_source("x.rs", src);
+        assert_eq!(f.len(), 1, "only the non-blessed unwrap should flag: {f:?}");
+        assert_eq!(f[0].rule, RULE_PANIC);
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn waiver_requires_known_rule_and_reason() {
+        let ok = "// lint: allow(no-panic): checked two lines up\nlet x = v.last().unwrap();";
+        assert!(lint_source("x.rs", ok).is_empty());
+        let missing = "// lint: allow(no-panic)\nlet x = v.last().unwrap();";
+        let f = lint_source("x.rs", missing);
+        assert!(f.iter().any(|f| f.rule == RULE_WAIVER), "{f:?}");
+        assert!(f.iter().any(|f| f.rule == RULE_PANIC), "malformed waiver must not waive");
+        let unknown = "// lint: allow(no-such-rule): reason\nlet x = 1;";
+        let f = lint_source("x.rs", unknown);
+        assert!(f.iter().any(|f| f.rule == RULE_WAIVER), "{f:?}");
+    }
+
+    #[test]
+    fn test_modules_are_exempt_from_library_rules() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { \
+                   let v: Vec<u32> = vec![]; v.last().unwrap(); }\n}\n";
+        assert!(lint_source("x.rs", src).is_empty());
+    }
+}

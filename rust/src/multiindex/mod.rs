@@ -86,9 +86,11 @@ impl MultiIndexSet {
             } else {
                 // Decrement the last nonzero coordinate; the parent is
                 // guaranteed to appear earlier in both enumerations.
+                // lint: allow(no-panic): the all-zero index took the branch above, so a nonzero coordinate exists
                 let d = a.iter().rposition(|&v| v > 0).unwrap();
                 let mut pa = a.clone();
                 pa[d] -= 1;
+                // lint: allow(no-panic): graded enumeration lists parents before children by construction
                 let pi = *pos.get(&pa).expect("parent must be enumerated");
                 debug_assert!(pi < pos[a]);
                 parent.push(pi);
@@ -250,6 +252,7 @@ pub fn multi_factorial(a: &[u32]) -> f64 {
 /// Grid (mixed-radix) enumeration: all α with α_d ∈ [0, p), dimension 0
 /// slowest — position of α is Σ α_d · p^(D−1−d).
 fn enumerate_grid(dim: usize, p: usize) -> Vec<Vec<u32>> {
+    // lint: allow(no-panic): explicit capacity guard — a grid overflowing u64 is an upstream caller bug
     let total = (p as u64).checked_pow(dim as u32).expect("grid too large") as usize;
     let mut out = Vec::with_capacity(total);
     let mut cur = vec![0u32; dim];

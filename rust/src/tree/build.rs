@@ -140,6 +140,18 @@ impl KdTree {
         }
     }
 
+    /// Children of a node the caller has already established to be
+    /// internal (every traversal checks `is_leaf` before descending).
+    /// Descending into a leaf means the traversal invariant is broken;
+    /// continuing would silently corrupt sums, so abort loudly.
+    pub fn children_of_internal(&self, i: usize) -> (usize, usize) {
+        match self.children(i) {
+            Some(pair) => pair,
+            // lint: allow(no-panic): traversal-invariant breach must abort, not corrupt sums
+            None => panic!("children_of_internal: node {i} is a leaf"),
+        }
+    }
+
     /// Total weight of the whole set.
     pub fn total_weight(&self) -> f64 {
         self.nodes[0].weight
@@ -243,7 +255,7 @@ fn build_rec(
             let mid = begin + count / 2;
             // median partition by nth-element selection on `axis`
             perm[begin..end].select_nth_unstable_by(count / 2, |&a, &b| {
-                points.get(a, axis).partial_cmp(&points.get(b, axis)).unwrap()
+                points.get(a, axis).total_cmp(&points.get(b, axis))
             });
             let left = build_rec(points, weights, perm, nodes, begin, mid, depth + 1, leaf_size);
             let right = build_rec(points, weights, perm, nodes, mid, end, depth + 1, leaf_size);

@@ -26,6 +26,7 @@ pub use node::Node;
 /// presume PLIMIT = 1 for D > 6").
 pub fn plimit_for_dim(dim: usize) -> usize {
     match dim {
+        // lint: allow(no-panic): D = 0 is rejected when datasets are built; PLIMIT has no zero-D row
         0 => panic!("zero-dimensional data"),
         1 | 2 => 8,
         3 => 6,

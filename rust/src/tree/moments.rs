@@ -50,7 +50,7 @@ impl RefMoments {
                     &mut off,
                 );
             } else {
-                let (l, r) = tree.children(i).unwrap();
+                let (l, r) = tree.children_of_internal(i);
                 for child in [l, r] {
                     // split-borrow: child coeffs are read, parent written
                     let (child_part, parent_part) = split_two(&mut coeffs, child, i, len);

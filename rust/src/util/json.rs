@@ -115,7 +115,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, b: u8) -> Result<(), JsonError> {
+    fn expect_byte(&mut self, b: u8) -> Result<(), JsonError> {
         if self.bump() == Some(b) {
             Ok(())
         } else {
@@ -147,7 +147,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -158,7 +158,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let k = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             let v = self.value()?;
             m.insert(k, v);
             self.skip_ws();
@@ -171,7 +171,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut v = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -190,7 +190,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut s = String::new();
         loop {
             match self.bump() {
@@ -247,7 +247,8 @@ impl<'a> Parser<'a> {
         {
             self.pos += 1;
         }
-        let txt = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let txt = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("bad number"))?;
         txt.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
     }
 }

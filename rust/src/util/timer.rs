@@ -33,6 +33,7 @@ impl Timer {
     }
 
     pub fn stop(&mut self) {
+        // lint: allow(no-panic): unbalanced start/stop is a programmer error at the call site
         let s = self.started.take().expect("timer not running");
         self.total += s.elapsed();
     }

@@ -1,0 +1,162 @@
+//! Self-tests for the repo-native invariant linter: every rule family
+//! fires on a fixture that violates it, stays quiet on the compliant
+//! twin, and the real source tree is pinned at zero findings.
+
+use std::path::Path;
+
+use fastgauss::lint::{
+    lint_parity, lint_source, lint_tree, Finding, ParitySources, RULE_LANES, RULE_PANIC,
+    RULE_PARITY, RULE_SAFETY, RULE_THREAD, RULE_WAIVER,
+};
+
+fn rules(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// ---- safety-comment ----
+
+#[test]
+fn unsafe_without_justification_flags_and_commented_unsafe_is_clean() {
+    let bad = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    let f = lint_source("geometry.rs", bad);
+    assert_eq!(rules(&f), vec![RULE_SAFETY]);
+    assert_eq!(f[0].line, 2);
+    let good = "// SAFETY: the caller upholds the aliasing contract\n\
+                fn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+    assert!(lint_source("geometry.rs", good).is_empty());
+}
+
+#[test]
+fn unsafe_inside_comments_and_strings_does_not_count() {
+    let src = "// unsafe is discussed here only\nfn f() { let _ = \"unsafe\"; }\n";
+    assert!(lint_source("geometry.rs", src).is_empty());
+}
+
+// ---- lanes-bypass ----
+
+#[test]
+fn hot_kernel_bypass_flags_but_lanes_field_calls_are_clean() {
+    let bad = "fn f(xs: &mut [f64]) { fastexp::exp_block(xs); }\n";
+    let f = lint_source("algo/new.rs", bad);
+    assert_eq!(rules(&f), vec![RULE_LANES]);
+    let good = "fn f(l: &Lanes, xs: &mut [f64]) { (l.exp_block)(xs); }\n";
+    assert!(lint_source("algo/new.rs", good).is_empty());
+    // the defining modules may name their own kernels
+    assert!(lint_source("compute/fastexp.rs", bad).is_empty());
+    // related-but-distinct identifiers do not match
+    let cousin = "fn f() { dot_tile_f32_scalar(); }\n";
+    assert!(lint_source("algo/new.rs", cousin).is_empty());
+}
+
+// ---- raw-thread ----
+
+#[test]
+fn raw_thread_primitives_flag_outside_the_pool() {
+    let bad = "fn f() { std::thread::spawn(|| {}); }\n";
+    let f = lint_source("algo/new.rs", bad);
+    assert_eq!(rules(&f), vec![RULE_THREAD]);
+    assert!(lint_source("runtime/pool.rs", bad).is_empty());
+    let waived = "// lint: allow(raw-thread): benchmark needs the pre-pool shape\n\
+                  fn f() { std::thread::scope(|s| { let _ = s; }); }\n";
+    assert!(lint_source("algo/new.rs", waived).is_empty());
+}
+
+// ---- no-panic ----
+
+#[test]
+fn panic_family_flags_with_blessed_and_waived_exceptions() {
+    let bad = "fn f(v: &[u32]) -> u32 { *v.last().expect(\"nonempty\") }\n";
+    assert_eq!(rules(&lint_source("algo/new.rs", bad)), vec![RULE_PANIC]);
+    let blessed = "fn f(m: &std::sync::Mutex<u32>) -> u32 { *m.lock().unwrap() }\n";
+    assert!(lint_source("algo/new.rs", blessed).is_empty());
+    // driver modules may abort by design
+    assert!(lint_source("cli.rs", bad).is_empty());
+    assert!(lint_source("bin/tool.rs", bad).is_empty());
+    let waived = "// lint: allow(no-panic): length is checked by the caller\n\
+                  fn f(v: &[u32]) -> u32 { *v.last().unwrap() }\n";
+    assert!(lint_source("algo/new.rs", waived).is_empty());
+    let macro_hit = "fn f() { unreachable!() }\n";
+    assert_eq!(rules(&lint_source("algo/new.rs", macro_hit)), vec![RULE_PANIC]);
+    // `unwrap_or` and friends are not the panicking form
+    let non_panicking = "fn f(v: Option<u32>) -> u32 { v.unwrap_or(0) }\n";
+    assert!(lint_source("algo/new.rs", non_panicking).is_empty());
+}
+
+#[test]
+fn malformed_waiver_is_itself_a_finding_and_does_not_waive() {
+    let src = "// lint: allow(no-panic)\nfn f(v: &[u32]) -> u32 { *v.last().unwrap() }\n";
+    let f = lint_source("algo/new.rs", src);
+    assert!(f.iter().any(|x| x.rule == RULE_WAIVER), "{f:?}");
+    assert!(f.iter().any(|x| x.rule == RULE_PANIC), "malformed waiver must not waive: {f:?}");
+}
+
+#[test]
+fn findings_render_with_clickable_paths() {
+    let f = lint_source("algo/new.rs", "fn f() { todo!() }\n");
+    assert_eq!(f.len(), 1);
+    let line = f[0].to_string();
+    assert!(line.starts_with("rust/src/algo/new.rs:1: [no-panic]"), "{line}");
+}
+
+// ---- parity ----
+
+const CONFIG_OK: &str = r#"
+const VALID_KEYS: [&str; 6] = [
+    "workers", "leaf-size", "fast-exp", "simd", "precision", "kernel",
+];
+"#;
+
+const CLI_OK: &str = r#"
+fn usage() {
+    let _ = "--workers --leaf-size --fast-exp";
+    let _ = "--simd --precision --kernel --help";
+}
+"#;
+
+const SESSION_OK: &str = r#"
+pub struct PrepareOptions {
+    pub threads: usize,
+    pub leaf_size: usize,
+    pub fast_exp: bool,
+    pub simd: usize,
+    pub precision: usize,
+    pub kernel: usize,
+}
+"#;
+
+#[test]
+fn parity_clean_triple_passes() {
+    let f = lint_parity(&ParitySources { config: CONFIG_OK, cli: CLI_OK, session: SESSION_OK });
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn parity_gaps_are_flagged_per_surface() {
+    // a flag nobody maps
+    let cli = CLI_OK.replace("--help", "--help --turbo");
+    let f = lint_parity(&ParitySources { config: CONFIG_OK, cli: &cli, session: SESSION_OK });
+    assert!(f.iter().any(|x| x.rule == RULE_PARITY && x.message.contains("turbo")), "{f:?}");
+    // a field with neither mapping nor internal allowlisting
+    let session =
+        SESSION_OK.replace("pub kernel: usize,", "pub kernel: usize,\n    pub shadow: bool,");
+    let f = lint_parity(&ParitySources { config: CONFIG_OK, cli: CLI_OK, session: &session });
+    assert!(f.iter().any(|x| x.message.contains("shadow")), "{f:?}");
+    // a mapped key gone missing from the config surface
+    let config = CONFIG_OK.replace("\"kernel\",", "");
+    let f = lint_parity(&ParitySources { config: &config, cli: CLI_OK, session: SESSION_OK });
+    assert!(f.iter().any(|x| x.message.contains("`kernel`")), "{f:?}");
+}
+
+// ---- the real tree ----
+
+#[test]
+#[cfg_attr(miri, ignore = "walks and lexes the whole source tree")]
+fn the_real_tree_is_pinned_at_zero_findings() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let (files, findings) = lint_tree(root).expect("source tree must be readable");
+    assert!(files >= 60, "suspiciously few files walked: {files}");
+    for f in &findings {
+        eprintln!("{f}");
+    }
+    assert!(findings.is_empty(), "{} findings — see stderr", findings.len());
+}

@@ -26,6 +26,7 @@ fn rel_vs_libm(x: f64) -> f64 {
 // ---- 1. certified fast-exp bound ----
 
 #[test]
+#[cfg_attr(miri, ignore = "10^6-input sweep; the small-sample variant covers the interpreter")]
 fn fastexp_bound_holds_on_a_million_random_inputs() {
     let mut rng = Pcg32::new(0xFA57E);
     let mut worst = (0.0f64, 0.0f64);
@@ -50,6 +51,22 @@ fn fastexp_bound_holds_on_a_million_random_inputs() {
     );
 }
 
+/// The Miri-sized shadow of the 10⁶ sweep: same generator and domain
+/// mix, few enough samples for the interpreter to chew through.
+#[test]
+fn fastexp_bound_holds_on_a_small_random_sample() {
+    let mut rng = Pcg32::new(0xFA57E);
+    for i in 0..2_000u32 {
+        let x = if i % 2 == 0 {
+            rng.uniform_in(EXP_UNDERFLOW_X, 0.0)
+        } else {
+            -10f64.powf(rng.uniform_in(-12.0, 2.8))
+        };
+        let rel = rel_vs_libm(x);
+        assert!(rel <= EXP_MAX_REL_ERR, "x = {x:.17e} rel = {rel:.3e}");
+    }
+}
+
 #[test]
 fn fastexp_adversarial_cases() {
     // ±0 → exactly 1
@@ -59,7 +76,9 @@ fn fastexp_adversarial_cases() {
     let ln2 = std::f64::consts::LN_2;
     let ulp_next = |x: f64| f64::from_bits(x.to_bits() + 1);
     let ulp_prev = |x: f64| f64::from_bits(x.to_bits() - 1);
-    for k in 1..=1021 {
+    // sample the seam ladder under the interpreter; walk it natively
+    let step = if cfg!(miri) { 43 } else { 1 };
+    for k in (1..=1021).step_by(step) {
         for x in [-(k as f64) * ln2, -(k as f64 - 0.5) * ln2] {
             if x < EXP_UNDERFLOW_X {
                 continue;
@@ -97,6 +116,7 @@ fn random(n: usize, d: usize, seed: u64) -> Matrix {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "full shape grid; the small-shape variant covers the interpreter")]
 fn tiled_matches_scalar_across_odd_shapes_mono_and_bichromatic() {
     // shapes straddle the QUERY_TILE boundary and odd block remainders
     let shapes = [(1usize, 1usize), (3, 7), (7, 8), (8, 9), (9, 257), (13, 100), (31, 63)];
@@ -139,6 +159,35 @@ fn tiled_matches_scalar_across_odd_shapes_mono_and_bichromatic() {
                 }
             }
         }
+    }
+}
+
+/// Miri-sized shadow of the shape grid: one shape straddling the
+/// QUERY_TILE boundary, both chromatic forms.
+#[test]
+fn tiled_matches_scalar_on_a_small_shape() {
+    let (nq, nr, d, h) = (9, 13, 2, 0.5);
+    let refs = random(nr, d, 1000 + (nq * nr + d) as u64);
+    let queries = random(nq, d, 2000 + (nq + nr * d) as u64);
+    let mut rng = Pcg32::new(3000 + nr as u64);
+    let w: Vec<f64> = (0..nr).map(|_| rng.uniform_in(0.1, 2.0)).collect();
+    let kernel = GaussianKernel::new(h);
+    let mut scratch = Scratch::new(d);
+    let mut want = vec![0.0; nq];
+    reference::scalar_gauss_sums(&queries, &refs, &w, &kernel, &mut want);
+    let mut got = vec![0.0; nq];
+    compute::gauss_sum_all_fast(&queries, &refs, &w, &kernel, 64, &mut scratch, &mut got);
+    for i in 0..nq {
+        let rel = (got[i] - want[i]).abs() / want[i].max(1e-300);
+        assert!(rel <= 1e-12, "i={i}: {rel:.2e}");
+    }
+    let mut want_m = vec![0.0; nr];
+    reference::scalar_gauss_sums(&refs, &refs, &w, &kernel, &mut want_m);
+    let mut got_m = vec![0.0; nr];
+    compute::gauss_sum_all_fast(&refs, &refs, &w, &kernel, 64, &mut scratch, &mut got_m);
+    for i in 0..nr {
+        let rel = (got_m[i] - want_m[i]).abs() / want_m[i].max(1e-300);
+        assert!(rel <= 1e-12, "mono i={i}: {rel:.2e}");
     }
 }
 
@@ -188,6 +237,7 @@ fn duplicated_high_magnitude_points_clamp_to_exact_self_interaction() {
 const EPSILONS: [f64; 3] = [1e-2, 1e-4, 1e-6];
 
 #[test]
+#[cfg_attr(miri, ignore = "tree-building e2e sweep is too slow under the interpreter")]
 fn every_method_stays_eps_correct_with_fast_exp_on() {
     for (name, n) in [("astro2d", 400), ("galaxy3d", 350)] {
         let ds = data::by_name(name, n, 42).unwrap();
@@ -227,6 +277,7 @@ fn every_method_stays_eps_correct_with_fast_exp_on() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "session e2e is too slow under the interpreter")]
 fn fast_exp_off_session_also_meets_eps_and_routes_exact() {
     let ds = data::by_name("galaxy3d", 300, 7).unwrap();
     let h = silverman(&ds.points);
@@ -247,6 +298,7 @@ fn fast_exp_off_session_also_meets_eps_and_routes_exact() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "dual-tree e2e is too slow under the interpreter")]
 fn bichromatic_dual_tree_with_fast_exp_meets_eps() {
     let mut rng = Pcg32::new(99);
     let refs = random(320, 3, 55);
