@@ -9,6 +9,7 @@
 //! | DFDO  | [`dfdo`]  | DFD + the paper's token error control |
 //! | DFTO  | [`dfto`]  | dual-tree O(pᴰ) expansion + token control (Lee et al. 2006 bounds) |
 //! | DITO  | [`dito`]  | **the paper's contribution**: dual-tree O(Dᵖ) expansion + token control |
+//! | Sliced | [`sliced`] | post-paper: random 1-D projections + certified Fourier fast sums for D ≳ 10 |
 //!
 //! All implement [`GaussSum`] over a shared [`GaussSumProblem`]. The four
 //! dual-tree variants are monomorphized instantiations of one generic
@@ -28,6 +29,7 @@ pub mod dito;
 pub mod fgt;
 pub mod ifgt;
 pub mod naive;
+pub mod sliced;
 
 pub use dualtree::SweepEngine;
 

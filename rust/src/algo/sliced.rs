@@ -1,0 +1,339 @@
+//! `Sliced` — the eighth engine: sliced Fourier fast summation for
+//! high dimensions (Hertrich, arXiv 2401.08260, adapted to the repo's
+//! kernel convention and determinism contracts).
+//!
+//! Series-expansion engines die above D ≈ 5 (the paper's own caveat);
+//! `Sliced` instead averages P one-dimensional problems: draw seeded
+//! random unit directions ξ_p, project references and queries onto
+//! each, and evaluate the **sliced kernel** (a degree-m polynomial ×
+//! Gaussian, see [`crate::fourier`]) with a truncated-Fourier fast sum
+//! costing O((N+M)·K) per slice — near-linear and dimension-free.
+//! The per-slice Fourier error carries a deterministic certificate
+//! ([`crate::fourier::SlicePlan::bound`]); the Monte-Carlo slicing
+//! error is verified a posteriori by the P-doubling loop in
+//! [`crate::api::tuning::sliced_doubling`], mirroring the FGT/IFGT
+//! protocols.
+//!
+//! Determinism: slice p always draws from `Pcg32::new_stream(seed, p)`
+//! — the direction set depends only on (seed, p), never on thread
+//! count or scheduling — and slices are folded block-by-block in
+//! ascending slice order, so answers are bit-identical across pool
+//! widths and repeated evaluates.
+
+use crate::compute::microkernel::transpose_rows;
+use crate::compute::simd::{self, Lanes};
+use crate::fourier::{fast_sum, plan_slice, SliceProfile};
+use crate::runtime::pool::WorkStealPool;
+use crate::util::rng::Pcg32;
+
+use super::{AlgoError, GaussSum, GaussSumProblem, GaussSumResult, RunStats};
+
+/// Slices per scheduling block. Blocks are aligned to absolute slice
+/// indices, so the accumulation order (and hence every bit of the
+/// answer) is invariant to how many slices a call adds at once.
+pub const SLICE_BLOCK: usize = 8;
+
+/// Initial slice count of the P-doubling verification loop.
+pub const P_INIT: usize = 32;
+
+/// Default seed for the projection streams ("SLICED" in hex-speak).
+pub const DEFAULT_SEED: u64 = 0x51_1CED;
+
+/// Incremental slice accumulator: owns the SoA projections of one
+/// problem and a running sum over slices, so the P-doubling loop pays
+/// only for the *new* slices of each round.
+pub struct SlicedState {
+    profile: SliceProfile,
+    dim: usize,
+    n_refs: usize,
+    n_queries: usize,
+    h: f64,
+    /// dim-major SoA of the references (stride = n_refs).
+    ref_soa: Vec<f64>,
+    /// dim-major SoA of the queries; `None` when monochromatic (the
+    /// reference lanes double as query lanes).
+    query_soa: Option<Vec<f64>>,
+    weights: Vec<f64>,
+    seed: u64,
+    /// Certified pointwise target for each slice plan.
+    target_bound: f64,
+    lanes: &'static Lanes,
+    /// Σ over completed slices of the per-query slice sums.
+    accum: Vec<f64>,
+    slices_done: usize,
+    /// Worst certified per-slice pointwise bound seen so far.
+    max_bound: f64,
+}
+
+impl SlicedState {
+    /// Set up the projection lanes for `problem`. `target_bound` is
+    /// the pointwise Fourier certificate each slice plan must meet
+    /// (the caller charges `W · target_bound` out of its ε budget).
+    pub fn new(problem: &GaussSumProblem<'_>, target_bound: f64, seed: u64) -> Self {
+        let dim = problem.dim();
+        let n_refs = problem.num_references();
+        let n_queries = problem.num_queries();
+        let mut ref_soa = vec![0.0; dim * n_refs];
+        transpose_rows(problem.references, 0, n_refs, n_refs, &mut ref_soa);
+        let query_soa = if problem.monochromatic {
+            None
+        } else {
+            let mut soa = vec![0.0; dim * n_queries];
+            transpose_rows(problem.queries, 0, n_queries, n_queries, &mut soa);
+            Some(soa)
+        };
+        SlicedState {
+            profile: SliceProfile::for_dim(dim),
+            dim,
+            n_refs,
+            n_queries,
+            h: problem.h,
+            ref_soa,
+            query_soa,
+            weights: problem.weight_vec(),
+            seed,
+            target_bound,
+            lanes: simd::active(),
+            accum: vec![0.0; n_queries],
+            slices_done: 0,
+            max_bound: 0.0,
+        }
+    }
+
+    /// Slices accumulated so far.
+    pub fn slices_done(&self) -> usize {
+        self.slices_done
+    }
+
+    /// Worst certified per-slice pointwise Fourier bound over all
+    /// completed slices (≤ the construction target).
+    pub fn certified_bound(&self) -> f64 {
+        self.max_bound
+    }
+
+    /// SIMD backend the projections dispatch to.
+    pub fn backend(&self) -> &'static str {
+        self.lanes.backend.name()
+    }
+
+    /// Extend the accumulator up to `total` slices. Blocks run on the
+    /// pool when one is given (sequentially otherwise) and are folded
+    /// in ascending slice order either way, so the result is
+    /// bit-identical across pool widths — including width "none".
+    pub fn add_slices(
+        &mut self,
+        total: usize,
+        pool: Option<&WorkStealPool>,
+    ) -> Result<(), AlgoError> {
+        let from = self.slices_done;
+        if total <= from {
+            return Ok(());
+        }
+        let blocks: Vec<(usize, usize)> = (from..total)
+            .step_by(SLICE_BLOCK)
+            .map(|s0| (s0, (s0 + SLICE_BLOCK).min(total)))
+            .collect();
+        let results: Vec<Result<(Vec<f64>, f64), AlgoError>> = match pool {
+            Some(pool) => pool.run_indexed(blocks.len(), |bi| {
+                let (s0, s1) = blocks[bi];
+                self.run_block(s0, s1)
+            }),
+            None => blocks.iter().map(|&(s0, s1)| self.run_block(s0, s1)).collect(),
+        };
+        // Merge only after every block succeeded, so a failed round
+        // leaves the accumulator untouched and reusable.
+        let mut parts = Vec::with_capacity(results.len());
+        for r in results {
+            parts.push(r?);
+        }
+        for (partial, worst) in parts {
+            for (acc, p) in self.accum.iter_mut().zip(&partial) {
+                *acc += p;
+            }
+            self.max_bound = self.max_bound.max(worst);
+        }
+        self.slices_done = total;
+        Ok(())
+    }
+
+    /// Current estimates: the slice average, in query row order.
+    pub fn estimates(&self) -> Vec<f64> {
+        let inv = 1.0 / self.slices_done.max(1) as f64;
+        self.accum.iter().map(|a| a * inv).collect()
+    }
+
+    /// Evaluate slices `[s0, s1)` sequentially into a fresh partial
+    /// sum; returns the partial and the worst certified bound.
+    fn run_block(&self, s0: usize, s1: usize) -> Result<(Vec<f64>, f64), AlgoError> {
+        let mut partial = vec![0.0; self.n_queries];
+        let mut worst = 0.0f64;
+        let mut t_ref = vec![0.0; self.n_refs];
+        let mut t_query = vec![0.0; if self.query_soa.is_some() { self.n_queries } else { 0 }];
+        let mut a = vec![0.0; self.n_refs];
+        let mut b = vec![0.0; if self.query_soa.is_some() { self.n_queries } else { 0 }];
+        let mut out = vec![0.0; self.n_queries];
+        for s in s0..s1 {
+            let dir = self.direction(s);
+            (self.lanes.dot_soa)(&dir, &self.ref_soa, self.n_refs, self.n_refs, &mut t_ref);
+            if let Some(qsoa) = &self.query_soa {
+                (self.lanes.dot_soa)(&dir, qsoa, self.n_queries, self.n_queries, &mut t_query);
+            }
+            let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+            for &t in t_ref.iter().chain(t_query.iter()) {
+                lo = lo.min(t);
+                hi = hi.max(t);
+            }
+            let center = 0.5 * (lo + hi);
+            let half_range = 0.5 * (hi - lo);
+            let plan = plan_slice(&self.profile, self.h, half_range, self.target_bound)
+                .map_err(|e| AlgoError::ToleranceUnreachable(format!("slice {s}: {e}")))?;
+            for (dst, &t) in a.iter_mut().zip(&t_ref) {
+                *dst = plan.gamma * (t - center);
+            }
+            let queries_scaled: &[f64] = if self.query_soa.is_some() {
+                for (dst, &t) in b.iter_mut().zip(&t_query) {
+                    *dst = plan.gamma * (t - center);
+                }
+                &b
+            } else {
+                &a
+            };
+            fast_sum(&plan, &a, &self.weights, queries_scaled, &mut out);
+            for (acc, &v) in partial.iter_mut().zip(&out) {
+                *acc += v;
+            }
+            worst = worst.max(plan.bound);
+        }
+        Ok((partial, worst))
+    }
+
+    /// Unit direction of slice `s`: its own PCG stream, normalized
+    /// Gaussian draw in the (odd) sliced dimension, truncated to the
+    /// data dimension — the even→odd embedding appends an implicit
+    /// zero coordinate to every point, so the extra component only
+    /// contributes to the normalization.
+    fn direction(&self, s: usize) -> Vec<f64> {
+        let ds = self.profile.sliced_dim();
+        let mut rng = Pcg32::new_stream(self.seed, s as u64);
+        loop {
+            let g: Vec<f64> = (0..ds).map(|_| rng.normal()).collect();
+            let norm2: f64 = g.iter().map(|v| v * v).sum();
+            if norm2 > 1e-24 {
+                let inv = 1.0 / norm2.sqrt();
+                return g.iter().take(self.dim).map(|v| v * inv).collect();
+            }
+        }
+    }
+}
+
+/// One-shot engine front for [`SlicedState`] with a fixed slice
+/// count. Like FGT/IFGT it does **not** guarantee the ε tolerance by
+/// itself — the session pairs it with the verified P-doubling loop —
+/// but the Fourier half of the budget is still certified: the
+/// per-query error from the 1-D fast sums is ≤ W · target, with
+/// target = ε/4 scaled by W (an absolute ε/4 charge).
+#[derive(Clone, Debug)]
+pub struct Sliced {
+    /// Number of slices P (rounded up to a block multiple).
+    pub slices: usize,
+    /// Projection seed.
+    pub seed: u64,
+}
+
+impl Default for Sliced {
+    fn default() -> Self {
+        Sliced { slices: 4 * P_INIT, seed: DEFAULT_SEED }
+    }
+}
+
+impl GaussSum for Sliced {
+    fn name(&self) -> &'static str {
+        "Sliced"
+    }
+
+    fn guarantees_tolerance(&self) -> bool {
+        false
+    }
+
+    fn run(&self, problem: &GaussSumProblem<'_>) -> Result<GaussSumResult, AlgoError> {
+        let w = problem.total_weight();
+        let target_bound = 0.25 * problem.epsilon / w;
+        let mut state = SlicedState::new(problem, target_bound, self.seed);
+        let total = self.slices.max(1).div_ceil(SLICE_BLOCK) * SLICE_BLOCK;
+        state.add_slices(total, None)?;
+        let stats = RunStats { simd_backend: state.backend(), ..RunStats::default() };
+        Ok(GaussSumResult { sums: state.estimates(), stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{max_relative_error, naive::Naive};
+    use crate::geometry::Matrix;
+    use crate::util::Pcg32;
+
+    fn random(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg32::new(seed);
+        Matrix::from_rows(
+            &(0..n).map(|_| (0..d).map(|_| rng.uniform()).collect()).collect::<Vec<_>>(),
+        )
+    }
+
+    #[test]
+    fn converges_to_naive_truth_in_high_dim() {
+        let m = random(150, 12, 3);
+        let p = GaussSumProblem::kde(&m, 0.8, 0.05);
+        let exact = Naive::new().run(&p).unwrap().sums;
+        let approx = Sliced { slices: 2048, ..Sliced::default() }.run(&p).unwrap().sums;
+        let rel = max_relative_error(&approx, &exact);
+        assert!(rel < 0.05, "rel={rel}");
+    }
+
+    #[test]
+    fn doubling_reuses_prefix_slices_exactly() {
+        let m = random(60, 8, 5);
+        let p = GaussSumProblem::kde(&m, 0.5, 0.1);
+        let mut grown = SlicedState::new(&p, 1e-6, DEFAULT_SEED);
+        grown.add_slices(32, None).unwrap();
+        grown.add_slices(64, None).unwrap();
+        let mut fresh = SlicedState::new(&p, 1e-6, DEFAULT_SEED);
+        fresh.add_slices(64, None).unwrap();
+        assert_eq!(grown.estimates(), fresh.estimates(), "block-aligned growth must be exact");
+        assert_eq!(grown.slices_done(), 64);
+        assert!(grown.certified_bound() <= 1e-6);
+    }
+
+    #[test]
+    fn seeds_change_the_estimate_directions() {
+        let m = random(40, 10, 9);
+        let p = GaussSumProblem::kde(&m, 0.6, 0.1);
+        let a = Sliced { slices: 16, seed: 1 }.run(&p).unwrap().sums;
+        let b = Sliced { slices: 16, seed: 2 }.run(&p).unwrap().sums;
+        assert_ne!(a, b, "different seeds must draw different slices");
+        let c = Sliced { slices: 16, seed: 1 }.run(&p).unwrap().sums;
+        assert_eq!(a, c, "same seed must be bit-identical");
+    }
+
+    #[test]
+    fn bichromatic_and_weighted_paths() {
+        let q = random(30, 6, 21);
+        let r = random(80, 6, 22);
+        let w: Vec<f64> = (0..80).map(|i| 0.5 + (i % 7) as f64 * 0.3).collect();
+        let p = GaussSumProblem::new(&q, &r, Some(&w), 0.9, 0.05);
+        let exact = Naive::new().run(&p).unwrap().sums;
+        let approx = Sliced { slices: 4096, ..Sliced::default() }.run(&p).unwrap().sums;
+        let rel = max_relative_error(&approx, &exact);
+        assert!(rel < 0.08, "rel={rel}");
+    }
+
+    #[test]
+    fn hopeless_bandwidth_reports_tolerance_unreachable() {
+        // h ≪ data spread forces a tiny working bandwidth, where the
+        // truncation order needed blows past K_CAP — the paper's ∞.
+        let m = random(20, 14, 2);
+        let p = GaussSumProblem::kde(&m, 0.001, 0.01);
+        let err = Sliced::default().run(&p).unwrap_err();
+        assert!(matches!(err, AlgoError::ToleranceUnreachable(_)), "{err:?}");
+    }
+}

@@ -12,7 +12,8 @@ use crate::algo::dualtree::{DualTreeConfig, SeriesKind};
 
 /// Which algorithm a [`crate::api::Session`] evaluation runs.
 ///
-/// The seven concrete variants are the paper's seven table rows;
+/// The first seven concrete variants are the paper's seven table rows,
+/// [`Method::Sliced`] is the post-paper eighth engine, and
 /// [`Method::Auto`] defers the choice to the session's [`CostModel`]
 /// (dimension, N, h-to-scale ratio) at evaluate time.
 #[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
@@ -34,6 +35,11 @@ pub enum Method {
     /// The paper's contribution: dual-tree O(Dᵖ) graded expansion +
     /// token control.
     Dito,
+    /// Sliced Fourier fast summation (Hertrich, arXiv 2401.08260):
+    /// seeded random 1-D projections + truncated-Fourier fast sums,
+    /// ε-verified by the session's P-doubling loop. The eighth engine,
+    /// added for the high-D regimes where series expansions die.
+    Sliced,
     /// Let the session's [`CostModel`] pick per problem.
     Auto,
 }
@@ -49,6 +55,7 @@ impl Method {
             Method::Dfdo => "DFDO",
             Method::Dfto => "DFTO",
             Method::Dito => "DITO",
+            Method::Sliced => "Sliced",
             Method::Auto => "Auto",
         }
     }
@@ -63,6 +70,7 @@ impl Method {
             "dfdo" => Some(Method::Dfdo),
             "dfto" => Some(Method::Dfto),
             "dito" => Some(Method::Dito),
+            "sliced" => Some(Method::Sliced),
             "auto" => Some(Method::Auto),
             _ => None,
         }
@@ -83,8 +91,10 @@ impl Method {
 
     /// Index of a concrete method in [`paper_order`](Method::paper_order)
     /// — the row this method occupies in per-method histograms such as
-    /// [`crate::algo::RunStats::sog_routed`]. `None` for `Auto`, which
-    /// always resolves to a concrete method before any work is counted.
+    /// [`crate::algo::RunStats::sog_routed`]. `None` for `Auto` (which
+    /// always resolves to a concrete method before any work is
+    /// counted) and for post-paper engines like `Sliced` that have no
+    /// row in the paper's tables.
     pub fn paper_index(&self) -> Option<usize> {
         match self {
             Method::Naive => Some(0),
@@ -94,12 +104,12 @@ impl Method {
             Method::Dfdo => Some(4),
             Method::Dfto => Some(5),
             Method::Dito => Some(6),
-            Method::Auto => None,
+            Method::Sliced | Method::Auto => None,
         }
     }
 
     /// Every variant, `Auto` included.
-    pub const ALL: [Method; 8] = [
+    pub const ALL: [Method; 9] = [
         Method::Naive,
         Method::Fgt,
         Method::Ifgt,
@@ -107,6 +117,7 @@ impl Method {
         Method::Dfdo,
         Method::Dfto,
         Method::Dito,
+        Method::Sliced,
         Method::Auto,
     ];
 
@@ -116,17 +127,19 @@ impl Method {
     }
 
     /// Whether an answer carries the ε guarantee *by construction*.
-    /// FGT/IFGT answers are still ε-verified by the session's tuning
-    /// loops, just not by the algorithm itself. `Auto` only resolves to
-    /// guaranteed methods, so it reports `true`.
+    /// FGT/IFGT/Sliced answers are still ε-verified by the session's
+    /// tuning loops (τ-halving, K-doubling, P-doubling), just not by
+    /// the algorithm itself. `Auto` reports `true`: whatever it
+    /// resolves to, the session either has the guarantee by
+    /// construction or verifies it before answering.
     pub fn guarantees_tolerance(&self) -> bool {
-        !matches!(self, Method::Fgt | Method::Ifgt)
+        !matches!(self, Method::Fgt | Method::Ifgt | Method::Sliced)
     }
 
     /// The engine configuration a dual-tree method denotes, or `None`
-    /// for Naive/FGT/IFGT/Auto. This is the single point where method
-    /// names meet `DualTreeConfig` — callers no longer hand-assemble
-    /// `use_tokens`/`series` combinations.
+    /// for Naive/FGT/IFGT/Sliced/Auto. This is the single point where
+    /// method names meet `DualTreeConfig` — callers no longer
+    /// hand-assemble `use_tokens`/`series` combinations.
     pub fn dual_tree_config(
         &self,
         leaf_size: usize,
@@ -138,7 +151,7 @@ impl Method {
             Method::Dfdo => Some(DualTreeConfig { use_tokens: true, series: None, ..base }),
             Method::Dfto => Some(DualTreeConfig { series: Some(SeriesKind::OpdGrid), ..base }),
             Method::Dito => Some(base),
-            Method::Naive | Method::Fgt | Method::Ifgt | Method::Auto => None,
+            Method::Naive | Method::Fgt | Method::Ifgt | Method::Sliced | Method::Auto => None,
         }
     }
 }
@@ -187,8 +200,16 @@ impl ProblemProfile {
 /// |---|---|---|
 /// | max(N_Q, N_R) ≤ `naive_cutoff` | Naive | tree prep can't pay for itself |
 /// | h/scale < `fd_ratio` | DFDO | kernel ≈ local: series never fires, FD-only constant wins |
-/// | h/scale > `far_ratio`/√D | DFDO | kernel ≈ flat: root-level FD prune, skip the moment pass |
+/// | D ≥ `sliced_dim` | Sliced | series sizes explode and dual trees stop pruning in high D |
+/// | h/scale > max(`far_ratio`/√D, `far_floor`) | DFDO | kernel ≈ flat: root-level FD prune |
 /// | otherwise | DITO | the paper's winner in the contested middle band |
+///
+/// The far-field threshold is **clamped below** by `far_floor`: the
+/// raw `far_ratio/√D` bound was derived from low-D dual-tree behavior
+/// and collapses toward 0 as D grows, which used to shunt essentially
+/// every high-D problem to DFDO — where the dual tree prunes nothing
+/// and the run degenerates to a slow O(N·M). High-D problems now go
+/// to Sliced instead, and mid-D far-field ones keep a sane threshold.
 ///
 /// FGT/IFGT are never auto-selected: their answers need ε-verification
 /// against an exhaustive run, so as one-shot choices they are dominated
@@ -208,11 +229,23 @@ pub struct CostModel {
     /// `far_ratio / sqrt(D)`: the contested series band narrows as the
     /// expansion sizes grow with D).
     pub far_ratio: f64,
+    /// Lower clamp on the far-field threshold: `far_ratio/√D` is a
+    /// low-D calibration and must not collapse to 0 in high D.
+    pub far_floor: f64,
+    /// Dimension at and above which non-near-diagonal problems route
+    /// to the sliced Fourier engine.
+    pub sliced_dim: usize,
 }
 
 impl Default for CostModel {
     fn default() -> Self {
-        CostModel { naive_cutoff: 256, fd_ratio: 0.02, far_ratio: 5.0 }
+        CostModel {
+            naive_cutoff: 256,
+            fd_ratio: 0.02,
+            far_ratio: 5.0,
+            far_floor: 2.0,
+            sliced_dim: 20,
+        }
     }
 }
 
@@ -223,8 +256,16 @@ impl CostModel {
             return Method::Naive;
         }
         let ratio = p.h_ratio();
-        let far = self.far_ratio / (p.dim as f64).sqrt();
-        if ratio < self.fd_ratio || ratio > far {
+        if ratio < self.fd_ratio {
+            // near-diagonal: only immediate neighbors matter, and the
+            // kd-tree finds them in any dimension
+            return Method::Dfdo;
+        }
+        if p.dim >= self.sliced_dim {
+            return Method::Sliced;
+        }
+        let far = (self.far_ratio / (p.dim as f64).sqrt()).max(self.far_floor);
+        if ratio > far {
             Method::Dfdo
         } else {
             Method::Dito
@@ -271,7 +312,7 @@ mod tests {
         let dito = Method::Dito.dual_tree_config(32, None).unwrap();
         assert_eq!(dito.series, Some(SeriesKind::OdpGraded));
         assert!(dito.use_tokens);
-        for m in [Method::Naive, Method::Fgt, Method::Ifgt, Method::Auto] {
+        for m in [Method::Naive, Method::Fgt, Method::Ifgt, Method::Sliced, Method::Auto] {
             assert!(m.dual_tree_config(32, None).is_none(), "{m}");
         }
     }
@@ -299,5 +340,18 @@ mod tests {
         assert_eq!(cm.best_method(&mk(16, 5000, 0.1, 0.2)), Method::Dito);
         // degenerate zero spread must not divide by zero
         assert_eq!(cm.best_method(&mk(2, 5000, 0.5, 0.0)), Method::Dito);
+        // D ≥ sliced_dim routes to the sliced Fourier engine …
+        assert_eq!(cm.best_method(&mk(20, 5000, 0.1, 0.2)), Method::Sliced);
+        assert_eq!(cm.best_method(&mk(50, 5000, 1.0, 0.2)), Method::Sliced);
+        // … unless the kernel is near-diagonal (neighbors-only work
+        // stays on the dual tree in any dimension) or the problem tiny
+        assert_eq!(cm.best_method(&mk(20, 5000, 1e-4, 0.2)), Method::Dfdo);
+        assert_eq!(cm.best_method(&mk(50, 100, 1.0, 0.2)), Method::Naive);
+        // the far_floor clamp: at D = 16 the raw 5/√D ≈ 1.25 threshold
+        // used to misroute h/scale = 1.8 to DFDO (which prunes nothing
+        // there); the clamped threshold max(1.25, 2.0) keeps DITO
+        assert_eq!(cm.best_method(&mk(16, 5000, 0.36, 0.2)), Method::Dito);
+        // genuinely flat kernels still go far-field even mid-D
+        assert_eq!(cm.best_method(&mk(16, 5000, 0.5, 0.2)), Method::Dfdo);
     }
 }

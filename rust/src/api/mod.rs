@@ -1,5 +1,5 @@
 //! The crate's front door: a prepare-once / evaluate-many [`Session`]
-//! over all seven Gaussian-summation engines, with automatic method
+//! over all eight Gaussian-summation engines, with automatic method
 //! selection.
 //!
 //! The paper's central performance lesson is that the hierarchical

@@ -116,6 +116,13 @@ pub struct PrepareOptions {
     /// non-Gaussian families route through the certified
     /// sum-of-Gaussians batch path (see [`Session::evaluate`]).
     pub kernel: Kernel,
+    /// Starting slice count P for [`Method::Sliced`]'s P-doubling
+    /// verification loop (0, the default, uses the engine's built-in
+    /// start). The loop reuses already-computed slices across doublings,
+    /// so a generous start only costs time when the problem needs fewer
+    /// slices than it. Also reachable as the `slices` config key /
+    /// `--slices` CLI flag.
+    pub slices: usize,
 }
 
 impl Default for PrepareOptions {
@@ -131,6 +138,7 @@ impl Default for PrepareOptions {
             simd: SimdMode::Auto,
             precision: Precision::F64,
             kernel: Kernel::Gaussian,
+            slices: 0,
         }
     }
 }
@@ -213,9 +221,10 @@ impl<'a> EvalRequest<'a> {
 
 /// An answered request: per-query sums in the original row order, the
 /// run's counters, the *resolved* method (`Auto` never appears here),
-/// and — for the verified paths (Naive, FGT, IFGT) — the measured max
-/// relative error. Dual-tree answers carry `rel_err: None`: their ε
-/// bound holds by construction, so no exhaustive verification is run.
+/// and — for the verified paths (Naive, FGT, IFGT, Sliced) — the
+/// measured max relative error. Dual-tree answers carry
+/// `rel_err: None`: their ε bound holds by construction, so no
+/// exhaustive verification is run.
 /// Non-Gaussian answers also carry `rel_err: None` (their guarantee is
 /// the weight-scaled absolute form ε·W, certified by construction) plus
 /// a [`SogReport`] describing the decomposition and the per-component
@@ -389,6 +398,7 @@ pub struct Session<'d> {
     simd: SimdMode,
     precision: Precision,
     kernel: Kernel,
+    slices: usize,
     cost_model: CostModel,
     data_scale: f64,
     /// Per-dimension data bounding box — with a query box joined in,
@@ -420,6 +430,7 @@ impl<'d> Session<'d> {
             simd,
             precision,
             kernel,
+            slices,
         } = opts;
         let (engine, prep_secs) = time_it(|| {
             // placeholder h/ε: prepare ignores them by construction
@@ -446,6 +457,7 @@ impl<'d> Session<'d> {
             simd,
             precision,
             kernel,
+            slices,
             cost_model,
             data_scale,
             data_lo: data.col_min(),
@@ -582,6 +594,7 @@ impl<'d> Session<'d> {
             Method::Naive => self.eval_naive(req),
             Method::Fgt => self.eval_fgt(req),
             Method::Ifgt => self.eval_ifgt(req),
+            Method::Sliced => self.eval_sliced(req),
             // lint: allow(no-panic): resolve() maps Auto to a concrete method before dispatch
             Method::Auto => unreachable!("resolve() returns a concrete method"),
             dual => self.eval_dualtree(dual, req),
@@ -598,7 +611,9 @@ impl<'d> Session<'d> {
     /// sequentially, in any worker count (each such evaluation is
     /// pool-width-invariant, and the batch reduces by request index) —
     /// IFGT requests tune against a wall-clock budget and are
-    /// ε-verified but not schedule-invariant, batched or not.
+    /// ε-verified but not schedule-invariant, batched or not; Sliced
+    /// requests' accepted answers are pool-width-invariant, but their
+    /// ∞ verdicts share IFGT's wall-clock dependence.
     /// Per-request failures (e.g. an FGT X cell) come back in place;
     /// they do not abort the batch.
     pub fn evaluate_batch(
@@ -832,6 +847,45 @@ impl<'d> Session<'d> {
             sums: res.sums,
             stats: res.stats,
             method: Method::Ifgt,
+            rel_err: Some(rel_err),
+            kernel: Kernel::Gaussian,
+            sog: None,
+        })
+    }
+
+    /// Sliced Fourier evaluation under the P-doubling verification
+    /// protocol ([`tuning::sliced_doubling`]). Slices fan out onto the
+    /// session pool in fixed blocks, so any *accepted* answer is
+    /// bit-identical across pool widths and repeated evaluates; like
+    /// IFGT, only the budget-exhausted ∞ verdict is timing-dependent.
+    fn eval_sliced(&self, req: &EvalRequest<'_>) -> Result<Evaluation, AlgoError> {
+        let problem = self.problem(req);
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        let (exact, truth_secs) = self.truth_for(&problem, req, &mut hits, &mut misses)?;
+        // same tuning budget shape as IFGT: a few multiples of the
+        // exhaustive time — past that, slicing has lost by definition
+        let budget_secs = (5.0 * truth_secs).max(2.0);
+        let (outcome, total_secs) = time_it(|| {
+            tuning::sliced_doubling(
+                &problem,
+                &exact,
+                self.slices,
+                tuning::SLICED_MAX_ROUNDS,
+                budget_secs,
+                Some(self.pool().as_ref()),
+            )
+        });
+        let outcome = outcome?;
+        let rel_err = outcome.rel_err;
+        let mut res = outcome.result;
+        res.stats.total_secs = total_secs;
+        res.stats.session_cache_hits = hits;
+        res.stats.session_cache_misses = misses;
+        Ok(Evaluation {
+            sums: res.sums,
+            stats: res.stats,
+            method: Method::Sliced,
             rel_err: Some(rel_err),
             kernel: Kernel::Gaussian,
             sog: None,

@@ -1,23 +1,30 @@
-//! The paper's verification-tuning protocols for the two
-//! non-guaranteed algorithms, promoted out of the sweep coordinator so
-//! *every* caller of the session front door gets ε-verified FGT/IFGT
-//! answers, not just the table harness:
+//! The paper's verification-tuning protocols for the non-guaranteed
+//! algorithms, promoted out of the sweep coordinator so *every* caller
+//! of the session front door gets ε-verified answers, not just the
+//! table harness:
 //!
 //! * **FGT** guarantees only an absolute tolerance W·τ, so the paper
 //!   halves τ from ε until the *verified* relative error meets ε
 //!   ([`fgt_halving`]);
 //! * **IFGT** ships with an incorrect error bound, so the paper starts
 //!   at the recommended parameters and doubles K (stretching ρ,
-//!   raising p) until verified or hopeless ([`ifgt_doubling`]).
+//!   raising p) until verified or hopeless ([`ifgt_doubling`]);
+//! * **Sliced** carries a deterministic certificate only for its
+//!   Fourier half — the slicing Monte-Carlo error is verified by
+//!   doubling the slice count P until the measured relative error
+//!   meets ε or the round budget runs out ([`sliced_doubling`]).
 //!
-//! Both need exhaustive truth to verify against; the session feeds them
+//! All need exhaustive truth to verify against; the session feeds them
 //! its memoized per-bandwidth truth (see `Session::exact_sums`).
 
 use std::sync::Arc;
 
 use crate::algo::fgt::{Fgt, GridFrame};
 use crate::algo::ifgt::{ifgt_tuning_loop_with_plans, Ifgt, IfgtPlan};
-use crate::algo::{max_relative_error, AlgoError, GaussSumProblem, GaussSumResult};
+use crate::algo::sliced::{SlicedState, DEFAULT_SEED, P_INIT, SLICE_BLOCK};
+use crate::algo::{max_relative_error, AlgoError, GaussSumProblem, GaussSumResult, RunStats};
+use crate::errorcontrol::{split_epsilon_sliced, SlicedEpsSplit};
+use crate::runtime::pool::WorkStealPool;
 use crate::util::timer::time_it;
 
 /// τ-halvings before an FGT cell is declared ∞ (paper protocol).
@@ -25,6 +32,9 @@ pub const FGT_MAX_ATTEMPTS: usize = 20;
 
 /// K-doubling rounds before an IFGT cell is declared ∞ (paper protocol).
 pub const IFGT_MAX_ROUNDS: usize = 8;
+
+/// P-doubling rounds before a Sliced cell is declared ∞.
+pub const SLICED_MAX_ROUNDS: usize = 10;
 
 /// A verified FGT answer plus the tuning metadata the table reports.
 pub struct FgtOutcome {
@@ -106,4 +116,76 @@ where
         ifgt_tuning_loop_with_plans(problem, exact, max_rounds, budget_secs, plan_for)?;
     let rel_err = max_relative_error(&result.sums, exact);
     Ok(IfgtOutcome { result, rel_err, params })
+}
+
+/// A verified Sliced answer plus the tuning metadata the table reports.
+pub struct SlicedOutcome {
+    pub result: GaussSumResult,
+    /// Verified max relative error (≤ ε by construction of the loop).
+    pub rel_err: f64,
+    /// Projections averaged by the accepted answer.
+    pub slices: usize,
+    /// The ε ledger: what the Fourier certificate charged and what was
+    /// left for the slicing Monte-Carlo average.
+    pub split: SlicedEpsSplit,
+}
+
+/// The Sliced protocol: every slice's 1-D Fourier sum carries a
+/// deterministic truncation+aliasing certificate held under ε/4, so the
+/// only unverified error is the Monte-Carlo average over projections.
+/// Start at `initial_slices` (0 ⇒ the engine default) and double P —
+/// reusing every already-computed slice, the doubling only pays for the
+/// new half — until the measured relative error against `exact` meets
+/// ε, the wall-clock budget runs out, or `max_rounds` is exhausted
+/// (the paper's `∞`).
+pub fn sliced_doubling(
+    problem: &GaussSumProblem<'_>,
+    exact: &[f64],
+    initial_slices: usize,
+    max_rounds: usize,
+    budget_secs: f64,
+    pool: Option<&WorkStealPool>,
+) -> Result<SlicedOutcome, AlgoError> {
+    let total_weight = problem.total_weight();
+    let floor = exact.iter().copied().filter(|&e| e > 0.0).fold(f64::INFINITY, f64::min);
+    // All-zero truth only happens when every pair underflows; fall back
+    // to an absolute target so the plan builder still has a goal.
+    let scale = if floor.is_finite() { floor } else { 1.0 };
+    let target_bound = 0.25 * problem.epsilon * scale / total_weight;
+    let mut state = SlicedState::new(problem, target_bound, DEFAULT_SEED);
+
+    let start = if initial_slices == 0 { P_INIT } else { initial_slices };
+    let mut slices = start.max(1).div_ceil(SLICE_BLOCK) * SLICE_BLOCK;
+    let mut spent = 0.0;
+    let mut rel = f64::INFINITY;
+    let mut rounds = 0;
+    while rounds < max_rounds {
+        rounds += 1;
+        let (outcome, secs) = time_it(|| {
+            state.add_slices(slices, pool)?;
+            Ok::<Vec<f64>, AlgoError>(state.estimates())
+        });
+        let estimates = outcome?;
+        spent += secs;
+        rel = max_relative_error(&estimates, exact);
+        if rel <= problem.epsilon * (1.0 + 1e-9) {
+            let fourier_rel = total_weight * state.certified_bound() / scale;
+            let split = split_epsilon_sliced(problem.epsilon, fourier_rel).ok_or_else(|| {
+                AlgoError::Internal(format!(
+                    "Sliced Fourier certificate {fourier_rel:.2e} exceeded its ε/4 reservation"
+                ))
+            })?;
+            let stats = RunStats { simd_backend: state.backend(), ..RunStats::default() };
+            let result = GaussSumResult { sums: estimates, stats };
+            return Ok(SlicedOutcome { result, rel_err: rel, slices: state.slices_done(), split });
+        }
+        if spent > budget_secs {
+            break;
+        }
+        slices *= 2;
+    }
+    Err(AlgoError::ToleranceUnreachable(format!(
+        "Sliced verified rel {rel:.2e} > ε after {rounds} P-doubling rounds (P = {})",
+        state.slices_done()
+    )))
 }

@@ -1,5 +1,11 @@
-//! The machine-readable perf-trajectory runner. Two documents:
+//! The machine-readable perf-trajectory runner. The documents:
 //!
+//! * **PR 9 (`--pr9`, `BENCH_PR9.json`)** — [`run_bench_pr9`]: the
+//!   sliced Fourier engine vs DITO vs exhaustive summation on the
+//!   high-dimensional hyper sets, with low-D galaxy3d as the control.
+//! * **PR 7 (`--pr7`, `BENCH_PR7.json`)** — [`run_bench_pr7`]:
+//!   forced-scalar vs runtime-dispatched SIMD base cases, plus the
+//!   certified f32 mixed-precision tile.
 //! * **PR 5 (default, `BENCH_PR5.json`)** — [`run_bench_pr5`]: the old
 //!   fractured thread model (per-request scoped threads, each request
 //!   pinned to one inner thread) vs the shared work-stealing pool
@@ -419,6 +425,85 @@ pub fn run_bench_pr7(cfg: &BenchConfig) -> String {
     )
 }
 
+/// PR 9 protocol: the sliced Fourier engine vs the paper's best
+/// dual-tree engine (DITO) vs exhaustive summation, on the two
+/// high-dimensional sets the engine targets plus low-D galaxy3d as the
+/// control where the dual tree is expected to keep winning. Bandwidths
+/// are pinned inside the slicing Monte-Carlo's ε = 1e-2 regime (h of
+/// the order of the data diameter — see rust/tests/sliced_engine.rs
+/// for the variance rationale); every answered cell is ε-verified
+/// against the exhaustive truth (the run aborts on a violation), and a
+/// cell that refuses to answer is recorded as the paper's X/∞ instead.
+pub fn run_bench_pr9(cfg: &BenchConfig) -> String {
+    let eps = 1e-2;
+    let cases = [("galaxy3d", 1.0), ("hyper20", 2.5), ("hyper50", 3.5)];
+    let mut dataset_objs: Vec<String> = Vec::new();
+    for (name, h) in cases {
+        let ds = data::by_name(name, cfg.n, 42).expect("bench dataset");
+        let problem = GaussSumProblem::kde(&ds.points, h, eps);
+        let (truth, truth_secs) = time_it(|| Naive::new().run(&problem).unwrap().sums);
+        let naive_secs = if cfg.reps > 1 {
+            median_secs(|| drop(Naive::new().run(&problem).unwrap()), cfg.reps)
+        } else {
+            truth_secs
+        };
+        let session = Session::prepare(&ds.points, PrepareOptions::default());
+        // the probe evaluate warms the session's truth memo, so the
+        // timed repeats measure the engine + its verification loop,
+        // not the exhaustive reference
+        let cell_for = |method: Method| -> (String, f64) {
+            let req = EvalRequest::kde(h, eps).with_method(method);
+            match session.evaluate(&req) {
+                Ok(ev) => {
+                    let rel = max_relative_error(&ev.sums, &truth);
+                    assert!(rel <= eps * (1.0 + 1e-9), "{name} {method}: rel {rel:.2e} > ε");
+                    let secs = median_secs(|| drop(session.evaluate(&req)), cfg.reps);
+                    (
+                        format!(
+                            "{{\"secs\": {}, \"rel_err\": {}, \"status\": \"ok\"}}",
+                            num(secs),
+                            num(rel)
+                        ),
+                        secs,
+                    )
+                }
+                Err(crate::algo::AlgoError::RamExhausted(_)) => {
+                    ("{\"secs\": null, \"rel_err\": null, \"status\": \"X\"}".into(), f64::NAN)
+                }
+                Err(_) => {
+                    ("{\"secs\": null, \"rel_err\": null, \"status\": \"inf\"}".into(), f64::NAN)
+                }
+            }
+        };
+        let (sliced_cell, sliced_secs) = cell_for(Method::Sliced);
+        let (dito_cell, dito_secs) = cell_for(Method::Dito);
+        dataset_objs.push(format!(
+            "  \"{name}\": {{\n    \"dim\": {}, \"h\": {}, \"naive_secs\": {},\n    \
+             \"sliced\": {sliced_cell},\n    \"dito\": {dito_cell},\n    \
+             \"sliced_speedup_vs_naive\": {}, \"sliced_speedup_vs_dito\": {}\n  }}",
+            ds.dim(),
+            num(h),
+            num(naive_secs),
+            num(naive_secs / sliced_secs),
+            num(dito_secs / sliced_secs),
+        ));
+    }
+    format!(
+        "{{\n\"bench\": \"BENCH_PR9\",\n\"description\": \"sliced Fourier fast summation vs DITO \
+         vs exhaustive on high-dimensional sets (hyper20/hyper50) with low-D galaxy3d as the \
+         control; bandwidths pinned in the slicing MC eps=1e-2 regime, every answered cell \
+         eps-verified against exhaustive truth, refusals recorded as X/inf\",\n\
+         \"measured\": true,\n\"epsilon\": {},\n\"n\": {},\n\"reps\": {},\n\"smoke\": {},\n\
+         \"generated_by\": \"cargo run --release --bin bench_json -- --pr9\",\n\
+         \"datasets\": {{\n{}\n}}\n}}\n",
+        num(eps),
+        cfg.n,
+        cfg.reps,
+        cfg.smoke,
+        dataset_objs.join(",\n"),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -492,6 +577,35 @@ mod tests {
                 let engaged = group.get("DFDO").unwrap().get("f32_engaged").unwrap();
                 assert_eq!(engaged, &Json::Bool(eps > 1e-3), "{ds}/{key}");
             }
+        }
+    }
+
+    /// The PR 9 emitter: parseable JSON; the sliced engine answers and
+    /// ε-verifies on both hyper sets at the bench's 1e-2 bandwidth
+    /// regime, and every dataset row records a verdict for both
+    /// engines (an ok cell or the paper's X/∞).
+    #[test]
+    fn smoke_bench_pr9_emits_parseable_json() {
+        let cfg = BenchConfig { n: 150, reps: 1, epsilon: 1e-4, smoke: true };
+        let text = run_bench_pr9(&cfg);
+        let doc = Json::parse(&text).expect("bench_json PR9 output must parse");
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("BENCH_PR9"));
+        assert_eq!(doc.get("measured").unwrap(), &Json::Bool(true));
+        assert_eq!(doc.get("smoke").unwrap(), &Json::Bool(true));
+        for ds in ["galaxy3d", "hyper20", "hyper50"] {
+            let d = doc.get("datasets").unwrap().get(ds).unwrap_or_else(|| panic!("{ds}"));
+            assert!(d.get("naive_secs").unwrap().as_f64().unwrap() >= 0.0, "{ds}");
+            for m in ["sliced", "dito"] {
+                let cell = d.get(m).unwrap_or_else(|| panic!("{ds}/{m}"));
+                assert!(cell.get("status").unwrap().as_str().is_some(), "{ds}/{m}");
+            }
+        }
+        // the engine's home turf must answer, not refuse
+        for ds in ["hyper20", "hyper50"] {
+            let cell = doc.get("datasets").unwrap().get(ds).unwrap().get("sliced").unwrap();
+            assert_eq!(cell.get("status").unwrap().as_str(), Some("ok"), "{ds}");
+            let rel = cell.get("rel_err").unwrap().as_f64().unwrap();
+            assert!(rel <= 1e-2 * (1.0 + 1e-9), "{ds}: rel {rel}");
         }
     }
 

@@ -9,21 +9,27 @@
 //! vs the certified mixed-precision f32 tile, every cell ε-verified
 //! with the lane backend recorded).
 //!
+//! `--pr9` runs the sliced-Fourier protocol (Sliced vs DITO vs
+//! exhaustive on hyper20/hyper50 with galaxy3d as the low-D control,
+//! answered cells ε-verified, refusals recorded as the paper's X/∞).
+//!
 //! ```text
 //! cargo run --release --bin bench_json                 # BENCH_PR5.json
 //! cargo run --release --bin bench_json -- --smoke      # tiny sizes (CI)
 //! cargo run --release --bin bench_json -- --pr4        # BENCH_PR4.json
 //! cargo run --release --bin bench_json -- --pr7        # BENCH_PR7.json
+//! cargo run --release --bin bench_json -- --pr9        # BENCH_PR9.json
 //! cargo run --release --bin bench_json -- --n 8000 --reps 5 --out perf.json
 //! ```
 
-use fastgauss::benchjson::{run_bench, run_bench_pr5, run_bench_pr7, BenchConfig};
+use fastgauss::benchjson::{run_bench, run_bench_pr5, run_bench_pr7, run_bench_pr9, BenchConfig};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut cfg = BenchConfig::full();
     let mut pr4 = false;
     let mut pr7 = false;
+    let mut pr9 = false;
     let mut out: Option<String> = None;
     let mut i = 0;
     while i < args.len() {
@@ -38,6 +44,10 @@ fn main() {
             }
             "--pr7" => {
                 pr7 = true;
+                i += 1;
+            }
+            "--pr9" => {
+                pr9 = true;
                 i += 1;
             }
             "--n" => {
@@ -71,7 +81,7 @@ fn main() {
             }
             other => {
                 eprintln!(
-                    "unknown option {other:?}\nusage: bench_json [--smoke] [--pr4] [--pr7] [--n N] [--reps R] [--out FILE]"
+                    "unknown option {other:?}\nusage: bench_json [--smoke] [--pr4] [--pr7] [--pr9] [--n N] [--reps R] [--out FILE]"
                 );
                 std::process::exit(2);
             }
@@ -82,6 +92,8 @@ fn main() {
             "BENCH_PR4.json"
         } else if pr7 {
             "BENCH_PR7.json"
+        } else if pr9 {
+            "BENCH_PR9.json"
         } else {
             "BENCH_PR5.json"
         };
@@ -91,6 +103,8 @@ fn main() {
         run_bench(&cfg)
     } else if pr7 {
         run_bench_pr7(&cfg)
+    } else if pr9 {
+        run_bench_pr9(&cfg)
     } else {
         run_bench_pr5(&cfg)
     };

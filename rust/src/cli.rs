@@ -27,7 +27,8 @@ use crate::{anyhow, bail};
 
 use crate::api::{EvalRequest, Kernel, Method, PrepareOptions, Session};
 use crate::algo::{
-    max_relative_error, max_weight_scaled_error, naive::Naive, GaussSum, GaussSumProblem,
+    max_relative_error, max_weight_scaled_error, naive::Naive, AlgoError, GaussSum,
+    GaussSumProblem,
 };
 use crate::config::RunConfig;
 use crate::coordinator::{run_sweep, AlgoSpec, SweepConfig};
@@ -38,11 +39,12 @@ use crate::kde::lscv::select_bandwidth_session;
 const USAGE: &str = "usage: fastgauss <table|kde|datagen|selftest|runtime> [--option value ...]
 options: --dataset NAME --n N --seed S --epsilon E --algos a,b,c
          --workers W --leaf-size L --multipliers m1,m2 --h H
-         --method naive|fgt|ifgt|dfd|dfdo|dfto|dito|auto
+         --method naive|fgt|ifgt|dfd|dfdo|dfto|dito|sliced|auto
          --kernel gaussian|laplace|matern32|matern52|imq (default gaussian)
          --fast-exp true|false (certified tiled base case; default true)
          --simd auto|off (vector lanes in the fast tiles; default auto)
          --precision f64|f32 (certified mixed-precision tile; default f64)
+         --slices P (sliced engine P-doubling start; default engine-chosen)
          --out FILE --config FILE";
 
 /// Entry point used by `main.rs`. Returns the process exit code.
@@ -87,6 +89,7 @@ fn session_for<'d>(cfg: &RunConfig, ds: &'d data::Dataset) -> Session<'d> {
             simd: cfg.simd,
             precision: cfg.precision,
             kernel: cfg.kernel,
+            slices: cfg.slices,
             ..Default::default()
         },
     )
@@ -211,19 +214,33 @@ fn cmd_datagen(cfg: &RunConfig) -> Result<()> {
 fn cmd_selftest(cfg: &RunConfig) -> Result<()> {
     let ds = load_dataset(cfg)?;
     let session = session_for(cfg, &ds);
-    let pilot = silverman(&ds.points);
+    let pilot = if cfg.bandwidth > 0.0 { cfg.bandwidth } else { silverman(&ds.points) };
     let mut ok = true;
     if cfg.kernel.is_gaussian() {
         for mult in [1e-2, 1.0, 1e2] {
             let h = pilot * mult;
             let (exact, _, _) =
                 session.exact_sums(h, cfg.epsilon).map_err(|e| anyhow!("truth at h={h}: {e}"))?;
-            let methods =
-                [Method::Dfd, Method::Dfdo, Method::Dfto, Method::Dito, Method::Auto];
+            let mut methods = vec![Method::Dfd, Method::Dfdo, Method::Dfto, Method::Dito];
+            if ds.dim() >= 10 && mult >= 1.0 {
+                // high-dim non-near-diagonal regime: exercise the
+                // sliced Fourier engine where it is actually routed
+                methods.push(Method::Sliced);
+            }
+            methods.push(Method::Auto);
             for m in methods {
                 let req = EvalRequest::kde(h, cfg.epsilon).with_method(m);
-                let res =
-                    session.evaluate(&req).map_err(|err| anyhow!("{}: {err}", m.name()))?;
+                let res = match session.evaluate(&req) {
+                    Ok(res) => res,
+                    // X/∞ are the paper's recorded verdicts, not
+                    // harness failures: the engine refused to answer
+                    // rather than answering wrong
+                    Err(e @ (AlgoError::RamExhausted(_) | AlgoError::ToleranceUnreachable(_))) => {
+                        println!("{:<12} h={h:<12.5} {e}", m.name());
+                        continue;
+                    }
+                    Err(err) => return Err(anyhow!("{}: {err}", m.name())),
+                };
                 let rel = max_relative_error(&res.sums, &exact);
                 let pass = rel <= cfg.epsilon * (1.0 + 1e-9);
                 ok &= pass;
@@ -315,6 +332,20 @@ mod tests {
             .iter()
             .map(|s| s.to_string())
             .collect();
+        run(&args).unwrap();
+    }
+
+    #[test]
+    fn selftest_high_dim_runs_the_sliced_engine() {
+        // hyper20 + pinned large bandwidth: the Sliced rows at the
+        // ×1 and ×100 multipliers must verify (or print the paper's
+        // X/∞ verdict) without failing the harness; the dual-tree
+        // rows keep their ε checks as on every other dataset
+        let args: Vec<String> =
+            ["selftest", "--n", "120", "--dataset", "hyper20", "--h", "4"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
         run(&args).unwrap();
     }
 

@@ -27,12 +27,13 @@ pub const VALID_KEYS: &[&str] = &[
     "fast-exp|fast_exp",
     "simd",
     "precision",
+    "slices",
     "out",
     "config",
 ];
 
 /// The method names `--method` / `--algos` accept.
-const VALID_METHODS: &str = "naive, fgt, ifgt, dfd, dfdo, dfto, dito, auto";
+const VALID_METHODS: &str = "naive, fgt, ifgt, dfd, dfdo, dfto, dito, sliced, auto";
 
 /// The kernel names `--kernel` accepts (see [`Kernel::VALID_NAMES`]).
 const VALID_KERNELS: &str = Kernel::VALID_NAMES;
@@ -70,6 +71,9 @@ pub struct RunConfig {
     /// Fast-tile arithmetic precision (`f64` default; `f32` engages the
     /// mixed-precision tile where its certificate fits the ε/4 gate).
     pub precision: Precision,
+    /// Starting slice count P for the sliced Fourier engine's
+    /// P-doubling verification loop (`0` = the engine default).
+    pub slices: usize,
     /// Output path for commands that write files.
     pub out: Option<String>,
 }
@@ -99,6 +103,7 @@ impl Default for RunConfig {
             fast_exp: true,
             simd: SimdMode::Auto,
             precision: Precision::F64,
+            slices: 0,
             out: None,
         }
     }
@@ -155,6 +160,7 @@ impl RunConfig {
                     anyhow!("unknown precision {value:?} (valid: {})", Precision::VALID)
                 })?
             }
+            "slices" => self.slices = value.parse().context("slices")?,
             "out" => self.out = Some(value.to_string()),
             other => bail!(
                 "unknown option --{other} (valid: {})",
@@ -297,10 +303,22 @@ mod tests {
         assert_eq!(c.method, Method::Auto, "auto must be the default");
         c.set("method", "dito").unwrap();
         assert_eq!(c.method, Method::Dito);
+        c.set("method", "sliced").unwrap();
+        assert_eq!(c.method, Method::Sliced);
         c.set("method", "AUTO").unwrap();
         assert_eq!(c.method, Method::Auto);
         let msg = c.set("method", "bogus").unwrap_err().to_string();
-        assert!(msg.contains("dito") && msg.contains("auto"), "{msg}");
+        assert!(msg.contains("dito") && msg.contains("sliced") && msg.contains("auto"), "{msg}");
+    }
+
+    #[test]
+    fn slices_key_parses_and_rejects() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.slices, 0, "0 (engine default) must be the default");
+        c.set("slices", "256").unwrap();
+        assert_eq!(c.slices, 256);
+        assert!(c.set("slices", "many").is_err());
+        assert_eq!(c.slices, 256, "failed set must not change the value");
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Datasets: the six synthetic stand-ins for the paper's evaluation
-//! data (see DESIGN.md §Substitutions), unit-cube scaling, and CSV I/O.
+//! data (see DESIGN.md §Substitutions), two post-paper high-dimensional
+//! sets (`hyper20`, `hyper50`) for the sliced Fourier engine, unit-cube
+//! scaling, and CSV I/O.
 
 pub mod csv;
 pub mod scale;
@@ -51,6 +53,8 @@ pub fn by_name(name: &str, n: usize, seed: u64) -> Option<Dataset> {
         "pall7" => synthetic::pall7(n, seed),
         "covtype10" => synthetic::covtype10(n, seed),
         "texture16" => synthetic::texture16(n, seed),
+        "hyper20" => synthetic::hyper20(n, seed),
+        "hyper50" => synthetic::hyper50(n, seed),
         "uniform2d" => synthetic::uniform(n, 2, seed),
         "uniform5d" => synthetic::uniform(n, 5, seed),
         _ => return None,
@@ -76,6 +80,22 @@ mod tests {
             }
         }
         assert!(by_name("nonexistent", 10, 0).is_none());
+    }
+
+    #[test]
+    fn registry_covers_high_dim_sets() {
+        // the hyper sets ride outside PAPER_SUITE (the paper's table
+        // protocol must keep its six rows) but resolve by name
+        for (name, d) in [("hyper20", 20), ("hyper50", 50)] {
+            let ds = by_name(name, 150, 7).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(ds.dim(), d, "{name}");
+            assert_eq!(ds.len(), 150);
+            for j in 0..ds.dim() {
+                let lo = ds.points.col_min()[j];
+                let hi = ds.points.col_max()[j];
+                assert!(lo >= -1e-12 && hi <= 1.0 + 1e-12, "{name} dim {j}: [{lo},{hi}]");
+            }
+        }
     }
 
     #[test]

@@ -176,6 +176,21 @@ pub fn texture16(n: usize, seed: u64) -> Matrix {
     to_unit_cube(&Matrix::from_rows(&rows))
 }
 
+/// hyper20 (20-D): clustered correlated Gaussian mixture past the
+/// paper's dimensional range — the regime the sliced Fourier engine
+/// targets, where series expansions explode and dual trees stop
+/// pruning. More modes than the low-D sets so the mixture stays
+/// genuinely multi-modal after unit-cube scaling.
+pub fn hyper20(n: usize, seed: u64) -> Matrix {
+    correlated_mixture(n, 20, 10, 0.6, seed)
+}
+
+/// hyper50 (50-D): the stress end of the high-dimensional regime —
+/// same clustered structure as [`hyper20`] at 50 ambient dimensions.
+pub fn hyper50(n: usize, seed: u64) -> Matrix {
+    correlated_mixture(n, 50, 12, 0.6, seed ^ 0x50d1)
+}
+
 /// Shared helper: k-mode Gaussian mixture with per-mode correlation
 /// (each mode stretched along a random direction by `anis`).
 fn correlated_mixture(n: usize, d: usize, k: usize, anis: f64, seed: u64) -> Matrix {
@@ -243,6 +258,8 @@ mod tests {
             ("pall7", pall7(1500, 5)),
             ("covtype10", covtype10(1500, 5)),
             ("texture16", texture16(1500, 5)),
+            ("hyper20", hyper20(1500, 5)),
+            ("hyper50", hyper50(1500, 5)),
         ];
         for (name, m) in &gens {
             let u = uniform(1500, m.cols(), 99);
@@ -261,6 +278,8 @@ mod tests {
             (pall7(400, 1), 7),
             (covtype10(400, 1), 10),
             (texture16(400, 1), 16),
+            (hyper20(400, 1), 20),
+            (hyper50(400, 1), 50),
         ] {
             assert_eq!(m.rows(), 400);
             assert_eq!(m.cols(), d);

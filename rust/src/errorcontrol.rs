@@ -314,6 +314,45 @@ pub fn split_epsilon_kernel(eps: f64, decomp_err: f64, weight_sum: f64) -> Optio
     Some(KernelEpsSplit { decomp_err, component_eps: (eps - decomp_err) / weight_sum })
 }
 
+// ---- ε-budget split for the sliced Fourier engine ----
+
+/// How a `Method::Sliced` evaluate's ε budget is divided between the
+/// deterministic truncated-Fourier certificate and the Monte-Carlo
+/// slicing error the P-doubling loop verifies (see
+/// [`split_epsilon_sliced`]).
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct SlicedEpsSplit {
+    /// Relative charge of the certified per-slice Fourier error:
+    /// `W·bound / min_q G(q)` for the worst per-slice pointwise bound.
+    pub fourier_rel: f64,
+    /// Relative budget left for the slicing Monte-Carlo error.
+    pub mc_eps: f64,
+}
+
+/// Charge the sliced engine's deterministic Fourier error out of the
+/// caller's ε before the Monte-Carlo verification loop, mirroring
+/// [`split_epsilon_kernel`]'s admission gate: the certificate must
+/// cost at most a quarter of the budget (`None` otherwise — the
+/// session plans each slice against a ε/4-sized target, so an
+/// in-budget certificate exists whenever planning succeeded).
+///
+/// Soundness — every slice plan certifies the pointwise bound
+/// |f(z) − g_K(z)| ≤ β on its 1-D approximation, so each per-query
+/// slice sum (and therefore their average over P slices) is within
+/// W·β of the exact sliced average, absolutely. Dividing by the
+/// smallest exact sum turns that into the relative charge
+/// `fourier_rel = W·β / min_q G(q)`; the P-doubling loop then accepts
+/// only when the *measured* total relative error (Fourier + Monte
+/// Carlo together) is ≤ ε, with `mc_eps = ε − fourier_rel` the slack
+/// the Monte-Carlo part may consume.
+pub fn split_epsilon_sliced(eps: f64, fourier_rel: f64) -> Option<SlicedEpsSplit> {
+    debug_assert!(eps > 0.0 && fourier_rel >= 0.0);
+    if !fourier_rel.is_finite() || fourier_rel > 0.25 * eps {
+        return None;
+    }
+    Some(SlicedEpsSplit { fourier_rel, mc_eps: eps - fourier_rel })
+}
+
 /// Per-query-node mutable state for one dual-tree run.
 ///
 /// Bounds are *hierarchical*: the true running bound for a query point q
@@ -541,6 +580,22 @@ mod tests {
         // components always keep at least 3ε/4 when Σw = 1
         let edge = split_epsilon_kernel(1e-4, 0.25e-4, 1.0).unwrap();
         assert!(edge.component_eps >= 0.75e-4);
+    }
+
+    #[test]
+    fn split_epsilon_sliced_charges_and_gates() {
+        // in-budget certificate: the MC loop gets the remainder
+        let s = split_epsilon_sliced(1e-2, 2e-3).unwrap();
+        assert_eq!(s.fourier_rel, 2e-3);
+        assert_eq!(s.mc_eps, 1e-2 - 2e-3);
+        // same ε/4 admission gate as the other splits
+        assert!(split_epsilon_sliced(1e-2, 2.6e-3).is_none());
+        assert!(split_epsilon_sliced(1e-2, 2.5e-3).is_some());
+        // non-finite charges (a slice plan that blew up) are rejected
+        assert!(split_epsilon_sliced(1e-2, f64::INFINITY).is_none());
+        // the MC budget keeps at least 3ε/4
+        let edge = split_epsilon_sliced(1e-4, 0.25e-4).unwrap();
+        assert!(edge.mc_eps >= 0.75e-4);
     }
 
     #[test]

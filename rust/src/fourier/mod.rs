@@ -1,0 +1,453 @@
+//! Truncated-Fourier fast summation of the **sliced** Gaussian kernel
+//! in one dimension — the per-slice workhorse behind
+//! [`crate::algo::sliced`] (Hertrich-style slicing, arXiv 2401.08260).
+//!
+//! # The sliced kernel
+//!
+//! For a unit vector ξ drawn uniformly on the sphere S^{D−1} and any
+//! z ∈ R^D, the repo's Gaussian kernel K(δ) = exp(−δ²/(2h²)) satisfies
+//!
+//! ```text
+//! E_ξ [ f(⟨ξ, z⟩) ] = exp(−‖z‖² / (2h²)),
+//! f(t) = ₁F₁(D/2; 1/2; −t²/(2h²))          (confluent hypergeometric)
+//! ```
+//!
+//! because the even moments of a sphere coordinate are
+//! E[u^{2k}] = (1/2)_k / (D/2)_k, which turns the Gaussian's Taylor
+//! series in ‖z‖² into the ₁F₁ series in t². For **odd** D = 2m+1,
+//! Kummer's transformation collapses ₁F₁ to a degree-m polynomial
+//! times a Gaussian:
+//!
+//! ```text
+//! f(t) = e^{−x} Σ_{k=0}^{m} q_k x^k,   x = t²/(2h²),
+//! q_0 = 1,   q_{k+1} = q_k · (k − m) / ((k + 1/2)(k + 1)).
+//! ```
+//!
+//! (Checks: D = 1 gives f = e^{−x}; D = 3 gives e^{−x}(1 − 2x);
+//! f(0) = 1 always.) Even dimensions are handled by embedding into
+//! D+1: append a zero coordinate to every point and slice R^{D+1} —
+//! the projections ⟨ξ, z⟩ only ever see the first D components.
+//!
+//! # Fourier representation and the certified bounds
+//!
+//! With the convention f̂(ν) = ∫ f(t) e^{−2πiνt} dt, the sliced kernel
+//! has the closed-form transform
+//!
+//! ```text
+//! f̂(ν) = C · |ν|^{2m} · e^{−aν²},   a = 2π²h²,
+//! C = a^{m+1/2} / Γ(m+1/2),   ln Γ(m+1/2) = ln√π + Σ_{i=1}^{m} ln(i−1/2),
+//! ```
+//!
+//! normalized so Σ_k f̂(k) ≈ ∫ f̂ = f(0) = 1. Restricting points to
+//! [−1/8, 1/8] (pairwise differences z ∈ [−1/4, 1/4]) and truncating
+//! the periodization g_K(z) = f̂(0) + 2 Σ_{k=1}^{K} f̂(k) cos(2πkz)
+//! gives the pointwise certificate
+//!
+//! ```text
+//! |f(z) − g_K(z)| ≤ aliasing + truncation
+//! aliasing    ≤ 2 Σ_{n≥1} B(n − 1/4),  B ≥ |f| off the base period,
+//! truncation  ≤ 2 Σ_{k>K} f̂(k) ≤ 4 f̂(K+1)   once f̂(K+2)/f̂(K+1) ≤ 1/2,
+//! ```
+//!
+//! both evaluated in log space with geometric-tail guards (see
+//! [`plan_slice`]). The caller shrinks the working bandwidth
+//! (h̃ = γh, with points scaled by the same γ — the invariance
+//! f_{γh}(γδ) = f_h(δ) is exact) until the aliasing side is small
+//! enough, then picks the smallest K whose truncation tail fits.
+//!
+//! The factored sums ([`fast_sum`]) then cost O((N+M)·K) per slice:
+//! A_k = Σ_n w_n e^{−2πik a_n} by a per-point complex recurrence, and
+//! s_m = f̂(0)A_0 + 2 Σ_k f̂(k) Re(A_k e^{2πik b_m}) per query, both in
+//! fixed ascending order so results are bit-identical across pool
+//! widths and repeated runs.
+
+/// Scaled points must lie in [−`SCALED_HALF_RANGE`, `SCALED_HALF_RANGE`];
+/// the aliasing bound is derived for this window (differences stay
+/// within one quarter period, every alias is ≥ 3/4 away).
+pub const SCALED_HALF_RANGE: f64 = 0.125;
+
+/// Hard cap on the truncation order K; a slice that cannot meet its
+/// error target by this order reports failure instead of looping.
+pub const K_CAP: usize = 8192;
+
+/// Initial working-bandwidth cap: γ is chosen so h̃ = γh ≤ this before
+/// any aliasing-driven halving (aliasing decays like e^{−c/h̃²}).
+const H_TILDE_MAX: f64 = 0.05;
+
+/// Aliasing-driven γ halvings before giving up.
+const MAX_HALVINGS: u32 = 64;
+
+/// Dimension-dependent pieces of the sliced kernel, shared by every
+/// slice of one problem: the polynomial coefficients q_k and the
+/// constants of the log-space Fourier/alias bounds.
+#[derive(Clone, Debug)]
+pub struct SliceProfile {
+    /// Polynomial degree m; the sliced (odd) dimension is 2m+1.
+    m: usize,
+    /// q_0..q_m of the closed-form sliced kernel.
+    q: Vec<f64>,
+    /// ln Σ_k |q_k| (for the aliasing majorant).
+    ln_q_abs_sum: f64,
+    /// ln Γ(m + 1/2).
+    ln_gamma_half: f64,
+}
+
+impl SliceProfile {
+    /// Profile for data dimension `d` ≥ 1. Even `d` is embedded into
+    /// `d + 1` (the projection directions get one extra component that
+    /// multiplies an implicit zero coordinate).
+    pub fn for_dim(d: usize) -> Self {
+        assert!(d >= 1, "dimension must be positive");
+        let odd = if d % 2 == 1 { d } else { d + 1 };
+        let m = (odd - 1) / 2;
+        let mut q = Vec::with_capacity(m + 1);
+        q.push(1.0f64);
+        for k in 0..m {
+            let kf = k as f64;
+            let next = q[k] * (kf - m as f64) / ((kf + 0.5) * (kf + 1.0));
+            q.push(next);
+        }
+        let abs_sum: f64 = q.iter().map(|c| c.abs()).sum();
+        let mut ln_gamma_half = 0.5 * std::f64::consts::PI.ln();
+        for i in 1..=m {
+            ln_gamma_half += (i as f64 - 0.5).ln();
+        }
+        SliceProfile { m, q, ln_q_abs_sum: abs_sum.ln(), ln_gamma_half }
+    }
+
+    /// The odd dimension 2m+1 the projections are drawn in.
+    pub fn sliced_dim(&self) -> usize {
+        2 * self.m + 1
+    }
+
+    /// Reference (slow) evaluation of the sliced kernel f(t) at
+    /// bandwidth `h`: e^{−x} Σ q_k x^k with x = t²/(2h²). Horner in
+    /// descending degree.
+    pub fn eval(&self, h: f64, t: f64) -> f64 {
+        let x = t * t / (2.0 * h * h);
+        let mut poly = 0.0;
+        for &c in self.q.iter().rev() {
+            poly = poly * x + c;
+        }
+        (-x).exp() * poly
+    }
+
+    /// ln f̂(k) for integer frequency k ≥ 1 at working bandwidth
+    /// `h_tilde`: ln C + 2m·ln k − a·k².
+    fn ln_coeff(&self, h_tilde: f64, k: usize) -> f64 {
+        let a = 2.0 * std::f64::consts::PI.powi(2) * h_tilde * h_tilde;
+        let ln_c = (self.m as f64 + 0.5) * a.ln() - self.ln_gamma_half;
+        let kf = k as f64;
+        ln_c + 2.0 * self.m as f64 * kf.ln() - a * kf * kf
+    }
+
+    /// f̂(0): zero for m ≥ 1 (the |ν|^{2m} factor), C for m = 0.
+    fn coeff_zero(&self, h_tilde: f64) -> f64 {
+        if self.m == 0 {
+            let a = 2.0 * std::f64::consts::PI.powi(2) * h_tilde * h_tilde;
+            (0.5 * a.ln() - self.ln_gamma_half).exp()
+        } else {
+            0.0
+        }
+    }
+
+    /// Certified aliasing bound at working bandwidth `h_tilde` ≤
+    /// [`H_TILDE_MAX`], for differences within one quarter period:
+    /// 2 Σ_{n≥1} B(n − 1/4) with the log-space majorant
+    /// B(u) ≤ Qs·(2m/e)^m·e^{−x/2}, x = u²/(2h̃²) (from
+    /// Σ|q_k|x^k ≤ Qs·x^m for x ≥ 1 and x^m e^{−x/2} ≤ (2m/e)^m),
+    /// and the geometric tail r = e^{−(x₂−x₁)/2} (the exponent gaps
+    /// only grow with n).
+    fn alias_bound(&self, h_tilde: f64) -> f64 {
+        let inv2h2 = 1.0 / (2.0 * h_tilde * h_tilde);
+        let x1 = 0.75 * 0.75 * inv2h2;
+        if x1 < 1.0 {
+            // majorant needs x ≥ 1; treat as uncontrolled
+            return f64::INFINITY;
+        }
+        let m = self.m as f64;
+        let ln_peak = if self.m == 0 { 0.0 } else { m * (2.0 * m / std::f64::consts::E).ln() };
+        let ln_first = self.ln_q_abs_sum + ln_peak - 0.5 * x1;
+        let gap = (1.75 * 1.75 - 0.75 * 0.75) * inv2h2; // x₂ − x₁
+        let r = (-0.5 * gap).exp();
+        if r >= 0.5 {
+            return f64::INFINITY;
+        }
+        2.0 * ln_first.exp() / (1.0 - r)
+    }
+}
+
+/// A certified per-slice evaluation plan: the scaling that maps raw
+/// projections into the Fourier window, the truncated coefficient
+/// table, and the pointwise error certificate.
+#[derive(Clone, Debug)]
+pub struct SlicePlan {
+    /// Scale factor: work in u = γ·(t − center), bandwidth h̃ = γ·h.
+    pub gamma: f64,
+    /// Working bandwidth γ·h.
+    pub h_tilde: f64,
+    /// Truncation order K.
+    pub k_max: usize,
+    /// f̂(k) for k = 0..=K at bandwidth h̃.
+    pub coeffs: Vec<f64>,
+    /// Certified pointwise bound: |f(z) − g_K(z)| ≤ `bound` for every
+    /// difference z of scaled points within the window.
+    pub bound: f64,
+}
+
+/// Build a plan for one slice: raw projections span `half_range`
+/// around their midpoint, the kernel bandwidth is `h`, and the plan
+/// must certify a pointwise error ≤ `target`. Fails (with a reason)
+/// when no γ-halving / truncation order within the caps gets there —
+/// the engine surfaces that as the paper's ∞ verdict.
+pub fn plan_slice(
+    profile: &SliceProfile,
+    h: f64,
+    half_range: f64,
+    target: f64,
+) -> Result<SlicePlan, String> {
+    assert!(h > 0.0 && target > 0.0);
+    let span = half_range.max(1e-12);
+    let mut gamma = (SCALED_HALF_RANGE / span).min(H_TILDE_MAX / h);
+    let mut alias = f64::INFINITY;
+    let mut halvings = 0;
+    while halvings <= MAX_HALVINGS {
+        alias = profile.alias_bound(gamma * h);
+        if alias <= 0.5 * target {
+            break;
+        }
+        gamma *= 0.5;
+        halvings += 1;
+    }
+    if alias > 0.5 * target {
+        return Err(format!(
+            "aliasing bound {alias:.2e} above {:.2e} after {MAX_HALVINGS} γ-halvings",
+            0.5 * target
+        ));
+    }
+    let h_tilde = gamma * h;
+    let trunc_target = 0.5 * target;
+    let mut coeffs = vec![profile.coeff_zero(h_tilde)];
+    let mut k = 1usize;
+    loop {
+        let fk = profile.ln_coeff(h_tilde, k).exp();
+        // Accept K = k−1 when the tail past it is certified: the
+        // coefficient ratio is strictly decreasing, so once
+        // f̂(k+1)/f̂(k) ≤ 1/2 the tail 2Σ_{j≥k} f̂(j) ≤ 4 f̂(k).
+        let rho = (profile.ln_coeff(h_tilde, k + 1) - profile.ln_coeff(h_tilde, k)).exp();
+        if rho <= 0.5 && 4.0 * fk <= trunc_target {
+            let trunc = 4.0 * fk;
+            return Ok(SlicePlan { gamma, h_tilde, k_max: k - 1, coeffs, bound: alias + trunc });
+        }
+        coeffs.push(fk);
+        k += 1;
+        if k > K_CAP {
+            return Err(format!(
+                "truncation order exceeds cap {K_CAP} at h̃ = {h_tilde:.3e} \
+                 (target {trunc_target:.2e})"
+            ));
+        }
+    }
+}
+
+/// Factored 1-D fast sum: `out[m] = Σ_n w[n] · g_K(b[m] − a[n])` for
+/// the plan's truncated periodization g_K. Inputs are **scaled**
+/// projections (|a|, |b| ≤ [`SCALED_HALF_RANGE`]); `out` is
+/// overwritten. Deterministic: both loops accumulate in ascending
+/// index/frequency order.
+pub fn fast_sum(plan: &SlicePlan, a: &[f64], w: &[f64], b: &[f64], out: &mut [f64]) {
+    assert_eq!(a.len(), w.len());
+    assert_eq!(b.len(), out.len());
+    let kk = plan.k_max;
+    let two_pi = 2.0 * std::f64::consts::PI;
+    // A_k = Σ_n w_n e^{−2πik a_n}, k = 0..=K, complex as (re, im).
+    let mut are = vec![0.0f64; kk + 1];
+    let mut aim = vec![0.0f64; kk + 1];
+    for (an, wn) in a.iter().zip(w) {
+        let theta = -two_pi * an;
+        let (zr, zi) = (theta.cos(), theta.sin());
+        let (mut pr, mut pi) = (*wn, 0.0f64);
+        for k in 0..=kk {
+            are[k] += pr;
+            aim[k] += pi;
+            let nr = pr * zr - pi * zi;
+            pi = pr * zi + pi * zr;
+            pr = nr;
+        }
+    }
+    // s_m = f̂(0)·A_0 + 2 Σ_{k≥1} f̂(k)·Re(A_k e^{2πik b_m}).
+    for (bm, slot) in b.iter().zip(out.iter_mut()) {
+        let theta = two_pi * bm;
+        let (zr, zi) = (theta.cos(), theta.sin());
+        let (mut pr, mut pi) = (1.0f64, 0.0f64);
+        let mut s = plan.coeffs[0] * are[0];
+        for k in 1..=kk {
+            let nr = pr * zr - pi * zi;
+            pi = pr * zi + pi * zr;
+            pr = nr;
+            s += 2.0 * plan.coeffs[k] * (are[k] * pr - aim[k] * pi);
+        }
+        *slot = s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn polynomial_coefficients_match_closed_forms() {
+        // d = 1 → m = 0 → f = e^{−x}
+        let p1 = SliceProfile::for_dim(1);
+        assert_eq!(p1.q, vec![1.0]);
+        // d = 3 → m = 1 → f = e^{−x}(1 − 2x)
+        let p3 = SliceProfile::for_dim(3);
+        assert_eq!(p3.q.len(), 2);
+        assert!((p3.q[0] - 1.0).abs() < 1e-15 && (p3.q[1] + 2.0).abs() < 1e-15);
+        // even dims embed upward
+        assert_eq!(SliceProfile::for_dim(4).sliced_dim(), 5);
+        assert_eq!(SliceProfile::for_dim(20).sliced_dim(), 21);
+        // f(0) = 1 in every dimension
+        for d in [1, 2, 3, 5, 20, 50] {
+            let p = SliceProfile::for_dim(d);
+            assert!((p.eval(0.37, 0.0) - 1.0).abs() < 1e-12, "d={d}");
+        }
+    }
+
+    #[test]
+    fn ln_gamma_half_matches_known_values() {
+        let sqrt_pi = std::f64::consts::PI.sqrt();
+        // Γ(1/2) = √π, Γ(3/2) = √π/2, Γ(5/2) = 3√π/4
+        assert!((SliceProfile::for_dim(1).ln_gamma_half - sqrt_pi.ln()).abs() < 1e-12);
+        assert!((SliceProfile::for_dim(3).ln_gamma_half - (sqrt_pi / 2.0).ln()).abs() < 1e-12);
+        assert!((SliceProfile::for_dim(5).ln_gamma_half - (3.0 * sqrt_pi / 4.0).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slicing_expectation_reproduces_the_gaussian() {
+        // E_ξ f(⟨ξ, z⟩) = exp(−‖z‖²/(2h²)) — Monte Carlo check in d = 5.
+        let d = 5;
+        let profile = SliceProfile::for_dim(d);
+        let h = 0.4;
+        let z = [0.3, -0.1, 0.2, 0.05, -0.25];
+        let znorm2: f64 = z.iter().map(|v| v * v).sum();
+        let expect = (-znorm2 / (2.0 * h * h)).exp();
+        let mut rng = Pcg32::new(42);
+        let trials = 40_000;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let g: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let norm = g.iter().map(|v| v * v).sum::<f64>().sqrt();
+            let t: f64 = g.iter().zip(&z).map(|(gi, zi)| gi / norm * zi).sum();
+            acc += profile.eval(h, t);
+        }
+        let mc = acc / trials as f64;
+        assert!((mc - expect).abs() < 0.02, "mc={mc} expect={expect}");
+    }
+
+    #[test]
+    fn fourier_coefficients_sum_to_one() {
+        // Σ_k f̂(k) = Σ_n f(n) ≈ f(0) = 1 by Poisson summation.
+        for d in [1, 3, 21, 51] {
+            let profile = SliceProfile::for_dim(d);
+            let h_tilde = 0.03;
+            let mut sum = profile.coeff_zero(h_tilde);
+            for k in 1..=4096 {
+                sum += 2.0 * profile.ln_coeff(h_tilde, k).exp();
+            }
+            assert!((sum - 1.0).abs() < 1e-10, "d={d} sum={sum}");
+        }
+    }
+
+    #[test]
+    fn plan_certifies_and_truncates() {
+        let profile = SliceProfile::for_dim(21);
+        let plan = plan_slice(&profile, 0.5, 2.0, 1e-6).expect("plan");
+        assert!(plan.k_max >= 1 && plan.k_max <= K_CAP);
+        assert!(plan.bound <= 1e-6);
+        assert!(plan.h_tilde <= H_TILDE_MAX + 1e-15);
+        assert!(plan.gamma * 2.0 <= SCALED_HALF_RANGE + 1e-15);
+        // d = 51 at the same bandwidth needs γ-halvings (the alias
+        // majorant blows up at h̃ = 0.05) but still certifies.
+        let p51 = SliceProfile::for_dim(51);
+        let plan51 = plan_slice(&p51, 0.5, 2.0, 1e-6).expect("plan51");
+        assert!(plan51.h_tilde < plan.h_tilde);
+        assert!(plan51.bound <= 1e-6);
+    }
+
+    #[test]
+    fn plan_reports_hopeless_targets() {
+        let profile = SliceProfile::for_dim(21);
+        assert!(plan_slice(&profile, 0.5, 2.0, 1e-300).is_err());
+    }
+
+    #[test]
+    fn fast_sum_matches_direct_cosine_series() {
+        let profile = SliceProfile::for_dim(7);
+        let plan = plan_slice(&profile, 0.3, 1.5, 1e-8).expect("plan");
+        let mut rng = Pcg32::new(7);
+        let n = 40;
+        let a: Vec<f64> = (0..n).map(|_| rng.uniform_in(-0.125, 0.125)).collect();
+        let w: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.1, 2.0)).collect();
+        let b: Vec<f64> = (0..25).map(|_| rng.uniform_in(-0.125, 0.125)).collect();
+        let mut fast = vec![0.0; b.len()];
+        fast_sum(&plan, &a, &w, &b, &mut fast);
+        for (m, bm) in b.iter().enumerate() {
+            let mut direct = 0.0;
+            for (an, wn) in a.iter().zip(&w) {
+                let z = bm - an;
+                let mut g = plan.coeffs[0];
+                for k in 1..=plan.k_max {
+                    g += 2.0 * plan.coeffs[k]
+                        * (2.0 * std::f64::consts::PI * k as f64 * z).cos();
+                }
+                direct += wn * g;
+            }
+            assert!((fast[m] - direct).abs() < 1e-9, "m={m}: {} vs {direct}", fast[m]);
+        }
+    }
+
+    #[test]
+    fn fast_sum_error_stays_within_the_certificate() {
+        // Against the true sliced kernel Σ w f(γ(t_b − t_a)) at the
+        // working bandwidth — the pointwise certificate times Σw.
+        let profile = SliceProfile::for_dim(21);
+        let h = 0.4;
+        let half_range = 1.0;
+        let target = 1e-7;
+        let plan = plan_slice(&profile, h, half_range, target).expect("plan");
+        let mut rng = Pcg32::new(11);
+        let n = 60;
+        let raw_a: Vec<f64> = (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let w: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.5, 1.5)).collect();
+        let raw_b: Vec<f64> = (0..30).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let a: Vec<f64> = raw_a.iter().map(|t| plan.gamma * t).collect();
+        let b: Vec<f64> = raw_b.iter().map(|t| plan.gamma * t).collect();
+        let mut fast = vec![0.0; b.len()];
+        fast_sum(&plan, &a, &w, &b, &mut fast);
+        let wsum: f64 = w.iter().sum();
+        for (m, bm) in b.iter().enumerate() {
+            let exact: f64 = a
+                .iter()
+                .zip(&w)
+                .map(|(an, wn)| wn * profile.eval(plan.h_tilde, bm - an))
+                .sum();
+            let err = (fast[m] - exact).abs();
+            // small slack over the certificate for fp roundoff
+            assert!(err <= plan.bound * wsum + 1e-10, "m={m} err={err:.3e}");
+        }
+    }
+
+    #[test]
+    fn scaling_invariance_is_exact() {
+        // f_{γh}(γδ) = f_h(δ): x = t²/(2h²) is γ-invariant.
+        let profile = SliceProfile::for_dim(9);
+        for gamma in [0.5, 0.01, 3.0] {
+            let (h, delta) = (0.7, 0.33);
+            let lhs = profile.eval(gamma * h, gamma * delta);
+            let rhs = profile.eval(h, delta);
+            assert!((lhs - rhs).abs() < 1e-14, "γ={gamma}");
+        }
+    }
+}

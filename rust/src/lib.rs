@@ -20,7 +20,10 @@
 //!   Gaussian request per component into the pooled batch path; the
 //!   Gaussian default is bit-for-bit unchanged.
 //! * L3 (this crate): trees, expansions, translation operators, error
-//!   control, the seven algorithms, LSCV, sweep coordination, CLI.
+//!   control, the eight algorithms (the paper's seven plus the sliced
+//!   Fourier engine [`algo::sliced`] for high dimensions, built on the
+//!   certified 1-D fast sum in [`fourier`]), LSCV, sweep coordination,
+//!   CLI.
 //!   Every fan-out — dual-tree traversal splits, session batches, the
 //!   coordinator's sweep cells — schedules onto one shared
 //!   work-stealing pool ([`runtime::pool::WorkStealPool`]) with a
@@ -62,6 +65,7 @@ pub mod hermite;
 pub mod bounds;
 pub mod tree;
 pub mod errorcontrol;
+pub mod fourier;
 pub mod algo;
 pub mod api;
 pub mod kde;

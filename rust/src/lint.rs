@@ -89,13 +89,14 @@ const SAFETY_WINDOW: usize = 6;
 
 /// Config keys that surface as `PrepareOptions` fields, by their
 /// primary `key = value` spelling.
-const KEY_TO_FIELD: [(&str, &str); 6] = [
+const KEY_TO_FIELD: [(&str, &str); 7] = [
     ("workers", "threads"),
     ("leaf-size", "leaf_size"),
     ("fast-exp", "fast_exp"),
     ("simd", "simd"),
     ("precision", "precision"),
     ("kernel", "kernel"),
+    ("slices", "slices"),
 ];
 
 /// `PrepareOptions` fields that deliberately have no config-file

@@ -1,0 +1,183 @@
+//! Sliced Fourier engine integration: ε-verification on high-dim
+//! datasets at both tolerance regimes, the P-doubling protocol's
+//! convergent and hopeless paths, pool-width bit-identity, bichromatic
+//! and weighted requests, and the Method/config parity surface.
+//!
+//! Bandwidth choices are deliberate, not arbitrary: the slicing
+//! Monte-Carlo variance per projection scales like the squared
+//! pair-distance-to-bandwidth ratio, so ε = 1e-2 is reachable at
+//! moderate bandwidths (h of the order of the data diameter) while
+//! ε = 1e-4 needs the large-bandwidth regime (h a few times the
+//! diameter) to verify within the doubling budget. Outside those
+//! regimes the engine reports the paper's ∞ rather than answering
+//! wrong — the hopeless-path test pins exactly that.
+
+use fastgauss::algo::{max_relative_error, naive::Naive, AlgoError, GaussSum, GaussSumProblem};
+use fastgauss::api::{EvalRequest, Method, PrepareOptions, Session};
+use fastgauss::config::RunConfig;
+use fastgauss::data::synthetic;
+use fastgauss::geometry::Matrix;
+
+fn eval_sliced(session: &Session<'_>, h: f64, eps: f64) -> fastgauss::api::Evaluation {
+    session
+        .evaluate(&EvalRequest::kde(h, eps).with_method(Method::Sliced))
+        .unwrap_or_else(|e| panic!("Sliced h={h} eps={eps}: {e}"))
+}
+
+/// Sliced answers verify against the exhaustive truth on uniform noise
+/// and both hyper sets, at the moderate-bandwidth ε = 1e-2 regime and
+/// the large-bandwidth ε = 1e-4 regime.
+#[test]
+fn sliced_meets_epsilon_on_uniform_and_hyper_sets() {
+    let cases: [(&str, Matrix, f64, f64); 6] = [
+        ("uniform20", synthetic::uniform(130, 20, 11), 2.0, 1e-2),
+        ("hyper20", synthetic::hyper20(130, 11), 2.0, 1e-2),
+        ("hyper50", synthetic::hyper50(130, 11), 3.0, 1e-2),
+        ("uniform20", synthetic::uniform(130, 20, 12), 20.0, 1e-4),
+        ("hyper20", synthetic::hyper20(130, 12), 20.0, 1e-4),
+        ("hyper50", synthetic::hyper50(130, 12), 25.0, 1e-4),
+    ];
+    for (name, data, h, eps) in &cases {
+        let session = Session::kde(data);
+        let ev = eval_sliced(&session, *h, *eps);
+        assert_eq!(ev.method, Method::Sliced);
+        // the session's own verification verdict...
+        let reported = ev.rel_err.expect("Sliced answers carry the verified rel_err");
+        assert!(
+            reported <= eps * (1.0 + 1e-9),
+            "{name} h={h} eps={eps}: reported rel {reported:.2e}"
+        );
+        // ...and an independent re-measurement against fresh truth
+        let problem = GaussSumProblem::kde(data, *h, *eps);
+        let exact = Naive::new().run(&problem).unwrap().sums;
+        let rel = max_relative_error(&ev.sums, &exact);
+        assert!(rel <= eps * (1.0 + 1e-9), "{name} h={h} eps={eps}: measured rel {rel:.2e}");
+    }
+}
+
+/// The P-doubling protocol converges where slicing is viable and
+/// reports the paper's ∞ (never a wrong answer) where it is not: a
+/// bandwidth orders of magnitude under the data spread pushes the
+/// Fourier truncation past its cap on every slice.
+#[test]
+fn p_doubling_converges_and_reports_hopeless_bandwidths() {
+    let data = synthetic::hyper20(300, 3);
+    let session = Session::kde(&data);
+    let ev = eval_sliced(&session, 2.5, 1e-2);
+    assert!(ev.rel_err.unwrap() <= 1e-2 * (1.0 + 1e-9));
+    match session.evaluate(&EvalRequest::kde(1e-3, 1e-2).with_method(Method::Sliced)) {
+        Err(AlgoError::ToleranceUnreachable(msg)) => {
+            assert!(msg.contains("slice"), "∞ must name the failing slice plan: {msg}");
+        }
+        other => panic!("expected ∞ at h=1e-3, got {other:?}"),
+    }
+}
+
+/// One seed, one dataset: the accepted Sliced answer is bit-identical
+/// across pool widths 1, 2 and 8, and across repeated evaluates on one
+/// session — the slice blocks are absolute-indexed and folded in block
+/// order, so the schedule never touches the arithmetic.
+#[test]
+fn sliced_is_bit_identical_across_pool_widths_and_repeats() {
+    let data = synthetic::hyper20(140, 7);
+    let mut answers = Vec::new();
+    for threads in [1usize, 2, 8] {
+        let session =
+            Session::prepare(&data, PrepareOptions { threads, ..Default::default() });
+        let first = eval_sliced(&session, 2.5, 1e-2);
+        let second = eval_sliced(&session, 2.5, 1e-2);
+        assert_eq!(first.sums, second.sums, "threads={threads}: repeat evaluate diverged");
+        assert_eq!(first.rel_err, second.rel_err);
+        answers.push(first.sums);
+    }
+    assert_eq!(answers[0], answers[1], "widths 1 vs 2 diverged");
+    assert_eq!(answers[0], answers[2], "widths 1 vs 8 diverged");
+}
+
+/// Bichromatic (explicit query set) and weighted requests go through
+/// the same verified path: the answer must meet ε against a fresh
+/// exhaustive run of the same problem.
+#[test]
+fn bichromatic_and_weighted_requests_verify() {
+    let refs = synthetic::hyper20(150, 21);
+    let queries = synthetic::uniform(60, 20, 22);
+    let weights: Vec<f64> = (0..150).map(|i| 0.5 + (i as f64) / 150.0).collect();
+    let (h, eps) = (2.5, 1e-2);
+
+    let session = Session::kde(&refs);
+    let ev = session
+        .evaluate(&EvalRequest::kde(h, eps).with_method(Method::Sliced).with_queries(&queries))
+        .unwrap();
+    assert_eq!(ev.sums.len(), 60);
+    let problem = GaussSumProblem::new(&queries, &refs, None, h, eps);
+    let exact = Naive::new().run(&problem).unwrap().sums;
+    assert!(max_relative_error(&ev.sums, &exact) <= eps * (1.0 + 1e-9), "bichromatic");
+
+    let wsession = Session::prepare(
+        &refs,
+        PrepareOptions { weights: Some(weights.clone()), ..Default::default() },
+    );
+    let ev = eval_sliced(&wsession, h, eps);
+    let mut problem = GaussSumProblem::new(&refs, &refs, Some(&weights), h, eps);
+    problem.monochromatic = true;
+    let exact = Naive::new().run(&problem).unwrap().sums;
+    assert!(max_relative_error(&ev.sums, &exact) <= eps * (1.0 + 1e-9), "weighted");
+}
+
+/// `Method::Auto` routes the high-dimensional, non-near-diagonal
+/// regime to Sliced — and keeps its pre-existing low-D and small-N
+/// choices (the full low-D golden table lives in session_api.rs).
+#[test]
+fn auto_selects_sliced_in_high_dimensions() {
+    for (data, h) in [(synthetic::hyper20(400, 5), 0.5), (synthetic::hyper50(400, 5), 0.8)] {
+        let session = Session::kde(&data);
+        assert_eq!(session.resolve(&EvalRequest::kde(h, 1e-2)), Method::Sliced);
+        // near-diagonal stays with the FD-only dual tree in any dim
+        let tiny = session.data_scale() * 1e-3;
+        assert_eq!(session.resolve(&EvalRequest::kde(tiny, 1e-2)), Method::Dfdo);
+    }
+    // small N: preparation can't amortize, Naive wins regardless of dim
+    let small = synthetic::hyper20(100, 5);
+    let session = Session::kde(&small);
+    assert_eq!(session.resolve(&EvalRequest::kde(0.5, 1e-2)), Method::Naive);
+    // low-D stays on the paper's engines
+    let low = synthetic::astro2d(400, 5);
+    let session = Session::kde(&low);
+    let picked = session.resolve(&EvalRequest::kde(session.data_scale(), 1e-2));
+    assert_ne!(picked, Method::Sliced, "low-D must not route to Sliced");
+}
+
+/// The parity surface: Method::parse round-trips the new name, the
+/// paper table order stays the paper's seven rows, and the config keys
+/// (`method = sliced`, `slices = P`) reach their PrepareOptions fields.
+#[test]
+fn method_and_config_round_trips() {
+    assert_eq!(Method::parse("sliced"), Some(Method::Sliced));
+    assert_eq!(Method::parse("SLICED"), Some(Method::Sliced));
+    assert_eq!(Method::Sliced.name(), "Sliced");
+    for m in Method::ALL {
+        assert_eq!(Method::parse(m.name()), Some(m), "{} must round-trip", m.name());
+    }
+    assert_eq!(Method::paper_order().len(), 7, "the paper table keeps its seven rows");
+    assert!(!Method::paper_order().contains(&Method::Sliced));
+    assert!(!Method::Sliced.guarantees_tolerance(), "verified by the session, not a priori");
+    assert!(Method::Sliced.dual_tree_config(32, None).is_none());
+
+    let mut cfg = RunConfig::default();
+    cfg.set("method", "sliced").unwrap();
+    assert_eq!(cfg.method, Method::Sliced);
+    cfg.set("slices", "256").unwrap();
+    assert_eq!(cfg.slices, 256);
+    assert_eq!(PrepareOptions::default().slices, 0, "0 = engine-chosen start");
+}
+
+/// A caller-pinned slice start threads through PrepareOptions into the
+/// doubling loop and still comes back ε-verified.
+#[test]
+fn explicit_slice_start_still_verifies() {
+    let data = synthetic::hyper20(130, 9);
+    let session =
+        Session::prepare(&data, PrepareOptions { slices: 256, ..Default::default() });
+    let ev = eval_sliced(&session, 2.5, 1e-2);
+    assert!(ev.rel_err.unwrap() <= 1e-2 * (1.0 + 1e-9));
+}
