@@ -87,7 +87,7 @@
 //! above.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::bounds::{odp::OdpBounds, opd::OpdBounds, NeverBounds, NodeGeometry, TruncationBounds};
 use crate::compute::simd::{Lanes, Precision, SimdMode};
@@ -102,6 +102,7 @@ use crate::hermite::{
 use crate::kernel::GaussianKernel;
 use crate::multiindex::Layout;
 use crate::runtime::pool::WorkStealPool;
+use crate::runtime::sync::SyncMutex;
 use crate::tree::{plimit_for_dim, BuildParams, KdTree, RefMoments};
 use crate::util::timer::time_it;
 
@@ -465,7 +466,7 @@ pub struct SweepEngine {
     /// (inline/width-1 by default; a [`crate::api::Session`] shares its
     /// pool here so batches and traversals compose).
     pool: Arc<WorkStealPool>,
-    moment_cache: Mutex<MomentCache>,
+    moment_cache: SyncMutex<MomentCache>,
 }
 
 impl SweepEngine {
@@ -496,7 +497,7 @@ impl SweepEngine {
             build_secs,
             tree_builds,
             pool: Arc::new(WorkStealPool::inline()),
-            moment_cache: Mutex::new(MomentCache::new(DEFAULT_MOMENT_CACHE_CAPACITY)),
+            moment_cache: SyncMutex::new(MomentCache::new(DEFAULT_MOMENT_CACHE_CAPACITY)),
         }
     }
 
@@ -795,7 +796,7 @@ impl SweepEngine {
         // at prepare) or builds one on first use, and returns it after
         // draining — live States ≈ effective concurrency, not tasks.
         // Reuse is sound because tasks touch disjoint subtree slots.
-        let states: Mutex<Vec<State>> = Mutex::new(Vec::new());
+        let states: SyncMutex<Vec<State>> = SyncMutex::new(Vec::new());
         let parts: Vec<(RunStats, Vec<f64>)> = self.pool.run_indexed(roots.len(), |k| {
             let q0 = roots[k];
             let mut st = states

@@ -38,7 +38,9 @@
 use std::collections::HashMap;
 use std::hash::Hash;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+
+use crate::runtime::sync::SyncMutex;
 
 use crate::algo::dualtree::{run_dualtree, SweepEngine, DEFAULT_MOMENT_CACHE_CAPACITY};
 use crate::algo::fgt::GridFrame;
@@ -337,12 +339,51 @@ enum TruthSlot {
 /// a panic can neither poison this mutex nor strand waiters (see
 /// [`TruthSlot::Failed`]).
 struct TruthCell {
-    slot: Mutex<TruthSlot>,
+    slot: SyncMutex<TruthSlot>,
 }
 
 impl Default for TruthCell {
     fn default() -> Self {
-        TruthCell { slot: Mutex::new(TruthSlot::Pending) }
+        TruthCell { slot: SyncMutex::new(TruthSlot::Pending) }
+    }
+}
+
+impl TruthCell {
+    /// Resolve this cell: reuse a prior resolution, or run `compute`
+    /// under the cell lock (the first requester computes; concurrent
+    /// requesters of the same cell block on the lock and reuse the
+    /// result — Pending→Ready/Failed is a single transition under one
+    /// critical section, so a torn state is unobservable; the
+    /// model-check suite in this file pins that across schedules).
+    /// `Ok` carries `(sums, secs, was_memoized)`; `Err` carries
+    /// `(message, panicked_in_this_call)`.
+    fn get_or_compute(
+        &self,
+        compute: impl FnOnce() -> (Vec<f64>, f64),
+    ) -> Result<(Arc<Vec<f64>>, f64, bool), (String, bool)> {
+        let mut slot = self.slot.lock().unwrap();
+        match &*slot {
+            TruthSlot::Ready(sums, secs) => Ok((Arc::clone(sums), *secs, true)),
+            TruthSlot::Failed(msg) => Err((msg.clone(), false)),
+            TruthSlot::Pending => {
+                // catch_unwind: the guard stays valid across a panic of
+                // `compute`, so the mutex is not poisoned and blocked
+                // waiters proceed into the Failed arm instead of
+                // panicking on `.lock().unwrap()`.
+                match catch_unwind(AssertUnwindSafe(compute)) {
+                    Ok((sums, secs)) => {
+                        let sums = Arc::new(sums);
+                        *slot = TruthSlot::Ready(Arc::clone(&sums), secs);
+                        Ok((sums, secs, false))
+                    }
+                    Err(payload) => {
+                        let msg = panic_message(payload.as_ref());
+                        *slot = TruthSlot::Failed(msg.clone());
+                        Err((msg, true))
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -408,10 +449,10 @@ pub struct Session<'d> {
     data_hi: Vec<f64>,
     prep_secs: f64,
     engine: SweepEngine,
-    grid_frame: Mutex<Option<Arc<GridFrame>>>,
-    ifgt_plans: Mutex<BoundedMemo<(usize, u64), Arc<IfgtPlan>>>,
-    truth: Mutex<BoundedMemo<(Kernel, u64), Arc<TruthCell>>>,
-    sog_memo: Mutex<BoundedMemo<(Kernel, u64, u64, u64), Arc<SumOfGaussians>>>,
+    grid_frame: SyncMutex<Option<Arc<GridFrame>>>,
+    ifgt_plans: SyncMutex<BoundedMemo<(usize, u64), Arc<IfgtPlan>>>,
+    truth: SyncMutex<BoundedMemo<(Kernel, u64), Arc<TruthCell>>>,
+    sog_memo: SyncMutex<BoundedMemo<(Kernel, u64, u64, u64), Arc<SumOfGaussians>>>,
 }
 
 impl<'d> Session<'d> {
@@ -464,10 +505,10 @@ impl<'d> Session<'d> {
             data_hi: data.col_max(),
             prep_secs,
             engine,
-            grid_frame: Mutex::new(None),
-            ifgt_plans: Mutex::new(BoundedMemo::new(IFGT_PLAN_CACHE_CAPACITY)),
-            truth: Mutex::new(BoundedMemo::new(truth_cache_capacity)),
-            sog_memo: Mutex::new(BoundedMemo::new(SOG_CACHE_CAPACITY)),
+            grid_frame: SyncMutex::new(None),
+            ifgt_plans: SyncMutex::new(BoundedMemo::new(IFGT_PLAN_CACHE_CAPACITY)),
+            truth: SyncMutex::new(BoundedMemo::new(truth_cache_capacity)),
+            sog_memo: SyncMutex::new(BoundedMemo::new(SOG_CACHE_CAPACITY)),
         }
     }
 
@@ -697,33 +738,13 @@ impl<'d> Session<'d> {
                 }
             }
         };
-        let mut slot = cell.slot.lock().unwrap();
-        match &*slot {
-            TruthSlot::Ready(sums, secs) => Ok((Arc::clone(sums), *secs, true)),
-            TruthSlot::Failed(msg) => Err(AlgoError::Internal(format!(
-                "exhaustive {kernel} truth for h={h:.6e} previously failed: {msg}"
-            ))),
-            TruthSlot::Pending => {
-                // catch_unwind: the guard stays valid across a panic of
-                // `compute`, so the mutex is not poisoned and blocked
-                // waiters proceed into the Failed arm instead of
-                // panicking on `.lock().unwrap()`.
-                match catch_unwind(AssertUnwindSafe(compute)) {
-                    Ok((sums, secs)) => {
-                        let sums = Arc::new(sums);
-                        *slot = TruthSlot::Ready(Arc::clone(&sums), secs);
-                        Ok((sums, secs, false))
-                    }
-                    Err(payload) => {
-                        let msg = panic_message(payload.as_ref());
-                        *slot = TruthSlot::Failed(msg.clone());
-                        Err(AlgoError::Internal(format!(
-                            "exhaustive {kernel} truth for h={h:.6e} panicked: {msg}"
-                        )))
-                    }
-                }
-            }
-        }
+        cell.get_or_compute(compute).map_err(|(msg, fresh)| {
+            AlgoError::Internal(if fresh {
+                format!("exhaustive {kernel} truth for h={h:.6e} panicked: {msg}")
+            } else {
+                format!("exhaustive {kernel} truth for h={h:.6e} previously failed: {msg}")
+            })
+        })
     }
 
     // ---- per-method evaluation paths ----
@@ -1170,5 +1191,76 @@ mod tests {
         for (sums, _, _) in &results {
             assert!(Arc::ptr_eq(sums, &results[0].0), "waiters must share the one result");
         }
+    }
+}
+
+/// Model-checked `TruthCell` invariants: the plain tests above try a
+/// few OS schedules; these assert over *every* explored interleaving
+/// of two requesters (`cargo test --features modelcheck`).
+#[cfg(all(test, feature = "modelcheck"))]
+mod mc_tests {
+    use super::*;
+    use crate::runtime::modelcheck::{self, McConfig};
+    use crate::runtime::sync;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Pending→Ready resolves exactly once — no schedule lets two
+    /// requesters both compute, or either observe a torn state.
+    #[test]
+    fn truth_cell_computes_exactly_once_across_all_schedules() {
+        let report = modelcheck::explore(&McConfig::dfs(), || {
+            let cell = Arc::new(TruthCell::default());
+            let computes = Arc::new(AtomicUsize::new(0));
+            let (c2, n2) = (Arc::clone(&cell), Arc::clone(&computes));
+            let h = sync::spawn_thread("mc-truth".to_string(), None, move || {
+                let got = c2.get_or_compute(|| {
+                    n2.fetch_add(1, Ordering::SeqCst);
+                    (vec![1.0, 2.0], 0.5)
+                });
+                let (sums, secs, _) = got.expect("truth compute must succeed");
+                assert_eq!(*sums, vec![1.0, 2.0], "torn or wrong Ready state");
+                assert_eq!(secs, 0.5);
+            })
+            .expect("spawn");
+            let got = cell.get_or_compute(|| {
+                computes.fetch_add(1, Ordering::SeqCst);
+                (vec![1.0, 2.0], 0.5)
+            });
+            let (sums, _, _) = got.expect("truth compute must succeed");
+            assert_eq!(*sums, vec![1.0, 2.0], "torn or wrong Ready state");
+            h.join().expect("join");
+            assert_eq!(computes.load(Ordering::SeqCst), 1, "exactly one compute may run");
+        });
+        assert!(report.ok(), "{}", report.failure.map(|f| f.to_string()).unwrap_or_default());
+        assert!(report.exhausted, "two-requester DFS must fit the schedule budget");
+    }
+
+    /// A panicking compute resolves the cell to Failed for the
+    /// concurrent waiter and stays failed for later requesters — under
+    /// every schedule, with no poisoned-mutex panic escaping.
+    #[test]
+    fn truth_cell_panic_is_clean_and_sticky_across_all_schedules() {
+        let report = modelcheck::explore(&McConfig::dfs(), || {
+            let cell = Arc::new(TruthCell::default());
+            let c2 = Arc::clone(&cell);
+            let h = sync::spawn_thread("mc-truth-panic".to_string(), None, move || {
+                let got = c2.get_or_compute(|| panic!("injected truth failure"));
+                let (msg, _) = got.expect_err("both requesters must see the failure");
+                assert!(msg.contains("injected truth failure"), "{msg}");
+            })
+            .expect("spawn");
+            let got = cell.get_or_compute(|| panic!("injected truth failure"));
+            let (msg, _) = got.expect_err("both requesters must see the failure");
+            assert!(msg.contains("injected truth failure"), "{msg}");
+            h.join().expect("join");
+            // sticky: a later requester sees the memoized failure and
+            // never recomputes (a recompute would resolve Ready)
+            let (msg, fresh) = cell
+                .get_or_compute(|| (vec![9.9], 9.9))
+                .expect_err("cell must stay failed");
+            assert!(msg.contains("injected truth failure"), "{msg}");
+            assert!(!fresh, "later requesters must see a memoized failure");
+        });
+        assert!(report.ok(), "{}", report.failure.map(|f| f.to_string()).unwrap_or_default());
     }
 }

@@ -22,8 +22,7 @@
 //! smoke run therefore *fails the job* if any measured `rel_err`
 //! exceeds its ε.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use crate::runtime::sync::{Ordering, SyncAtomicUsize, SyncMutex};
 
 use crate::algo::dualtree::{DualTreeConfig, SweepEngine};
 use crate::algo::fgt::GridFrame;
@@ -190,15 +189,17 @@ fn old_model_batch(
     workers: usize,
 ) -> Vec<Vec<f64>> {
     let workers = workers.min(requests.len()).max(1);
-    let slots: Vec<Mutex<Option<Vec<f64>>>> =
-        (0..requests.len()).map(|_| Mutex::new(None)).collect();
-    let next = AtomicUsize::new(0);
+    let slots: Vec<SyncMutex<Option<Vec<f64>>>> =
+        (0..requests.len()).map(|_| SyncMutex::new(None)).collect();
+    let next = SyncAtomicUsize::new(0);
     // lint: allow(raw-thread): this IS the pre-pool "old model" being benchmarked against the pool
     std::thread::scope(|scope| {
         for _ in 0..workers {
             let slots = &slots;
             let next = &next;
             scope.spawn(move || loop {
+                // ORDER: Relaxed — work-ticket counter; each index is
+                // claimed by exactly one RMW and orders nothing else.
                 let k = next.fetch_add(1, Ordering::Relaxed);
                 if k >= requests.len() {
                     break;

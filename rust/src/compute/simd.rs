@@ -49,6 +49,7 @@
 //! `errorcontrol::split_epsilon_prec` has charged the derived f32
 //! representation error against the ε budget.
 
+// lint: allow(sync-bypass): process-wide one-time lane detection below the runtime layer — no scheduling to explore
 use std::sync::OnceLock;
 
 use super::fastexp;
@@ -268,6 +269,7 @@ pub fn parse_env_simd(value: Option<&str>) -> EnvSimd {
 /// unrecognized value warns once on stderr and falls back to
 /// detection instead of being silently treated as `off`.
 pub fn active() -> &'static Lanes {
+    // lint: allow(sync-bypass): process-wide one-time lane detection below the runtime layer — no scheduling to explore
     static ACTIVE: OnceLock<&'static Lanes> = OnceLock::new();
     ACTIVE.get_or_init(|| {
         let raw = std::env::var("FASTGAUSS_SIMD").ok();

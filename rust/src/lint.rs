@@ -20,13 +20,22 @@
 //!   directly only by the modules that define them; everyone else
 //!   must go through a `Lanes` table (`(lanes.exp_block)(..)`), so a
 //!   scalar-vs-vector split can never be introduced by accident.
-//! * `raw-thread` — `thread::{spawn, scope, Builder}` only in
-//!   `runtime/pool.rs`; all other fan-out uses the pool.
+//! * `raw-thread` — `thread::{spawn, scope, Builder}` only in the
+//!   sync shim ([`SYNC_FILES`]); all other fan-out uses the pool.
 //! * `no-panic` — no `unwrap`/`expect`/`panic!` family in library
 //!   code, except the blessed mutex-poisoning idiom
 //!   (`.lock().unwrap()` et al. — poisoning means a panic already
 //!   happened elsewhere) and the driver modules listed in
 //!   [`DRIVER_FILES`].
+//! * `sync-bypass` — raw `std::sync` primitives (`Mutex`, `Condvar`,
+//!   atomics, `Once*`, …) and `thread::park` may be named only inside
+//!   the sync shim ([`SYNC_FILES`]); everything else uses the
+//!   `Sync*` shim types, so the model checker
+//!   ([`crate::runtime::modelcheck`]) sees every operation.
+//! * `ordering-audit` — every non-`SeqCst` `Ordering::` argument
+//!   (`Relaxed`/`Acquire`/`Release`/`AcqRel`) carries a `// ORDER:`
+//!   justification within [`ORDER_WINDOW`] preceding lines, mirroring
+//!   the `// SAFETY:` rule: a weakened ordering is a proof obligation.
 //! * `parity` — config keys, `--flags` and `PrepareOptions` fields
 //!   stay in one-to-one correspondence (modulo the explicit alias
 //!   and internal-field tables below).
@@ -46,16 +55,28 @@ use std::path::{Path, PathBuf};
 pub const RULE_SAFETY: &str = "safety-comment";
 /// Hot kernel named outside the dispatch-table modules.
 pub const RULE_LANES: &str = "lanes-bypass";
-/// Raw `std::thread` primitive outside the pool.
+/// Raw `std::thread` primitive outside the sync shim.
 pub const RULE_THREAD: &str = "raw-thread";
 /// Panicking construct in library code.
 pub const RULE_PANIC: &str = "no-panic";
+/// Raw `std::sync` primitive outside the sync shim.
+pub const RULE_SYNC: &str = "sync-bypass";
+/// Non-SeqCst atomic ordering without an `// ORDER:` justification.
+pub const RULE_ORDERING: &str = "ordering-audit";
 /// Config-key / CLI-flag / `PrepareOptions`-field drift.
 pub const RULE_PARITY: &str = "parity";
 /// Meta-rule: a waiver comment that is itself malformed.
 pub const RULE_WAIVER: &str = "waiver";
 
-const RULE_NAMES: [&str; 5] = [RULE_SAFETY, RULE_LANES, RULE_THREAD, RULE_PANIC, RULE_PARITY];
+const RULE_NAMES: [&str; 7] = [
+    RULE_SAFETY,
+    RULE_LANES,
+    RULE_THREAD,
+    RULE_PANIC,
+    RULE_SYNC,
+    RULE_ORDERING,
+    RULE_PARITY,
+];
 
 /// The hot free functions behind the `Lanes` function-pointer table.
 const HOT_KERNELS: [&str; 5] =
@@ -65,8 +86,38 @@ const HOT_KERNELS: [&str; 5] =
 /// table itself and the two modules defining the scalar bodies.
 const KERNEL_FILES: [&str; 3] = ["compute/simd.rs", "compute/microkernel.rs", "compute/fastexp.rs"];
 
-/// The one home of raw thread primitives.
-const POOL_FILE: &str = "runtime/pool.rs";
+/// The one home of raw thread and raw `std::sync` primitives: the
+/// shim layer itself plus the model checker it routes through (which
+/// must use real primitives to implement the virtual ones).
+const SYNC_FILES: [&str; 2] = ["runtime/sync.rs", "runtime/modelcheck.rs"];
+
+/// Identifiers that name a raw `std::sync` primitive (the
+/// `sync-bypass` needle set; boundaries are identifier-exact, so the
+/// `Sync*` shim types do not match).
+const SYNC_PRIMITIVES: [&str; 14] = [
+    "Mutex",
+    "RwLock",
+    "Condvar",
+    "Once",
+    "OnceLock",
+    "AtomicBool",
+    "AtomicUsize",
+    "AtomicU64",
+    "AtomicU32",
+    "AtomicU8",
+    "AtomicI64",
+    "AtomicPtr",
+    "fence",
+    "mpsc",
+];
+
+/// The non-`SeqCst` orderings the `ordering-audit` rule gates.
+const WEAK_ORDERINGS: [&str; 4] = ["Relaxed", "Acquire", "Release", "AcqRel"];
+
+/// How many lines above a weak `Ordering::` use an `ORDER` comment
+/// may sit (same idea as [`SAFETY_WINDOW`], tighter because ordering
+/// justifications are per-site).
+const ORDER_WINDOW: usize = 4;
 
 /// Driver modules where aborting the process is the designed failure
 /// mode, exempt from `no-panic` (binaries under `bin/` and `main.rs`
@@ -346,8 +397,17 @@ fn split_lines(buf: &[u8]) -> Vec<String> {
 /// kernels against references directly).
 fn test_region_flags(code: &[u8], starts: &[usize]) -> Vec<bool> {
     let mut flags = vec![false; starts.len() + 2];
+    // the `all(test` prefix covers feature-gated test modules such as
+    // `#[cfg(all(test, feature = "modelcheck"))]`
+    for needle in [b"#[cfg(test)]".as_slice(), b"#[cfg(all(test".as_slice()] {
+        test_region_flags_for(code, starts, needle, &mut flags);
+    }
+    flags
+}
+
+fn test_region_flags_for(code: &[u8], starts: &[usize], needle: &[u8], flags: &mut [bool]) {
     let mut from = 0usize;
-    while let Some(p) = find_sub(code, b"#[cfg(test)]", from) {
+    while let Some(p) = find_sub(code, needle, from) {
         from = p + 1;
         let mut m = p;
         let mod_pos = loop {
@@ -386,7 +446,6 @@ fn test_region_flags(code: &[u8], starts: &[usize]) -> Vec<bool> {
             flags[line] = true;
         }
     }
-    flags
 }
 
 #[derive(Default)]
@@ -515,7 +574,7 @@ fn is_driver(rel: &str) -> bool {
     rel == "main.rs" || rel.starts_with("bin/") || DRIVER_FILES.iter().any(|(f, _)| *f == rel)
 }
 
-/// Run the four per-file rule families over one source file.
+/// Run the six per-file rule families over one source file.
 /// `rel` is the path relative to `rust/src` with `/` separators.
 pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
     let bytes = src.as_bytes();
@@ -572,7 +631,7 @@ pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
     }
 
     // raw-thread
-    if rel != POOL_FILE {
+    if !SYNC_FILES.contains(&rel) {
         for token in ["thread::spawn", "thread::scope", "thread::Builder"] {
             for p in ident_occurrences(code, token.as_bytes()) {
                 let line = line_of(&starts, p);
@@ -587,11 +646,82 @@ pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
                     line,
                     rule: RULE_THREAD,
                     message: format!(
-                        "`{token}` outside runtime/pool.rs; route work through WorkStealPool"
+                        "`{token}` outside runtime/sync.rs; route work through \
+                         WorkStealPool (or sync::spawn_thread inside the runtime)"
                     ),
                 });
             }
         }
+    }
+
+    // sync-bypass
+    if !SYNC_FILES.contains(&rel) {
+        let park_tokens = ["thread::park", "thread::park_timeout"];
+        let prims = SYNC_PRIMITIVES.iter().copied();
+        for name in prims.chain(park_tokens) {
+            for p in ident_occurrences(code, name.as_bytes()) {
+                let line = line_of(&starts, p);
+                if in_test.get(line).copied().unwrap_or(false) {
+                    continue;
+                }
+                if waivers.allows(line, RULE_SYNC) {
+                    continue;
+                }
+                findings.push(Finding {
+                    file: rel.to_string(),
+                    line,
+                    rule: RULE_SYNC,
+                    message: format!(
+                        "raw sync primitive `{name}` outside runtime/sync.rs; use the \
+                         Sync* shim types so the model checker sees every operation"
+                    ),
+                });
+            }
+        }
+    }
+
+    // ordering-audit
+    for p in ident_occurrences(code, b"Ordering") {
+        let mut q = p + b"Ordering".len();
+        while q < code.len() && b" \t\n".contains(&code[q]) {
+            q += 1;
+        }
+        if code.get(q) != Some(&b':') || code.get(q + 1) != Some(&b':') {
+            continue;
+        }
+        q += 2;
+        while q < code.len() && b" \t\n".contains(&code[q]) {
+            q += 1;
+        }
+        let start = q;
+        while q < code.len() && is_ident(code[q]) {
+            q += 1;
+        }
+        // `Ordering::{...}` imports and `Ordering::SeqCst` fall out
+        // here: only a weak variant name creates an obligation
+        let name = String::from_utf8_lossy(&code[start..q]).into_owned();
+        if !WEAK_ORDERINGS.contains(&name.as_str()) {
+            continue;
+        }
+        let line = line_of(&starts, start);
+        if in_test.get(line).copied().unwrap_or(false) {
+            continue;
+        }
+        let lo = line.saturating_sub(ORDER_WINDOW).max(1);
+        let justified =
+            (lo..=line).any(|l| comment_lines.get(l - 1).is_some_and(|t| t.contains("ORDER:")));
+        if justified || waivers.allows(line, RULE_ORDERING) {
+            continue;
+        }
+        findings.push(Finding {
+            file: rel.to_string(),
+            line,
+            rule: RULE_ORDERING,
+            message: format!(
+                "`Ordering::{name}` without an `// ORDER:` justification within \
+                 {ORDER_WINDOW} preceding lines"
+            ),
+        });
     }
 
     // no-panic
@@ -927,5 +1057,45 @@ let c = 'x'; let lt: &'static str = r#"panic!"#; /* unsafe */ let u = 1;"##;
         let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { \
                    let v: Vec<u32> = vec![]; v.last().unwrap(); }\n}\n";
         assert!(lint_source("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn feature_gated_test_modules_are_exempt_too() {
+        let src = "fn lib() {}\n#[cfg(all(test, feature = \"modelcheck\"))]\nmod mc_tests {\n\
+                   \x20   use std::sync::atomic::AtomicUsize;\n    fn t() { let v: Vec<u32> = \
+                   vec![]; v.last().unwrap(); }\n}\n";
+        assert!(lint_source("x.rs", src).is_empty(), "{:?}", lint_source("x.rs", src));
+    }
+
+    #[test]
+    fn sync_bypass_flags_raw_primitives_outside_the_shim() {
+        let src = "use std::sync::Mutex;\nfn f() { std::thread::park(); }\n";
+        let f = lint_source("algo/x.rs", src);
+        assert_eq!(f.iter().filter(|f| f.rule == RULE_SYNC).count(), 2, "{f:?}");
+        assert!(lint_source("runtime/sync.rs", src).is_empty());
+        assert!(lint_source("runtime/modelcheck.rs", src).is_empty());
+        let waived = "// lint: allow(sync-bypass): below the runtime layer\n\
+                      use std::sync::Mutex;\n";
+        assert!(lint_source("algo/x.rs", waived).is_empty());
+    }
+
+    #[test]
+    fn ordering_audit_demands_order_comments_for_weak_orderings() {
+        let bad = "fn f(a: &A) { a.x.load(Ordering::Acquire); }\n";
+        let f = lint_source("x.rs", bad);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, RULE_ORDERING);
+        let good = "// ORDER: Acquire — pairs with the Release store in publish().\n\
+                    fn f(a: &A) { a.x.load(Ordering::Acquire); }\n";
+        assert!(lint_source("x.rs", good).is_empty());
+        // SeqCst needs no justification; imports create no obligation
+        let seq = "use std::sync::atomic::Ordering::{self, SeqCst};\n\
+                   fn f(a: &A) { a.x.load(Ordering::SeqCst); }\n";
+        assert!(lint_source("x.rs", seq).is_empty());
+        // the comment must be within the window
+        let far = "// ORDER: Acquire — pairs with a Release store.\n\n\n\n\n\
+                   fn f(a: &A) { a.x.load(Ordering::Acquire); }\n";
+        let f = lint_source("x.rs", far);
+        assert_eq!(f.len(), 1, "ORDER comment beyond the window must not count: {f:?}");
     }
 }

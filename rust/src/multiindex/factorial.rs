@@ -3,11 +3,13 @@
 //! factorials of up to D·p, so we keep a full table to 170 (the largest
 //! n with n! finite in f64) and fall back to `ln_factorial` beyond.
 
+// lint: allow(sync-bypass): process-wide one-time factorial table init below the runtime layer — no scheduling to explore
 use std::sync::OnceLock;
 
 const TABLE_N: usize = 171;
 
 fn table() -> &'static [f64; TABLE_N] {
+    // lint: allow(sync-bypass): process-wide one-time factorial table init below the runtime layer — no scheduling to explore
     static T: OnceLock<[f64; TABLE_N]> = OnceLock::new();
     T.get_or_init(|| {
         let mut t = [1.0f64; TABLE_N];

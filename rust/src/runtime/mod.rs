@@ -1,5 +1,8 @@
 //! Execution runtime: the shared work-stealing task pool every fan-out
-//! in the crate schedules onto ([`pool`]), plus the PJRT path — load
+//! in the crate schedules onto ([`pool`]), the sync shim every
+//! runtime-layer primitive routes through ([`sync`]) and the
+//! deterministic schedule explorer behind it ([`modelcheck`]), plus
+//! the PJRT path — load
 //! the AOT-compiled HLO artifacts (`make artifacts`) and execute them
 //! from the rust hot path. Python never runs here — the artifacts are
 //! self-contained HLO text compiled once per process by the XLA CPU
@@ -9,7 +12,9 @@
 
 pub mod artifact;
 pub mod executor;
+pub mod modelcheck;
 pub mod pool;
+pub mod sync;
 pub mod tiled_naive;
 
 pub use artifact::{ArtifactManifest, ArtifactSpec};

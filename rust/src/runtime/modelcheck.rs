@@ -1,0 +1,1272 @@
+//! A schedule-exploring model checker for the crate's concurrency
+//! core — the std-only, in-repo analogue of `loom`/`shuttle` (the
+//! build container has no registry access, the same constraint the
+//! hand-rolled linter lexer worked under).
+//!
+//! # How it works
+//!
+//! Under `--features modelcheck`, every operation on the
+//! [`crate::runtime::sync`] shim types (mutex lock/unlock, condvar
+//! wait/notify, atomic load/store/RMW, spawn/join/yield) routes
+//! through a per-scenario [`Controller`] before touching the real
+//! primitive. The controller serializes execution — real threads are
+//! gated one-runnable-at-a-time by per-thread baton gates — and every
+//! operation is a *decision point* where the scheduler may switch to
+//! any other runnable thread. Exploring those decisions systematically
+//! (bounded-preemption DFS for small scenarios, PCG-seeded random
+//! sampling for larger ones) walks the scenario through adversarial
+//! interleavings the OS scheduler would produce once a year in
+//! production.
+//!
+//! Because execution is serialized, every interleaving the controller
+//! produces is *sequentially consistent* — a memory-ordering bug
+//! (a `Relaxed` latch decrement, say) changes no value any load
+//! observes. Orderings are checked separately with **vector clocks**:
+//! each thread, mutex, and atomic carries a clock; release stores and
+//! lock releases publish the writer's clock, acquire loads and lock
+//! acquisitions join it, following the C++ release-sequence rules
+//! (an RMW continues the sequence regardless of its own ordering; a
+//! plain relaxed store breaks it). The pool's scope latch then asserts
+//! a *happens-before* invariant at every scope exit: the waiter's
+//! clock must dominate the clock each completed task published — see
+//! [`scope_assert`]. A weakened ordering breaks the dominance even
+//! though the serialized values still look right.
+//!
+//! Lost wakeups are caught by construction: a timed condvar wait is
+//! woken by timeout **only when no thread is runnable** (a real
+//! schedule could always run someone else first), the event is
+//! counted, and [`McConfig::fail_on_forced_timeout`] turns it into a
+//! failure — the pool's wake protocol (notify under the `idle` lock,
+//! re-check the predicate under the same lock before parking) never
+//! needs a timeout to make progress, so a forced timeout means a
+//! wakeup was lost. An all-blocked state with no timed waiter is a
+//! deadlock and fails with the blocked-thread list.
+//!
+//! # Reproducibility
+//!
+//! Every schedule is identified by the explicit choice sequence the
+//! chooser took; a failure report ([`McFailure`]) carries the seed,
+//! the schedule index, the choices, and the event trace, and
+//! [`replay`] re-runs exactly that schedule bitwise. Random mode
+//! derives schedule `i` from [`Pcg32::new_stream`]`(seed, i)`, so one
+//! printed `(seed, index)` pair pins the whole run; the
+//! `FASTGAUSS_MC_SEED` environment variable overrides the seed in CI
+//! and `FASTGAUSS_MC_TRACE_DIR` saves failing traces as artifacts.
+//!
+//! # Cost model
+//!
+//! Without the `modelcheck` feature this module still compiles (so
+//! the default build lints and type-checks it) but nothing routes
+//! through it: the shim's fast paths delegate straight to `std::sync`
+//! and [`current`] is a constant `None`. Scenario code pays the
+//! controller cost only inside [`explore`]/[`replay`].
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, panic_any, AssertUnwindSafe};
+use std::sync::atomic::Ordering::{self, AcqRel, Acquire, Relaxed, Release, SeqCst};
+use std::sync::atomic::AtomicBool;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::util::Pcg32;
+
+/// Panic payload used to unwind scenario threads when a schedule
+/// aborts (failure found or budget exhausted). The thread wrappers in
+/// `runtime/sync` swallow it; anything else escaping a scenario
+/// thread is itself a detected failure.
+pub struct McAbort;
+
+/// Cap on stored trace events per schedule (diagnostics only; the
+/// choice sequence, not the trace, is what replays a schedule).
+const TRACE_CAP: usize = 20_000;
+
+/// Watchdog for scenario threads to unwind after an abort.
+const EXIT_WATCHDOG: Duration = Duration::from_secs(30);
+
+// ---------------------------------------------------------------------------
+// Vector clocks
+// ---------------------------------------------------------------------------
+
+/// A vector clock over virtual thread ids; missing entries are zero.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+struct VClock(Vec<u32>);
+
+impl VClock {
+    fn grow(&mut self, len: usize) {
+        if self.0.len() < len {
+            self.0.resize(len, 0);
+        }
+    }
+
+    fn tick(&mut self, id: usize) {
+        self.grow(id + 1);
+        self.0[id] += 1;
+    }
+
+    fn join(&mut self, other: &VClock) {
+        self.grow(other.0.len());
+        for (mine, theirs) in self.0.iter_mut().zip(other.0.iter()) {
+            *mine = (*mine).max(*theirs);
+        }
+    }
+
+    /// `self ≥ other` componentwise: everything `other` has seen
+    /// happened-before the state `self` describes.
+    fn dominates(&self, other: &VClock) -> bool {
+        other
+            .0
+            .iter()
+            .enumerate()
+            .all(|(i, &theirs)| theirs == 0 || self.0.get(i).copied().unwrap_or(0) >= theirs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler state
+// ---------------------------------------------------------------------------
+
+/// What kind of access an atomic shim op performs (HB bookkeeping).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AtomicAccess {
+    Load,
+    Store,
+    Rmw,
+}
+
+/// Run state of one virtual thread.
+#[derive(Clone, Debug)]
+enum Run {
+    Runnable,
+    /// Waiting to (re)acquire a mutex; eligible whenever it is free.
+    /// `timed_out` carries a condvar-wait result across the reacquire.
+    LockWait { mutex: usize, timed_out: bool },
+    /// Parked on a condvar having released `mutex`.
+    CvWait { cv: usize, mutex: usize, timed: bool },
+    JoinWait { target: usize },
+    Finished,
+}
+
+struct ThreadSt {
+    name: String,
+    gate: Arc<(Mutex<bool>, Condvar)>,
+    clock: VClock,
+    run: Run,
+}
+
+#[derive(Default)]
+struct MutexSt {
+    locked_by: Option<usize>,
+    /// Joined by the releaser, adopted by the next acquirer.
+    clock: VClock,
+}
+
+#[derive(Default)]
+struct AtomicSt {
+    /// Clock of the release-sequence head (C++ §release sequences):
+    /// set by a release store, extended by release RMWs, *kept* by
+    /// relaxed RMWs, and broken by a relaxed plain store.
+    release: VClock,
+}
+
+enum Chooser {
+    /// Fixed prefix (DFS frontier or a replayed failure); `0` — the
+    /// first eligible option — past the end.
+    Script { path: Vec<u32>, at: usize },
+    Random(Pcg32),
+}
+
+impl Chooser {
+    fn pick(&mut self, n: u32) -> u32 {
+        match self {
+            Chooser::Script { path, at } => {
+                let c = if *at < path.len() { path[*at] } else { 0 };
+                *at += 1;
+                c.min(n - 1)
+            }
+            Chooser::Random(rng) => rng.next_u32() % n,
+        }
+    }
+}
+
+struct Sched {
+    threads: Vec<ThreadSt>,
+    mutexes: HashMap<usize, MutexSt>,
+    atomics: HashMap<usize, AtomicSt>,
+    /// Scope-token store: clocks published by completed scope tasks.
+    scopes: Vec<Vec<VClock>>,
+    chooser: Chooser,
+    /// Every multi-option decision this schedule: `(choice, options)`.
+    taken: Vec<(u32, u32)>,
+    trace: Vec<String>,
+    steps: u64,
+    preemptions: u32,
+    forced_timeouts: u64,
+    failure: Option<String>,
+    /// Threads not yet `Finished`.
+    live: usize,
+}
+
+impl Sched {
+    fn trace(&mut self, msg: impl FnOnce() -> String) {
+        if self.trace.len() < TRACE_CAP {
+            self.trace.push(msg());
+        }
+    }
+
+    fn mutex_free(&self, addr: usize) -> bool {
+        self.mutexes.get(&addr).is_none_or(|m| m.locked_by.is_none())
+    }
+
+    /// Threads that could run right now, in vtid order (deterministic).
+    fn eligible(&self) -> Vec<usize> {
+        self.threads
+            .iter()
+            .enumerate()
+            .filter_map(|(i, t)| match t.run {
+                Run::Runnable => Some(i),
+                Run::LockWait { mutex, .. } => self.mutex_free(mutex).then_some(i),
+                Run::JoinWait { target } => {
+                    matches!(self.threads[target].run, Run::Finished).then_some(i)
+                }
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+enum Pick {
+    Grant(usize),
+    AllDone,
+    Aborted,
+}
+
+// ---------------------------------------------------------------------------
+// Controller
+// ---------------------------------------------------------------------------
+
+/// The per-scenario scheduler: serializes registered threads and
+/// explores/records their interleaving. One controller per schedule.
+pub struct Controller {
+    sched: Mutex<Sched>,
+    /// Signaled when `live` reaches zero (or on failure).
+    done: Condvar,
+    /// Fast-path mirror of `failure.is_some()`.
+    aborting: AtomicBool,
+    max_steps: u64,
+    max_preemptions: u32,
+    fail_on_forced_timeout: bool,
+}
+
+thread_local! {
+    static TL: RefCell<Option<(Arc<Controller>, usize)>> = const { RefCell::new(None) };
+}
+
+/// The controller and virtual thread id of the current thread, when
+/// it is participating in a model-checked schedule. Constant `None`
+/// unless the `modelcheck` feature is enabled.
+#[cfg(feature = "modelcheck")]
+pub fn current() -> Option<(Arc<Controller>, usize)> {
+    TL.with(|tl| tl.borrow().clone())
+}
+
+/// The controller and virtual thread id of the current thread, when
+/// it is participating in a model-checked schedule. Constant `None`
+/// unless the `modelcheck` feature is enabled — the shim's virtual
+/// branches fold away in normal builds.
+#[cfg(not(feature = "modelcheck"))]
+#[inline(always)]
+pub fn current() -> Option<(Arc<Controller>, usize)> {
+    None
+}
+
+fn set_current(v: Option<(Arc<Controller>, usize)>) {
+    TL.with(|tl| *tl.borrow_mut() = v);
+}
+
+fn grant(gate: &(Mutex<bool>, Condvar)) {
+    *gate.0.lock().unwrap() = true;
+    gate.1.notify_all();
+}
+
+fn wait_gate(gate: &(Mutex<bool>, Condvar)) {
+    let mut g = gate.0.lock().unwrap();
+    while !*g {
+        g = gate.1.wait(g).unwrap();
+    }
+    *g = false;
+}
+
+impl Controller {
+    fn new(cfg: &McConfig, chooser: Chooser) -> Arc<Controller> {
+        let root = ThreadSt {
+            name: "root".to_string(),
+            gate: Arc::new((Mutex::new(false), Condvar::new())),
+            clock: {
+                let mut c = VClock::default();
+                c.tick(0);
+                c
+            },
+            run: Run::Runnable,
+        };
+        Arc::new(Controller {
+            sched: Mutex::new(Sched {
+                threads: vec![root],
+                mutexes: HashMap::new(),
+                atomics: HashMap::new(),
+                scopes: Vec::new(),
+                chooser,
+                taken: Vec::new(),
+                trace: Vec::new(),
+                steps: 0,
+                preemptions: 0,
+                forced_timeouts: 0,
+                failure: None,
+                live: 1,
+            }),
+            done: Condvar::new(),
+            aborting: AtomicBool::new(false),
+            max_steps: cfg.max_steps,
+            max_preemptions: cfg.max_preemptions,
+            fail_on_forced_timeout: cfg.fail_on_forced_timeout,
+        })
+    }
+
+    /// Unwind out of the scenario unless this thread is already
+    /// unwinding (a guard drop mid-panic must not double-panic).
+    fn bail(&self) {
+        if !std::thread::panicking() {
+            panic_any(McAbort);
+        }
+    }
+
+    /// Record the first failure, then release every gate so all
+    /// threads unwind out of the scenario at their next operation.
+    fn fail(&self, s: &mut Sched, msg: String) {
+        if s.failure.is_none() {
+            s.trace(|| format!("FAIL: {msg}"));
+            s.failure = Some(msg);
+        }
+        self.aborting.store(true, SeqCst);
+        for t in &s.threads {
+            grant(&t.gate);
+        }
+        self.done.notify_all();
+    }
+
+    /// Common op prelude: abort check, step budget, clock tick, trace.
+    /// `None` means the op must pass through untracked (this thread is
+    /// unwinding through an aborted schedule).
+    fn begin(
+        &self,
+        me: usize,
+        desc: impl FnOnce() -> String,
+    ) -> Option<MutexGuard<'_, Sched>> {
+        if self.aborting.load(SeqCst) {
+            self.bail();
+            return None;
+        }
+        let mut s = self.sched.lock().unwrap();
+        if s.failure.is_some() {
+            drop(s);
+            self.bail();
+            return None;
+        }
+        s.steps += 1;
+        if s.steps > self.max_steps {
+            let msg = format!(
+                "step budget exceeded ({} ops) — livelock or a scenario too large \
+                 for the configured budget",
+                self.max_steps
+            );
+            self.fail(&mut s, msg);
+            drop(s);
+            self.bail();
+            return None;
+        }
+        s.threads[me].clock.tick(me);
+        s.trace(|| format!("t{me} {}", desc()));
+        Some(s)
+    }
+
+    /// Record a scheduling decision among `options` (vtids, ascending).
+    fn choose(&self, s: &mut Sched, options: &[usize]) -> usize {
+        let n = options.len() as u32;
+        if n == 1 {
+            return options[0];
+        }
+        let c = s.chooser.pick(n);
+        s.taken.push((c, n));
+        options[c as usize]
+    }
+
+    /// Hand the baton to `next` and wait until this thread is granted
+    /// again. Returns the re-acquired scheduler lock, or `None` when
+    /// the schedule aborted while we slept.
+    fn handoff(
+        &self,
+        s: MutexGuard<'_, Sched>,
+        me: usize,
+        next: usize,
+    ) -> Option<MutexGuard<'_, Sched>> {
+        let my_gate = Arc::clone(&s.threads[me].gate);
+        let next_gate = Arc::clone(&s.threads[next].gate);
+        drop(s);
+        grant(&next_gate);
+        wait_gate(&my_gate);
+        if self.aborting.load(SeqCst) {
+            self.bail();
+            return None;
+        }
+        let s = self.sched.lock().unwrap();
+        if s.failure.is_some() {
+            drop(s);
+            self.bail();
+            return None;
+        }
+        Some(s)
+    }
+
+    /// The pre-op decision point: possibly preempt `me` (runnable) in
+    /// favor of another eligible thread.
+    fn reschedule(
+        &self,
+        mut s: MutexGuard<'_, Sched>,
+        me: usize,
+    ) -> Option<MutexGuard<'_, Sched>> {
+        let elig = s.eligible();
+        let options = if s.preemptions >= self.max_preemptions { vec![me] } else { elig };
+        let next = self.choose(&mut s, &options);
+        if next == me {
+            return Some(s);
+        }
+        s.preemptions += 1;
+        s.trace(|| format!("t{me} preempted -> t{next}"));
+        self.handoff(s, me, next)
+    }
+
+    /// Pick someone to run when the caller cannot continue. Loops so a
+    /// forced timeout conversion can re-derive eligibility.
+    fn pick_next(&self, s: &mut Sched) -> Pick {
+        loop {
+            let elig = s.eligible();
+            if !elig.is_empty() {
+                return Pick::Grant(self.choose(s, &elig));
+            }
+            let timed: Vec<usize> = s
+                .threads
+                .iter()
+                .enumerate()
+                .filter_map(|(i, t)| matches!(t.run, Run::CvWait { timed: true, .. }).then_some(i))
+                .collect();
+            if !timed.is_empty() {
+                s.forced_timeouts += 1;
+                if self.fail_on_forced_timeout {
+                    let msg = format!(
+                        "forced timeout wake: no thread is runnable while t{} waits on a \
+                         timed condvar — a wakeup was lost (the protocol's timeouts are \
+                         documented as pure safety nets)",
+                        timed[0]
+                    );
+                    self.fail(s, msg);
+                    return Pick::Aborted;
+                }
+                let w = self.choose(s, &timed);
+                if let Run::CvWait { mutex, .. } = s.threads[w].run {
+                    s.threads[w].run = Run::LockWait { mutex, timed_out: true };
+                }
+                s.trace(|| format!("t{w} forced timeout wake"));
+                continue;
+            }
+            if s.live == 0 {
+                return Pick::AllDone;
+            }
+            let blocked: Vec<String> = s
+                .threads
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| !matches!(t.run, Run::Finished))
+                .map(|(i, t)| format!("t{i}:{} {:?}", t.name, t.run))
+                .collect();
+            let msg = format!("deadlock: no runnable thread; blocked: [{}]", blocked.join(", "));
+            self.fail(s, msg);
+            return Pick::Aborted;
+        }
+    }
+
+    /// Block `me` with the given run state and sleep until granted.
+    fn block(
+        &self,
+        mut s: MutexGuard<'_, Sched>,
+        me: usize,
+        run: Run,
+    ) -> Option<MutexGuard<'_, Sched>> {
+        s.threads[me].run = run;
+        match self.pick_next(&mut s) {
+            Pick::Grant(next) => self.handoff(s, me, next),
+            Pick::Aborted | Pick::AllDone => {
+                drop(s);
+                self.bail();
+                None
+            }
+        }
+    }
+
+    // -- shim operations ---------------------------------------------------
+
+    pub(crate) fn op_yield(&self, me: usize) {
+        let Some(s) = self.begin(me, || "yield".to_string()) else { return };
+        self.reschedule(s, me);
+    }
+
+    pub(crate) fn op_atomic(&self, me: usize, addr: usize, access: AtomicAccess, ord: Ordering) {
+        let Some(s) = self.begin(me, || format!("atomic {access:?} {ord:?} @{addr:#x}")) else {
+            return;
+        };
+        let Some(mut s) = self.reschedule(s, me) else { return };
+        let s = &mut *s;
+        let st = s.atomics.entry(addr).or_default();
+        let acquire = matches!(ord, Acquire | AcqRel | SeqCst);
+        let release = matches!(ord, Release | AcqRel | SeqCst);
+        match access {
+            AtomicAccess::Load => {
+                if acquire {
+                    s.threads[me].clock.join(&st.release);
+                }
+            }
+            AtomicAccess::Store => {
+                // a release store starts a new release sequence; a
+                // relaxed store breaks the existing one
+                st.release =
+                    if release { s.threads[me].clock.clone() } else { VClock::default() };
+            }
+            AtomicAccess::Rmw => {
+                if acquire {
+                    let rel = st.release.clone();
+                    s.threads[me].clock.join(&rel);
+                }
+                if release {
+                    let mine = s.threads[me].clock.clone();
+                    s.atomics.entry(addr).or_default().release.join(&mine);
+                }
+                // a relaxed RMW continues the release sequence
+                // untouched — it neither publishes nor breaks it
+            }
+        }
+    }
+
+    pub(crate) fn op_mutex_lock(&self, me: usize, addr: usize) {
+        let Some(s) = self.begin(me, || format!("lock @{addr:#x}")) else { return };
+        let Some(mut s) = self.reschedule(s, me) else { return };
+        loop {
+            if s.mutex_free(addr) {
+                let s = &mut *s;
+                let st = s.mutexes.entry(addr).or_default();
+                st.locked_by = Some(me);
+                let c = st.clock.clone();
+                s.threads[me].clock.join(&c);
+                s.threads[me].run = Run::Runnable;
+                return;
+            }
+            let Some(ns) = self.block(s, me, Run::LockWait { mutex: addr, timed_out: false })
+            else {
+                return;
+            };
+            s = ns;
+        }
+    }
+
+    pub(crate) fn op_mutex_unlock(&self, me: usize, addr: usize) {
+        let Some(s) = self.begin(me, || format!("unlock @{addr:#x}")) else { return };
+        let Some(mut s) = self.reschedule(s, me) else { return };
+        let s = &mut *s;
+        if let Some(st) = s.mutexes.get_mut(&addr) {
+            st.locked_by = None;
+            st.clock.join(&s.threads[me].clock);
+        }
+    }
+
+    /// Atomically release `mutex` and park on `cv`; returns `true` if
+    /// notified, `false` on a (forced) timeout. The caller has already
+    /// dropped the real guard and re-locks the real mutex afterwards.
+    pub(crate) fn op_cv_wait(&self, me: usize, cv: usize, mutex: usize, timed: bool) -> bool {
+        let Some(mut s) = self.begin(me, || format!("cv-wait @{cv:#x} mutex @{mutex:#x}")) else {
+            return true;
+        };
+        {
+            let s = &mut *s;
+            if let Some(st) = s.mutexes.get_mut(&mutex) {
+                st.locked_by = None;
+                st.clock.join(&s.threads[me].clock);
+            }
+        }
+        let Some(ns) = self.block(s, me, Run::CvWait { cv, mutex, timed }) else { return true };
+        s = ns;
+        // Granted again: a notify or forced timeout turned this thread
+        // into a LockWait, and the mutex is free. Re-acquire it.
+        loop {
+            let timed_out = matches!(s.threads[me].run, Run::LockWait { timed_out: true, .. });
+            if s.mutex_free(mutex) {
+                let s = &mut *s;
+                let st = s.mutexes.entry(mutex).or_default();
+                st.locked_by = Some(me);
+                let c = st.clock.clone();
+                s.threads[me].clock.join(&c);
+                s.threads[me].run = Run::Runnable;
+                return !timed_out;
+            }
+            let Some(ns) = self.block(s, me, Run::LockWait { mutex, timed_out }) else {
+                return true;
+            };
+            s = ns;
+        }
+    }
+
+    pub(crate) fn op_cv_notify(&self, me: usize, cv: usize, all: bool) {
+        let Some(s) = self.begin(me, || format!("notify-{} @{cv:#x}", if all { "all" } else { "one" }))
+        else {
+            return;
+        };
+        let Some(mut s) = self.reschedule(s, me) else { return };
+        let waiters: Vec<usize> = s
+            .threads
+            .iter()
+            .enumerate()
+            .filter_map(|(i, t)| match t.run {
+                Run::CvWait { cv: c, .. } if c == cv => Some(i),
+                _ => None,
+            })
+            .collect();
+        if waiters.is_empty() {
+            return;
+        }
+        let woken: Vec<usize> =
+            if all { waiters } else { vec![self.choose(&mut s, &waiters)] };
+        for w in woken {
+            if let Run::CvWait { mutex, .. } = s.threads[w].run {
+                // no direct HB edge from notifier to waiter: ordering
+                // flows through the mutex, as with a real condvar
+                s.threads[w].run = Run::LockWait { mutex, timed_out: false };
+            }
+        }
+    }
+
+    /// Register a child thread; the child waits for its first grant
+    /// before running. Follow with [`Controller::op_yield`] once the
+    /// real spawn succeeded (the post-spawn decision point).
+    pub(crate) fn op_spawn_register(&self, me: usize, name: &str) -> usize {
+        let Some(mut s) = self.begin(me, || format!("spawn {name}")) else { return usize::MAX };
+        let vtid = s.threads.len();
+        let mut clock = s.threads[me].clock.clone();
+        clock.tick(vtid);
+        s.threads.push(ThreadSt {
+            name: name.to_string(),
+            gate: Arc::new((Mutex::new(false), Condvar::new())),
+            clock,
+            run: Run::Runnable,
+        });
+        s.live += 1;
+        vtid
+    }
+
+    /// Roll back a registration whose real `thread::Builder::spawn`
+    /// failed.
+    pub(crate) fn op_spawn_abandon(&self, vtid: usize) {
+        if let Ok(mut s) = self.sched.lock() {
+            if vtid < s.threads.len() {
+                s.threads[vtid].run = Run::Finished;
+                s.live -= 1;
+            }
+        }
+    }
+
+    /// First thing a child thread does: wait to be scheduled. Returns
+    /// `false` when the schedule aborted before the child ever ran.
+    pub(crate) fn child_start(&self, vtid: usize) -> bool {
+        let gate = {
+            let s = self.sched.lock().unwrap();
+            Arc::clone(&s.threads[vtid].gate)
+        };
+        wait_gate(&gate);
+        !self.aborting.load(SeqCst)
+    }
+
+    /// A scenario thread panicked with something other than [`McAbort`]
+    /// — a real invariant violation (e.g. a latch-underflow
+    /// `debug_assert`). Recorded as the schedule's failure.
+    pub(crate) fn thread_panicked(&self, vtid: usize, msg: &str) {
+        if let Ok(mut s) = self.sched.lock() {
+            let name = s.threads.get(vtid).map(|t| t.name.clone()).unwrap_or_default();
+            self.fail(&mut s, format!("thread t{vtid}:{name} panicked: {msg}"));
+        }
+    }
+
+    /// Mark a thread finished and hand the baton on. Never panics —
+    /// it runs during unwinds and in thread-exit wrappers.
+    pub(crate) fn op_finish(&self, me: usize) {
+        let Ok(mut s) = self.sched.lock() else { return };
+        if matches!(s.threads[me].run, Run::Finished) {
+            return;
+        }
+        s.threads[me].run = Run::Finished;
+        s.live -= 1;
+        s.trace(|| format!("t{me} finished"));
+        if s.failure.is_some() {
+            self.done.notify_all();
+            return;
+        }
+        match self.pick_next(&mut s) {
+            Pick::Grant(next) => {
+                let gate = Arc::clone(&s.threads[next].gate);
+                drop(s);
+                grant(&gate);
+            }
+            Pick::AllDone => self.done.notify_all(),
+            Pick::Aborted => {}
+        }
+    }
+
+    pub(crate) fn op_join(&self, me: usize, target: usize) {
+        let Some(mut s) = self.begin(me, || format!("join t{target}")) else { return };
+        loop {
+            if matches!(s.threads[target].run, Run::Finished) {
+                let c = s.threads[target].clock.clone();
+                s.threads[me].clock.join(&c);
+                s.threads[me].run = Run::Runnable;
+                return;
+            }
+            let Some(ns) = self.block(s, me, Run::JoinWait { target }) else { return };
+            s = ns;
+        }
+    }
+
+    /// Forget per-object state when a shim primitive is dropped, so a
+    /// later allocation reusing the address cannot inherit stale
+    /// clocks. Passive: no decision point, never panics.
+    pub(crate) fn op_retire(&self, addr: usize) {
+        if let Ok(mut s) = self.sched.lock() {
+            s.mutexes.remove(&addr);
+            s.atomics.remove(&addr);
+        }
+    }
+
+    // -- scope-token invariant --------------------------------------------
+
+    fn scope_new(&self, me: usize) -> u64 {
+        let Some(mut s) = self.begin(me, || "scope-new".to_string()) else { return u64::MAX };
+        let id = s.scopes.len() as u64;
+        s.scopes.push(Vec::new());
+        id
+    }
+
+    fn scope_publish(&self, me: usize, id: u64) {
+        let Some(mut s) = self.begin(me, || format!("scope-token #{id}")) else { return };
+        let clock = s.threads[me].clock.clone();
+        if let Some(tokens) = s.scopes.get_mut(id as usize) {
+            tokens.push(clock);
+        }
+    }
+
+    fn scope_assert(&self, me: usize, id: u64) {
+        let Some(mut s) = self.begin(me, || format!("scope-assert #{id}")) else { return };
+        let bad = s.scopes.get(id as usize).and_then(|tokens| {
+            tokens.iter().position(|t| !s.threads[me].clock.dominates(t))
+        });
+        if let Some(k) = bad {
+            let msg = format!(
+                "scope-ordering violation: waiter t{me} exited scope #{id} without a \
+                 happens-before edge from completed task {k} — the latch decrement or \
+                 completion wake does not publish (missing release/acquire ordering)",
+                );
+            self.fail(&mut s, msg);
+            drop(s);
+            self.bail();
+        }
+    }
+
+    // -- end-of-schedule ----------------------------------------------------
+
+    /// Root finished: wait (with a watchdog) for every scenario thread
+    /// to unwind, then extract the schedule result.
+    fn finish_and_collect(&self) -> ScheduleResult {
+        self.op_finish(0);
+        let mut s = self.sched.lock().unwrap();
+        let mut waited = Duration::ZERO;
+        while s.live > 0 && waited < EXIT_WATCHDOG {
+            let (ns, _) = self.done.wait_timeout(s, Duration::from_millis(50)).unwrap();
+            s = ns;
+            waited += Duration::from_millis(50);
+        }
+        if s.live > 0 && s.failure.is_none() {
+            let n = s.live;
+            s.failure =
+                Some(format!("{n} scenario thread(s) failed to exit within the watchdog"));
+        }
+        ScheduleResult {
+            taken: std::mem::take(&mut s.taken),
+            trace: std::mem::take(&mut s.trace),
+            failure: s.failure.clone(),
+            forced_timeouts: s.forced_timeouts,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scope-token entry points (called from runtime/pool.rs)
+// ---------------------------------------------------------------------------
+
+/// New scope-token id for the current schedule, or `None` outside a
+/// model-checked run. Compiled to a constant `None` without the
+/// `modelcheck` feature — production scopes pay nothing.
+pub fn scope_new_current() -> Option<u64> {
+    current().map(|(ctl, me)| ctl.scope_new(me))
+}
+
+/// Publish the current thread's clock as a completed-task token.
+pub fn scope_publish(id: u64) {
+    if let Some((ctl, me)) = current() {
+        ctl.scope_publish(me, id);
+    }
+}
+
+/// Assert the scope waiter happens-after every published token.
+pub fn scope_assert(id: u64) {
+    if let Some((ctl, me)) = current() {
+        ctl.scope_assert(me, id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exploration driver
+// ---------------------------------------------------------------------------
+
+/// Exploration strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum McMode {
+    /// Systematic bounded-preemption DFS over the decision tree.
+    Dfs,
+    /// PCG-seeded random schedule sampling (schedule `i` uses stream
+    /// `i` of the base seed).
+    Random,
+}
+
+/// Budgets and reproducibility knobs for [`explore`].
+#[derive(Clone, Debug)]
+pub struct McConfig {
+    pub mode: McMode,
+    pub max_schedules: u64,
+    /// Voluntary-switch budget per schedule (CHESS-style); random
+    /// mode typically leaves this unbounded.
+    pub max_preemptions: u32,
+    pub max_steps: u64,
+    pub seed: u64,
+    /// Treat a forced timeout wake as a failure (a lost wakeup): the
+    /// pool's park protocol never needs its timeout safety nets.
+    pub fail_on_forced_timeout: bool,
+}
+
+impl McConfig {
+    /// Systematic DFS for small scenarios.
+    pub fn dfs() -> McConfig {
+        McConfig {
+            mode: McMode::Dfs,
+            max_schedules: 4000,
+            max_preemptions: 2,
+            max_steps: 200_000,
+            seed: 0xFA57_6A55,
+            fail_on_forced_timeout: true,
+        }
+    }
+
+    /// Random sampling for scenarios too large to enumerate.
+    pub fn random(max_schedules: u64) -> McConfig {
+        McConfig {
+            mode: McMode::Random,
+            max_schedules,
+            max_preemptions: u32::MAX,
+            max_steps: 400_000,
+            seed: 0xFA57_6A55,
+            fail_on_forced_timeout: true,
+        }
+    }
+
+    /// Apply `FASTGAUSS_MC_SEED` / `FASTGAUSS_MC_SCHEDULES` overrides
+    /// (decimal or `0x`-prefixed hex), the CI reproducibility hook.
+    pub fn from_env(mut self) -> McConfig {
+        if let Some(seed) = env_u64("FASTGAUSS_MC_SEED") {
+            self.seed = seed;
+        }
+        if let Some(n) = env_u64("FASTGAUSS_MC_SCHEDULES") {
+            self.max_schedules = n;
+        }
+        self
+    }
+}
+
+fn env_u64(key: &str) -> Option<u64> {
+    let v = std::env::var(key).ok()?;
+    let v = v.trim();
+    if let Some(hex) = v.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        v.parse().ok()
+    }
+}
+
+/// A schedule that violated an invariant, with everything needed to
+/// reproduce it bitwise.
+#[derive(Clone, Debug)]
+pub struct McFailure {
+    pub message: String,
+    /// Index of the failing schedule within its run.
+    pub schedule: u64,
+    pub seed: u64,
+    /// The decision sequence; feed to [`replay`].
+    pub choices: Vec<u32>,
+    pub trace: Vec<String>,
+}
+
+impl std::fmt::Display for McFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "model-check failure at schedule #{} (seed {:#x}): {}",
+            self.schedule, self.seed, self.message
+        )?;
+        writeln!(f, "replay choices: {:?}", self.choices)?;
+        write!(f, "trace ({} events):", self.trace.len())?;
+        for line in &self.trace {
+            write!(f, "\n  {line}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Outcome of one [`explore`]/[`replay`] run.
+#[derive(Clone, Debug)]
+pub struct McReport {
+    pub schedules: u64,
+    /// DFS only: the whole bounded tree was enumerated.
+    pub exhausted: bool,
+    pub forced_timeouts: u64,
+    pub failure: Option<McFailure>,
+    pub seed: u64,
+}
+
+impl McReport {
+    pub fn ok(&self) -> bool {
+        self.failure.is_none()
+    }
+}
+
+struct ScheduleResult {
+    taken: Vec<(u32, u32)>,
+    trace: Vec<String>,
+    failure: Option<String>,
+    forced_timeouts: u64,
+}
+
+/// Run one schedule of `scenario` under a fresh controller, with this
+/// thread as virtual thread 0.
+fn run_one(cfg: &McConfig, chooser: Chooser, scenario: &dyn Fn()) -> ScheduleResult {
+    let ctl = Controller::new(cfg, chooser);
+    set_current(Some((Arc::clone(&ctl), 0)));
+    let outcome = catch_unwind(AssertUnwindSafe(scenario));
+    set_current(None);
+    if let Err(payload) = outcome {
+        if payload.downcast_ref::<McAbort>().is_none() {
+            ctl.thread_panicked(0, &payload_msg(payload.as_ref()));
+        }
+    }
+    ctl.finish_and_collect()
+}
+
+pub(crate) fn payload_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Body of a thread spawned through the shim while registered with a
+/// controller (`sync::spawn_thread` real-spawns this wrapper): install
+/// the thread-local identity, wait for the first schedule grant, run
+/// the payload with abort-aware panic capture, and mark the virtual
+/// thread finished no matter how the payload exits.
+pub fn run_child<F: FnOnce()>(ctl: Arc<Controller>, vtid: usize, f: F) {
+    set_current(Some((Arc::clone(&ctl), vtid)));
+    if ctl.child_start(vtid) {
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(f)) {
+            if payload.downcast_ref::<McAbort>().is_none() {
+                ctl.thread_panicked(vtid, &payload_msg(payload.as_ref()));
+            }
+        }
+    }
+    set_current(None);
+    ctl.op_finish(vtid);
+}
+
+/// Given the decisions one DFS schedule took, compute the next path
+/// to force (increment the deepest incrementable choice), or `None`
+/// when the bounded tree is exhausted.
+fn next_dfs_path(mut taken: Vec<(u32, u32)>) -> Option<Vec<u32>> {
+    loop {
+        let (choice, options) = taken.pop()?;
+        if choice + 1 < options {
+            let mut path: Vec<u32> = taken.iter().map(|&(c, _)| c).collect();
+            path.push(choice + 1);
+            return Some(path);
+        }
+    }
+}
+
+fn failure_report(
+    cfg: &McConfig,
+    schedules: u64,
+    index: u64,
+    res: ScheduleResult,
+    message: String,
+) -> McReport {
+    let failure = McFailure {
+        message,
+        schedule: index,
+        seed: cfg.seed,
+        choices: res.taken.iter().map(|&(c, _)| c).collect(),
+        trace: res.trace,
+    };
+    dump_trace(&failure);
+    McReport {
+        schedules,
+        exhausted: false,
+        forced_timeouts: res.forced_timeouts,
+        failure: Some(failure),
+        seed: cfg.seed,
+    }
+}
+
+/// Save a failing trace under `FASTGAUSS_MC_TRACE_DIR` (the CI
+/// artifact hook); silently skipped when unset or unwritable.
+fn dump_trace(failure: &McFailure) {
+    let Ok(dir) = std::env::var("FASTGAUSS_MC_TRACE_DIR") else { return };
+    if dir.is_empty() {
+        return;
+    }
+    let _ = std::fs::create_dir_all(&dir);
+    let path = format!("{dir}/mc-{:#x}-{}.txt", failure.seed, failure.schedule);
+    let _ = std::fs::write(path, format!("{failure}\n"));
+}
+
+/// Explore interleavings of `scenario` under `cfg`. The scenario runs
+/// once per schedule on the calling thread (virtual thread 0); it
+/// must be deterministic apart from scheduling, and must join every
+/// thread it spawns (the pool's `Drop` does). Panics the scenario
+/// *intends* to propagate must be caught inside it — any panic
+/// escaping a scenario thread is reported as a failure.
+pub fn explore(cfg: &McConfig, scenario: impl Fn()) -> McReport {
+    assert!(
+        cfg!(feature = "modelcheck"),
+        "modelcheck::explore requires --features modelcheck (the sync shim \
+         does not route operations without it)"
+    );
+    let mut forced = 0u64;
+    match cfg.mode {
+        McMode::Dfs => {
+            let mut path: Vec<u32> = Vec::new();
+            let mut schedules = 0u64;
+            loop {
+                if schedules >= cfg.max_schedules {
+                    return McReport {
+                        schedules,
+                        exhausted: false,
+                        forced_timeouts: forced,
+                        failure: None,
+                        seed: cfg.seed,
+                    };
+                }
+                let chooser = Chooser::Script { path: path.clone(), at: 0 };
+                let res = run_one(cfg, chooser, &scenario);
+                let index = schedules;
+                schedules += 1;
+                forced += res.forced_timeouts;
+                if let Some(msg) = res.failure.clone() {
+                    return failure_report(cfg, schedules, index, res, msg);
+                }
+                match next_dfs_path(res.taken) {
+                    Some(p) => path = p,
+                    None => {
+                        return McReport {
+                            schedules,
+                            exhausted: true,
+                            forced_timeouts: forced,
+                            failure: None,
+                            seed: cfg.seed,
+                        };
+                    }
+                }
+            }
+        }
+        McMode::Random => {
+            for i in 0..cfg.max_schedules {
+                let chooser = Chooser::Random(Pcg32::new_stream(cfg.seed, i));
+                let res = run_one(cfg, chooser, &scenario);
+                forced += res.forced_timeouts;
+                if let Some(msg) = res.failure.clone() {
+                    return failure_report(cfg, i + 1, i, res, msg);
+                }
+            }
+            McReport {
+                schedules: cfg.max_schedules,
+                exhausted: false,
+                forced_timeouts: forced,
+                failure: None,
+                seed: cfg.seed,
+            }
+        }
+    }
+}
+
+/// Re-run exactly one schedule from its recorded decision sequence —
+/// the bitwise replay contract for a failure's `choices`.
+pub fn replay(cfg: &McConfig, choices: &[u32], scenario: impl Fn()) -> McReport {
+    assert!(
+        cfg!(feature = "modelcheck"),
+        "modelcheck::replay requires --features modelcheck"
+    );
+    let chooser = Chooser::Script { path: choices.to_vec(), at: 0 };
+    let res = run_one(cfg, chooser, &scenario);
+    match res.failure.clone() {
+        Some(msg) => failure_report(cfg, 1, 0, res, msg),
+        None => McReport {
+            schedules: 1,
+            exhausted: false,
+            forced_timeouts: res.forced_timeouts,
+            failure: None,
+            seed: cfg.seed,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vclock_join_tick_dominates() {
+        let mut a = VClock::default();
+        a.tick(0);
+        a.tick(0);
+        let mut b = VClock::default();
+        b.tick(2);
+        assert!(!a.dominates(&b));
+        assert!(!b.dominates(&a));
+        a.join(&b);
+        assert!(a.dominates(&b));
+        assert_eq!(a.0, vec![2, 0, 1]);
+        // domination ignores trailing zeros on either side
+        let c = VClock(vec![2, 0, 1, 0]);
+        assert!(a.dominates(&c) && c.dominates(&a));
+    }
+
+    #[test]
+    fn scripted_chooser_replays_then_defaults_to_first() {
+        let mut ch = Chooser::Script { path: vec![1, 2], at: 0 };
+        assert_eq!(ch.pick(3), 1);
+        assert_eq!(ch.pick(2), 1, "out-of-range scripted choices clamp");
+        assert_eq!(ch.pick(5), 0, "past the prefix, take the first option");
+    }
+
+    #[test]
+    fn random_chooser_is_deterministic_per_stream() {
+        let mut a = Chooser::Random(Pcg32::new_stream(7, 3));
+        let mut b = Chooser::Random(Pcg32::new_stream(7, 3));
+        for _ in 0..64 {
+            assert_eq!(a.pick(5), b.pick(5));
+        }
+    }
+
+    #[test]
+    fn dfs_advance_enumerates_the_whole_tree() {
+        // simulate a fixed 2x3 decision tree and count the leaves DFS visits
+        let mut path: Vec<u32> = Vec::new();
+        let mut leaves = Vec::new();
+        loop {
+            let mut ch = Chooser::Script { path: path.clone(), at: 0 };
+            let a = ch.pick(2);
+            let b = ch.pick(3);
+            leaves.push((a, b));
+            let taken = vec![(a, 2), (b, 3)];
+            match next_dfs_path(taken) {
+                Some(p) => path = p,
+                None => break,
+            }
+        }
+        assert_eq!(leaves.len(), 6);
+        let expect: Vec<(u32, u32)> =
+            (0..2).flat_map(|a| (0..3).map(move |b| (a, b))).collect();
+        assert_eq!(leaves, expect);
+    }
+
+    #[test]
+    fn env_u64_parses_decimal_and_hex() {
+        std::env::set_var("FASTGAUSS_MC_TEST_ENV_A", "123");
+        std::env::set_var("FASTGAUSS_MC_TEST_ENV_B", "0xff");
+        assert_eq!(env_u64("FASTGAUSS_MC_TEST_ENV_A"), Some(123));
+        assert_eq!(env_u64("FASTGAUSS_MC_TEST_ENV_B"), Some(255));
+        assert_eq!(env_u64("FASTGAUSS_MC_TEST_ENV_MISSING"), None);
+    }
+
+    /// Hand-stepped controllers drive several vtids from one real
+    /// thread; a zero preemption budget keeps `reschedule` from ever
+    /// handing the baton to a gate nobody waits on.
+    fn hand_stepped() -> Arc<Controller> {
+        let cfg = McConfig { max_preemptions: 0, ..McConfig::dfs() };
+        Controller::new(&cfg, Chooser::Script { path: Vec::new(), at: 0 })
+    }
+
+    #[test]
+    fn release_sequence_semantics_on_atomics() {
+        let ctl = hand_stepped();
+        let writer = ctl.op_spawn_register(0, "writer");
+        assert_eq!(writer, 1);
+        let addr = 0x1000;
+        // release store publishes t1's clock...
+        ctl.op_atomic(writer, addr, AtomicAccess::Store, Release);
+        let t1_at_store = ctl.sched.lock().unwrap().threads[writer].clock.clone();
+        // ...a relaxed RMW (another thread's fetch_sub) keeps the
+        // sequence alive...
+        ctl.op_atomic(0, addr, AtomicAccess::Rmw, Relaxed);
+        // ...so an acquire load still joins the writer's clock
+        ctl.op_atomic(0, addr, AtomicAccess::Load, Acquire);
+        let t0 = ctl.sched.lock().unwrap().threads[0].clock.clone();
+        assert!(t0.dominates(&t1_at_store), "release sequence must survive a relaxed RMW");
+        // but a relaxed *store* breaks the sequence
+        ctl.op_atomic(writer, addr, AtomicAccess::Store, Release);
+        ctl.op_atomic(writer, addr, AtomicAccess::Store, Relaxed);
+        let t1_latest = ctl.sched.lock().unwrap().threads[writer].clock.clone();
+        ctl.op_atomic(0, addr, AtomicAccess::Load, Acquire);
+        let t0 = ctl.sched.lock().unwrap().threads[0].clock.clone();
+        assert!(
+            !t0.dominates(&t1_latest),
+            "a relaxed store must break the release sequence"
+        );
+        ctl.op_finish(writer);
+    }
+
+    #[test]
+    fn mutex_clock_flows_from_releaser_to_acquirer() {
+        let ctl = hand_stepped();
+        let other = ctl.op_spawn_register(0, "other");
+        let addr = 0x2000;
+        ctl.op_mutex_lock(other, addr);
+        let held = ctl.sched.lock().unwrap().threads[other].clock.clone();
+        ctl.op_mutex_unlock(other, addr);
+        ctl.op_mutex_lock(0, addr);
+        let mine = ctl.sched.lock().unwrap().threads[0].clock.clone();
+        assert!(mine.dominates(&held));
+        ctl.op_mutex_unlock(0, addr);
+        ctl.op_finish(other);
+    }
+}

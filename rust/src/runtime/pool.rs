@@ -45,14 +45,27 @@
 //!   traversal, results are bit-identical across every pool width —
 //!   the determinism suite (`rust/tests/pool_determinism.rs`) pins
 //!   widths {1, 2, 8}.
+//! * **Model-checked.** Every lock, condvar, atomic and spawn below
+//!   goes through [`crate::runtime::sync`], so under
+//!   `--features modelcheck` the whole pool runs inside the
+//!   deterministic scheduler of [`crate::runtime::modelcheck`] and the
+//!   invariants above are checked across systematically explored
+//!   interleavings (`rust/tests/modelcheck_pool.rs`). The `// ORDER:`
+//!   comments on every non-SeqCst atomic are enforced by the
+//!   `ordering-audit` lint rule.
 
 use std::cell::Cell;
 use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
+
+use crate::runtime::modelcheck;
+use crate::runtime::sync::{
+    self, Ordering, SyncAtomicBool, SyncAtomicU64, SyncAtomicUsize, SyncCondvar, SyncJoinHandle,
+    SyncMutex,
+};
 
 /// A queued unit of work (lifetime-erased; see the safety comment in
 /// [`PoolScope::spawn`]).
@@ -67,13 +80,15 @@ thread_local! {
 }
 
 /// Process-unique pool ids for `CURRENT_WORKER` disambiguation.
-static NEXT_POOL_ID: AtomicU64 = AtomicU64::new(0);
+static NEXT_POOL_ID: SyncAtomicU64 = SyncAtomicU64::new(0);
 
 /// How long an idle worker parks between queue re-checks. The wake
 /// protocol has no missed-wakeup window (pushers notify under the
 /// `idle` lock, workers re-check the predicate under the same lock
 /// before parking), so this is purely a safety net — generous, so an
-/// idle pool costs ~1 wakeup/s/worker instead of busy-ticking.
+/// idle pool costs ~1 wakeup/s/worker instead of busy-ticking. The
+/// model checker pins the "safety net" claim: its invariant suites
+/// treat a schedule that *needs* the timeout as a lost-wakeup failure.
 const PARK_TIMEOUT: Duration = Duration::from_millis(1000);
 
 /// How long a helping worker mid-scope parks when no task is runnable
@@ -81,28 +96,52 @@ const PARK_TIMEOUT: Duration = Duration::from_millis(1000);
 /// protocol, so also just a safety net).
 const WAIT_TIMEOUT: Duration = Duration::from_millis(50);
 
+/// Fault injection for the model-check suite. The public constructors
+/// always use `Mutation::None`; [`WorkStealPool::new_mutated`] exists
+/// so `rust/tests/modelcheck_pool.rs` can prove the checker detects a
+/// deliberately broken pool within its schedule budget. Each variant
+/// re-creates a classic pool bug:
+///
+/// * `RelaxedLatchDecrement` — downgrades the scope-latch decrement to
+///   `Relaxed`, dropping the release edge that publishes a finished
+///   task's writes to the scope waiter.
+/// * `SkipCompletionWake` — a completing task no longer notifies the
+///   condvar, losing the wakeup a parked scope waiter depends on.
+#[doc(hidden)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mutation {
+    None,
+    RelaxedLatchDecrement,
+    SkipCompletionWake,
+}
+
 struct Shared {
     id: u64,
     /// One deque per spawned worker (empty for an inline pool).
-    deques: Vec<Mutex<VecDeque<RawTask>>>,
+    deques: Vec<SyncMutex<VecDeque<RawTask>>>,
     /// Submission queue for external (non-worker) threads.
-    injector: Mutex<VecDeque<RawTask>>,
+    injector: SyncMutex<VecDeque<RawTask>>,
     /// Tasks pushed but not yet popped — sleep/wake bookkeeping only.
-    pending: AtomicUsize,
-    shutdown: AtomicBool,
-    idle: Mutex<()>,
-    wake: Condvar,
+    pending: SyncAtomicUsize,
+    shutdown: SyncAtomicBool,
+    idle: SyncMutex<()>,
+    wake: SyncCondvar,
     /// Tasks executed per worker (telemetry; the determinism suite's
     /// engagement assertion reads this).
-    worker_tasks: Vec<AtomicU64>,
+    worker_tasks: Vec<SyncAtomicU64>,
     /// Tasks executed inline or by helping external threads.
-    external_tasks: AtomicU64,
+    external_tasks: SyncAtomicU64,
+    /// Always `Mutation::None` outside the model-check suite.
+    mutation: Mutation,
 }
 
 impl Shared {
     /// Account one popped task. `pending` is incremented *before* every
     /// push, so observing zero here means the accounting protocol broke.
     fn note_popped(&self) {
+        // ORDER: AcqRel — pairs with the AcqRel increment in `push`:
+        // the acquire half orders this decrement after the enqueue it
+        // consumes, the release half publishes it to parking workers.
         let prev = self.pending.fetch_sub(1, Ordering::AcqRel);
         debug_assert!(prev > 0, "pool pending-task counter underflow");
     }
@@ -141,9 +180,13 @@ impl Shared {
             Some(task) => {
                 match me {
                     Some(i) => {
+                        // ORDER: Relaxed — monotonic telemetry counter;
+                        // readers tolerate staleness and never use it
+                        // to order other memory.
                         self.worker_tasks[i].fetch_add(1, Ordering::Relaxed);
                     }
                     None => {
+                        // ORDER: Relaxed — telemetry, as above.
                         self.external_tasks.fetch_add(1, Ordering::Relaxed);
                     }
                 }
@@ -162,6 +205,10 @@ impl Shared {
     fn push(&self, task: RawTask) {
         // pending is incremented BEFORE the push so a racing pop can
         // never decrement below zero.
+        //
+        // ORDER: AcqRel — pairs with `note_popped`'s AcqRel decrement;
+        // the release half makes the increment visible to a parking
+        // worker's predicate check before the notify below.
         self.pending.fetch_add(1, Ordering::AcqRel);
         let me = CURRENT_WORKER.with(|c| c.get());
         match me {
@@ -187,11 +234,18 @@ fn worker_loop(shared: Arc<Shared>, index: usize) {
         if shared.run_one(Some(index)) {
             continue;
         }
+        // ORDER: Acquire — pairs with the Release store in `Drop`; a
+        // worker observing `true` must also observe every task pushed
+        // before shutdown began, so nothing is left behind.
         if shared.shutdown.load(Ordering::Acquire) {
             break;
         }
         let guard = shared.idle.lock().unwrap();
+        // ORDER: Acquire — pairs with `push`'s AcqRel increment;
+        // re-checked under the `idle` lock pushers hold while
+        // notifying, so the park cannot miss a wakeup.
         if shared.pending.load(Ordering::Acquire) == 0
+            // ORDER: Acquire — pairs with the Release store in `Drop`.
             && !shared.shutdown.load(Ordering::Acquire)
         {
             let (_parked, _) = shared.wake.wait_timeout(guard, PARK_TIMEOUT).unwrap();
@@ -202,8 +256,15 @@ fn worker_loop(shared: Arc<Shared>, index: usize) {
 /// Completion latch of one [`WorkStealPool::scope`]: outstanding-task
 /// count plus the first captured panic.
 struct ScopeLatch {
-    remaining: AtomicUsize,
-    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    remaining: SyncAtomicUsize,
+    panic: SyncMutex<Option<Box<dyn std::any::Any + Send>>>,
+    /// Scope-ordering token id under the model checker (`None` in a
+    /// normal build): each threaded task publishes its vector clock
+    /// under this id right before its latch decrement, and the scope
+    /// waiter asserts its own clock dominates every published token at
+    /// exit — exactly the happens-before edge the `AcqRel` decrement
+    /// exists to provide, so downgrading it to `Relaxed` is detected.
+    mc_scope: Option<u64>,
 }
 
 impl ScopeLatch {
@@ -232,12 +293,18 @@ impl<'scope, 'env> PoolScope<'scope, 'env> {
             // inline pool: no workers — run now, deterministically in
             // spawn order, with pooled panic semantics (remaining tasks
             // still run; the first panic re-raises at scope exit)
+            //
+            // ORDER: Relaxed — telemetry counter.
             self.shared.external_tasks.fetch_add(1, Ordering::Relaxed);
             if let Err(p) = catch_unwind(AssertUnwindSafe(task)) {
                 self.latch.record_panic(p);
             }
             return;
         }
+        // ORDER: AcqRel — reserves the task before it is queued; pairs
+        // with the completion decrement below and the scope waiter's
+        // Acquire loads, so `remaining` can never transiently read
+        // zero while the task is in flight.
         self.latch.remaining.fetch_add(1, Ordering::AcqRel);
         let latch = Arc::clone(self.latch);
         let shared = Arc::clone(self.shared);
@@ -245,10 +312,30 @@ impl<'scope, 'env> PoolScope<'scope, 'env> {
             if let Err(p) = catch_unwind(AssertUnwindSafe(task)) {
                 latch.record_panic(p);
             }
-            let prev = latch.remaining.fetch_sub(1, Ordering::AcqRel);
+            if let Some(id) = latch.mc_scope {
+                // publish this task's clock before the decrement: the
+                // scope waiter must end up dominating it
+                modelcheck::scope_publish(id);
+            }
+            let ord = match shared.mutation {
+                Mutation::RelaxedLatchDecrement => {
+                    // ORDER: Relaxed — DELIBERATELY WRONG: fault
+                    // injection for the model-check suite; unreachable
+                    // from the public constructors.
+                    Ordering::Relaxed
+                }
+                // ORDER: AcqRel — the release half publishes the
+                // finished task's writes to the scope waiter's Acquire
+                // load of `remaining`; the acquire half orders the
+                // decrement after the task body and panic capture.
+                _ => Ordering::AcqRel,
+            };
+            let prev = latch.remaining.fetch_sub(1, ord);
             debug_assert!(prev > 0, "scope latch underflow: a task completed twice");
             // wake any scope waiter parked on the shared condvar
-            shared.notify_all();
+            if !matches!(shared.mutation, Mutation::SkipCompletionWake) {
+                shared.notify_all();
+            }
         });
         // SAFETY: `scope` does not return (or unwind) before `remaining`
         // reaches zero, i.e. before this closure — and every `'env`
@@ -266,7 +353,7 @@ impl<'scope, 'env> PoolScope<'scope, 'env> {
 /// construction is cheap for width 1 (no threads are spawned).
 pub struct WorkStealPool {
     shared: Arc<Shared>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    handles: Vec<SyncJoinHandle>,
 }
 
 impl WorkStealPool {
@@ -275,30 +362,46 @@ impl WorkStealPool {
     /// caller — the deterministic sequential baseline every other width
     /// must (and does) reproduce bit-for-bit.
     pub fn new(workers: usize) -> Self {
+        Self::new_with(workers, Mutation::None)
+    }
+
+    /// A deliberately broken pool for the model-check suite — see
+    /// [`Mutation`]. Hidden rather than `cfg(test)`-gated so the
+    /// integration tests in `rust/tests/` can reach it.
+    #[doc(hidden)]
+    pub fn new_mutated(workers: usize, mutation: Mutation) -> Self {
+        Self::new_with(workers, mutation)
+    }
+
+    fn new_with(workers: usize, mutation: Mutation) -> Self {
         let spawned = if workers <= 1 { 0 } else { workers };
         let shared = Arc::new(Shared {
+            // ORDER: Relaxed — unique id allocation; nothing is
+            // published through this counter.
             id: NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed),
-            deques: (0..spawned).map(|_| Mutex::new(VecDeque::new())).collect(),
-            injector: Mutex::new(VecDeque::new()),
-            pending: AtomicUsize::new(0),
-            shutdown: AtomicBool::new(false),
-            idle: Mutex::new(()),
-            wake: Condvar::new(),
-            worker_tasks: (0..spawned).map(|_| AtomicU64::new(0)).collect(),
-            external_tasks: AtomicU64::new(0),
+            deques: (0..spawned).map(|_| SyncMutex::new(VecDeque::new())).collect(),
+            injector: SyncMutex::new(VecDeque::new()),
+            pending: SyncAtomicUsize::new(0),
+            shutdown: SyncAtomicBool::new(false),
+            idle: SyncMutex::new(()),
+            wake: SyncCondvar::new(),
+            worker_tasks: (0..spawned).map(|_| SyncAtomicU64::new(0)).collect(),
+            external_tasks: SyncAtomicU64::new(0),
+            mutation,
         });
         let handles = (0..spawned)
             .map(|i| {
                 let shared = Arc::clone(&shared);
-                std::thread::Builder::new()
-                    .name(format!("fastgauss-pool-{i}"))
+                sync::spawn_thread(
+                    format!("fastgauss-pool-{i}"),
                     // helping waits can nest task chains (a worker
                     // waiting on a nested scope executes further tasks
                     // on its own stack) — give workers generous room
-                    .stack_size(8 << 20)
-                    .spawn(move || worker_loop(shared, i))
-                    // lint: allow(no-panic): no pool without workers — spawn failure at construction is unrecoverable
-                    .expect("failed to spawn pool worker")
+                    Some(8 << 20),
+                    move || worker_loop(shared, i),
+                )
+                // lint: allow(no-panic): no pool without workers — spawn failure at construction is unrecoverable
+                .expect("failed to spawn pool worker")
             })
             .collect();
         WorkStealPool { shared, handles }
@@ -326,6 +429,7 @@ impl WorkStealPool {
         self.shared
             .worker_tasks
             .iter()
+            // ORDER: Relaxed — telemetry; read after the pool quiesces.
             .map(|c| c.load(Ordering::Relaxed))
             .collect()
     }
@@ -333,6 +437,7 @@ impl WorkStealPool {
     /// Tasks executed inline on the caller (width-1 pools only — on a
     /// threaded pool every task runs on a worker).
     pub fn external_task_count(&self) -> u64 {
+        // ORDER: Relaxed — telemetry; read after the pool quiesces.
         self.shared.external_tasks.load(Ordering::Relaxed)
     }
 
@@ -347,8 +452,9 @@ impl WorkStealPool {
         f: impl for<'scope> FnOnce(&'scope PoolScope<'scope, 'env>) -> R,
     ) -> R {
         let latch = Arc::new(ScopeLatch {
-            remaining: AtomicUsize::new(0),
-            panic: Mutex::new(None),
+            remaining: SyncAtomicUsize::new(0),
+            panic: SyncMutex::new(None),
+            mc_scope: modelcheck::scope_new_current(),
         });
         let result = {
             let scope = PoolScope { shared: &self.shared, latch: &latch, _env: PhantomData };
@@ -366,12 +472,19 @@ impl WorkStealPool {
         // this scope's return long after its own tasks finished.
         match self.shared.my_index() {
             me @ Some(_) => {
+                // ORDER: Acquire — pairs with the AcqRel latch
+                // decrement; reading zero must make every finished
+                // task's writes visible before `scope` returns.
                 while latch.remaining.load(Ordering::Acquire) != 0 {
                     if self.shared.run_one(me) {
                         continue;
                     }
                     let guard = self.shared.idle.lock().unwrap();
+                    // ORDER: Acquire — latch pairing as above, but
+                    // re-checked under the `idle` lock completers
+                    // hold while notifying: no missed wakeup.
                     if latch.remaining.load(Ordering::Acquire) != 0
+                        // ORDER: Acquire — pairs with `push`'s AcqRel.
                         && self.shared.pending.load(Ordering::Acquire) == 0
                     {
                         let (_parked, _) =
@@ -381,11 +494,19 @@ impl WorkStealPool {
             }
             None => loop {
                 let guard = self.shared.idle.lock().unwrap();
+                // ORDER: Acquire — pairs with the AcqRel latch
+                // decrement, checked under the `idle` lock as above.
                 if latch.remaining.load(Ordering::Acquire) == 0 {
                     break;
                 }
                 let (_parked, _) = self.shared.wake.wait_timeout(guard, WAIT_TIMEOUT).unwrap();
             },
+        }
+        if let Some(id) = latch.mc_scope {
+            // model checker: our clock must dominate every finished
+            // task's published clock — the latch's release/acquire
+            // chain is exactly what establishes that
+            modelcheck::scope_assert(id);
         }
         match result {
             Err(p) => resume_unwind(p),
@@ -413,7 +534,7 @@ impl WorkStealPool {
         T: Send,
         F: Fn(usize) -> T + Sync,
     {
-        let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let slots: Vec<SyncMutex<Option<T>>> = (0..n).map(|_| SyncMutex::new(None)).collect();
         {
             let slots = &slots;
             let f = &f;
@@ -441,6 +562,9 @@ impl WorkStealPool {
 
 impl Drop for WorkStealPool {
     fn drop(&mut self) {
+        // ORDER: Release — pairs with the workers' Acquire load of
+        // `shutdown`; everything this thread did before dropping the
+        // pool is visible to a worker that observes the flag.
         self.shared.shutdown.store(true, Ordering::Release);
         self.shared.notify_all();
         for handle in self.handles.drain(..) {
@@ -452,7 +576,8 @@ impl Drop for WorkStealPool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU32;
+    use std::sync::atomic::{AtomicU32, AtomicU64};
+    use std::sync::Mutex;
 
     #[test]
     fn run_indexed_returns_results_in_index_order() {
@@ -594,5 +719,19 @@ mod tests {
         for &workers in widths {
             assert_eq!(fold(workers).to_bits(), base.to_bits(), "workers={workers}");
         }
+    }
+
+    #[test]
+    fn mutated_constructor_still_completes_on_benign_schedules() {
+        // the fault-injected variant is wrong only under adversarial
+        // interleavings — a plain run must still finish (the waiter's
+        // timeout safety net absorbs the lost wake), so the model
+        // checker (not luck) is what catches it. RelaxedLatchDecrement
+        // is exercised only under the model checker's virtual clocks:
+        // run on real threads its missing release edge is a genuine
+        // data race the TSan job would (rightly) flag.
+        let pool = WorkStealPool::new_mutated(2, Mutation::SkipCompletionWake);
+        let out = pool.run_indexed(8, |k| k + 1);
+        assert_eq!(out, (1..=8).collect::<Vec<_>>());
     }
 }

@@ -1,0 +1,492 @@
+//! The one synchronization seam of the crate: every lock, condvar,
+//! atomic, spawn and yield in library code goes through these shim
+//! types instead of naming `std::sync` directly (the `sync-bypass`
+//! lint rule pins that, with audited waivers for the few one-time
+//! `OnceLock` init sites below the runtime layer).
+//!
+//! In a normal build the shim delegates verbatim to `std::sync`:
+//! [`crate::runtime::modelcheck::current`] is a constant `None`
+//! without the `modelcheck` feature, so every virtual branch below
+//! folds away and the only residue is a never-populated `Option` on
+//! the lock guards. Under `--features modelcheck`, threads registered
+//! with a [`crate::runtime::modelcheck::Controller`] route every
+//! operation through the virtual scheduler first — the op becomes a
+//! decision point, the controller updates its vector clocks, and only
+//! then does the real `std::sync` primitive execute, serialized so
+//! the real operation can neither block nor race.
+//!
+//! Two ordering rules keep the virtual and real worlds consistent:
+//! a guard drop performs the *virtual* release first and the real
+//! unlock second (the thread holds the scheduler baton until its next
+//! operation, so no other registered thread can observe the window),
+//! and a condvar wait drops the real guard *before* parking virtually
+//! (same argument, mirrored). Plain data access through a held guard
+//! is not a decision point: the lock discipline itself serializes it.
+//!
+//! Threads not registered with a controller (all threads in a normal
+//! build; non-scenario threads in a test build) take the `std::sync`
+//! fast path unconditionally.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize};
+pub use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, LockResult, Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+use super::modelcheck::{self, AtomicAccess, Controller};
+
+// ---------------------------------------------------------------------------
+// SyncMutex
+// ---------------------------------------------------------------------------
+
+/// Shimmed `std::sync::Mutex`: identical semantics (including
+/// poisoning), plus a virtual lock-order decision point and
+/// acquire/release clock propagation under the model checker.
+pub struct SyncMutex<T> {
+    inner: Mutex<T>,
+}
+
+impl<T> SyncMutex<T> {
+    pub const fn new(value: T) -> SyncMutex<T> {
+        SyncMutex { inner: Mutex::new(value) }
+    }
+
+    /// Stable identity for the controller's per-object state. An
+    /// address can be reused after the mutex is dropped; stale mutex
+    /// clocks can only add happens-before edges that are older than
+    /// any later tick, so the scope-ordering assertion cannot be
+    /// fooled into a false pass (see `modelcheck` docs).
+    fn addr(&self) -> usize {
+        &self.inner as *const Mutex<T> as usize
+    }
+
+    pub fn lock(&self) -> LockResult<SyncMutexGuard<'_, T>> {
+        let mc = match modelcheck::current() {
+            Some((ctl, me)) => {
+                ctl.op_mutex_lock(me, self.addr());
+                // the virtual lock is now ours: no registered thread
+                // can hold the real mutex, so this cannot block on one
+                Some((ctl, me))
+            }
+            None => None,
+        };
+        match self.inner.lock() {
+            Ok(g) => Ok(SyncMutexGuard { owner: self, inner: Some(g), mc }),
+            Err(p) => Err(PoisonError::new(SyncMutexGuard {
+                owner: self,
+                inner: Some(p.into_inner()),
+                mc,
+            })),
+        }
+    }
+
+    /// Consume the mutex. Exclusive ownership means no schedule
+    /// decision is involved.
+    pub fn into_inner(self) -> LockResult<T> {
+        if let Some((ctl, _)) = modelcheck::current() {
+            ctl.op_retire(self.addr());
+        }
+        self.inner.into_inner()
+    }
+}
+
+/// Guard for [`SyncMutex`]. Drop order matters: the virtual release
+/// happens in `drop`, then the real `MutexGuard` field drops — the
+/// baton is held across both, so the window is invisible to other
+/// registered threads.
+pub struct SyncMutexGuard<'a, T> {
+    owner: &'a SyncMutex<T>,
+    /// `Some` from construction until drop (or until a condvar wait
+    /// consumes the guard).
+    inner: Option<MutexGuard<'a, T>>,
+    mc: Option<(Arc<Controller>, usize)>,
+}
+
+impl<T> Deref for SyncMutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        // lint: allow(no-panic): guard invariant — `inner` is Some for the guard's whole visible life
+        self.inner.as_deref().unwrap()
+    }
+}
+
+impl<T> DerefMut for SyncMutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        // lint: allow(no-panic): guard invariant — `inner` is Some for the guard's whole visible life
+        self.inner.as_deref_mut().unwrap()
+    }
+}
+
+impl<T> Drop for SyncMutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if let Some((ctl, me)) = self.mc.take() {
+            ctl.op_mutex_unlock(me, self.owner.addr());
+        }
+        // `inner` drops after this body: real unlock second
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SyncCondvar
+// ---------------------------------------------------------------------------
+
+/// Result of [`SyncCondvar::wait_timeout`] (std's `WaitTimeoutResult`
+/// cannot be constructed by user code, so the shim carries its own).
+#[derive(Clone, Copy, Debug)]
+pub struct SyncWaitTimeoutResult {
+    timed_out: bool,
+}
+
+impl SyncWaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.timed_out
+    }
+}
+
+/// Shimmed `std::sync::Condvar`. Under the model checker the real
+/// condvar is never touched: waiting releases the virtual mutex and
+/// parks on the scheduler, a notify moves virtual waiters to the
+/// mutex-reacquire state, and a *timeout* fires only when no thread
+/// is runnable (each such forced wake is counted, and the invariant
+/// suites treat it as a lost-wakeup failure).
+pub struct SyncCondvar {
+    inner: Condvar,
+}
+
+impl SyncCondvar {
+    pub const fn new() -> SyncCondvar {
+        SyncCondvar { inner: Condvar::new() }
+    }
+
+    fn addr(&self) -> usize {
+        &self.inner as *const Condvar as usize
+    }
+
+    pub fn notify_one(&self) {
+        if let Some((ctl, me)) = modelcheck::current() {
+            ctl.op_cv_notify(me, self.addr(), false);
+            return;
+        }
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        if let Some((ctl, me)) = modelcheck::current() {
+            ctl.op_cv_notify(me, self.addr(), true);
+            return;
+        }
+        self.inner.notify_all();
+    }
+
+    pub fn wait<'a, T>(&self, guard: SyncMutexGuard<'a, T>) -> LockResult<SyncMutexGuard<'a, T>> {
+        match self.wait_inner(guard, None) {
+            Ok((g, _)) => Ok(g),
+            Err(p) => {
+                let (g, _) = p.into_inner();
+                Err(PoisonError::new(g))
+            }
+        }
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: SyncMutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(SyncMutexGuard<'a, T>, SyncWaitTimeoutResult)> {
+        self.wait_inner(guard, Some(dur))
+    }
+
+    fn wait_inner<'a, T>(
+        &self,
+        mut guard: SyncMutexGuard<'a, T>,
+        dur: Option<Duration>,
+    ) -> LockResult<(SyncMutexGuard<'a, T>, SyncWaitTimeoutResult)> {
+        let owner = guard.owner;
+        if let Some((ctl, me)) = guard.mc.take() {
+            // real unlock first — the baton is held, so the window
+            // between the real release and the virtual one is
+            // invisible to every registered thread
+            guard.inner = None;
+            drop(guard); // `mc` already taken: no virtual unlock op
+            let notified = ctl.op_cv_wait(me, self.addr(), owner.addr(), dur.is_some());
+            // the virtual mutex is re-acquired; take the real one
+            let res = SyncWaitTimeoutResult { timed_out: !notified };
+            return match owner.inner.lock() {
+                Ok(g) => {
+                    Ok((SyncMutexGuard { owner, inner: Some(g), mc: Some((ctl, me)) }, res))
+                }
+                Err(p) => Err(PoisonError::new((
+                    SyncMutexGuard { owner, inner: Some(p.into_inner()), mc: Some((ctl, me)) },
+                    res,
+                ))),
+            };
+        }
+        // lint: allow(no-panic): guard invariant — a live guard always holds the real lock
+        let inner = guard.inner.take().unwrap();
+        drop(guard); // empty shell: no-op drop
+        match dur {
+            None => match self.inner.wait(inner) {
+                Ok(g) => Ok((
+                    SyncMutexGuard { owner, inner: Some(g), mc: None },
+                    SyncWaitTimeoutResult { timed_out: false },
+                )),
+                Err(p) => Err(PoisonError::new((
+                    SyncMutexGuard { owner, inner: Some(p.into_inner()), mc: None },
+                    SyncWaitTimeoutResult { timed_out: false },
+                ))),
+            },
+            Some(d) => match self.inner.wait_timeout(inner, d) {
+                Ok((g, r)) => Ok((
+                    SyncMutexGuard { owner, inner: Some(g), mc: None },
+                    SyncWaitTimeoutResult { timed_out: r.timed_out() },
+                )),
+                Err(p) => {
+                    let (g, r) = p.into_inner();
+                    Err(PoisonError::new((
+                        SyncMutexGuard { owner, inner: Some(g), mc: None },
+                        SyncWaitTimeoutResult { timed_out: r.timed_out() },
+                    )))
+                }
+            },
+        }
+    }
+}
+
+impl Default for SyncCondvar {
+    fn default() -> SyncCondvar {
+        SyncCondvar::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Atomics
+// ---------------------------------------------------------------------------
+
+macro_rules! sync_atomic {
+    ($(#[$doc:meta])* $name:ident, $inner:ty, $prim:ty) => {
+        $(#[$doc])*
+        pub struct $name {
+            inner: $inner,
+        }
+
+        impl $name {
+            pub const fn new(v: $prim) -> $name {
+                $name { inner: <$inner>::new(v) }
+            }
+
+            fn addr(&self) -> usize {
+                &self.inner as *const $inner as usize
+            }
+
+            /// Decision point + clock bookkeeping before the real op.
+            fn gate(&self, access: AtomicAccess, ord: Ordering) {
+                if let Some((ctl, me)) = modelcheck::current() {
+                    ctl.op_atomic(me, self.addr(), access, ord);
+                }
+            }
+
+            pub fn load(&self, ord: Ordering) -> $prim {
+                self.gate(AtomicAccess::Load, ord);
+                self.inner.load(ord)
+            }
+
+            pub fn store(&self, v: $prim, ord: Ordering) {
+                self.gate(AtomicAccess::Store, ord);
+                self.inner.store(v, ord)
+            }
+
+            pub fn swap(&self, v: $prim, ord: Ordering) -> $prim {
+                self.gate(AtomicAccess::Rmw, ord);
+                self.inner.swap(v, ord)
+            }
+        }
+
+        impl Drop for $name {
+            fn drop(&mut self) {
+                // forget per-object clocks so a reused address cannot
+                // inherit them (statics never drop; that is fine)
+                if let Some((ctl, _)) = modelcheck::current() {
+                    ctl.op_retire(self.addr());
+                }
+            }
+        }
+    };
+}
+
+macro_rules! sync_atomic_arith {
+    ($name:ident, $prim:ty) => {
+        impl $name {
+            pub fn fetch_add(&self, v: $prim, ord: Ordering) -> $prim {
+                self.gate(AtomicAccess::Rmw, ord);
+                self.inner.fetch_add(v, ord)
+            }
+
+            pub fn fetch_sub(&self, v: $prim, ord: Ordering) -> $prim {
+                self.gate(AtomicAccess::Rmw, ord);
+                self.inner.fetch_sub(v, ord)
+            }
+        }
+    };
+}
+
+sync_atomic!(
+    /// Shimmed `AtomicBool` (load/store/swap).
+    SyncAtomicBool,
+    AtomicBool,
+    bool
+);
+sync_atomic!(
+    /// Shimmed `AtomicUsize` (load/store/swap/fetch_add/fetch_sub).
+    SyncAtomicUsize,
+    AtomicUsize,
+    usize
+);
+sync_atomic!(
+    /// Shimmed `AtomicU64` (load/store/swap/fetch_add/fetch_sub).
+    SyncAtomicU64,
+    AtomicU64,
+    u64
+);
+sync_atomic_arith!(SyncAtomicUsize, usize);
+sync_atomic_arith!(SyncAtomicU64, u64);
+
+// ---------------------------------------------------------------------------
+// Threads
+// ---------------------------------------------------------------------------
+
+/// Join handle from [`spawn_thread`]. Joining a model-checked thread
+/// first waits for it virtually (a decision point that also joins the
+/// child's final vector clock), then joins the real thread.
+pub struct SyncJoinHandle {
+    inner: std::thread::JoinHandle<()>,
+    mc: Option<(Arc<Controller>, usize)>,
+}
+
+impl SyncJoinHandle {
+    pub fn join(self) -> std::thread::Result<()> {
+        if let Some((ctl, vtid)) = &self.mc {
+            if let Some((_, me)) = modelcheck::current() {
+                ctl.op_join(me, *vtid);
+            }
+        }
+        self.inner.join()
+    }
+}
+
+/// Spawn a named thread. Under a controller the child is registered
+/// as a virtual thread: it inherits the parent's clock, waits for its
+/// first schedule grant before running `f`, reports any non-abort
+/// panic as a model-check failure, and marks itself finished on exit.
+pub fn spawn_thread<F>(
+    name: String,
+    stack_size: Option<usize>,
+    f: F,
+) -> std::io::Result<SyncJoinHandle>
+where
+    F: FnOnce() + Send + 'static,
+{
+    let mut builder = std::thread::Builder::new().name(name.clone());
+    if let Some(size) = stack_size {
+        builder = builder.stack_size(size);
+    }
+    if let Some((ctl, me)) = modelcheck::current() {
+        let vtid = ctl.op_spawn_register(me, &name);
+        if vtid != usize::MAX {
+            let child_ctl = Arc::clone(&ctl);
+            return match builder.spawn(move || modelcheck::run_child(child_ctl, vtid, f)) {
+                Ok(inner) => {
+                    // post-spawn decision point: the child may now be
+                    // scheduled before the parent continues
+                    ctl.op_yield(me);
+                    Ok(SyncJoinHandle { inner, mc: Some((ctl, vtid)) })
+                }
+                Err(e) => {
+                    ctl.op_spawn_abandon(vtid);
+                    Err(e)
+                }
+            };
+        }
+    }
+    builder.spawn(f).map(|inner| SyncJoinHandle { inner, mc: None })
+}
+
+/// A pure decision point (no state change); `std::thread::yield_now`
+/// outside a model-checked schedule.
+pub fn yield_now() {
+    if let Some((ctl, me)) = modelcheck::current() {
+        ctl.op_yield(me);
+        return;
+    }
+    std::thread::yield_now();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mutex_and_guard_delegate_to_std() {
+        let m = SyncMutex::new(41);
+        {
+            let mut g = m.lock().unwrap();
+            *g += 1;
+        }
+        assert_eq!(*m.lock().unwrap(), 42);
+        assert_eq!(m.into_inner().unwrap(), 42);
+    }
+
+    #[test]
+    fn condvar_wait_timeout_times_out_without_notify() {
+        let m = SyncMutex::new(());
+        let cv = SyncCondvar::new();
+        let g = m.lock().unwrap();
+        let (_g, res) = cv.wait_timeout(g, Duration::from_millis(1)).unwrap();
+        assert!(res.timed_out());
+    }
+
+    #[test]
+    fn condvar_notify_wakes_a_real_waiter() {
+        let state = Arc::new((SyncMutex::new(false), SyncCondvar::new()));
+        let s2 = Arc::clone(&state);
+        let h = spawn_thread("sync-test".to_string(), None, move || {
+            let (m, cv) = &*s2;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        })
+        .unwrap();
+        let (m, cv) = &*state;
+        let mut g = m.lock().unwrap();
+        while !*g {
+            g = cv.wait(g).unwrap();
+        }
+        drop(g);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn atomics_delegate_and_support_rmw() {
+        let a = SyncAtomicUsize::new(1);
+        assert_eq!(a.fetch_add(4, Ordering::AcqRel), 1);
+        assert_eq!(a.fetch_sub(2, Ordering::AcqRel), 5);
+        assert_eq!(a.load(Ordering::Acquire), 3);
+        let b = SyncAtomicBool::new(false);
+        assert!(!b.swap(true, Ordering::Relaxed));
+        assert!(b.load(Ordering::Relaxed));
+        let c = SyncAtomicU64::new(7);
+        c.store(9, Ordering::Release);
+        assert_eq!(c.swap(1, Ordering::AcqRel), 9);
+    }
+
+    #[test]
+    fn poisoning_propagates_like_std() {
+        let m = Arc::new(SyncMutex::new(0u32));
+        let m2 = Arc::clone(&m);
+        let h = spawn_thread("sync-poison".to_string(), None, move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .unwrap();
+        assert!(h.join().is_err());
+        assert!(m.lock().is_err(), "poisoning must propagate through the shim");
+    }
+}

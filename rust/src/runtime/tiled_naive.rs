@@ -14,10 +14,9 @@
 use crate::algo::{AlgoError, GaussSum, GaussSumProblem, GaussSumResult, RunStats};
 
 #[cfg(feature = "pjrt")]
-use std::sync::Mutex;
-
-#[cfg(feature = "pjrt")]
 use super::executor::TileExecutor;
+#[cfg(feature = "pjrt")]
+use super::sync::SyncMutex;
 
 /// Reference block width of the CPU fallback — matches the default
 /// `algo::naive` tiling, so fallback results are bit-identical to
@@ -29,7 +28,7 @@ const CPU_FALLBACK_BLOCK: usize = 256;
 /// (or the CPU microkernel fallback when built without `pjrt`).
 pub struct TiledNaive {
     #[cfg(feature = "pjrt")]
-    exec: Mutex<TileExecutor>,
+    exec: SyncMutex<TileExecutor>,
     dim: usize,
     /// CPU fallback only: run the GEMM-shaped fast driver
     /// (`compute::gauss_sum_all_fast`) instead of the bit-exact
@@ -44,19 +43,21 @@ impl TiledNaive {
     #[cfg(feature = "pjrt")]
     pub fn load(dim: usize) -> crate::util::error::Result<Self> {
         let exec = TileExecutor::load(&super::artifacts_dir(), dim)?;
-        Ok(TiledNaive { exec: Mutex::new(exec), dim, fast_exp: false })
+        Ok(TiledNaive { exec: SyncMutex::new(exec), dim, fast_exp: false })
     }
 
     /// Built without `pjrt`: fall back to the CPU compute microkernel.
     #[cfg(not(feature = "pjrt"))]
     pub fn load(dim: usize) -> crate::util::error::Result<Self> {
-        static FALLBACK_NOTICE: std::sync::Once = std::sync::Once::new();
-        FALLBACK_NOTICE.call_once(|| {
+        static FALLBACK_NOTICE: super::sync::SyncAtomicBool =
+            super::sync::SyncAtomicBool::new(false);
+        // ORDER: AcqRel — first swap wins the once-per-process notice.
+        if !FALLBACK_NOTICE.swap(true, super::sync::Ordering::AcqRel) {
             crate::log_warn!(
                 "PJRT runtime unavailable (built without the `pjrt` feature); \
                  TiledNaive falls back to the CPU compute microkernel"
             );
-        });
+        }
         Ok(TiledNaive { dim, fast_exp: false })
     }
 

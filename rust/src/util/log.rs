@@ -2,6 +2,7 @@
 //! (`error|warn|info|debug|trace`, default `info`) — no global mutable
 //! state beyond a lazily initialized level.
 
+// lint: allow(sync-bypass): process-wide one-time log-level init below the runtime layer — no scheduling to explore
 use std::sync::OnceLock;
 
 #[derive(Copy, Clone, PartialEq, Eq, PartialOrd, Ord, Debug)]
@@ -25,6 +26,7 @@ impl Level {
     }
 }
 
+// lint: allow(sync-bypass): process-wide one-time log-level init below the runtime layer — no scheduling to explore
 static LEVEL: OnceLock<Level> = OnceLock::new();
 
 /// The active log level.

@@ -5,8 +5,8 @@
 use std::path::Path;
 
 use fastgauss::lint::{
-    lint_parity, lint_source, lint_tree, Finding, ParitySources, RULE_LANES, RULE_PANIC,
-    RULE_PARITY, RULE_SAFETY, RULE_THREAD, RULE_WAIVER,
+    lint_parity, lint_source, lint_tree, Finding, ParitySources, RULE_LANES, RULE_ORDERING,
+    RULE_PANIC, RULE_PARITY, RULE_SAFETY, RULE_SYNC, RULE_THREAD, RULE_WAIVER,
 };
 
 fn rules(findings: &[Finding]) -> Vec<&'static str> {
@@ -51,13 +51,77 @@ fn hot_kernel_bypass_flags_but_lanes_field_calls_are_clean() {
 // ---- raw-thread ----
 
 #[test]
-fn raw_thread_primitives_flag_outside_the_pool() {
+fn raw_thread_primitives_flag_outside_the_sync_shim() {
     let bad = "fn f() { std::thread::spawn(|| {}); }\n";
     let f = lint_source("algo/new.rs", bad);
     assert_eq!(rules(&f), vec![RULE_THREAD]);
-    assert!(lint_source("runtime/pool.rs", bad).is_empty());
+    // the shim layer and the model checker beneath it are the one home
+    assert!(lint_source("runtime/sync.rs", bad).is_empty());
+    assert!(lint_source("runtime/modelcheck.rs", bad).is_empty());
+    // the pool lost its historical exemption when it moved onto the shim
+    assert_eq!(rules(&lint_source("runtime/pool.rs", bad)), vec![RULE_THREAD]);
     let waived = "// lint: allow(raw-thread): benchmark needs the pre-pool shape\n\
                   fn f() { std::thread::scope(|s| { let _ = s; }); }\n";
+    assert!(lint_source("algo/new.rs", waived).is_empty());
+}
+
+// ---- sync-bypass ----
+
+#[test]
+fn raw_sync_primitives_flag_outside_the_sync_shim() {
+    let bad = "use std::sync::{Condvar, Mutex};\n\
+               static GATE: std::sync::atomic::AtomicBool = \
+               std::sync::atomic::AtomicBool::new(false);\n\
+               fn f() { std::thread::park(); }\n";
+    let f = lint_source("algo/new.rs", bad);
+    assert_eq!(
+        f.iter().filter(|x| x.rule == RULE_SYNC).count(),
+        5,
+        "Condvar, Mutex, AtomicBool x2, park: {f:?}"
+    );
+    assert!(lint_source("runtime/sync.rs", bad).is_empty());
+    assert!(lint_source("runtime/modelcheck.rs", bad).is_empty());
+    // the shim's own re-exported types do not match the needles
+    let shimmed = "fn f(m: &SyncMutex<u32>, c: &SyncCondvar) -> u32 { let _ = c; *m.lock().unwrap() }\n";
+    assert!(lint_source("algo/new.rs", shimmed).is_empty());
+    let waived = "// lint: allow(sync-bypass): one-time init below the runtime layer\n\
+                  use std::sync::OnceLock;\n";
+    assert!(lint_source("algo/new.rs", waived).is_empty());
+    // test modules may use raw primitives as scaffolding
+    let in_test = "#[cfg(test)]\nmod tests {\n    use std::sync::Mutex;\n}\n";
+    assert!(lint_source("algo/new.rs", in_test).is_empty());
+}
+
+// ---- ordering-audit ----
+
+#[test]
+fn weak_orderings_require_an_order_comment_within_the_window() {
+    let bad = "fn f(a: &S) { a.flag.store(true, Ordering::Release); }\n";
+    let f = lint_source("algo/new.rs", bad);
+    assert_eq!(rules(&f), vec![RULE_ORDERING]);
+    assert!(f[0].message.contains("Release"), "{f:?}");
+    let good = "// ORDER: Release — publishes the write before the flag flips.\n\
+                fn f(a: &S) { a.flag.store(true, Ordering::Release); }\n";
+    assert!(lint_source("algo/new.rs", good).is_empty());
+    // SeqCst carries no obligation, and neither do imports
+    let seq = "use std::sync::atomic::Ordering::{self, SeqCst};\n\
+               fn f(a: &S) { a.flag.store(true, Ordering::SeqCst); }\n";
+    assert!(lint_source("algo/new.rs", seq).is_empty());
+}
+
+#[test]
+fn malformed_or_distant_order_comments_do_not_justify() {
+    // missing colon: "ORDER" alone is not the marker
+    let no_colon = "// ORDER Release — publishes the write.\n\
+                    fn f(a: &S) { a.flag.store(true, Ordering::Release); }\n";
+    assert_eq!(rules(&lint_source("algo/new.rs", no_colon)), vec![RULE_ORDERING]);
+    // a comment further than the window above the site does not count
+    let distant = "// ORDER: Release — publishes the write.\n\n\n\n\n\
+                   fn f(a: &S) { a.flag.store(true, Ordering::Release); }\n";
+    assert_eq!(rules(&lint_source("algo/new.rs", distant)), vec![RULE_ORDERING]);
+    // an explicit waiver still works where a comment is impractical
+    let waived = "// lint: allow(ordering-audit): ordering chosen by the caller\n\
+                  fn f(a: &S, o: u8) { a.flag.store(true, Ordering::Relaxed); let _ = o; }\n";
     assert!(lint_source("algo/new.rs", waived).is_empty());
 }
 
@@ -67,7 +131,7 @@ fn raw_thread_primitives_flag_outside_the_pool() {
 fn panic_family_flags_with_blessed_and_waived_exceptions() {
     let bad = "fn f(v: &[u32]) -> u32 { *v.last().expect(\"nonempty\") }\n";
     assert_eq!(rules(&lint_source("algo/new.rs", bad)), vec![RULE_PANIC]);
-    let blessed = "fn f(m: &std::sync::Mutex<u32>) -> u32 { *m.lock().unwrap() }\n";
+    let blessed = "fn f(m: &SyncMutex<u32>) -> u32 { *m.lock().unwrap() }\n";
     assert!(lint_source("algo/new.rs", blessed).is_empty());
     // driver modules may abort by design
     assert!(lint_source("cli.rs", bad).is_empty());
